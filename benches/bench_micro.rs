@@ -1,0 +1,86 @@
+//! Micro-benchmarks + ablations: the per-component costs behind every
+//! other bench, and the PJRT-offload batch-size sweep (the L1↔L3
+//! crossover study referenced by DESIGN.md §Hardware-Adaptation).
+
+use std::time::Instant;
+use stretch::metrics::reporter::Table;
+use stretch::runtime::{artifacts_available, JoinKernel};
+use stretch::sim::calibrate;
+use stretch::util::Rng;
+
+fn offload_sweep(table: &mut Table) {
+    if !artifacts_available() {
+        println!("(skipping offload sweep: run `make artifacts`)");
+        return;
+    }
+    let mut kernel = JoinKernel::load().unwrap();
+    let mut rng = Rng::new(5);
+    for w in [128usize, 512, 2048, 8192] {
+        let wa: Vec<f32> = (0..w).map(|_| rng.f32_range(0.0, 10_000.0)).collect();
+        let wb: Vec<f32> = (0..w).map(|_| rng.f32_range(0.0, 10_000.0)).collect();
+        let mut idx = Vec::new();
+        // warm
+        kernel.probe_indices(5_000.0, 5_000.0, &wa, &wb, &mut idx).unwrap();
+        let t0 = Instant::now();
+        let mut calls = 0u64;
+        while t0.elapsed().as_millis() < 200 {
+            kernel.probe_indices(5_000.0, 5_000.0, &wa, &wb, &mut idx).unwrap();
+            calls += 1;
+        }
+        let per_call_us = t0.elapsed().as_secs_f64() * 1e6 / calls as f64;
+        // scalar comparison loop over the same window
+        let t1 = Instant::now();
+        let mut loops = 0u64;
+        let mut acc = 0u64;
+        while t1.elapsed().as_millis() < 100 {
+            for i in 0..w {
+                let m = (5_000.0 - wa[i]).abs() <= 10.0 && (5_000.0 - wb[i]).abs() <= 10.0;
+                acc += m as u64;
+            }
+            loops += 1;
+        }
+        std::hint::black_box(acc);
+        let scalar_us = t1.elapsed().as_secs_f64() * 1e6 / loops as f64;
+        table.row(&[
+            format!("offload W={w}"),
+            format!("{per_call_us:.1} µs/probe-call"),
+            format!("scalar {scalar_us:.2} µs"),
+            format!("{:.0}× PJRT overhead", per_call_us / scalar_us.max(0.001)),
+        ]);
+    }
+}
+
+fn main() {
+    println!("micro-benchmarks (release numbers feed the simulator + EXPERIMENTS.md §Perf)\n");
+    let cal = calibrate();
+    let mut table = Table::new(&["component", "cost", "reference", "note"]);
+    table.row(&[
+        "ESG add+merge+get".into(),
+        format!("{:.3} µs/tuple", cal.gate_tuple_s * 1e6),
+        format!("{:.1}M t/s", 1.0 / cal.gate_tuple_s / 1e6),
+        "shared gate round trip".into(),
+    ]);
+    table.row(&[
+        "SPSC push+pop".into(),
+        format!("{:.3} µs/tuple", cal.queue_tuple_s * 1e6),
+        format!("{:.1}M t/s", 1.0 / cal.queue_tuple_s / 1e6),
+        "SN dedicated queue hop".into(),
+    ]);
+    table.row(&[
+        "merge-sort ingest".into(),
+        format!("{:.3} µs/tuple", cal.sort_tuple_s * 1e6),
+        format!("{:.1}M t/s", 1.0 / cal.sort_tuple_s / 1e6),
+        "SN per-instance sorter".into(),
+    ]);
+    table.row(&[
+        "band predicate (1T loop)".into(),
+        format!("{:.1}M cmp/s", cal.cmp_per_sec / 1e6),
+        format!("{:.2} ns/cmp", 1e9 / cal.cmp_per_sec),
+        "the paper's c/s metric".into(),
+    ]);
+    offload_sweep(&mut table);
+    table.print();
+    println!("\ninterpretation: on CPU-PJRT (interpret-mode Pallas) the per-call dispatch");
+    println!("dominates, so the scalar loop wins at every window size — the offload is");
+    println!("compile-only on this box; the TPU roofline estimate is in DESIGN.md §6.");
+}

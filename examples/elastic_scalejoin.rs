@@ -1,0 +1,70 @@
+//! Elastic ScaleJoin: the Q4/Q5 scenario as a runnable demo — a live
+//! threaded STRETCH join under a stepping rate, with the reactive
+//! controller provisioning and decommissioning instances on the fly.
+//!
+//! ```sh
+//! cargo run --release --example elastic_scalejoin
+//! ```
+
+use stretch::elastic::{JoinCostModel, ReactiveController, Thresholds};
+use stretch::harness::{run_elastic_join, JoinRunConfig};
+use stretch::sim::calibrate;
+use stretch::workloads::rates::RateSchedule;
+
+fn main() {
+    let args = stretch::cli::Cli::new("elastic_scalejoin", "live elastic ScaleJoin demo")
+        .opt("ws-ms", "window size ms", Some("2000"))
+        .opt("max", "max parallelism", Some("4"))
+        .parse()
+        .unwrap_or_else(|e| panic!("{e}"));
+    let ws_ms = args.u64_or("ws-ms", 2_000) as i64;
+    let max = args.usize_or("max", 4);
+
+    println!("calibrating the join cost model on this machine...");
+    let cal = calibrate();
+    let model = JoinCostModel::new(cal.cmp_per_sec / max as f64, ws_ms as f64 / 1e3);
+    let r1 = model.max_rate(1);
+    println!("  1-thread sustainable rate ≈ {r1:.0} t/s (WS = {ws_ms} ms)\n");
+
+    // rate staircase: under → over → way over → back down
+    let schedule = RateSchedule {
+        phases: vec![
+            (6, 0.6 * r1),
+            (8, 1.5 * r1),
+            (8, 2.6 * r1),
+            (8, 0.4 * r1),
+        ],
+    };
+    let ctl = ReactiveController::new(model, Thresholds::default()).with_cooldown(2);
+    println!("running 30 event-seconds (compressed 2×) with the 90/70/45 reactive controller:");
+    println!("  t  offered(t/s) served  cmp/s      lat(ms)  Π  backlog  loadCV%");
+    let r = run_elastic_join(JoinRunConfig {
+        ws_ms,
+        initial: 1,
+        max,
+        schedule,
+        time_scale: 2.0,
+        controller: Some(Box::new(ctl)),
+        controller_period_s: 1,
+        ..Default::default()
+    });
+    for s in &r.samples {
+        println!(
+            "{:>4} {:>10.0} {:>8.0} {:>10.2e} {:>8.1} {:>2} {:>8} {:>7.1}",
+            s.t_s,
+            s.offered_tps,
+            s.in_tps,
+            s.cmp_per_s,
+            s.latency_mean_us / 1e3,
+            s.threads,
+            s.backlog,
+            s.load_cv_pct
+        );
+    }
+    println!("\nreconfigurations (epoch, wall ms):");
+    for (e, ms) in &r.reconfigs {
+        let verdict = if *ms < 40.0 { "✓ < 40 ms" } else { "over paper bound" };
+        println!("  epoch {e}: {ms:.2} ms  {verdict}");
+    }
+    println!("\n{} join results reached the egress", r.egress_count);
+}

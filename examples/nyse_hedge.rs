@@ -1,0 +1,90 @@
+//! NYSE hedge detection (the Q6 scenario): self-join the synthetic trade
+//! stream and report negatively-correlated (hedging) stock pairs.
+//!
+//! ```sh
+//! cargo run --release --example nyse_hedge -- --duration 20
+//! ```
+
+use std::time::Duration;
+use stretch::engine::{VsnEngine, VsnOptions};
+use stretch::operator::join::{scalejoin_op, Either};
+use stretch::tuple::Tuple;
+use stretch::workloads::nyse::{HedgePredicate, NyseConfig, NyseGen, Trade};
+
+fn main() {
+    let args = stretch::cli::Cli::new("nyse_hedge", "NYSE hedge self-join demo")
+        .opt("duration", "trace seconds", Some("20"))
+        .opt("peak", "peak rate t/s", Some("1500"))
+        .parse()
+        .unwrap_or_else(|e| panic!("{e}"));
+
+    let cfg = NyseConfig {
+        duration_s: args.u64_or("duration", 20) as u32,
+        peak_rate: args.f64_or("peak", 1500.0),
+        floor_rate: args.f64_or("peak", 1500.0) / 15.0,
+        ..Default::default()
+    };
+    println!("generating {}s of synthetic NYSE trades ({} symbols)...", cfg.duration_s, cfg.symbols);
+    let (rates, trades) = NyseGen::new(cfg).generate();
+    println!(
+        "  {} trades; rate range {:.0}-{:.0} t/s (bursty U-shape)",
+        trades.len(),
+        rates.iter().cloned().fold(f64::MAX, f64::min),
+        rates.iter().cloned().fold(0.0, f64::max)
+    );
+
+    // WS = 30 s, self-join (§8.6): each trade feeds both inputs
+    let def = scalejoin_op("hedge", 30_000, HedgePredicate, 64);
+    let (mut engine, mut ingress, mut readers) = VsnEngine::setup(
+        def,
+        VsnOptions { initial: 2, max: 4, upstreams: 1, ..Default::default() },
+    );
+    let clock = engine.clock.clone();
+    let mut ing = ingress.remove(0);
+    let mut out = readers.remove(0);
+    let feeder = std::thread::spawn(move || {
+        for t in trades {
+            let ingest = clock.now_us();
+            ing.add(
+                Tuple::data_on(t.ts, 0, Either::<Trade, Trade>::L(t.payload)).with_ingest(ingest),
+            );
+            ing.add(
+                Tuple::data_on(t.ts, 1, Either::<Trade, Trade>::R(t.payload)).with_ingest(ingest),
+            );
+        }
+        ing.heartbeat(i64::MAX / 16);
+    });
+    let mut pair_counts = std::collections::HashMap::<(u16, u16), u64>::new();
+    let mut total = 0u64;
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let mut quiet = std::time::Instant::now();
+    while std::time::Instant::now() < deadline {
+        match out.get() {
+            Some(t) if t.kind.is_data() => {
+                let h = t.payload;
+                let pair = if h.l_id <= h.r_id { (h.l_id, h.r_id) } else { (h.r_id, h.l_id) };
+                *pair_counts.entry(pair).or_default() += 1;
+                total += 1;
+                quiet = std::time::Instant::now();
+            }
+            Some(_) => {}
+            None => {
+                if feeder.is_finished() && quiet.elapsed() > Duration::from_millis(300) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+    feeder.join().unwrap();
+    let comparisons = engine.metrics.snapshot().comparisons;
+    engine.shutdown();
+
+    println!("\n{total} hedge signals from {comparisons} comparisons");
+    let mut pairs: Vec<_> = pair_counts.into_iter().collect();
+    pairs.sort_by_key(|&(_, c)| std::cmp::Reverse(c));
+    println!("most-hedged symbol pairs:");
+    for ((a, b), c) in pairs.iter().take(5) {
+        println!("  sym{a} ↔ sym{b}: {c} co-movements");
+    }
+}

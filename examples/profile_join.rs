@@ -1,0 +1,47 @@
+//! §Perf probe: isolate the ScaleJoin O+ per-thread loop from engine
+//! threading (single thread drives the core directly), vs the live
+//! engine (threads share this 1-core box), vs the 1T baseline.
+use stretch::metrics::OperatorMetrics;
+use stretch::operator::state::SharedState;
+use stretch::operator::{Ctx, OperatorCore};
+use stretch::tuple::Mapper;
+use stretch::workloads::scalejoin_bench::{q3_operator, OneT, SjGen};
+
+fn main() {
+    let nk: u64 = std::env::var("NK").ok().and_then(|v| v.parse().ok()).unwrap_or(64);
+    let ws = 5000i64;
+    // --- core-only (no engine threads) ---
+    let def = q3_operator(ws, nk);
+    let mut core = OperatorCore::new(def, 0, SharedState::new(64), OperatorMetrics::new(1));
+    let f_mu = Mapper::hash_mod(1);
+    let mut gen = SjGen::new(9, 20_000.0);
+    for t in gen.take(30_000) {
+        let mut sink = |_o| {};
+        let mut ctx = Ctx::new(&mut sink);
+        core.process(&t, &f_mu, &mut ctx); // warm window
+    }
+    let t0 = std::time::Instant::now();
+    let mut cmp = 0u64;
+    let mut n = 0u64;
+    while t0.elapsed().as_millis() < 3000 {
+        for t in gen.take(1024) {
+            let mut sink = |_o| {};
+            let mut ctx = Ctx::new(&mut sink);
+            core.process(&t, &f_mu, &mut ctx);
+            cmp += ctx.comparisons;
+        }
+        n += 1024;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("core-only: {:.1}M cmp/s, {:.0} t/s processed", cmp as f64 / dt / 1e6, n as f64 / dt);
+    // --- 1T ---
+    let mut gen = SjGen::new(9, 20_000.0);
+    let mut j = OneT::new(ws);
+    for t in gen.take(30_000) { j.process(&t); }
+    let c0 = j.comparisons;
+    let t1 = std::time::Instant::now();
+    while t1.elapsed().as_millis() < 3000 {
+        for t in gen.take(1024) { j.process(&t); }
+    }
+    println!("1T:        {:.1}M cmp/s", (j.comparisons - c0) as f64 / t1.elapsed().as_secs_f64() / 1e6);
+}

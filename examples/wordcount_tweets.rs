@@ -1,0 +1,120 @@
+//! Wordcount over the synthetic tweet corpus (the Q1 workload), showing
+//! the VSN advantage over SN duplication *and* the running example from
+//! the paper's introduction (longest tweet per hashtag) on a second
+//! operator.
+//!
+//! ```sh
+//! cargo run --release --example wordcount_tweets -- --tweets 20000
+//! ```
+
+use std::time::Duration;
+use stretch::engine::{VsnEngine, VsnOptions};
+use stretch::time::WindowSpec;
+use stretch::workloads::tweets::{duplication_factor, paircount_keys, wordcount_keys, TweetGen, TweetGenConfig};
+use stretch::workloads::{longest_tweet_op, wordcount_op};
+
+fn main() {
+    let args = stretch::cli::Cli::new("wordcount_tweets", "Q1-style wordcount demo")
+        .opt("tweets", "corpus size", Some("20000"))
+        .parse()
+        .unwrap_or_else(|e| panic!("{e}"));
+    let n = args.usize_or("tweets", 20_000);
+
+    let mut gen = TweetGen::new(TweetGenConfig { vocab: 8_000, seed: 99, ..Default::default() });
+    let tuples = gen.take(n);
+    println!("corpus: {n} synthetic tweets (Zipf vocabulary)");
+    println!("duplication factors (keys/tuple — what SN must clone, VSN shares):");
+    println!("  wordcount: {:.1}", duplication_factor(&tuples, wordcount_keys));
+    println!("  paircount L/M/H: {:.1} / {:.1} / {:.1}",
+        duplication_factor(&tuples, paircount_keys(3)),
+        duplication_factor(&tuples, paircount_keys(10)),
+        duplication_factor(&tuples, paircount_keys(usize::MAX)));
+
+    // ---- wordcount A+ on the VSN engine ----------------------------
+    let (mut engine, mut ingress, mut readers) = VsnEngine::setup(
+        wordcount_op(WindowSpec::new(60_000, 120_000)), // Operator 4 geometry
+        VsnOptions { initial: 2, max: 2, upstreams: 1, ..Default::default() },
+    );
+    let mut ing = ingress.remove(0);
+    let mut out = readers.remove(0);
+    let horizon = tuples.last().unwrap().ts + 200_000;
+    let feed = tuples.clone();
+    let feeder = std::thread::spawn(move || {
+        for t in feed {
+            ing.add(t);
+        }
+        ing.heartbeat(horizon);
+    });
+    let mut counts: Vec<(u64, u64)> = Vec::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let mut quiet = std::time::Instant::now();
+    while std::time::Instant::now() < deadline {
+        match out.get() {
+            Some(t) if t.kind.is_data() => {
+                counts.push(t.payload);
+                quiet = std::time::Instant::now();
+            }
+            Some(_) => {}
+            None => {
+                if feeder.is_finished() && quiet.elapsed() > Duration::from_millis(300) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+    feeder.join().unwrap();
+    engine.shutdown();
+    // aggregate across windows: top words overall
+    let mut totals = std::collections::HashMap::<u64, u64>::new();
+    for &(k, c) in &counts {
+        *totals.entry(k).or_default() += c;
+    }
+    let mut top: Vec<_> = totals.into_iter().collect();
+    top.sort_by_key(|&(_, c)| std::cmp::Reverse(c));
+    println!("\ntop words (id, windowed-count sum):");
+    for (k, c) in top.iter().take(8) {
+        println!("  word#{k}: {c}");
+    }
+    println!("({} window results total)", counts.len());
+
+    // ---- the §1 running example: longest tweet per hashtag ---------
+    let (mut engine2, mut ingress2, mut readers2) = VsnEngine::setup(
+        longest_tweet_op(WindowSpec::new(1_800_000, 3_600_000)), // 30m/60m (Operator 1)
+        VsnOptions { initial: 2, max: 2, upstreams: 1, ..Default::default() },
+    );
+    let mut ing2 = ingress2.remove(0);
+    let mut out2 = readers2.remove(0);
+    let horizon2 = tuples.last().unwrap().ts + 7_200_000;
+    let feeder2 = std::thread::spawn(move || {
+        for t in tuples {
+            ing2.add(t);
+        }
+        ing2.heartbeat(horizon2);
+    });
+    let mut longest: Vec<(u64, u64)> = Vec::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let mut quiet = std::time::Instant::now();
+    while std::time::Instant::now() < deadline {
+        match out2.get() {
+            Some(t) if t.kind.is_data() => {
+                longest.push(t.payload);
+                quiet = std::time::Instant::now();
+            }
+            Some(_) => {}
+            None => {
+                if feeder2.is_finished() && quiet.elapsed() > Duration::from_millis(300) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+    feeder2.join().unwrap();
+    engine2.shutdown();
+    longest.sort_by_key(|&(_, c)| std::cmp::Reverse(c));
+    println!("\nlongest tweet per hashtag (the §1 running example, A+ with f_MK):");
+    for (tag, chars) in longest.iter().take(5) {
+        println!("  #tag{tag}: {chars} chars");
+    }
+}

@@ -1,0 +1,66 @@
+"""AOT lowering: JAX -> HLO text -> artifacts/ (build-time only).
+
+HLO *text* is the interchange format, NOT `.serialize()`: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+A manifest (artifacts/manifest.txt) lists each executable with its
+argument/result shapes so the rust runtime can validate at load time.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_sig(avals) -> str:
+    parts = []
+    for a in avals:
+        dims = "x".join(str(d) for d in a.shape)
+        parts.append(f"{a.dtype}[{dims}]")
+    return ",".join(parts)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for entry in model.aot_entries():
+        name, fn, example_args = entry[0], entry[1], entry[2]
+        kwargs = entry[3] if len(entry) > 3 else {}
+        lowered = fn.lower(*example_args, **kwargs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+        manifest.append(
+            f"{name} args={shape_sig(example_args)} "
+            f"outs={shape_sig(out_avals)}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} executables")
+
+
+if __name__ == "__main__":
+    main()

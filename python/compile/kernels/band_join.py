@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: the ScaleJoin band-join predicate tile (§8.3).
+
+The paper's compute hot-spot is the Cartesian comparison loop inside
+ScaleJoin's f_U; its throughput metric *is* comparisons/second. On TPU we
+evaluate a (B probes x W window) tile per grid step:
+
+* window columns (a, b) are tiled HBM->VMEM via BlockSpec in chunks of
+  TILE_W lanes (128-multiples for the VPU);
+* the band predicate |px-a|<=10 & |py-b|<=10 is an element-wise compare
+  on the VPU (this is not a matmul: the MXU is the wrong unit; the
+  roofline is VPU/bandwidth-bound — DESIGN.md §Hardware-Adaptation);
+* the mask is written back per tile; per-probe match counts are reduced
+  in the same pass.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# VPU lane-aligned window tile.
+TILE_W = 128
+
+
+def _band_kernel(px_ref, py_ref, wa_ref, wb_ref, mask_ref):
+    """One (B, TILE_W) tile: vectorized band compare."""
+    px = px_ref[...]  # (B,)
+    py = py_ref[...]
+    wa = wa_ref[...]  # (TILE_W,)
+    wb = wb_ref[...]
+    dx = jnp.abs(px[:, None] - wa[None, :])
+    dy = jnp.abs(py[:, None] - wb[None, :])
+    m = (dx <= ref.BAND) & (dy <= ref.BAND)
+    mask_ref[...] = m.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def band_join_mask(px, py, wa, wb, interpret=True):
+    """Band-join mask via the Pallas tile kernel.
+
+    px, py: (B,) f32 probes. wa, wb: (W,) f32 stored window columns
+    (padded to a TILE_W multiple with +inf). Returns (B, W) int8 mask.
+    """
+    b = px.shape[0]
+    w = wa.shape[0]
+    assert w % TILE_W == 0, f"window must be padded to {TILE_W}, got {w}"
+    grid = (w // TILE_W,)
+    return pl.pallas_call(
+        _band_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((TILE_W,), lambda i: (i,)),
+            pl.BlockSpec((TILE_W,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b, TILE_W), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, w), jnp.int8),
+        interpret=interpret,
+    )(px, py, wa, wb)
+
+
+def band_join_counts(px, py, wa, wb, interpret=True):
+    """Per-probe match counts (B,) int32 — the L2 reduction over the mask."""
+    mask = band_join_mask(px, py, wa, wb, interpret=interpret)
+    return jnp.sum(mask.astype(jnp.int32), axis=1)

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: the NYSE hedge predicate tile (§8.6).
+
+Same tile structure as band_join (VPU element-wise compare over window
+tiles); the predicate is the negative-correlation band on normalized
+distances, with symbol-inequality and padding guards evaluated in-kernel.
+Division-free formulation (see ref.hedge_ref): ratio in [-1.05, -0.95]
+<=> opposite signs AND |nd_p| within [0.95, 1.05]·|nd_w|.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_W = 128
+
+
+def _hedge_kernel(pnd_ref, pid_ref, wnd_ref, wid_ref, mask_ref):
+    pnd = pnd_ref[...]  # (B,) f32 normalized distances of probes
+    pid = pid_ref[...]  # (B,) i32 symbol ids
+    wnd = wnd_ref[...]  # (TILE_W,)
+    wid = wid_ref[...]
+    opposite = (pnd[:, None] * wnd[None, :]) < 0.0
+    al = jnp.abs(pnd)[:, None]
+    ar = jnp.abs(wnd)[None, :]
+    in_band = (al >= 0.95 * ar) & (al <= 1.05 * ar)
+    distinct = pid[:, None] != wid[None, :]
+    valid = (wid >= 0)[None, :]
+    mask_ref[...] = (opposite & in_band & distinct & valid).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hedge_mask(p_nd, p_id, w_nd, w_id, interpret=True):
+    """Hedge mask: probes (B,) x window (W, padded w_id=-1) -> (B, W) i8."""
+    b = p_nd.shape[0]
+    w = w_nd.shape[0]
+    assert w % TILE_W == 0, f"window must be padded to {TILE_W}, got {w}"
+    grid = (w // TILE_W,)
+    return pl.pallas_call(
+        _hedge_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((TILE_W,), lambda i: (i,)),
+            pl.BlockSpec((TILE_W,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b, TILE_W), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, w), jnp.int8),
+        interpret=interpret,
+    )(p_nd, p_id, w_nd, w_id)

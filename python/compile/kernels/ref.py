@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package must match its reference here bit-for-bit
+(boolean masks) or to float tolerance (reductions); pytest + hypothesis
+sweep values, padding and shape variants against these.
+"""
+
+import jax.numpy as jnp
+
+# §8.3 band: |x_L - a_R| <= 10 AND |y_L - b_R| <= 10
+BAND = 10.0
+
+
+def band_join_ref(px, py, wa, wb):
+    """Band-join mask: probes (B,) x window (W,) -> bool (B, W).
+
+    Padding convention: pad window slots with +inf so no probe matches.
+    """
+    dx = jnp.abs(px[:, None] - wa[None, :])
+    dy = jnp.abs(py[:, None] - wb[None, :])
+    return (dx <= BAND) & (dy <= BAND)
+
+
+def hedge_ref(p_nd, p_id, w_nd, w_id):
+    """NYSE hedge predicate (§8.6): normalized-distance ratio band.
+
+    A pair matches when the companies differ and ND_l / ND_r lies in
+    [-1.05, -0.95] (negative correlation). Implemented without division:
+    nd_l/nd_r in [-1.05,-0.95]  <=>  nd_l*nd_r < 0 (opposite sign) and
+    |nd_l| between 0.95|nd_r| and 1.05|nd_r|.
+    Padding: w_id = -1 never matches (p_id >= 0).
+    """
+    opposite = (p_nd[:, None] * w_nd[None, :]) < 0.0
+    al = jnp.abs(p_nd)[:, None]
+    ar = jnp.abs(w_nd)[None, :]
+    in_band = (al >= 0.95 * ar) & (al <= 1.05 * ar)
+    distinct = p_id[:, None] != w_id[None, :]
+    valid = (w_id >= 0)[None, :]
+    return opposite & in_band & distinct & valid
+
+
+def window_count_ref(keys, n_keys):
+    """Per-key counts over a tile of key ids: (N,) int32 -> (K,) int32.
+
+    Padding: key = -1 contributes to no bucket.
+    """
+    onehot = keys[:, None] == jnp.arange(n_keys, dtype=keys.dtype)[None, :]
+    return jnp.sum(onehot.astype(jnp.int32), axis=0)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: windowed per-key counting tile (wordcount, Q1).
+
+Counts key occurrences over a tile of interned key ids. The TPU-shaped
+formulation avoids scatter (no efficient scatter on the VPU): each grid
+step compares a TILE_N slice of keys against the K bucket ids as an
+equality matrix and accumulates column sums — O(N·K) element-wise work
+that vectorizes perfectly, the classic small-K histogram trade.
+Padding: key = -1 hits no bucket.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 256
+
+
+def _count_kernel(keys_ref, out_ref):
+    step = pl.program_id(0)
+    keys = keys_ref[...]  # (TILE_N,) i32
+    k = out_ref.shape[0]
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (k,), 0)
+    onehot = (keys[:, None] == buckets[None, :]).astype(jnp.int32)
+    partial = jnp.sum(onehot, axis=0)  # (K,)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(step != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("n_keys", "interpret"))
+def window_count(keys, n_keys, interpret=True):
+    """Per-key counts: keys (N,) i32 (N multiple of TILE_N) -> (K,) i32."""
+    n = keys.shape[0]
+    assert n % TILE_N == 0, f"keys must be padded to {TILE_N}, got {n}"
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_N,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((n_keys,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_keys,), jnp.int32),
+        interpret=interpret,
+    )(keys)

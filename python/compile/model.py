@@ -1,0 +1,87 @@
+"""L2: the JAX compute graphs that the rust coordinator executes via PJRT.
+
+Each function composes the L1 Pallas kernels into the operator-level step
+the L3 hot path offloads:
+
+* `band_join_step`  — probe batch vs stored window: mask + per-probe counts
+  (the ScaleJoin f_U comparison batch, Q3);
+* `hedge_step`      — the NYSE predicate batch (Q6);
+* `wordcount_step`  — per-key window counts over a tile of key ids (Q1).
+
+These are lowered ONCE by `compile.aot` to HLO text under artifacts/;
+Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import band_join, hedge, window_count
+
+
+def band_join_step(px, py, wa, wb):
+    """ScaleJoin comparison batch.
+
+    Returns (mask (B, W) int8, counts (B,) int32). The mask drives match
+    emission on the rust side; the counts are the comparisons-metric
+    reduction, fused by XLA into the same pass over the tile.
+    """
+    mask = band_join.band_join_mask(px, py, wa, wb, interpret=True)
+    counts = jnp.sum(mask.astype(jnp.int32), axis=1)
+    return mask, counts
+
+
+def hedge_step(p_nd, p_id, w_nd, w_id):
+    """NYSE hedge predicate batch: (mask (B, W) int8, counts (B,) int32)."""
+    mask = hedge.hedge_mask(p_nd, p_id, w_nd, w_id, interpret=True)
+    counts = jnp.sum(mask.astype(jnp.int32), axis=1)
+    return mask, counts
+
+
+def wordcount_step(keys, n_keys):
+    """Windowed per-key counts over a tile of interned key ids."""
+    return (window_count.window_count(keys, n_keys, interpret=True),)
+
+
+# ---------------------------------------------------------------------------
+# AOT variants: fixed shapes compiled once (PJRT executables are static).
+# The rust offload engine picks the smallest variant that fits and pads.
+# ---------------------------------------------------------------------------
+
+# (batch, window) variants for the join kernels
+JOIN_VARIANTS = [(16, 512), (16, 2048), (16, 8192)]
+# (tile, keys) variants for the counting kernel
+COUNT_VARIANTS = [(1024, 1024)]
+
+
+def aot_entries():
+    """Yield (name, jitted fn, example args) for every artifact."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    for b, w in JOIN_VARIANTS:
+        yield (
+            f"band_join_b{b}_w{w}",
+            jax.jit(band_join_step),
+            (
+                jax.ShapeDtypeStruct((b,), f32),
+                jax.ShapeDtypeStruct((b,), f32),
+                jax.ShapeDtypeStruct((w,), f32),
+                jax.ShapeDtypeStruct((w,), f32),
+            ),
+        )
+        yield (
+            f"hedge_b{b}_w{w}",
+            jax.jit(hedge_step),
+            (
+                jax.ShapeDtypeStruct((b,), f32),
+                jax.ShapeDtypeStruct((b,), i32),
+                jax.ShapeDtypeStruct((w,), f32),
+                jax.ShapeDtypeStruct((w,), i32),
+            ),
+        )
+    for n, k in COUNT_VARIANTS:
+        yield (
+            f"window_count_n{n}_k{k}",
+            jax.jit(wordcount_step, static_argnames=("n_keys",)),
+            (jax.ShapeDtypeStruct((n,), i32),),
+            {"n_keys": k},
+        )

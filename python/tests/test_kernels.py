@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps values, padding amounts and shape variants; exact
+equality is required for the boolean masks and integer counts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import band_join, hedge, ref, window_count
+
+settings.register_profile("ci", deadline=None, max_examples=30)
+settings.load_profile("ci")
+
+
+def pad_window(a, tile, fill):
+    n = len(a)
+    padded = ((n + tile - 1) // tile) * tile
+    return np.concatenate([a, np.full(padded - n, fill, dtype=a.dtype)])
+
+
+floats = st.floats(min_value=-1e4, max_value=1e4, width=32)
+
+
+# ---------------------------------------------------------------- band join
+@given(
+    b=st.integers(1, 16),
+    w=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_band_join_matches_ref(b, w, seed):
+    rng = np.random.default_rng(seed)
+    px = rng.uniform(0, 100, b).astype(np.float32)
+    py = rng.uniform(0, 100, b).astype(np.float32)
+    wa = pad_window(rng.uniform(0, 100, w).astype(np.float32), band_join.TILE_W, np.inf)
+    wb = pad_window(rng.uniform(0, 100, w).astype(np.float32), band_join.TILE_W, np.inf)
+    got = np.asarray(band_join.band_join_mask(px, py, wa, wb))
+    want = np.asarray(ref.band_join_ref(jnp.asarray(px), jnp.asarray(py),
+                                        jnp.asarray(wa), jnp.asarray(wb))).astype(np.int8)
+    np.testing.assert_array_equal(got, want)
+    # padded slots never match
+    assert not got[:, w:].any()
+
+
+def test_band_join_boundary_inclusive():
+    px = np.array([0.0], dtype=np.float32)
+    py = np.array([0.0], dtype=np.float32)
+    wa = pad_window(np.array([10.0, 10.0001, -10.0], dtype=np.float32), band_join.TILE_W, np.inf)
+    wb = pad_window(np.array([0.0, 0.0, 0.0], dtype=np.float32), band_join.TILE_W, np.inf)
+    got = np.asarray(band_join.band_join_mask(px, py, wa, wb))[0]
+    assert got[0] == 1  # |0-10| <= 10 inclusive
+    assert got[1] == 0
+    assert got[2] == 1
+
+
+@given(b=st.integers(1, 8), w=st.integers(1, 200), seed=st.integers(0, 2**31 - 1))
+def test_band_join_counts_match_mask(b, w, seed):
+    rng = np.random.default_rng(seed)
+    px = rng.uniform(0, 50, b).astype(np.float32)
+    py = rng.uniform(0, 50, b).astype(np.float32)
+    wa = pad_window(rng.uniform(0, 50, w).astype(np.float32), band_join.TILE_W, np.inf)
+    wb = pad_window(rng.uniform(0, 50, w).astype(np.float32), band_join.TILE_W, np.inf)
+    counts = np.asarray(band_join.band_join_counts(px, py, wa, wb))
+    mask = np.asarray(band_join.band_join_mask(px, py, wa, wb))
+    np.testing.assert_array_equal(counts, mask.sum(axis=1))
+
+
+# ------------------------------------------------------------------- hedge
+@given(
+    b=st.integers(1, 16),
+    w=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hedge_matches_ref(b, w, seed):
+    rng = np.random.default_rng(seed)
+    p_nd = rng.uniform(-0.1, 0.1, b).astype(np.float32)
+    p_id = rng.integers(0, 10, b).astype(np.int32)
+    w_nd = pad_window(rng.uniform(-0.1, 0.1, w).astype(np.float32), hedge.TILE_W, 0.0)
+    w_id = pad_window(rng.integers(0, 10, w).astype(np.int32), hedge.TILE_W, -1)
+    got = np.asarray(hedge.hedge_mask(p_nd, p_id, w_nd, w_id))
+    want = np.asarray(ref.hedge_ref(jnp.asarray(p_nd), jnp.asarray(p_id),
+                                    jnp.asarray(w_nd), jnp.asarray(w_id))).astype(np.int8)
+    np.testing.assert_array_equal(got, want)
+    assert not got[:, w:].any()
+
+
+def test_hedge_semantics_spotcheck():
+    # nd ratio -1.0, distinct ids → match; same id → no match;
+    # ratio -2.0 → out of band; same sign → no match
+    p_nd = np.array([0.05, 0.05, 0.10, 0.05], dtype=np.float32)
+    p_id = np.array([1, 2, 1, 1], dtype=np.int32)
+    w_nd = pad_window(np.array([-0.05], dtype=np.float32), hedge.TILE_W, 0.0)
+    w_id = pad_window(np.array([2], dtype=np.int32), hedge.TILE_W, -1)
+    got = np.asarray(hedge.hedge_mask(p_nd, p_id, w_nd, w_id))[:, 0]
+    assert got.tolist() == [1, 0, 0, 1]
+
+
+# ------------------------------------------------------------ window count
+@given(
+    n=st.integers(1, 2000),
+    k=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_window_count_matches_ref(n, k, seed):
+    rng = np.random.default_rng(seed)
+    keys = pad_window(rng.integers(0, k, n).astype(np.int32), window_count.TILE_N, -1)
+    got = np.asarray(window_count.window_count(keys, k))
+    want = np.asarray(ref.window_count_ref(jnp.asarray(keys), k))
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() == n  # every non-padding key lands in exactly one bucket
+
+
+def test_window_count_multi_tile_accumulates():
+    n = window_count.TILE_N * 3
+    keys = np.zeros(n, dtype=np.int32)
+    got = np.asarray(window_count.window_count(keys, 4))
+    assert got[0] == n and got[1:].sum() == 0
+
+
+# -------------------------------------------------- AOT entries all lower
+def test_aot_entries_lower():
+    from compile import model
+    from compile.aot import to_hlo_text
+
+    for entry in model.aot_entries():
+        name, fn, args = entry[0], entry[1], entry[2]
+        kwargs = entry[3] if len(entry) > 3 else {}
+        text = to_hlo_text(fn.lower(*args, **kwargs))
+        assert "HloModule" in text, name
+        assert len(text) > 200, name

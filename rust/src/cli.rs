@@ -1,0 +1,193 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each binary declares its options; `--help` text is generated.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+/// CLI specification + parser.
+pub struct Cli {
+    bin: String,
+    about: String,
+    opts: Vec<Opt>,
+}
+
+impl Cli {
+    pub fn new(bin: &str, about: &str) -> Self {
+        Cli { bin: bin.into(), about: about.into(), opts: Vec::new() }
+    }
+
+    /// Declare an option taking a value, with optional default.
+    pub fn opt(mut self, name: &str, help: &str, default: Option<&str>) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: default.map(|s| s.to_string()),
+        });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt { name: name.into(), help: help.into(), takes_value: false, default: None });
+        self
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.bin, self.about);
+        for o in &self.opts {
+            let arg = if o.takes_value { format!("--{} <v>", o.name) } else { format!("--{}", o.name) };
+            let def = o.default.as_ref().map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {:<24} {}{}\n", arg, o.help, def));
+        }
+        s.push_str("  --help                   show this help\n");
+        s
+    }
+
+    /// Parse an iterator of arguments (excluding argv[0]). On `--help`,
+    /// prints help and exits.
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            // `cargo bench` appends `--bench` to harness=false binaries
+            if a == "--bench" {
+                continue;
+            }
+            if a == "--help" || a == "-h" {
+                print!("{}", self.help());
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n{}", self.help()))?;
+                if opt.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} requires a value"))?,
+                    };
+                    out.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse `std::env::args().skip(1)`.
+    pub fn parse(&self) -> Result<Args, String> {
+        self.parse_from(std::env::args().skip(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("threads", "thread count", Some("4"))
+            .opt("mode", "run mode", None)
+            .flag("verbose", "chatty")
+    }
+
+    fn parse(args: &[&str]) -> Args {
+        cli().parse_from(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("threads", 0), 4);
+        assert!(a.get("mode").is_none());
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = parse(&["--threads", "8", "--mode=sim"]);
+        assert_eq!(a.usize_or("threads", 0), 8);
+        assert_eq!(a.get("mode"), Some("sim"));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse(&["--verbose", "run", "q3"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string(), "q3".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = cli().parse_from(vec!["--nope".to_string()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = cli().parse_from(vec!["--mode".to_string()]);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,345 @@
+//! Experiment/query configuration system.
+//!
+//! Parses a TOML-subset (sections, `key = value`, strings, ints, floats,
+//! bools, comments) — enough for real experiment configs without the
+//! (offline-unavailable) serde/toml stack — and exposes typed accessors
+//! plus the experiment config structs consumed by the CLI launcher.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    /// Homogeneous-ish list (elements parsed individually).
+    List(Vec<ConfigValue>),
+}
+
+impl fmt::Display for ConfigValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigValue::Str(s) => write!(f, "{s}"),
+            ConfigValue::Int(v) => write!(f, "{v}"),
+            ConfigValue::Float(v) => write!(f, "{v}"),
+            ConfigValue::Bool(b) => write!(f, "{b}"),
+            ConfigValue::List(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Configuration parse/validation errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("missing key `{0}`")]
+    Missing(String),
+    #[error("key `{key}`: expected {expected}, got `{got}`")]
+    Type { key: String, expected: &'static str, got: String },
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// A parsed config: `section.key` → value. Keys outside any section live
+/// under the empty section "".
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, ConfigValue>,
+}
+
+fn parse_scalar(s: &str, line: usize) -> Result<ConfigValue, ConfigError> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(ConfigError::Parse { line, msg: "empty value".into() });
+    }
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        return Ok(ConfigValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(ConfigValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(ConfigValue::Bool(false));
+    }
+    // int with optional underscores
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Ok(ConfigValue::Int(v));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(ConfigValue::Float(v));
+    }
+    // bare string
+    Ok(ConfigValue::Str(s.to_string()))
+}
+
+/// Split a list body on commas, respecting quotes.
+fn split_list(body: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut quote: Option<char> = None;
+    for c in body.chars() {
+        match quote {
+            Some(q) => {
+                cur.push(c);
+                if c == q {
+                    quote = None;
+                }
+            }
+            None => match c {
+                '"' | '\'' => {
+                    cur.push(c);
+                    quote = Some(c);
+                }
+                ',' => {
+                    parts.push(std::mem::take(&mut cur));
+                }
+                _ => cur.push(c),
+            },
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line_no = ln + 1;
+            // strip comments (naive: # outside quotes)
+            let mut in_quote: Option<char> = None;
+            let mut cut = raw.len();
+            for (i, c) in raw.char_indices() {
+                match in_quote {
+                    Some(q) if c == q => in_quote = None,
+                    None if c == '"' || c == '\'' => in_quote = Some(c),
+                    None if c == '#' => {
+                        cut = i;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            let line = raw[..cut].trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ConfigError::Parse {
+                        line: line_no,
+                        msg: "unterminated section header".into(),
+                    });
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ConfigError::Parse {
+                line: line_no,
+                msg: format!("expected `key = value`, got `{line}`"),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ConfigError::Parse { line: line_no, msg: "empty key".into() });
+            }
+            let vstr = line[eq + 1..].trim();
+            let value = if vstr.starts_with('[') && vstr.ends_with(']') {
+                let body = &vstr[1..vstr.len() - 1];
+                let items = split_list(body)
+                    .into_iter()
+                    .map(|p| parse_scalar(&p, line_no))
+                    .collect::<Result<Vec<_>, _>>()?;
+                ConfigValue::List(items)
+            } else {
+                parse_scalar(vstr, line_no)?
+            };
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, value);
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file path.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self, ConfigError> {
+        Ok(Self::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ConfigValue> {
+        self.values.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    fn require(&self, key: &str) -> Result<&ConfigValue, ConfigError> {
+        self.get(key).ok_or_else(|| ConfigError::Missing(key.to_string()))
+    }
+
+    pub fn int(&self, key: &str) -> Result<i64, ConfigError> {
+        match self.require(key)? {
+            ConfigValue::Int(v) => Ok(*v),
+            other => Err(ConfigError::Type { key: key.into(), expected: "int", got: other.to_string() }),
+        }
+    }
+
+    pub fn float(&self, key: &str) -> Result<f64, ConfigError> {
+        match self.require(key)? {
+            ConfigValue::Float(v) => Ok(*v),
+            ConfigValue::Int(v) => Ok(*v as f64),
+            other => Err(ConfigError::Type { key: key.into(), expected: "float", got: other.to_string() }),
+        }
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str, ConfigError> {
+        match self.require(key)? {
+            ConfigValue::Str(s) => Ok(s),
+            other => Err(ConfigError::Type { key: key.into(), expected: "string", got: other.to_string() }),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Result<bool, ConfigError> {
+        match self.require(key)? {
+            ConfigValue::Bool(b) => Ok(*b),
+            other => Err(ConfigError::Type { key: key.into(), expected: "bool", got: other.to_string() }),
+        }
+    }
+
+    pub fn int_list(&self, key: &str) -> Result<Vec<i64>, ConfigError> {
+        match self.require(key)? {
+            ConfigValue::List(xs) => xs
+                .iter()
+                .map(|x| match x {
+                    ConfigValue::Int(v) => Ok(*v),
+                    other => Err(ConfigError::Type {
+                        key: key.into(),
+                        expected: "int list",
+                        got: other.to_string(),
+                    }),
+                })
+                .collect(),
+            other => Err(ConfigError::Type { key: key.into(), expected: "list", got: other.to_string() }),
+        }
+    }
+
+    /// Typed getter with default.
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.int(key).unwrap_or(default)
+    }
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.float(key).unwrap_or(default)
+    }
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.bool(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "q3-scalejoin"
+seed = 42
+
+[operator]
+wa_ms = 1
+ws_ms = 300_000   # 5 minutes
+keys = 1000
+wt = "single"
+
+[elastic]
+enabled = true
+thresholds = [45, 70, 90]
+rate_scale = 1.5
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name").unwrap(), "q3-scalejoin");
+        assert_eq!(c.int("seed").unwrap(), 42);
+        assert_eq!(c.int("operator.ws_ms").unwrap(), 300_000);
+        assert_eq!(c.str("operator.wt").unwrap(), "single");
+        assert!(c.bool("elastic.enabled").unwrap());
+        assert_eq!(c.int_list("elastic.thresholds").unwrap(), vec![45, 70, 90]);
+        assert!((c.float("elastic.rate_scale").unwrap() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn int_coerces_to_float_not_reverse() {
+        let c = Config::parse("a = 3\nb = 2.5").unwrap();
+        assert!((c.float("a").unwrap() - 3.0).abs() < 1e-12);
+        assert!(c.int("b").is_err());
+    }
+
+    #[test]
+    fn missing_and_defaults() {
+        let c = Config::parse("x = 1").unwrap();
+        assert!(matches!(c.int("y"), Err(ConfigError::Missing(_))));
+        assert_eq!(c.int_or("y", 7), 7);
+        assert_eq!(c.str_or("z", "d"), "d");
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let c = Config::parse("s = \"has # hash\" # trailing").unwrap();
+        assert_eq!(c.str("s").unwrap(), "has # hash");
+    }
+
+    #[test]
+    fn bad_lines_error_with_line_number() {
+        let err = Config::parse("ok = 1\nnot a kv line").unwrap_err();
+        match err {
+            ConfigError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn list_of_strings() {
+        let c = Config::parse("xs = [\"a\", \"b,c\", 'd']").unwrap();
+        match c.get("xs").unwrap() {
+            ConfigValue::List(v) => {
+                assert_eq!(v.len(), 3);
+                assert_eq!(v[1], ConfigValue::Str("b,c".into()));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bare_strings_allowed() {
+        let c = Config::parse("mode = threaded").unwrap();
+        assert_eq!(c.str("mode").unwrap(), "threaded");
+    }
+}

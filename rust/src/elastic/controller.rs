@@ -1,0 +1,90 @@
+//! Controller interface: STRETCH "does not aim at embedding a specific
+//! policy ... but rather defines a generic API for external modules" (§3).
+//!
+//! A controller is polled with [`Observation`]s (metrics snapshots) and
+//! returns the next instance set when a reconfiguration is warranted; the
+//! driver forwards it to [`crate::engine::ControlPlane::reconfigure`].
+
+use crate::tuple::InstanceId;
+
+/// A metrics snapshot handed to the controller each tick.
+#[derive(Clone, Debug)]
+pub struct Observation {
+    /// Observed/estimated input rate (t/s).
+    pub in_rate: f64,
+    /// Observed comparison throughput (c/s) since last tick.
+    pub cmp_per_s: f64,
+    /// Input-gate backlog (pending tuples) — the controller's signal for
+    /// pending workload (§8.5's "accounts also for the pending ...
+    /// workload").
+    pub backlog: u64,
+    /// Seconds since the previous observation.
+    pub dt: f64,
+    /// Currently active instance ids (𝕆).
+    pub active: Vec<InstanceId>,
+    /// Maximum parallelism n (pool included).
+    pub max: usize,
+}
+
+/// Decision returned by a controller tick.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    /// Keep the current configuration.
+    Hold,
+    /// Reconfigure to this instance set.
+    Reconfigure(Vec<InstanceId>),
+}
+
+/// The policy interface.
+pub trait Controller: Send {
+    fn tick(&mut self, obs: &Observation) -> Decision;
+}
+
+/// Choose the next instance set of size `target` given the current set:
+/// keep existing ids, grow from the lowest free ids, shrink from the
+/// highest active ids (the paper's pool semantics, §7).
+pub fn resize_instance_set(active: &[InstanceId], max: usize, target: usize) -> Vec<InstanceId> {
+    let target = target.clamp(1, max);
+    let mut set: Vec<InstanceId> = active.to_vec();
+    set.sort_unstable();
+    if target <= set.len() {
+        set.truncate(target);
+        return set;
+    }
+    let mut free: Vec<InstanceId> = (0..max).filter(|i| !set.contains(i)).collect();
+    free.sort_unstable();
+    for id in free {
+        if set.len() == target {
+            break;
+        }
+        set.push(id);
+    }
+    set.sort_unstable();
+    set
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resize_grows_from_pool() {
+        assert_eq!(resize_instance_set(&[0, 2], 6, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn resize_shrinks_highest_first() {
+        assert_eq!(resize_instance_set(&[0, 1, 2, 3], 6, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn resize_clamps() {
+        assert_eq!(resize_instance_set(&[0], 4, 0), vec![0]);
+        assert_eq!(resize_instance_set(&[0], 4, 99).len(), 4);
+    }
+
+    #[test]
+    fn resize_identity() {
+        assert_eq!(resize_instance_set(&[1, 3], 6, 2), vec![1, 3]);
+    }
+}

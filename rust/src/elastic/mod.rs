@@ -1,0 +1,17 @@
+//! Elasticity controllers (§8.4-§8.5) and the join performance model.
+//!
+//! STRETCH itself only defines the reconfiguration *mechanism* (epochs +
+//! control tuples, `crate::engine`); these are the external policy modules
+//! the evaluation plugs in: the reactive 90/70/45 threshold controller
+//! (Q4) and the proactive model-based controller (Q5), both built on the
+//! calibrated stream-join cost model of DEBS'17 [22].
+
+pub mod controller;
+pub mod model;
+pub mod proactive;
+pub mod reactive;
+
+pub use controller::{resize_instance_set, Controller, Decision, Observation};
+pub use model::JoinCostModel;
+pub use proactive::ProactiveController;
+pub use reactive::{ReactiveController, Thresholds};

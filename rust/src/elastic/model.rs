@@ -1,0 +1,142 @@
+//! Stream-join performance model (Gulisano et al., DEBS'17 [22] — the
+//! model both §8.4's controller and §8.5's proactive controller build on).
+//!
+//! For a ScaleJoin-style operator fed at rate R (t/s across both streams)
+//! with window size WS (seconds), every incoming tuple is compared against
+//! the tuples currently stored in the opposite window (≈ R·WS/2 per side
+//! → ≈ R·WS/2 comparisons per tuple against the opposite stream, i.e.
+//! total comparison throughput D(R) ≈ R²·WS/2 c/s for balanced streams).
+//! With Π threads each sustaining C comparisons/second, the operator is
+//! feasible iff D(R) ≤ Π·C, giving
+//!
+//! * threads needed:      Π(R) = ⌈R²·WS / (2C)⌉
+//! * max sustainable rate: R_max(Π) = sqrt(2·Π·C / WS)
+//!
+//! C is *calibrated*, not assumed: [`JoinCostModel::calibrate`] measures
+//! the single-thread comparison throughput of this build on this machine.
+
+/// Calibrated cost model for a band-join workload.
+#[derive(Clone, Copy, Debug)]
+pub struct JoinCostModel {
+    /// Comparisons per second one thread sustains (calibrated).
+    pub cmp_per_sec: f64,
+    /// Window size in seconds.
+    pub ws_secs: f64,
+    /// Per-tuple fixed overhead (seconds): gate + window maintenance.
+    pub per_tuple_overhead: f64,
+}
+
+impl JoinCostModel {
+    pub fn new(cmp_per_sec: f64, ws_secs: f64) -> Self {
+        assert!(cmp_per_sec > 0.0 && ws_secs > 0.0);
+        JoinCostModel { cmp_per_sec, ws_secs, per_tuple_overhead: 0.0 }
+    }
+
+    /// Comparison demand (c/s) at input rate `rate` t/s (both streams).
+    pub fn demand(&self, rate: f64) -> f64 {
+        rate * rate * self.ws_secs / 2.0
+    }
+
+    /// Fraction of one thread consumed per tuple-rate overhead.
+    fn overhead_load(&self, rate: f64) -> f64 {
+        rate * self.per_tuple_overhead
+    }
+
+    /// Utilization of Π threads at input rate `rate` (1.0 = saturated).
+    pub fn utilization(&self, rate: f64, threads: usize) -> f64 {
+        if threads == 0 {
+            return f64::INFINITY;
+        }
+        (self.demand(rate) / self.cmp_per_sec + self.overhead_load(rate)) / threads as f64
+    }
+
+    /// Threads needed to keep utilization at or below `target` (0-1].
+    pub fn threads_needed(&self, rate: f64, target: f64) -> usize {
+        assert!(target > 0.0);
+        let load = self.demand(rate) / self.cmp_per_sec + self.overhead_load(rate);
+        (load / target).ceil().max(1.0) as usize
+    }
+
+    /// Max sustainable input rate with Π threads at full utilization.
+    pub fn max_rate(&self, threads: usize) -> f64 {
+        // solve R²·WS/(2C) + R·o = Π  (quadratic in R)
+        let a = self.ws_secs / (2.0 * self.cmp_per_sec);
+        let b = self.per_tuple_overhead;
+        let c = -(threads as f64);
+        if a == 0.0 {
+            return -c / b.max(1e-12);
+        }
+        (-b + (b * b - 4.0 * a * c).sqrt()) / (2.0 * a)
+    }
+
+    /// Calibrate single-thread comparison throughput with the actual
+    /// predicate evaluation loop (used by benches and controllers).
+    pub fn calibrate<F: FnMut() -> u64>(ws_secs: f64, mut run_batch: F) -> Self {
+        let t0 = std::time::Instant::now();
+        let mut total = 0u64;
+        while t0.elapsed().as_millis() < 200 {
+            total += run_batch();
+        }
+        let cps = total as f64 / t0.elapsed().as_secs_f64();
+        JoinCostModel::new(cps.max(1.0), ws_secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demand_quadratic_in_rate() {
+        let m = JoinCostModel::new(1e6, 10.0);
+        assert!((m.demand(100.0) - 50_000.0).abs() < 1e-6);
+        assert!((m.demand(200.0) / m.demand(100.0) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn threads_needed_matches_utilization() {
+        let m = JoinCostModel::new(1e6, 10.0);
+        for rate in [50.0, 100.0, 400.0, 1000.0] {
+            let n = m.threads_needed(rate, 0.7);
+            assert!(m.utilization(rate, n) <= 0.7 + 1e-9, "rate={rate} n={n}");
+            if n > 1 {
+                assert!(m.utilization(rate, n - 1) > 0.7, "rate={rate} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_rate_inverts_threads() {
+        let m = JoinCostModel::new(1e6, 10.0);
+        for pi in [1usize, 4, 16, 64] {
+            let r = m.max_rate(pi);
+            let u = m.utilization(r, pi);
+            assert!((u - 1.0).abs() < 1e-6, "pi={pi} u={u}");
+        }
+        // R_max grows with sqrt(Π)
+        let r1 = m.max_rate(1);
+        let r4 = m.max_rate(4);
+        assert!((r4 / r1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overhead_shifts_capacity() {
+        let mut m = JoinCostModel::new(1e6, 10.0);
+        let base = m.max_rate(4);
+        m.per_tuple_overhead = 1e-4;
+        assert!(m.max_rate(4) < base);
+    }
+
+    #[test]
+    fn calibration_produces_positive_rate() {
+        let m = JoinCostModel::calibrate(5.0, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc += (i % 7 == 0) as u64;
+            }
+            std::hint::black_box(acc);
+            10_000
+        });
+        assert!(m.cmp_per_sec > 10_000.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! The proactive model-based controller of §8.5 (Q5).
+//!
+//! Differences from the reactive controller, as the paper describes:
+//! narrowed thresholds ([70%, 80%] of capacity), and the cost is matched
+//! not only against current consumption but against *pending* (gate
+//! backlog) and *predicted* (rate-trend extrapolation) workload, per the
+//! DEBS'17 join performance model [22].
+
+use crate::elastic::controller::{resize_instance_set, Controller, Decision, Observation};
+use crate::elastic::model::JoinCostModel;
+
+pub struct ProactiveController {
+    pub model: JoinCostModel,
+    /// Narrowed band: provision above `upper`, decommission below `lower`,
+    /// aim for `target` (§8.5 uses [0.70, 0.80]).
+    pub lower: f64,
+    pub upper: f64,
+    pub target: f64,
+    /// EWMA smoothing for the rate estimate.
+    alpha: f64,
+    rate_ewma: f64,
+    prev_rate: f64,
+    /// Horizon (seconds) over which the rate trend is extrapolated.
+    pub horizon: f64,
+    /// Weight of backlog drain in the demand estimate (fraction of the
+    /// horizon in which the backlog should be absorbed).
+    pub drain_frac: f64,
+}
+
+impl ProactiveController {
+    pub fn new(model: JoinCostModel) -> Self {
+        ProactiveController {
+            model,
+            lower: 0.70,
+            upper: 0.80,
+            target: 0.75,
+            alpha: 0.5,
+            rate_ewma: 0.0,
+            prev_rate: 0.0,
+            horizon: 5.0,
+            drain_frac: 0.5,
+        }
+    }
+
+    /// Predicted input rate over the horizon: EWMA + linear trend.
+    fn predict_rate(&mut self, obs: &Observation) -> f64 {
+        if self.rate_ewma == 0.0 {
+            self.rate_ewma = obs.in_rate;
+        } else {
+            self.rate_ewma = self.alpha * obs.in_rate + (1.0 - self.alpha) * self.rate_ewma;
+        }
+        let slope = if obs.dt > 0.0 { (obs.in_rate - self.prev_rate) / obs.dt } else { 0.0 };
+        self.prev_rate = obs.in_rate;
+        // extrapolate, never below the smoothed estimate during ramp-down
+        // faster than the backlog justifies
+        (self.rate_ewma + slope.max(0.0) * self.horizon).max(0.0)
+    }
+
+    /// Effective demand rate: predicted arrival rate plus the extra rate
+    /// needed to drain the pending backlog within the drain window.
+    fn effective_rate(&mut self, obs: &Observation) -> f64 {
+        let predicted = self.predict_rate(obs);
+        let drain_window = (self.horizon * self.drain_frac).max(0.1);
+        predicted + obs.backlog as f64 / drain_window
+    }
+}
+
+impl Controller for ProactiveController {
+    fn tick(&mut self, obs: &Observation) -> Decision {
+        let rate = self.effective_rate(obs);
+        let pi = obs.active.len();
+        let u = self.model.utilization(rate, pi);
+        if u > self.upper || u < self.lower {
+            let need = self.model.threads_needed(rate, self.target).clamp(1, obs.max);
+            if need != pi {
+                return Decision::Reconfigure(resize_instance_set(&obs.active, obs.max, need));
+            }
+        }
+        Decision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(rate: f64, backlog: u64, active: Vec<usize>, max: usize) -> Observation {
+        Observation { in_rate: rate, cmp_per_s: 0.0, backlog, dt: 1.0, active, max }
+    }
+
+    fn ctl() -> ProactiveController {
+        ProactiveController::new(JoinCostModel::new(1e6, 10.0))
+    }
+
+    #[test]
+    fn reacts_to_rate_ramp_before_reactive_would() {
+        let mut c = ctl();
+        // warm up at a steady 300 t/s (needs 1 thread: u=0.45/thread)
+        for _ in 0..5 {
+            let _ = c.tick(&obs(300.0, 0, vec![0], 16));
+        }
+        // sudden ramp to 600 t/s: trend extrapolation over 5 s predicts
+        // ~1800+ t/s → provisions well beyond the instantaneous need
+        match c.tick(&obs(600.0, 0, vec![0], 16)) {
+            Decision::Reconfigure(set) => {
+                let instantaneous = JoinCostModel::new(1e6, 10.0).threads_needed(600.0, 0.75);
+                assert!(set.len() > instantaneous, "proactive must lead the ramp");
+            }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn backlog_adds_demand() {
+        let mut a = ctl();
+        let mut b = ctl();
+        for _ in 0..5 {
+            let _ = a.tick(&obs(400.0, 0, vec![0, 1], 16));
+            let _ = b.tick(&obs(400.0, 0, vec![0, 1], 16));
+        }
+        let da = a.tick(&obs(400.0, 0, vec![0, 1], 16));
+        let db = b.tick(&obs(400.0, 5000, vec![0, 1], 16));
+        // same rate, but a big backlog must demand more threads
+        let na = match da {
+            Decision::Reconfigure(ref s) => s.len(),
+            Decision::Hold => 2,
+        };
+        let nb = match db {
+            Decision::Reconfigure(ref s) => s.len(),
+            Decision::Hold => 2,
+        };
+        assert!(nb > na, "backlog must raise the target ({na} vs {nb})");
+    }
+
+    #[test]
+    fn decommissions_when_rate_drops() {
+        let mut c = ctl();
+        for _ in 0..8 {
+            let _ = c.tick(&obs(1200.0, 0, (0..11).collect(), 16));
+        }
+        // rate collapses; EWMA converges down over a few ticks
+        let mut last = Decision::Hold;
+        for _ in 0..8 {
+            last = c.tick(&obs(100.0, 0, (0..11).collect(), 16));
+        }
+        match last {
+            Decision::Reconfigure(set) => assert!(set.len() < 11),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn holds_in_band() {
+        let mut c = ctl();
+        // pick Π so utilization lands inside [0.70, 0.80]:
+        // R=1000 → demand 5e6 c/s = 5 thread-equivalents; Π=7 → u≈0.714
+        for _ in 0..6 {
+            let _ = c.tick(&obs(1000.0, 0, (0..7).collect(), 16));
+        }
+        assert_eq!(c.tick(&obs(1000.0, 0, (0..7).collect(), 16)), Decision::Hold);
+    }
+}

@@ -1,0 +1,149 @@
+//! The reactive threshold controller of §8.4 (Q4).
+//!
+//! Thresholds: upper 90%, target 70%, lower 45% of processing capacity.
+//! When the load of the active threads exceeds the upper threshold, the
+//! smallest number of new threads that brings average utilization below
+//! the target is provisioned; when load drops below the lower threshold,
+//! the largest number of threads that keeps utilization below the target
+//! is decommissioned.
+
+use crate::elastic::controller::{resize_instance_set, Controller, Decision, Observation};
+use crate::elastic::model::JoinCostModel;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Thresholds {
+    pub upper: f64,
+    pub target: f64,
+    pub lower: f64,
+}
+
+impl Default for Thresholds {
+    fn default() -> Self {
+        // §8.4: 90% / 70% / 45%
+        Thresholds { upper: 0.90, target: 0.70, lower: 0.45 }
+    }
+}
+
+pub struct ReactiveController {
+    pub model: JoinCostModel,
+    pub thresholds: Thresholds,
+    /// Cooldown: one reconfiguration must complete before the next is
+    /// issued (§6: reconfigurations are serialized).
+    cooldown_ticks: u32,
+    since_last: u32,
+}
+
+impl ReactiveController {
+    pub fn new(model: JoinCostModel, thresholds: Thresholds) -> Self {
+        ReactiveController { model, thresholds, cooldown_ticks: 2, since_last: u32::MAX }
+    }
+
+    pub fn with_cooldown(mut self, ticks: u32) -> Self {
+        self.cooldown_ticks = ticks;
+        self
+    }
+}
+
+impl Controller for ReactiveController {
+    fn tick(&mut self, obs: &Observation) -> Decision {
+        self.since_last = self.since_last.saturating_add(1);
+        if self.since_last < self.cooldown_ticks {
+            return Decision::Hold;
+        }
+        let pi = obs.active.len();
+        let u = self.model.utilization(obs.in_rate, pi);
+        let decision = if u > self.thresholds.upper {
+            // provision the smallest amount that reaches the target
+            let need = self.model.threads_needed(obs.in_rate, self.thresholds.target);
+            if need > pi {
+                Some(need.min(obs.max))
+            } else {
+                None
+            }
+        } else if u < self.thresholds.lower {
+            // decommission the largest amount that keeps below target
+            let need = self.model.threads_needed(obs.in_rate, self.thresholds.target);
+            if need < pi {
+                Some(need.max(1))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        match decision {
+            Some(target) if target != pi => {
+                self.since_last = 0;
+                Decision::Reconfigure(resize_instance_set(&obs.active, obs.max, target))
+            }
+            _ => Decision::Hold,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(rate: f64, active: Vec<usize>, max: usize) -> Observation {
+        Observation { in_rate: rate, cmp_per_s: 0.0, backlog: 0, dt: 1.0, active, max }
+    }
+
+    fn controller() -> ReactiveController {
+        // C = 1e6 c/s, WS = 10 s → Π(R) = R²·10/(2e6·0.7)
+        ReactiveController::new(JoinCostModel::new(1e6, 10.0), Thresholds::default())
+            .with_cooldown(0)
+    }
+
+    #[test]
+    fn provisions_on_overload() {
+        let mut c = controller();
+        // R=1000: demand 5e6 c/s = 5 threads at 100%; with 2 threads → u=2.5
+        match c.tick(&obs(1000.0, vec![0, 1], 16)) {
+            Decision::Reconfigure(set) => {
+                // target 0.7 → need ceil(5/0.7)=8
+                assert_eq!(set.len(), 8);
+                assert!(set.starts_with(&[0, 1]));
+            }
+            d => panic!("expected provision, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn decommissions_on_underload() {
+        let mut c = controller();
+        // R=100: demand 5e4 → 0.05 threads; with 8 threads u ≈ 0.006 < 0.45
+        match c.tick(&obs(100.0, (0..8).collect(), 16)) {
+            Decision::Reconfigure(set) => assert_eq!(set, vec![0]),
+            d => panic!("expected decommission, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn holds_in_band() {
+        let mut c = controller();
+        // choose rate so utilization with 4 threads is ~0.6 (between 0.45 and 0.9)
+        // u = R²·10/(2e6·4)=0.6 → R² = 480_000 → R ≈ 692.8
+        assert_eq!(c.tick(&obs(692.8, vec![0, 1, 2, 3], 16)), Decision::Hold);
+    }
+
+    #[test]
+    fn respects_max() {
+        let mut c = controller();
+        match c.tick(&obs(10_000.0, vec![0], 4)) {
+            Decision::Reconfigure(set) => assert_eq!(set.len(), 4),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn cooldown_spaces_reconfigs() {
+        let mut c = controller().with_cooldown(3);
+        c.since_last = u32::MAX; // first tick allowed
+        assert!(matches!(c.tick(&obs(1000.0, vec![0], 16)), Decision::Reconfigure(_)));
+        // immediately after: held even though still overloaded
+        assert_eq!(c.tick(&obs(1000.0, vec![0], 16)), Decision::Hold);
+        assert_eq!(c.tick(&obs(1000.0, vec![0], 16)), Decision::Hold);
+        assert!(matches!(c.tick(&obs(1000.0, vec![0], 16)), Decision::Reconfigure(_)));
+    }
+}

@@ -1,0 +1,106 @@
+//! The reconfiguration barrier (`waitForInstances(𝕆)`, Alg. 4 L18).
+//!
+//! A generation barrier with run-time party count: every instance of the
+//! current epoch 𝕆 processes the same merged tuple sequence, hence
+//! observes the same trigger (W > γ) and calls `wait(|𝕆|)` with the same
+//! count — membership never changes *while* a barrier is pending
+//! (reconfigurations are serialized by the epoch protocol, §6).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+pub struct EpochBarrier {
+    arrived: AtomicUsize,
+    generation: AtomicU64,
+}
+
+impl Default for EpochBarrier {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EpochBarrier {
+    pub fn new() -> Self {
+        EpochBarrier { arrived: AtomicUsize::new(0), generation: AtomicU64::new(0) }
+    }
+
+    /// Block until `parties` threads of the current generation arrived.
+    /// Returns `true` for exactly one caller (the "leader"), which the
+    /// engine uses for single-shot bookkeeping (metrics; membership is
+    /// arbitrated by the ESG itself).
+    pub fn wait(&self, parties: usize) -> bool {
+        debug_assert!(parties > 0);
+        let gen = self.generation.load(Ordering::Acquire);
+        let pos = self.arrived.fetch_add(1, Ordering::AcqRel) + 1;
+        if pos == parties {
+            // last arrival: reset and release the others
+            self.arrived.store(0, Ordering::Release);
+            self.generation.store(gen + 1, Ordering::Release);
+            true
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                spins += 1;
+                if spins < 64 {
+                    std::hint::spin_loop();
+                } else if spins < 256 {
+                    std::thread::yield_now();
+                } else {
+                    // 1-core boxes: sleeping lets the stragglers run
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
+            false
+        }
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_party_passes_immediately() {
+        let b = EpochBarrier::new();
+        assert!(b.wait(1));
+        assert_eq!(b.generation(), 1);
+    }
+
+    #[test]
+    fn releases_all_and_elects_one_leader() {
+        let b = Arc::new(EpochBarrier::new());
+        let n = 4;
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let b = b.clone();
+                std::thread::spawn(move || b.wait(n))
+            })
+            .collect();
+        let leaders = handles.into_iter().filter(|h| false || true).map(|h| h.join().unwrap()).filter(|&l| l).count();
+        assert_eq!(leaders, 1);
+        assert_eq!(b.generation(), 1);
+    }
+
+    #[test]
+    fn reusable_across_generations() {
+        let b = Arc::new(EpochBarrier::new());
+        for round in 0..5 {
+            let handles: Vec<_> = (0..3)
+                .map(|_| {
+                    let b = b.clone();
+                    std::thread::spawn(move || b.wait(3))
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(b.generation(), round + 1);
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Epoch state shared by all `O+` instances (Cond. 2, §5).
+//!
+//! An epoch is the event-time span between two reconfigurations during
+//! which the key→instance mapping f_μ is fixed. The *current* epoch
+//! config (e, 𝕆, f_μ) lives here; the *next* epoch parameters
+//! (e*, 𝕆*, f_μ*, γ) are instance-local (Alg. 4 L3-6) and are set by
+//! `prepareReconfig` from control tuples.
+
+use crate::tuple::{Epoch, InstanceId, Mapper, ReconfigSpec};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Immutable snapshot of one epoch's configuration.
+#[derive(Clone, Debug)]
+pub struct EpochConfig {
+    pub epoch: Epoch,
+    pub instances: Arc<Vec<InstanceId>>,
+    pub mapper: Mapper,
+}
+
+impl EpochConfig {
+    pub fn degree(&self) -> usize {
+        self.instances.len()
+    }
+}
+
+/// Shared holder of the current epoch config. Installation is idempotent:
+/// every instance leaving the barrier installs the same (e*, 𝕆*, f_μ*);
+/// only the first actually swaps.
+pub struct EpochState {
+    epoch_no: AtomicU64,
+    current: Mutex<Arc<EpochConfig>>,
+}
+
+impl EpochState {
+    pub fn new(initial: EpochConfig) -> Arc<Self> {
+        Arc::new(EpochState {
+            epoch_no: AtomicU64::new(initial.epoch),
+            current: Mutex::new(Arc::new(initial)),
+        })
+    }
+
+    /// Cheap staleness check for cached configs (one atomic load).
+    #[inline]
+    pub fn epoch_no(&self) -> Epoch {
+        self.epoch_no.load(Ordering::Acquire)
+    }
+
+    /// Current config snapshot.
+    pub fn current(&self) -> Arc<EpochConfig> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// Install a new epoch (monotone; duplicate installs are no-ops).
+    pub fn install(&self, spec: &ReconfigSpec) -> Arc<EpochConfig> {
+        let mut cur = self.current.lock().unwrap();
+        if spec.epoch > cur.epoch {
+            *cur = Arc::new(EpochConfig {
+                epoch: spec.epoch,
+                instances: spec.instances.clone(),
+                mapper: spec.mapper.clone(),
+            });
+            self.epoch_no.store(spec.epoch, Ordering::Release);
+        }
+        cur.clone()
+    }
+}
+
+/// Instance-local pending reconfiguration (e*, 𝕆*, f_μ*, γ — Alg. 4 L3-6).
+#[derive(Clone, Debug)]
+pub struct PendingReconfig {
+    pub spec: Arc<ReconfigSpec>,
+    /// γ: the event time beyond which the switch triggers (the control
+    /// tuple's timestamp, Alg. 6 L6).
+    pub gamma: crate::time::EventTime,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuple::Mapper;
+
+    fn spec(e: Epoch, n: usize) -> ReconfigSpec {
+        ReconfigSpec {
+            epoch: e,
+            instances: Arc::new((0..n).collect()),
+            mapper: Mapper::hash_mod(n),
+        }
+    }
+
+    #[test]
+    fn install_is_monotone_and_idempotent() {
+        let st = EpochState::new(EpochConfig {
+            epoch: 0,
+            instances: Arc::new(vec![0, 1]),
+            mapper: Mapper::hash_mod(2),
+        });
+        assert_eq!(st.epoch_no(), 0);
+        let c = st.install(&spec(1, 3));
+        assert_eq!(c.epoch, 1);
+        assert_eq!(c.degree(), 3);
+        // duplicate install: no change
+        let c2 = st.install(&spec(1, 3));
+        assert_eq!(c2.epoch, 1);
+        // stale install ignored
+        let c3 = st.install(&spec(0, 9));
+        assert_eq!(c3.epoch, 1);
+        assert_eq!(st.epoch_no(), 1);
+    }
+
+    #[test]
+    fn concurrent_installs_converge() {
+        let st = EpochState::new(EpochConfig {
+            epoch: 0,
+            instances: Arc::new(vec![0]),
+            mapper: Mapper::hash_mod(1),
+        });
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let st = st.clone();
+                std::thread::spawn(move || st.install(&spec(1, 5)).epoch)
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 1);
+        }
+        assert_eq!(st.current().degree(), 5);
+    }
+}

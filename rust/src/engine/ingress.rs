@@ -1,0 +1,192 @@
+//! STRETCH ingress: the `addSTRETCH` wrapper (Alg. 5) and the
+//! controller-facing `reconfigure` endpoint (§7).
+//!
+//! Regular tuples and control tuples can both reach `ESG_in`, but each ESG
+//! source must stay timestamp-sorted. Each upstream instance therefore
+//! owns a *control queue*; `addSTRETCH` drains it before every add,
+//! wrapping the pending (e*, 𝕆*, f_μ*) into a control tuple stamped with
+//! the last forwarded timestamp τ.
+
+use crate::scalegate::SourceHandle;
+use crate::time::EventTime;
+use crate::tuple::{InstanceId, Mapper, ReconfigSpec, Tuple};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One pending reconfiguration command plus its issue stamp (for the
+/// reconfiguration-time metric, §8.4).
+#[derive(Clone)]
+pub struct ReconfigCmd {
+    pub spec: Arc<ReconfigSpec>,
+    pub issued: Instant,
+}
+
+/// The per-upstream control queues + epoch counter; shared between the
+/// controller and the ingress wrappers.
+pub struct ControlPlane {
+    queues: Vec<Mutex<VecDeque<ReconfigCmd>>>,
+    next_epoch: AtomicU64,
+    /// Completed reconfigurations: (epoch, wall ms from issue to done).
+    pub completions: Mutex<Vec<(u64, f64)>>,
+}
+
+impl ControlPlane {
+    pub fn new(upstreams: usize, first_epoch: u64) -> Arc<Self> {
+        Arc::new(ControlPlane {
+            queues: (0..upstreams).map(|_| Mutex::new(VecDeque::new())).collect(),
+            next_epoch: AtomicU64::new(first_epoch + 1),
+            completions: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// `reconfigure(𝕆*, f_μ*)`: enqueue the next-epoch parameters on every
+    /// upstream's control queue. Returns the new epoch id.
+    pub fn reconfigure(&self, instances: Vec<InstanceId>, mapper: Mapper) -> u64 {
+        let epoch = self.next_epoch.fetch_add(1, Ordering::AcqRel);
+        let cmd = ReconfigCmd {
+            spec: Arc::new(ReconfigSpec { epoch, instances: Arc::new(instances), mapper }),
+            issued: Instant::now(),
+        };
+        for q in &self.queues {
+            q.lock().unwrap().push_back(cmd.clone());
+        }
+        epoch
+    }
+
+    /// Record a completed reconfiguration (called by the winning instance).
+    pub fn record_completion(&self, epoch: u64, issued: Instant) {
+        self.completions
+            .lock()
+            .unwrap()
+            .push((epoch, issued.elapsed().as_secs_f64() * 1e3));
+    }
+
+    /// Reconfiguration durations observed so far (epoch, ms).
+    pub fn completion_times(&self) -> Vec<(u64, f64)> {
+        self.completions.lock().unwrap().clone()
+    }
+
+    fn drain(&self, upstream: usize) -> Option<ReconfigCmd> {
+        let mut q = self.queues[upstream].lock().unwrap();
+        q.pop_front()
+    }
+
+    /// Whether upstream `i` has pending control commands (cheap peek).
+    fn has_pending(&self, upstream: usize) -> bool {
+        !self.queues[upstream].lock().unwrap().is_empty()
+    }
+}
+
+/// The `addSTRETCH` wrapper around one upstream instance's ESG source
+/// (Alg. 5): forwards control tuples (stamped with the last forwarded τ)
+/// ahead of data tuples.
+pub struct StretchIngress<P: Clone + Default + Send + Sync + 'static> {
+    src: SourceHandle<Tuple<P>>,
+    control: Arc<ControlPlane>,
+    upstream: usize,
+    last_ts: EventTime,
+    /// Issue stamps of forwarded control tuples, keyed by epoch — the
+    /// completing instance needs them; shared via the control plane.
+    issued: Arc<Mutex<std::collections::HashMap<u64, Instant>>>,
+}
+
+impl<P: Clone + Default + Send + Sync + 'static> StretchIngress<P> {
+    pub fn new(
+        src: SourceHandle<Tuple<P>>,
+        control: Arc<ControlPlane>,
+        upstream: usize,
+        issued: Arc<Mutex<std::collections::HashMap<u64, Instant>>>,
+    ) -> Self {
+        StretchIngress { src, control, upstream, last_ts: crate::time::TIME_MIN, issued }
+    }
+
+    /// Alg. 5: drain pending control commands as control tuples carrying
+    /// the last forwarded timestamp, then add the data tuple.
+    pub fn add(&mut self, t: Tuple<P>) {
+        if self.control.has_pending(self.upstream) {
+            while let Some(cmd) = self.control.drain(self.upstream) {
+                // γ = τ of the last forwarded tuple (TIME_MIN before any —
+                // then the first data tuple will trigger immediately).
+                let ts = self.last_ts;
+                self.issued.lock().unwrap().insert(cmd.spec.epoch, cmd.issued);
+                self.src.add(Tuple {
+                    ts,
+                    kind: crate::tuple::Kind::Control(cmd.spec.clone()),
+                    input: t.input,
+                    ingest_us: 0,
+                    payload: t.payload.clone(),
+                });
+            }
+        }
+        debug_assert!(t.ts >= self.last_ts, "upstream {} not ts-sorted", self.upstream);
+        self.last_ts = t.ts;
+        self.src.add(t);
+    }
+
+    /// Advance this upstream's clock without data (rate drop to zero).
+    pub fn heartbeat(&mut self, ts: EventTime) {
+        // control tuples must still flow even without data
+        if self.control.has_pending(self.upstream) {
+            while let Some(cmd) = self.control.drain(self.upstream) {
+                let cts = self.last_ts;
+                self.issued.lock().unwrap().insert(cmd.spec.epoch, cmd.issued);
+                // payload is never read for control tuples
+                let mut t: Tuple<P> = Tuple::control(cts, ReconfigSpec {
+                    epoch: cmd.spec.epoch,
+                    instances: cmd.spec.instances.clone(),
+                    mapper: cmd.spec.mapper.clone(),
+                });
+                t.kind = crate::tuple::Kind::Control(cmd.spec.clone());
+                self.src.add(t);
+            }
+        }
+        // Deliver an explicit heartbeat ENTRY (§2.3): instance watermarks
+        // advance from delivered tuples, so a clock-only advance would
+        // leave windows unexpired when the rate drops to zero.
+        if ts > self.last_ts {
+            self.last_ts = ts;
+            self.src.add(Tuple::heartbeat(ts));
+        }
+    }
+
+    pub fn last_ts(&self) -> EventTime {
+        self.last_ts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reconfigure_enqueues_on_all_upstreams() {
+        let cp = ControlPlane::new(3, 0);
+        let e = cp.reconfigure(vec![0, 1], Mapper::hash_mod(2));
+        assert_eq!(e, 1);
+        for u in 0..3 {
+            assert!(cp.has_pending(u));
+            let cmd = cp.drain(u).unwrap();
+            assert_eq!(cmd.spec.epoch, 1);
+            assert!(!cp.has_pending(u));
+        }
+    }
+
+    #[test]
+    fn epochs_increase() {
+        let cp = ControlPlane::new(1, 5);
+        assert_eq!(cp.reconfigure(vec![0], Mapper::hash_mod(1)), 6);
+        assert_eq!(cp.reconfigure(vec![0], Mapper::hash_mod(1)), 7);
+    }
+
+    #[test]
+    fn completions_recorded() {
+        let cp = ControlPlane::new(1, 0);
+        cp.record_completion(1, Instant::now());
+        let c = cp.completion_times();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].0, 1);
+        assert!(c[0].1 < 1000.0);
+    }
+}

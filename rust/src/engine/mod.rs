@@ -1,0 +1,20 @@
+//! Execution engines: the VSN (STRETCH) engine and the SN baseline.
+//!
+//! * [`vsn`] — `setup(O+, m, n)` with shared σ, shared gates, instance
+//!   pool, and epoch-based state-transfer-free elasticity (§5-§7);
+//! * [`sn`] — the shared-nothing comparison engine (§2.2): dedicated
+//!   queues + data duplication + private state;
+//! * [`barrier`], [`epoch`], [`ingress`] — the reconfiguration protocol
+//!   pieces (Alg. 4 L17-21, Alg. 5, Alg. 6).
+
+pub mod barrier;
+pub mod epoch;
+pub mod ingress;
+pub mod sn;
+pub mod vsn;
+
+pub use barrier::EpochBarrier;
+pub use epoch::{EpochConfig, EpochState, PendingReconfig};
+pub use ingress::{ControlPlane, StretchIngress};
+pub use sn::{SnEgress, SnEngine, SnIngress, SnOptions};
+pub use vsn::{EgressDriver, EngineClock, VsnEngine, VsnOptions};

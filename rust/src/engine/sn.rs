@@ -1,0 +1,392 @@
+//! The shared-nothing baseline engine (§2.2, Alg. 1 + Alg. 2).
+//!
+//! This is the paper's SN model — the "Flink-like" comparison system of
+//! §8: each ⟨upstream, instance⟩ pair exchanges tuples over a *dedicated*
+//! queue; `forwardSN` routes a tuple to every instance responsible for at
+//! least one of its keys (cloning it — the Theorem-1 data duplication);
+//! each instance merge-sorts its input queues (implicit watermarks,
+//! Def. 3) and runs `processSN` over its *private* state. The egress
+//! merge-sorts the instances' outputs, as the paper assumes for
+//! order-sensitive analysis (§8).
+
+use crate::engine::vsn::EngineClock;
+use crate::metrics::{Histogram, OperatorMetrics};
+use crate::operator::state::SharedState;
+use crate::operator::{Ctx, OperatorCore, OperatorDef, OperatorLogic};
+use crate::tuple::{Mapper, Tuple};
+use crate::util::spsc::{self, Consumer, Producer, PushError};
+use crate::util::Backoff;
+use crate::watermark::MergeSorter;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// SN engine options.
+#[derive(Clone, Debug)]
+pub struct SnOptions {
+    /// Π(O): number of operator instances.
+    pub parallelism: usize,
+    /// Number of upstream (ingress) instances running forwardSN.
+    pub upstreams: usize,
+    /// Capacity of each dedicated queue (backpressure bound).
+    pub queue_capacity: usize,
+}
+
+impl Default for SnOptions {
+    fn default() -> Self {
+        SnOptions { parallelism: 1, upstreams: 1, queue_capacity: 1 << 12 }
+    }
+}
+
+/// A running SN engine.
+pub struct SnEngine<L: OperatorLogic> {
+    pub metrics: Arc<OperatorMetrics>,
+    _marker: std::marker::PhantomData<fn(L)>,
+    /// Total enqueues performed by forwardSN — compare with tuples_in to
+    /// quantify the duplication overhead (Theorem 1).
+    pub forwarded: Arc<AtomicU64>,
+    pub clock: EngineClock,
+    pub mapper: Mapper,
+    running: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Upstream endpoint: runs `forwardSN` (Alg. 1).
+pub struct SnIngress<L: OperatorLogic> {
+    logic: Arc<L>,
+    mapper: Mapper,
+    queues: Vec<Producer<Tuple<L::In>>>,
+    keys_buf: Vec<crate::tuple::Key>,
+    targets: Vec<bool>,
+    forwarded: Arc<AtomicU64>,
+    running: Arc<AtomicBool>,
+}
+
+impl<L: OperatorLogic> SnIngress<L> {
+    /// forwardSN: route `t` to every instance responsible for one of its
+    /// keys (cloning per target); heartbeats broadcast to all instances.
+    pub fn forward(&mut self, t: Tuple<L::In>) {
+        if !t.kind.is_data() {
+            for q in self.queues.iter_mut() {
+                push_blocking(q, t.clone(), &self.running);
+            }
+            return;
+        }
+        self.keys_buf.clear();
+        self.logic.keys(&t, &mut self.keys_buf);
+        self.targets.iter_mut().for_each(|x| *x = false);
+        for &k in &self.keys_buf {
+            self.targets[self.mapper.map(k)] = true;
+        }
+        let mut n = 0;
+        for (j, &hit) in self.targets.iter().enumerate() {
+            if hit {
+                push_blocking(&mut self.queues[j], t.clone(), &self.running);
+                n += 1;
+            }
+        }
+        self.forwarded.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Advance all downstream channels when this upstream idles.
+    pub fn heartbeat(&mut self, ts: crate::time::EventTime)
+    where
+        L::In: Default,
+    {
+        self.forward(Tuple::heartbeat(ts));
+    }
+}
+
+fn push_blocking<T>(q: &mut Producer<T>, mut v: T, running: &AtomicBool) {
+    let mut b = Backoff::active();
+    loop {
+        match q.try_push(v) {
+            Ok(()) => return,
+            Err(PushError::Closed(_)) => return,
+            Err(PushError::Full(back)) => {
+                if !running.load(Ordering::Acquire) {
+                    return;
+                }
+                v = back;
+                b.snooze();
+            }
+        }
+    }
+}
+
+/// Egress endpoint: merge-sorts the instances' output channels and
+/// records throughput + latency (driven by the caller, like the paper's
+/// sink).
+pub struct SnEgress<Out: Clone + Send + Sync + 'static> {
+    channels: Vec<Consumer<Tuple<Out>>>,
+    sorter: MergeSorter<Out>,
+    pub clock: EngineClock,
+    pub count: u64,
+    pub latency_us: Arc<Histogram>,
+}
+
+impl<Out: Clone + Send + Sync + 'static> SnEgress<Out> {
+    /// Drain available output tuples; returns how many data tuples passed.
+    pub fn poll(&mut self) -> usize {
+        // pull everything available into the sorter
+        for (ch, c) in self.channels.iter_mut().enumerate() {
+            while let Some(t) = c.try_pop() {
+                self.sorter.offer(ch, t);
+            }
+        }
+        let mut n = 0;
+        while let Some(t) = self.sorter.pop_ready() {
+            if t.kind.is_data() {
+                self.count += 1;
+                n += 1;
+                if t.ingest_us > 0 {
+                    let now = self.clock.now_us();
+                    self.latency_us.record(now.saturating_sub(t.ingest_us));
+                }
+            }
+        }
+        n
+    }
+
+    pub fn drain_until(&mut self, expected: u64, timeout: std::time::Duration) -> u64 {
+        let t0 = std::time::Instant::now();
+        let mut backoff = Backoff::active();
+        while self.count < expected && t0.elapsed() < timeout {
+            if self.poll() == 0 {
+                backoff.snooze();
+            } else {
+                backoff.reset();
+            }
+        }
+        self.count
+    }
+
+    /// Like [`poll`](Self::poll) but hands every ready data tuple to `f`.
+    pub fn poll_tuples(&mut self, f: &mut dyn FnMut(&Tuple<Out>)) -> usize {
+        for (ch, c) in self.channels.iter_mut().enumerate() {
+            while let Some(t) = c.try_pop() {
+                self.sorter.offer(ch, t);
+            }
+        }
+        let mut n = 0;
+        while let Some(t) = self.sorter.pop_ready() {
+            if t.kind.is_data() {
+                self.count += 1;
+                n += 1;
+                if t.ingest_us > 0 {
+                    let now = self.clock.now_us();
+                    self.latency_us.record(now.saturating_sub(t.ingest_us));
+                }
+                f(&t);
+            }
+        }
+        n
+    }
+}
+
+impl<L: OperatorLogic> SnEngine<L>
+where
+    L::In: Default,
+    L::Out: Default,
+{
+    /// Build the SN topology: `upstreams × parallelism` dedicated input
+    /// queues, one instance thread per o_j with private state, and a
+    /// caller-driven egress.
+    pub fn setup(
+        def: OperatorDef<L>,
+        opts: SnOptions,
+    ) -> (Self, Vec<SnIngress<L>>, SnEgress<L::Out>) {
+        let pi = opts.parallelism;
+        let u = opts.upstreams;
+        assert!(pi >= 1 && u >= 1);
+        let mapper = Mapper::hash_mod(pi);
+        let metrics = OperatorMetrics::new(pi);
+        let forwarded = Arc::new(AtomicU64::new(0));
+        let running = Arc::new(AtomicBool::new(true));
+        let clock = EngineClock::new();
+
+        // queues[u][j]
+        let mut ingress_producers: Vec<Vec<Producer<Tuple<L::In>>>> =
+            (0..u).map(|_| Vec::with_capacity(pi)).collect();
+        let mut instance_consumers: Vec<Vec<Consumer<Tuple<L::In>>>> =
+            (0..pi).map(|_| Vec::with_capacity(u)).collect();
+        for uu in 0..u {
+            for jj in 0..pi {
+                let (p, c) = spsc::spsc(opts.queue_capacity);
+                ingress_producers[uu].push(p);
+                instance_consumers[jj].push(c);
+            }
+        }
+        // egress channels [j]
+        let mut egress_producers = Vec::with_capacity(pi);
+        let mut egress_consumers = Vec::with_capacity(pi);
+        for _ in 0..pi {
+            let (p, c) = spsc::spsc::<Tuple<L::Out>>(opts.queue_capacity);
+            egress_producers.push(p);
+            egress_consumers.push(c);
+        }
+
+        let mut threads = Vec::with_capacity(pi);
+        for (j, (consumers, mut egress)) in
+            instance_consumers.into_iter().zip(egress_producers).enumerate()
+        {
+            let def = def.clone();
+            let metrics = metrics.clone();
+            let mapper = mapper.clone();
+            let running = running.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{}-sn-{j}", def.name))
+                    .spawn(move || {
+                        run_instance::<L>(def, j, consumers, &mut egress, mapper, metrics, running)
+                    })
+                    .expect("spawn sn instance"),
+            );
+        }
+
+        let ingress = ingress_producers
+            .into_iter()
+            .map(|queues| SnIngress {
+                logic: def.logic.clone(),
+                mapper: mapper.clone(),
+                targets: vec![false; pi],
+                queues,
+                keys_buf: Vec::with_capacity(16),
+                forwarded: forwarded.clone(),
+                running: running.clone(),
+            })
+            .collect();
+
+        let egress = SnEgress {
+            sorter: MergeSorter::new(pi),
+            channels: egress_consumers,
+            clock: clock.clone(),
+            count: 0,
+            latency_us: Arc::new(Histogram::new()),
+        };
+
+        (
+            SnEngine { metrics, forwarded, clock, mapper, running, threads, _marker: std::marker::PhantomData },
+            ingress,
+            egress,
+        )
+    }
+
+    pub fn shutdown(&mut self) {
+        self.running.store(false, Ordering::Release);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl<L: OperatorLogic> Drop for SnEngine<L> {
+    fn drop(&mut self) {
+        self.running.store(false, Ordering::Release);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One SN instance thread: merge-sort dedicated queues, processSN, forward
+/// outputs (plus watermark heartbeats) to the egress channel.
+fn run_instance<L: OperatorLogic>(
+    def: OperatorDef<L>,
+    j: usize,
+    mut consumers: Vec<Consumer<Tuple<L::In>>>,
+    egress: &mut Producer<Tuple<L::Out>>,
+    mapper: Mapper,
+    metrics: Arc<OperatorMetrics>,
+    running: Arc<AtomicBool>,
+) where
+    L::Out: Default,
+{
+    let mut core: OperatorCore<L> = OperatorCore::new(def, j, SharedState::private(), metrics.clone());
+    let mut sorter: MergeSorter<L::In> = MergeSorter::new(consumers.len());
+    let mut backoff = Backoff::pooled();
+    let mut last_emitted = crate::time::TIME_MIN;
+    while running.load(Ordering::Acquire) {
+        // intake
+        let mut moved = false;
+        for (ch, c) in consumers.iter_mut().enumerate() {
+            while let Some(t) = c.try_pop() {
+                sorter.offer(ch, t);
+                moved = true;
+            }
+        }
+        // process ready tuples
+        let mut processed = 0u32;
+        let mut drained = true;
+        while let Some(t) = sorter.pop_ready() {
+            processed += 1;
+            let grew = core.observe(t.ts);
+            let mut emitted = 0u64;
+            {
+                let running = &running;
+                let last = &mut last_emitted;
+                let mut sink = |o: Tuple<L::Out>| {
+                    emitted += 1;
+                    *last = (*last).max(o.ts);
+                    push_blocking(egress, o, running);
+                };
+                let mut ctx = Ctx::new(&mut sink);
+                ctx.ingest_us = t.ingest_us;
+                if grew {
+                    core.advance(&mapper, &mut ctx);
+                }
+                if t.kind.is_data() {
+                    core.handle_input(&t, &mapper, &mut ctx);
+                    core.metrics.record_in(j);
+                }
+                if ctx.comparisons > 0 {
+                    core.metrics.record_comparisons(ctx.comparisons);
+                }
+            }
+            if emitted > 0 {
+                core.metrics.record_out(emitted);
+            }
+            if grew && emitted == 0 {
+                // watermark heartbeat so the egress sorter can progress;
+                // never below anything already emitted (channel sortedness)
+                let hb_ts = core.watermark().max(last_emitted);
+                push_blocking(egress, Tuple::heartbeat(hb_ts), &running);
+                last_emitted = hb_ts;
+            }
+            if processed > 256 {
+                drained = false;
+                break; // fairness: intake again
+            }
+        }
+        // Heartbeats advance channel clocks without being queued by the
+        // sorter; fold the combined watermark into the core so windows
+        // expire when rates drop to zero (explicit watermarks, §2.3).
+        // ONLY once every ready tuple has been processed — folding early
+        // would expire windows ahead of their contributors.
+        let wm = sorter.watermark();
+        if drained && wm > core.watermark() && core.observe(wm) {
+            let mut emitted = 0u64;
+            {
+                let running = &running;
+                let last = &mut last_emitted;
+                let mut sink = |o: Tuple<L::Out>| {
+                    emitted += 1;
+                    *last = (*last).max(o.ts);
+                    push_blocking(egress, o, running);
+                };
+                let mut ctx = Ctx::new(&mut sink);
+                core.advance(&mapper, &mut ctx);
+            }
+            if emitted > 0 {
+                core.metrics.record_out(emitted);
+            }
+            let hb_ts = core.watermark().max(last_emitted);
+            push_blocking(egress, Tuple::heartbeat(hb_ts), &running);
+            last_emitted = hb_ts;
+        }
+        if moved || processed > 0 {
+            backoff.reset();
+        } else {
+            backoff.snooze();
+        }
+    }
+}

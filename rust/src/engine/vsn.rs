@@ -1,0 +1,390 @@
+//! The VSN (STRETCH) engine: `setup(O+, m, n)` (§7, Fig. 5).
+//!
+//! Creates n `o+` instances sharing the state σ, connects m of them to
+//! `ESG_in`/`ESG_out` and parks the remaining n−m in the pool. Each
+//! instance runs `processVSN` (Alg. 4) on its own thread: poll `ESG_in`,
+//! handle control tuples (Alg. 6), trigger epoch switches at the barrier,
+//! perform gate membership changes (exactly one instance succeeds — the
+//! ESG arbitration), then run the shared [`OperatorCore`].
+
+use crate::engine::barrier::EpochBarrier;
+use crate::engine::epoch::{EpochConfig, EpochState, PendingReconfig};
+use crate::engine::ingress::{ControlPlane, StretchIngress};
+use crate::metrics::{Histogram, OperatorMetrics};
+use crate::operator::state::SharedState;
+use crate::operator::{Ctx, OperatorCore, OperatorDef, OperatorLogic};
+use crate::scalegate::{Esg, EsgConfig, ReaderHandle, SourceHandle};
+use crate::tuple::{InstanceId, Kind, Mapper, Tuple};
+use crate::util::Backoff;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Engine construction options.
+#[derive(Clone, Debug)]
+pub struct VsnOptions {
+    /// Initial parallelism degree m.
+    pub initial: usize,
+    /// Maximum parallelism degree n (pool size = n − m).
+    pub max: usize,
+    /// Number of upstream instances feeding ESG_in.
+    pub upstreams: usize,
+    /// Readers on ESG_out (egress or downstream instances).
+    pub egress_readers: usize,
+    /// Flow-control capacity of each gate (§8's bounded ESG).
+    pub gate_capacity: usize,
+    /// σ shard count.
+    pub shards: usize,
+}
+
+impl Default for VsnOptions {
+    fn default() -> Self {
+        VsnOptions {
+            initial: 1,
+            max: 4,
+            upstreams: 1,
+            egress_readers: 1,
+            gate_capacity: 1 << 15,
+            shards: crate::operator::state::DEFAULT_SHARDS,
+        }
+    }
+}
+
+/// Wall-clock origin shared by ingress stampers and egress latency
+/// accounting.
+#[derive(Clone)]
+pub struct EngineClock(Arc<Instant>);
+
+impl EngineClock {
+    pub fn new() -> Self {
+        EngineClock(Arc::new(Instant::now()))
+    }
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.0.elapsed().as_micros() as u64
+    }
+}
+
+impl Default for EngineClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The running engine; dropping it shuts the instance threads down.
+pub struct VsnEngine<L: OperatorLogic> {
+    pub control: Arc<ControlPlane>,
+    pub metrics: Arc<OperatorMetrics>,
+    pub clock: EngineClock,
+    pub esg_in: Esg<Tuple<L::In>>,
+    pub esg_out: Esg<Tuple<L::Out>>,
+    epoch: Arc<EpochState>,
+    state: Arc<SharedState<L::State>>,
+    running: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<L: OperatorLogic> VsnEngine<L>
+where
+    L::In: Default,
+{
+    /// `setup(O+, m, n)`: build gates, share σ, spawn n instance threads
+    /// (m active). Returns the engine plus the upstream ingress wrappers
+    /// and the ESG_out readers.
+    pub fn setup(
+        def: OperatorDef<L>,
+        opts: VsnOptions,
+    ) -> (Self, Vec<StretchIngress<L::In>>, Vec<ReaderHandle<Tuple<L::Out>>>) {
+        assert!(opts.initial >= 1 && opts.initial <= opts.max);
+        let (esg_in, in_sources, in_readers) = Esg::new(
+            EsgConfig {
+                max_sources: opts.upstreams,
+                max_readers: opts.max,
+                capacity: opts.gate_capacity,
+                source_queue: (opts.gate_capacity / opts.upstreams.max(1)).clamp(64, 1 << 14),
+            },
+            opts.upstreams,
+            opts.initial,
+        );
+        let (esg_out, out_sources, out_readers) = Esg::new(
+            EsgConfig {
+                max_sources: opts.max,
+                max_readers: opts.egress_readers,
+                capacity: opts.gate_capacity,
+                source_queue: (opts.gate_capacity / opts.max.max(1)).clamp(64, 1 << 14),
+            },
+            opts.initial,
+            opts.egress_readers,
+        );
+        let state: Arc<SharedState<L::State>> = SharedState::new(opts.shards);
+        let metrics = OperatorMetrics::new(opts.max);
+        let epoch = EpochState::new(EpochConfig {
+            epoch: 0,
+            instances: Arc::new((0..opts.initial).collect()),
+            mapper: Mapper::hash_mod(opts.initial),
+        });
+        let control = ControlPlane::new(opts.upstreams, 0);
+        let barrier = Arc::new(EpochBarrier::new());
+        let running = Arc::new(AtomicBool::new(true));
+        let issued: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
+        let clock = EngineClock::new();
+
+        let mut threads = Vec::with_capacity(opts.max);
+        for (id, (reader, out)) in in_readers.into_iter().zip(out_sources).enumerate() {
+            let mut worker = Worker {
+                core: OperatorCore::new(def.clone(), id, state.clone(), metrics.clone()),
+                reader,
+                out,
+                epoch: epoch.clone(),
+                barrier: barrier.clone(),
+                control: control.clone(),
+                issued: issued.clone(),
+                running: running.clone(),
+                cur: epoch.current(),
+                pending: None,
+            };
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{}-{id}", def.name))
+                    .spawn(move || worker.run())
+                    .expect("spawn instance thread"),
+            );
+        }
+
+        let ingress = in_sources
+            .into_iter()
+            .enumerate()
+            .map(|(u, src)| StretchIngress::new(src, control.clone(), u, issued.clone()))
+            .collect();
+
+        (
+            VsnEngine {
+                control,
+                metrics,
+                clock,
+                esg_in,
+                esg_out,
+                epoch,
+                state,
+                running,
+                threads,
+            },
+            ingress,
+            out_readers,
+        )
+    }
+
+    /// Current epoch configuration (e, 𝕆, f_μ).
+    pub fn epoch_config(&self) -> Arc<EpochConfig> {
+        self.epoch.current()
+    }
+
+    /// The shared state σ (diagnostics / tests).
+    pub fn state(&self) -> &Arc<SharedState<L::State>> {
+        &self.state
+    }
+
+    /// Stop all instance threads and join them.
+    pub fn shutdown(&mut self) {
+        self.running.store(false, Ordering::Release);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl<L: OperatorLogic> Drop for VsnEngine<L> {
+    fn drop(&mut self) {
+        self.running.store(false, Ordering::Release);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One `o+` instance thread.
+struct Worker<L: OperatorLogic> {
+    core: OperatorCore<L>,
+    reader: ReaderHandle<Tuple<L::In>>,
+    out: SourceHandle<Tuple<L::Out>>,
+    epoch: Arc<EpochState>,
+    barrier: Arc<EpochBarrier>,
+    control: Arc<ControlPlane>,
+    issued: Arc<Mutex<HashMap<u64, Instant>>>,
+    running: Arc<AtomicBool>,
+    cur: Arc<EpochConfig>,
+    pending: Option<PendingReconfig>,
+}
+
+impl<L: OperatorLogic> Worker<L> {
+    fn run(&mut self) {
+        let mut backoff = Backoff::pooled();
+        while self.running.load(Ordering::Acquire) {
+            // Pool instances (and instances activated while parked) track
+            // the installed epoch; active instances update it themselves
+            // at the barrier, so this check only fires for pool wake-ups.
+            if self.cur.epoch != self.epoch.epoch_no() {
+                self.cur = self.epoch.current();
+                self.core.rebuild_expiry_index(&self.cur.mapper);
+            }
+            match self.reader.get() {
+                Some(t) => {
+                    backoff.reset();
+                    self.step(t);
+                }
+                None => backoff.snooze(),
+            }
+        }
+    }
+
+    /// processVSN (Alg. 4) for one delivered tuple.
+    fn step(&mut self, t: Tuple<L::In>) {
+        match &t.kind {
+            Kind::Control(spec) => {
+                // prepareReconfig (Alg. 6): adopt only newer epochs
+                if spec.epoch > self.cur.epoch {
+                    self.pending = Some(PendingReconfig { spec: spec.clone(), gamma: t.ts });
+                }
+            }
+            Kind::Data | Kind::Heartbeat => {
+                let grew = self.core.observe(t.ts);
+                if grew {
+                    if let Some(p) = &self.pending {
+                        if self.core.watermark() > p.gamma {
+                            self.do_reconfig(&t);
+                        }
+                    }
+                }
+                // split borrows for the emission closure
+                let out = &mut self.out;
+                let running = &self.running;
+                let mut emitted = 0u64;
+                let mut sink = |o: Tuple<L::Out>| {
+                    emitted += 1;
+                    // blocking add with shutdown escape (flow control)
+                    let mut v = o;
+                    let mut b = Backoff::active();
+                    loop {
+                        match out.try_add(v) {
+                            Ok(()) => break,
+                            Err(crate::scalegate::AddError::Inactive(_)) => break, // decommissioned
+                            Err(crate::scalegate::AddError::Full(back)) => {
+                                if !running.load(Ordering::Acquire) {
+                                    break;
+                                }
+                                v = back;
+                                b.snooze();
+                            }
+                        }
+                    }
+                };
+                let mut ctx = Ctx::new(&mut sink);
+                ctx.ingest_us = t.ingest_us;
+                if grew {
+                    self.core.advance(&self.cur.mapper, &mut ctx);
+                }
+                if t.kind.is_data() {
+                    self.core.handle_input(&t, &self.cur.mapper, &mut ctx);
+                    self.core.metrics.record_in(self.core.id);
+                }
+                if ctx.comparisons > 0 {
+                    self.core.metrics.record_comparisons(ctx.comparisons);
+                }
+                if emitted > 0 {
+                    self.core.metrics.record_out(emitted);
+                }
+                if grew {
+                    // implicit watermark to downstream (Lemma 2): all
+                    // future emissions carry ts > W
+                    self.out.advance_clock(self.core.watermark());
+                }
+            }
+            Kind::Flush | Kind::Dummy => {}
+        }
+    }
+
+    /// The epoch switch (Alg. 4 L17-21).
+    fn do_reconfig(&mut self, t: &Tuple<L::In>) {
+        let p = self.pending.take().expect("reconfig without pending spec");
+        // barrier over the *current* epoch's instances 𝕆
+        let leader = self.barrier.wait(self.cur.instances.len());
+        // install the new epoch config (idempotent across instances)
+        let newcfg = self.epoch.install(&p.spec);
+        // membership deltas
+        let old = &self.cur.instances;
+        let joining: Vec<InstanceId> =
+            p.spec.instances.iter().copied().filter(|i| !old.contains(i)).collect();
+        let leaving: Vec<InstanceId> =
+            old.iter().copied().filter(|i| !p.spec.instances.contains(i)).collect();
+        let mut performed = false;
+        if !joining.is_empty() {
+            // provision: TB_out sources first, then TB_in readers
+            // (Alg. 4 L19); ESG arbitration lets exactly one succeed.
+            if self.out.gate().add_sources(&joining, t.ts) {
+                self.reader.gate().add_readers(&joining, self.core.id);
+                performed = true;
+            }
+        }
+        if !leaving.is_empty() {
+            // decommission: TB_in readers first, then TB_out sources
+            // (Alg. 4 L20).
+            if self.reader.gate().remove_readers(&leaving) {
+                self.out.gate().remove_sources(&leaving);
+                performed = true;
+            }
+        }
+        if performed || (leader && joining.is_empty() && leaving.is_empty()) {
+            if let Some(issued) = self.issued.lock().unwrap().remove(&p.spec.epoch) {
+                self.control.record_completion(p.spec.epoch, issued);
+            }
+        }
+        self.cur = newcfg;
+        self.core.rebuild_expiry_index(&self.cur.mapper);
+    }
+}
+
+/// Egress helper: drains an ESG_out reader, recording throughput +
+/// latency (now − ingest stamp) like the paper's sink (§8).
+pub struct EgressDriver<P: crate::scalegate::GateEntry> {
+    reader: crate::scalegate::ReaderHandle<P>,
+    pub clock: EngineClock,
+    pub count: u64,
+    pub latency_us: Arc<Histogram>,
+}
+
+impl<Out: Clone + Send + Sync + 'static> EgressDriver<Tuple<Out>> {
+    pub fn new(reader: crate::scalegate::ReaderHandle<Tuple<Out>>, clock: EngineClock) -> Self {
+        EgressDriver { reader, clock, count: 0, latency_us: Arc::new(Histogram::new()) }
+    }
+
+    /// Drain currently-ready tuples; returns how many were consumed.
+    pub fn poll(&mut self) -> usize {
+        let mut n = 0;
+        while let Some(t) = self.reader.get() {
+            if t.kind.is_data() {
+                self.count += 1;
+                n += 1;
+                if t.ingest_us > 0 {
+                    let now = self.clock.now_us();
+                    self.latency_us.record(now.saturating_sub(t.ingest_us));
+                }
+            }
+        }
+        n
+    }
+
+    /// Drain until `deadline` or until `expected` tuples were seen.
+    pub fn drain_until(&mut self, expected: u64, timeout: std::time::Duration) -> u64 {
+        let t0 = Instant::now();
+        let mut backoff = Backoff::active();
+        while self.count < expected && t0.elapsed() < timeout {
+            if self.poll() == 0 {
+                backoff.snooze();
+            } else {
+                backoff.reset();
+            }
+        }
+        self.count
+    }
+}

@@ -1,0 +1,283 @@
+//! Experiment harness: drive a live VSN ScaleJoin under a rate schedule
+//! with a controller in the loop, sampling the §8 metrics once per tick.
+//!
+//! Used by the Q4-Q6 benches and the `elastic_scalejoin`/`e2e_pipeline`
+//! examples. Wall-clock pacing is compressible (`time_scale`) so the
+//! paper's 20-minute runs replay in seconds; event time always advances
+//! at the schedule's nominal pace.
+
+use crate::elastic::{Controller, Decision, Observation};
+use crate::engine::{EgressDriver, VsnEngine, VsnOptions};
+use crate::metrics::MetricsSnapshot;
+use crate::time::EventTime;
+use crate::tuple::{Mapper, Tuple};
+use crate::workloads::rates::RateSchedule;
+use crate::workloads::scalejoin_bench::{q3_operator, SjGen, SjPayload};
+use std::time::{Duration, Instant};
+
+/// Harness configuration.
+pub struct JoinRunConfig {
+    /// ScaleJoin window size (event-time ms).
+    pub ws_ms: EventTime,
+    /// Round-robin key count (paper: 1000).
+    pub n_keys: u64,
+    /// Initial / maximum parallelism (m, n).
+    pub initial: usize,
+    pub max: usize,
+    /// The offered-rate schedule (event-time seconds).
+    pub schedule: RateSchedule,
+    /// Wall-time compression: 10.0 replays 10 event-seconds per wall-second.
+    pub time_scale: f64,
+    /// Optional elasticity controller.
+    pub controller: Option<Box<dyn Controller>>,
+    /// Controller tick period in event-time seconds.
+    pub controller_period_s: u32,
+    pub seed: u64,
+    pub gate_capacity: usize,
+    /// Scripted reconfigurations: (event second, new instance set) —
+    /// issued directly, bypassing the controller (Q4 protocol timing).
+    pub manual_reconfigs: Vec<(u32, Vec<usize>)>,
+}
+
+impl Default for JoinRunConfig {
+    fn default() -> Self {
+        JoinRunConfig {
+            ws_ms: 5_000,
+            n_keys: 64,
+            initial: 1,
+            max: 4,
+            schedule: RateSchedule::constant(10, 1_000.0),
+            time_scale: 1.0,
+            controller: None,
+            controller_period_s: 1,
+            seed: 7,
+            gate_capacity: 1 << 13,
+            manual_reconfigs: Vec::new(),
+        }
+    }
+}
+
+/// One per-event-second sample of the run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunSample {
+    pub t_s: u32,
+    pub offered_tps: f64,
+    pub in_tps: f64,
+    pub out_tps: f64,
+    pub cmp_per_s: f64,
+    pub latency_p50_us: u64,
+    pub latency_mean_us: f64,
+    pub threads: usize,
+    pub backlog: u64,
+    pub load_cv_pct: f64,
+}
+
+/// Result of a harness run.
+pub struct RunResult {
+    pub samples: Vec<RunSample>,
+    /// (epoch, wall ms) reconfiguration completion times.
+    pub reconfigs: Vec<(u64, f64)>,
+    /// Total data tuples drained at the egress.
+    pub egress_count: u64,
+}
+
+/// Run a live, threaded VSN ScaleJoin experiment.
+pub fn run_elastic_join(mut cfg: JoinRunConfig) -> RunResult {
+    let def = q3_operator(cfg.ws_ms, cfg.n_keys);
+    let (mut engine, mut ingress, mut readers) = VsnEngine::setup(
+        def,
+        VsnOptions {
+            initial: cfg.initial,
+            max: cfg.max,
+            upstreams: 1,
+            egress_readers: 1,
+            gate_capacity: cfg.gate_capacity,
+            ..Default::default()
+        },
+    );
+    let control = engine.control.clone();
+    let clock = engine.clock.clone();
+    let metrics = engine.metrics.clone();
+    let mut ing = ingress.remove(0);
+    let mut egress = EgressDriver::new(readers.remove(0), clock.clone());
+    let mut gen = SjGen::new(cfg.seed, 1.0);
+
+    let duration_s = cfg.schedule.duration_s();
+    let mut samples = Vec::with_capacity(duration_s as usize);
+    let mut last_snap = MetricsSnapshot::default();
+    let mut pending_event_tuples = 0.0f64;
+    let mut event_ms_total: f64 = 0.0;
+    let t0 = Instant::now();
+
+    // wall tick: 20 ms of *wall* time per loop iteration
+    let wall_tick = Duration::from_millis(20);
+    let mut next_tick = t0;
+    let mut next_sample_s: u32 = 1;
+    let mut next_controller_s: u32 = cfg.controller_period_s;
+    let mut manual = cfg.manual_reconfigs.clone();
+    manual.sort_by_key(|&(at, _)| at);
+    let mut next_manual = 0usize;
+    let mut prev_loads: Vec<u64> = vec![0; cfg.max];
+
+    loop {
+        // how far event time should have progressed
+        let wall_s = t0.elapsed().as_secs_f64();
+        let event_s = wall_s * cfg.time_scale;
+        // run slightly past the end so the final per-second sample lands
+        if event_s >= duration_s as f64 + 0.1 {
+            break;
+        }
+        let cur_rate = cfg.schedule.rate_at(event_s as u32);
+        if event_s < duration_s as f64 {
+            gen.set_rate(cur_rate);
+            // feed the tuples that belong to this tick
+            let tick_event_s = wall_tick.as_secs_f64() * cfg.time_scale;
+            pending_event_tuples += cur_rate * tick_event_s;
+            let n = pending_event_tuples.floor() as usize;
+            pending_event_tuples -= n as f64;
+            event_ms_total += tick_event_s * 1e3;
+            for _ in 0..n {
+                let mut t: Tuple<SjPayload> = gen.next();
+                t.ingest_us = clock.now_us();
+                ing.add(t);
+            }
+        }
+        egress.poll();
+
+        // per-event-second sampling
+        while (next_sample_s as f64) <= event_s && next_sample_s <= duration_s {
+            let snap = metrics.snapshot();
+            let dt = 1.0 / cfg.time_scale; // wall seconds per event second
+            let rates = snap.rates_since(&last_snap, dt);
+            let epoch_cfg = engine.epoch_config();
+            let active: Vec<usize> = epoch_cfg.instances.as_ref().clone();
+            // per-interval load CV (Fig. 9 right): deltas, active set only
+            let cv = {
+                let deltas: Vec<f64> = active
+                    .iter()
+                    .map(|&i| {
+                        let cur = metrics.instance_load(i);
+                        let d = cur - prev_loads[i];
+                        d as f64
+                    })
+                    .collect();
+                for i in 0..cfg.max {
+                    prev_loads[i] = metrics.instance_load(i);
+                }
+                let mean = deltas.iter().sum::<f64>() / deltas.len().max(1) as f64;
+                if deltas.len() < 2 || mean <= 0.0 {
+                    0.0
+                } else {
+                    let var = deltas.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>()
+                        / deltas.len() as f64;
+                    100.0 * var.sqrt() / mean
+                }
+            };
+            samples.push(RunSample {
+                t_s: next_sample_s,
+                offered_tps: cfg.schedule.rate_at(next_sample_s - 1),
+                // rates are per wall second; report per *event* second
+                in_tps: rates.in_tps / cfg.time_scale / active.len().max(1) as f64,
+                out_tps: rates.out_tps / cfg.time_scale,
+                cmp_per_s: rates.cmp_per_s / cfg.time_scale,
+                latency_p50_us: egress.latency_us.p50(),
+                latency_mean_us: egress.latency_us.mean(),
+                threads: active.len(),
+                backlog: engine.esg_in.backlog(),
+                load_cv_pct: cv,
+            });
+            last_snap = snap;
+            egress.latency_us.reset();
+            next_sample_s += 1;
+        }
+
+        // scripted reconfigurations (bypass the controller)
+        while next_manual < manual.len() && (manual[next_manual].0 as f64) <= event_s {
+            let set = manual[next_manual].1.clone();
+            control.reconfigure(set.clone(), Mapper::over(set));
+            next_manual += 1;
+        }
+        // controller tick
+        if let Some(ctl) = cfg.controller.as_mut() {
+            if (next_controller_s as f64) <= event_s {
+                next_controller_s += cfg.controller_period_s;
+                let epoch_cfg = engine.epoch_config();
+                let active: Vec<usize> = epoch_cfg.instances.as_ref().clone();
+                let obs = Observation {
+                    in_rate: cur_rate,
+                    cmp_per_s: samples.last().map(|s| s.cmp_per_s).unwrap_or(0.0),
+                    backlog: engine.esg_in.backlog(),
+                    dt: cfg.controller_period_s as f64,
+                    active,
+                    max: cfg.max,
+                };
+                if let Decision::Reconfigure(set) = ctl.tick(&obs) {
+                    let mapper = Mapper::over(set.clone());
+                    control.reconfigure(set, mapper);
+                }
+            }
+        }
+
+        next_tick += wall_tick;
+        let now = Instant::now();
+        if next_tick > now {
+            std::thread::sleep(next_tick - now);
+        } else {
+            next_tick = now; // fell behind: don't try to catch up the wall
+        }
+    }
+
+    // flush: end-of-stream heartbeat, drain remaining outputs briefly
+    ing.heartbeat(event_ms_total as EventTime + cfg.ws_ms + 10_000);
+    let drain_until = Instant::now() + Duration::from_millis(500);
+    while Instant::now() < drain_until {
+        if egress.poll() == 0 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    let reconfigs = control.completion_times();
+    let egress_count = egress.count;
+    engine.shutdown();
+    RunResult { samples, reconfigs, egress_count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::{JoinCostModel, ReactiveController, Thresholds};
+
+    #[test]
+    fn harness_steady_run_produces_samples() {
+        let cfg = JoinRunConfig {
+            ws_ms: 1000,
+            schedule: RateSchedule::constant(4, 500.0),
+            time_scale: 4.0, // 4 event-seconds in ~1 wall-second
+            initial: 2,
+            max: 4,
+            ..Default::default()
+        };
+        let r = run_elastic_join(cfg);
+        assert_eq!(r.samples.len(), 4);
+        assert!(r.egress_count > 0 || r.samples.iter().any(|s| s.cmp_per_s > 0.0));
+        assert!(r.samples.iter().all(|s| s.threads == 2));
+    }
+
+    #[test]
+    fn harness_controller_provisions_under_ramp() {
+        // calibrate a model, then drive well past 1-thread capacity
+        let model = JoinCostModel::new(5e5, 1.0); // deliberately small capacity
+        let ctl = ReactiveController::new(model, Thresholds::default()).with_cooldown(1);
+        let cfg = JoinRunConfig {
+            ws_ms: 1000,
+            schedule: RateSchedule::step(6, 2, 200.0, 1500.0),
+            time_scale: 3.0,
+            initial: 1,
+            max: 4,
+            controller: Some(Box::new(ctl)),
+            ..Default::default()
+        };
+        let r = run_elastic_join(cfg);
+        assert!(!r.reconfigs.is_empty(), "controller should have reconfigured");
+        assert!(r.samples.last().unwrap().threads > 1);
+    }
+}

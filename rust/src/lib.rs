@@ -1,0 +1,45 @@
+//! # STRETCH — Virtual Shared-Nothing parallelism for stream processing
+//!
+//! A from-scratch reproduction of *"STRETCH: Virtual Shared-Nothing
+//! Parallelism for Scalable and Elastic Stream Processing"* (Gulisano et
+//! al., TPDS 2021) as a Rust streaming runtime with a JAX/Pallas-compiled
+//! compute offload path (AOT via PJRT; Python never runs on the request
+//! path).
+//!
+//! ## Layers
+//! * [`scalegate`] — the ScaleGate / Elastic ScaleGate shared tuple buffer
+//!   (the paper's TB object, Table 2).
+//! * [`operator`] — the generalized stateful operator `O+` (§4) and the
+//!   operator library (Map, Aggregate, Join, ScaleJoin, …).
+//! * [`engine`] — the SN baseline engine and the VSN (STRETCH) engine with
+//!   epoch-based, state-transfer-free elasticity (§5, §7).
+//! * [`elastic`] — reconfiguration controllers (reactive + proactive).
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled kernels.
+//! * [`workloads`] — generators for every evaluation workload (§8).
+//! * [`sim`] — calibrated multicore discrete-event simulator (testbed
+//!   substitution; see DESIGN.md §5).
+//!
+//! ## Quickstart
+//! See `examples/quickstart.rs`: build an `O+`, wrap it in a VSN engine,
+//! feed tuples, read results — then trigger a live reconfiguration.
+
+pub mod cli;
+pub mod config;
+pub mod elastic;
+pub mod engine;
+pub mod harness;
+pub mod metrics;
+pub mod operator;
+pub mod runtime;
+pub mod scalegate;
+pub mod schema;
+pub mod sim;
+pub mod testkit;
+pub mod time;
+pub mod tuple;
+pub mod util;
+pub mod watermark;
+pub mod workloads;
+
+pub use time::{EventTime, WindowSpec};
+pub use tuple::{Key, Kind, Mapper, ReconfigSpec, Tuple};

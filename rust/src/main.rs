@@ -1,0 +1,161 @@
+//! `stretch` — the launcher: run config-driven elastic join experiments,
+//! calibrate the cost model, or inspect the runtime.
+//!
+//! ```sh
+//! stretch calibrate
+//! stretch run configs/scalejoin.toml
+//! stretch artifacts          # check the AOT kernel artifacts
+//! ```
+
+use stretch::cli::Cli;
+use stretch::config::Config;
+use stretch::elastic::{JoinCostModel, ProactiveController, ReactiveController, Thresholds};
+use stretch::harness::{run_elastic_join, JoinRunConfig};
+use stretch::sim::calibrate;
+use stretch::workloads::RateSchedule;
+
+fn cmd_calibrate() {
+    let c = calibrate();
+    println!("calibration (this machine, this build):");
+    println!("  band comparisons : {:.1} M/s per thread", c.cmp_per_sec / 1e6);
+    println!("  ESG round trip   : {:.3} µs/tuple", c.gate_tuple_s * 1e6);
+    println!("  SPSC hop         : {:.3} µs/tuple", c.queue_tuple_s * 1e6);
+    println!("  merge-sort ingest: {:.3} µs/tuple", c.sort_tuple_s * 1e6);
+}
+
+fn cmd_artifacts() {
+    if !stretch::runtime::artifacts_available() {
+        eprintln!("artifacts/ missing — run `make artifacts`");
+        std::process::exit(1);
+    }
+    let dir = stretch::runtime::artifacts_dir();
+    println!("artifacts at {}:", dir.display());
+    let manifest = std::fs::read_to_string(dir.join("manifest.txt")).unwrap_or_default();
+    print!("{manifest}");
+    match stretch::runtime::JoinKernel::load() {
+        Ok(k) => println!("PJRT OK: platform = {}", k.platform()),
+        Err(e) => {
+            eprintln!("PJRT load failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_run(path: &str) {
+    let cfg = Config::load(path).unwrap_or_else(|e| {
+        eprintln!("config error: {e}");
+        std::process::exit(1);
+    });
+    let ws_ms = cfg.int_or("operator.ws_ms", 2_000);
+    let n_keys = cfg.int_or("operator.keys", 64) as u64;
+    let initial = cfg.int_or("engine.initial", 1) as usize;
+    let max = cfg.int_or("engine.max", 4) as usize;
+    let time_scale = cfg.float_or("run.time_scale", 2.0);
+    let seed = cfg.int_or("run.seed", 7) as u64;
+
+    // schedule: either constant or the Q5 random-phase stress profile
+    let duration = cfg.int_or("run.duration_s", 30) as u32;
+    let schedule = match cfg.str_or("run.schedule", "constant") {
+        "q5" => RateSchedule::q5(
+            seed,
+            duration,
+            cfg.float_or("run.min_rate", 500.0),
+            cfg.float_or("run.max_rate", 4000.0),
+            cfg.int_or("run.min_phase_s", 8) as u32,
+            cfg.int_or("run.max_phase_s", 20) as u32,
+        ),
+        "step" => RateSchedule::step(
+            duration,
+            cfg.int_or("run.step_at_s", duration as i64 / 3) as u32,
+            cfg.float_or("run.rate", 2000.0),
+            cfg.float_or("run.step_rate", 4000.0),
+        ),
+        _ => RateSchedule::constant(duration, cfg.float_or("run.rate", 2000.0)),
+    };
+
+    // controller: none / reactive / proactive, calibrated on this box
+    let cal = calibrate();
+    let model = JoinCostModel::new(cal.cmp_per_sec / max as f64, ws_ms as f64 / 1e3);
+    let controller: Option<Box<dyn stretch::elastic::Controller>> =
+        match cfg.str_or("elastic.controller", "reactive") {
+            "none" => None,
+            "proactive" => Some(Box::new(ProactiveController::new(model))),
+            _ => Some(Box::new(
+                ReactiveController::new(
+                    model,
+                    Thresholds {
+                        upper: cfg.float_or("elastic.upper", 0.90),
+                        target: cfg.float_or("elastic.target", 0.70),
+                        lower: cfg.float_or("elastic.lower", 0.45),
+                    },
+                )
+                .with_cooldown(2),
+            )),
+        };
+
+    println!(
+        "running `{}`: WS={ws_ms}ms keys={n_keys} Π={initial}..{max} {}s ({}x compressed)",
+        cfg.str_or("name", path),
+        duration,
+        time_scale
+    );
+    let r = run_elastic_join(JoinRunConfig {
+        ws_ms,
+        n_keys,
+        initial,
+        max,
+        schedule,
+        time_scale,
+        controller,
+        controller_period_s: cfg.int_or("elastic.period_s", 2) as u32,
+        seed,
+        gate_capacity: cfg.int_or("engine.gate_capacity", 8192) as usize,
+        manual_reconfigs: Vec::new(),
+    });
+    println!("\n  t  offered   served   cmp/s      lat(ms)  Π backlog");
+    for s in &r.samples {
+        println!(
+            "{:>4} {:>8.0} {:>8.0} {:>10.2e} {:>8.1} {:>2} {:>7}",
+            s.t_s,
+            s.offered_tps,
+            s.in_tps,
+            s.cmp_per_s,
+            s.latency_mean_us / 1e3,
+            s.threads,
+            s.backlog
+        );
+    }
+    println!("\n{} results at the egress; reconfigurations:", r.egress_count);
+    for (e, ms) in &r.reconfigs {
+        println!("  epoch {e}: {ms:.2} ms");
+    }
+}
+
+fn main() {
+    let cli = Cli::new(
+        "stretch",
+        "STRETCH: virtual shared-nothing stream processing (paper reproduction)",
+    );
+    let args = cli.parse().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    match args.positional().first().map(|s| s.as_str()) {
+        Some("calibrate") => cmd_calibrate(),
+        Some("artifacts") => cmd_artifacts(),
+        Some("run") => match args.positional().get(1) {
+            Some(path) => cmd_run(path),
+            None => {
+                eprintln!("usage: stretch run <config.toml>");
+                std::process::exit(2);
+            }
+        },
+        _ => {
+            println!("usage: stretch <command>\n");
+            println!("  calibrate          measure this machine's cost model");
+            println!("  artifacts          verify the AOT kernel artifacts + PJRT");
+            println!("  run <config.toml>  run a config-driven elastic join experiment");
+            println!("\nexperiment configs: see configs/*.toml; benches: cargo bench");
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite).
+//!
+//! Records microsecond-scale values with ~4% relative precision using
+//! log2 major buckets × 16 linear minor buckets. Lock-free recording via
+//! relaxed atomics; merging/reading happens off the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const MINOR_BITS: u32 = 4;
+const MINOR: usize = 1 << MINOR_BITS; // 16
+const MAJORS: usize = 40; // covers up to ~2^40 us
+const BUCKETS: usize = MAJORS * MINOR;
+
+/// Concurrent histogram of non-negative u64 samples.
+pub struct Histogram {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < MINOR as u64 {
+        return v as usize;
+    }
+    let major = 63 - v.leading_zeros(); // floor(log2 v), >= MINOR_BITS
+    let minor = ((v >> (major - MINOR_BITS)) & (MINOR as u64 - 1)) as usize;
+    let idx = ((major - MINOR_BITS + 1) as usize) * MINOR + minor;
+    idx.min(BUCKETS - 1)
+}
+
+/// Representative (lower-bound) value of a bucket.
+fn bucket_value(idx: usize) -> u64 {
+    if idx < MINOR {
+        return idx as u64;
+    }
+    let major = (idx / MINOR - 1) as u32 + MINOR_BITS;
+    let minor = (idx % MINOR) as u64;
+    (1u64 << major) | (minor << (major - MINOR_BITS))
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // Avoid large stack array: build on the heap.
+        let v: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        let buckets: Box<[AtomicU64; BUCKETS]> =
+            v.into_boxed_slice().try_into().map_err(|_| ()).unwrap();
+        Histogram {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (e.g. latency in microseconds).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile in [0, 1].
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for i in 0..BUCKETS {
+            acc += self.buckets[i].load(Ordering::Relaxed);
+            if acc >= target {
+                return bucket_value(i);
+            }
+        }
+        self.max()
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Reset all counters (between experiment phases).
+    pub fn reset(&self) {
+        for b in self.buckets.iter() {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+
+    /// Snapshot (count, mean, p50, p99, max).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count(),
+            mean: self.mean(),
+            p50: self.p50(),
+            p99: self.p99(),
+            max: self.max(),
+        }
+    }
+}
+
+/// A point-in-time summary of a histogram.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_exact() {
+        let h = Histogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.max(), 15);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_within_precision() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.p50() as f64;
+        assert!((p50 - 5000.0).abs() / 5000.0 < 0.07, "p50={p50}");
+        let p99 = h.p99() as f64;
+        assert!((p99 - 9900.0).abs() / 9900.0 < 0.07, "p99={p99}");
+    }
+
+    #[test]
+    fn bucket_roundtrip_monotone() {
+        let mut values: Vec<u64> = Vec::new();
+        for exp in 0..32 {
+            for off in [0u64, 1, 3] {
+                values.push((1u64 << exp) + off);
+            }
+        }
+        values.sort_unstable();
+        let mut last = 0;
+        for v in values {
+            let b = bucket_of(v);
+            assert!(b >= last, "non-monotone at {v}");
+            last = b;
+            let rep = bucket_value(b);
+            assert!(rep <= v, "rep {rep} > v {v}");
+            // relative error bound ~ 1/16
+            if v >= 16 {
+                assert!((v - rep) as f64 / v as f64 <= 1.0 / 8.0, "v={v} rep={rep}");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_clears() {
+        let h = Histogram::new();
+        h.record(5);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.p99(), 0);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    h.record(t * 10_000 + i);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+}

@@ -1,0 +1,202 @@
+//! Metrics subsystem (§8's measurement methodology).
+//!
+//! Tracks the paper's four metrics: input rate (t/s), throughput
+//! (t/s or comparisons/s for joins), per-output latency (difference
+//! between an output tuple's emission and the latest contributing input,
+//! §8), and reconfiguration time. Plus per-thread load for the coefficient
+//! of variation reported in Fig. 9.
+
+pub mod histogram;
+pub mod reporter;
+
+pub use histogram::{HistSnapshot, Histogram};
+pub use reporter::CsvWriter;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared counters for one operator (all instances record into it).
+pub struct OperatorMetrics {
+    /// Data tuples consumed from the input.
+    pub tuples_in: AtomicU64,
+    /// Output tuples produced.
+    pub tuples_out: AtomicU64,
+    /// Join comparisons executed (the paper's join throughput metric).
+    pub comparisons: AtomicU64,
+    /// Latency histogram, microseconds.
+    pub latency_us: Histogram,
+    /// Per-instance tuples processed (for load CV, Fig. 9 right).
+    per_instance: Vec<AtomicU64>,
+}
+
+impl OperatorMetrics {
+    pub fn new(max_instances: usize) -> Arc<Self> {
+        Arc::new(OperatorMetrics {
+            tuples_in: AtomicU64::new(0),
+            tuples_out: AtomicU64::new(0),
+            comparisons: AtomicU64::new(0),
+            latency_us: Histogram::new(),
+            per_instance: (0..max_instances).map(|_| AtomicU64::new(0)).collect(),
+        })
+    }
+
+    #[inline]
+    pub fn record_in(&self, instance: usize) {
+        self.tuples_in.fetch_add(1, Ordering::Relaxed);
+        if instance < self.per_instance.len() {
+            self.per_instance[instance].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn record_out(&self, n: u64) {
+        self.tuples_out.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_comparisons(&self, n: u64) {
+        self.comparisons.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_latency_us(&self, us: u64) {
+        self.latency_us.record(us);
+    }
+
+    /// Coefficient of variation (%) of per-instance processed counts,
+    /// restricted to the currently active instance set.
+    pub fn load_cv_percent(&self, active: &[usize]) -> f64 {
+        let loads: Vec<f64> = active
+            .iter()
+            .filter_map(|&i| self.per_instance.get(i))
+            .map(|c| c.load(Ordering::Relaxed) as f64)
+            .collect();
+        if loads.len() < 2 {
+            return 0.0;
+        }
+        let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = loads.iter().map(|l| (l - mean) * (l - mean)).sum::<f64>() / loads.len() as f64;
+        100.0 * var.sqrt() / mean
+    }
+
+    pub fn instance_load(&self, i: usize) -> u64 {
+        self.per_instance[i].load(Ordering::Relaxed)
+    }
+
+    pub fn reset_instance_loads(&self) {
+        for c in &self.per_instance {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            tuples_in: self.tuples_in.load(Ordering::Relaxed),
+            tuples_out: self.tuples_out.load(Ordering::Relaxed),
+            comparisons: self.comparisons.load(Ordering::Relaxed),
+            latency: self.latency_us.snapshot(),
+        }
+    }
+}
+
+/// Point-in-time operator metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub tuples_in: u64,
+    pub tuples_out: u64,
+    pub comparisons: u64,
+    pub latency: HistSnapshot,
+}
+
+impl MetricsSnapshot {
+    /// Rates between two snapshots over `dt` seconds.
+    pub fn rates_since(&self, earlier: &MetricsSnapshot, dt_s: f64) -> Rates {
+        let d = dt_s.max(1e-9);
+        Rates {
+            in_tps: (self.tuples_in - earlier.tuples_in) as f64 / d,
+            out_tps: (self.tuples_out - earlier.tuples_out) as f64 / d,
+            cmp_per_s: (self.comparisons - earlier.comparisons) as f64 / d,
+        }
+    }
+}
+
+/// Throughput rates derived from snapshots.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Rates {
+    pub in_tps: f64,
+    pub out_tps: f64,
+    pub cmp_per_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = OperatorMetrics::new(4);
+        m.record_in(0);
+        m.record_in(1);
+        m.record_out(3);
+        m.record_comparisons(100);
+        let s = m.snapshot();
+        assert_eq!(s.tuples_in, 2);
+        assert_eq!(s.tuples_out, 3);
+        assert_eq!(s.comparisons, 100);
+    }
+
+    #[test]
+    fn cv_zero_when_balanced() {
+        let m = OperatorMetrics::new(4);
+        for i in 0..4 {
+            for _ in 0..100 {
+                m.record_in(i);
+            }
+        }
+        assert!(m.load_cv_percent(&[0, 1, 2, 3]) < 1e-9);
+    }
+
+    #[test]
+    fn cv_detects_imbalance() {
+        let m = OperatorMetrics::new(2);
+        for _ in 0..100 {
+            m.record_in(0);
+        }
+        for _ in 0..50 {
+            m.record_in(1);
+        }
+        let cv = m.load_cv_percent(&[0, 1]);
+        assert!(cv > 30.0, "cv={cv}");
+    }
+
+    #[test]
+    fn cv_restricted_to_active() {
+        let m = OperatorMetrics::new(3);
+        for _ in 0..100 {
+            m.record_in(0);
+        }
+        for _ in 0..100 {
+            m.record_in(1);
+        }
+        // instance 2 idle but not active: CV over {0,1} is 0
+        assert!(m.load_cv_percent(&[0, 1]) < 1e-9);
+        assert!(m.load_cv_percent(&[0, 1, 2]) > 10.0);
+    }
+
+    #[test]
+    fn rates_between_snapshots() {
+        let m = OperatorMetrics::new(1);
+        let s0 = m.snapshot();
+        for _ in 0..500 {
+            m.record_in(0);
+        }
+        m.record_comparisons(2000);
+        let s1 = m.snapshot();
+        let r = s1.rates_since(&s0, 2.0);
+        assert!((r.in_tps - 250.0).abs() < 1e-9);
+        assert!((r.cmp_per_s - 1000.0).abs() < 1e-9);
+    }
+}

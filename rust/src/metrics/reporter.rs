@@ -1,0 +1,148 @@
+//! CSV/console reporting for benchmark harnesses.
+//!
+//! Every figure-regenerating bench writes a CSV under `results/` with the
+//! same series the paper plots, so the curves can be re-plotted directly.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// Simple CSV writer with a fixed header.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    path: PathBuf,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create `path` (parent dirs included) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(&path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, path, cols: header.len() })
+    }
+
+    /// Write one row of display-formatted values.
+    pub fn row(&mut self, values: &[&dyn std::fmt::Display]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "row arity != header arity");
+        let mut first = true;
+        for v in values {
+            if !first {
+                write!(self.w, ",")?;
+            }
+            write!(self.w, "{v}")?;
+            first = false;
+        }
+        writeln!(self.w)?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Macro to write a CSV row from heterogeneous values.
+#[macro_export]
+macro_rules! csv_row {
+    ($w:expr, $($v:expr),* $(,)?) => {
+        $w.row(&[$(&$v as &dyn std::fmt::Display),*]).expect("csv write")
+    };
+}
+
+/// Console table printer for bench summaries (paper-style rows).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, values: &[String]) {
+        assert_eq!(values.len(), self.headers.len());
+        self.rows.push(values.to_vec());
+    }
+
+    /// Render with padded columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("stretch_csv_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&[&1, &"x"]).unwrap();
+            w.row(&[&2.5, &"y"]).unwrap();
+            w.flush().unwrap();
+        }
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s, "a,b\n1,x\n2.5,y\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_arity_checked() {
+        let dir = std::env::temp_dir().join(format!("stretch_csv2_{}", std::process::id()));
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&[&1]);
+    }
+
+    #[test]
+    fn table_renders_padded() {
+        let mut t = Table::new(&["name", "val"]);
+        t.row(&["x".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("| name   | val |"));
+        assert!(r.contains("| longer | 22  |"));
+    }
+}

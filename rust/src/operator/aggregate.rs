@@ -1,0 +1,197 @@
+//! Aggregate operators: A (single key-by, §2.1) and A+ (multi key-by,
+//! Def. 5), instantiated from `O+` per Theorem 2 (I = 1, f_A as f_O,
+//! f_R as f_S).
+//!
+//! Two forms:
+//! * [`FnAggLogic`] — closure-assembled `O+` for ad-hoc aggregates (the
+//!   user-facing builder, mirrors how the paper's operators are "defined
+//!   by specializing functions");
+//! * [`CountPerKey`] — the wordcount/paircount counting aggregate
+//!   (Operators 4/5 of Appendix D), implemented directly for speed.
+
+use crate::operator::state::WindowSet;
+use crate::operator::{Ctx, OperatorDef, OperatorLogic, WindowType};
+use crate::time::{EventTime, WindowSpec};
+use crate::tuple::{Key, Payload, Tuple};
+
+/// Closure-assembled aggregate logic (an `O+` with I = 1).
+pub struct FnAggLogic<In, Out, S> {
+    keys: Box<dyn Fn(&Tuple<In>, &mut Vec<Key>) + Send + Sync>,
+    update: Box<dyn Fn(&mut WindowSet<S>, &Tuple<In>, &mut Ctx<'_, Out>) + Send + Sync>,
+    output: Box<dyn Fn(&WindowSet<S>, &mut Ctx<'_, Out>) + Send + Sync>,
+    slide: Option<Box<dyn Fn(&mut WindowSet<S>, EventTime) -> bool + Send + Sync>>,
+}
+
+impl<In: Payload, Out: Payload, S: Send + Sync + Default + 'static> FnAggLogic<In, Out, S> {
+    pub fn new(
+        keys: impl Fn(&Tuple<In>, &mut Vec<Key>) + Send + Sync + 'static,
+        update: impl Fn(&mut WindowSet<S>, &Tuple<In>, &mut Ctx<'_, Out>) + Send + Sync + 'static,
+        output: impl Fn(&WindowSet<S>, &mut Ctx<'_, Out>) + Send + Sync + 'static,
+    ) -> Self {
+        FnAggLogic {
+            keys: Box::new(keys),
+            update: Box::new(update),
+            output: Box::new(output),
+            slide: None,
+        }
+    }
+
+    /// Provide f_S (for WT = Single).
+    pub fn with_slide(
+        mut self,
+        slide: impl Fn(&mut WindowSet<S>, EventTime) -> bool + Send + Sync + 'static,
+    ) -> Self {
+        self.slide = Some(Box::new(slide));
+        self
+    }
+}
+
+impl<In: Payload, Out: Payload, S: Send + Sync + Default + 'static> OperatorLogic
+    for FnAggLogic<In, Out, S>
+{
+    type In = In;
+    type Out = Out;
+    type State = S;
+
+    fn keys(&self, t: &Tuple<In>, keys: &mut Vec<Key>) {
+        (self.keys)(t, keys)
+    }
+    fn update(&self, w: &mut WindowSet<S>, t: &Tuple<In>, ctx: &mut Ctx<'_, Out>) {
+        (self.update)(w, t, ctx)
+    }
+    fn output(&self, w: &WindowSet<S>, ctx: &mut Ctx<'_, Out>) {
+        (self.output)(w, ctx)
+    }
+    fn slide(&self, w: &mut WindowSet<S>, new_l: EventTime) -> bool {
+        match &self.slide {
+            Some(f) => f(w, new_l),
+            None => false,
+        }
+    }
+}
+
+/// The counting aggregate of Operators 4/5 (wordcount / paircount):
+/// input payloads already carry their key set (produced by f_MK at the
+/// workload layer); the state is a plain count; expiry emits (key, count).
+pub struct CountPerKey<In, KF> {
+    key_fn: KF,
+    _marker: std::marker::PhantomData<fn(In)>,
+}
+
+impl<In, KF> CountPerKey<In, KF>
+where
+    In: Payload,
+    KF: Fn(&Tuple<In>, &mut Vec<Key>) + Send + Sync + 'static,
+{
+    pub fn new(key_fn: KF) -> Self {
+        CountPerKey { key_fn, _marker: std::marker::PhantomData }
+    }
+}
+
+impl<In, KF> OperatorLogic for CountPerKey<In, KF>
+where
+    In: Payload,
+    KF: Fn(&Tuple<In>, &mut Vec<Key>) + Send + Sync + 'static,
+{
+    type In = In;
+    type Out = (Key, u64);
+    type State = u64;
+
+    #[inline]
+    fn keys(&self, t: &Tuple<In>, keys: &mut Vec<Key>) {
+        (self.key_fn)(t, keys)
+    }
+    #[inline]
+    fn update(&self, w: &mut WindowSet<u64>, _t: &Tuple<In>, _ctx: &mut Ctx<'_, Self::Out>) {
+        w.states[0] += 1;
+    }
+    fn output(&self, w: &WindowSet<u64>, ctx: &mut Ctx<'_, Self::Out>) {
+        ctx.emit((w.key, w.states[0]));
+    }
+}
+
+/// Build the wordcount/paircount `A+` (WT = Multi) with the paper's Q1
+/// window geometry (Operator 4: WA = 60 s, WS = 120 s by default).
+pub fn count_per_key_op<In, KF>(
+    name: &'static str,
+    spec: WindowSpec,
+    key_fn: KF,
+) -> OperatorDef<CountPerKey<In, KF>>
+where
+    In: Payload,
+    KF: Fn(&Tuple<In>, &mut Vec<Key>) + Send + Sync + 'static,
+{
+    OperatorDef::new(name, spec, 1, WindowType::Multi, CountPerKey::new(key_fn))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::OperatorMetrics;
+    use crate::operator::state::SharedState;
+    use crate::operator::OperatorCore;
+    use crate::tuple::Mapper;
+
+    #[test]
+    fn fn_agg_longest_tweet_per_hashtag() {
+        // Operator 2 (App. D): A+ computing the longest tweet per hashtag.
+        // In = (hashtag keys, length); State = max length.
+        type In = (Vec<Key>, u64);
+        let logic = FnAggLogic::<In, (Key, u64), u64>::new(
+            |t, keys| keys.extend_from_slice(&t.payload.0),
+            |w, t, _ctx| {
+                if t.payload.1 > w.states[0] {
+                    w.states[0] = t.payload.1;
+                }
+            },
+            |w, ctx| ctx.emit((w.key, w.states[0])),
+        );
+        let def = OperatorDef::new(
+            "longest-tweet",
+            WindowSpec::new(30, 60),
+            1,
+            WindowType::Multi,
+            logic,
+        );
+        let mut core = OperatorCore::new(def, 0, SharedState::private(), OperatorMetrics::new(1));
+        let f_mu = Mapper::hash_mod(1);
+        let mut out = Vec::new();
+        let tuples: Vec<Tuple<In>> = vec![
+            Tuple::data(10, (vec![1], 5)),
+            Tuple::data(20, (vec![1, 2], 13)),
+            Tuple::data(200, (vec![9], 1)), // expire everything
+        ];
+        for t in tuples {
+            let mut sink = |o: Tuple<(Key, u64)>| out.push(o.payload);
+            let mut ctx = Ctx::new(&mut sink);
+            core.process(&t, &f_mu, &mut ctx);
+        }
+        out.sort();
+        // windows [-30,30) and [0,60) both see the tuples → two emissions per key
+        assert_eq!(out, vec![(1, 13), (1, 13), (2, 13), (2, 13)]);
+    }
+
+    #[test]
+    fn count_per_key_counts() {
+        let def = count_per_key_op::<Key, _>(
+            "wc",
+            WindowSpec::new(10, 10),
+            |t, keys| keys.push(t.payload),
+        );
+        let mut core = OperatorCore::new(def, 0, SharedState::private(), OperatorMetrics::new(1));
+        let f_mu = Mapper::hash_mod(1);
+        let mut out = Vec::new();
+        for t in [
+            Tuple::data(1, 5u64),
+            Tuple::data(2, 5),
+            Tuple::data(3, 6),
+            Tuple::data(50, 0),
+        ] {
+            let mut sink = |o: Tuple<(Key, u64)>| out.push(o.payload);
+            let mut ctx = Ctx::new(&mut sink);
+            core.process(&t, &f_mu, &mut ctx);
+        }
+        out.sort();
+        assert_eq!(out, vec![(5, 2), (6, 1)]);
+    }
+}

@@ -1,0 +1,528 @@
+//! The per-instance processing core shared by `processSN` (Alg. 2) and
+//! `processVSN` (Alg. 4): watermark maintenance, the expired-window loop
+//! (L33-35 / L22-24) driven by a per-instance expiry index, and
+//! `handleInputTuple` (L19-30).
+//!
+//! The same core runs in both setups; only the state location (private vs
+//! shared σ) and the epoch/membership handling around it (in
+//! [`crate::engine`]) differ — that is precisely the VSN virtualization
+//! argument of §5.
+
+use crate::metrics::OperatorMetrics;
+use crate::operator::state::{KeyState, SharedState, WindowSet};
+use crate::operator::{Ctx, OperatorDef, OperatorLogic, WindowType};
+use crate::time::{EventTime, TIME_MAX};
+use crate::tuple::{InstanceId, Key, Mapper, Tuple};
+use crate::watermark::Watermark;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+/// One instance's processing state for an `O+`.
+pub struct OperatorCore<L: OperatorLogic> {
+    pub def: OperatorDef<L>,
+    pub id: InstanceId,
+    state: Arc<SharedState<L::State>>,
+    w: Watermark,
+    /// Earliest-first (expiry_ts, key) index over this instance's keys.
+    expiry: BinaryHeap<Reverse<(EventTime, Key)>>,
+    keys_buf: Vec<Key>,
+    /// Shard-grouped plan of this instance's keys, valid only for
+    /// constant-key operators (keys_are_constant); rebuilt per mapper.
+    key_plan: Option<Vec<(usize, Vec<Key>)>>,
+    key_plan_stamp: u64,
+    pub metrics: Arc<OperatorMetrics>,
+}
+
+impl<L: OperatorLogic> OperatorCore<L> {
+    pub fn new(
+        def: OperatorDef<L>,
+        id: InstanceId,
+        state: Arc<SharedState<L::State>>,
+        metrics: Arc<OperatorMetrics>,
+    ) -> Self {
+        OperatorCore {
+            def,
+            id,
+            state,
+            w: Watermark::new(),
+            expiry: BinaryHeap::new(),
+            keys_buf: Vec::with_capacity(16),
+            key_plan: None,
+            key_plan_stamp: u64::MAX,
+            metrics,
+        }
+    }
+
+    /// Build (or reuse) the shard-grouped plan of this instance's keys
+    /// under `f_mu` — only for constant-key operators. The stamp is a
+    /// cheap fingerprint of the mapper's instance set.
+    fn key_plan_for(&mut self, f_mu: &Mapper, probe: &Tuple<L::In>) -> bool {
+        if !self.def.logic.keys_are_constant() {
+            return false;
+        }
+        let stamp = {
+            let insts = f_mu.instances();
+            insts.iter().fold(insts.len() as u64, |a, &i| {
+                a.wrapping_mul(1099511628211).wrapping_add(i as u64 + 1)
+            })
+        };
+        if self.key_plan.is_some() && self.key_plan_stamp == stamp {
+            return true;
+        }
+        let mut keys = Vec::new();
+        self.def.logic.keys(probe, &mut keys);
+        let mut groups: std::collections::BTreeMap<usize, Vec<Key>> = Default::default();
+        for k in keys {
+            if f_mu.map(k) == self.id {
+                groups.entry(self.state.shard_index(k)).or_default().push(k);
+            }
+        }
+        self.key_plan = Some(groups.into_iter().collect());
+        self.key_plan_stamp = stamp;
+        true
+    }
+
+    /// Current instance watermark W.
+    #[inline]
+    pub fn watermark(&self) -> EventTime {
+        self.w.get()
+    }
+
+    /// updateW: returns `true` iff W strictly increased (the reconfig
+    /// trigger precondition of Alg. 4 L17).
+    #[inline]
+    pub fn observe(&mut self, ts: EventTime) -> bool {
+        self.w.update(ts)
+    }
+
+    /// Shared state handle (for diagnostics / engine wiring).
+    pub fn state(&self) -> &Arc<SharedState<L::State>> {
+        &self.state
+    }
+
+    /// The expired-window loop (Alg. 2 L33-35 / Alg. 4 L22-24): handle, in
+    /// global (expiry-ts, key) order, every expired window set whose key is
+    /// this instance's responsibility under `f_mu`.
+    pub fn advance(&mut self, f_mu: &Mapper, ctx: &mut Ctx<'_, L::Out>) {
+        let w = self.w.get();
+        let ws = self.def.spec.size;
+        let wa = self.def.spec.advance;
+        let wt = self.def.wt;
+        let logic = &self.def.logic;
+        let has_output = logic.has_output();
+        while let Some(&Reverse((at, key))) = self.expiry.peek() {
+            if at > w {
+                break;
+            }
+            self.expiry.pop();
+            // Responsibility check (Alg. 4 L23). Entries are rebuilt on
+            // epoch switches, but a stale entry must not touch foreign keys.
+            if f_mu.map(key) != self.id {
+                continue;
+            }
+            let state = &self.state;
+            let expiry = &mut self.expiry;
+            state.with_existing(key, |ks: &mut KeyState<L::State>| {
+                if ks.next_expiry != at {
+                    return ((), true); // stale heap entry: a newer one exists
+                }
+                ks.next_expiry = TIME_MAX;
+                let Some(front) = ks.wins.front_mut() else { return ((), false) };
+                debug_assert!(
+                    front.l + ws <= at || (wt == WindowType::Single && !has_output),
+                    "expiry index out of sync"
+                );
+                ctx.win_right = at;
+                match wt {
+                    WindowType::Multi => {
+                        logic.output(front, ctx);
+                        ks.wins.pop_front();
+                        match ks.front_expiry(ws) {
+                            Some(e) => {
+                                ks.next_expiry = e;
+                                expiry.push(Reverse((e, key)));
+                                ((), true)
+                            }
+                            None => ((), false), // no windows left: σ.remove
+                        }
+                    }
+                    WindowType::Single => {
+                        let new_l = if has_output {
+                            logic.output(front, ctx);
+                            front.l + wa
+                        } else {
+                            // fast-forward: every skipped step emits nothing
+                            self_first_unexpired(front.l, wa, ws, w)
+                        };
+                        if logic.slide(front, new_l) {
+                            front.l = new_l;
+                            // With f_O defined, the next step is exactly one
+                            // WA later. Without it (ScaleJoin, WA = δ) the
+                            // slide is pure purge hygiene — f_U already
+                            // purges on every probe — so re-arm lazily:
+                            // per-tuple re-sliding of every key was the #1
+                            // hot-path cost (§Perf, EXPERIMENTS.md).
+                            let e = if has_output {
+                                new_l + ws
+                            } else {
+                                w + (ws / 4).max(wa)
+                            };
+                            ks.next_expiry = e;
+                            expiry.push(Reverse((e, key)));
+                            ((), true)
+                        } else {
+                            ks.wins.pop_front();
+                            ((), ks.wins.front().is_some())
+                        }
+                    }
+                }
+            });
+            ctx.flush(); // sink emissions with no shard lock held
+        }
+    }
+
+    /// handleInputTuple (Alg. 2 L19-30): create/update the window sets of
+    /// every key of `t` that is this instance's responsibility.
+    pub fn handle_input(&mut self, t: &Tuple<L::In>, f_mu: &Mapper, ctx: &mut Ctx<'_, L::Out>) {
+        // Fast path for constant-key operators (ScaleJoin, Operator 6):
+        // shard-grouped key plan, one lock per shard per tuple (§Perf).
+        if self.def.wt == WindowType::Single && self.key_plan_for(f_mu, t) {
+            let logic = self.def.logic.clone();
+            let spec = self.def.spec;
+            let ws = spec.size;
+            let inputs = self.def.inputs;
+            let t1 = spec.earliest_win_l(t.ts);
+            let plan = self.key_plan.take().unwrap();
+            let state = self.state.clone();
+            let expiry = &mut self.expiry;
+            for (shard, keys) in &plan {
+                state.with_key_group(*shard, keys, |k, ks| {
+                    if ks.wins.is_empty() {
+                        ks.wins.push_back(WindowSet::new(k, t1, inputs));
+                    }
+                    let set = ks.wins.front_mut().unwrap();
+                    ctx.win_right = (set.l + ws).max(t.ts + 1);
+                    logic.update(set, t, ctx);
+                    if let Some(e) = ks.front_expiry(ws) {
+                        if e < ks.next_expiry {
+                            ks.next_expiry = e;
+                            expiry.push(Reverse((e, k)));
+                        }
+                    }
+                    !ks.wins.is_empty()
+                });
+                ctx.flush();
+            }
+            self.key_plan = Some(plan);
+            return;
+        }
+        let logic = self.def.logic.clone();
+        self.keys_buf.clear();
+        logic.keys(t, &mut self.keys_buf);
+        if self.keys_buf.is_empty() {
+            return;
+        }
+        let spec = self.def.spec;
+        let inputs = self.def.inputs;
+        let wt = self.def.wt;
+        let ws = spec.size;
+        let t1 = spec.earliest_win_l(t.ts);
+        let t2 = match wt {
+            WindowType::Single => t1,
+            WindowType::Multi => spec.latest_win_l(t.ts),
+        };
+        let id = self.id;
+        let state = self.state.clone();
+        let expiry = &mut self.expiry;
+        for idx in 0..self.keys_buf.len() {
+            let k = self.keys_buf[idx];
+            if f_mu.map(k) != id {
+                continue;
+            }
+            state.with_key(k, |ks: &mut KeyState<L::State>| {
+                match wt {
+                    WindowType::Single => {
+                        if ks.wins.is_empty() {
+                            ks.wins.push_back(WindowSet::new(k, t1, inputs));
+                        }
+                        let set = ks.wins.front_mut().unwrap();
+                        // Lazy sliding (above) can leave l behind the
+                        // watermark; emissions must still carry a right
+                        // boundary beyond every processed tuple
+                        // (Observation 1 + per-source ts-sortedness).
+                        ctx.win_right = (set.l + ws).max(t.ts + 1);
+                        logic.update(set, t, ctx);
+                    }
+                    WindowType::Multi => {
+                        // σ.check&Create for every window t falls in
+                        let mut l = t1;
+                        while l <= t2 {
+                            let pos = match ks.wins.iter().position(|w| w.l >= l) {
+                                Some(p) if ks.wins[p].l == l => p,
+                                Some(p) => {
+                                    ks.wins.insert(p, WindowSet::new(k, l, inputs));
+                                    p
+                                }
+                                None => {
+                                    ks.wins.push_back(WindowSet::new(k, l, inputs));
+                                    ks.wins.len() - 1
+                                }
+                            };
+                            ctx.win_right = l + ws;
+                            logic.update(&mut ks.wins[pos], t, ctx);
+                            l += spec.advance;
+                        }
+                    }
+                }
+                // (re)schedule the key's earliest expiry
+                if let Some(e) = ks.front_expiry(ws) {
+                    if e < ks.next_expiry {
+                        ks.next_expiry = e;
+                        expiry.push(Reverse((e, k)));
+                    }
+                }
+                ((), !ks.wins.is_empty())
+            });
+            ctx.flush(); // sink emissions with no shard lock held
+        }
+    }
+
+    /// Full SN processing step (Alg. 2 processSN): updateW, expire, handle.
+    /// Returns `true` iff the watermark strictly increased.
+    pub fn process(&mut self, t: &Tuple<L::In>, f_mu: &Mapper, ctx: &mut Ctx<'_, L::Out>) -> bool {
+        let grew = self.observe(t.ts);
+        if grew {
+            self.advance(f_mu, ctx);
+        }
+        if t.kind.is_data() {
+            self.handle_input(t, f_mu, ctx);
+        }
+        grew
+    }
+
+    /// Rebuild the expiry index after an epoch switch: this instance is now
+    /// responsible (under the *new* f_μ) for a different key set.
+    pub fn rebuild_expiry_index(&mut self, f_mu: &Mapper) {
+        self.expiry.clear();
+        let ws = self.def.spec.size;
+        let id = self.id;
+        let expiry = &mut self.expiry;
+        self.state.scan(|k, ks| {
+            if f_mu.map(k) == id {
+                if let Some(e) = ks.front_expiry(ws) {
+                    ks.next_expiry = e;
+                    expiry.push(Reverse((e, k)));
+                }
+            }
+        });
+    }
+
+    /// Number of scheduled expiry entries (diagnostics).
+    pub fn expiry_len(&self) -> usize {
+        self.expiry.len()
+    }
+}
+
+/// Smallest aligned left boundary that is NOT expired w.r.t. watermark `w`,
+/// starting from `cur_l` (never moves backwards).
+#[inline]
+fn self_first_unexpired(cur_l: EventTime, wa: EventTime, ws: EventTime, w: EventTime) -> EventTime {
+    let target = (w - ws).div_euclid(wa) * wa + wa;
+    target.max(cur_l + wa)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::time::WindowSpec;
+
+    /// Toy aggregate: counts tuples per key per window (WT = Multi),
+    /// emitting (key, count) on expiry. Keys = payload's key list.
+    struct CountLogic;
+    impl OperatorLogic for CountLogic {
+        type In = Vec<Key>;
+        type Out = (Key, u64);
+        type State = u64;
+
+        fn keys(&self, t: &Tuple<Vec<Key>>, keys: &mut Vec<Key>) {
+            keys.extend_from_slice(&t.payload);
+        }
+        fn update(&self, w: &mut WindowSet<u64>, _t: &Tuple<Vec<Key>>, _ctx: &mut Ctx<'_, Self::Out>) {
+            w.states[0] += 1;
+        }
+        fn output(&self, w: &WindowSet<u64>, ctx: &mut Ctx<'_, Self::Out>) {
+            ctx.emit((w.key, w.states[0]));
+        }
+    }
+
+    fn count_core(wa: i64, ws: i64) -> OperatorCore<CountLogic> {
+        OperatorCore::new(
+            OperatorDef::new("count", WindowSpec::new(wa, ws), 1, WindowType::Multi, CountLogic),
+            0,
+            SharedState::private(),
+            OperatorMetrics::new(1),
+        )
+    }
+
+    fn drive(core: &mut OperatorCore<CountLogic>, tuples: Vec<Tuple<Vec<Key>>>) -> Vec<Tuple<(Key, u64)>> {
+        let f_mu = Mapper::hash_mod(1);
+        let mut out = Vec::new();
+        for t in tuples {
+            let mut sink = |o: Tuple<(Key, u64)>| out.push(o);
+            let mut ctx = Ctx::new(&mut sink);
+            ctx.ingest_us = t.ingest_us;
+            core.process(&t, &f_mu, &mut ctx);
+        }
+        out
+    }
+
+    #[test]
+    fn tumbling_count_per_key() {
+        let mut core = count_core(10, 10);
+        let out = drive(
+            &mut core,
+            vec![
+                Tuple::data(1, vec![7]),
+                Tuple::data(2, vec![7, 8]),
+                Tuple::data(9, vec![8]),
+                Tuple::data(15, vec![7]), // window [0,10) of 7,8 expires at W=15? no: 10+? l+WS=10 <= 15 yes
+                Tuple::data(25, vec![9]), // expires [10,20)
+            ],
+        );
+        // [0,10): key7 count 2, key8 count 2 → emitted when W reaches 15
+        // [10,20): key7 count 1 → emitted when W reaches 25
+        let mut got: Vec<(Key, u64, i64)> = out.iter().map(|t| (t.payload.0, t.payload.1, t.ts)).collect();
+        got.sort();
+        assert_eq!(got, vec![(7, 1, 20), (7, 2, 10), (8, 2, 10)]);
+    }
+
+    #[test]
+    fn sliding_multi_counts_overlaps() {
+        // WA=5, WS=10: a tuple at ts=7 falls into windows l=0 and l=5
+        let mut core = count_core(5, 10);
+        let out = drive(&mut core, vec![Tuple::data(7, vec![1]), Tuple::data(30, vec![2])]);
+        let mut got: Vec<(Key, u64, i64)> = out.iter().map(|t| (t.payload.0, t.payload.1, t.ts)).collect();
+        got.sort();
+        assert_eq!(got, vec![(1, 1, 10), (1, 1, 15)]);
+    }
+
+    #[test]
+    fn expiry_emissions_are_ts_ordered() {
+        let mut core = count_core(5, 10);
+        let mut tuples = Vec::new();
+        let mut rng = crate::util::Rng::new(3);
+        let mut ts = 0i64;
+        for _ in 0..500 {
+            ts += rng.gen_range(4) as i64;
+            tuples.push(Tuple::data(ts, vec![rng.gen_range(5)]));
+        }
+        tuples.push(Tuple::data(ts + 100, vec![0]));
+        let out = drive(&mut core, tuples);
+        assert!(!out.is_empty());
+        assert!(out.windows(2).all(|w| w[0].ts <= w[1].ts), "f_O emissions out of order");
+    }
+
+    #[test]
+    fn watermark_only_advances_on_heartbeat() {
+        let mut core = count_core(10, 10);
+        let out = drive(
+            &mut core,
+            vec![Tuple::data(1, vec![1]), Tuple::heartbeat(50)],
+        );
+        // heartbeat expires window [0,10) without contributing data
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].payload, (1, 1));
+    }
+
+    #[test]
+    fn responsibility_filter() {
+        // 2 instances: each processes only its keys
+        let shared = SharedState::new(4);
+        let metrics = OperatorMetrics::new(2);
+        let def = OperatorDef::new("count", WindowSpec::new(10, 10), 1, WindowType::Multi, CountLogic);
+        let mut c0 = OperatorCore::new(def.clone(), 0, shared.clone(), metrics.clone());
+        let mut c1 = OperatorCore::new(def, 1, shared, metrics);
+        let f_mu = Mapper::hash_mod(2);
+        let keys: Vec<Key> = (0..20).collect();
+        let t = Tuple::data(1, keys.clone());
+        let done = Tuple::<Vec<Key>>::heartbeat(100);
+        let mut out0 = Vec::new();
+        let mut out1 = Vec::new();
+        for (core, out) in [(&mut c0, &mut out0), (&mut c1, &mut out1)] {
+            let mut sink = |o: Tuple<(Key, u64)>| out.push(o.payload.0);
+            let mut ctx = Ctx::new(&mut sink);
+            core.process(&t, &f_mu, &mut ctx);
+            core.process(&done, &f_mu, &mut ctx);
+        }
+        // between them, every key counted exactly once
+        let mut all = [out0.clone(), out1.clone()].concat();
+        all.sort();
+        assert_eq!(all, keys);
+        // each instance only emitted its own keys
+        assert!(out0.iter().all(|&k| f_mu.map(k) == 0));
+        assert!(out1.iter().all(|&k| f_mu.map(k) == 1));
+    }
+
+    /// Single-window logic mirroring an incremental max (f_R as slide).
+    struct MaxLogic;
+    impl OperatorLogic for MaxLogic {
+        type In = (Key, i64);
+        type Out = (Key, i64);
+        type State = Vec<(EventTime, i64)>; // (ts, value) retained tuples
+
+        fn keys(&self, t: &Tuple<Self::In>, keys: &mut Vec<Key>) {
+            keys.push(t.payload.0);
+        }
+        fn update(&self, w: &mut WindowSet<Self::State>, t: &Tuple<Self::In>, _ctx: &mut Ctx<'_, Self::Out>) {
+            w.states[0].push((t.ts, t.payload.1));
+        }
+        fn output(&self, w: &WindowSet<Self::State>, ctx: &mut Ctx<'_, Self::Out>) {
+            if let Some(m) = w.states[0].iter().map(|&(_, v)| v).max() {
+                ctx.emit((w.key, m));
+            }
+        }
+        fn slide(&self, w: &mut WindowSet<Self::State>, new_l: EventTime) -> bool {
+            w.states[0].retain(|&(ts, _)| ts >= new_l);
+            !w.states[0].is_empty()
+        }
+    }
+
+    #[test]
+    fn single_window_slides_and_purges() {
+        let def = OperatorDef::new("max", WindowSpec::new(10, 20), 1, WindowType::Single, MaxLogic);
+        let mut core = OperatorCore::new(def, 0, SharedState::private(), OperatorMetrics::new(1));
+        let f_mu = Mapper::hash_mod(1);
+        let mut out: Vec<(i64, (Key, i64))> = Vec::new();
+        let tuples = vec![
+            Tuple::data(1, (1u64, 5i64)),
+            Tuple::data(12, (1, 9)),
+            Tuple::data(35, (1, 2)), // W=35: windows [0,20) and [10,30) expired
+            Tuple::heartbeat(100),
+        ];
+        for t in tuples {
+            let mut sink = |o: Tuple<(Key, i64)>| out.push((o.ts, o.payload));
+            let mut ctx = Ctx::new(&mut sink);
+            core.process(&t, &f_mu, &mut ctx);
+        }
+        // Window instances cover ℓ·WA for ℓ ∈ ℤ (§2.1), so the first
+        // window containing ts=1 is [-10,10) → max 5 @10. Then [0,20):
+        // max(5,9)=9 @20; [10,30): 9 @30; ts=35 lands in the slid window;
+        // the heartbeat expires [20,40) → 2 @40 and [30,50) → 2 @50,
+        // after which the purge empties the state.
+        assert_eq!(
+            out,
+            vec![(10, (1, 5)), (20, (1, 9)), (30, (1, 9)), (40, (1, 2)), (50, (1, 2))]
+        );
+    }
+
+    #[test]
+    fn first_unexpired_math() {
+        // wa=10, ws=30, w=45: expired l <= 15 → first unexpired = 20
+        assert_eq!(self_first_unexpired(0, 10, 30, 45), 20);
+        // exactly aligned: w=40 → l <= 10 expired → 20
+        assert_eq!(self_first_unexpired(0, 10, 30, 40), 20);
+        // never move backwards
+        assert_eq!(self_first_unexpired(100, 10, 30, 45), 110);
+    }
+}

@@ -1,0 +1,114 @@
+//! The Map/Flatmap operator M (§2.1): stateless, transforms each input
+//! tuple into zero or more output tuples with `t_out.τ ← t_in.τ`.
+//!
+//! In the SN baseline, M is the Corollary-1 duplication stage: it turns an
+//! `A+`'s multi-key tuples into one single-key tuple per key so a plain
+//! key-by A can route them.
+
+use crate::tuple::{Payload, Tuple};
+use std::sync::Arc;
+
+/// Stateless transform logic.
+pub trait MapLogic: Send + Sync + 'static {
+    type In: Payload;
+    type Out: Payload;
+
+    /// Emit zero or more outputs for `t`. Implementations must preserve
+    /// the timestamp (`t_out.τ ← t_in.τ`) — enforced by [`MapOp::apply`].
+    fn flat_map(&self, t: &Tuple<Self::In>, emit: &mut dyn FnMut(Self::Out));
+}
+
+/// Closure-backed [`MapLogic`].
+pub struct FnMapLogic<In, Out, F> {
+    f: F,
+    _marker: std::marker::PhantomData<fn(In) -> Out>,
+}
+
+impl<In, Out, F> FnMapLogic<In, Out, F>
+where
+    In: Payload,
+    Out: Payload,
+    F: Fn(&Tuple<In>, &mut dyn FnMut(Out)) + Send + Sync + 'static,
+{
+    pub fn new(f: F) -> Self {
+        FnMapLogic { f, _marker: std::marker::PhantomData }
+    }
+}
+
+impl<In, Out, F> MapLogic for FnMapLogic<In, Out, F>
+where
+    In: Payload,
+    Out: Payload,
+    F: Fn(&Tuple<In>, &mut dyn FnMut(Out)) + Send + Sync + 'static,
+{
+    type In = In;
+    type Out = Out;
+    fn flat_map(&self, t: &Tuple<In>, emit: &mut dyn FnMut(Out)) {
+        (self.f)(t, emit)
+    }
+}
+
+/// A deployable M operator.
+pub struct MapOp<L: MapLogic> {
+    pub logic: Arc<L>,
+    pub name: &'static str,
+}
+
+impl<L: MapLogic> Clone for MapOp<L> {
+    fn clone(&self) -> Self {
+        MapOp { logic: self.logic.clone(), name: self.name }
+    }
+}
+
+impl<L: MapLogic> MapOp<L> {
+    pub fn new(name: &'static str, logic: L) -> Self {
+        MapOp { logic: Arc::new(logic), name }
+    }
+
+    /// Apply to one tuple, stamping outputs with the input's τ, kind
+    /// passthrough for heartbeats, and the ingest stamp for latency.
+    pub fn apply(&self, t: &Tuple<L::In>, out: &mut dyn FnMut(Tuple<L::Out>)) {
+        if !t.kind.is_data() {
+            return;
+        }
+        let ts = t.ts;
+        let ingest = t.ingest_us;
+        let mut emit = |p: L::Out| {
+            out(Tuple { ts, kind: crate::tuple::Kind::Data, input: 0, ingest_us: ingest, payload: p })
+        };
+        self.logic.flat_map(t, &mut emit);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatmap_preserves_timestamp() {
+        let m = MapOp::new(
+            "split",
+            FnMapLogic::new(|t: &Tuple<u32>, emit: &mut dyn FnMut(u32)| {
+                for i in 0..t.payload {
+                    emit(i);
+                }
+            }),
+        );
+        let mut out = Vec::new();
+        m.apply(&Tuple::data(42, 3).with_ingest(7), &mut |o| out.push(o));
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|o| o.ts == 42 && o.ingest_us == 7));
+        assert_eq!(out.iter().map(|o| o.payload).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn heartbeats_not_mapped() {
+        let m = MapOp::new(
+            "id",
+            FnMapLogic::new(|t: &Tuple<u32>, emit: &mut dyn FnMut(u32)| emit(t.payload)),
+        );
+        let mut out: Vec<Tuple<u32>> = Vec::new();
+        m.apply(&Tuple::heartbeat(10), &mut |o| out.push(o));
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,169 @@
+//! The generalized stateful operator `O+` (§4.2).
+//!
+//! `O+(WA, WS, I, f_MK, WT, S, f_μ, f_U, f_O, f_S)` is captured by
+//! [`OperatorDef`] (window geometry, input count, window type) plus an
+//! [`OperatorLogic`] implementation providing the user functions:
+//!
+//! | paper | trait method | default |
+//! |-------|--------------|---------|
+//! | f_MK  | [`OperatorLogic::keys`]   | — (must implement) |
+//! | f_U   | [`OperatorLogic::update`] | — (must implement) |
+//! | f_O   | [`OperatorLogic::output`] | emits nothing |
+//! | f_S   | [`OperatorLogic::slide`]  | drop the state |
+//!
+//! The operator library (Map [`map`], Aggregate [`aggregate`], Joins and
+//! ScaleJoin [`join`]) instantiates `O+` exactly as Theorem 2 describes:
+//! A is `I = 1` with f_A as f_O / f_R as f_S; J is `I = 2` matching in
+//! f_U or f_O.
+
+pub mod aggregate;
+pub mod core;
+pub mod join;
+pub mod map;
+pub mod state;
+
+pub use self::core::OperatorCore;
+pub use state::{KeyState, SharedState, WindowSet};
+
+use crate::time::{EventTime, WindowSpec};
+use crate::tuple::{Key, Kind, Payload, Tuple};
+use std::sync::Arc;
+
+/// Window type WT (§2.1): one evolving window instance per key (`Single`)
+/// or all overlapping instances materialized per key (`Multi`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WindowType {
+    Single,
+    Multi,
+}
+
+/// Emission + accounting context handed to f_U / f_O.
+///
+/// Emissions are *buffered* and only handed to the sink by
+/// [`Ctx::flush`], which the processing core calls **after** releasing
+/// the σ shard lock. The sink may block on downstream backpressure
+/// (bounded ESG); blocking while holding a shard lock would deadlock the
+/// other instances whose output clocks gate the downstream merge.
+pub struct Ctx<'a, Out> {
+    /// Right boundary of the window set being processed — the event time
+    /// stamped on emissions (§2.1 / Observation 1).
+    pub win_right: EventTime,
+    /// Ingest stamp of the tuple driving this processing step (latency).
+    pub ingest_us: u64,
+    /// Join-comparison counter (the paper's join throughput metric).
+    pub comparisons: u64,
+    buf: Vec<Tuple<Out>>,
+    emit_fn: &'a mut dyn FnMut(Tuple<Out>),
+}
+
+impl<'a, Out> Ctx<'a, Out> {
+    pub fn new(emit_fn: &'a mut dyn FnMut(Tuple<Out>)) -> Self {
+        Ctx { win_right: 0, ingest_us: 0, comparisons: 0, buf: Vec::new(), emit_fn }
+    }
+
+    /// Emit an output payload, stamped with the window's right boundary
+    /// (prepareOutTuples in Alg. 2). Buffered until [`Ctx::flush`].
+    #[inline]
+    pub fn emit(&mut self, payload: Out) {
+        self.buf.push(Tuple {
+            ts: self.win_right,
+            kind: Kind::Data,
+            input: 0,
+            ingest_us: self.ingest_us,
+            payload,
+        });
+    }
+
+    /// Hand buffered emissions to the sink. Must be called with no state
+    /// locks held (the core does this; see module docs).
+    #[inline]
+    pub fn flush(&mut self) {
+        for t in self.buf.drain(..) {
+            (self.emit_fn)(t);
+        }
+    }
+
+    /// Record `n` join comparisons.
+    #[inline]
+    pub fn record_comparisons(&mut self, n: u64) {
+        self.comparisons += n;
+    }
+}
+
+
+/// The user-defined functions of `O+`.
+pub trait OperatorLogic: Send + Sync + 'static {
+    type In: Payload;
+    type Out: Payload;
+    /// ζ: per-(key, window, input) state.
+    type State: Send + Sync + Default + 'static;
+
+    /// f_MK: append the keys of `t` to `keys` (possibly none, Def. 4).
+    fn keys(&self, t: &Tuple<Self::In>, keys: &mut Vec<Key>);
+
+    /// f_U: update the window set (its I states) for one of `t`'s keys;
+    /// may emit output payloads through `ctx`.
+    fn update(&self, w: &mut WindowSet<Self::State>, t: &Tuple<Self::In>, ctx: &mut Ctx<'_, Self::Out>);
+
+    /// f_O: produce results when the window set expires. Default: nothing.
+    fn output(&self, _w: &WindowSet<Self::State>, _ctx: &mut Ctx<'_, Self::Out>) {}
+
+    /// f_S (WT = Single only): slide the window set to left boundary
+    /// `new_l`, purging stale contributions. Return `false` to drop the
+    /// key's state entirely (the "all states empty" test of Alg. 2 L16-17).
+    /// Default: drop.
+    fn slide(&self, _w: &mut WindowSet<Self::State>, _new_l: EventTime) -> bool {
+        false
+    }
+
+    /// Whether f_O is user-defined. When `false` and WT = Single, expiry
+    /// fast-forwards the window in one `slide` call instead of stepping
+    /// through every WA increment — semantically equivalent (each skipped
+    /// step would emit nothing) and essential when WA = δ (ScaleJoin).
+    fn has_output(&self) -> bool {
+        true
+    }
+
+    /// Whether f_MK returns the SAME key set for every tuple (ScaleJoin's
+    /// {1..n_keys}, Operator 6's {1..n}). Enables the shard-grouped key
+    /// plan: keys are binned by σ shard once per epoch and each shard is
+    /// locked once per tuple instead of once per key (§Perf).
+    fn keys_are_constant(&self) -> bool {
+        false
+    }
+}
+
+/// The declarative half of `O+`: geometry + input count + WT + logic.
+pub struct OperatorDef<L: OperatorLogic> {
+    pub spec: WindowSpec,
+    pub inputs: usize,
+    pub wt: WindowType,
+    pub logic: Arc<L>,
+    /// Human-readable name (metrics, logs).
+    pub name: &'static str,
+}
+
+impl<L: OperatorLogic> Clone for OperatorDef<L> {
+    fn clone(&self) -> Self {
+        OperatorDef {
+            spec: self.spec,
+            inputs: self.inputs,
+            wt: self.wt,
+            logic: self.logic.clone(),
+            name: self.name,
+        }
+    }
+}
+
+impl<L: OperatorLogic> OperatorDef<L> {
+    pub fn new(
+        name: &'static str,
+        spec: WindowSpec,
+        inputs: usize,
+        wt: WindowType,
+        logic: L,
+    ) -> Self {
+        assert!(inputs >= 1 && inputs <= u8::MAX as usize);
+        OperatorDef { spec, inputs, wt, logic: Arc::new(logic), name }
+    }
+}

@@ -1,0 +1,243 @@
+//! Operator state σ: window sets per key, shardable for VSN sharing (§5).
+//!
+//! In SN setups each instance owns a private `SharedState` (1 shard, no
+//! contention). In VSN setups all instances share one `SharedState`;
+//! STRETCH's correctness argument (Theorem 3) guarantees each key is
+//! updated by exactly one instance per epoch, so shard mutexes only
+//! arbitrate *different* keys hashing to the same shard.
+
+use crate::time::{EventTime, TIME_MAX};
+use crate::tuple::{mix64, Key};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// The paper's ⟨ζ, l, k⟩ window instance, generalized to the set of I
+/// instances sharing (key, l): `states[i]` is the ζ of input i.
+#[derive(Debug)]
+pub struct WindowSet<S> {
+    pub key: Key,
+    /// Left boundary l (inclusive).
+    pub l: EventTime,
+    /// One ζ per input stream.
+    pub states: Vec<S>,
+}
+
+impl<S: Default> WindowSet<S> {
+    pub fn new(key: Key, l: EventTime, inputs: usize) -> Self {
+        WindowSet { key, l, states: (0..inputs).map(|_| S::default()).collect() }
+    }
+}
+
+/// Per-key state: the list of window sets (σ[k][ℓ] in Alg. 2), earliest
+/// first, plus the expiry-index bookkeeping.
+#[derive(Debug)]
+pub struct KeyState<S> {
+    pub wins: VecDeque<WindowSet<S>>,
+    /// The expiry timestamp currently scheduled in the owner's heap
+    /// (TIME_MAX = none). Keeps at most one live heap entry per key.
+    pub next_expiry: EventTime,
+}
+
+impl<S> Default for KeyState<S> {
+    fn default() -> Self {
+        KeyState { wins: VecDeque::new(), next_expiry: TIME_MAX }
+    }
+}
+
+impl<S> KeyState<S> {
+    /// Expiry time of the earliest window set (l + WS), if any.
+    pub fn front_expiry(&self, ws: EventTime) -> Option<EventTime> {
+        self.wins.front().map(|w| w.l + ws)
+    }
+
+    /// Find the window set with left boundary `l` (wins are l-ordered).
+    pub fn find_mut(&mut self, l: EventTime) -> Option<&mut WindowSet<S>> {
+        // windows are few per key; linear scan beats binary search at n<=8
+        self.wins.iter_mut().find(|w| w.l == l)
+    }
+}
+
+/// Sharded key → KeyState map.
+pub struct SharedState<S> {
+    shards: Vec<Mutex<HashMap<Key, KeyState<S>>>>,
+    mask: u64,
+}
+
+/// Default shard count for VSN sharing (power of two).
+pub const DEFAULT_SHARDS: usize = 64;
+
+impl<S: Send + 'static> SharedState<S> {
+    pub fn new(shards: usize) -> Arc<Self> {
+        let shards = shards.next_power_of_two();
+        Arc::new(SharedState {
+            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            mask: shards as u64 - 1,
+        })
+    }
+
+    /// Private (SN) state: one shard, zero sharing intended.
+    pub fn private() -> Arc<Self> {
+        Self::new(1)
+    }
+
+    #[inline]
+    fn shard_of(&self, k: Key) -> &Mutex<HashMap<Key, KeyState<S>>> {
+        &self.shards[(mix64(k) & self.mask) as usize]
+    }
+
+    /// Shard index of a key (for building shard-grouped key plans).
+    #[inline]
+    pub fn shard_index(&self, k: Key) -> usize {
+        (mix64(k) & self.mask) as usize
+    }
+
+    /// Process a group of keys that all live in shard `shard_idx`,
+    /// locking the shard ONCE (the §Perf fix for constant-key operators
+    /// like ScaleJoin, where per-key locking dominated the hot path).
+    /// `f` returns `false` to remove the key's state.
+    pub fn with_key_group(
+        &self,
+        shard_idx: usize,
+        keys: &[Key],
+        mut f: impl FnMut(Key, &mut KeyState<S>) -> bool,
+    ) {
+        let mut shard = self.shards[shard_idx].lock().unwrap();
+        for &k in keys {
+            debug_assert_eq!(self.shard_index(k), shard_idx);
+            let entry = shard.entry(k).or_default();
+            if !f(k, entry) {
+                shard.remove(&k);
+            }
+        }
+    }
+
+    /// Run `f` with the key's state (created on demand). If `f` returns
+    /// `false`, the key's state is removed (the σ.remove of Alg. 2).
+    pub fn with_key<R>(&self, k: Key, f: impl FnOnce(&mut KeyState<S>) -> (R, bool)) -> R {
+        let mut shard = self.shard_of(k).lock().unwrap();
+        let entry = shard.entry(k).or_default();
+        let (r, keep) = f(entry);
+        if !keep {
+            shard.remove(&k);
+        }
+        r
+    }
+
+    /// Run `f` on the key's state only if present (no creation).
+    pub fn with_existing<R>(
+        &self,
+        k: Key,
+        f: impl FnOnce(&mut KeyState<S>) -> (R, bool),
+    ) -> Option<R> {
+        let mut shard = self.shard_of(k).lock().unwrap();
+        match shard.get_mut(&k) {
+            Some(entry) => {
+                let (r, keep) = f(entry);
+                if !keep {
+                    shard.remove(&k);
+                }
+                Some(r)
+            }
+            None => None,
+        }
+    }
+
+    /// Visit every (key, state) — used to rebuild expiry indexes on epoch
+    /// switches. Shards are locked one at a time.
+    pub fn scan(&self, mut f: impl FnMut(Key, &mut KeyState<S>)) {
+        for shard in &self.shards {
+            let mut guard = shard.lock().unwrap();
+            for (k, st) in guard.iter_mut() {
+                f(*k, st);
+            }
+        }
+    }
+
+    /// Total number of keys (diagnostics).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop everything (between experiment phases).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            shard.lock().unwrap().clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_key_creates_and_removes() {
+        let st: Arc<SharedState<u32>> = SharedState::new(4);
+        st.with_key(7, |ks| {
+            ks.wins.push_back(WindowSet::new(7, 0, 1));
+            ((), true)
+        });
+        assert_eq!(st.len(), 1);
+        st.with_key(7, |_| ((), false));
+        assert_eq!(st.len(), 0);
+    }
+
+    #[test]
+    fn with_existing_does_not_create() {
+        let st: Arc<SharedState<u32>> = SharedState::new(4);
+        assert!(st.with_existing(1, |_| ((), true)).is_none());
+        assert_eq!(st.len(), 0);
+    }
+
+    #[test]
+    fn scan_visits_all() {
+        let st: Arc<SharedState<u32>> = SharedState::new(8);
+        for k in 0..100u64 {
+            st.with_key(k, |ks| {
+                ks.wins.push_back(WindowSet::new(k, k as i64, 1));
+                ((), true)
+            });
+        }
+        let mut seen = 0;
+        st.scan(|_, _| seen += 1);
+        assert_eq!(seen, 100);
+    }
+
+    #[test]
+    fn find_mut_by_boundary() {
+        let mut ks: KeyState<u32> = KeyState::default();
+        ks.wins.push_back(WindowSet::new(1, 0, 2));
+        ks.wins.push_back(WindowSet::new(1, 10, 2));
+        assert!(ks.find_mut(10).is_some());
+        assert!(ks.find_mut(5).is_none());
+        assert_eq!(ks.front_expiry(30), Some(30));
+    }
+
+    #[test]
+    fn concurrent_distinct_keys() {
+        let st: Arc<SharedState<u64>> = SharedState::new(16);
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                let st = st.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        let k = t * 1000 + i;
+                        st.with_key(k, |ks| {
+                            ks.wins.push_back(WindowSet::new(k, 0, 1));
+                            ks.wins[0].states[0] += 1;
+                            ((), true)
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(st.len(), 4000);
+    }
+}

@@ -1,0 +1,88 @@
+//! PJRT load-and-execute: HLO text → compiled executable → run.
+//!
+//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (64-bit-id protos from jax ≥ 0.5
+//! are rejected by xla_extension 0.5.1; the text parser reassigns ids).
+//!
+//! The underlying xla types hold raw pointers and are not `Send`; see
+//! [`crate::runtime::offload`] for the thread-confined usage pattern.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU runtime: owns the client and the executables it compiled.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module.
+pub struct LoadedExec {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO text file produced by `make artifacts`.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<LoadedExec> {
+        let path = path.as_ref();
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "exec".into());
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(LoadedExec { name, exe })
+    }
+
+    /// Load `<name>.hlo.txt` from an artifacts directory.
+    pub fn load_artifact(&self, dir: &Path, name: &str) -> Result<LoadedExec> {
+        self.load_hlo_text(dir.join(format!("{name}.hlo.txt")))
+    }
+}
+
+impl LoadedExec {
+    /// Execute with the given input literals; returns the flattened tuple
+    /// of result literals (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let results = self.exe.execute::<xla::Literal>(args).context("execute")?;
+        let lit = results[0][0].to_literal_sync().context("fetch result")?;
+        lit.to_tuple().context("untuple result")
+    }
+}
+
+/// Locate the artifacts directory: $STRETCH_ARTIFACTS or ./artifacts
+/// relative to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("STRETCH_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // tests/benches run with CWD = workspace root
+    let cand = PathBuf::from("artifacts");
+    if cand.exists() {
+        return cand;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Whether the AOT artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}

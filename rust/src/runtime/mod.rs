@@ -1,0 +1,9 @@
+//! The PJRT runtime bridge: load AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and execute
+//! them from the rust hot path. Python never runs at request time.
+
+pub mod executable;
+pub mod offload;
+
+pub use executable::{artifacts_available, artifacts_dir, LoadedExec, PjrtRuntime};
+pub use offload::{with_thread_kernel, JoinKernel, BATCH, WINDOWS};

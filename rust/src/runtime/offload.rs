@@ -1,0 +1,158 @@
+//! Batched join-predicate offload: the L3 ↔ L1/L2 bridge.
+//!
+//! [`JoinKernel`] wraps the AOT-compiled band-join executables
+//! (`artifacts/band_join_b{B}_w{W}.hlo.txt`): a probe batch is evaluated
+//! against a stored-window tile in one PJRT call, returning the match
+//! mask + per-probe counts computed by the Pallas kernel.
+//!
+//! xla handles are not `Send`, so each thread lazily builds its own
+//! kernel instance ([`with_thread_kernel`]); the artifacts are compiled
+//! once per thread at first use — never on the per-tuple path until warm.
+
+use crate::runtime::executable::{artifacts_dir, LoadedExec, PjrtRuntime};
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+
+/// Probe batch size baked into the artifacts (see python/compile/model.py).
+pub const BATCH: usize = 16;
+/// Window tile variants baked into the artifacts, ascending.
+pub const WINDOWS: [usize; 3] = [512, 2048, 8192];
+
+/// The compiled band-join predicate variants.
+pub struct JoinKernel {
+    rt: PjrtRuntime,
+    variants: Vec<(usize, LoadedExec)>, // (window size, exec)
+    /// Reused padding buffers.
+    px: Vec<f32>,
+    py: Vec<f32>,
+    wa: Vec<f32>,
+    wb: Vec<f32>,
+}
+
+impl JoinKernel {
+    /// Load every band-join variant from the artifacts directory.
+    pub fn load() -> Result<Self> {
+        let rt = PjrtRuntime::cpu()?;
+        let dir = artifacts_dir();
+        let mut variants = Vec::new();
+        for w in WINDOWS {
+            let exec = rt
+                .load_artifact(&dir, &format!("band_join_b{BATCH}_w{w}"))
+                .with_context(|| format!("band_join variant w={w} (run `make artifacts`)"))?;
+            variants.push((w, exec));
+        }
+        Ok(JoinKernel {
+            rt,
+            variants,
+            px: vec![f32::INFINITY; BATCH],
+            py: vec![f32::INFINITY; BATCH],
+            wa: Vec::new(),
+            wb: Vec::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    /// Evaluate up to [`BATCH`] probes against a window of (a, b) columns.
+    ///
+    /// Returns the row-major mask (`probes.len() × window.len()`), probe-
+    /// major. Window slots beyond `wa.len()` are padded with +inf (no
+    /// match) inside the call; windows larger than the largest variant
+    /// are evaluated in chunks.
+    pub fn eval_mask(
+        &mut self,
+        px: &[f32],
+        py: &[f32],
+        wa: &[f32],
+        wb: &[f32],
+        mask_out: &mut Vec<u8>,
+    ) -> Result<()> {
+        assert_eq!(px.len(), py.len());
+        assert!(px.len() <= BATCH, "probe batch larger than compiled BATCH");
+        assert_eq!(wa.len(), wb.len());
+        let b = px.len();
+        let w = wa.len();
+        mask_out.clear();
+        mask_out.resize(b * w, 0);
+        // pad probes with +inf (match nothing)
+        self.px.iter_mut().for_each(|v| *v = f32::INFINITY);
+        self.py.iter_mut().for_each(|v| *v = f32::INFINITY);
+        self.px[..b].copy_from_slice(px);
+        self.py[..b].copy_from_slice(py);
+
+        let mut off = 0usize;
+        while off < w {
+            let remaining = w - off;
+            // smallest variant covering the remainder (or the largest)
+            let (vw, _) = *self
+                .variants
+                .iter()
+                .find(|(vw, _)| *vw >= remaining)
+                .unwrap_or(self.variants.last().unwrap());
+            let chunk = remaining.min(vw);
+            self.wa.clear();
+            self.wa.extend_from_slice(&wa[off..off + chunk]);
+            self.wa.resize(vw, f32::INFINITY);
+            self.wb.clear();
+            self.wb.extend_from_slice(&wb[off..off + chunk]);
+            self.wb.resize(vw, f32::INFINITY);
+            let exec = &self.variants.iter().find(|(x, _)| *x == vw).unwrap().1;
+            let args = [
+                xla::Literal::vec1(&self.px),
+                xla::Literal::vec1(&self.py),
+                xla::Literal::vec1(&self.wa),
+                xla::Literal::vec1(&self.wb),
+            ];
+            let outs = exec.run(&args)?;
+            // outs[0]: int8 mask (BATCH, vw); outs[1]: int32 counts (BATCH,)
+            let flat: Vec<i8> = outs[0].to_vec().context("mask to_vec")?;
+            for p in 0..b {
+                let row = &flat[p * vw..p * vw + chunk];
+                let dst = &mut mask_out[p * w + off..p * w + off + chunk];
+                for (d, s) in dst.iter_mut().zip(row) {
+                    *d = *s as u8;
+                }
+            }
+            off += chunk;
+        }
+        Ok(())
+    }
+
+    /// Single-probe convenience: matching indices into the window.
+    pub fn probe_indices(
+        &mut self,
+        px: f32,
+        py: f32,
+        wa: &[f32],
+        wb: &[f32],
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        let mut mask = Vec::new();
+        self.eval_mask(&[px], &[py], wa, wb, &mut mask)?;
+        out.clear();
+        for (i, &m) in mask.iter().enumerate() {
+            if m != 0 {
+                out.push(i as u32);
+            }
+        }
+        Ok(())
+    }
+}
+
+thread_local! {
+    static THREAD_KERNEL: RefCell<Option<JoinKernel>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with this thread's lazily-constructed [`JoinKernel`].
+/// Returns `Err` if the artifacts are missing or compilation fails.
+pub fn with_thread_kernel<R>(f: impl FnOnce(&mut JoinKernel) -> R) -> Result<R> {
+    THREAD_KERNEL.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(JoinKernel::load()?);
+        }
+        Ok(f(slot.as_mut().unwrap()))
+    })
+}

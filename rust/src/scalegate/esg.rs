@@ -1,0 +1,715 @@
+//! The Elastic ScaleGate (ESG): the paper's TB object (Table 2, §6).
+//!
+//! Semantics (Definition 6):
+//! * a set of *sources* concurrently `add` timestamp-sorted streams;
+//! * each *ready* tuple (Def. 3: ts ≤ min over active sources of the
+//!   latest per-source timestamp) is delivered **exactly once to every
+//!   reader**, in non-decreasing timestamp order, the **same order for all
+//!   readers**;
+//! * sources and readers can be added/removed at runtime (the elastic
+//!   extension): `add_readers` seeds new readers at the invoking reader's
+//!   position; `add_sources` seeds new sources' clocks at the Lemma-3 safe
+//!   lower bound; `remove_sources` acts as the paper's *flush* tuple
+//!   (the removed source stops holding back readiness, its queued tuples
+//!   still drain in order); `remove_readers` drops reader positions.
+//!
+//! Implementation: per-source SPSC pending queues feed a shared
+//! append-only [`Log`] through a cooperative merge step — whoever calls
+//! `add`/`get` and wins the `try_lock` merges; readers consume the
+//! published log prefix wait-free through per-slot atomic cursors.
+//! This realizes the same ready/ordering semantics as the original
+//! skip-list ScaleGate (handles = (queue tail, last_ts) per source,
+//! reader handles = cursors), trading the paper's lock-free insertion for
+//! a short critical section that our §Perf pass shows is not the
+//! bottleneck at container scale.
+
+use crate::scalegate::log::{Log, SegCache};
+use crate::time::{EventTime, TIME_MIN};
+use crate::util::spsc::{self, Consumer, Producer, PushError};
+use crate::util::Backoff;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Anything that can flow through a gate: must expose its event time.
+pub trait GateEntry: Clone + Send + Sync + 'static {
+    fn ts(&self) -> EventTime;
+}
+
+impl<P: Clone + Send + Sync + 'static> GateEntry for crate::tuple::Tuple<P> {
+    #[inline]
+    fn ts(&self) -> EventTime {
+        self.ts
+    }
+}
+
+/// Gate construction parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct EsgConfig {
+    /// Max sources ever attachable (slots are pre-allocated).
+    pub max_sources: usize,
+    /// Max readers ever attachable.
+    pub max_readers: usize,
+    /// Flow-control bound: max published-but-unconsumed entries
+    /// (§8: "putting a bound on ESG's size").
+    pub capacity: usize,
+    /// Per-source pending-queue capacity.
+    pub source_queue: usize,
+}
+
+impl Default for EsgConfig {
+    fn default() -> Self {
+        EsgConfig { max_sources: 8, max_readers: 8, capacity: 1 << 16, source_queue: 1 << 12 }
+    }
+}
+
+struct SourceSlot {
+    active: AtomicBool,
+    /// Latest timestamp added by this source (the source "handle clock").
+    last_ts: AtomicI64,
+}
+
+struct ReaderSlot {
+    active: AtomicBool,
+    /// Next log index this reader will consume.
+    cursor: AtomicU64,
+}
+
+struct MergeState<T> {
+    queues: Vec<Consumer<T>>,
+    heads: Vec<Option<T>>,
+    /// Entries merged since last GC check.
+    since_gc: usize,
+}
+
+/// Error from `try_add`.
+#[derive(Debug, PartialEq, Eq)]
+pub enum AddError<T> {
+    /// Flow control: gate at capacity — retry (backpressure).
+    Full(T),
+    /// The source slot is not active.
+    Inactive(T),
+}
+
+struct Inner<T: GateEntry> {
+    log: Log<T>,
+    merge: Mutex<MergeState<T>>,
+    sources: Vec<SourceSlot>,
+    readers: Vec<ReaderSlot>,
+    /// Guards membership changes and GC (see module docs for the
+    /// activation/truncation race this prevents).
+    membership: Mutex<()>,
+    capacity: usize,
+}
+
+impl<T: GateEntry> Inner<T> {
+    /// min over active sources of last_ts; +∞ when none (drain mode).
+    fn bound(&self) -> EventTime {
+        let mut b = i64::MAX;
+        let mut any = false;
+        for s in &self.sources {
+            if s.active.load(Ordering::Acquire) {
+                any = true;
+                b = b.min(s.last_ts.load(Ordering::Acquire));
+            }
+        }
+        if any {
+            b
+        } else {
+            i64::MAX
+        }
+    }
+
+    /// Published-but-unconsumed entries w.r.t. the slowest active reader.
+    fn backlog(&self) -> u64 {
+        let ready = self.log.ready();
+        let mut min_cur = u64::MAX;
+        for r in &self.readers {
+            if r.active.load(Ordering::Acquire) {
+                min_cur = min_cur.min(r.cursor.load(Ordering::Acquire));
+            }
+        }
+        if min_cur == u64::MAX {
+            0
+        } else {
+            // `ready` was loaded before the cursor scan; a reader may have
+            // advanced past it in the meantime — saturate, don't underflow.
+            ready.saturating_sub(min_cur)
+        }
+    }
+
+    /// The merge step: emit every ready pending tuple into the log, in
+    /// (ts, source) order. Caller must hold the merge lock.
+    fn do_merge(&self, st: &mut MergeState<T>) {
+        loop {
+            let bound = self.bound();
+            let mut best: Option<(EventTime, usize)> = None;
+            for i in 0..st.queues.len() {
+                if st.heads[i].is_none() {
+                    st.heads[i] = st.queues[i].try_pop();
+                }
+                if let Some(h) = &st.heads[i] {
+                    let ts = h.ts();
+                    if best.map_or(true, |(bts, _)| ts < bts) {
+                        best = Some((ts, i));
+                    }
+                }
+            }
+            match best {
+                Some((ts, i)) if ts <= bound => {
+                    self.log.push(st.heads[i].take().unwrap());
+                    st.since_gc += 1;
+                }
+                _ => break,
+            }
+        }
+        if st.since_gc >= crate::scalegate::log::SEG_SIZE {
+            st.since_gc = 0;
+            self.gc();
+        }
+    }
+
+    /// Reclaim log segments below the slowest active reader.
+    fn gc(&self) {
+        let _m = self.membership.lock().unwrap();
+        let mut min_cur = u64::MAX;
+        for r in &self.readers {
+            if r.active.load(Ordering::Acquire) {
+                min_cur = min_cur.min(r.cursor.load(Ordering::Acquire));
+            }
+        }
+        if min_cur != u64::MAX {
+            // keep one entry of slack: add_readers positions new readers
+            // at (invoker cursor - 1)
+            self.log.truncate_below(min_cur.saturating_sub(1));
+        }
+    }
+
+    fn try_merge(&self) {
+        if let Ok(mut st) = self.merge.try_lock() {
+            self.do_merge(&mut st);
+        }
+    }
+}
+
+/// The shared gate object; clone-able handle factory lives in [`Esg`].
+pub struct Esg<T: GateEntry> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T: GateEntry> Clone for Esg<T> {
+    fn clone(&self) -> Self {
+        Esg { inner: self.inner.clone() }
+    }
+}
+
+/// A source endpoint (owns slot `id`'s producer).
+pub struct SourceHandle<T: GateEntry> {
+    inner: Arc<Inner<T>>,
+    id: usize,
+    producer: Producer<T>,
+}
+
+/// A reader endpoint (owns slot `id`'s cursor + segment cache).
+pub struct ReaderHandle<T: GateEntry> {
+    inner: Arc<Inner<T>>,
+    id: usize,
+    cache: SegCache<T>,
+}
+
+impl<T: GateEntry> Esg<T> {
+    /// Build a gate and hand out all source/reader endpoints. Sources
+    /// `0..active_sources` and readers `0..active_readers` start active;
+    /// the rest are pool slots awaiting `add_sources`/`add_readers`.
+    pub fn new(
+        cfg: EsgConfig,
+        active_sources: usize,
+        active_readers: usize,
+    ) -> (Esg<T>, Vec<SourceHandle<T>>, Vec<ReaderHandle<T>>) {
+        assert!(active_sources <= cfg.max_sources);
+        assert!(active_readers <= cfg.max_readers);
+        let mut producers = Vec::with_capacity(cfg.max_sources);
+        let mut consumers = Vec::with_capacity(cfg.max_sources);
+        for _ in 0..cfg.max_sources {
+            let (p, c) = spsc::spsc::<T>(cfg.source_queue);
+            producers.push(p);
+            consumers.push(c);
+        }
+        let inner = Arc::new(Inner {
+            log: Log::new(),
+            merge: Mutex::new(MergeState {
+                heads: (0..cfg.max_sources).map(|_| None).collect(),
+                queues: consumers,
+                since_gc: 0,
+            }),
+            sources: (0..cfg.max_sources)
+                .map(|i| SourceSlot {
+                    active: AtomicBool::new(i < active_sources),
+                    last_ts: AtomicI64::new(TIME_MIN),
+                })
+                .collect(),
+            readers: (0..cfg.max_readers)
+                .map(|i| ReaderSlot {
+                    active: AtomicBool::new(i < active_readers),
+                    cursor: AtomicU64::new(0),
+                })
+                .collect(),
+            membership: Mutex::new(()),
+            capacity: cfg.capacity,
+        });
+        let src = producers
+            .into_iter()
+            .enumerate()
+            .map(|(id, producer)| SourceHandle { inner: inner.clone(), id, producer })
+            .collect();
+        let rdr = (0..cfg.max_readers)
+            .map(|id| ReaderHandle { inner: inner.clone(), id, cache: SegCache::default() })
+            .collect();
+        (Esg { inner }, src, rdr)
+    }
+
+    /// `addReaders(R, j)` (Table 2): activate readers in `ids`, each
+    /// positioned to retrieve next the tuple reader `j` is *currently*
+    /// processing (its last retrieved tuple). Alg. 4 invokes this while
+    /// processing the reconfiguration-triggering tuple t, and Theorem 3
+    /// requires the newly provisioned instances to process t themselves
+    /// (keys that moved to them would otherwise be updated by no one).
+    /// Returns `false` unless *all* of `ids` were inactive (the "only one
+    /// concurrent caller succeeds" arbitration).
+    pub fn add_readers(&self, ids: &[usize], j: usize) -> bool {
+        let _m = self.inner.membership.lock().unwrap();
+        if ids.iter().any(|&i| self.inner.readers[i].active.load(Ordering::Acquire)) {
+            return false;
+        }
+        let pos = self.inner.readers[j].cursor.load(Ordering::Acquire).saturating_sub(1);
+        for &i in ids {
+            self.inner.readers[i].cursor.store(pos, Ordering::Release);
+            self.inner.readers[i].active.store(true, Ordering::Release);
+        }
+        true
+    }
+
+    /// `removeReaders(R)`: deactivate readers. Returns `false` unless all
+    /// were active.
+    pub fn remove_readers(&self, ids: &[usize]) -> bool {
+        let _m = self.inner.membership.lock().unwrap();
+        if ids.iter().any(|&i| !self.inner.readers[i].active.load(Ordering::Acquire)) {
+            return false;
+        }
+        for &i in ids {
+            self.inner.readers[i].active.store(false, Ordering::Release);
+        }
+        true
+    }
+
+    /// `addSources(S)` with the Lemma-3 watermark floor: new sources are
+    /// guaranteed to only add tuples with ts ≥ `floor_ts` (the timestamp
+    /// of the reconfiguration-triggering tuple). Returns `false` unless
+    /// all of `ids` were inactive.
+    pub fn add_sources(&self, ids: &[usize], floor_ts: EventTime) -> bool {
+        let _m = self.inner.membership.lock().unwrap();
+        if ids.iter().any(|&i| self.inner.sources[i].active.load(Ordering::Acquire)) {
+            return false;
+        }
+        for &i in ids {
+            // the paper's *dummy* tuple: seed the new handle's clock
+            self.inner.sources[i].last_ts.store(floor_ts, Ordering::Release);
+            self.inner.sources[i].active.store(true, Ordering::Release);
+        }
+        true
+    }
+
+    /// `removeSources(S)`: the paper's *flush*: the sources stop gating
+    /// readiness; their pending tuples still drain in order. Returns
+    /// `false` unless all were active.
+    pub fn remove_sources(&self, ids: &[usize]) -> bool {
+        {
+            let _m = self.inner.membership.lock().unwrap();
+            if ids.iter().any(|&i| !self.inner.sources[i].active.load(Ordering::Acquire)) {
+                return false;
+            }
+            for &i in ids {
+                self.inner.sources[i].active.store(false, Ordering::Release);
+            }
+        }
+        // removing a gating source may make tuples ready
+        self.inner.try_merge();
+        true
+    }
+
+    /// Whether a source slot is currently active.
+    pub fn source_active(&self, id: usize) -> bool {
+        self.inner.sources[id].active.load(Ordering::Acquire)
+    }
+
+    /// Whether a reader slot is currently active.
+    pub fn reader_active(&self, id: usize) -> bool {
+        self.inner.readers[id].active.load(Ordering::Acquire)
+    }
+
+    /// Current published-but-unconsumed backlog (flow-control metric).
+    pub fn backlog(&self) -> u64 {
+        self.inner.backlog()
+    }
+
+    /// Total entries ever published (monotone).
+    pub fn published(&self) -> u64 {
+        self.inner.log.ready()
+    }
+
+    /// Force a merge step (used by drivers at end-of-stream).
+    pub fn flush_merge(&self) {
+        let mut st = self.inner.merge.lock().unwrap();
+        self.inner.do_merge(&mut st);
+    }
+}
+
+impl<T: GateEntry> SourceHandle<T> {
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.inner.sources[self.id].active.load(Ordering::Acquire)
+    }
+
+    /// Non-blocking add. Tuples from one source MUST be ts-sorted.
+    pub fn try_add(&mut self, t: T) -> Result<(), AddError<T>> {
+        let slot = &self.inner.sources[self.id];
+        if !slot.active.load(Ordering::Acquire) {
+            return Err(AddError::Inactive(t));
+        }
+        if self.inner.backlog() as usize >= self.inner.capacity {
+            // cooperative merge so the backlog can drain
+            self.inner.try_merge();
+            return Err(AddError::Full(t));
+        }
+        let ts = t.ts();
+        debug_assert!(
+            ts >= slot.last_ts.load(Ordering::Acquire),
+            "source {} stream not ts-sorted: {ts} < {}",
+            self.id,
+            slot.last_ts.load(Ordering::Acquire)
+        );
+        match self.producer.try_push(t) {
+            Ok(()) => {}
+            Err(PushError::Full(t)) | Err(PushError::Closed(t)) => {
+                self.inner.try_merge();
+                return Err(AddError::Full(t));
+            }
+        }
+        // publish the clock *after* the tuple is enqueued (conservative)
+        slot.last_ts.fetch_max(ts, Ordering::AcqRel);
+        self.inner.try_merge();
+        Ok(())
+    }
+
+    /// Blocking add with backoff (generator-side flow control).
+    pub fn add(&mut self, mut t: T) {
+        let mut backoff = Backoff::active();
+        loop {
+            match self.try_add(t) {
+                Ok(()) => return,
+                Err(AddError::Inactive(_)) => panic!("add on inactive source {}", self.id),
+                Err(AddError::Full(back)) => {
+                    t = back;
+                    backoff.snooze();
+                }
+            }
+        }
+    }
+
+    /// The gate this source belongs to (for membership calls from the
+    /// source's own thread, Alg. 4 L19-20).
+    pub fn gate(&self) -> Esg<T> {
+        Esg { inner: self.inner.clone() }
+    }
+
+    /// Advance this source's clock without enqueuing anything — the
+    /// low-level primitive behind heartbeats at gate level.
+    pub fn advance_clock(&mut self, ts: EventTime) {
+        let slot = &self.inner.sources[self.id];
+        slot.last_ts.fetch_max(ts, Ordering::AcqRel);
+        self.inner.try_merge();
+    }
+}
+
+impl<T: GateEntry> ReaderHandle<T> {
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.inner.readers[self.id].active.load(Ordering::Acquire)
+    }
+
+    /// `getNextReadyTuple` (§2.4): next ready tuple not yet consumed by
+    /// this reader; `None` if none is ready (or the reader is inactive —
+    /// pool instances poll and back off, §7).
+    pub fn get(&mut self) -> Option<T> {
+        let slot = &self.inner.readers[self.id];
+        if !slot.active.load(Ordering::Acquire) {
+            return None;
+        }
+        let cur = slot.cursor.load(Ordering::Acquire);
+        if cur < self.inner.log.ready() {
+            let v = self.inner.log.get(cur, &mut self.cache);
+            slot.cursor.store(cur + 1, Ordering::Release);
+            return Some(v);
+        }
+        // nothing published: cooperatively merge, then retry once
+        self.inner.try_merge();
+        let cur = slot.cursor.load(Ordering::Acquire);
+        if cur < self.inner.log.ready() {
+            let v = self.inner.log.get(cur, &mut self.cache);
+            slot.cursor.store(cur + 1, Ordering::Release);
+            return Some(v);
+        }
+        None
+    }
+
+    /// The gate this reader belongs to (for membership calls from the
+    /// reader's own thread, Alg. 4 L19-20).
+    pub fn gate(&self) -> Esg<T> {
+        Esg { inner: self.inner.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuple::Tuple;
+
+    type T = Tuple<u64>;
+
+    fn gate(ns: usize, nr: usize) -> (Esg<T>, Vec<SourceHandle<T>>, Vec<ReaderHandle<T>>) {
+        Esg::new(
+            EsgConfig { max_sources: ns + 2, max_readers: nr + 2, ..Default::default() },
+            ns,
+            nr,
+        )
+    }
+
+    #[test]
+    fn single_source_single_reader() {
+        let (_g, mut src, mut rdr) = gate(1, 1);
+        for ts in [1i64, 2, 5] {
+            src[0].add(Tuple::data(ts, ts as u64));
+        }
+        // all ready (bound = 5): expect 1, 2, 5
+        let out: Vec<i64> = std::iter::from_fn(|| rdr[0].get()).map(|t| t.ts).collect();
+        assert_eq!(out, vec![1, 2, 5]);
+    }
+
+    #[test]
+    fn readiness_gated_by_slowest_source() {
+        let (_g, mut src, mut rdr) = gate(2, 1);
+        src[0].add(Tuple::data(10, 0));
+        src[0].add(Tuple::data(20, 0));
+        // source 1 silent: nothing ready
+        assert!(rdr[0].get().is_none());
+        src[1].add(Tuple::data(15, 1));
+        // bound = min(20, 15) = 15: tuples 10 and 15 ready
+        assert_eq!(rdr[0].get().unwrap().ts, 10);
+        assert_eq!(rdr[0].get().unwrap().ts, 15);
+        assert!(rdr[0].get().is_none());
+    }
+
+    #[test]
+    fn all_readers_see_all_tuples_same_order() {
+        let (_g, mut src, mut rdr) = gate(2, 3);
+        for i in 0..50i64 {
+            src[(i % 2) as usize].add(Tuple::data(i, i as u64));
+        }
+        // bound = min(48, 49) = 48 → 49 entries ready
+        let seqs: Vec<Vec<u64>> = rdr
+            .iter_mut()
+            .map(|r| std::iter::from_fn(|| r.get()).map(|t| t.payload).collect())
+            .collect();
+        assert_eq!(seqs[0].len(), 49);
+        assert_eq!(seqs[0], seqs[1]);
+        assert_eq!(seqs[1], seqs[2]);
+        let mut sorted = seqs[0].clone();
+        sorted.sort();
+        assert_eq!(seqs[0], sorted);
+    }
+
+    #[test]
+    fn output_is_ts_sorted_under_concurrency() {
+        let (_g, src, mut rdr) = gate(4, 1);
+        let n = 20_000i64;
+        let handles: Vec<_> = src
+            .into_iter()
+            .take(4)
+            .map(|mut s| {
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::Rng::new(s.id() as u64 + 1);
+                    let mut ts = 0i64;
+                    for _ in 0..n {
+                        ts += rng.gen_range(3) as i64;
+                        s.add(Tuple::data(ts, s.id() as u64));
+                    }
+                    s.advance_clock(i64::MAX / 8);
+                })
+            })
+            .collect();
+        let mut last = i64::MIN;
+        let mut count = 0;
+        let mut backoff = Backoff::active();
+        while count < 4 * n {
+            match rdr[0].get() {
+                Some(t) => {
+                    assert!(t.ts >= last, "ts regressed: {} < {last}", t.ts);
+                    last = t.ts;
+                    count += 1;
+                    backoff.reset();
+                }
+                None => backoff.snooze(),
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn add_readers_positions_at_invokers_current_tuple() {
+        let (g, mut src, mut rdr) = gate(1, 1);
+        for ts in 0..10i64 {
+            src[0].add(Tuple::data(ts, ts as u64));
+        }
+        // reader 0 consumes 5 (last retrieved: ts=4, "currently processing")
+        for _ in 0..5 {
+            rdr[0].get().unwrap();
+        }
+        assert!(g.add_readers(&[1], 0));
+        // reader 1 must re-receive the tuple reader 0 is processing (ts=4):
+        // Theorem 3 — keys moved to the new instance during t must have t
+        // processed by the new instance.
+        assert_eq!(rdr[1].get().unwrap().ts, 4);
+        assert_eq!(rdr[1].get().unwrap().ts, 5);
+        assert_eq!(rdr[0].get().unwrap().ts, 5);
+    }
+
+    #[test]
+    fn add_readers_arbitration() {
+        let (g, _src, _rdr) = gate(1, 1);
+        assert!(g.add_readers(&[1], 0));
+        // second activation of same reader fails
+        assert!(!g.add_readers(&[1], 0));
+        assert!(g.remove_readers(&[1]));
+        assert!(!g.remove_readers(&[1]));
+    }
+
+    #[test]
+    fn add_sources_floor_allows_progress() {
+        let (g, mut src, mut rdr) = gate(1, 1);
+        src[0].add(Tuple::data(100, 0));
+        // activate source 1 with floor 100 (Lemma 3 bound)
+        assert!(g.add_sources(&[1], 100));
+        // bound = min(100, 100) = 100 → tuple ready without source 1 adding
+        assert_eq!(rdr[0].get().unwrap().ts, 100);
+        // source 1 may now add from ts >= 100
+        src[1].add(Tuple::data(101, 1));
+        src[0].add(Tuple::data(102, 0));
+        assert_eq!(rdr[0].get().unwrap().ts, 101);
+    }
+
+    #[test]
+    fn remove_sources_unblocks_readiness() {
+        let (g, mut src, mut rdr) = gate(2, 1);
+        src[0].add(Tuple::data(10, 0));
+        assert!(rdr[0].get().is_none()); // source 1 gating
+        assert!(g.remove_sources(&[1]));
+        // flush semantics: source 1 no longer gates
+        assert_eq!(rdr[0].get().unwrap().ts, 10);
+    }
+
+    #[test]
+    fn removed_source_pending_still_drains() {
+        let (g, mut src, mut rdr) = gate(2, 1);
+        src[0].add(Tuple::data(5, 0));
+        src[1].add(Tuple::data(3, 1));
+        assert!(g.remove_sources(&[1])); // its queued ts=3 must still come out first
+        let a = rdr[0].get().unwrap();
+        let b = rdr[0].get().unwrap();
+        assert_eq!((a.ts, b.ts), (3, 5));
+    }
+
+    #[test]
+    fn inactive_reader_gets_none() {
+        let (_g, mut src, mut rdr) = gate(1, 1);
+        src[0].add(Tuple::data(1, 0));
+        src[0].add(Tuple::data(2, 0));
+        assert!(rdr[1].get().is_none()); // slot 1 inactive (pool)
+        assert_eq!(rdr[0].get().unwrap().ts, 1);
+    }
+
+    #[test]
+    fn flow_control_bounds_backlog() {
+        let (g, mut src, _rdr) = gate(1, 1);
+        let cfg_cap = 64;
+        // rebuild with small capacity
+        let (g2, mut src2, _rdr2): (Esg<T>, _, Vec<ReaderHandle<T>>) = Esg::new(
+            EsgConfig { max_sources: 1, max_readers: 1, capacity: cfg_cap, source_queue: 8192 },
+            1,
+            1,
+        );
+        drop((g, src.pop()));
+        let mut rejected = false;
+        for ts in 0..10_000i64 {
+            if let Err(AddError::Full(_)) = src2[0].try_add(Tuple::data(ts, 0)) {
+                rejected = true;
+                break;
+            }
+        }
+        assert!(rejected, "flow control never kicked in");
+        assert!(g2.backlog() as usize <= cfg_cap + 1);
+    }
+
+    #[test]
+    fn heartbeat_clock_advance() {
+        let (_g, mut src, mut rdr) = gate(2, 1);
+        src[0].add(Tuple::data(10, 0));
+        assert!(rdr[0].get().is_none());
+        // source 1 has no data but advances its clock (heartbeat)
+        src[1].advance_clock(50);
+        assert_eq!(rdr[0].get().unwrap().ts, 10);
+    }
+
+    #[test]
+    fn exactly_once_per_reader_under_concurrency() {
+        let (_g, mut src, rdr) = gate(1, 3);
+        let n = 30_000i64;
+        let producer = std::thread::spawn(move || {
+            for ts in 0..n {
+                src[0].add(Tuple::data(ts, ts as u64));
+            }
+            src[0].advance_clock(i64::MAX / 8);
+        });
+        let readers: Vec<_> = rdr
+            .into_iter()
+            .take(3)
+            .map(|mut r| {
+                std::thread::spawn(move || {
+                    let mut got = Vec::with_capacity(n as usize);
+                    let mut backoff = Backoff::active();
+                    while got.len() < n as usize {
+                        match r.get() {
+                            Some(t) => {
+                                got.push(t.payload);
+                                backoff.reset();
+                            }
+                            None => backoff.snooze(),
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        producer.join().unwrap();
+        for h in readers {
+            let got = h.join().unwrap();
+            assert_eq!(got, (0..n as u64).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! The merged-tuple log backing a ScaleGate.
+//!
+//! An append-only, segmented log with a single writer at a time (whoever
+//! holds the gate's merge lock) and wait-free readers over the published
+//! prefix: entries at indices `< ready()` are immutable and safe to read
+//! concurrently. Segments below the minimum reader cursor are reclaimed
+//! (`truncate_below`), keeping memory proportional to the reader lag bound
+//! enforced by flow control.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// log2 of segment size.
+const SEG_SHIFT: u32 = 10;
+/// Entries per segment.
+pub const SEG_SIZE: usize = 1 << SEG_SHIFT;
+
+struct Segment<T> {
+    slots: Box<[UnsafeCell<Option<T>>]>,
+}
+
+unsafe impl<T: Send + Sync> Sync for Segment<T> {}
+unsafe impl<T: Send + Sync> Send for Segment<T> {}
+
+impl<T> Segment<T> {
+    fn new() -> Arc<Self> {
+        Arc::new(Segment {
+            slots: (0..SEG_SIZE).map(|_| UnsafeCell::new(None)).collect(),
+        })
+    }
+}
+
+struct Segments<T> {
+    /// Global index of the first entry of `segs[0]`.
+    base: u64,
+    segs: Vec<Arc<Segment<T>>>,
+}
+
+/// The shared log.
+pub struct Log<T> {
+    segments: RwLock<Segments<T>>,
+    /// Number of published entries; indices `< ready` are readable.
+    ready: AtomicU64,
+}
+
+/// A reader-side cache of one segment, avoiding the segment-table lock on
+/// every read.
+pub struct SegCache<T> {
+    base: u64,
+    seg: Option<Arc<Segment<T>>>,
+}
+
+impl<T> Default for SegCache<T> {
+    fn default() -> Self {
+        SegCache { base: u64::MAX, seg: None }
+    }
+}
+
+impl<T: Clone + Send + Sync> Log<T> {
+    pub fn new() -> Self {
+        Log {
+            segments: RwLock::new(Segments { base: 0, segs: vec![Segment::new()] }),
+            ready: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of published entries.
+    #[inline]
+    pub fn ready(&self) -> u64 {
+        self.ready.load(Ordering::Acquire)
+    }
+
+    /// Append one entry and publish it. MUST be called by at most one
+    /// thread at a time (the merge-lock holder).
+    pub fn push(&self, v: T) {
+        let idx = self.ready.load(Ordering::Relaxed);
+        let seg_no = idx >> SEG_SHIFT;
+        let off = (idx & (SEG_SIZE as u64 - 1)) as usize;
+        {
+            let guard = self.segments.read().unwrap();
+            let first_seg_no = guard.base >> SEG_SHIFT;
+            let local = (seg_no - first_seg_no) as usize;
+            if local < guard.segs.len() {
+                let seg = &guard.segs[local];
+                unsafe { *seg.slots[off].get() = Some(v) };
+                drop(guard);
+                self.ready.store(idx + 1, Ordering::Release);
+                return;
+            }
+        }
+        // Need a new segment.
+        {
+            let mut guard = self.segments.write().unwrap();
+            let first_seg_no = guard.base >> SEG_SHIFT;
+            while ((seg_no - first_seg_no) as usize) >= guard.segs.len() {
+                guard.segs.push(Segment::new());
+            }
+            let local = (seg_no - first_seg_no) as usize;
+            let seg = &guard.segs[local];
+            unsafe { *seg.slots[off].get() = Some(v) };
+        }
+        self.ready.store(idx + 1, Ordering::Release);
+    }
+
+    /// Read entry `idx` (must be `< ready()`), using and refreshing the
+    /// caller's segment cache. Clones the entry.
+    pub fn get(&self, idx: u64, cache: &mut SegCache<T>) -> T {
+        debug_assert!(idx < self.ready());
+        let hit = cache.seg.is_some()
+            && idx >= cache.base
+            && idx < cache.base + SEG_SIZE as u64;
+        if !hit {
+            let guard = self.segments.read().unwrap();
+            let first_seg_no = guard.base >> SEG_SHIFT;
+            let seg_no = idx >> SEG_SHIFT;
+            assert!(
+                seg_no >= first_seg_no,
+                "read below truncation point: idx={idx} base={}",
+                guard.base
+            );
+            let local = (seg_no - first_seg_no) as usize;
+            cache.seg = Some(guard.segs[local].clone());
+            cache.base = seg_no << SEG_SHIFT;
+        }
+        let seg = cache.seg.as_ref().unwrap();
+        let off = (idx - cache.base) as usize;
+        unsafe { (*seg.slots[off].get()).as_ref().expect("published slot empty").clone() }
+    }
+
+    /// Drop whole segments strictly below `min_cursor`. Safe because
+    /// readers hold `Arc`s to segments they are still traversing.
+    pub fn truncate_below(&self, min_cursor: u64) {
+        let mut guard = self.segments.write().unwrap();
+        let first_seg_no = guard.base >> SEG_SHIFT;
+        let keep_seg_no = min_cursor >> SEG_SHIFT;
+        let drop_n = (keep_seg_no.saturating_sub(first_seg_no)) as usize;
+        // never drop the segment currently being written
+        let max_droppable = guard.segs.len().saturating_sub(1);
+        let drop_n = drop_n.min(max_droppable);
+        if drop_n > 0 {
+            guard.segs.drain(..drop_n);
+            guard.base += (drop_n * SEG_SIZE) as u64;
+        }
+    }
+
+    /// Number of retained segments (for tests / memory accounting).
+    pub fn segment_count(&self) -> usize {
+        self.segments.read().unwrap().segs.len()
+    }
+}
+
+impl<T: Clone + Send + Sync> Default for Log<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_get_roundtrip() {
+        let log: Log<u64> = Log::new();
+        let mut cache = SegCache::default();
+        for i in 0..5000u64 {
+            log.push(i * 3);
+        }
+        assert_eq!(log.ready(), 5000);
+        for i in 0..5000u64 {
+            assert_eq!(log.get(i, &mut cache), i * 3);
+        }
+    }
+
+    #[test]
+    fn crosses_segments() {
+        let log: Log<u64> = Log::new();
+        let n = (SEG_SIZE * 3 + 7) as u64;
+        for i in 0..n {
+            log.push(i);
+        }
+        assert!(log.segment_count() >= 3);
+        let mut cache = SegCache::default();
+        // random access pattern across segments
+        for i in [0u64, n - 1, SEG_SIZE as u64, 1, n / 2] {
+            assert_eq!(log.get(i, &mut cache), i);
+        }
+    }
+
+    #[test]
+    fn truncation_reclaims_segments() {
+        let log: Log<u64> = Log::new();
+        let n = (SEG_SIZE * 8) as u64;
+        for i in 0..n {
+            log.push(i);
+        }
+        let before = log.segment_count();
+        log.truncate_below(SEG_SIZE as u64 * 6);
+        assert!(log.segment_count() < before);
+        // entries above the cut still readable
+        let mut cache = SegCache::default();
+        assert_eq!(log.get(SEG_SIZE as u64 * 6, &mut cache), SEG_SIZE as u64 * 6);
+        assert_eq!(log.get(n - 1, &mut cache), n - 1);
+    }
+
+    #[test]
+    fn never_drops_active_segment() {
+        let log: Log<u64> = Log::new();
+        for i in 0..10u64 {
+            log.push(i);
+        }
+        log.truncate_below(u64::MAX);
+        assert_eq!(log.segment_count(), 1);
+        // still writable
+        log.push(10);
+        assert_eq!(log.ready(), 11);
+    }
+
+    #[test]
+    fn concurrent_readers_see_published_prefix() {
+        let log = std::sync::Arc::new(Log::<u64>::new());
+        let writer = {
+            let log = log.clone();
+            std::thread::spawn(move || {
+                for i in 0..100_000u64 {
+                    log.push(i);
+                }
+            })
+        };
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let log = log.clone();
+                std::thread::spawn(move || {
+                    let mut cache = SegCache::default();
+                    let mut next = 0u64;
+                    while next < 100_000 {
+                        let r = log.ready();
+                        while next < r {
+                            assert_eq!(log.get(next, &mut cache), next);
+                            next += 1;
+                        }
+                        std::hint::spin_loop();
+                    }
+                })
+            })
+            .collect();
+        writer.join().unwrap();
+        for r in readers {
+            r.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! ScaleGate and Elastic ScaleGate — the paper's shared Tuple Buffer (TB).
+//!
+//! * [`esg::Esg`] — the elastic gate (Table 2's full API);
+//! * a plain ScaleGate (§2.4) is an `Esg` whose membership never changes —
+//!   use [`scale_gate`] for that.
+
+pub mod esg;
+pub mod log;
+
+pub use esg::{AddError, Esg, EsgConfig, GateEntry, ReaderHandle, SourceHandle};
+
+/// Construct a fixed-membership ScaleGate (§2.4): `sources` sources,
+/// `readers` readers, no spare slots.
+pub fn scale_gate<T: GateEntry>(
+    sources: usize,
+    readers: usize,
+    capacity: usize,
+) -> (Esg<T>, Vec<SourceHandle<T>>, Vec<ReaderHandle<T>>) {
+    Esg::new(
+        EsgConfig {
+            max_sources: sources,
+            max_readers: readers,
+            capacity,
+            source_queue: (capacity / sources.max(1)).clamp(64, 1 << 14),
+        },
+        sources,
+        readers,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuple::Tuple;
+
+    #[test]
+    fn scale_gate_fixed_membership() {
+        let (_g, mut src, mut rdr) = scale_gate::<Tuple<u32>>(2, 2, 1024);
+        assert_eq!(src.len(), 2);
+        assert_eq!(rdr.len(), 2);
+        src[0].add(Tuple::data(1, 0));
+        src[1].add(Tuple::data(2, 0));
+        assert_eq!(rdr[0].get().unwrap().ts, 1);
+        assert_eq!(rdr[1].get().unwrap().ts, 1);
+    }
+}

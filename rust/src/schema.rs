@@ -1,0 +1,267 @@
+//! Schemas and dynamically-typed rows (the paper's parameter S, §2.1).
+//!
+//! Hot-path workloads use compact static payload structs; the schema layer
+//! exists for the user-facing API (config-driven queries, the quickstart
+//! example) and for egress formatting. A `Row` is validated against its
+//! `Schema` at operator boundaries in debug builds.
+
+use std::fmt;
+use std::sync::Arc;
+
+/// Field types supported by the dynamic layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FieldType {
+    Int,
+    Float,
+    Str,
+    Bool,
+}
+
+/// A dynamically-typed value (a φ[ℓ] sub-attribute).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(Arc<str>),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn type_of(&self) -> FieldType {
+        match self {
+            Value::Int(_) => FieldType::Int,
+            Value::Float(_) => FieldType::Float,
+            Value::Str(_) => FieldType::Str,
+            Value::Bool(_) => FieldType::Bool,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int(v)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Float(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(Arc::from(v))
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+/// A named, ordered set of fields: the tuple schema S.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schema {
+    fields: Arc<Vec<(String, FieldType)>>,
+}
+
+impl Schema {
+    pub fn new(fields: Vec<(&str, FieldType)>) -> Self {
+        Schema {
+            fields: Arc::new(
+                fields.into_iter().map(|(n, t)| (n.to_string(), t)).collect(),
+            ),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    pub fn field(&self, i: usize) -> Option<(&str, FieldType)> {
+        self.fields.get(i).map(|(n, t)| (n.as_str(), *t))
+    }
+
+    /// Index of a field by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.fields.iter().position(|(n, _)| n == name)
+    }
+
+    /// Validate a row against this schema.
+    pub fn validate(&self, row: &Row) -> Result<(), SchemaError> {
+        if row.values.len() != self.fields.len() {
+            return Err(SchemaError::Arity {
+                expected: self.fields.len(),
+                got: row.values.len(),
+            });
+        }
+        for (i, ((name, ft), v)) in self.fields.iter().zip(row.values.iter()).enumerate() {
+            if v.type_of() != *ft {
+                return Err(SchemaError::Type {
+                    field: name.clone(),
+                    index: i,
+                    expected: *ft,
+                    got: v.type_of(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Concatenate two schemas (used by joins whose S_O is the
+    /// concatenation of the two input schemas, App. D).
+    pub fn concat(&self, other: &Schema, l_prefix: &str, r_prefix: &str) -> Schema {
+        let mut fields: Vec<(String, FieldType)> = Vec::new();
+        for (n, t) in self.fields.iter() {
+            fields.push((format!("{l_prefix}{n}"), *t));
+        }
+        for (n, t) in other.fields.iter() {
+            fields.push((format!("{r_prefix}{n}"), *t));
+        }
+        Schema { fields: Arc::new(fields) }
+    }
+}
+
+/// Schema validation errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SchemaError {
+    #[error("arity mismatch: schema has {expected} fields, row has {got}")]
+    Arity { expected: usize, got: usize },
+    #[error("type mismatch at field `{field}` (index {index}): expected {expected:?}, got {got:?}")]
+    Type { field: String, index: usize, expected: FieldType, got: FieldType },
+}
+
+/// A dynamically-typed payload: the φ vector.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Row {
+    pub values: Vec<Value>,
+}
+
+impl Row {
+    pub fn new(values: Vec<Value>) -> Self {
+        Row { values }
+    }
+    /// φ[ℓ] with the paper's 1-based indexing.
+    pub fn phi(&self, l: usize) -> &Value {
+        &self.values[l - 1]
+    }
+    pub fn get(&self, i: usize) -> Option<&Value> {
+        self.values.get(i)
+    }
+}
+
+impl fmt::Display for Row {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, v) in self.values.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Convenience macro for building rows: `row![1i64, 2.5, "x", true]`.
+#[macro_export]
+macro_rules! row {
+    ($($v:expr),* $(,)?) => {
+        $crate::schema::Row::new(vec![$($crate::schema::Value::from($v)),*])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tweet_schema() -> Schema {
+        Schema::new(vec![("user", FieldType::Str), ("tweet", FieldType::Str)])
+    }
+
+    #[test]
+    fn validate_ok() {
+        let s = tweet_schema();
+        let r = row!["alice", "hello #world"];
+        assert!(s.validate(&r).is_ok());
+    }
+
+    #[test]
+    fn validate_arity_error() {
+        let s = tweet_schema();
+        let r = row!["alice"];
+        assert_eq!(
+            s.validate(&r),
+            Err(SchemaError::Arity { expected: 2, got: 1 })
+        );
+    }
+
+    #[test]
+    fn validate_type_error() {
+        let s = tweet_schema();
+        let r = row!["alice", 42i64];
+        assert!(matches!(s.validate(&r), Err(SchemaError::Type { index: 1, .. })));
+    }
+
+    #[test]
+    fn phi_is_one_based() {
+        let r = row![10i64, 20i64];
+        assert_eq!(r.phi(1), &Value::Int(10));
+        assert_eq!(r.phi(2), &Value::Int(20));
+    }
+
+    #[test]
+    fn concat_prefixes() {
+        let l = Schema::new(vec![("id", FieldType::Str), ("price", FieldType::Int)]);
+        let s = l.concat(&l, "l_", "r_");
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.index_of("l_id"), Some(0));
+        assert_eq!(s.index_of("r_price"), Some(3));
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Float(2.5).as_int(), None);
+        assert_eq!(Value::from("x").as_str(), Some("x"));
+        assert_eq!(Value::from(true).as_bool(), Some(true));
+    }
+}

@@ -1,0 +1,306 @@
+//! Calibrated multicore simulator (the testbed substitution, DESIGN.md §5).
+//!
+//! The paper's scaling figures (7, 8, 10-13) ran on a 2×18-core Xeon;
+//! this container has one core, so parallel *speedup* cannot be measured
+//! directly. The simulator reproduces the scaling *shape* from first
+//! principles using the per-tuple/per-comparison costs measured on this
+//! build ([`calibrate`]): per-architecture bottleneck analysis gives the
+//! capacity curves (Fig. 7/8), and a fluid queueing step gives the
+//! elastic time series (Fig. 10-13) with the real controllers in the loop.
+
+pub mod calibrate;
+
+pub use calibrate::{calibrate, Calibration};
+
+/// The modelled system architectures.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arch {
+    /// STRETCH running ScaleJoin as an `O+` (VSN: shared gate, shared σ).
+    /// `overhead` multiplies the compute share for the generic-operator
+    /// bookkeeping (counters, key iteration) vs the ad-hoc ScaleJoin.
+    StretchJoin { ws_s: f64, overhead: f64 },
+    /// The original ad-hoc ScaleJoin (shared-memory, custom) — Q3 baseline.
+    ScaleJoinSn { ws_s: f64 },
+    /// Optimized single thread (Π is ignored; capacity is one core).
+    OneTJoin { ws_s: f64 },
+    /// STRETCH running the Q2 forwarding Operator 6 (I = 2).
+    StretchForward,
+    /// SN baseline for Operator 6: f_MK = all keys ⇒ the upstream
+    /// duplicates every tuple to every instance over dedicated queues.
+    SnForward,
+}
+
+impl Arch {
+    /// Per-*worker-thread* busy-seconds per second at input rate `r` with
+    /// `pi` instances (the worker bottleneck).
+    pub fn worker_load(&self, c: &Calibration, r: f64, pi: usize) -> f64 {
+        let pi_f = pi as f64;
+        match *self {
+            Arch::StretchJoin { ws_s, overhead } => {
+                // every instance reads every tuple from the shared gate
+                // (contention grows with readers); compute is split 1/Π
+                let gate = r * c.gate_tuple_s * (1.0 + c.contention_alpha * (pi_f - 1.0));
+                let cmp = (r * r * ws_s / 2.0) / c.cmp_per_sec * overhead / pi_f;
+                gate + cmp
+            }
+            Arch::ScaleJoinSn { ws_s } => {
+                // ad-hoc: same sharing pattern, minimal per-tuple overhead
+                let gate = r * c.gate_tuple_s * (1.0 + c.contention_alpha * (pi_f - 1.0));
+                let cmp = (r * r * ws_s / 2.0) / c.cmp_per_sec / pi_f;
+                gate + cmp
+            }
+            Arch::OneTJoin { ws_s } => {
+                r * c.queue_tuple_s + (r * r * ws_s / 2.0) / c.cmp_per_sec
+            }
+            Arch::StretchForward => {
+                // forward: gate read + emit (gate write) per tuple
+                r * c.gate_tuple_s * (1.0 + c.contention_alpha * (pi_f - 1.0)) * 2.0
+            }
+            Arch::SnForward => {
+                // each instance pops its dedicated copy + merge-sorts
+                r * (c.queue_tuple_s + c.sort_tuple_s) * 2.0
+            }
+        }
+    }
+
+    /// Upstream (ingress) busy-seconds per second — SN duplication makes
+    /// this the Fig. 7 bottleneck.
+    pub fn ingress_load(&self, c: &Calibration, r: f64, pi: usize) -> f64 {
+        match *self {
+            Arch::SnForward => r * c.queue_tuple_s * pi as f64, // Π copies
+            Arch::OneTJoin { .. } => 0.0,
+            _ => r * c.gate_tuple_s * 0.5, // one shared add
+        }
+    }
+
+    /// Effective parallel capacity in "core-seconds per second" for Π
+    /// threads on a machine with `c.ht_threshold` physical cores.
+    fn thread_capacity(&self, c: &Calibration, pi: usize) -> f64 {
+        match *self {
+            Arch::OneTJoin { .. } => 1.0,
+            _ => {
+                let phys = pi.min(c.ht_threshold) as f64;
+                let ht = pi.saturating_sub(c.ht_threshold) as f64;
+                phys + ht * c.ht_factor
+            }
+        }
+    }
+
+    /// Whether the system sustains rate `r` with `pi` instances.
+    pub fn sustains(&self, c: &Calibration, r: f64, pi: usize) -> bool {
+        let per_thread_cap = match *self {
+            // 1T: a single full core regardless of Π
+            Arch::OneTJoin { .. } => 1.0,
+            _ => self.thread_capacity(c, pi) / pi.max(1) as f64,
+        };
+        self.worker_load(c, r, pi) <= per_thread_cap && self.ingress_load(c, r, pi) <= 1.0
+    }
+
+    /// Maximum sustainable input rate with Π instances (bisection).
+    pub fn max_rate(&self, c: &Calibration, pi: usize) -> f64 {
+        let mut lo = 0.0f64;
+        let mut hi = 1e9f64;
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if self.sustains(c, mid, pi) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Comparison throughput (c/s) at input rate `r` (join archs).
+    pub fn cmp_throughput(&self, r: f64) -> f64 {
+        match *self {
+            Arch::StretchJoin { ws_s, .. }
+            | Arch::ScaleJoinSn { ws_s }
+            | Arch::OneTJoin { ws_s } => r * r * ws_s / 2.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Steady-state processing latency estimate (ms) at utilization u:
+    /// an M/M/1-ish delay curve on top of a per-tuple base cost.
+    pub fn base_latency_ms(&self, c: &Calibration, pi: usize) -> f64 {
+        let base = match *self {
+            Arch::OneTJoin { .. } => c.queue_tuple_s,
+            Arch::SnForward => (c.queue_tuple_s + c.sort_tuple_s) * 2.0,
+            _ => c.gate_tuple_s * (1.0 + c.contention_alpha * (pi as f64 - 1.0)) * 2.0,
+        };
+        // scheduling + batching floor of a few ms (paper: STRETCH < 30 ms,
+        // Flink > 100 ms driven by its buffer timeout, modelled separately)
+        base * 1e3 + 2.0
+    }
+}
+
+/// One step of the fluid queueing simulation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimSample {
+    pub t_s: f64,
+    pub offered_tps: f64,
+    pub served_tps: f64,
+    pub backlog: f64,
+    pub latency_ms: f64,
+    pub utilization: f64,
+    pub threads: usize,
+    pub cmp_per_s: f64,
+}
+
+/// Fluid simulation of one operator under a driven rate profile.
+pub struct FluidSim {
+    pub arch: Arch,
+    pub cal: Calibration,
+    pub threads: usize,
+    pub backlog: f64,
+    t_s: f64,
+}
+
+impl FluidSim {
+    pub fn new(arch: Arch, cal: Calibration, threads: usize) -> Self {
+        FluidSim { arch, cal, threads, backlog: 0.0, t_s: 0.0 }
+    }
+
+    /// Advance `dt` seconds at offered rate `rate` t/s.
+    pub fn step(&mut self, rate: f64, dt: f64) -> SimSample {
+        let cap_rate = self.arch.max_rate(&self.cal, self.threads);
+        let demand = rate + self.backlog / dt;
+        let served = demand.min(cap_rate);
+        self.backlog = (self.backlog + (rate - served) * dt).max(0.0);
+        let u = if cap_rate > 0.0 { (rate / cap_rate).min(2.0) } else { 2.0 };
+        // latency: base + queueing (backlog drain) + utilization knee
+        let queue_ms = if served > 0.0 { self.backlog / served * 1e3 } else { 0.0 };
+        let knee = if u < 1.0 { 1.0 / (1.0 - 0.9 * u) } else { 10.0 };
+        let latency = self.arch.base_latency_ms(&self.cal, self.threads) * knee + queue_ms;
+        self.t_s += dt;
+        SimSample {
+            t_s: self.t_s,
+            offered_tps: rate,
+            served_tps: served,
+            backlog: self.backlog,
+            latency_ms: latency,
+            utilization: u,
+            threads: self.threads,
+            cmp_per_s: self.arch.cmp_throughput(served),
+        }
+    }
+
+    /// Change the parallelism degree (reconfigurations are instantaneous
+    /// at this time scale — the measured < 40 ms against 1 s steps).
+    pub fn set_threads(&mut self, pi: usize) {
+        self.threads = pi.max(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cal() -> Calibration {
+        // fixed synthetic calibration for deterministic tests
+        Calibration {
+            cmp_per_sec: 50e6,
+            gate_tuple_s: 1e-6,
+            queue_tuple_s: 2e-7,
+            sort_tuple_s: 3e-7,
+            contention_alpha: 0.006,
+            ht_threshold: 36,
+            ht_factor: 0.55,
+        }
+    }
+
+    #[test]
+    fn stretch_join_scales_linearly_then_knees() {
+        let c = cal();
+        let a = Arch::StretchJoin { ws_s: 300.0, overhead: 1.2 };
+        let r1 = a.max_rate(&c, 1);
+        let r4 = a.max_rate(&c, 4);
+        let r16 = a.max_rate(&c, 16);
+        // compute-bound region: R_max ∝ sqrt(Π)
+        assert!((r4 / r1 - 2.0).abs() < 0.2, "r4/r1={}", r4 / r1);
+        assert!((r16 / r4 - 2.0).abs() < 0.3, "r16/r4={}", r16 / r4);
+        // HT knee: going 36 → 72 gains less than sqrt(2)
+        let r36 = a.max_rate(&c, 36);
+        let r72 = a.max_rate(&c, 72);
+        assert!(r72 > r36);
+        assert!(r72 / r36 < 1.4);
+    }
+
+    #[test]
+    fn stretch_matches_scalejoin_with_small_gap() {
+        let c = cal();
+        let s = Arch::StretchJoin { ws_s: 300.0, overhead: 1.2 };
+        let sj = Arch::ScaleJoinSn { ws_s: 300.0 };
+        for pi in [1, 8, 32] {
+            let rs = s.max_rate(&c, pi);
+            let rj = sj.max_rate(&c, pi);
+            assert!(rs <= rj, "generic O+ can't beat the ad-hoc impl");
+            assert!(rs > 0.85 * rj, "Π={pi}: STRETCH should stay close ({rs} vs {rj})");
+        }
+    }
+
+    #[test]
+    fn onet_is_flat_in_pi() {
+        let c = cal();
+        let a = Arch::OneTJoin { ws_s: 300.0 };
+        assert!((a.max_rate(&c, 1) - a.max_rate(&c, 32)).abs() < 1.0);
+    }
+
+    #[test]
+    fn sn_forward_collapses_with_pi() {
+        // Fig. 7: Flink 40k → 2k as Π grows; STRETCH roughly flat
+        let c = cal();
+        let sn = Arch::SnForward;
+        let st = Arch::StretchForward;
+        let sn1 = sn.max_rate(&c, 1);
+        let sn36 = sn.max_rate(&c, 36);
+        let sn72 = sn.max_rate(&c, 72);
+        assert!(sn36 < sn1 / 5.0, "SN must collapse: {sn1} → {sn36}");
+        assert!(sn72 < sn36, "SN decays monotonically");
+        let st2 = st.max_rate(&c, 2);
+        let st36 = st.max_rate(&c, 36);
+        assert!(st36 > st2 * 0.7, "STRETCH stays near-flat: {st2} → {st36}");
+        // the STRETCH/SN ratio grows with Π (who wins at scale). NOTE:
+        // the paper's 3×-50× vs *Flink* also includes Flink's heavier
+        // per-tuple runtime costs; our SN baseline is a lean rust
+        // implementation, so the low-Π gap is smaller (see EXPERIMENTS.md)
+        let r36 = st.max_rate(&c, 36) / sn.max_rate(&c, 36);
+        let r72 = st.max_rate(&c, 72) / sn72;
+        assert!(r36 > 2.5, "Π=36 ratio={r36}");
+        assert!(r72 > 3.5, "Π=72 ratio={r72}");
+        assert!(r72 > r36, "ratio grows with Π");
+    }
+
+    #[test]
+    fn fluid_backlog_grows_beyond_capacity() {
+        let c = cal();
+        let mut sim = FluidSim::new(Arch::StretchJoin { ws_s: 60.0, overhead: 1.2 }, c, 2);
+        let cap = sim.arch.max_rate(&c, 2);
+        // drive at 150% capacity: backlog + latency must grow
+        let s1 = sim.step(cap * 1.5, 1.0);
+        let s5 = (0..4).map(|_| sim.step(cap * 1.5, 1.0)).last().unwrap();
+        assert!(s5.backlog > s1.backlog);
+        assert!(s5.latency_ms > s1.latency_ms);
+        // provisioning more threads drains it
+        sim.set_threads(8);
+        let mut last = s5;
+        for _ in 0..30 {
+            last = sim.step(cap * 1.5, 1.0);
+        }
+        assert!(last.backlog < s5.backlog, "backlog should drain after scaling up");
+    }
+
+    #[test]
+    fn latency_low_under_capacity() {
+        let c = cal();
+        let mut sim = FluidSim::new(Arch::StretchJoin { ws_s: 60.0, overhead: 1.2 }, c, 4);
+        let cap = sim.arch.max_rate(&c, 4);
+        let mut s = SimSample::default();
+        for _ in 0..10 {
+            s = sim.step(cap * 0.5, 1.0);
+        }
+        assert!(s.latency_ms < 30.0, "latency {} should be low", s.latency_ms);
+        assert!((s.served_tps - cap * 0.5).abs() < 1.0);
+    }
+}

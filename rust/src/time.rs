@@ -1,0 +1,188 @@
+//! Event time and wall-clock time (§2.1).
+//!
+//! Event time progresses in SPE-specific discrete δ increments; as in Flink
+//! (and the paper's experiments) δ = 1 ms. `EventTime` is a plain `i64`
+//! millisecond count from an arbitrary epoch. Wall-clock time is only used
+//! for metrics (latency, reconfiguration time), never for semantics.
+
+/// Event time in δ = 1 ms units from an arbitrary epoch.
+pub type EventTime = i64;
+
+/// The smallest event-time increment (δ), in ms. Matches Flink/paper.
+pub const DELTA: EventTime = 1;
+
+/// Sentinel: before any watermark has been observed (§2.3: W initially 0,
+/// we use i64::MIN so event-time 0 workloads behave; algorithms only rely
+/// on monotonicity).
+pub const TIME_MIN: EventTime = i64::MIN / 4;
+
+/// Sentinel: end-of-stream watermark. Strictly greater than any data ts.
+pub const TIME_MAX: EventTime = i64::MAX / 4;
+
+/// Convert seconds to event time units.
+#[inline]
+pub const fn secs(s: i64) -> EventTime {
+    s * 1000
+}
+
+/// Convert minutes to event time units.
+#[inline]
+pub const fn mins(m: i64) -> EventTime {
+    m * 60 * 1000
+}
+
+/// Window geometry helpers shared by every stateful operator (§2.1).
+/// Windows cover `[l*WA, l*WA + WS)` for integer l.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowSpec {
+    /// Window advance (WA), in event-time units. WA <= WS.
+    pub advance: EventTime,
+    /// Window size (WS), in event-time units.
+    pub size: EventTime,
+}
+
+impl WindowSpec {
+    pub fn new(advance: EventTime, size: EventTime) -> Self {
+        assert!(advance > 0, "WA must be positive");
+        assert!(size >= advance, "WS must be >= WA (sliding window: WA < WS)");
+        WindowSpec { advance, size }
+    }
+
+    /// Left boundary of the *earliest* window instance containing `ts`
+    /// (paper's `earliestWinL`). A tuple with timestamp ts falls in windows
+    /// with left boundary in `(ts - WS, ts]` aligned to WA.
+    #[inline]
+    pub fn earliest_win_l(&self, ts: EventTime) -> EventTime {
+        // smallest multiple of WA strictly greater than ts - WS
+        let lo = ts - self.size; // exclusive
+        // ceil((lo+1)/WA)*WA  (for possibly negative values)
+        let q = (lo + 1).div_euclid(self.advance);
+        let r = (lo + 1).rem_euclid(self.advance);
+        if r == 0 {
+            q * self.advance
+        } else {
+            (q + 1) * self.advance
+        }
+    }
+
+    /// Left boundary of the *latest* window instance containing `ts`
+    /// (paper's `latestWinL`): largest multiple of WA that is <= ts.
+    #[inline]
+    pub fn latest_win_l(&self, ts: EventTime) -> EventTime {
+        ts.div_euclid(self.advance) * self.advance
+    }
+
+    /// Number of window instances a tuple falls into when WT = multi.
+    #[inline]
+    pub fn instances_per_tuple(&self, ts: EventTime) -> usize {
+        (((self.latest_win_l(ts) - self.earliest_win_l(ts)) / self.advance) + 1) as usize
+    }
+
+    /// A window starting at `l` is expired w.r.t. watermark `w` iff its
+    /// right boundary (exclusive) is <= w (§2.3).
+    #[inline]
+    pub fn is_expired(&self, l: EventTime, watermark: EventTime) -> bool {
+        l + self.size <= watermark
+    }
+
+    /// Right boundary (exclusive) of a window with left boundary `l`; this
+    /// is the timestamp assigned to output tuples produced from it
+    /// (Observation 1: t_out.ts > t_in.ts for every contributing t_in).
+    #[inline]
+    pub fn right_boundary(&self, l: EventTime) -> EventTime {
+        l + self.size
+    }
+}
+
+/// A stopwatch for metrics (wall-clock only).
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn elapsed_us(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e6
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn earliest_latest_tumbling() {
+        // Tumbling window: WA == WS == 10
+        let w = WindowSpec::new(10, 10);
+        assert_eq!(w.earliest_win_l(0), 0);
+        assert_eq!(w.latest_win_l(0), 0);
+        assert_eq!(w.earliest_win_l(9), 0);
+        assert_eq!(w.latest_win_l(9), 0);
+        assert_eq!(w.earliest_win_l(10), 10);
+        assert_eq!(w.instances_per_tuple(5), 1);
+    }
+
+    #[test]
+    fn earliest_latest_sliding() {
+        // WA=10, WS=30: tuple at ts=25 falls into windows starting at 0,10,20
+        let w = WindowSpec::new(10, 30);
+        assert_eq!(w.earliest_win_l(25), 0);
+        assert_eq!(w.latest_win_l(25), 20);
+        assert_eq!(w.instances_per_tuple(25), 3);
+        // ts=30 falls into 10,20,30
+        assert_eq!(w.earliest_win_l(30), 10);
+        assert_eq!(w.latest_win_l(30), 30);
+    }
+
+    #[test]
+    fn window_membership_is_consistent() {
+        // Brute-force check: for all ts in a range, every window [l, l+WS)
+        // with l in [earliest, latest] aligned to WA contains ts, and the
+        // neighbours outside do not.
+        let w = WindowSpec::new(7, 23);
+        for ts in -100i64..200 {
+            let e = w.earliest_win_l(ts);
+            let l = w.latest_win_l(ts);
+            assert_eq!(e.rem_euclid(w.advance), 0);
+            assert_eq!(l.rem_euclid(w.advance), 0);
+            let mut b = e;
+            while b <= l {
+                assert!(b <= ts && ts < b + w.size, "ts={ts} b={b}");
+                b += w.advance;
+            }
+            // window before earliest must NOT contain ts
+            assert!(ts >= (e - w.advance) + w.size, "ts={ts} e={e}");
+            // window after latest must NOT contain ts
+            assert!(ts < l + w.advance, "ts={ts} l={l}");
+        }
+    }
+
+    #[test]
+    fn expiry() {
+        let w = WindowSpec::new(10, 30);
+        assert!(!w.is_expired(0, 29));
+        assert!(w.is_expired(0, 30));
+        assert!(w.is_expired(0, 31));
+        assert_eq!(w.right_boundary(0), 30);
+    }
+
+    #[test]
+    fn negative_timestamps() {
+        let w = WindowSpec::new(10, 30);
+        assert_eq!(w.latest_win_l(-5), -10);
+        assert_eq!(w.earliest_win_l(-5), -30);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_advance() {
+        WindowSpec::new(0, 10);
+    }
+}

@@ -1,0 +1,263 @@
+//! Tuples, keys, control tuples and the mapping function f_μ (§2, §5, §7).
+//!
+//! A tuple carries metadata (the event-time timestamp τ plus, in STRETCH,
+//! a *kind* discriminating regular data from control/dummy/flush tuples)
+//! and a payload φ. Payloads are a generic parameter `P` so the hot paths
+//! (e.g. the ScaleJoin benchmark's compact numeric tuples) pay no boxing.
+
+use crate::time::EventTime;
+use std::sync::Arc;
+
+/// A key extracted by f_SK / f_MK. Keys are pre-hashed to 64 bits; the
+/// workloads document their key extraction (e.g. interned word ids,
+/// round-robin ScaleJoin slots).
+pub type Key = u64;
+
+/// Index of an operator instance (the j in o_j).
+pub type InstanceId = usize;
+
+/// Monotonically increasing epoch number (§5).
+pub type Epoch = u64;
+
+/// The mapping function f_μ: keys → responsible instance (§2.2).
+///
+/// A reconfiguration installs a new `Mapper` (f_μ*). `HashMod` is the
+/// default key-by used by the paper's operators (`hash(k) % Π`); `Explicit`
+/// supports load-balancing reconfigurations that move individual keys.
+#[derive(Clone, Debug)]
+pub enum Mapper {
+    /// f_μ(k) = mix(k) % n over the instance list.
+    HashMod { instances: Arc<Vec<InstanceId>> },
+    /// Explicit key → instance map with a fallback HashMod for unseen keys.
+    Explicit {
+        map: Arc<std::collections::HashMap<Key, InstanceId>>,
+        fallback: Arc<Vec<InstanceId>>,
+    },
+}
+
+/// 64-bit finalizer (splitmix-style) so that small consecutive keys spread
+/// uniformly over instances.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Mapper {
+    /// Hash-mod mapper over instances `0..n`.
+    pub fn hash_mod(n: usize) -> Self {
+        Mapper::HashMod { instances: Arc::new((0..n).collect()) }
+    }
+
+    /// Hash-mod mapper over an explicit instance set (instances need not be
+    /// contiguous: after decommissioning, ids come from the pool).
+    pub fn over(instances: Vec<InstanceId>) -> Self {
+        Mapper::HashMod { instances: Arc::new(instances) }
+    }
+
+    /// f_μ(k): the instance responsible for key `k`.
+    #[inline]
+    pub fn map(&self, k: Key) -> InstanceId {
+        match self {
+            Mapper::HashMod { instances } => {
+                instances[(mix64(k) % instances.len() as u64) as usize]
+            }
+            Mapper::Explicit { map, fallback } => match map.get(&k) {
+                Some(&i) => i,
+                None => fallback[(mix64(k) % fallback.len() as u64) as usize],
+            },
+        }
+    }
+
+    /// The instance set 𝕆 this mapper routes to.
+    pub fn instances(&self) -> Vec<InstanceId> {
+        match self {
+            Mapper::HashMod { instances } => instances.as_ref().clone(),
+            Mapper::Explicit { map, fallback } => {
+                let mut v: Vec<InstanceId> = fallback.as_ref().clone();
+                v.extend(map.values().copied());
+                v.sort_unstable();
+                v.dedup();
+                v
+            }
+        }
+    }
+
+    /// Parallelism degree Π implied by the mapper.
+    pub fn degree(&self) -> usize {
+        self.instances().len()
+    }
+}
+
+/// Parameters of an elastic reconfiguration delivered through a control
+/// tuple (Alg. 6): the next epoch id e*, the next instance set 𝕆*, and the
+/// next mapping function f_μ*. γ is the control tuple's own timestamp.
+#[derive(Clone, Debug)]
+pub struct ReconfigSpec {
+    pub epoch: Epoch,
+    pub instances: Arc<Vec<InstanceId>>,
+    pub mapper: Mapper,
+}
+
+/// Tuple kind: regular data, or one of STRETCH's special tuples.
+#[derive(Clone, Debug)]
+pub enum Kind {
+    /// A regular data tuple.
+    Data,
+    /// Control tuple carrying reconfiguration parameters (§7, Alg. 5/6).
+    Control(Arc<ReconfigSpec>),
+    /// Heartbeat: advances watermarks when a source's rate drops to zero
+    /// (plays the role of explicit watermarks, §2.3).
+    Heartbeat,
+    /// Flush: emitted on behalf of a removed source (§6) so its previously
+    /// added tuples become ready. Not delivered to readers.
+    Flush,
+    /// Dummy: seeds the handles of a newly added source (§6). Not delivered.
+    Dummy,
+}
+
+impl Kind {
+    #[inline]
+    pub fn is_data(&self) -> bool {
+        matches!(self, Kind::Data)
+    }
+    #[inline]
+    pub fn is_control(&self) -> bool {
+        matches!(self, Kind::Control(_))
+    }
+}
+
+/// A stream tuple: metadata (τ = `ts`, `kind`) + payload φ.
+///
+/// `input` tags which of the I logical input streams the tuple belongs to
+/// (0-based); stateful operators with I > 1 (e.g. joins) maintain one window
+/// instance per input per key (§2.1).
+#[derive(Clone, Debug)]
+pub struct Tuple<P> {
+    pub ts: EventTime,
+    pub kind: Kind,
+    pub input: u8,
+    /// Wall-clock ingestion stamp (µs since engine start), carried through
+    /// operators for the §8 latency metric. 0 when untracked.
+    pub ingest_us: u64,
+    pub payload: P,
+}
+
+impl<P> Tuple<P> {
+    #[inline]
+    pub fn data(ts: EventTime, payload: P) -> Self {
+        Tuple { ts, kind: Kind::Data, input: 0, ingest_us: 0, payload }
+    }
+
+    #[inline]
+    pub fn data_on(ts: EventTime, input: u8, payload: P) -> Self {
+        Tuple { ts, kind: Kind::Data, input, ingest_us: 0, payload }
+    }
+
+    #[inline]
+    pub fn with_ingest(mut self, ingest_us: u64) -> Self {
+        self.ingest_us = ingest_us;
+        self
+    }
+
+    #[inline]
+    pub fn with_input(mut self, input: u8) -> Self {
+        self.input = input;
+        self
+    }
+}
+
+impl<P: Default> Tuple<P> {
+    pub fn control(ts: EventTime, spec: ReconfigSpec) -> Self {
+        Tuple { ts, kind: Kind::Control(Arc::new(spec)), input: 0, ingest_us: 0, payload: P::default() }
+    }
+    pub fn heartbeat(ts: EventTime) -> Self {
+        Tuple { ts, kind: Kind::Heartbeat, input: 0, ingest_us: 0, payload: P::default() }
+    }
+    pub fn flush(ts: EventTime) -> Self {
+        Tuple { ts, kind: Kind::Flush, input: 0, ingest_us: 0, payload: P::default() }
+    }
+    pub fn dummy(ts: EventTime) -> Self {
+        Tuple { ts, kind: Kind::Dummy, input: 0, ingest_us: 0, payload: P::default() }
+    }
+}
+
+/// Marker trait for payloads; blanket-implemented.
+pub trait Payload: Clone + Send + Sync + 'static {}
+impl<T: Clone + Send + Sync + 'static> Payload for T {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_mod_covers_all_instances() {
+        let m = Mapper::hash_mod(7);
+        let mut seen = [false; 7];
+        for k in 0..10_000u64 {
+            seen[m.map(k)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn hash_mod_is_balanced() {
+        let m = Mapper::hash_mod(8);
+        let mut counts = [0u32; 8];
+        let n = 80_000u64;
+        for k in 0..n {
+            counts[m.map(k)] += 1;
+        }
+        let expect = n as f64 / 8.0;
+        for c in counts {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.05, "imbalance {dev}");
+        }
+    }
+
+    #[test]
+    fn mapper_is_deterministic() {
+        let m = Mapper::hash_mod(5);
+        for k in 0..100 {
+            assert_eq!(m.map(k), m.map(k));
+        }
+    }
+
+    #[test]
+    fn over_non_contiguous_instances() {
+        let m = Mapper::over(vec![2, 5, 9]);
+        for k in 0..1000u64 {
+            assert!([2, 5, 9].contains(&m.map(k)));
+        }
+        assert_eq!(m.degree(), 3);
+        assert_eq!(m.instances(), vec![2, 5, 9]);
+    }
+
+    #[test]
+    fn explicit_overrides_fallback() {
+        let mut map = std::collections::HashMap::new();
+        map.insert(42u64, 3usize);
+        let m = Mapper::Explicit { map: Arc::new(map), fallback: Arc::new(vec![0, 1]) };
+        assert_eq!(m.map(42), 3);
+        for k in 0..100u64 {
+            if k != 42 {
+                assert!(m.map(k) <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn control_tuples_flagged() {
+        let spec = ReconfigSpec {
+            epoch: 1,
+            instances: Arc::new(vec![0, 1]),
+            mapper: Mapper::hash_mod(2),
+        };
+        let t: Tuple<()> = Tuple::control(10, spec);
+        assert!(t.kind.is_control());
+        assert!(!t.kind.is_data());
+        let d: Tuple<u32> = Tuple::data(5, 7);
+        assert!(d.kind.is_data());
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared utilities: deterministic PRNG + samplers, backoff, SPSC queues.
+
+pub mod backoff;
+pub mod rng;
+pub mod spsc;
+
+pub use backoff::Backoff;
+pub use rng::{Rng, Zipf};

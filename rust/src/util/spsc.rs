@@ -1,0 +1,273 @@
+//! Bounded SPSC / MPSC queues used by the shared-nothing (SN) baseline.
+//!
+//! §2.2: with SN parallelism each pair of connected instances exchanges
+//! tuples over a *dedicated* queue. The SN baseline engine therefore pays
+//! one enqueue per (tuple, downstream-responsible-instance) pair — the data
+//! duplication overhead of Theorem 1 — whereas the VSN engine shares one
+//! ESG among all instances.
+//!
+//! The queue is a classic ring buffer with cached head/tail indices
+//! (Lamport queue with the producer/consumer caching optimization).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+struct Inner<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    cap: usize,
+    head: AtomicUsize, // next slot to pop
+    tail: AtomicUsize, // next slot to push
+    closed: AtomicBool,
+}
+
+unsafe impl<T: Send> Sync for Inner<T> {}
+unsafe impl<T: Send> Send for Inner<T> {}
+
+/// Producer handle (single producer).
+pub struct Producer<T> {
+    inner: Arc<Inner<T>>,
+    head_cache: usize,
+}
+
+/// Consumer handle (single consumer).
+pub struct Consumer<T> {
+    inner: Arc<Inner<T>>,
+    tail_cache: usize,
+}
+
+/// Error returned when pushing to a full or closed queue.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Queue full: backpressure — caller should retry (flow control).
+    Full(T),
+    /// Consumer dropped / channel closed.
+    Closed(T),
+}
+
+/// Create a bounded SPSC queue with capacity `cap` (rounded up to a power
+/// of two).
+pub fn spsc<T>(cap: usize) -> (Producer<T>, Consumer<T>) {
+    let cap = cap.max(2).next_power_of_two();
+    let buf: Vec<UnsafeCell<MaybeUninit<T>>> =
+        (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+    let inner = Arc::new(Inner {
+        buf: buf.into_boxed_slice(),
+        cap,
+        head: AtomicUsize::new(0),
+        tail: AtomicUsize::new(0),
+        closed: AtomicBool::new(false),
+    });
+    (
+        Producer { inner: inner.clone(), head_cache: 0 },
+        Consumer { inner, tail_cache: 0 },
+    )
+}
+
+impl<T> Producer<T> {
+    /// Attempt to push; `Err(Full)` signals backpressure.
+    pub fn try_push(&mut self, v: T) -> Result<(), PushError<T>> {
+        let inner = &*self.inner;
+        if inner.closed.load(Ordering::Acquire) {
+            return Err(PushError::Closed(v));
+        }
+        let tail = inner.tail.load(Ordering::Relaxed);
+        if tail.wrapping_sub(self.head_cache) >= inner.cap {
+            self.head_cache = inner.head.load(Ordering::Acquire);
+            if tail.wrapping_sub(self.head_cache) >= inner.cap {
+                return Err(PushError::Full(v));
+            }
+        }
+        unsafe {
+            (*inner.buf[tail & (inner.cap - 1)].get()).write(v);
+        }
+        inner.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Blocking push with spinning/yielding (used by generators that must
+    /// respect backpressure). Returns `false` if the queue closed.
+    pub fn push_blocking(&mut self, mut v: T) -> bool {
+        let mut backoff = crate::util::backoff::Backoff::active();
+        loop {
+            match self.try_push(v) {
+                Ok(()) => return true,
+                Err(PushError::Closed(_)) => return false,
+                Err(PushError::Full(back)) => {
+                    v = back;
+                    backoff.snooze();
+                }
+            }
+        }
+    }
+
+    /// Number of elements currently queued (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        let t = self.inner.tail.load(Ordering::Relaxed);
+        let h = self.inner.head.load(Ordering::Relaxed);
+        t.wrapping_sub(h)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.cap
+    }
+
+    /// Close the channel: consumer will drain remaining items then see None.
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::Release);
+    }
+}
+
+impl<T> Consumer<T> {
+    /// Attempt to pop. `None` means currently empty (check `is_closed`).
+    pub fn try_pop(&mut self) -> Option<T> {
+        let inner = &*self.inner;
+        let head = inner.head.load(Ordering::Relaxed);
+        if head == self.tail_cache {
+            self.tail_cache = inner.tail.load(Ordering::Acquire);
+            if head == self.tail_cache {
+                return None;
+            }
+        }
+        let v = unsafe { (*inner.buf[head & (inner.cap - 1)].get()).assume_init_read() };
+        inner.head.store(head.wrapping_add(1), Ordering::Release);
+        Some(v)
+    }
+
+    /// True when producer closed AND the queue is drained.
+    pub fn is_done(&mut self) -> bool {
+        self.inner.closed.load(Ordering::Acquire) && self.try_peek_empty()
+    }
+
+    fn try_peek_empty(&mut self) -> bool {
+        let inner = &*self.inner;
+        let head = inner.head.load(Ordering::Relaxed);
+        self.tail_cache = inner.tail.load(Ordering::Acquire);
+        head == self.tail_cache
+    }
+
+    pub fn len(&self) -> usize {
+        let t = self.inner.tail.load(Ordering::Relaxed);
+        let h = self.inner.head.load(Ordering::Relaxed);
+        t.wrapping_sub(h)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::Release);
+    }
+}
+
+impl<T> Drop for Consumer<T> {
+    fn drop(&mut self) {
+        self.close();
+        // Drain remaining initialized elements so they are dropped.
+        while self.try_pop().is_some() {}
+    }
+}
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let (mut p, mut c) = spsc::<u32>(8);
+        for i in 0..8 {
+            p.try_push(i).unwrap();
+        }
+        assert!(matches!(p.try_push(99), Err(PushError::Full(99))));
+        for i in 0..8 {
+            assert_eq!(c.try_pop(), Some(i));
+        }
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn capacity_rounds_up() {
+        let (p, _c) = spsc::<u8>(5);
+        assert_eq!(p.capacity(), 8);
+    }
+
+    #[test]
+    fn close_signals_consumer() {
+        let (mut p, mut c) = spsc::<u32>(4);
+        p.try_push(1).unwrap();
+        p.close();
+        assert!(!c.is_done()); // still has an element
+        assert_eq!(c.try_pop(), Some(1));
+        assert!(c.is_done());
+    }
+
+    #[test]
+    fn push_after_close_fails() {
+        let (mut p, c) = spsc::<u32>(4);
+        c.close();
+        assert!(matches!(p.try_push(1), Err(PushError::Closed(1))));
+    }
+
+    #[test]
+    fn wraps_around() {
+        let (mut p, mut c) = spsc::<u64>(4);
+        for round in 0..100u64 {
+            for i in 0..3 {
+                p.try_push(round * 3 + i).unwrap();
+            }
+            for i in 0..3 {
+                assert_eq!(c.try_pop(), Some(round * 3 + i));
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_fifo_order() {
+        let (mut p, mut c) = spsc::<u64>(64);
+        let n = 200_000u64;
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                assert!(p.push_blocking(i));
+            }
+        });
+        let mut expected = 0u64;
+        let mut backoff = crate::util::backoff::Backoff::active();
+        while expected < n {
+            match c.try_pop() {
+                Some(v) => {
+                    assert_eq!(v, expected);
+                    expected += 1;
+                    backoff.reset();
+                }
+                None => backoff.snooze(),
+            }
+        }
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn drops_remaining_elements() {
+        // Arc payload lets us observe drops.
+        let marker = Arc::new(());
+        let (mut p, c) = spsc::<Arc<()>>(8);
+        for _ in 0..5 {
+            p.try_push(marker.clone()).unwrap();
+        }
+        assert_eq!(Arc::strong_count(&marker), 6);
+        drop(c);
+        drop(p);
+        assert_eq!(Arc::strong_count(&marker), 1);
+    }
+}

@@ -1,0 +1,262 @@
+//! Watermark tracking (§2.3, Definitions 2 and 3).
+//!
+//! Two mechanisms coexist, exactly as in the paper:
+//!
+//! * **Implicit watermarks** — when an instance's physical input streams are
+//!   timestamp-sorted, tuples are merge-sorted and fed once *ready*
+//!   (Def. 3); the instance watermark then advances to each ready tuple's
+//!   timestamp. The VSN path gets this for free from the ScaleGate; the SN
+//!   baseline uses [`MergeSorter`] per instance.
+//! * **Explicit watermarks** — heartbeat tuples carry timestamps that bound
+//!   future tuples, covering sources whose rate drops to zero.
+
+use crate::time::{EventTime, TIME_MIN};
+use crate::tuple::{Kind, Tuple};
+use std::collections::BinaryHeap;
+
+/// Per-instance watermark state W (Def. 2): the earliest event time any
+/// future tuple processed by this instance can carry.
+#[derive(Clone, Debug)]
+pub struct Watermark {
+    w: EventTime,
+}
+
+impl Default for Watermark {
+    fn default() -> Self {
+        Watermark { w: TIME_MIN }
+    }
+}
+
+impl Watermark {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current watermark value.
+    #[inline]
+    pub fn get(&self) -> EventTime {
+        self.w
+    }
+
+    /// Update from a ready tuple's timestamp; watermarks never regress.
+    /// Returns `true` if the watermark strictly increased (the trigger
+    /// condition of Alg. 4 L17 is `W > W̄ ∧ W > γ`).
+    #[inline]
+    pub fn update(&mut self, ts: EventTime) -> bool {
+        if ts > self.w {
+            self.w = ts;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Tracks the minimum of the latest watermarks across I input channels —
+/// the multi-input combination rule for explicit watermarks (§2.3) and the
+/// readiness bound of Def. 3 for merge-sorting.
+#[derive(Clone, Debug)]
+pub struct MultiInputWatermark {
+    latest: Vec<EventTime>,
+}
+
+impl MultiInputWatermark {
+    pub fn new(inputs: usize) -> Self {
+        assert!(inputs > 0);
+        MultiInputWatermark { latest: vec![TIME_MIN; inputs] }
+    }
+
+    /// Record a watermark/timestamp observation from channel `i`; returns
+    /// the combined (min) watermark after the update.
+    pub fn observe(&mut self, i: usize, ts: EventTime) -> EventTime {
+        debug_assert!(
+            ts >= self.latest[i],
+            "channel {i} watermark regressed: {ts} < {}",
+            self.latest[i]
+        );
+        self.latest[i] = self.latest[i].max(ts);
+        self.combined()
+    }
+
+    /// min_i(latest_i): tuples with ts <= this are *ready* (Def. 3).
+    pub fn combined(&self) -> EventTime {
+        *self.latest.iter().min().expect("at least one input")
+    }
+
+    pub fn channel(&self, i: usize) -> EventTime {
+        self.latest[i]
+    }
+
+    pub fn inputs(&self) -> usize {
+        self.latest.len()
+    }
+}
+
+/// An entry in the merge heap: (ts, channel, seq) with a total order so
+/// that equal timestamps break ties deterministically by channel then
+/// arrival order (needed for deterministic SN ≡ VSN comparisons).
+#[derive(Debug)]
+struct HeapEntry<P> {
+    ts: EventTime,
+    channel: usize,
+    seq: u64,
+    tuple: Tuple<P>,
+}
+
+impl<P> PartialEq for HeapEntry<P> {
+    fn eq(&self, other: &Self) -> bool {
+        (self.ts, self.channel, self.seq) == (other.ts, other.channel, other.seq)
+    }
+}
+impl<P> Eq for HeapEntry<P> {}
+impl<P> PartialOrd for HeapEntry<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<P> Ord for HeapEntry<P> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        (other.ts, other.channel, other.seq).cmp(&(self.ts, self.channel, self.seq))
+    }
+}
+
+/// Merge-sorts I timestamp-sorted channels and releases tuples once ready
+/// (Def. 3). This is what each SN operator instance runs over its dedicated
+/// input queues (§8: "in SN setups input tuples are merge-sorted by both
+/// o+_j and d_j instances").
+pub struct MergeSorter<P> {
+    heap: BinaryHeap<HeapEntry<P>>,
+    wm: MultiInputWatermark,
+    seq: u64,
+}
+
+impl<P> MergeSorter<P> {
+    pub fn new(channels: usize) -> Self {
+        MergeSorter {
+            heap: BinaryHeap::new(),
+            wm: MultiInputWatermark::new(channels),
+            seq: 0,
+        }
+    }
+
+    /// Offer a tuple from `channel`. Heartbeats/flushes advance the channel
+    /// watermark without being queued for delivery.
+    pub fn offer(&mut self, channel: usize, t: Tuple<P>) {
+        self.wm.observe(channel, t.ts);
+        match t.kind {
+            Kind::Heartbeat | Kind::Flush | Kind::Dummy => {}
+            _ => {
+                self.heap.push(HeapEntry { ts: t.ts, channel, seq: self.seq, tuple: t });
+                self.seq += 1;
+            }
+        }
+    }
+
+    /// Pop the earliest *ready* tuple, if any (ts <= min over channels of
+    /// the latest observed ts).
+    pub fn pop_ready(&mut self) -> Option<Tuple<P>> {
+        let bound = self.wm.combined();
+        if self.heap.peek().map(|e| e.ts <= bound).unwrap_or(false) {
+            Some(self.heap.pop().unwrap().tuple)
+        } else {
+            None
+        }
+    }
+
+    /// Number of buffered (not yet ready or not yet popped) tuples.
+    pub fn buffered(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn watermark(&self) -> EventTime {
+        self.wm.combined()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watermark_never_regresses() {
+        let mut w = Watermark::new();
+        assert!(w.update(10));
+        assert!(!w.update(5));
+        assert_eq!(w.get(), 10);
+        assert!(w.update(11));
+    }
+
+    #[test]
+    fn multi_input_min_rule() {
+        let mut m = MultiInputWatermark::new(3);
+        m.observe(0, 10);
+        m.observe(1, 20);
+        assert_eq!(m.combined(), TIME_MIN); // channel 2 silent
+        m.observe(2, 5);
+        assert_eq!(m.combined(), 5);
+        m.observe(2, 30);
+        assert_eq!(m.combined(), 10);
+    }
+
+    #[test]
+    fn merge_sorter_releases_only_ready() {
+        let mut ms: MergeSorter<u32> = MergeSorter::new(2);
+        ms.offer(0, Tuple::data(5, 1));
+        ms.offer(0, Tuple::data(9, 2));
+        // channel 1 silent: nothing ready
+        assert!(ms.pop_ready().is_none());
+        ms.offer(1, Tuple::data(7, 3));
+        // ready bound = min(9, 7) = 7 → release ts 5 and 7
+        assert_eq!(ms.pop_ready().unwrap().ts, 5);
+        assert_eq!(ms.pop_ready().unwrap().ts, 7);
+        assert!(ms.pop_ready().is_none()); // ts 9 > bound
+        ms.offer(1, Tuple::data(20, 4));
+        assert_eq!(ms.pop_ready().unwrap().ts, 9);
+    }
+
+    #[test]
+    fn merge_sorter_output_is_sorted() {
+        let mut ms: MergeSorter<u32> = MergeSorter::new(2);
+        let a = [1, 4, 6, 8, 12];
+        let b = [2, 3, 9, 10, 15];
+        for &ts in &a {
+            ms.offer(0, Tuple::data(ts, 0));
+        }
+        for &ts in &b {
+            ms.offer(1, Tuple::data(ts, 1));
+        }
+        let mut out = Vec::new();
+        while let Some(t) = ms.pop_ready() {
+            out.push(t.ts);
+        }
+        // ready bound is min(12, 15) = 12
+        assert_eq!(out, vec![1, 2, 3, 4, 6, 8, 9, 10, 12]);
+        let mut sorted = out.clone();
+        sorted.sort();
+        assert_eq!(out, sorted);
+    }
+
+    #[test]
+    fn heartbeats_advance_without_delivery() {
+        let mut ms: MergeSorter<u32> = MergeSorter::new(2);
+        ms.offer(0, Tuple::data(5, 1));
+        ms.offer(1, Tuple::heartbeat(100));
+        let t = ms.pop_ready().unwrap();
+        assert_eq!(t.ts, 5);
+        assert!(ms.pop_ready().is_none());
+        assert_eq!(ms.watermark(), 5); // min(5, 100)
+    }
+
+    #[test]
+    fn ties_break_by_channel_then_seq() {
+        let mut ms: MergeSorter<u32> = MergeSorter::new(2);
+        ms.offer(1, Tuple::data(5, 10));
+        ms.offer(0, Tuple::data(5, 20));
+        ms.offer(0, Tuple::data(5, 21));
+        ms.offer(0, Tuple::heartbeat(6));
+        ms.offer(1, Tuple::heartbeat(6));
+        let order: Vec<u32> = std::iter::from_fn(|| ms.pop_ready()).map(|t| t.payload).collect();
+        assert_eq!(order, vec![20, 21, 10]); // channel 0 first, then arrival order
+    }
+}

@@ -1,0 +1,19 @@
+//! Evaluation workloads (§8): generators, operator definitions, and the
+//! baselines, one module per experiment family.
+//!
+//! * [`tweets`] — synthetic tweet corpus + wordcount/paircount key
+//!   functions (Q1, Q2);
+//! * [`scalejoin_bench`] — the §8.3 band-join streams, the 1T baseline,
+//!   and the PJRT offload adapter (Q3-Q5);
+//! * [`nyse`] — the synthetic NYSE trade trace + hedge predicate (Q6);
+//! * [`rates`] — phased rate schedules (Q5) and rate steps (Q4);
+//! * [`ops`] — the Appendix-D operator definitions.
+
+pub mod nyse;
+pub mod ops;
+pub mod rates;
+pub mod scalejoin_bench;
+pub mod tweets;
+
+pub use ops::{forward_op, longest_tweet_op, paircount_op, wordcount_op};
+pub use rates::RateSchedule;

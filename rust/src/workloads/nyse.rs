@@ -1,0 +1,218 @@
+//! Synthetic NYSE trade trace (the Q6 workload substitute).
+//!
+//! The paper uses six hours of NYSE/NASDAQ trades (2018-07-30, NYSE FTP),
+//! restricted to the 10 biggest companies, with rates oscillating between
+//! 0 and 8000 t/s. What Q6 exercises is (a) the hedge self-join predicate
+//! and (b) the controller's response to abrupt, bursty rate changes — both
+//! reproduced here: a U-shaped intraday rate envelope with superimposed
+//! bursts and lulls, and per-symbol price random walks around the
+//! previous-day average. See DESIGN.md §5.
+
+use crate::operator::join::JoinPredicate;
+use crate::time::EventTime;
+use crate::tuple::Tuple;
+use crate::util::Rng;
+
+/// A trade ⟨τ, [id, TradePrice, AveragePrice]⟩ (prices in cents).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Trade {
+    pub id: u16,
+    pub price: i32,
+    pub avg: i32,
+}
+
+/// Hedge join output ⟨l_id, l_price, r_id, r_price⟩.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HedgeOut {
+    pub l_id: u16,
+    pub l_price: i32,
+    pub r_id: u16,
+    pub r_price: i32,
+}
+
+/// Normalized distance ND_t = (price - avg) / avg.
+#[inline]
+pub fn nd(t: &Trade) -> f64 {
+    (t.price - t.avg) as f64 / t.avg as f64
+}
+
+/// The §8.6 hedge predicate: distinct companies whose normalized
+/// distances sit in the negative-correlation band ND_l/ND_r ∈
+/// [-1.05, -0.95].
+pub struct HedgePredicate;
+
+impl JoinPredicate for HedgePredicate {
+    type L = Trade;
+    type R = Trade;
+    type Out = HedgeOut;
+
+    #[inline]
+    fn matches(&self, l: &Trade, r: &Trade) -> bool {
+        if l.id == r.id {
+            return false;
+        }
+        let (a, b) = (nd(l), nd(r));
+        if b == 0.0 {
+            return false;
+        }
+        let ratio = a / b;
+        (-1.05..=-0.95).contains(&ratio)
+    }
+
+    #[inline]
+    fn combine(&self, l: &Trade, r: &Trade) -> HedgeOut {
+        HedgeOut { l_id: l.id, l_price: l.price, r_id: r.id, r_price: r.price }
+    }
+}
+
+/// Trace generator configuration.
+#[derive(Clone, Debug)]
+pub struct NyseConfig {
+    pub symbols: usize,
+    /// Trace duration in event-time seconds.
+    pub duration_s: u32,
+    /// Peak rate (t/s) at open/close.
+    pub peak_rate: f64,
+    /// Midday floor rate (t/s).
+    pub floor_rate: f64,
+    /// Probability per second of an abrupt burst / lull.
+    pub burst_prob: f64,
+    pub seed: u64,
+}
+
+impl Default for NyseConfig {
+    fn default() -> Self {
+        NyseConfig {
+            symbols: 10,
+            duration_s: 600,
+            peak_rate: 8000.0,
+            floor_rate: 200.0,
+            burst_prob: 0.05,
+            seed: 0x4E595345, // "NYSE"
+        }
+    }
+}
+
+/// Generates a full trace as (rate profile, tuples).
+pub struct NyseGen {
+    cfg: NyseConfig,
+    rng: Rng,
+    prices: Vec<i32>,
+    avgs: Vec<i32>,
+}
+
+impl NyseGen {
+    pub fn new(cfg: NyseConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let avgs: Vec<i32> =
+            (0..cfg.symbols).map(|_| 2_000 + rng.gen_range(48_000) as i32).collect();
+        let prices = avgs.clone();
+        NyseGen { cfg, rng, prices, avgs }
+    }
+
+    /// Intraday U-shaped envelope with bursts: rate (t/s) at second `s`.
+    pub fn rate_at(&mut self, s: u32) -> f64 {
+        let frac = s as f64 / self.cfg.duration_s as f64;
+        // U shape: high at both ends
+        let u = 4.0 * (frac - 0.5) * (frac - 0.5); // 1 at edges, 0 midday
+        let base = self.cfg.floor_rate + u * (self.cfg.peak_rate - self.cfg.floor_rate);
+        if self.rng.chance(self.cfg.burst_prob) {
+            // abrupt burst or lull
+            if self.rng.chance(0.5) {
+                self.cfg.peak_rate * self.rng.f32_range(0.6, 1.0) as f64
+            } else {
+                self.cfg.floor_rate * self.rng.f32_range(0.0, 0.5) as f64
+            }
+        } else {
+            base * self.rng.f32_range(0.8, 1.2) as f64
+        }
+    }
+
+    /// Generate the trace: per-second rates + the trade tuples. Trades are
+    /// emitted with millisecond timestamps spread uniformly in the second.
+    pub fn generate(&mut self) -> (Vec<f64>, Vec<Tuple<Trade>>) {
+        let mut rates = Vec::with_capacity(self.cfg.duration_s as usize);
+        let mut tuples = Vec::new();
+        for s in 0..self.cfg.duration_s {
+            let rate = self.rate_at(s);
+            rates.push(rate);
+            let n = rate.round() as usize;
+            let mut offs: Vec<i64> = (0..n).map(|_| self.rng.gen_range(1000) as i64).collect();
+            offs.sort_unstable();
+            for off in offs {
+                let sym = self.rng.gen_range(self.cfg.symbols as u64) as usize;
+                // random walk around avg, mean-reverting
+                let drift = (self.avgs[sym] - self.prices[sym]) / 50;
+                let noise = self.rng.gen_range(41) as i32 - 20;
+                self.prices[sym] =
+                    (self.prices[sym] + drift + noise).max(self.avgs[sym] / 2);
+                tuples.push(Tuple::data(
+                    s as EventTime * 1000 + off,
+                    Trade { id: sym as u16, price: self.prices[sym], avg: self.avgs[sym] },
+                ));
+            }
+        }
+        (rates, tuples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> NyseGen {
+        NyseGen::new(NyseConfig {
+            duration_s: 60,
+            peak_rate: 800.0,
+            floor_rate: 50.0,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn trace_sorted_and_rates_bounded() {
+        let (rates, tuples) = small().generate();
+        assert_eq!(rates.len(), 60);
+        assert!(tuples.windows(2).all(|w| w[0].ts <= w[1].ts));
+        assert!(rates.iter().all(|&r| (0.0..=1000.0).contains(&r)));
+    }
+
+    #[test]
+    fn u_shape_visible() {
+        let (rates, _) = small().generate();
+        let edge = (rates[0] + rates[59]) / 2.0;
+        let mid: f64 = rates[25..35].iter().sum::<f64>() / 10.0;
+        assert!(edge > mid, "edges {edge} should exceed midday {mid}");
+    }
+
+    #[test]
+    fn prices_track_avg() {
+        let (_, tuples) = small().generate();
+        for t in &tuples {
+            let ndv = nd(&t.payload).abs();
+            assert!(ndv < 0.6, "price drifted too far: nd={ndv}");
+        }
+    }
+
+    #[test]
+    fn hedge_predicate_semantics() {
+        let p = HedgePredicate;
+        let l = Trade { id: 1, price: 105, avg: 100 }; // nd = 0.05
+        let r = Trade { id: 2, price: 95, avg: 100 }; // nd = -0.05 → ratio -1
+        assert!(p.matches(&l, &r));
+        let same = Trade { id: 1, price: 95, avg: 100 };
+        assert!(!p.matches(&l, &same), "same symbol must not match");
+        let off = Trade { id: 3, price: 80, avg: 100 }; // ratio -0.25
+        assert!(!p.matches(&l, &off));
+        let possame = Trade { id: 4, price: 105, avg: 100 }; // ratio +1
+        assert!(!p.matches(&l, &possame));
+    }
+
+    #[test]
+    fn deterministic() {
+        let (r1, t1) = small().generate();
+        let (r2, t2) = small().generate();
+        assert_eq!(r1, r2);
+        assert_eq!(t1.len(), t2.len());
+    }
+}

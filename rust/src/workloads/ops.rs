@@ -1,0 +1,150 @@
+//! Evaluation operator definitions (Appendix D).
+//!
+//! * Operator 2 — `A+` longest tweet per hashtag (the running example);
+//! * Operator 5 — `A+` wordcount / paircount ([`count_per_key_op`] with
+//!   the key functions from [`super::tweets`]);
+//! * Operator 6 — the Q2 forwarding `O+` with I = 2 measuring the data
+//!   sharing/sorting bottleneck.
+
+use crate::operator::aggregate::{count_per_key_op, CountPerKey, FnAggLogic};
+use crate::operator::state::WindowSet;
+use crate::operator::{Ctx, OperatorDef, OperatorLogic, WindowType};
+use crate::time::{WindowSpec, DELTA};
+use crate::tuple::{Key, Tuple};
+use crate::workloads::tweets::Tweet;
+
+/// Operator 2: longest tweet (in chars) per hashtag per window.
+pub fn longest_tweet_op(
+    spec: WindowSpec,
+) -> OperatorDef<FnAggLogic<Tweet, (Key, u64), u64>> {
+    let logic = FnAggLogic::new(
+        |t: &Tuple<Tweet>, keys: &mut Vec<Key>| super::tweets::hashtag_keys(t, keys),
+        |w, t, _ctx| {
+            if t.payload.chars as u64 > w.states[0] {
+                w.states[0] = t.payload.chars as u64;
+            }
+        },
+        |w, ctx| ctx.emit((w.key, w.states[0])),
+    );
+    OperatorDef::new("longest-tweet", spec, 1, WindowType::Multi, logic)
+}
+
+/// Operator 5 (wordcount flavour): count tweets per word per window.
+pub fn wordcount_op(
+    spec: WindowSpec,
+) -> OperatorDef<CountPerKey<Tweet, impl Fn(&Tuple<Tweet>, &mut Vec<Key>) + Send + Sync>> {
+    count_per_key_op("wordcount", spec, super::tweets::wordcount_keys)
+}
+
+/// Operator 5 (paircount flavour) with pair distance `bound`.
+pub fn paircount_op(
+    spec: WindowSpec,
+    bound: usize,
+) -> OperatorDef<CountPerKey<Tweet, impl Fn(&Tuple<Tweet>, &mut Vec<Key>) + Send + Sync>> {
+    count_per_key_op("paircount", spec, super::tweets::paircount_keys(bound))
+}
+
+/// Operator 6: the Q2 forwarding `O+` (I = 2, WA = WS = δ, WT = single).
+/// f_MK returns all n keys; f_μ is the identity, so instance j handles
+/// key j and every instance forwards every tuple — the measured cost is
+/// pure data sharing + sorting.
+pub struct ForwardLogic<P> {
+    pub n: u64,
+    _marker: std::marker::PhantomData<fn(P)>,
+}
+
+impl<P: crate::tuple::Payload> OperatorLogic for ForwardLogic<P> {
+    type In = P;
+    type Out = P;
+    type State = ();
+
+    fn keys(&self, _t: &Tuple<P>, keys: &mut Vec<Key>) {
+        keys.extend(0..self.n);
+    }
+
+    fn update(&self, _w: &mut WindowSet<()>, t: &Tuple<P>, ctx: &mut Ctx<'_, P>) {
+        ctx.emit(t.payload.clone());
+    }
+
+    fn slide(&self, _w: &mut WindowSet<()>, _new_l: crate::time::EventTime) -> bool {
+        true // keep the (stateless) window set; counters-free
+    }
+
+    fn has_output(&self) -> bool {
+        false
+    }
+
+    fn keys_are_constant(&self) -> bool {
+        true // f_MK = {0..n} for every tuple
+    }
+}
+
+/// Build Operator 6 for parallelism degree `n`.
+pub fn forward_op<P: crate::tuple::Payload>(n: usize) -> OperatorDef<ForwardLogic<P>> {
+    OperatorDef::new(
+        "forward",
+        WindowSpec::new(DELTA, DELTA),
+        2,
+        WindowType::Single,
+        ForwardLogic { n: n as u64, _marker: std::marker::PhantomData },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::OperatorMetrics;
+    use crate::operator::state::SharedState;
+    use crate::operator::OperatorCore;
+    use crate::tuple::Mapper;
+
+    #[test]
+    fn forward_emits_per_instance() {
+        // 2 instances: each forwards every tuple once
+        let def = forward_op::<u32>(2);
+        let shared = SharedState::new(4);
+        let metrics = OperatorMetrics::new(2);
+        let f_mu = Mapper::over(vec![0, 1]); // identity over 2 keys? HashMod ok
+        let mut cores: Vec<_> = (0..2)
+            .map(|i| OperatorCore::new(def.clone(), i, shared.clone(), metrics.clone()))
+            .collect();
+        let mut out = Vec::new();
+        for ts in 1..=10i64 {
+            let t = Tuple::data(ts, ts as u32);
+            for c in cores.iter_mut() {
+                let mut sink = |o: Tuple<u32>| out.push(o.payload);
+                let mut ctx = Ctx::new(&mut sink);
+                c.process(&t, &f_mu, &mut ctx);
+            }
+        }
+        // each of the 10 tuples forwarded by each of 2 instances
+        assert_eq!(out.len(), 20);
+    }
+
+    #[test]
+    fn longest_tweet_op_emits_max() {
+        use std::sync::Arc;
+        let def = longest_tweet_op(WindowSpec::new(100, 100));
+        let mut core =
+            OperatorCore::new(def, 0, SharedState::private(), OperatorMetrics::new(1));
+        let f_mu = Mapper::hash_mod(1);
+        let mk = |ts, tag: u32, chars| {
+            Tuple::data(
+                ts,
+                Tweet {
+                    user: 0,
+                    words: Arc::new(vec![]),
+                    hashtags: Arc::new(vec![tag]),
+                    chars,
+                },
+            )
+        };
+        let mut out = Vec::new();
+        for t in [mk(1, 7, 30), mk(2, 7, 55), mk(3, 7, 40), Tuple::heartbeat(500)] {
+            let mut sink = |o: Tuple<(Key, u64)>| out.push(o.payload);
+            let mut ctx = Ctx::new(&mut sink);
+            core.process(&t, &f_mu, &mut ctx);
+        }
+        assert_eq!(out, vec![(7, 55)]);
+    }
+}

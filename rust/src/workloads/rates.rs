@@ -1,0 +1,104 @@
+//! Phased rate schedules (the Q5 stress workload, §8.5) and paced feeding.
+//!
+//! Q5: "several sequential phases in which data tuples are injected with
+//! a constant rate, randomly chosen from [500, 8000] t/s. The length of
+//! each phase is at least 100 and at most 300 seconds. The transition
+//! between phases is an abrupt change."
+
+use crate::util::Rng;
+
+/// A piecewise-constant rate schedule.
+#[derive(Clone, Debug)]
+pub struct RateSchedule {
+    /// (duration in seconds, rate in t/s)
+    pub phases: Vec<(u32, f64)>,
+}
+
+impl RateSchedule {
+    /// The Q5 schedule: random phases in [min_rate, max_rate], lengths in
+    /// [min_len, max_len] seconds, totalling ~`total_s`.
+    pub fn q5(seed: u64, total_s: u32, min_rate: f64, max_rate: f64, min_len: u32, max_len: u32) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut phases = Vec::new();
+        let mut acc = 0;
+        while acc < total_s {
+            let len = min_len + rng.gen_range((max_len - min_len + 1) as u64) as u32;
+            let len = len.min(total_s - acc);
+            let rate = min_rate + rng.f64() * (max_rate - min_rate);
+            phases.push((len, rate));
+            acc += len;
+        }
+        RateSchedule { phases }
+    }
+
+    /// Constant-rate schedule.
+    pub fn constant(total_s: u32, rate: f64) -> Self {
+        RateSchedule { phases: vec![(total_s, rate)] }
+    }
+
+    /// The Fig. 10 step: `lead_s` at `r0`, then the rest at `r1`.
+    pub fn step(total_s: u32, lead_s: u32, r0: f64, r1: f64) -> Self {
+        RateSchedule { phases: vec![(lead_s, r0), (total_s - lead_s, r1)] }
+    }
+
+    /// Total duration in seconds.
+    pub fn duration_s(&self) -> u32 {
+        self.phases.iter().map(|&(d, _)| d).sum()
+    }
+
+    /// Rate at second `s`.
+    pub fn rate_at(&self, s: u32) -> f64 {
+        let mut acc = 0;
+        for &(d, r) in &self.phases {
+            acc += d;
+            if s < acc {
+                return r;
+            }
+        }
+        self.phases.last().map(|&(_, r)| r).unwrap_or(0.0)
+    }
+
+    /// Per-second rates over the whole schedule.
+    pub fn per_second(&self) -> Vec<f64> {
+        (0..self.duration_s()).map(|s| self.rate_at(s)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q5_phase_bounds() {
+        let s = RateSchedule::q5(7, 1200, 500.0, 8000.0, 100, 300);
+        assert!(s.duration_s() >= 1200);
+        for (i, &(d, r)) in s.phases.iter().enumerate() {
+            assert!((500.0..=8000.0).contains(&r));
+            // all but the (possibly clipped) last phase respect min length
+            if i + 1 < s.phases.len() {
+                assert!((100..=300).contains(&d), "phase {i} len {d}");
+            }
+        }
+        // abrupt changes: consecutive rates differ
+        for w in s.phases.windows(2) {
+            assert!((w[0].1 - w[1].1).abs() > 1e-9);
+        }
+    }
+
+    #[test]
+    fn rate_at_piecewise() {
+        let s = RateSchedule::step(100, 40, 1000.0, 4000.0);
+        assert_eq!(s.rate_at(0), 1000.0);
+        assert_eq!(s.rate_at(39), 1000.0);
+        assert_eq!(s.rate_at(40), 4000.0);
+        assert_eq!(s.rate_at(99), 4000.0);
+        assert_eq!(s.rate_at(200), 4000.0); // clamps to last
+    }
+
+    #[test]
+    fn per_second_length() {
+        let s = RateSchedule::constant(30, 100.0);
+        assert_eq!(s.per_second().len(), 30);
+        assert!(s.per_second().iter().all(|&r| r == 100.0));
+    }
+}

@@ -1,0 +1,275 @@
+//! The §8.3 ScaleJoin benchmark workload (Q3-Q5): two streams joined by
+//! the band predicate, plus the optimized single-thread baseline (1T) and
+//! the PJRT-offload predicate adapter.
+//!
+//! L schema ⟨τ, [x: int, y: float]⟩, R schema ⟨τ, [a: int, b: float,
+//! c: double, d: bool]⟩; x, y, a, b uniform in [1, 10 000] → one output
+//! per ~250k comparisons on average.
+
+use crate::operator::join::{scalejoin_op, BatchMatcher, Either, JoinPredicate, StoredWindow};
+use crate::operator::OperatorDef;
+use crate::time::EventTime;
+use crate::tuple::Tuple;
+use crate::util::Rng;
+use std::collections::VecDeque;
+
+/// Left tuple payload ⟨x, y⟩.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LTuple {
+    pub x: i32,
+    pub y: f32,
+}
+
+/// Right tuple payload ⟨a, b, c, d⟩.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RTuple {
+    pub a: i32,
+    pub b: f32,
+    pub c: f64,
+    pub d: bool,
+}
+
+/// Join output: the concatenated payloads.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SjOut {
+    pub x: i32,
+    pub y: f32,
+    pub a: i32,
+    pub b: f32,
+}
+
+/// The §8.3 band predicate.
+pub struct BandPredicate;
+
+impl JoinPredicate for BandPredicate {
+    type L = LTuple;
+    type R = RTuple;
+    type Out = SjOut;
+
+    #[inline]
+    fn matches(&self, l: &LTuple, r: &RTuple) -> bool {
+        (r.a - 10 <= l.x && l.x <= r.a + 10) && (r.b - 10.0 <= l.y && l.y <= r.b + 10.0)
+    }
+
+    #[inline]
+    fn combine(&self, l: &LTuple, r: &RTuple) -> SjOut {
+        SjOut { x: l.x, y: l.y, a: r.a, b: r.b }
+    }
+}
+
+pub type SjPayload = Either<LTuple, RTuple>;
+
+/// Workload generator: alternating L/R tuples at a given event-time rate.
+pub struct SjGen {
+    rng: Rng,
+    ts: EventTime,
+    /// event-time microstep accumulator for rates above 1 t/ms
+    frac: f64,
+    pub rate_tps: f64,
+}
+
+impl SjGen {
+    pub fn new(seed: u64, rate_tps: f64) -> Self {
+        SjGen { rng: Rng::new(seed), ts: 0, frac: 0.0, rate_tps }
+    }
+
+    pub fn set_rate(&mut self, rate_tps: f64) {
+        self.rate_tps = rate_tps.max(1.0);
+    }
+
+    /// Next tuple; event time advances by 1000/rate ms in expectation.
+    pub fn next(&mut self) -> Tuple<SjPayload> {
+        self.frac += 1000.0 / self.rate_tps;
+        let step = self.frac.floor();
+        self.frac -= step;
+        self.ts += step as EventTime;
+        let v1 = 1 + self.rng.gen_range(10_000) as i32;
+        let v2 = 1.0 + self.rng.gen_range(10_000) as f32;
+        if self.rng.chance(0.5) {
+            Tuple::data_on(self.ts, 0, Either::L(LTuple { x: v1, y: v2 }))
+        } else {
+            Tuple::data_on(
+                self.ts,
+                1,
+                Either::R(RTuple { a: v1, b: v2, c: v1 as f64 * 0.5, d: v1 % 2 == 0 }),
+            )
+        }
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Tuple<SjPayload>> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+/// Build the Q3 ScaleJoin operator: WA = δ, WS given, 1000 keys (paper).
+pub fn q3_operator(
+    ws: EventTime,
+    n_keys: u64,
+) -> OperatorDef<crate::operator::join::ScaleJoinLogic<BandPredicate>> {
+    scalejoin_op("scalejoin", ws, BandPredicate, n_keys)
+}
+
+/// The optimized single-threaded baseline **1T** (§8.3): devotes every
+/// cycle to the analysis — two ring windows, direct compare, no gates,
+/// no counters, no routing.
+pub struct OneT {
+    ws: EventTime,
+    l_win: VecDeque<(EventTime, LTuple)>,
+    r_win: VecDeque<(EventTime, RTuple)>,
+    pub comparisons: u64,
+    pub matches: u64,
+}
+
+impl OneT {
+    pub fn new(ws: EventTime) -> Self {
+        OneT { ws, l_win: VecDeque::new(), r_win: VecDeque::new(), comparisons: 0, matches: 0 }
+    }
+
+    #[inline]
+    pub fn process(&mut self, t: &Tuple<SjPayload>) {
+        let cutoff = t.ts - self.ws + 1;
+        match &t.payload {
+            Either::L(l) => {
+                while self.r_win.front().map(|&(ts, _)| ts < cutoff).unwrap_or(false) {
+                    self.r_win.pop_front();
+                }
+                self.comparisons += self.r_win.len() as u64;
+                for &(_, r) in &self.r_win {
+                    if (r.a - 10 <= l.x && l.x <= r.a + 10)
+                        && (r.b - 10.0 <= l.y && l.y <= r.b + 10.0)
+                    {
+                        self.matches += 1;
+                    }
+                }
+                self.l_win.push_back((t.ts, *l));
+            }
+            Either::R(r) => {
+                while self.l_win.front().map(|&(ts, _)| ts < cutoff).unwrap_or(false) {
+                    self.l_win.pop_front();
+                }
+                self.comparisons += self.l_win.len() as u64;
+                for &(_, l) in &self.l_win {
+                    if (r.a - 10 <= l.x && l.x <= r.a + 10)
+                        && (r.b - 10.0 <= l.y && l.y <= r.b + 10.0)
+                    {
+                        self.matches += 1;
+                    }
+                }
+                self.r_win.push_back((t.ts, *r));
+            }
+        }
+    }
+
+    pub fn window_len(&self) -> usize {
+        self.l_win.len() + self.r_win.len()
+    }
+}
+
+/// PJRT-offload adapter: evaluates the band predicate through the
+/// AOT-compiled Pallas kernel (thread-local PJRT instances).
+pub struct KernelMatcher {
+    /// reusable column buffers (behind a refcell-free &mut in probe —
+    /// BatchMatcher takes &self, so buffers live in a thread local).
+    _priv: (),
+}
+
+impl KernelMatcher {
+    pub fn new() -> Self {
+        KernelMatcher { _priv: () }
+    }
+}
+
+impl Default for KernelMatcher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    static COLS: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+fn kernel_probe(px: f32, py: f32, wa: &[f32], wb: &[f32], out: &mut Vec<u32>) {
+    crate::runtime::with_thread_kernel(|k| {
+        k.probe_indices(px, py, wa, wb, out).expect("kernel probe")
+    })
+    .expect("offload kernel unavailable (run `make artifacts`)");
+}
+
+impl BatchMatcher<BandPredicate> for KernelMatcher {
+    fn probe_l(&self, probe: &LTuple, stored: &StoredWindow<RTuple>, out: &mut Vec<u32>) {
+        COLS.with(|cols| {
+            let (wa, wb) = &mut *cols.borrow_mut();
+            wa.clear();
+            wb.clear();
+            for r in stored.payload.iter() {
+                wa.push(r.a as f32);
+                wb.push(r.b);
+            }
+            kernel_probe(probe.x as f32, probe.y, wa, wb, out);
+        });
+    }
+    fn probe_r(&self, probe: &RTuple, stored: &StoredWindow<LTuple>, out: &mut Vec<u32>) {
+        COLS.with(|cols| {
+            let (wa, wb) = &mut *cols.borrow_mut();
+            wa.clear();
+            wb.clear();
+            for l in stored.payload.iter() {
+                wa.push(l.x as f32);
+                wb.push(l.y);
+            }
+            kernel_probe(probe.a as f32, probe.b, wa, wb, out);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selectivity_near_paper() {
+        // one match per ~250k comparisons (x,y,a,b uniform in [1,1e4], ±10)
+        let mut gen = SjGen::new(1, 1000.0);
+        let mut j = OneT::new(60_000);
+        for t in gen.take(40_000) {
+            j.process(&t);
+        }
+        assert!(j.comparisons > 1_000_000);
+        let sel = j.comparisons as f64 / j.matches.max(1) as f64;
+        assert!(
+            (80_000.0..800_000.0).contains(&sel),
+            "selectivity {sel} should be near 250k"
+        );
+    }
+
+    #[test]
+    fn onet_window_bounded_by_ws() {
+        let mut gen = SjGen::new(2, 1000.0); // 1 tuple/ms
+        let mut j = OneT::new(1000); // 1 s window
+        for t in gen.take(10_000) {
+            j.process(&t);
+        }
+        // ~1000 tuples fit the window (both streams combined)
+        assert!(j.window_len() < 1500, "window grew to {}", j.window_len());
+    }
+
+    #[test]
+    fn rate_controls_event_time() {
+        let mut gen = SjGen::new(3, 2000.0);
+        let ts0 = gen.next().ts;
+        let tuples = gen.take(2000);
+        let dt = tuples.last().unwrap().ts - ts0;
+        // 2000 tuples at 2000 t/s ≈ 1000 ms of event time
+        assert!((800..1200).contains(&dt), "dt={dt}");
+    }
+
+    #[test]
+    fn generator_alternates_streams() {
+        let mut gen = SjGen::new(4, 1000.0);
+        let tuples = gen.take(1000);
+        let l = tuples.iter().filter(|t| t.input == 0).count();
+        assert!((300..700).contains(&l), "L/R balance off: {l}");
+    }
+}

@@ -1,0 +1,241 @@
+//! Synthetic tweet corpus (the Q1/Q2 workload substitute).
+//!
+//! The paper processes 4.3M real tweets (Oct 1-2, 2018). Q1's controlled
+//! variable is the *duplication level* — how many keys (words / word
+//! pairs / hashtags) a tuple yields — which this generator reproduces
+//! exactly: Zipf-distributed vocabulary, configurable words-per-tweet and
+//! hashtags-per-tweet, and the paircount distance bound B ∈ {3, 10, ∞}
+//! (L/M/H duplication). See DESIGN.md §5 (substitutions).
+
+use crate::tuple::{Key, Tuple};
+use crate::util::{Rng, Zipf};
+use std::sync::Arc;
+
+/// A tweet payload: interned word ids + hashtag ids + length in chars.
+#[derive(Clone, Debug, Default)]
+pub struct Tweet {
+    pub user: u32,
+    pub words: Arc<Vec<u32>>,
+    pub hashtags: Arc<Vec<u32>>,
+    pub chars: u32,
+}
+
+/// Corpus generator parameters.
+#[derive(Clone, Debug)]
+pub struct TweetGenConfig {
+    pub vocab: usize,
+    pub hashtag_vocab: usize,
+    pub zipf_s: f64,
+    pub min_words: usize,
+    pub max_words: usize,
+    pub max_hashtags: usize,
+    /// Mean inter-arrival gap in event-time ms.
+    pub mean_gap_ms: f64,
+    pub seed: u64,
+}
+
+impl Default for TweetGenConfig {
+    fn default() -> Self {
+        TweetGenConfig {
+            vocab: 50_000,
+            hashtag_vocab: 2_000,
+            zipf_s: 1.1,
+            min_words: 3,
+            max_words: 18,
+            max_hashtags: 3,
+            mean_gap_ms: 1.0,
+            seed: 0x7EE75,
+        }
+    }
+}
+
+pub struct TweetGen {
+    cfg: TweetGenConfig,
+    rng: Rng,
+    words: Zipf,
+    tags: Zipf,
+    ts: i64,
+}
+
+impl TweetGen {
+    pub fn new(cfg: TweetGenConfig) -> Self {
+        TweetGen {
+            rng: Rng::new(cfg.seed),
+            words: Zipf::new(cfg.vocab, cfg.zipf_s),
+            tags: Zipf::new(cfg.hashtag_vocab, cfg.zipf_s),
+            ts: 0,
+            cfg,
+        }
+    }
+
+    /// Next tweet tuple (timestamps strictly advance in expectation).
+    pub fn next(&mut self) -> Tuple<Tweet> {
+        self.ts += self.rng.exp(self.cfg.mean_gap_ms).round().max(0.0) as i64;
+        let nw = self.rng.range(self.cfg.min_words, self.cfg.max_words + 1);
+        let words: Vec<u32> = (0..nw).map(|_| self.words.sample(&mut self.rng) as u32).collect();
+        let nh = self.rng.range(0, self.cfg.max_hashtags + 1);
+        let hashtags: Vec<u32> =
+            (0..nh).map(|_| self.tags.sample(&mut self.rng) as u32).collect();
+        let chars = words.len() as u32 * 6 + self.rng.gen_range(20) as u32;
+        Tuple::data(
+            self.ts,
+            Tweet {
+                user: self.rng.next_u32() % 1_000_000,
+                words: Arc::new(words),
+                hashtags: Arc::new(hashtags),
+                chars,
+            },
+        )
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Tuple<Tweet>> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+/// f_MK for **wordcount** (Operator 5): one key per distinct word.
+pub fn wordcount_keys(t: &Tuple<Tweet>, keys: &mut Vec<Key>) {
+    let start = keys.len();
+    for &w in t.payload.words.iter() {
+        let k = w as Key;
+        if !keys[start..].contains(&k) {
+            keys.push(k);
+        }
+    }
+}
+
+/// f_MK for **paircount** (Operator 5): one key per distinct word pair
+/// within distance `bound` (L: 3, M: 10, H: usize::MAX).
+pub fn paircount_keys(bound: usize) -> impl Fn(&Tuple<Tweet>, &mut Vec<Key>) + Send + Sync {
+    move |t, keys| {
+        let ws = &t.payload.words;
+        let start = keys.len();
+        for i in 0..ws.len() {
+            let hi = if bound == usize::MAX { ws.len() } else { (i + 1 + bound).min(ws.len()) };
+            for j in (i + 1)..hi {
+                let (a, b) = if ws[i] <= ws[j] { (ws[i], ws[j]) } else { (ws[j], ws[i]) };
+                let k = ((a as u64) << 32) | b as u64;
+                if !keys[start..].contains(&k) {
+                    keys.push(k);
+                }
+            }
+        }
+    }
+}
+
+/// f_MK for the running example (Operator 2): one key per hashtag.
+pub fn hashtag_keys(t: &Tuple<Tweet>, keys: &mut Vec<Key>) {
+    let start = keys.len();
+    for &h in t.payload.hashtags.iter() {
+        let k = h as Key;
+        if !keys[start..].contains(&k) {
+            keys.push(k);
+        }
+    }
+}
+
+/// Average duplication factor (keys per tuple) of a key function over a
+/// sample — the Q1 independent variable.
+pub fn duplication_factor(
+    tuples: &[Tuple<Tweet>],
+    key_fn: impl Fn(&Tuple<Tweet>, &mut Vec<Key>),
+) -> f64 {
+    let mut keys = Vec::new();
+    let mut total = 0usize;
+    for t in tuples {
+        keys.clear();
+        key_fn(t, &mut keys);
+        total += keys.len();
+    }
+    total as f64 / tuples.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_gen() -> TweetGen {
+        TweetGen::new(TweetGenConfig {
+            vocab: 500,
+            hashtag_vocab: 50,
+            seed: 42,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn timestamps_nondecreasing() {
+        let mut g = small_gen();
+        let ts: Vec<i64> = g.take(1000).iter().map(|t| t.ts).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = small_gen().take(50);
+        let b = small_gen().take(50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.payload.words, y.payload.words);
+            assert_eq!(x.ts, y.ts);
+        }
+    }
+
+    #[test]
+    fn wordcount_keys_distinct() {
+        let mut g = small_gen();
+        let mut keys = Vec::new();
+        for t in g.take(200) {
+            keys.clear();
+            wordcount_keys(&t, &mut keys);
+            let mut sorted = keys.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), keys.len(), "duplicate keys emitted");
+            assert!(!keys.is_empty());
+        }
+    }
+
+    #[test]
+    fn paircount_duplication_ordering() {
+        // L (B=3) < M (B=10) < H (B=∞), and all > wordcount
+        let tuples = small_gen().take(500);
+        let wc = duplication_factor(&tuples, wordcount_keys);
+        let l = duplication_factor(&tuples, paircount_keys(3));
+        let m = duplication_factor(&tuples, paircount_keys(10));
+        let h = duplication_factor(&tuples, paircount_keys(usize::MAX));
+        assert!(wc < l, "wc={wc} l={l}");
+        assert!(l < m, "l={l} m={m}");
+        assert!(m <= h, "m={m} h={h}");
+    }
+
+    #[test]
+    fn pair_keys_are_order_invariant() {
+        let t = Tuple::data(
+            0,
+            Tweet { user: 0, words: Arc::new(vec![7, 3]), hashtags: Arc::new(vec![]), chars: 0 },
+        );
+        let t2 = Tuple::data(
+            0,
+            Tweet { user: 0, words: Arc::new(vec![3, 7]), hashtags: Arc::new(vec![]), chars: 0 },
+        );
+        let mut k1 = Vec::new();
+        let mut k2 = Vec::new();
+        paircount_keys(10)(&t, &mut k1);
+        paircount_keys(10)(&t2, &mut k2);
+        assert_eq!(k1, k2);
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let tuples = small_gen().take(2000);
+        let mut counts = std::collections::HashMap::new();
+        for t in &tuples {
+            for &w in t.payload.words.iter() {
+                *counts.entry(w).or_insert(0u32) += 1;
+            }
+        }
+        let max = counts.values().max().copied().unwrap();
+        let avg = counts.values().sum::<u32>() as f64 / counts.len() as f64;
+        assert!(max as f64 > avg * 5.0, "vocabulary should be skewed");
+    }
+}

@@ -1,0 +1,210 @@
+//! Integration: elastic reconfigurations — provisioning, decommissioning,
+//! load balancing — preserve `O+` semantics (Theorem 3/4) with no state
+//! transfer, and complete in far under the paper's 40 ms bound.
+
+use std::time::Duration;
+
+use stretch::engine::{VsnEngine, VsnOptions};
+use stretch::operator::join::{scalejoin_op, Either, JoinPredicate};
+use stretch::tuple::{Mapper, Tuple};
+use stretch::util::Rng;
+
+struct Band;
+impl JoinPredicate for Band {
+    type L = (i32, f32);
+    type R = (i32, f32);
+    type Out = (i32, i32);
+    fn matches(&self, l: &(i32, f32), r: &(i32, f32)) -> bool {
+        (l.0 - r.0).abs() <= 10 && (l.1 - r.1).abs() <= 10.0
+    }
+    fn combine(&self, l: &(i32, f32), r: &(i32, f32)) -> (i32, i32) {
+        (l.0, r.0)
+    }
+}
+
+type SjIn = Either<(i32, f32), (i32, f32)>;
+
+fn gen_join(seed: u64, n: usize, start_ts: i64) -> Vec<Tuple<SjIn>> {
+    let mut rng = Rng::new(seed);
+    let mut ts = start_ts;
+    (0..n)
+        .map(|_| {
+            ts += rng.gen_range(2) as i64;
+            let v = (rng.gen_range(30) as i32, rng.gen_range(30) as f32);
+            if rng.chance(0.5) {
+                Tuple::data_on(ts, 0, Either::L(v))
+            } else {
+                Tuple::data_on(ts, 1, Either::R(v))
+            }
+        })
+        .collect()
+}
+
+fn join_oracle(tuples: &[Tuple<SjIn>], ws: i64) -> Vec<(i32, i32)> {
+    let pred = Band;
+    let mut out = Vec::new();
+    for i in 0..tuples.len() {
+        for j in 0..i {
+            let (a, b) = (&tuples[i], &tuples[j]);
+            if (a.ts - b.ts).abs() >= ws {
+                continue;
+            }
+            match (&a.payload, &b.payload) {
+                (Either::L(l), Either::R(r)) | (Either::R(r), Either::L(l)) => {
+                    if pred.matches(l, r) {
+                        out.push(pred.combine(l, r));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Run a join workload with reconfigurations at given positions:
+/// `(after_n_tuples, new_instance_set)`.
+fn run_elastic(
+    tuples: &[Tuple<SjIn>],
+    ws: i64,
+    initial: usize,
+    max: usize,
+    reconfigs: &[(usize, Vec<usize>)],
+    expected: usize,
+) -> (Vec<(i32, i32)>, Vec<(u64, f64)>, Vec<usize>) {
+    let def = scalejoin_op("sj", ws, Band, 64);
+    // Small gate: reconfiguration-time measurements include the time the
+    // control tuple spends queued behind unprocessed tuples, so bound the
+    // backlog the way the paper's flow control does.
+    let (mut engine, mut ingress, mut readers) = VsnEngine::setup(
+        def,
+        VsnOptions { initial, max, upstreams: 1, gate_capacity: 2048, ..Default::default() },
+    );
+    let control = engine.control.clone();
+    // Feed from a separate thread: with flow control on, the feeder can
+    // block on backpressure until the egress (this thread) drains.
+    let feed_tuples = tuples.to_vec();
+    let feed_rcs = reconfigs.to_vec();
+    let feed_control = control.clone();
+    let mut ing0 = ingress.remove(0);
+    let feeder = std::thread::spawn(move || {
+        let mut next_rc = 0usize;
+        for (i, t) in feed_tuples.iter().enumerate() {
+            if next_rc < feed_rcs.len() && feed_rcs[next_rc].0 == i {
+                let set = feed_rcs[next_rc].1.clone();
+                feed_control.reconfigure(set.clone(), Mapper::over(set));
+                next_rc += 1;
+            }
+            ing0.add(t.clone());
+        }
+        ing0.heartbeat(10_000_000);
+    });
+    let mut out = Vec::new();
+    let mut reader = readers.remove(0);
+    let deadline = std::time::Instant::now() + Duration::from_secs(40);
+    while out.len() < expected && std::time::Instant::now() < deadline {
+        match reader.get() {
+            Some(t) if t.kind.is_data() => out.push(t.payload),
+            Some(_) => {}
+            None => std::thread::sleep(Duration::from_micros(200)),
+        }
+    }
+    feeder.join().unwrap();
+    // give completions a moment to be recorded
+    let t0 = std::time::Instant::now();
+    while engine.control.completion_times().len() < reconfigs.len()
+        && t0.elapsed() < Duration::from_secs(5)
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let completions = engine.control.completion_times();
+    let final_instances = engine.epoch_config().instances.as_ref().clone();
+    engine.shutdown();
+    out.sort();
+    (out, completions, final_instances)
+}
+
+#[test]
+fn provisioning_preserves_semantics() {
+    let tuples = gen_join(31, 2000, 0);
+    let oracle = join_oracle(&tuples, 80);
+    // 1 → 3 instances midway
+    let (got, completions, finals) =
+        run_elastic(&tuples, 80, 1, 4, &[(1000, vec![0, 1, 2])], oracle.len());
+    assert_eq!(got, oracle, "matches must survive provisioning");
+    assert_eq!(completions.len(), 1, "reconfig must complete");
+    assert_eq!(finals, vec![0, 1, 2]);
+}
+
+#[test]
+fn decommissioning_preserves_semantics() {
+    let tuples = gen_join(32, 2000, 0);
+    let oracle = join_oracle(&tuples, 80);
+    // 3 → 1 instances midway
+    let (got, completions, finals) =
+        run_elastic(&tuples, 80, 3, 4, &[(1000, vec![0])], oracle.len());
+    assert_eq!(got, oracle, "matches must survive decommissioning");
+    assert_eq!(completions.len(), 1);
+    assert_eq!(finals, vec![0]);
+}
+
+#[test]
+fn multiple_sequential_reconfigs() {
+    let tuples = gen_join(33, 3000, 0);
+    let oracle = join_oracle(&tuples, 60);
+    let rcs = vec![
+        (500, vec![0, 1]),
+        (1200, vec![0, 1, 2, 3]),
+        (1900, vec![2, 3]),
+        (2500, vec![0, 3]),
+    ];
+    let (got, completions, finals) = run_elastic(&tuples, 60, 1, 4, &rcs, oracle.len());
+    assert_eq!(got, oracle, "matches must survive repeated reconfiguration");
+    assert_eq!(completions.len(), 4);
+    assert_eq!(finals, vec![0, 3]);
+}
+
+#[test]
+fn load_balance_only_reconfig() {
+    // same instance set, new mapper: no membership changes, still atomic
+    let tuples = gen_join(34, 1500, 0);
+    let oracle = join_oracle(&tuples, 60);
+    let (got, completions, finals) =
+        run_elastic(&tuples, 60, 2, 4, &[(700, vec![0, 1])], oracle.len());
+    assert_eq!(got, oracle);
+    assert_eq!(completions.len(), 1);
+    assert_eq!(finals, vec![0, 1]);
+}
+
+#[test]
+fn reconfiguration_time_under_40ms() {
+    // The paper's headline: reconfigurations < 40 ms even provisioning
+    // tens of instances. On this container we provision 1 → 4.
+    let tuples = gen_join(35, 4000, 0);
+    let oracle = join_oracle(&tuples, 40);
+    let (_, completions, _) =
+        run_elastic(&tuples, 40, 1, 6, &[(2000, vec![0, 1, 2, 3, 4, 5])], oracle.len());
+    assert_eq!(completions.len(), 1);
+    let (_, ms) = completions[0];
+    // The paper bound (40 ms) is asserted in release benches; debug builds
+    // on a 1-core container get slack for the unoptimized hot path.
+    let bound = if cfg!(debug_assertions) { 250.0 } else { 40.0 };
+    assert!(ms < bound, "reconfiguration took {ms:.2} ms (bound: {bound} ms)");
+}
+
+#[test]
+fn state_is_not_transferred() {
+    // The shared σ object is the same Arc before and after reconfigs —
+    // this is structural in VSN, but assert the externally visible part:
+    // a reconfiguration completes while the window holds live state, and
+    // counts seen by instances stay consistent (no resets, no double
+    // counting → oracle equality in the other tests). Here: reconfig with
+    // a *huge* in-flight window, then verify continued matching.
+    let mut tuples = gen_join(36, 800, 0);
+    tuples.extend(gen_join(37, 800, tuples.last().unwrap().ts));
+    let oracle = join_oracle(&tuples, 2000); // window spans the reconfig
+    let (got, completions, _) = run_elastic(&tuples, 2000, 1, 4, &[(800, vec![1, 2])], oracle.len());
+    assert_eq!(got, oracle, "pre-reconfig state must remain visible to new owners");
+    assert_eq!(completions.len(), 1);
+}

@@ -1,0 +1,155 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! cross-check the compiled Pallas kernels against the rust scalar
+//! predicate — the L1 ↔ L3 numerical contract.
+//!
+//! Requires `make artifacts`; tests are skipped (with a notice) if the
+//! artifacts are absent.
+
+use stretch::runtime::{artifacts_available, artifacts_dir, JoinKernel, PjrtRuntime, BATCH};
+use stretch::util::Rng;
+
+fn need_artifacts() -> bool {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return false;
+    }
+    true
+}
+
+/// The rust-side scalar band predicate (the oracle for the kernel).
+fn scalar_band(px: f32, py: f32, a: f32, b: f32) -> bool {
+    (px - a).abs() <= 10.0 && (py - b).abs() <= 10.0
+}
+
+#[test]
+fn load_and_run_band_join_artifact() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exec = rt.load_artifact(&artifacts_dir(), "band_join_b16_w512").unwrap();
+    let px = [5.0f32; 16];
+    let py = [5.0f32; 16];
+    let mut wa = vec![f32::INFINITY; 512];
+    let mut wb = vec![f32::INFINITY; 512];
+    wa[0] = 10.0; // |5-10| <= 10 → match
+    wb[0] = 10.0;
+    wa[1] = 50.0; // no match
+    wb[1] = 5.0;
+    let outs = exec
+        .run(&[
+            xla::Literal::vec1(&px),
+            xla::Literal::vec1(&py),
+            xla::Literal::vec1(&wa),
+            xla::Literal::vec1(&wb),
+        ])
+        .unwrap();
+    let mask: Vec<i8> = outs[0].to_vec().unwrap();
+    let counts: Vec<i32> = outs[1].to_vec().unwrap();
+    assert_eq!(mask.len(), 16 * 512);
+    assert_eq!(mask[0], 1);
+    assert_eq!(mask[1], 0);
+    assert_eq!(counts, vec![1i32; 16]);
+}
+
+#[test]
+fn join_kernel_matches_scalar_predicate() {
+    if !need_artifacts() {
+        return;
+    }
+    let mut rng = Rng::new(99);
+    let mut kernel = JoinKernel::load().unwrap();
+    let mut mask = Vec::new();
+    for trial in 0..5 {
+        let b = rng.range(1, BATCH + 1);
+        let w = rng.range(1, 700);
+        let px: Vec<f32> = (0..b).map(|_| rng.f32_range(0.0, 60.0)).collect();
+        let py: Vec<f32> = (0..b).map(|_| rng.f32_range(0.0, 60.0)).collect();
+        let wa: Vec<f32> = (0..w).map(|_| rng.f32_range(0.0, 60.0)).collect();
+        let wb: Vec<f32> = (0..w).map(|_| rng.f32_range(0.0, 60.0)).collect();
+        kernel.eval_mask(&px, &py, &wa, &wb, &mut mask).unwrap();
+        assert_eq!(mask.len(), b * w, "trial {trial}");
+        for p in 0..b {
+            for i in 0..w {
+                let want = scalar_band(px[p], py[p], wa[i], wb[i]);
+                assert_eq!(
+                    mask[p * w + i] != 0,
+                    want,
+                    "trial {trial} probe {p} window {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn join_kernel_chunks_large_windows() {
+    if !need_artifacts() {
+        return;
+    }
+    // window larger than the largest compiled variant (8192) forces the
+    // chunked path
+    let mut rng = Rng::new(7);
+    let mut kernel = JoinKernel::load().unwrap();
+    let w = 9000usize;
+    let wa: Vec<f32> = (0..w).map(|_| rng.f32_range(0.0, 100.0)).collect();
+    let wb: Vec<f32> = (0..w).map(|_| rng.f32_range(0.0, 100.0)).collect();
+    let mut idx = Vec::new();
+    kernel.probe_indices(50.0, 50.0, &wa, &wb, &mut idx).unwrap();
+    let expected: Vec<u32> = (0..w)
+        .filter(|&i| scalar_band(50.0, 50.0, wa[i], wb[i]))
+        .map(|i| i as u32)
+        .collect();
+    assert_eq!(idx, expected);
+    assert!(!idx.is_empty());
+}
+
+#[test]
+fn window_count_artifact_runs() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exec = rt.load_artifact(&artifacts_dir(), "window_count_n1024_k1024").unwrap();
+    let mut keys = vec![-1i32; 1024];
+    keys[0] = 3;
+    keys[1] = 3;
+    keys[2] = 7;
+    let outs = exec.run(&[xla::Literal::vec1(&keys)]).unwrap();
+    let counts: Vec<i32> = outs[0].to_vec().unwrap();
+    assert_eq!(counts.len(), 1024);
+    assert_eq!(counts[3], 2);
+    assert_eq!(counts[7], 1);
+    assert_eq!(counts.iter().sum::<i32>(), 3);
+}
+
+#[test]
+fn hedge_artifact_runs() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exec = rt.load_artifact(&artifacts_dir(), "hedge_b16_w512").unwrap();
+    let mut p_nd = [0.0f32; 16];
+    let mut p_id = [0i32; 16];
+    p_nd[0] = 0.05; // probe: nd=0.05, id=1
+    p_id[0] = 1;
+    let mut w_nd = vec![0.0f32; 512];
+    let mut w_id = vec![-1i32; 512];
+    w_nd[0] = -0.05; // ratio -1.0, distinct id → match
+    w_id[0] = 2;
+    w_nd[1] = -0.05; // same id → no match
+    w_id[1] = 1;
+    w_nd[2] = 0.05; // same sign → no match
+    w_id[2] = 3;
+    let outs = exec
+        .run(&[
+            xla::Literal::vec1(&p_nd),
+            xla::Literal::vec1(&p_id),
+            xla::Literal::vec1(&w_nd),
+            xla::Literal::vec1(&w_id),
+        ])
+        .unwrap();
+    let mask: Vec<i8> = outs[0].to_vec().unwrap();
+    assert_eq!(&mask[0..3], &[1, 0, 0]);
+}

@@ -1,0 +1,262 @@
+//! Integration: the SN baseline and the VSN (STRETCH) engine produce the
+//! same results for the same inputs — the semantic-equivalence claim of
+//! Theorems 2/3 — and VSN does it without data duplication (Observation 2).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use stretch::engine::{SnEngine, SnOptions, VsnEngine, VsnOptions};
+use stretch::operator::aggregate::count_per_key_op;
+use stretch::operator::join::{scalejoin_op, Either, JoinPredicate};
+use stretch::time::WindowSpec;
+use stretch::tuple::{Key, Tuple};
+use stretch::util::Rng;
+
+type WcIn = Arc<Vec<Key>>;
+
+/// Generate a multi-key workload (each tuple carries 1-4 keys).
+fn gen_multikey(seed: u64, n: usize, key_space: u64) -> Vec<Tuple<WcIn>> {
+    let mut rng = Rng::new(seed);
+    let mut ts = 0i64;
+    (0..n)
+        .map(|_| {
+            ts += rng.gen_range(3) as i64;
+            let k = rng.range(1, 5);
+            let mut keys: Vec<Key> = (0..k).map(|_| rng.gen_range(key_space)).collect();
+            keys.sort_unstable();
+            keys.dedup();
+            Tuple::data(ts, Arc::new(keys))
+        })
+        .collect()
+}
+
+/// Brute-force oracle: (window_right, key) → count.
+fn count_oracle(tuples: &[Tuple<WcIn>], spec: WindowSpec, horizon: i64) -> BTreeMap<(i64, Key), u64> {
+    let mut m = BTreeMap::new();
+    for t in tuples {
+        let mut l = spec.earliest_win_l(t.ts);
+        while l <= spec.latest_win_l(t.ts) {
+            if l + spec.size <= horizon {
+                for &k in t.payload.iter() {
+                    *m.entry((l + spec.size, k)).or_default() += 1;
+                }
+            }
+            l += spec.advance;
+        }
+    }
+    m
+}
+
+fn collect_vsn_counts(
+    tuples: &[Tuple<WcIn>],
+    spec: WindowSpec,
+    m: usize,
+    horizon: i64,
+) -> (BTreeMap<(i64, Key), u64>, u64) {
+    let def = count_per_key_op::<WcIn, _>("wc", spec, |t, keys| keys.extend_from_slice(&t.payload));
+    let (mut engine, mut ingress, mut readers) = VsnEngine::setup(
+        def,
+        VsnOptions { initial: m, max: m + 2, upstreams: 1, ..Default::default() },
+    );
+    for t in tuples {
+        ingress[0].add(t.clone());
+    }
+    ingress[0].heartbeat(horizon);
+    let expected = count_oracle(tuples, spec, horizon).len() as u64;
+    let mut out = BTreeMap::new();
+    let mut reader = readers.remove(0);
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let mut got = 0u64;
+    while got < expected && std::time::Instant::now() < deadline {
+        match reader.get() {
+            Some(t) if t.kind.is_data() => {
+                out.insert((t.ts, t.payload.0), t.payload.1);
+                got += 1;
+            }
+            Some(_) => {}
+            None => std::thread::sleep(Duration::from_micros(200)),
+        }
+    }
+    let published = engine.esg_in.published();
+    engine.shutdown();
+    (out, published)
+}
+
+fn collect_sn_counts(
+    tuples: &[Tuple<WcIn>],
+    spec: WindowSpec,
+    pi: usize,
+    horizon: i64,
+) -> (BTreeMap<(i64, Key), u64>, u64) {
+    let def = count_per_key_op::<WcIn, _>("wc", spec, |t, keys| keys.extend_from_slice(&t.payload));
+    let (mut engine, mut ingress, mut egress) = SnEngine::setup(
+        def,
+        SnOptions { parallelism: pi, upstreams: 1, ..Default::default() },
+    );
+    for t in tuples {
+        ingress[0].forward(t.clone());
+    }
+    ingress[0].heartbeat(horizon);
+    let expected = count_oracle(tuples, spec, horizon).len() as u64;
+    let mut out = BTreeMap::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while (out.len() as u64) < expected && std::time::Instant::now() < deadline {
+        let drained = egress.poll_tuples(&mut |t: &Tuple<(Key, u64)>| {
+            out.insert((t.ts, t.payload.0), t.payload.1);
+        });
+        if drained == 0 {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let forwarded = engine.forwarded.load(std::sync::atomic::Ordering::Relaxed);
+    engine.shutdown();
+    (out, forwarded)
+}
+
+#[test]
+fn vsn_counting_matches_oracle() {
+    let spec = WindowSpec::new(50, 50);
+    let tuples = gen_multikey(11, 3000, 40);
+    let horizon = 1_000_000;
+    let oracle = count_oracle(&tuples, spec, horizon);
+    let (got, published) = collect_vsn_counts(&tuples, spec, 2, horizon);
+    assert_eq!(got, oracle);
+    // Observation 2 — no duplication: each input published exactly once
+    // (+ the single end-of-stream heartbeat clock advance, not an entry)
+    assert!(published as usize <= tuples.len() + 16, "published={published}");
+}
+
+#[test]
+fn sn_counting_matches_oracle_and_duplicates() {
+    let spec = WindowSpec::new(50, 50);
+    let tuples = gen_multikey(12, 3000, 40);
+    let horizon = 1_000_000;
+    let oracle = count_oracle(&tuples, spec, horizon);
+    let (got, forwarded) = collect_sn_counts(&tuples, spec, 3, horizon);
+    assert_eq!(got, oracle);
+    // Theorem 1: multi-key tuples are duplicated across instances
+    assert!(
+        forwarded as usize > tuples.len(),
+        "expected duplication: forwarded={forwarded} inputs={}",
+        tuples.len()
+    );
+}
+
+#[test]
+fn sn_and_vsn_agree() {
+    let spec = WindowSpec::new(30, 90); // sliding
+    let tuples = gen_multikey(13, 2000, 25);
+    let horizon = 500_000;
+    let (vsn, _) = collect_vsn_counts(&tuples, spec, 3, horizon);
+    let (sn, _) = collect_sn_counts(&tuples, spec, 3, horizon);
+    assert_eq!(vsn, sn);
+}
+
+/// The §8.3 band predicate over compact numeric payloads.
+struct Band;
+impl JoinPredicate for Band {
+    type L = (i32, f32);
+    type R = (i32, f32);
+    type Out = (i32, i32);
+    fn matches(&self, l: &(i32, f32), r: &(i32, f32)) -> bool {
+        (l.0 - r.0).abs() <= 10 && (l.1 - r.1).abs() <= 10.0
+    }
+    fn combine(&self, l: &(i32, f32), r: &(i32, f32)) -> (i32, i32) {
+        (l.0, r.0)
+    }
+}
+
+type SjIn = Either<(i32, f32), (i32, f32)>;
+
+fn gen_join(seed: u64, n: usize, range: u64) -> Vec<Tuple<SjIn>> {
+    let mut rng = Rng::new(seed);
+    let mut ts = 0i64;
+    (0..n)
+        .map(|_| {
+            ts += rng.gen_range(2) as i64;
+            let v = (rng.gen_range(range) as i32, rng.gen_range(range) as f32);
+            if rng.chance(0.5) {
+                Tuple::data_on(ts, 0, Either::L(v))
+            } else {
+                Tuple::data_on(ts, 1, Either::R(v))
+            }
+        })
+        .collect()
+}
+
+/// Brute-force join oracle (multiset of combined payloads). A pair
+/// matches iff the later tuple arrives before the earlier one slid out
+/// of the WS window (strict: |Δts| < WS given WA = δ purging).
+fn join_oracle(tuples: &[Tuple<SjIn>], ws: i64) -> Vec<(i32, i32)> {
+    let pred = Band;
+    let mut out = Vec::new();
+    for i in 0..tuples.len() {
+        for j in 0..i {
+            let (a, b) = (&tuples[i], &tuples[j]);
+            if (a.ts - b.ts).abs() >= ws {
+                continue;
+            }
+            match (&a.payload, &b.payload) {
+                (Either::L(l), Either::R(r)) | (Either::R(r), Either::L(l)) => {
+                    if pred.matches(l, r) {
+                        out.push(pred.combine(l, r));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+fn run_vsn_join(tuples: &[Tuple<SjIn>], ws: i64, m: usize, expected: usize) -> Vec<(i32, i32)> {
+    let def = scalejoin_op("sj", ws, Band, 64);
+    let (mut engine, mut ingress, mut readers) = VsnEngine::setup(
+        def,
+        VsnOptions { initial: m, max: m + 2, upstreams: 1, ..Default::default() },
+    );
+    // feed from a separate thread (backpressure can block the feeder)
+    let feed = tuples.to_vec();
+    let mut ing0 = ingress.remove(0);
+    let feeder = std::thread::spawn(move || {
+        for t in feed {
+            ing0.add(t);
+        }
+        ing0.heartbeat(10_000_000);
+    });
+    let mut out = Vec::new();
+    let mut reader = readers.remove(0);
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    while out.len() < expected && std::time::Instant::now() < deadline {
+        match reader.get() {
+            Some(t) if t.kind.is_data() => out.push(t.payload),
+            Some(_) => {}
+            None => std::thread::sleep(Duration::from_micros(200)),
+        }
+    }
+    feeder.join().unwrap();
+    engine.shutdown();
+    out.sort();
+    out
+}
+
+#[test]
+fn vsn_scalejoin_matches_bruteforce() {
+    let tuples = gen_join(21, 1500, 40);
+    let oracle = join_oracle(&tuples, 100);
+    assert!(!oracle.is_empty(), "degenerate workload");
+    let got = run_vsn_join(&tuples, 100, 1, oracle.len());
+    assert_eq!(got, oracle);
+}
+
+#[test]
+fn vsn_scalejoin_parallelism_invariant() {
+    let tuples = gen_join(22, 1200, 30);
+    let oracle = join_oracle(&tuples, 80);
+    let got1 = run_vsn_join(&tuples, 80, 1, oracle.len());
+    let got3 = run_vsn_join(&tuples, 80, 3, oracle.len());
+    assert_eq!(got1, oracle);
+    assert_eq!(got3, oracle, "Π=3 must find exactly the same matches");
+}

@@ -1,0 +1,259 @@
+//! Property tests over the coordinator invariants (randomized via the
+//! in-repo testkit; reproduce failures with STRETCH_PROP_SEED).
+//!
+//! Invariants (DESIGN.md §4):
+//! * ESG delivery: every reader sees every ready tuple exactly once, in
+//!   non-decreasing ts order, the same order for all readers;
+//! * window math: earliest/latest window boundaries match brute force;
+//! * SN ≡ VSN: identical output multisets under random workloads;
+//! * elasticity: random reconfiguration sequences preserve ScaleJoin's
+//!   exact match set (Theorems 3/4).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use stretch::engine::{VsnEngine, VsnOptions};
+use stretch::operator::join::{scalejoin_op, Either, JoinPredicate};
+use stretch::scalegate::{scale_gate, Esg, EsgConfig};
+use stretch::testkit::{check, sorted_timestamps};
+use stretch::time::WindowSpec;
+use stretch::tuple::{Mapper, Tuple};
+use stretch::util::Backoff;
+
+#[test]
+fn prop_window_boundaries_match_bruteforce() {
+    check("window boundaries", 200, |tc| {
+        let wa = tc.rng.range(1, 50) as i64;
+        let ws = wa * tc.rng.range(1, 8) as i64;
+        let spec = WindowSpec::new(wa, ws);
+        let ts = tc.rng.gen_range(10_000) as i64 - 5_000;
+        let e = spec.earliest_win_l(ts);
+        let l = spec.latest_win_l(ts);
+        // brute force: scan aligned boundaries around ts
+        let mut brute: Vec<i64> = Vec::new();
+        let mut b = ((ts - ws) / wa - 2) * wa;
+        while b <= ts + wa {
+            if b <= ts && ts < b + ws && b % wa == 0 {
+                brute.push(b);
+            }
+            b += wa;
+        }
+        assert_eq!(e, *brute.first().unwrap(), "earliest");
+        assert_eq!(l, *brute.last().unwrap(), "latest");
+    });
+}
+
+#[test]
+fn prop_esg_same_order_exactly_once() {
+    check("esg delivery", 25, |tc| {
+        let n_src = tc.rng.range(1, 5);
+        let n_rdr = tc.rng.range(1, 4);
+        let per_src = tc.rng.range(10, 400);
+        let (_g, mut srcs, mut rdrs) =
+            scale_gate::<Tuple<(usize, usize)>>(n_src, n_rdr, 1 << 14);
+        // interleave sorted streams from all sources on one thread
+        let mut streams: Vec<Vec<i64>> = (0..n_src)
+            .map(|_| sorted_timestamps(&mut tc.rng, per_src, 0, 4))
+            .collect();
+        let mut idx = vec![0usize; n_src];
+        loop {
+            // pick the source with the smallest next ts (keeps per-source order)
+            let mut pick = None;
+            for s in 0..n_src {
+                if idx[s] < streams[s].len() {
+                    let ts = streams[s][idx[s]];
+                    if pick.map_or(true, |(bts, _)| ts < bts) {
+                        pick = Some((ts, s));
+                    }
+                }
+            }
+            let Some((ts, s)) = pick else { break };
+            srcs[s].add(Tuple::data(ts, (s, idx[s])));
+            idx[s] += 1;
+        }
+        for s in srcs.iter_mut() {
+            s.advance_clock(i64::MAX / 8);
+        }
+        streams.iter_mut().for_each(|v| v.clear());
+        let total = per_src * n_src;
+        let mut seqs: Vec<Vec<(i64, (usize, usize))>> = Vec::new();
+        for r in rdrs.iter_mut() {
+            let mut seq = Vec::with_capacity(total);
+            let mut backoff = Backoff::active();
+            while seq.len() < total {
+                match r.get() {
+                    Some(t) => {
+                        seq.push((t.ts, t.payload));
+                        backoff.reset();
+                    }
+                    None => backoff.snooze(),
+                }
+            }
+            seqs.push(seq);
+        }
+        // identical sequence for all readers, sorted, exactly-once
+        for s in &seqs[1..] {
+            assert_eq!(s, &seqs[0], "readers diverged");
+        }
+        assert!(seqs[0].windows(2).all(|w| w[0].0 <= w[1].0), "ts order violated");
+        let mut ids: Vec<(usize, usize)> = seqs[0].iter().map(|&(_, p)| p).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), total, "duplicate or lost tuples");
+    });
+}
+
+#[test]
+fn prop_esg_membership_ops_preserve_order() {
+    check("esg elastic membership", 15, |tc| {
+        let (g, mut srcs, mut rdrs): (Esg<Tuple<u64>>, _, _) = Esg::new(
+            EsgConfig { max_sources: 3, max_readers: 3, capacity: 1 << 14, source_queue: 4096 },
+            2,
+            1,
+        );
+        let n = tc.rng.range(50, 300);
+        let mut ts = 0i64;
+        let mut seen = Vec::new();
+        let mut seq = 0u64;
+        let add_reader_at = tc.rng.range(10, n);
+        let remove_source_at = tc.rng.range(10, n);
+        for i in 0..n {
+            ts += tc.rng.gen_range(3) as i64;
+            let s = tc.rng.range(0, 2);
+            if g.source_active(s) {
+                srcs[s].add(Tuple::data(ts, seq));
+                seq += 1;
+            }
+            if i == add_reader_at {
+                assert!(g.add_readers(&[1], 0));
+            }
+            if i == remove_source_at {
+                g.remove_sources(&[1]);
+            }
+            while let Some(t) = rdrs[0].get() {
+                seen.push(t.ts);
+            }
+        }
+        srcs[0].advance_clock(i64::MAX / 8);
+        while let Some(t) = rdrs[0].get() {
+            seen.push(t.ts);
+        }
+        assert!(seen.windows(2).all(|w| w[0] <= w[1]), "order violated across membership ops");
+        // the added reader sees a sorted suffix too
+        let mut r1 = Vec::new();
+        while let Some(t) = rdrs[1].get() {
+            r1.push(t.ts);
+        }
+        assert!(r1.windows(2).all(|w| w[0] <= w[1]));
+    });
+}
+
+// --- randomized elastic ScaleJoin vs brute force ----------------------
+
+struct Band;
+impl JoinPredicate for Band {
+    type L = (i32, f32);
+    type R = (i32, f32);
+    type Out = (i32, i32);
+    fn matches(&self, l: &(i32, f32), r: &(i32, f32)) -> bool {
+        (l.0 - r.0).abs() <= 10 && (l.1 - r.1).abs() <= 10.0
+    }
+    fn combine(&self, l: &(i32, f32), r: &(i32, f32)) -> (i32, i32) {
+        (l.0, r.0)
+    }
+}
+type SjIn = Either<(i32, f32), (i32, f32)>;
+
+#[test]
+fn prop_random_reconfigs_preserve_join_semantics() {
+    check("elastic scalejoin", 6, |tc| {
+        let n = tc.rng.range(400, 1200);
+        let ws = tc.rng.range(20, 120) as i64;
+        let max = 4usize;
+        // workload
+        let mut ts = 0i64;
+        let tuples: Vec<Tuple<SjIn>> = (0..n)
+            .map(|_| {
+                ts += tc.rng.gen_range(2) as i64;
+                let v = (tc.rng.gen_range(30) as i32, tc.rng.gen_range(30) as f32);
+                if tc.rng.chance(0.5) {
+                    Tuple::data_on(ts, 0, Either::L(v))
+                } else {
+                    Tuple::data_on(ts, 1, Either::R(v))
+                }
+            })
+            .collect();
+        // oracle
+        let pred = Band;
+        let mut oracle = Vec::new();
+        for i in 0..tuples.len() {
+            for j in 0..i {
+                let (a, b) = (&tuples[i], &tuples[j]);
+                if (a.ts - b.ts).abs() >= ws {
+                    continue;
+                }
+                match (&a.payload, &b.payload) {
+                    (Either::L(l), Either::R(r)) | (Either::R(r), Either::L(l)) => {
+                        if pred.matches(l, r) {
+                            oracle.push(pred.combine(l, r));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        oracle.sort();
+        // random reconfiguration plan: 0-3 switches to random subsets
+        let n_rc = tc.rng.range(0, 4);
+        let mut rc_points: Vec<usize> = (0..n_rc).map(|_| tc.rng.range(50, n - 20)).collect();
+        rc_points.sort_unstable();
+        rc_points.dedup();
+        let rcs: Vec<(usize, Vec<usize>)> = rc_points
+            .into_iter()
+            .map(|at| {
+                let k = tc.rng.range(1, max + 1);
+                let mut ids: Vec<usize> = (0..max).collect();
+                tc.rng.shuffle(&mut ids);
+                ids.truncate(k);
+                ids.sort_unstable();
+                (at, ids)
+            })
+            .collect();
+        // run
+        let def = scalejoin_op("prop-sj", ws, Band, 32);
+        let initial = tc.rng.range(1, max + 1);
+        let (mut engine, mut ingress, mut readers) = VsnEngine::setup(
+            def,
+            VsnOptions { initial, max, upstreams: 1, ..Default::default() },
+        );
+        let control = engine.control.clone();
+        let mut ing = ingress.remove(0);
+        let feed = tuples.clone();
+        let feeder = std::thread::spawn(move || {
+            let mut next = 0usize;
+            for (i, t) in feed.into_iter().enumerate() {
+                if next < rcs.len() && rcs[next].0 == i {
+                    let set = rcs[next].1.clone();
+                    control.reconfigure(set.clone(), Mapper::over(set));
+                    next += 1;
+                }
+                ing.add(t);
+            }
+            ing.heartbeat(10_000_000);
+        });
+        let mut got = Vec::new();
+        let mut reader = readers.remove(0);
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while got.len() < oracle.len() && std::time::Instant::now() < deadline {
+            match reader.get() {
+                Some(t) if t.kind.is_data() => got.push(t.payload),
+                Some(_) => {}
+                None => std::thread::sleep(Duration::from_micros(100)),
+            }
+        }
+        feeder.join().unwrap();
+        engine.shutdown();
+        got.sort();
+        assert_eq!(got, oracle, "seed {:#x}: match set diverged", tc.seed);
+    });
+}
