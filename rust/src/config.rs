@@ -41,17 +41,42 @@ impl fmt::Display for ConfigValue {
     }
 }
 
-/// Configuration parse/validation errors.
-#[derive(Debug, thiserror::Error)]
+/// Configuration parse/validation errors (hand-rolled Display/Error —
+/// the crate is std-only, no thiserror).
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("line {line}: {msg}")]
     Parse { line: usize, msg: String },
-    #[error("missing key `{0}`")]
     Missing(String),
-    #[error("key `{key}`: expected {expected}, got `{got}`")]
     Type { key: String, expected: &'static str, got: String },
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+            ConfigError::Missing(key) => write!(f, "missing key `{key}`"),
+            ConfigError::Type { key, expected, got } => {
+                write!(f, "key `{key}`: expected {expected}, got `{got}`")
+            }
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 /// A parsed config: `section.key` → value. Keys outside any section live

@@ -28,6 +28,11 @@ pub struct ReconfigCmd {
 pub struct ControlPlane {
     queues: Vec<Mutex<VecDeque<ReconfigCmd>>>,
     next_epoch: AtomicU64,
+    /// Issue stamps of in-flight control tuples, keyed by epoch: stamped
+    /// when the control tuple enters the stage's ESG_in (by the ingress
+    /// wrapper or a pipeline control injector), consumed by the instance
+    /// that completes the reconfiguration.
+    issued: Mutex<std::collections::HashMap<u64, Instant>>,
     /// Completed reconfigurations: (epoch, wall ms from issue to done).
     pub completions: Mutex<Vec<(u64, f64)>>,
 }
@@ -37,14 +42,20 @@ impl ControlPlane {
         Arc::new(ControlPlane {
             queues: (0..upstreams).map(|_| Mutex::new(VecDeque::new())).collect(),
             next_epoch: AtomicU64::new(first_epoch + 1),
+            issued: Mutex::new(std::collections::HashMap::new()),
             completions: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Claim the next epoch id (control injectors build their own specs).
+    pub fn allocate_epoch(&self) -> u64 {
+        self.next_epoch.fetch_add(1, Ordering::AcqRel)
     }
 
     /// `reconfigure(𝕆*, f_μ*)`: enqueue the next-epoch parameters on every
     /// upstream's control queue. Returns the new epoch id.
     pub fn reconfigure(&self, instances: Vec<InstanceId>, mapper: Mapper) -> u64 {
-        let epoch = self.next_epoch.fetch_add(1, Ordering::AcqRel);
+        let epoch = self.allocate_epoch();
         let cmd = ReconfigCmd {
             spec: Arc::new(ReconfigSpec { epoch, instances: Arc::new(instances), mapper }),
             issued: Instant::now(),
@@ -53,6 +64,20 @@ impl ControlPlane {
             q.lock().unwrap().push_back(cmd.clone());
         }
         epoch
+    }
+
+    /// Stamp the moment epoch `epoch`'s control tuple entered the gate.
+    pub fn note_issued(&self, epoch: u64, at: Instant) {
+        self.issued.lock().unwrap().insert(epoch, at);
+    }
+
+    /// Record completion of epoch `epoch` if its issue stamp is pending
+    /// (idempotent across the instances leaving the barrier).
+    pub fn complete(&self, epoch: u64) {
+        let at = self.issued.lock().unwrap().remove(&epoch);
+        if let Some(at) = at {
+            self.record_completion(epoch, at);
+        }
     }
 
     /// Record a completed reconfiguration (called by the winning instance).
@@ -87,19 +112,11 @@ pub struct StretchIngress<P: Clone + Default + Send + Sync + 'static> {
     control: Arc<ControlPlane>,
     upstream: usize,
     last_ts: EventTime,
-    /// Issue stamps of forwarded control tuples, keyed by epoch — the
-    /// completing instance needs them; shared via the control plane.
-    issued: Arc<Mutex<std::collections::HashMap<u64, Instant>>>,
 }
 
 impl<P: Clone + Default + Send + Sync + 'static> StretchIngress<P> {
-    pub fn new(
-        src: SourceHandle<Tuple<P>>,
-        control: Arc<ControlPlane>,
-        upstream: usize,
-        issued: Arc<Mutex<std::collections::HashMap<u64, Instant>>>,
-    ) -> Self {
-        StretchIngress { src, control, upstream, last_ts: crate::time::TIME_MIN, issued }
+    pub fn new(src: SourceHandle<Tuple<P>>, control: Arc<ControlPlane>, upstream: usize) -> Self {
+        StretchIngress { src, control, upstream, last_ts: crate::time::TIME_MIN }
     }
 
     /// Alg. 5: drain pending control commands as control tuples carrying
@@ -110,7 +127,7 @@ impl<P: Clone + Default + Send + Sync + 'static> StretchIngress<P> {
                 // γ = τ of the last forwarded tuple (TIME_MIN before any —
                 // then the first data tuple will trigger immediately).
                 let ts = self.last_ts;
-                self.issued.lock().unwrap().insert(cmd.spec.epoch, cmd.issued);
+                self.control.note_issued(cmd.spec.epoch, cmd.issued);
                 self.src.add(Tuple {
                     ts,
                     kind: crate::tuple::Kind::Control(cmd.spec.clone()),
@@ -131,7 +148,7 @@ impl<P: Clone + Default + Send + Sync + 'static> StretchIngress<P> {
         if self.control.has_pending(self.upstream) {
             while let Some(cmd) = self.control.drain(self.upstream) {
                 let cts = self.last_ts;
-                self.issued.lock().unwrap().insert(cmd.spec.epoch, cmd.issued);
+                self.control.note_issued(cmd.spec.epoch, cmd.issued);
                 // payload is never read for control tuples
                 let mut t: Tuple<P> = Tuple::control(cts, ReconfigSpec {
                     epoch: cmd.spec.epoch,
@@ -178,6 +195,17 @@ mod tests {
         let cp = ControlPlane::new(1, 5);
         assert_eq!(cp.reconfigure(vec![0], Mapper::hash_mod(1)), 6);
         assert_eq!(cp.reconfigure(vec![0], Mapper::hash_mod(1)), 7);
+    }
+
+    #[test]
+    fn complete_consumes_issue_stamp_once() {
+        let cp = ControlPlane::new(1, 0);
+        let e = cp.allocate_epoch();
+        cp.note_issued(e, Instant::now());
+        cp.complete(e);
+        cp.complete(e); // idempotent: second call finds no pending stamp
+        assert_eq!(cp.completion_times().len(), 1);
+        assert_eq!(cp.completion_times()[0].0, e);
     }
 
     #[test]

@@ -1,7 +1,12 @@
-//! Execution engines: the VSN (STRETCH) engine and the SN baseline.
+//! Execution engines: the VSN (STRETCH) engine, the SN baseline, and the
+//! multi-stage pipeline layer on top.
 //!
 //! * [`vsn`] — `setup(O+, m, n)` with shared σ, shared gates, instance
-//!   pool, and epoch-based state-transfer-free elasticity (§5-§7);
+//!   pool, and epoch-based state-transfer-free elasticity (§5-§7), split
+//!   into gate construction + worker spawning so engines can share gates;
+//! * [`pipeline`] — DAG/topology layer: stages chained through shared
+//!   ESGs (stage N's ESG_out ≡ stage N+1's ESG_in), each stage
+//!   independently elastic via its own control plane;
 //! * [`sn`] — the shared-nothing comparison engine (§2.2): dedicated
 //!   queues + data duplication + private state;
 //! * [`barrier`], [`epoch`], [`ingress`] — the reconfiguration protocol
@@ -10,11 +15,13 @@
 pub mod barrier;
 pub mod epoch;
 pub mod ingress;
+pub mod pipeline;
 pub mod sn;
 pub mod vsn;
 
 pub use barrier::EpochBarrier;
 pub use epoch::{EpochConfig, EpochState, PendingReconfig};
 pub use ingress::{ControlPlane, StretchIngress};
+pub use pipeline::{ControlInjector, Pipeline, PipelineBuilder, StageHandle};
 pub use sn::{SnEgress, SnEngine, SnIngress, SnOptions};
-pub use vsn::{EgressDriver, EngineClock, VsnEngine, VsnOptions};
+pub use vsn::{EgressDriver, EngineClock, StageIo, VsnEngine, VsnOptions, WORKER_BATCH};

@@ -1,0 +1,318 @@
+//! Multi-stage VSN pipelines (§7: "STRETCH can be used to instantiate
+//! many (connected) operators within a query ... the ESG_out of such an
+//! upstream peer" acts as the downstream's ESG_in).
+//!
+//! A pipeline composes `source → stage₁ → … → stageₖ → sink` where stage
+//! N's ESG_out **is** stage N+1's ESG_in: one shared gate, zero-copy
+//! hand-off, no re-ingestion. Each stage keeps its own instance pool,
+//! epoch protocol and [`ControlPlane`], so stages reconfigure
+//! *independently* — elasticity is a per-operator property of the
+//! topology (Elasticutor's per-operator executors; Röger & Mayer's
+//! survey), with no state transfer anywhere.
+//!
+//! Mechanics of the hand-off gate, built by [`PipelineBuilder::stage`]:
+//!
+//! * sources = upstream stage's `max` worker slots **plus one reserved
+//!   control slot** (the last source id), readers = downstream stage's
+//!   `max` worker slots;
+//! * data flows ESG-native: upstream workers add, their handle clocks
+//!   carry the watermark (Lemma 2), and they forward explicit heartbeat
+//!   entries so downstream windows expire when rates drop to zero;
+//! * reconfigurations of the downstream stage enter through the reserved
+//!   control slot ([`ControlInjector`]): the slot is activated with the
+//!   gate's current readiness bound as its Lemma-3 clock floor, the
+//!   control tuple (stamped γ = that bound) is added, and the slot is
+//!   removed again — the paper's addSources/removeSources dance, so an
+//!   idle control slot never gates readiness.
+//!
+//! Stage chaining is *typed*: `PipelineBuilder<In, Cur>` only accepts a
+//! next stage whose operator consumes `Cur`. Engines are constructed
+//! lazily (a stage's ESG_out geometry depends on the NEXT stage's
+//! parallelism), which is why the builder carries a deferred finisher
+//! closure instead of a live engine.
+
+use crate::engine::ingress::ControlPlane;
+use crate::engine::vsn::{EngineClock, StageIo, VsnEngine, VsnOptions};
+use crate::engine::StretchIngress;
+use crate::metrics::OperatorMetrics;
+use crate::operator::{OperatorDef, OperatorLogic};
+use crate::scalegate::{AddError, Esg, EsgConfig, ReaderHandle, SourceHandle};
+use crate::time::{EventTime, TIME_MAX, TIME_MIN};
+use crate::tuple::{Epoch, InstanceId, Mapper, Payload, ReconfigSpec, Tuple};
+use crate::util::Backoff;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Injects control tuples for a mid-pipeline stage through the reserved
+/// control slot of its (shared) ESG_in. See the module docs for the
+/// activate → add → remove protocol.
+pub struct ControlInjector<P: Payload + Default> {
+    src: SourceHandle<Tuple<P>>,
+    control: Arc<ControlPlane>,
+    last_ts: EventTime,
+}
+
+impl<P: Payload + Default> ControlInjector<P> {
+    pub fn new(src: SourceHandle<Tuple<P>>, control: Arc<ControlPlane>) -> Self {
+        ControlInjector { src, control, last_ts: TIME_MIN }
+    }
+
+    /// Issue (e*, 𝕆*, f_μ*) to the stage. Returns the new epoch id.
+    pub fn reconfigure(&mut self, instances: Vec<InstanceId>, mapper: Mapper) -> Epoch {
+        let epoch = self.control.allocate_epoch();
+        let spec = ReconfigSpec { epoch, instances: Arc::new(instances), mapper };
+        self.control.note_issued(epoch, Instant::now());
+        // γ: the gate's current readiness bound — the switch triggers on
+        // the first watermark advance past "now". Monotone per slot (the
+        // slot's stream must stay ts-sorted across injections).
+        let bound = self.src.gate().clock_bound();
+        let ts = if bound >= TIME_MAX { self.last_ts.max(0) } else { bound.max(self.last_ts) };
+        self.last_ts = ts;
+        let gate = self.src.gate();
+        let activated = gate.add_sources(&[self.src.id()], ts);
+        debug_assert!(activated, "reserved control slot unexpectedly active");
+        // force_add: exempt from the data flow-control bound — the driver
+        // thread must not deadlock behind backpressure it is responsible
+        // for draining further downstream. Bounded by the slot queue.
+        let mut t = Tuple::control(ts, spec);
+        let mut backoff = Backoff::active();
+        loop {
+            match self.src.force_add(t) {
+                Ok(()) => break,
+                Err(AddError::Inactive(_)) => unreachable!("control slot deactivated mid-add"),
+                Err(AddError::Full(back)) => {
+                    t = back;
+                    backoff.snooze();
+                }
+            }
+        }
+        gate.remove_sources(&[self.src.id()]);
+        epoch
+    }
+}
+
+/// Type-erased per-stage handle: control, metrics and lifecycle of one
+/// VSN stage, independent of its operator's payload types.
+pub trait StageHandle: Send {
+    /// Operator name (metrics, logs).
+    fn name(&self) -> &'static str;
+    /// Issue a reconfiguration to THIS stage (first stage: via its
+    /// control plane + ingress wrappers; later stages: via the reserved
+    /// control slot). Returns the new epoch id.
+    fn reconfigure(&mut self, instances: Vec<InstanceId>, mapper: Mapper) -> Epoch;
+    /// The stage's shared operator metrics.
+    fn metrics(&self) -> Arc<OperatorMetrics>;
+    /// Currently active instance ids (𝕆 of the installed epoch).
+    fn active_instances(&self) -> Vec<InstanceId>;
+    /// Maximum parallelism n (pool included).
+    fn max_parallelism(&self) -> usize;
+    /// Pending backlog on the stage's ESG_in (flow-control signal).
+    fn in_backlog(&self) -> u64;
+    /// Completed reconfigurations of this stage: (epoch, wall ms).
+    fn completion_times(&self) -> Vec<(Epoch, f64)>;
+    /// Stop and join the stage's instance threads.
+    fn shutdown(&mut self);
+}
+
+/// A [`StageHandle`] over a live [`VsnEngine`].
+struct VsnStage<L: OperatorLogic>
+where
+    L::In: Default,
+    L::Out: Default,
+{
+    name: &'static str,
+    engine: VsnEngine<L>,
+    /// `None` for the first stage (control rides the ingress wrappers).
+    injector: Option<ControlInjector<L::In>>,
+    max: usize,
+}
+
+impl<L: OperatorLogic> StageHandle for VsnStage<L>
+where
+    L::In: Default,
+    L::Out: Default,
+{
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn reconfigure(&mut self, instances: Vec<InstanceId>, mapper: Mapper) -> Epoch {
+        match &mut self.injector {
+            Some(inj) => inj.reconfigure(instances, mapper),
+            None => self.engine.control.reconfigure(instances, mapper),
+        }
+    }
+
+    fn metrics(&self) -> Arc<OperatorMetrics> {
+        self.engine.metrics.clone()
+    }
+
+    fn active_instances(&self) -> Vec<InstanceId> {
+        self.engine.epoch_config().instances.as_ref().clone()
+    }
+
+    fn max_parallelism(&self) -> usize {
+        self.max
+    }
+
+    fn in_backlog(&self) -> u64 {
+        self.engine.esg_in.backlog()
+    }
+
+    fn completion_times(&self) -> Vec<(Epoch, f64)> {
+        self.engine.control.completion_times()
+    }
+
+    fn shutdown(&mut self) {
+        self.engine.shutdown();
+    }
+}
+
+/// A running multi-stage pipeline: external ingress into stage 0, egress
+/// readers off the last stage, and a type-erased handle per stage.
+pub struct Pipeline<In: Payload + Default, Out: Payload + Default> {
+    /// Shared wall-clock origin of every stage (end-to-end latency).
+    pub clock: EngineClock,
+    /// addSTRETCH wrappers over stage 0's ESG_in sources.
+    pub ingress: Vec<StretchIngress<In>>,
+    /// Reader ends of the last stage's ESG_out.
+    pub egress: Vec<ReaderHandle<Tuple<Out>>>,
+    /// The final output gate (diagnostics: backlog, published count).
+    pub esg_out: Esg<Tuple<Out>>,
+    /// One handle per stage, upstream first.
+    pub stages: Vec<Box<dyn StageHandle>>,
+}
+
+impl<In: Payload + Default, Out: Payload + Default> Pipeline<In, Out> {
+    /// Number of stages.
+    pub fn depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Reconfigure stage `k` to the given instance set (hash-mod mapper
+    /// over it). Returns the stage's new epoch id.
+    pub fn reconfigure_stage(&mut self, k: usize, instances: Vec<InstanceId>) -> Epoch {
+        let mapper = Mapper::over(instances.clone());
+        self.stages[k].reconfigure(instances, mapper)
+    }
+
+    /// Stop every stage, upstream first (so downstream gates drain).
+    pub fn shutdown(&mut self) {
+        for s in self.stages.iter_mut() {
+            s.shutdown();
+        }
+    }
+}
+
+/// The deferred finisher of the most recently declared stage: given its
+/// ESG_out (gate + this stage's worker source ends), spawn the engine and
+/// return the type-erased handle (plus ingress wrappers — non-empty only
+/// for stage 0).
+type Finish<In, Out> = Box<
+    dyn FnOnce(
+        Esg<Tuple<Out>>,
+        Vec<SourceHandle<Tuple<Out>>>,
+    ) -> (Box<dyn StageHandle>, Vec<StretchIngress<In>>),
+>;
+
+/// Typed builder: `PipelineBuilder::new(def₀, opts₀).stage(def₁, opts₁)
+/// .…​.build()`. `In` is the pipeline input payload, `Cur` the output
+/// payload of the last declared stage (the only thing the next stage may
+/// consume).
+pub struct PipelineBuilder<In: Payload + Default, Cur: Payload + Default> {
+    clock: EngineClock,
+    stages: Vec<Box<dyn StageHandle>>,
+    ingress: Vec<StretchIngress<In>>,
+    finish: Finish<In, Cur>,
+    /// Options of the pending (last declared, not yet spawned) stage —
+    /// they size its ESG_out.
+    pending_opts: VsnOptions,
+}
+
+impl<In: Payload + Default, Cur: Payload + Default> PipelineBuilder<In, Cur> {
+    /// Start a pipeline with its source stage. `opts.upstreams` external
+    /// sources feed the stage's ESG_in through [`StretchIngress`]
+    /// wrappers returned by [`PipelineBuilder::build`].
+    pub fn new<L>(def: OperatorDef<L>, opts: VsnOptions) -> PipelineBuilder<In, Cur>
+    where
+        L: OperatorLogic<In = In, Out = Cur>,
+    {
+        let clock = EngineClock::new();
+        let (esg_in, in_sources, in_readers) =
+            Esg::new(opts.in_gate_config(), opts.upstreams, opts.initial);
+        let name = def.name;
+        let clock2 = clock.clone();
+        let opts2 = opts.clone();
+        let finish: Finish<In, Cur> = Box::new(move |esg_out, out_sources| {
+            let io = StageIo { esg_in, in_sources, in_readers, esg_out, out_sources };
+            let max = opts2.max;
+            let (engine, ingress) = VsnEngine::setup_with_gates(def, opts2, io, clock2);
+            (Box::new(VsnStage { name, engine, injector: None, max }) as Box<dyn StageHandle>, ingress)
+        });
+        PipelineBuilder { clock, stages: Vec::new(), ingress: Vec::new(), finish, pending_opts: opts }
+    }
+
+    /// Chain the next stage: builds the shared hand-off gate (upstream's
+    /// ESG_out ≡ this stage's ESG_in), finishes the upstream stage over
+    /// it, and defers this stage until ITS output geometry is known.
+    /// `opts.upstreams` is ignored for chained stages — their input
+    /// sources are the upstream workers plus the reserved control slot.
+    pub fn stage<L>(self, def: OperatorDef<L>, opts: VsnOptions) -> PipelineBuilder<In, L::Out>
+    where
+        L: OperatorLogic<In = Cur>,
+        L::Out: Default,
+    {
+        let up = &self.pending_opts;
+        // +1 writer slot: the downstream stage's reserved control slot.
+        let cfg = EsgConfig::for_gate(up.max + 1, opts.max, opts.gate_capacity);
+        let (gate, mut sources, readers) = Esg::new(cfg, up.initial, opts.initial);
+        let ctrl_src = sources.pop().expect("control slot");
+        debug_assert_eq!(sources.len(), up.max);
+        let (handle, ingress0) = (self.finish)(gate.clone(), sources);
+        let mut stages = self.stages;
+        stages.push(handle);
+        let mut ingress = self.ingress;
+        ingress.extend(ingress0);
+
+        let name = def.name;
+        let clock2 = self.clock.clone();
+        let opts2 = opts.clone();
+        let finish: Finish<In, L::Out> = Box::new(move |esg_out, out_sources| {
+            let io = StageIo {
+                esg_in: gate,
+                in_sources: Vec::new(),
+                in_readers: readers,
+                esg_out,
+                out_sources,
+            };
+            let max = opts2.max;
+            let (engine, _no_ingress) = VsnEngine::setup_with_gates(def, opts2, io, clock2);
+            let injector = ControlInjector::new(ctrl_src, engine.control.clone());
+            (
+                Box::new(VsnStage { name, engine, injector: Some(injector), max })
+                    as Box<dyn StageHandle>,
+                Vec::new(),
+            )
+        });
+        PipelineBuilder {
+            clock: self.clock,
+            stages,
+            ingress,
+            finish,
+            pending_opts: opts,
+        }
+    }
+
+    /// Terminate the pipeline: build the last stage's ESG_out with
+    /// `pending_opts.egress_readers` reader ends and spawn it.
+    pub fn build(self) -> Pipeline<In, Cur> {
+        let po = &self.pending_opts;
+        let (gate, sources, readers) = Esg::new(po.out_gate_config(), po.initial, po.egress_readers);
+        let (handle, ingress0) = (self.finish)(gate.clone(), sources);
+        let mut stages = self.stages;
+        stages.push(handle);
+        let mut ingress = self.ingress;
+        ingress.extend(ingress0);
+        Pipeline { clock: self.clock, ingress, egress: readers, esg_out: gate, stages }
+    }
+}

@@ -6,6 +6,14 @@
 //! handle control tuples (Alg. 6), trigger epoch switches at the barrier,
 //! perform gate membership changes (exactly one instance succeeds — the
 //! ESG arbitration), then run the shared [`OperatorCore`].
+//!
+//! Construction is split in two (the pipeline refactor): gate
+//! construction ([`VsnOptions::in_gate_config`]/[`VsnOptions::out_gate_config`]
+//! + [`Esg::new`]) and worker spawning over externally supplied gate ends
+//! ([`VsnEngine::setup_with_gates`]). Two engines can therefore *share* a
+//! gate — stage N's ESG_out is stage N+1's ESG_in, the zero-copy hand-off
+//! behind [`crate::engine::pipeline`]. [`VsnEngine::setup`] composes the
+//! two halves for the classic single-operator shape.
 
 use crate::engine::barrier::EpochBarrier;
 use crate::engine::epoch::{EpochConfig, EpochState, PendingReconfig};
@@ -16,10 +24,13 @@ use crate::operator::{Ctx, OperatorCore, OperatorDef, OperatorLogic};
 use crate::scalegate::{Esg, EsgConfig, ReaderHandle, SourceHandle};
 use crate::tuple::{InstanceId, Kind, Mapper, Tuple};
 use crate::util::Backoff;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Tuples a worker takes from ESG_in per gate synchronization (see
+/// [`ReaderHandle::get_batch`]); also the egress drain granularity.
+pub const WORKER_BATCH: usize = 64;
 
 /// Engine construction options.
 #[derive(Clone, Debug)]
@@ -51,8 +62,22 @@ impl Default for VsnOptions {
     }
 }
 
+impl VsnOptions {
+    /// ESG_in geometry: `upstreams` writers, up to `max` worker readers.
+    pub fn in_gate_config(&self) -> EsgConfig {
+        EsgConfig::for_gate(self.upstreams, self.max, self.gate_capacity)
+    }
+
+    /// ESG_out geometry: up to `max` worker writers, `egress_readers`
+    /// readers.
+    pub fn out_gate_config(&self) -> EsgConfig {
+        EsgConfig::for_gate(self.max, self.egress_readers, self.gate_capacity)
+    }
+}
+
 /// Wall-clock origin shared by ingress stampers and egress latency
-/// accounting.
+/// accounting. Pipelines share ONE clock across all stages so end-to-end
+/// latency stamps stay comparable.
 #[derive(Clone)]
 pub struct EngineClock(Arc<Instant>);
 
@@ -72,6 +97,24 @@ impl Default for EngineClock {
     }
 }
 
+/// The gate ends one engine needs: its input gate (with the worker-side
+/// readers and any external-source handles) and its output gate (with the
+/// worker-side sources). Output *readers* are not part of a stage — they
+/// belong to whoever consumes the stage (egress driver or the downstream
+/// stage's workers).
+pub struct StageIo<L: OperatorLogic> {
+    pub esg_in: Esg<Tuple<L::In>>,
+    /// External writer endpoints of ESG_in; wrapped into [`StretchIngress`]
+    /// (Alg. 5). Empty for mid-pipeline stages — their ESG_in is fed by
+    /// the upstream stage's workers, not by external sources.
+    pub in_sources: Vec<SourceHandle<Tuple<L::In>>>,
+    /// Worker reader endpoints of ESG_in; exactly `opts.max` of them.
+    pub in_readers: Vec<ReaderHandle<Tuple<L::In>>>,
+    pub esg_out: Esg<Tuple<L::Out>>,
+    /// Worker writer endpoints of ESG_out; exactly `opts.max` of them.
+    pub out_sources: Vec<SourceHandle<Tuple<L::Out>>>,
+}
+
 /// The running engine; dropping it shuts the instance threads down.
 pub struct VsnEngine<L: OperatorLogic> {
     pub control: Arc<ControlPlane>,
@@ -88,6 +131,7 @@ pub struct VsnEngine<L: OperatorLogic> {
 impl<L: OperatorLogic> VsnEngine<L>
 where
     L::In: Default,
+    L::Out: Default,
 {
     /// `setup(O+, m, n)`: build gates, share σ, spawn n instance threads
     /// (m active). Returns the engine plus the upstream ingress wrappers
@@ -96,27 +140,30 @@ where
         def: OperatorDef<L>,
         opts: VsnOptions,
     ) -> (Self, Vec<StretchIngress<L::In>>, Vec<ReaderHandle<Tuple<L::Out>>>) {
+        let (esg_in, in_sources, in_readers) =
+            Esg::new(opts.in_gate_config(), opts.upstreams, opts.initial);
+        let (esg_out, out_sources, out_readers) =
+            Esg::new(opts.out_gate_config(), opts.initial, opts.egress_readers);
+        let io = StageIo { esg_in, in_sources, in_readers, esg_out, out_sources };
+        let (engine, ingress) = Self::setup_with_gates(def, opts, io, EngineClock::new());
+        (engine, ingress, out_readers)
+    }
+
+    /// The worker-spawning half of `setup`: share σ, spawn the instance
+    /// threads over externally constructed gate ends. This is how the
+    /// pipeline layer chains stages through ONE shared gate — the caller
+    /// builds `io.esg_in`/`io.esg_out` however it likes (fresh, or the
+    /// upstream stage's ESG_out) as long as the worker endpoint counts
+    /// equal `opts.max`.
+    pub fn setup_with_gates(
+        def: OperatorDef<L>,
+        opts: VsnOptions,
+        io: StageIo<L>,
+        clock: EngineClock,
+    ) -> (Self, Vec<StretchIngress<L::In>>) {
         assert!(opts.initial >= 1 && opts.initial <= opts.max);
-        let (esg_in, in_sources, in_readers) = Esg::new(
-            EsgConfig {
-                max_sources: opts.upstreams,
-                max_readers: opts.max,
-                capacity: opts.gate_capacity,
-                source_queue: (opts.gate_capacity / opts.upstreams.max(1)).clamp(64, 1 << 14),
-            },
-            opts.upstreams,
-            opts.initial,
-        );
-        let (esg_out, out_sources, out_readers) = Esg::new(
-            EsgConfig {
-                max_sources: opts.max,
-                max_readers: opts.egress_readers,
-                capacity: opts.gate_capacity,
-                source_queue: (opts.gate_capacity / opts.max.max(1)).clamp(64, 1 << 14),
-            },
-            opts.initial,
-            opts.egress_readers,
-        );
+        assert_eq!(io.in_readers.len(), opts.max, "need one ESG_in reader per instance slot");
+        assert_eq!(io.out_sources.len(), opts.max, "need one ESG_out source per instance slot");
         let state: Arc<SharedState<L::State>> = SharedState::new(opts.shards);
         let metrics = OperatorMetrics::new(opts.max);
         let epoch = EpochState::new(EpochConfig {
@@ -124,14 +171,12 @@ where
             instances: Arc::new((0..opts.initial).collect()),
             mapper: Mapper::hash_mod(opts.initial),
         });
-        let control = ControlPlane::new(opts.upstreams, 0);
+        let control = ControlPlane::new(io.in_sources.len(), 0);
         let barrier = Arc::new(EpochBarrier::new());
         let running = Arc::new(AtomicBool::new(true));
-        let issued: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
-        let clock = EngineClock::new();
 
         let mut threads = Vec::with_capacity(opts.max);
-        for (id, (reader, out)) in in_readers.into_iter().zip(out_sources).enumerate() {
+        for (id, (reader, out)) in io.in_readers.into_iter().zip(io.out_sources).enumerate() {
             let mut worker = Worker {
                 core: OperatorCore::new(def.clone(), id, state.clone(), metrics.clone()),
                 reader,
@@ -139,7 +184,6 @@ where
                 epoch: epoch.clone(),
                 barrier: barrier.clone(),
                 control: control.clone(),
-                issued: issued.clone(),
                 running: running.clone(),
                 cur: epoch.current(),
                 pending: None,
@@ -152,10 +196,11 @@ where
             );
         }
 
-        let ingress = in_sources
+        let ingress = io
+            .in_sources
             .into_iter()
             .enumerate()
-            .map(|(u, src)| StretchIngress::new(src, control.clone(), u, issued.clone()))
+            .map(|(u, src)| StretchIngress::new(src, control.clone(), u))
             .collect();
 
         (
@@ -163,15 +208,14 @@ where
                 control,
                 metrics,
                 clock,
-                esg_in,
-                esg_out,
+                esg_in: io.esg_in,
+                esg_out: io.esg_out,
                 epoch,
                 state,
                 running,
                 threads,
             },
             ingress,
-            out_readers,
         )
     }
 
@@ -211,35 +255,51 @@ struct Worker<L: OperatorLogic> {
     epoch: Arc<EpochState>,
     barrier: Arc<EpochBarrier>,
     control: Arc<ControlPlane>,
-    issued: Arc<Mutex<HashMap<u64, Instant>>>,
     running: Arc<AtomicBool>,
     cur: Arc<EpochConfig>,
     pending: Option<PendingReconfig>,
 }
 
-impl<L: OperatorLogic> Worker<L> {
+impl<L: OperatorLogic> Worker<L>
+where
+    L::Out: Default,
+{
     fn run(&mut self) {
         let mut backoff = Backoff::pooled();
+        // Tuples are pulled in batches (one gate synchronization per
+        // WORKER_BATCH) and processed newest-last via pop() off the
+        // reversed buffer, so `batch.len()` is always the number of
+        // retrieved-but-unprocessed tuples — do_reconfig needs it to seed
+        // new readers at the tuple currently being processed.
+        let mut batch: Vec<Tuple<L::In>> = Vec::with_capacity(WORKER_BATCH);
         while self.running.load(Ordering::Acquire) {
-            // Pool instances (and instances activated while parked) track
-            // the installed epoch; active instances update it themselves
-            // at the barrier, so this check only fires for pool wake-ups.
-            if self.cur.epoch != self.epoch.epoch_no() {
-                self.cur = self.epoch.current();
-                self.core.rebuild_expiry_index(&self.cur.mapper);
+            if self.reader.get_batch(&mut batch, WORKER_BATCH) == 0 {
+                backoff.snooze();
+                continue;
             }
-            match self.reader.get() {
-                Some(t) => {
-                    backoff.reset();
-                    self.step(t);
+            backoff.reset();
+            batch.reverse();
+            while let Some(t) = batch.pop() {
+                // Pool instances activated while parked adopt the installed
+                // epoch here (one uncontended atomic load per tuple; active
+                // instances update `cur` themselves at the barrier). Checked
+                // per tuple, not per batch: the Acquire read of the reader's
+                // active flag in get_batch happens-before this load, so a
+                // freshly provisioned instance can never process its seed
+                // batch under a stale f_μ.
+                if self.cur.epoch != self.epoch.epoch_no() {
+                    self.cur = self.epoch.current();
+                    self.core.rebuild_expiry_index(&self.cur.mapper);
                 }
-                None => backoff.snooze(),
+                self.step(t, batch.len());
             }
         }
     }
 
-    /// processVSN (Alg. 4) for one delivered tuple.
-    fn step(&mut self, t: Tuple<L::In>) {
+    /// processVSN (Alg. 4) for one delivered tuple. `unconsumed` is the
+    /// number of tuples this worker has already taken from the gate but
+    /// not yet processed (its batch remainder).
+    fn step(&mut self, t: Tuple<L::In>, unconsumed: usize) {
         match &t.kind {
             Kind::Control(spec) => {
                 // prepareReconfig (Alg. 6): adopt only newer epochs
@@ -252,7 +312,7 @@ impl<L: OperatorLogic> Worker<L> {
                 if grew {
                     if let Some(p) = &self.pending {
                         if self.core.watermark() > p.gamma {
-                            self.do_reconfig(&t);
+                            self.do_reconfig(&t, unconsumed);
                         }
                     }
                 }
@@ -262,22 +322,7 @@ impl<L: OperatorLogic> Worker<L> {
                 let mut emitted = 0u64;
                 let mut sink = |o: Tuple<L::Out>| {
                     emitted += 1;
-                    // blocking add with shutdown escape (flow control)
-                    let mut v = o;
-                    let mut b = Backoff::active();
-                    loop {
-                        match out.try_add(v) {
-                            Ok(()) => break,
-                            Err(crate::scalegate::AddError::Inactive(_)) => break, // decommissioned
-                            Err(crate::scalegate::AddError::Full(back)) => {
-                                if !running.load(Ordering::Acquire) {
-                                    break;
-                                }
-                                v = back;
-                                b.snooze();
-                            }
-                        }
-                    }
+                    blocking_add(out, o, running);
                 };
                 let mut ctx = Ctx::new(&mut sink);
                 ctx.ingest_us = t.ingest_us;
@@ -298,6 +343,18 @@ impl<L: OperatorLogic> Worker<L> {
                     // implicit watermark to downstream (Lemma 2): all
                     // future emissions carry ts > W
                     self.out.advance_clock(self.core.watermark());
+                    if matches!(t.kind, Kind::Heartbeat) {
+                        // Forward an explicit heartbeat ENTRY: downstream
+                        // *stages* advance their instance watermarks from
+                        // delivered tuples, so a clock-only advance would
+                        // strand their windows when the rate drops to
+                        // zero (§2.3; the egress driver ignores these).
+                        blocking_add(
+                            &mut self.out,
+                            Tuple::heartbeat(self.core.watermark()),
+                            &self.running,
+                        );
+                    }
                 }
             }
             Kind::Flush | Kind::Dummy => {}
@@ -305,7 +362,7 @@ impl<L: OperatorLogic> Worker<L> {
     }
 
     /// The epoch switch (Alg. 4 L17-21).
-    fn do_reconfig(&mut self, t: &Tuple<L::In>) {
+    fn do_reconfig(&mut self, t: &Tuple<L::In>, unconsumed: usize) {
         let p = self.pending.take().expect("reconfig without pending spec");
         // barrier over the *current* epoch's instances 𝕆
         let leader = self.barrier.wait(self.cur.instances.len());
@@ -321,8 +378,12 @@ impl<L: OperatorLogic> Worker<L> {
         if !joining.is_empty() {
             // provision: TB_out sources first, then TB_in readers
             // (Alg. 4 L19); ESG arbitration lets exactly one succeed.
+            // New readers start at the tuple *currently being processed*
+            // (Theorem 3): our consume cursor is past the whole batch, so
+            // the tuple's own index is cursor − unconsumed − 1.
             if self.out.gate().add_sources(&joining, t.ts) {
-                self.reader.gate().add_readers(&joining, self.core.id);
+                let pos = self.reader.cursor().saturating_sub(unconsumed as u64 + 1);
+                self.reader.gate().add_readers_at(&joining, pos);
                 performed = true;
             }
         }
@@ -335,12 +396,34 @@ impl<L: OperatorLogic> Worker<L> {
             }
         }
         if performed || (leader && joining.is_empty() && leaving.is_empty()) {
-            if let Some(issued) = self.issued.lock().unwrap().remove(&p.spec.epoch) {
-                self.control.record_completion(p.spec.epoch, issued);
-            }
+            self.control.complete(p.spec.epoch);
         }
         self.cur = newcfg;
         self.core.rebuild_expiry_index(&self.cur.mapper);
+    }
+}
+
+/// Blocking gate add with a shutdown escape (flow control); silently
+/// drops the tuple when the source slot was decommissioned.
+fn blocking_add<T: crate::scalegate::GateEntry>(
+    out: &mut SourceHandle<T>,
+    t: T,
+    running: &AtomicBool,
+) {
+    let mut v = t;
+    let mut b = Backoff::active();
+    loop {
+        match out.try_add(v) {
+            Ok(()) => break,
+            Err(crate::scalegate::AddError::Inactive(_)) => break, // decommissioned
+            Err(crate::scalegate::AddError::Full(back)) => {
+                if !running.load(Ordering::Acquire) {
+                    break;
+                }
+                v = back;
+                b.snooze();
+            }
+        }
     }
 }
 
@@ -348,26 +431,50 @@ impl<L: OperatorLogic> Worker<L> {
 /// latency (now − ingest stamp) like the paper's sink (§8).
 pub struct EgressDriver<P: crate::scalegate::GateEntry> {
     reader: crate::scalegate::ReaderHandle<P>,
+    batch: Vec<P>,
     pub clock: EngineClock,
     pub count: u64,
+    /// Interval histogram — harness loops reset it once per sample.
     pub latency_us: Arc<Histogram>,
+    /// Whole-run histogram — never reset by the harness.
+    pub latency_total_us: Arc<Histogram>,
 }
 
 impl<Out: Clone + Send + Sync + 'static> EgressDriver<Tuple<Out>> {
     pub fn new(reader: crate::scalegate::ReaderHandle<Tuple<Out>>, clock: EngineClock) -> Self {
-        EgressDriver { reader, clock, count: 0, latency_us: Arc::new(Histogram::new()) }
+        EgressDriver {
+            reader,
+            batch: Vec::with_capacity(WORKER_BATCH),
+            clock,
+            count: 0,
+            latency_us: Arc::new(Histogram::new()),
+            latency_total_us: Arc::new(Histogram::new()),
+        }
     }
 
     /// Drain currently-ready tuples; returns how many were consumed.
     pub fn poll(&mut self) -> usize {
+        self.poll_tuples(&mut |_| {})
+    }
+
+    /// Like [`poll`](Self::poll) but hands every ready data tuple to `f`.
+    pub fn poll_tuples(&mut self, f: &mut dyn FnMut(&Tuple<Out>)) -> usize {
         let mut n = 0;
-        while let Some(t) = self.reader.get() {
-            if t.kind.is_data() {
-                self.count += 1;
-                n += 1;
-                if t.ingest_us > 0 {
-                    let now = self.clock.now_us();
-                    self.latency_us.record(now.saturating_sub(t.ingest_us));
+        loop {
+            self.batch.clear();
+            if self.reader.get_batch(&mut self.batch, WORKER_BATCH) == 0 {
+                break;
+            }
+            for t in self.batch.drain(..) {
+                if t.kind.is_data() {
+                    self.count += 1;
+                    n += 1;
+                    if t.ingest_us > 0 {
+                        let lat = self.clock.now_us().saturating_sub(t.ingest_us);
+                        self.latency_us.record(lat);
+                        self.latency_total_us.record(lat);
+                    }
+                    f(&t);
                 }
             }
         }

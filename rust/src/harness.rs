@@ -1,21 +1,67 @@
-//! Experiment harness: drive a live VSN ScaleJoin under a rate schedule
-//! with a controller in the loop, sampling the §8 metrics once per tick.
+//! Experiment harness: drive a live VSN *pipeline* under a rate schedule
+//! with per-stage controllers in the loop, sampling the §8 metrics once
+//! per event second **per stage**.
 //!
-//! Used by the Q4-Q6 benches and the `elastic_scalejoin`/`e2e_pipeline`
-//! examples. Wall-clock pacing is compressible (`time_scale`) so the
-//! paper's 20-minute runs replay in seconds; event time always advances
-//! at the schedule's nominal pace.
+//! [`run_pipeline`] is the generic loop: it feeds a [`PacedSource`] into
+//! stage 0, drains the last stage's egress, and per tick gives every
+//! stage its scripted reconfigurations and controller decisions
+//! independently. [`run_elastic_join`] — the Q3-Q6 entry point — is a
+//! thin compatibility wrapper that builds a single-stage ScaleJoin
+//! pipeline and reshapes the result.
+//!
+//! Wall-clock pacing is compressible (`time_scale`) so the paper's
+//! 20-minute runs replay in seconds; event time always advances at the
+//! schedule's nominal pace.
 
 use crate::elastic::{Controller, Decision, Observation};
-use crate::engine::{EgressDriver, VsnEngine, VsnOptions};
+use crate::engine::pipeline::{Pipeline, PipelineBuilder};
+use crate::engine::{EgressDriver, VsnOptions};
 use crate::metrics::MetricsSnapshot;
 use crate::time::EventTime;
-use crate::tuple::{Mapper, Tuple};
+use crate::tuple::{Mapper, Payload, Tuple};
+use crate::workloads::nyse::{Trade, TradeStream};
 use crate::workloads::rates::RateSchedule;
 use crate::workloads::scalejoin_bench::{q3_operator, SjGen, SjPayload};
+use crate::workloads::tweets::{Tweet, TweetGen};
 use std::time::{Duration, Instant};
 
-/// Harness configuration.
+/// A generator the harness can pace against a [`RateSchedule`]: emits
+/// ts-sorted tuples whose event time advances at ~`1000 / rate` ms each.
+pub trait PacedSource<P>: Send {
+    /// Adjust the nominal rate (tuples per event-second).
+    fn set_rate(&mut self, _tps: f64) {}
+    /// Next tuple (event time must not regress).
+    fn next(&mut self) -> Tuple<P>;
+}
+
+impl PacedSource<SjPayload> for SjGen {
+    fn set_rate(&mut self, tps: f64) {
+        SjGen::set_rate(self, tps);
+    }
+    fn next(&mut self) -> Tuple<SjPayload> {
+        SjGen::next(self)
+    }
+}
+
+impl PacedSource<Tweet> for TweetGen {
+    fn set_rate(&mut self, tps: f64) {
+        TweetGen::set_rate(self, tps);
+    }
+    fn next(&mut self) -> Tuple<Tweet> {
+        TweetGen::next(self)
+    }
+}
+
+impl PacedSource<Trade> for TradeStream {
+    fn set_rate(&mut self, tps: f64) {
+        TradeStream::set_rate(self, tps);
+    }
+    fn next(&mut self) -> Tuple<Trade> {
+        TradeStream::next(self)
+    }
+}
+
+/// Harness configuration (the Q3-Q6 single-stage ScaleJoin shape).
 pub struct JoinRunConfig {
     /// ScaleJoin window size (event-time ms).
     pub ws_ms: EventTime,
@@ -57,7 +103,7 @@ impl Default for JoinRunConfig {
     }
 }
 
-/// One per-event-second sample of the run.
+/// One per-event-second sample of one stage.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RunSample {
     pub t_s: u32,
@@ -72,7 +118,7 @@ pub struct RunSample {
     pub load_cv_pct: f64,
 }
 
-/// Result of a harness run.
+/// Result of a single-stage harness run (the historical shape).
 pub struct RunResult {
     pub samples: Vec<RunSample>,
     /// (epoch, wall ms) reconfiguration completion times.
@@ -81,30 +127,134 @@ pub struct RunResult {
     pub egress_count: u64,
 }
 
-/// Run a live, threaded VSN ScaleJoin experiment.
-pub fn run_elastic_join(mut cfg: JoinRunConfig) -> RunResult {
-    let def = q3_operator(cfg.ws_ms, cfg.n_keys);
-    let (mut engine, mut ingress, mut readers) = VsnEngine::setup(
-        def,
-        VsnOptions {
-            initial: cfg.initial,
-            max: cfg.max,
-            upstreams: 1,
-            egress_readers: 1,
-            gate_capacity: cfg.gate_capacity,
-            ..Default::default()
-        },
+/// Per-stage runtime policy for a pipeline run.
+pub struct StageRunConfig {
+    /// Optional elasticity controller for this stage.
+    pub controller: Option<Box<dyn Controller>>,
+    /// Controller tick period in event-time seconds.
+    pub controller_period_s: u32,
+    /// Scripted reconfigurations: (event second, new instance set).
+    pub manual_reconfigs: Vec<(u32, Vec<usize>)>,
+}
+
+impl Default for StageRunConfig {
+    fn default() -> Self {
+        StageRunConfig { controller: None, controller_period_s: 1, manual_reconfigs: Vec::new() }
+    }
+}
+
+/// Pipeline harness configuration.
+pub struct PipelineRunConfig {
+    pub schedule: RateSchedule,
+    pub time_scale: f64,
+    /// One entry per stage (missing trailing entries default).
+    pub stages: Vec<StageRunConfig>,
+    /// End-of-stream heartbeat horizon beyond the last event ms (flush
+    /// windows; use ≥ the largest WS in the pipeline).
+    pub flush_slack_ms: EventTime,
+    /// Wall time to keep draining the egress after end-of-stream.
+    pub drain: Duration,
+}
+
+impl Default for PipelineRunConfig {
+    fn default() -> Self {
+        PipelineRunConfig {
+            schedule: RateSchedule::constant(10, 1_000.0),
+            time_scale: 1.0,
+            stages: Vec::new(),
+            flush_slack_ms: 15_000,
+            drain: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Per-stage outcome of a pipeline run.
+pub struct StageRunStats {
+    pub name: &'static str,
+    pub samples: Vec<RunSample>,
+    /// (epoch, wall ms) reconfiguration completion times of this stage.
+    pub reconfigs: Vec<(u64, f64)>,
+}
+
+/// Result of a pipeline run.
+pub struct PipelineRunResult {
+    pub stages: Vec<StageRunStats>,
+    /// Data tuples drained at the final egress.
+    pub egress_count: u64,
+    /// Whole-run end-to-end latency (ingest stamp at stage 0 → final
+    /// egress) over every stamped output tuple.
+    pub latency_p50_us: u64,
+    pub latency_mean_us: f64,
+}
+
+/// Book-keeping the run loop carries per stage.
+struct StageLoopState {
+    cfg: StageRunConfig,
+    last_snap: MetricsSnapshot,
+    prev_loads: Vec<u64>,
+    next_manual: usize,
+    next_controller_s: u32,
+    /// Arrival rate (t/event-s, de-duplicated across instances) of the
+    /// latest sample — the controller's offered-load estimate for
+    /// non-source stages.
+    last_arrival_tps: f64,
+    samples: Vec<RunSample>,
+}
+
+/// Drive a live, threaded VSN pipeline: pace `source` through stage 0
+/// according to the schedule, drain the final egress, tick every stage's
+/// manual/controller reconfigurations independently, and sample per-stage
+/// metrics once per event second.
+pub fn run_pipeline<In, Out>(
+    mut pipeline: Pipeline<In, Out>,
+    cfg: PipelineRunConfig,
+    source: &mut dyn PacedSource<In>,
+) -> PipelineRunResult
+where
+    In: Payload + Default,
+    Out: Payload + Default,
+{
+    // A dropped-but-active ESG source would gate readiness forever, so
+    // the loop only supports the single-upstream shape (upstreams = 1);
+    // likewise a dropped-but-active egress reader would pin the final
+    // gate's backlog at capacity and stall the last stage.
+    assert_eq!(pipeline.ingress.len(), 1, "run_pipeline drives exactly one ingress source");
+    assert_eq!(pipeline.egress.len(), 1, "run_pipeline drains exactly one egress reader");
+    let clock = pipeline.clock.clone();
+    let mut ing = pipeline.ingress.remove(0);
+    let mut egress = EgressDriver::new(pipeline.egress.remove(0), clock.clone());
+
+    let n_stages = pipeline.depth();
+    assert!(
+        cfg.stages.len() <= n_stages,
+        "{} stage configs for a {}-stage pipeline — scripted reconfigs would be dropped",
+        cfg.stages.len(),
+        n_stages
     );
-    let control = engine.control.clone();
-    let clock = engine.clock.clone();
-    let metrics = engine.metrics.clone();
-    let mut ing = ingress.remove(0);
-    let mut egress = EgressDriver::new(readers.remove(0), clock.clone());
-    let mut gen = SjGen::new(cfg.seed, 1.0);
+    let mut stage_cfgs: Vec<StageRunConfig> = cfg.stages.into_iter().collect();
+    while stage_cfgs.len() < n_stages {
+        stage_cfgs.push(StageRunConfig::default());
+    }
+    let mut loops: Vec<StageLoopState> = stage_cfgs
+        .into_iter()
+        .take(n_stages)
+        .enumerate()
+        .map(|(k, mut sc)| {
+            sc.manual_reconfigs.sort_by_key(|&(at, _)| at);
+            let period = sc.controller_period_s.max(1);
+            StageLoopState {
+                last_snap: MetricsSnapshot::default(),
+                prev_loads: vec![0; pipeline.stages[k].max_parallelism()],
+                next_manual: 0,
+                next_controller_s: period,
+                last_arrival_tps: 0.0,
+                samples: Vec::new(),
+                cfg: sc,
+            }
+        })
+        .collect();
 
     let duration_s = cfg.schedule.duration_s();
-    let mut samples = Vec::with_capacity(duration_s as usize);
-    let mut last_snap = MetricsSnapshot::default();
     let mut pending_event_tuples = 0.0f64;
     let mut event_ms_total: f64 = 0.0;
     let t0 = Instant::now();
@@ -113,11 +263,6 @@ pub fn run_elastic_join(mut cfg: JoinRunConfig) -> RunResult {
     let wall_tick = Duration::from_millis(20);
     let mut next_tick = t0;
     let mut next_sample_s: u32 = 1;
-    let mut next_controller_s: u32 = cfg.controller_period_s;
-    let mut manual = cfg.manual_reconfigs.clone();
-    manual.sort_by_key(|&(at, _)| at);
-    let mut next_manual = 0usize;
-    let mut prev_loads: Vec<u64> = vec![0; cfg.max];
 
     loop {
         // how far event time should have progressed
@@ -129,7 +274,7 @@ pub fn run_elastic_join(mut cfg: JoinRunConfig) -> RunResult {
         }
         let cur_rate = cfg.schedule.rate_at(event_s as u32);
         if event_s < duration_s as f64 {
-            gen.set_rate(cur_rate);
+            source.set_rate(cur_rate);
             // feed the tuples that belong to this tick
             let tick_event_s = wall_tick.as_secs_f64() * cfg.time_scale;
             pending_event_tuples += cur_rate * tick_event_s;
@@ -137,83 +282,103 @@ pub fn run_elastic_join(mut cfg: JoinRunConfig) -> RunResult {
             pending_event_tuples -= n as f64;
             event_ms_total += tick_event_s * 1e3;
             for _ in 0..n {
-                let mut t: Tuple<SjPayload> = gen.next();
+                let mut t = source.next();
                 t.ingest_us = clock.now_us();
                 ing.add(t);
             }
         }
         egress.poll();
 
-        // per-event-second sampling
+        // per-event-second sampling, every stage
         while (next_sample_s as f64) <= event_s && next_sample_s <= duration_s {
-            let snap = metrics.snapshot();
-            let dt = 1.0 / cfg.time_scale; // wall seconds per event second
-            let rates = snap.rates_since(&last_snap, dt);
-            let epoch_cfg = engine.epoch_config();
-            let active: Vec<usize> = epoch_cfg.instances.as_ref().clone();
-            // per-interval load CV (Fig. 9 right): deltas, active set only
-            let cv = {
-                let deltas: Vec<f64> = active
-                    .iter()
-                    .map(|&i| {
-                        let cur = metrics.instance_load(i);
-                        let d = cur - prev_loads[i];
-                        d as f64
-                    })
-                    .collect();
-                for i in 0..cfg.max {
-                    prev_loads[i] = metrics.instance_load(i);
-                }
-                let mean = deltas.iter().sum::<f64>() / deltas.len().max(1) as f64;
-                if deltas.len() < 2 || mean <= 0.0 {
-                    0.0
-                } else {
-                    let var = deltas.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>()
-                        / deltas.len() as f64;
-                    100.0 * var.sqrt() / mean
-                }
-            };
-            samples.push(RunSample {
-                t_s: next_sample_s,
-                offered_tps: cfg.schedule.rate_at(next_sample_s - 1),
-                // rates are per wall second; report per *event* second
-                in_tps: rates.in_tps / cfg.time_scale / active.len().max(1) as f64,
-                out_tps: rates.out_tps / cfg.time_scale,
-                cmp_per_s: rates.cmp_per_s / cfg.time_scale,
-                latency_p50_us: egress.latency_us.p50(),
-                latency_mean_us: egress.latency_us.mean(),
-                threads: active.len(),
-                backlog: engine.esg_in.backlog(),
-                load_cv_pct: cv,
-            });
-            last_snap = snap;
+            for (k, st) in loops.iter_mut().enumerate() {
+                let stage = &pipeline.stages[k];
+                let metrics = stage.metrics();
+                let snap = metrics.snapshot();
+                let dt = 1.0 / cfg.time_scale; // wall seconds per event second
+                let rates = snap.rates_since(&st.last_snap, dt);
+                let active = stage.active_instances();
+                // per-interval load CV (Fig. 9 right): deltas, active set only
+                let cv = {
+                    let deltas: Vec<f64> = active
+                        .iter()
+                        .map(|&i| (metrics.instance_load(i) - st.prev_loads[i]) as f64)
+                        .collect();
+                    for (i, p) in st.prev_loads.iter_mut().enumerate() {
+                        *p = metrics.instance_load(i);
+                    }
+                    let mean = deltas.iter().sum::<f64>() / deltas.len().max(1) as f64;
+                    if deltas.len() < 2 || mean <= 0.0 {
+                        0.0
+                    } else {
+                        let var = deltas.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>()
+                            / deltas.len() as f64;
+                        100.0 * var.sqrt() / mean
+                    }
+                };
+                // Every active instance reads (and counts) every gate
+                // tuple, so the summed rate is m× the true arrival rate;
+                // dividing by the active count recovers arrivals.
+                let arrival_tps =
+                    rates.in_tps / cfg.time_scale / active.len().max(1) as f64;
+                st.last_arrival_tps = arrival_tps;
+                st.samples.push(RunSample {
+                    t_s: next_sample_s,
+                    // stage 0 is offered the schedule; downstream stages
+                    // are offered whatever their upstream emits
+                    offered_tps: if k == 0 {
+                        cfg.schedule.rate_at(next_sample_s - 1)
+                    } else {
+                        arrival_tps
+                    },
+                    // rates are per wall second; report per *event* second
+                    in_tps: arrival_tps,
+                    out_tps: rates.out_tps / cfg.time_scale,
+                    cmp_per_s: rates.cmp_per_s / cfg.time_scale,
+                    latency_p50_us: egress.latency_us.p50(),
+                    latency_mean_us: egress.latency_us.mean(),
+                    threads: active.len(),
+                    backlog: stage.in_backlog(),
+                    load_cv_pct: cv,
+                });
+                st.last_snap = snap;
+            }
+            // end-to-end latency is a property of the whole pipeline; the
+            // per-second histogram resets once all stages sampled it
             egress.latency_us.reset();
             next_sample_s += 1;
         }
 
-        // scripted reconfigurations (bypass the controller)
-        while next_manual < manual.len() && (manual[next_manual].0 as f64) <= event_s {
-            let set = manual[next_manual].1.clone();
-            control.reconfigure(set.clone(), Mapper::over(set));
-            next_manual += 1;
+        // per-stage scripted reconfigurations (bypass the controllers)
+        for (k, st) in loops.iter_mut().enumerate() {
+            while st.next_manual < st.cfg.manual_reconfigs.len()
+                && (st.cfg.manual_reconfigs[st.next_manual].0 as f64) <= event_s
+            {
+                let set = st.cfg.manual_reconfigs[st.next_manual].1.clone();
+                pipeline.stages[k].reconfigure(set.clone(), Mapper::over(set));
+                st.next_manual += 1;
+            }
         }
-        // controller tick
-        if let Some(ctl) = cfg.controller.as_mut() {
-            if (next_controller_s as f64) <= event_s {
-                next_controller_s += cfg.controller_period_s;
-                let epoch_cfg = engine.epoch_config();
-                let active: Vec<usize> = epoch_cfg.instances.as_ref().clone();
-                let obs = Observation {
-                    in_rate: cur_rate,
-                    cmp_per_s: samples.last().map(|s| s.cmp_per_s).unwrap_or(0.0),
-                    backlog: engine.esg_in.backlog(),
-                    dt: cfg.controller_period_s as f64,
-                    active,
-                    max: cfg.max,
-                };
-                if let Decision::Reconfigure(set) = ctl.tick(&obs) {
-                    let mapper = Mapper::over(set.clone());
-                    control.reconfigure(set, mapper);
+        // per-stage controller ticks
+        for (k, st) in loops.iter_mut().enumerate() {
+            let period = st.cfg.controller_period_s.max(1);
+            if let Some(ctl) = st.cfg.controller.as_mut() {
+                if (st.next_controller_s as f64) <= event_s {
+                    st.next_controller_s += period;
+                    let stage = &mut pipeline.stages[k];
+                    let active = stage.active_instances();
+                    let obs = Observation {
+                        in_rate: if k == 0 { cur_rate } else { st.last_arrival_tps },
+                        cmp_per_s: st.samples.last().map(|s| s.cmp_per_s).unwrap_or(0.0),
+                        backlog: stage.in_backlog(),
+                        dt: period as f64,
+                        active,
+                        max: stage.max_parallelism(),
+                    };
+                    if let Decision::Reconfigure(set) = ctl.tick(&obs) {
+                        let mapper = Mapper::over(set.clone());
+                        stage.reconfigure(set, mapper);
+                    }
                 }
             }
         }
@@ -227,24 +392,70 @@ pub fn run_elastic_join(mut cfg: JoinRunConfig) -> RunResult {
         }
     }
 
-    // flush: end-of-stream heartbeat, drain remaining outputs briefly
-    ing.heartbeat(event_ms_total as EventTime + cfg.ws_ms + 10_000);
-    let drain_until = Instant::now() + Duration::from_millis(500);
+    // flush: end-of-stream heartbeat (workers forward it stage to stage),
+    // then drain remaining outputs briefly
+    ing.heartbeat(event_ms_total as EventTime + cfg.flush_slack_ms);
+    let drain_until = Instant::now() + cfg.drain;
     while Instant::now() < drain_until {
         if egress.poll() == 0 {
             std::thread::sleep(Duration::from_millis(2));
         }
     }
-    let reconfigs = control.completion_times();
+    let latency_p50_us = egress.latency_total_us.p50();
+    let latency_mean_us = egress.latency_total_us.mean();
     let egress_count = egress.count;
-    engine.shutdown();
-    RunResult { samples, reconfigs, egress_count }
+    let stages = loops
+        .into_iter()
+        .enumerate()
+        .map(|(k, st)| StageRunStats {
+            name: pipeline.stages[k].name(),
+            samples: st.samples,
+            reconfigs: pipeline.stages[k].completion_times(),
+        })
+        .collect();
+    pipeline.shutdown();
+    PipelineRunResult { stages, egress_count, latency_p50_us, latency_mean_us }
+}
+
+/// Run a live, threaded VSN ScaleJoin experiment — the Q3-Q6 entry point,
+/// now a thin wrapper over [`run_pipeline`] with a single-stage pipeline.
+pub fn run_elastic_join(cfg: JoinRunConfig) -> RunResult {
+    let def = q3_operator(cfg.ws_ms, cfg.n_keys);
+    let pipeline = PipelineBuilder::new(
+        def,
+        VsnOptions {
+            initial: cfg.initial,
+            max: cfg.max,
+            upstreams: 1,
+            egress_readers: 1,
+            gate_capacity: cfg.gate_capacity,
+            ..Default::default()
+        },
+    )
+    .build();
+    let mut gen = SjGen::new(cfg.seed, 1.0);
+    let pcfg = PipelineRunConfig {
+        schedule: cfg.schedule,
+        time_scale: cfg.time_scale,
+        stages: vec![StageRunConfig {
+            controller: cfg.controller,
+            controller_period_s: cfg.controller_period_s,
+            manual_reconfigs: cfg.manual_reconfigs,
+        }],
+        flush_slack_ms: cfg.ws_ms + 10_000,
+        drain: Duration::from_millis(500),
+    };
+    let r = run_pipeline(pipeline, pcfg, &mut gen);
+    let stage0 = r.stages.into_iter().next().expect("single-stage pipeline");
+    RunResult { samples: stage0.samples, reconfigs: stage0.reconfigs, egress_count: r.egress_count }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::elastic::{JoinCostModel, ReactiveController, Thresholds};
+    use crate::workloads::nyse::NyseConfig;
+    use crate::workloads::{hedge_join_op, trade_fanout_op};
 
     #[test]
     fn harness_steady_run_produces_samples() {
@@ -279,5 +490,50 @@ mod tests {
         let r = run_elastic_join(cfg);
         assert!(!r.reconfigs.is_empty(), "controller should have reconfigured");
         assert!(r.samples.last().unwrap().threads > 1);
+    }
+
+    #[test]
+    fn pipeline_harness_runs_two_stages_with_manual_reconfigs() {
+        // NYSE fan-out → hedge join, reconfiguring EACH stage once
+        let pipeline = PipelineBuilder::new(
+            trade_fanout_op(64),
+            VsnOptions { initial: 1, max: 2, gate_capacity: 4096, ..Default::default() },
+        )
+        .stage(
+            hedge_join_op(1_000, 32),
+            VsnOptions { initial: 1, max: 2, gate_capacity: 4096, ..Default::default() },
+        )
+        .build();
+        let mut source = TradeStream::new(&NyseConfig::default(), 400.0);
+        let r = run_pipeline(
+            pipeline,
+            PipelineRunConfig {
+                schedule: RateSchedule::constant(4, 400.0),
+                time_scale: 4.0,
+                stages: vec![
+                    StageRunConfig {
+                        manual_reconfigs: vec![(2, vec![0, 1])],
+                        ..Default::default()
+                    },
+                    StageRunConfig {
+                        manual_reconfigs: vec![(2, vec![0, 1])],
+                        ..Default::default()
+                    },
+                ],
+                flush_slack_ms: 5_000,
+                drain: Duration::from_millis(500),
+            },
+            &mut source,
+        );
+        assert_eq!(r.stages.len(), 2);
+        assert_eq!(r.stages[0].samples.len(), 4);
+        assert_eq!(r.stages[1].samples.len(), 4);
+        // both stages completed their independent reconfigurations
+        assert_eq!(r.stages[0].reconfigs.len(), 1, "stage 0 reconfig lost");
+        assert_eq!(r.stages[1].reconfigs.len(), 1, "stage 1 reconfig lost");
+        assert_eq!(r.stages[0].samples.last().unwrap().threads, 2);
+        assert_eq!(r.stages[1].samples.last().unwrap().threads, 2);
+        // data flowed through the shared gate into stage 2
+        assert!(r.stages[1].samples.iter().any(|s| s.in_tps > 0.0));
     }
 }

@@ -8,16 +8,38 @@
 //!
 //! ## Layers
 //! * [`scalegate`] — the ScaleGate / Elastic ScaleGate shared tuple buffer
-//!   (the paper's TB object, Table 2).
+//!   (the paper's TB object, Table 2), with batched reads and runtime
+//!   source/reader membership.
 //! * [`operator`] — the generalized stateful operator `O+` (§4) and the
-//!   operator library (Map, Aggregate, Join, ScaleJoin, …).
-//! * [`engine`] — the SN baseline engine and the VSN (STRETCH) engine with
-//!   epoch-based, state-transfer-free elasticity (§5, §7).
+//!   operator library (Map, Aggregate, Join, ScaleJoin, …), including
+//!   Map-as-elastic-stage ([`operator::map::MapStageLogic`]).
+//! * [`engine`] — the SN baseline engine, the VSN (STRETCH) engine with
+//!   epoch-based, state-transfer-free elasticity (§5, §7), and the
+//!   multi-stage pipeline layer ([`engine::pipeline`]).
 //! * [`elastic`] — reconfiguration controllers (reactive + proactive).
-//! * [`runtime`] — PJRT loader/executor for the AOT-compiled kernels.
-//! * [`workloads`] — generators for every evaluation workload (§8).
+//! * [`harness`] — rate-scheduled pipeline run loop with per-stage
+//!   controllers and per-stage metrics sampling.
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled kernels
+//!   (stubbed unless built with `--features pjrt`).
+//! * [`workloads`] — generators for every evaluation workload (§8), plus
+//!   2-stage pipeline operator sets (tokenize → count, fan-out → join).
 //! * [`sim`] — calibrated multicore discrete-event simulator (testbed
 //!   substitution; see DESIGN.md §5).
+//!
+//! ## Pipelines
+//! Applications compose as DAG chains `source → stage₁ → … → stageₖ →
+//! sink` via [`engine::pipeline::PipelineBuilder`]: typed
+//! `stage(OperatorDef, VsnOptions)` chaining where stage N's ESG_out
+//! **is** stage N+1's ESG_in — one shared gate, zero-copy hand-off, no
+//! re-ingestion. Watermarks propagate through the gate's source clocks
+//! (Lemma 2) plus forwarded heartbeat entries; each stage keeps its own
+//! instance pool and [`engine::ControlPlane`], so stages scale
+//! independently at runtime with no state transfer (first stage: control
+//! tuples ride the ingress wrappers, Alg. 5; later stages: a reserved
+//! control slot on the shared gate, [`engine::pipeline::ControlInjector`]).
+//! `examples/dag_pipeline.rs` runs a two-stage tokenize → wordcount
+//! pipeline, reconfigures both stages mid-run, and checks the output
+//! against a sequential reference.
 //!
 //! ## Quickstart
 //! See `examples/quickstart.rs`: build an `O+`, wrap it in a VSN engine,

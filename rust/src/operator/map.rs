@@ -5,7 +5,10 @@
 //! `A+`'s multi-key tuples into one single-key tuple per key so a plain
 //! key-by A can route them.
 
-use crate::tuple::{Payload, Tuple};
+use crate::operator::state::WindowSet;
+use crate::operator::{Ctx, OperatorDef, OperatorLogic, WindowType};
+use crate::time::{EventTime, WindowSpec, DELTA};
+use crate::tuple::{mix64, Key, Payload, Tuple};
 use std::sync::Arc;
 
 /// Stateless transform logic.
@@ -80,6 +83,64 @@ impl<L: MapLogic> MapOp<L> {
     }
 }
 
+/// Deploy a stateless [`MapLogic`] as a full VSN *pipeline stage*: a
+/// degenerate `O+` (I = 1, WT = Single, WA = WS = δ, empty ζ) whose f_U
+/// emits the mapped outputs immediately with τ preserved
+/// ([`Ctx::emit_at`]). f_MK assigns one synthetic load-balancing key
+/// derived from τ, so f_μ spreads tuples over the stage's instances
+/// while keeping routing deterministic across epochs (Theorem 3 applies
+/// unchanged: a reconfiguration just re-partitions the key space, and
+/// there is no state to move).
+///
+/// Tuples sharing a timestamp land on the same instance; pick
+/// `lb_keys ≫ Π` (e.g. 64) so balance comes from timestamp variety.
+pub struct MapStageLogic<L: MapLogic> {
+    pub logic: Arc<L>,
+    /// Synthetic key space for load balancing.
+    pub lb_keys: u64,
+}
+
+impl<L: MapLogic> OperatorLogic for MapStageLogic<L> {
+    type In = L::In;
+    type Out = L::Out;
+    type State = ();
+
+    #[inline]
+    fn keys(&self, t: &Tuple<L::In>, keys: &mut Vec<Key>) {
+        keys.push(mix64(t.ts as u64) % self.lb_keys);
+    }
+
+    #[inline]
+    fn update(&self, _w: &mut WindowSet<()>, t: &Tuple<L::In>, ctx: &mut Ctx<'_, L::Out>) {
+        let ts = t.ts;
+        self.logic.flat_map(t, &mut |p| ctx.emit_at(ts, p));
+    }
+
+    fn slide(&self, _w: &mut WindowSet<()>, _new_l: EventTime) -> bool {
+        false // stateless: drop the bookkeeping window on expiry
+    }
+
+    fn has_output(&self) -> bool {
+        false // no f_O — expiry fast-forwards (WA = δ)
+    }
+}
+
+/// Build a Map pipeline stage from a [`MapLogic`].
+pub fn map_stage_op<L: MapLogic>(
+    name: &'static str,
+    logic: L,
+    lb_keys: u64,
+) -> OperatorDef<MapStageLogic<L>> {
+    assert!(lb_keys >= 1);
+    OperatorDef::new(
+        name,
+        WindowSpec::new(DELTA, DELTA),
+        1,
+        WindowType::Single,
+        MapStageLogic { logic: Arc::new(logic), lb_keys },
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,6 +160,72 @@ mod tests {
         assert_eq!(out.len(), 3);
         assert!(out.iter().all(|o| o.ts == 42 && o.ingest_us == 7));
         assert_eq!(out.iter().map(|o| o.payload).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn map_stage_preserves_ts_through_core() {
+        use crate::metrics::OperatorMetrics;
+        use crate::operator::state::SharedState;
+        use crate::operator::OperatorCore;
+        use crate::tuple::Mapper;
+        let def = map_stage_op(
+            "double",
+            FnMapLogic::new(|t: &Tuple<u32>, emit: &mut dyn FnMut(u32)| {
+                emit(t.payload);
+                emit(t.payload * 10);
+            }),
+            8,
+        );
+        let mut core = OperatorCore::new(def, 0, SharedState::private(), OperatorMetrics::new(1));
+        let f_mu = Mapper::hash_mod(1);
+        let mut out: Vec<(i64, u32)> = Vec::new();
+        for ts in 1..=5i64 {
+            let t = Tuple::data(ts, ts as u32);
+            let mut sink = |o: Tuple<u32>| out.push((o.ts, o.payload));
+            let mut ctx = Ctx::new(&mut sink);
+            core.process(&t, &f_mu, &mut ctx);
+        }
+        // τ preserved exactly, two outputs per input, input order kept
+        assert_eq!(
+            out,
+            vec![
+                (1, 1), (1, 10), (2, 2), (2, 20), (3, 3), (3, 30),
+                (4, 4), (4, 40), (5, 5), (5, 50),
+            ]
+        );
+    }
+
+    #[test]
+    fn map_stage_splits_work_across_instances_exactly_once() {
+        use crate::metrics::OperatorMetrics;
+        use crate::operator::state::SharedState;
+        use crate::operator::OperatorCore;
+        use crate::tuple::Mapper;
+        let def = map_stage_op(
+            "id",
+            FnMapLogic::new(|t: &Tuple<u32>, emit: &mut dyn FnMut(u32)| emit(t.payload)),
+            64,
+        );
+        let shared = SharedState::new(4);
+        let metrics = OperatorMetrics::new(2);
+        let f_mu = Mapper::hash_mod(2);
+        let mut cores: Vec<_> = (0..2)
+            .map(|i| OperatorCore::new(def.clone(), i, shared.clone(), metrics.clone()))
+            .collect();
+        let mut per_core = [Vec::new(), Vec::new()];
+        for ts in 0..200i64 {
+            let t = Tuple::data(ts, ts as u32);
+            for (c, out) in cores.iter_mut().zip(per_core.iter_mut()) {
+                let mut sink = |o: Tuple<u32>| out.push(o.payload);
+                let mut ctx = Ctx::new(&mut sink);
+                c.process(&t, &f_mu, &mut ctx);
+            }
+        }
+        // exactly-once across the two instances, and both did real work
+        assert!(!per_core[0].is_empty() && !per_core[1].is_empty());
+        let mut out = [per_core[0].clone(), per_core[1].clone()].concat();
+        out.sort_unstable();
+        assert_eq!(out, (0..200).collect::<Vec<u32>>());
     }
 
     #[test]

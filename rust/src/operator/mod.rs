@@ -74,6 +74,16 @@ impl<'a, Out> Ctx<'a, Out> {
         });
     }
 
+    /// Emit with an explicit timestamp — for stateless Map stages, whose
+    /// contract is `t_out.τ ← t_in.τ` (§2.1), not the window boundary.
+    /// The caller must keep `ts` ≥ every timestamp it already emitted
+    /// this epoch (true for τ-preserving maps fed a sorted stream), or
+    /// downstream per-source sortedness breaks.
+    #[inline]
+    pub fn emit_at(&mut self, ts: EventTime, payload: Out) {
+        self.buf.push(Tuple { ts, kind: Kind::Data, input: 0, ingest_us: self.ingest_us, payload });
+    }
+
     /// Hand buffered emissions to the sink. Must be called with no state
     /// locks held (the core does this; see module docs).
     #[inline]

@@ -1,9 +1,31 @@
 //! The PJRT runtime bridge: load AOT-compiled JAX/Pallas artifacts
 //! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and execute
 //! them from the rust hot path. Python never runs at request time.
+//!
+//! The real bridge needs the `xla` and `anyhow` crates, which this
+//! offline container does not carry; it is therefore gated behind the
+//! `pjrt` cargo feature. Without the feature a stub with the same public
+//! surface compiles in: `artifacts_available()` always reports `false`
+//! (even if artifacts exist on disk — the stub cannot execute them, and
+//! `false` makes artifact-gated tests/benches skip cleanly), and every
+//! loader returns [`RuntimeError`]; the engine falls back to the scalar
+//! comparison loops (which the §Perf pass shows win on CPU anyway — the
+//! offload is compile-only here).
 
+#[cfg(feature = "pjrt")]
 pub mod executable;
+#[cfg(feature = "pjrt")]
 pub mod offload;
 
+#[cfg(feature = "pjrt")]
 pub use executable::{artifacts_available, artifacts_dir, LoadedExec, PjrtRuntime};
+#[cfg(feature = "pjrt")]
 pub use offload::{with_thread_kernel, JoinKernel, BATCH, WINDOWS};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{
+    artifacts_available, artifacts_dir, with_thread_kernel, JoinKernel, LoadedExec, PjrtRuntime,
+    RuntimeError, BATCH, WINDOWS,
+};

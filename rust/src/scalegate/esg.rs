@@ -62,6 +62,21 @@ impl Default for EsgConfig {
     }
 }
 
+impl EsgConfig {
+    /// The one place the per-source pending-queue size is derived from the
+    /// gate's flow-control capacity: an even split across sources, clamped
+    /// to [64, 2^14]. Every gate construction site (engine in/out gates,
+    /// fixed ScaleGates, pipeline hand-off gates) goes through this.
+    pub fn for_gate(max_sources: usize, max_readers: usize, capacity: usize) -> Self {
+        EsgConfig {
+            max_sources,
+            max_readers,
+            capacity,
+            source_queue: (capacity / max_sources.max(1)).clamp(64, 1 << 14),
+        }
+    }
+}
+
 struct SourceSlot {
     active: AtomicBool,
     /// Latest timestamp added by this source (the source "handle clock").
@@ -72,6 +87,10 @@ struct ReaderSlot {
     active: AtomicBool,
     /// Next log index this reader will consume.
     cursor: AtomicU64,
+    /// First log index the reader may still be *processing* (batch
+    /// consumers advance `cursor` past tuples they have not handled yet;
+    /// GC and reader-seeding must not reclaim below this).
+    floor: AtomicU64,
 }
 
 struct MergeState<T> {
@@ -168,19 +187,21 @@ impl<T: GateEntry> Inner<T> {
         }
     }
 
-    /// Reclaim log segments below the slowest active reader.
+    /// Reclaim log segments below the slowest active reader. Uses the
+    /// processing *floor*, not the consume cursor: batch readers advance
+    /// the cursor past entries they are still working through, and
+    /// `add_readers_at` may seed new readers at (floor − 1).
     fn gc(&self) {
         let _m = self.membership.lock().unwrap();
-        let mut min_cur = u64::MAX;
+        let mut min_floor = u64::MAX;
         for r in &self.readers {
             if r.active.load(Ordering::Acquire) {
-                min_cur = min_cur.min(r.cursor.load(Ordering::Acquire));
+                min_floor = min_floor.min(r.floor.load(Ordering::Acquire));
             }
         }
-        if min_cur != u64::MAX {
-            // keep one entry of slack: add_readers positions new readers
-            // at (invoker cursor - 1)
-            self.log.truncate_below(min_cur.saturating_sub(1));
+        if min_floor != u64::MAX {
+            // keep one entry of slack below the floor (reader re-seeding)
+            self.log.truncate_below(min_floor.saturating_sub(1));
         }
     }
 
@@ -251,6 +272,7 @@ impl<T: GateEntry> Esg<T> {
                 .map(|i| ReaderSlot {
                     active: AtomicBool::new(i < active_readers),
                     cursor: AtomicU64::new(0),
+                    floor: AtomicU64::new(0),
                 })
                 .collect(),
             membership: Mutex::new(()),
@@ -275,14 +297,32 @@ impl<T: GateEntry> Esg<T> {
     /// (keys that moved to them would otherwise be updated by no one).
     /// Returns `false` unless *all* of `ids` were inactive (the "only one
     /// concurrent caller succeeds" arbitration).
+    /// **`get()`-consumers only**: the cursor−1 convention assumes the
+    /// invoker's cursor trails its processing by exactly one tuple. A
+    /// batch consumer ([`ReaderHandle::get_batch`]) has up to a full
+    /// batch of retrieved-but-unprocessed tuples past its cursor and
+    /// MUST use [`Esg::add_readers_at`] with its own computed position
+    /// (the engine's `do_reconfig` does), or the new readers skip the
+    /// invoker's batch remainder.
     pub fn add_readers(&self, ids: &[usize], j: usize) -> bool {
+        let pos = self.inner.readers[j].cursor.load(Ordering::Acquire).saturating_sub(1);
+        self.add_readers_at(ids, pos)
+    }
+
+    /// `addReaders` with an explicit starting log index. Batch-consuming
+    /// readers advance their cursor past tuples they have not processed
+    /// yet, so the invoking instance computes the index of the tuple it is
+    /// *currently* processing itself (cursor − unconsumed − 1) instead of
+    /// relying on the cursor-1 convention of [`Esg::add_readers`]. Same
+    /// all-inactive arbitration.
+    pub fn add_readers_at(&self, ids: &[usize], pos: u64) -> bool {
         let _m = self.inner.membership.lock().unwrap();
         if ids.iter().any(|&i| self.inner.readers[i].active.load(Ordering::Acquire)) {
             return false;
         }
-        let pos = self.inner.readers[j].cursor.load(Ordering::Acquire).saturating_sub(1);
         for &i in ids {
             self.inner.readers[i].cursor.store(pos, Ordering::Release);
+            self.inner.readers[i].floor.store(pos, Ordering::Release);
             self.inner.readers[i].active.store(true, Ordering::Release);
         }
         true
@@ -351,6 +391,14 @@ impl<T: GateEntry> Esg<T> {
         self.inner.backlog()
     }
 
+    /// Current readiness bound: min over active sources of their handle
+    /// clocks (+∞ when no source is active). Pipeline control injection
+    /// stamps control tuples with this — the Lemma-3-safe "now" of the
+    /// gate.
+    pub fn clock_bound(&self) -> EventTime {
+        self.inner.bound()
+    }
+
     /// Total entries ever published (monotone).
     pub fn published(&self) -> u64 {
         self.inner.log.ready()
@@ -398,6 +446,31 @@ impl<T: GateEntry> SourceHandle<T> {
             }
         }
         // publish the clock *after* the tuple is enqueued (conservative)
+        slot.last_ts.fetch_max(ts, Ordering::AcqRel);
+        self.inner.try_merge();
+        Ok(())
+    }
+
+    /// Like [`try_add`](Self::try_add) but exempt from the gate's
+    /// flow-control capacity bound. For *rare control tuples only*: a
+    /// pipeline driver injecting a reconfiguration must not block behind
+    /// data backpressure it is itself responsible for draining further
+    /// downstream (a deadlockable cycle). The per-source pending queue
+    /// still bounds it.
+    pub fn force_add(&mut self, t: T) -> Result<(), AddError<T>> {
+        let slot = &self.inner.sources[self.id];
+        if !slot.active.load(Ordering::Acquire) {
+            return Err(AddError::Inactive(t));
+        }
+        let ts = t.ts();
+        debug_assert!(ts >= slot.last_ts.load(Ordering::Acquire));
+        match self.producer.try_push(t) {
+            Ok(()) => {}
+            Err(PushError::Full(t)) | Err(PushError::Closed(t)) => {
+                self.inner.try_merge();
+                return Err(AddError::Full(t));
+            }
+        }
         slot.last_ts.fetch_max(ts, Ordering::AcqRel);
         self.inner.try_merge();
         Ok(())
@@ -453,6 +526,7 @@ impl<T: GateEntry> ReaderHandle<T> {
         let cur = slot.cursor.load(Ordering::Acquire);
         if cur < self.inner.log.ready() {
             let v = self.inner.log.get(cur, &mut self.cache);
+            slot.floor.store(cur, Ordering::Release);
             slot.cursor.store(cur + 1, Ordering::Release);
             return Some(v);
         }
@@ -461,10 +535,50 @@ impl<T: GateEntry> ReaderHandle<T> {
         let cur = slot.cursor.load(Ordering::Acquire);
         if cur < self.inner.log.ready() {
             let v = self.inner.log.get(cur, &mut self.cache);
+            slot.floor.store(cur, Ordering::Release);
             slot.cursor.store(cur + 1, Ordering::Release);
             return Some(v);
         }
         None
+    }
+
+    /// Batched `getNextReadyTuple`: append up to `max` ready tuples to
+    /// `buf` with ONE cursor update, returning how many were taken. Cuts
+    /// the per-tuple atomic/merge overhead on the worker and egress hot
+    /// paths (§Perf). The reader's processing floor stays at the batch
+    /// start until the next `get`/`get_batch`, so GC never reclaims
+    /// entries the caller is still iterating and
+    /// [`Esg::add_readers_at`] can seed new readers inside the batch.
+    pub fn get_batch(&mut self, buf: &mut Vec<T>, max: usize) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        let slot = &self.inner.readers[self.id];
+        if !slot.active.load(Ordering::Acquire) {
+            return 0;
+        }
+        let cur = slot.cursor.load(Ordering::Acquire);
+        let mut ready = self.inner.log.ready();
+        if cur >= ready {
+            self.inner.try_merge();
+            ready = self.inner.log.ready();
+            if cur >= ready {
+                return 0;
+            }
+        }
+        let n = ((ready - cur) as usize).min(max);
+        buf.reserve(n);
+        for i in 0..n as u64 {
+            buf.push(self.inner.log.get(cur + i, &mut self.cache));
+        }
+        slot.floor.store(cur, Ordering::Release);
+        slot.cursor.store(cur + n as u64, Ordering::Release);
+        n
+    }
+
+    /// This reader's consume cursor (next log index it will take).
+    pub fn cursor(&self) -> u64 {
+        self.inner.readers[self.id].cursor.load(Ordering::Acquire)
     }
 
     /// The gate this reader belongs to (for membership calls from the
@@ -674,6 +788,85 @@ mod tests {
         // source 1 has no data but advances its clock (heartbeat)
         src[1].advance_clock(50);
         assert_eq!(rdr[0].get().unwrap().ts, 10);
+    }
+
+    #[test]
+    fn get_batch_drains_in_order() {
+        let (_g, mut src, mut rdr) = gate(1, 1);
+        for ts in 0..100i64 {
+            src[0].add(Tuple::data(ts, ts as u64));
+        }
+        let mut buf: Vec<T> = Vec::new();
+        assert_eq!(rdr[0].get_batch(&mut buf, 64), 64);
+        assert_eq!(rdr[0].get_batch(&mut buf, 64), 36);
+        assert_eq!(buf.len(), 100);
+        assert!(buf.windows(2).all(|w| w[0].ts <= w[1].ts));
+        assert_eq!(buf.last().unwrap().ts, 99);
+        assert_eq!(rdr[0].get_batch(&mut buf, 64), 0);
+        // interleaves with get()
+        src[0].add(Tuple::data(100, 100));
+        assert_eq!(rdr[0].get().unwrap().ts, 100);
+    }
+
+    #[test]
+    fn get_batch_respects_max_and_cursor() {
+        let (_g, mut src, mut rdr) = gate(1, 2);
+        for ts in 0..10i64 {
+            src[0].add(Tuple::data(ts, ts as u64));
+        }
+        let mut buf: Vec<T> = Vec::new();
+        assert_eq!(rdr[0].get_batch(&mut buf, 4), 4);
+        assert_eq!(rdr[0].cursor(), 4);
+        // the second reader is independent
+        assert_eq!(rdr[1].get().unwrap().ts, 0);
+    }
+
+    #[test]
+    fn add_readers_at_seeds_inside_a_batch() {
+        let (g, mut src, mut rdr) = gate(1, 1);
+        for ts in 0..10i64 {
+            src[0].add(Tuple::data(ts, ts as u64));
+        }
+        let mut buf: Vec<T> = Vec::new();
+        assert_eq!(rdr[0].get_batch(&mut buf, 8), 8); // cursor = 8
+        // reader 0 is "currently processing" index 3: seed reader 1 there
+        assert!(g.add_readers_at(&[1], 3));
+        assert_eq!(rdr[1].get().unwrap().ts, 3);
+        assert_eq!(rdr[1].get().unwrap().ts, 4);
+        // arbitration still applies
+        assert!(!g.add_readers_at(&[1], 0));
+    }
+
+    #[test]
+    fn for_gate_derives_source_queue() {
+        let c = EsgConfig::for_gate(4, 2, 1 << 12);
+        assert_eq!(c.max_sources, 4);
+        assert_eq!(c.max_readers, 2);
+        assert_eq!(c.capacity, 1 << 12);
+        assert_eq!(c.source_queue, 1 << 10);
+        // clamps low and high
+        assert_eq!(EsgConfig::for_gate(64, 1, 64).source_queue, 64);
+        assert_eq!(EsgConfig::for_gate(1, 1, 1 << 20).source_queue, 1 << 14);
+    }
+
+    #[test]
+    fn force_add_bypasses_capacity() {
+        let (g, mut src, _rdr): (Esg<T>, _, Vec<ReaderHandle<T>>) = Esg::new(
+            EsgConfig { max_sources: 1, max_readers: 1, capacity: 8, source_queue: 8192 },
+            1,
+            1,
+        );
+        let mut ts = 0i64;
+        // fill past the flow-control bound
+        loop {
+            ts += 1;
+            if let Err(AddError::Full(_)) = src[0].try_add(Tuple::data(ts, 0)) {
+                break;
+            }
+        }
+        // a control-style add still goes through
+        assert!(src[0].force_add(Tuple::data(ts + 1, 99)).is_ok());
+        assert!(g.backlog() > 8);
     }
 
     #[test]

@@ -16,16 +16,7 @@ pub fn scale_gate<T: GateEntry>(
     readers: usize,
     capacity: usize,
 ) -> (Esg<T>, Vec<SourceHandle<T>>, Vec<ReaderHandle<T>>) {
-    Esg::new(
-        EsgConfig {
-            max_sources: sources,
-            max_readers: readers,
-            capacity,
-            source_queue: (capacity / sources.max(1)).clamp(64, 1 << 14),
-        },
-        sources,
-        readers,
-    )
+    Esg::new(EsgConfig::for_gate(sources, readers, capacity), sources, readers)
 }
 
 #[cfg(test)]

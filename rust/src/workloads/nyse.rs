@@ -8,7 +8,9 @@
 //! bursts and lulls, and per-symbol price random walks around the
 //! previous-day average. See DESIGN.md §5.
 
-use crate::operator::join::JoinPredicate;
+use crate::operator::join::{scalejoin_op, Either, JoinPredicate, ScaleJoinLogic};
+use crate::operator::map::{map_stage_op, MapLogic, MapStageLogic};
+use crate::operator::OperatorDef;
 use crate::time::EventTime;
 use crate::tuple::Tuple;
 use crate::util::Rng;
@@ -65,6 +67,43 @@ impl JoinPredicate for HedgePredicate {
     }
 }
 
+// ---- the 2-stage hedge pipeline (self-join fan-out M → band join J+) --
+
+/// Stage 1 of the Q6 pipeline: the self-join fan-out Map. Every trade is
+/// materialized once per join side (`Either::L` then `Either::R`, τ
+/// preserved) — what the monolithic benches did by hand at the ingress
+/// now runs as an elastic stage of its own. Trades whose previous-day
+/// average is zero can never satisfy the hedge predicate and are dropped
+/// here (cheap early filtering).
+pub struct TradeFanout;
+
+impl MapLogic for TradeFanout {
+    type In = Trade;
+    type Out = Either<Trade, Trade>;
+
+    fn flat_map(&self, t: &Tuple<Trade>, emit: &mut dyn FnMut(Either<Trade, Trade>)) {
+        if t.payload.avg == 0 {
+            return;
+        }
+        emit(Either::L(t.payload));
+        emit(Either::R(t.payload));
+    }
+}
+
+/// Stage-1 operator: trade fan-out as an elastic Map stage.
+pub fn trade_fanout_op(lb_keys: u64) -> OperatorDef<MapStageLogic<TradeFanout>> {
+    map_stage_op("trade-fanout", TradeFanout, lb_keys)
+}
+
+/// Stage-2 operator: the hedge band self-join over the fanned-out stream
+/// (WS in event-time ms; the paper uses 30 s).
+pub fn hedge_join_op(
+    ws_ms: EventTime,
+    n_keys: u64,
+) -> OperatorDef<ScaleJoinLogic<HedgePredicate>> {
+    scalejoin_op("hedge", ws_ms, HedgePredicate, n_keys)
+}
+
 /// Trace generator configuration.
 #[derive(Clone, Debug)]
 pub struct NyseConfig {
@@ -99,6 +138,15 @@ pub struct NyseGen {
     rng: Rng,
     prices: Vec<i32>,
     avgs: Vec<i32>,
+}
+
+/// One mean-reverting random-walk step of symbol `sym`'s price.
+#[inline]
+fn walk_price(rng: &mut Rng, prices: &mut [i32], avgs: &[i32], sym: usize) -> i32 {
+    let drift = (avgs[sym] - prices[sym]) / 50;
+    let noise = rng.gen_range(41) as i32 - 20;
+    prices[sym] = (prices[sym] + drift + noise).max(avgs[sym] / 2);
+    prices[sym]
 }
 
 impl NyseGen {
@@ -141,18 +189,51 @@ impl NyseGen {
             offs.sort_unstable();
             for off in offs {
                 let sym = self.rng.gen_range(self.cfg.symbols as u64) as usize;
-                // random walk around avg, mean-reverting
-                let drift = (self.avgs[sym] - self.prices[sym]) / 50;
-                let noise = self.rng.gen_range(41) as i32 - 20;
-                self.prices[sym] =
-                    (self.prices[sym] + drift + noise).max(self.avgs[sym] / 2);
+                let price = walk_price(&mut self.rng, &mut self.prices, &self.avgs, sym);
                 tuples.push(Tuple::data(
                     s as EventTime * 1000 + off,
-                    Trade { id: sym as u16, price: self.prices[sym], avg: self.avgs[sym] },
+                    Trade { id: sym as u16, price, avg: self.avgs[sym] },
                 ));
             }
         }
         (rates, tuples)
+    }
+}
+
+/// Incremental, rate-paced trade source (the pipeline-harness flavour of
+/// [`NyseGen`]): same per-symbol random walks, but event time advances by
+/// `1000 / rate` ms in expectation per tuple so a driver can replay any
+/// [`crate::workloads::rates::RateSchedule`] against it.
+pub struct TradeStream {
+    rng: Rng,
+    prices: Vec<i32>,
+    avgs: Vec<i32>,
+    ts: EventTime,
+    frac: f64,
+    pub rate_tps: f64,
+}
+
+impl TradeStream {
+    pub fn new(cfg: &NyseConfig, rate_tps: f64) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let avgs: Vec<i32> =
+            (0..cfg.symbols).map(|_| 2_000 + rng.gen_range(48_000) as i32).collect();
+        let prices = avgs.clone();
+        TradeStream { rng, prices, avgs, ts: 0, frac: 0.0, rate_tps: rate_tps.max(1.0) }
+    }
+
+    pub fn set_rate(&mut self, rate_tps: f64) {
+        self.rate_tps = rate_tps.max(1.0);
+    }
+
+    pub fn next(&mut self) -> Tuple<Trade> {
+        self.frac += 1000.0 / self.rate_tps;
+        let step = self.frac.floor();
+        self.frac -= step;
+        self.ts += step as EventTime;
+        let sym = self.rng.gen_range(self.avgs.len() as u64) as usize;
+        let price = walk_price(&mut self.rng, &mut self.prices, &self.avgs, sym);
+        Tuple::data(self.ts, Trade { id: sym as u16, price, avg: self.avgs[sym] })
     }
 }
 
@@ -206,6 +287,38 @@ mod tests {
         assert!(!p.matches(&l, &off));
         let possame = Trade { id: 4, price: 105, avg: 100 }; // ratio +1
         assert!(!p.matches(&l, &possame));
+    }
+
+    #[test]
+    fn fanout_emits_both_sides_with_same_ts() {
+        let t = Tuple::data(42, Trade { id: 3, price: 105, avg: 100 });
+        let mut out = Vec::new();
+        TradeFanout.flat_map(&t, &mut |e| out.push(e));
+        assert_eq!(out.len(), 2);
+        assert!(matches!(out[0], Either::L(l) if l.id == 3));
+        assert!(matches!(out[1], Either::R(r) if r.id == 3));
+        // zero-average trades are dropped (predicate can never match)
+        let bad = Tuple::data(43, Trade { id: 1, price: 5, avg: 0 });
+        let mut out2 = Vec::new();
+        TradeFanout.flat_map(&bad, &mut |e| out2.push(e));
+        assert!(out2.is_empty());
+    }
+
+    #[test]
+    fn trade_stream_paces_event_time() {
+        let cfg = NyseConfig::default();
+        let mut s = TradeStream::new(&cfg, 1000.0);
+        let ts0 = s.next().ts;
+        let mut last = ts0;
+        for _ in 0..2000 {
+            let t = s.next();
+            assert!(t.ts >= last, "stream must stay ts-sorted");
+            assert!((t.payload.id as usize) < cfg.symbols);
+            assert!(nd(&t.payload).abs() < 0.6);
+            last = t.ts;
+        }
+        // 2000 tuples at 1000 t/s ≈ 2000 ms of event time
+        assert!((1600..2400).contains(&(last - ts0)), "dt={}", last - ts0);
     }
 
     #[test]

@@ -7,6 +7,10 @@
 //! hashtags-per-tweet, and the paircount distance bound B ∈ {3, 10, ∞}
 //! (L/M/H duplication). See DESIGN.md §5 (substitutions).
 
+use crate::operator::aggregate::{count_per_key_op, CountPerKey};
+use crate::operator::map::{map_stage_op, MapLogic, MapStageLogic};
+use crate::operator::OperatorDef;
+use crate::time::WindowSpec;
 use crate::tuple::{Key, Tuple};
 use crate::util::{Rng, Zipf};
 use std::sync::Arc;
@@ -68,6 +72,12 @@ impl TweetGen {
         }
     }
 
+    /// Adjust the mean arrival rate (tweets per event-second) — used by
+    /// the pipeline harness to replay rate schedules.
+    pub fn set_rate(&mut self, tps: f64) {
+        self.cfg.mean_gap_ms = (1000.0 / tps.max(1.0)).max(1e-6);
+    }
+
     /// Next tweet tuple (timestamps strictly advance in expectation).
     pub fn next(&mut self) -> Tuple<Tweet> {
         self.ts += self.rng.exp(self.cfg.mean_gap_ms).round().max(0.0) as i64;
@@ -102,6 +112,44 @@ pub fn wordcount_keys(t: &Tuple<Tweet>, keys: &mut Vec<Key>) {
             keys.push(k);
         }
     }
+}
+
+// ---- the 2-stage wordcount pipeline (tokenize M → windowed count A+) --
+
+/// Stage 1 of the pipeline wordcount: tokenize — one output tuple per
+/// *distinct* word of the tweet, τ preserved. This is the Map `M` of
+/// §2.1 deployed as an elastic VSN stage; downstream the words are plain
+/// single-key tuples, so stage 2 is an ordinary key-by count.
+pub struct Tokenize;
+
+impl MapLogic for Tokenize {
+    type In = Tweet;
+    type Out = Key;
+
+    fn flat_map(&self, t: &Tuple<Tweet>, emit: &mut dyn FnMut(Key)) {
+        let ws = &t.payload.words;
+        for (i, &w) in ws.iter().enumerate() {
+            if !ws[..i].contains(&w) {
+                emit(w as Key);
+            }
+        }
+    }
+}
+
+/// Stage-1 operator: tokenize as an elastic Map stage (`lb_keys`
+/// synthetic routing keys; use ≫ the stage's max parallelism).
+pub fn tokenize_op(lb_keys: u64) -> OperatorDef<MapStageLogic<Tokenize>> {
+    map_stage_op("tokenize", Tokenize, lb_keys)
+}
+
+/// Stage-2 operator: windowed count over the tokenized word stream (each
+/// input tuple's payload IS its key).
+pub fn word_count_stage_op(
+    spec: WindowSpec,
+) -> OperatorDef<CountPerKey<Key, impl Fn(&Tuple<Key>, &mut Vec<Key>) + Send + Sync>> {
+    count_per_key_op("wordcount-stage", spec, |t: &Tuple<Key>, keys: &mut Vec<Key>| {
+        keys.push(t.payload)
+    })
 }
 
 /// f_MK for **paircount** (Operator 5): one key per distinct word pair
@@ -192,6 +240,19 @@ mod tests {
             sorted.dedup();
             assert_eq!(sorted.len(), keys.len(), "duplicate keys emitted");
             assert!(!keys.is_empty());
+        }
+    }
+
+    #[test]
+    fn tokenize_matches_wordcount_keys() {
+        use crate::operator::map::MapLogic;
+        let mut g = small_gen();
+        for t in g.take(200) {
+            let mut want = Vec::new();
+            wordcount_keys(&t, &mut want);
+            let mut got = Vec::new();
+            Tokenize.flat_map(&t, &mut |k| got.push(k));
+            assert_eq!(got, want, "tokenize must emit exactly f_MK's distinct words");
         }
     }
 

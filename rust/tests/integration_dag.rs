@@ -1,0 +1,190 @@
+//! Integration: the multi-stage pipeline layer (engine/pipeline.rs).
+//!
+//! A deterministic two-stage wordcount — tokenize Map → windowed count
+//! Aggregate — chained through ONE shared gate (stage 1's ESG_out ≡
+//! stage 2's ESG_in), checked for exact output equivalence against a
+//! single-threaded brute-force reference while EACH stage is
+//! independently reconfigured mid-run (Theorem 3 per stage, no state
+//! transfer anywhere).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use stretch::engine::pipeline::PipelineBuilder;
+use stretch::engine::VsnOptions;
+use stretch::time::WindowSpec;
+use stretch::tuple::{Key, Tuple};
+use stretch::workloads::tweets::{
+    tokenize_op, word_count_stage_op, wordcount_keys, Tweet, TweetGen, TweetGenConfig,
+};
+
+/// Brute-force single-threaded reference: (window_right, word) → count
+/// over windows fully expired before `horizon`.
+fn reference_counts(
+    tuples: &[Tuple<Tweet>],
+    spec: WindowSpec,
+    horizon: i64,
+) -> BTreeMap<(i64, Key), u64> {
+    let mut m = BTreeMap::new();
+    let mut keys = Vec::new();
+    for t in tuples {
+        keys.clear();
+        wordcount_keys(t, &mut keys); // == tokenize: distinct words
+        let mut l = spec.earliest_win_l(t.ts);
+        while l <= spec.latest_win_l(t.ts) {
+            if l + spec.size <= horizon {
+                for &k in &keys {
+                    *m.entry((l + spec.size, k)).or_default() += 1;
+                }
+            }
+            l += spec.advance;
+        }
+    }
+    m
+}
+
+fn corpus(n: usize) -> Vec<Tuple<Tweet>> {
+    TweetGen::new(TweetGenConfig {
+        vocab: 400,
+        hashtag_vocab: 20,
+        seed: 0xDA6,
+        mean_gap_ms: 2.0,
+        ..Default::default()
+    })
+    .take(n)
+}
+
+#[test]
+fn two_stage_pipeline_matches_reference_under_per_stage_reconfigs() {
+    let spec = WindowSpec::new(500, 500);
+    let n = 4_000usize;
+    let tuples = corpus(n);
+    let horizon = tuples.last().unwrap().ts + 20_000;
+    let oracle = reference_counts(&tuples, spec, horizon);
+    assert!(!oracle.is_empty(), "degenerate corpus");
+
+    let mut pipeline = PipelineBuilder::new(
+        tokenize_op(64),
+        VsnOptions { initial: 1, max: 3, gate_capacity: 8192, ..Default::default() },
+    )
+    .stage(
+        word_count_stage_op(spec),
+        VsnOptions { initial: 2, max: 4, gate_capacity: 8192, ..Default::default() },
+    )
+    .build();
+    assert_eq!(pipeline.depth(), 2);
+
+    // feeder thread: the ingress wrapper forwards stage 0's control
+    // tuples in-band, so reconfigure calls may race freely with it
+    let progress = Arc::new(AtomicUsize::new(0));
+    let feed = tuples.clone();
+    let mut ing = pipeline.ingress.remove(0);
+    let fed = progress.clone();
+    let feeder = std::thread::spawn(move || {
+        for t in feed {
+            ing.add(t);
+            fed.fetch_add(1, Ordering::Relaxed);
+        }
+        ing.heartbeat(horizon);
+    });
+
+    // collect while reconfiguring each stage once, mid-run
+    let mut reader = pipeline.egress.remove(0);
+    let mut got: BTreeMap<(i64, Key), u64> = BTreeMap::new();
+    let want_entries = oracle.len();
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let mut did_stage0 = false;
+    let mut did_stage1 = false;
+    while got.len() < want_entries && std::time::Instant::now() < deadline {
+        let p = progress.load(Ordering::Relaxed);
+        if !did_stage0 && p > n / 3 {
+            pipeline.reconfigure_stage(0, vec![0, 1, 2]); // tokenize: 1 → 3
+            did_stage0 = true;
+        }
+        if !did_stage1 && p > 2 * n / 3 {
+            pipeline.reconfigure_stage(1, vec![0, 1, 2, 3]); // count: 2 → 4
+            did_stage1 = true;
+        }
+        match reader.get() {
+            Some(t) if t.kind.is_data() => {
+                got.insert((t.ts, t.payload.0), t.payload.1);
+            }
+            Some(_) => {}
+            None => std::thread::sleep(Duration::from_micros(200)),
+        }
+    }
+    feeder.join().unwrap();
+    assert!(did_stage0 && did_stage1, "reconfig triggers never fired");
+
+    // both reconfigurations completed, independently, on their own stage
+    let t0 = std::time::Instant::now();
+    while (pipeline.stages[0].completion_times().is_empty()
+        || pipeline.stages[1].completion_times().is_empty())
+        && t0.elapsed() < Duration::from_secs(5)
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(pipeline.stages[0].completion_times().len(), 1, "stage 0 reconfig incomplete");
+    assert_eq!(pipeline.stages[1].completion_times().len(), 1, "stage 1 reconfig incomplete");
+    assert_eq!(pipeline.stages[0].active_instances(), vec![0, 1, 2]);
+    assert_eq!(pipeline.stages[1].active_instances(), vec![0, 1, 2, 3]);
+    pipeline.shutdown();
+
+    assert_eq!(got, oracle, "pipeline output diverged from the sequential reference");
+}
+
+#[test]
+fn pipeline_shrink_preserves_equivalence() {
+    // decommission mid-run on both stages (3→1 and 2→1)
+    let spec = WindowSpec::new(400, 400);
+    let n = 2_500usize;
+    let tuples = corpus(n);
+    let horizon = tuples.last().unwrap().ts + 20_000;
+    let oracle = reference_counts(&tuples, spec, horizon);
+
+    let mut pipeline = PipelineBuilder::new(
+        tokenize_op(64),
+        VsnOptions { initial: 3, max: 3, gate_capacity: 8192, ..Default::default() },
+    )
+    .stage(
+        word_count_stage_op(spec),
+        VsnOptions { initial: 2, max: 2, gate_capacity: 8192, ..Default::default() },
+    )
+    .build();
+
+    let progress = Arc::new(AtomicUsize::new(0));
+    let feed = tuples.clone();
+    let mut ing = pipeline.ingress.remove(0);
+    let fed = progress.clone();
+    let feeder = std::thread::spawn(move || {
+        for t in feed {
+            ing.add(t);
+            fed.fetch_add(1, Ordering::Relaxed);
+        }
+        ing.heartbeat(horizon);
+    });
+
+    let mut reader = pipeline.egress.remove(0);
+    let mut got: BTreeMap<(i64, Key), u64> = BTreeMap::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let mut did = false;
+    while got.len() < oracle.len() && std::time::Instant::now() < deadline {
+        if !did && progress.load(Ordering::Relaxed) > n / 2 {
+            pipeline.reconfigure_stage(0, vec![1]);
+            pipeline.reconfigure_stage(1, vec![0]);
+            did = true;
+        }
+        match reader.get() {
+            Some(t) if t.kind.is_data() => {
+                got.insert((t.ts, t.payload.0), t.payload.1);
+            }
+            Some(_) => {}
+            None => std::thread::sleep(Duration::from_micros(200)),
+        }
+    }
+    feeder.join().unwrap();
+    pipeline.shutdown();
+    assert_eq!(got, oracle, "shrink reconfigs must not lose or double-count windows");
+}

@@ -3,7 +3,10 @@
 //! predicate — the L1 ↔ L3 numerical contract.
 //!
 //! Requires `make artifacts`; tests are skipped (with a notice) if the
-//! artifacts are absent.
+//! artifacts are absent. The whole file is gated on the `pjrt` feature:
+//! it drives `xla` types directly, which the default std-only build does
+//! not link (see rust/src/runtime/stub.rs).
+#![cfg(feature = "pjrt")]
 
 use stretch::runtime::{artifacts_available, artifacts_dir, JoinKernel, PjrtRuntime, BATCH};
 use stretch::util::Rng;
