@@ -1,11 +1,18 @@
 //! Micro-benchmarks + ablations: the per-component costs behind every
-//! other bench, and the PJRT-offload batch-size sweep (the L1↔L3
-//! crossover study referenced by DESIGN.md §Hardware-Adaptation).
+//! other bench — headlined by the per-tuple vs batched ESG data-plane
+//! comparison (§Perf; the acceptance gate is batched ≥ 2× per-tuple) —
+//! and the PJRT-offload batch-size sweep (the L1↔L3 crossover study
+//! referenced by DESIGN.md §Hardware-Adaptation).
+//!
+//! `--budget-ms N` bounds each component measurement (CI smoke uses a
+//! tiny budget so bench bit-rot fails the pipeline). Writes
+//! `BENCH_micro.json` next to the human output.
 
 use std::time::Instant;
+use stretch::metrics::{BenchReport, Json};
 use stretch::metrics::reporter::Table;
 use stretch::runtime::{artifacts_available, JoinKernel};
-use stretch::sim::calibrate;
+use stretch::sim::calibrate::{calibrate_with, measure_gate_batch_cost, GATE_BATCH};
 use stretch::util::Rng;
 
 fn offload_sweep(table: &mut Table) {
@@ -51,14 +58,28 @@ fn offload_sweep(table: &mut Table) {
 }
 
 fn main() {
+    let args = stretch::cli::Cli::new("bench_micro", "per-component costs + ESG batching win")
+        .opt("budget-ms", "measurement budget per component (ms)", Some("100"))
+        .flag("no-offload", "skip the PJRT offload sweep")
+        .parse()
+        .unwrap_or_else(|e| panic!("{e}"));
+    let budget_ms = args.u64_or("budget-ms", 100).max(5);
+
     println!("micro-benchmarks (release numbers feed the simulator + EXPERIMENTS.md §Perf)\n");
-    let cal = calibrate();
+    let cal = calibrate_with(budget_ms);
+    let speedup = cal.gate_tuple_s / cal.gate_batch_tuple_s.max(1e-12);
     let mut table = Table::new(&["component", "cost", "reference", "note"]);
     table.row(&[
-        "ESG add+merge+get".into(),
+        "ESG add+merge+get (per-tuple)".into(),
         format!("{:.3} µs/tuple", cal.gate_tuple_s * 1e6),
         format!("{:.1}M t/s", 1.0 / cal.gate_tuple_s / 1e6),
-        "shared gate round trip".into(),
+        "pre-batching data plane".into(),
+    ]);
+    table.row(&[
+        format!("ESG batched (runs of {GATE_BATCH})"),
+        format!("{:.3} µs/tuple", cal.gate_batch_tuple_s * 1e6),
+        format!("{:.1}M t/s", 1.0 / cal.gate_batch_tuple_s / 1e6),
+        format!("{speedup:.1}× vs per-tuple"),
     ]);
     table.row(&[
         "SPSC push+pop".into(),
@@ -78,9 +99,48 @@ fn main() {
         format!("{:.2} ns/cmp", 1e9 / cal.cmp_per_sec),
         "the paper's c/s metric".into(),
     ]);
-    offload_sweep(&mut table);
+    if !args.flag("no-offload") {
+        offload_sweep(&mut table);
+    }
     table.print();
-    println!("\ninterpretation: on CPU-PJRT (interpret-mode Pallas) the per-call dispatch");
+
+    // batch-size sweep for the trajectory record
+    let mut sweep = Vec::new();
+    for b in [16usize, 64, 256, 1024] {
+        let cost = measure_gate_batch_cost(b, budget_ms / 2);
+        sweep.push(Json::obj(vec![
+            ("batch", Json::from(b)),
+            ("us_per_tuple", Json::from(cost * 1e6)),
+            ("tput_tps", Json::from(1.0 / cost)),
+        ]));
+    }
+
+    let mut report = BenchReport::new("micro");
+    report
+        .set("budget_ms", budget_ms)
+        .set("esg_per_tuple_tps", 1.0 / cal.gate_tuple_s)
+        .set("esg_batched_tps", 1.0 / cal.gate_batch_tuple_s)
+        .set("esg_batch_size", GATE_BATCH)
+        .set("esg_batched_speedup", speedup)
+        .set("esg_batched_speedup_target", 2.0)
+        .set("esg_batched_meets_target", speedup >= 2.0)
+        .set("esg_batch_sweep", Json::Arr(sweep))
+        .set("spsc_tps", 1.0 / cal.queue_tuple_s)
+        .set("mergesort_tps", 1.0 / cal.sort_tuple_s)
+        .set("cmp_per_s", cal.cmp_per_sec);
+    match report.write() {
+        Ok(p) => println!("\njson: {}", p.display()),
+        Err(e) => eprintln!("\nBENCH_micro.json write failed: {e}"),
+    }
+
+    println!(
+        "\nbatched ESG data plane: {speedup:.1}× the per-tuple path (target ≥ 2×, runs of {GATE_BATCH})"
+    );
+    println!("interpretation: on CPU-PJRT (interpret-mode Pallas) the per-call dispatch");
     println!("dominates, so the scalar loop wins at every window size — the offload is");
     println!("compile-only on this box; the TPU roofline estimate is in DESIGN.md §6.");
+    assert!(
+        speedup >= 2.0 || budget_ms < 20,
+        "batched ESG speedup {speedup:.2}× below the 2× acceptance bar"
+    );
 }

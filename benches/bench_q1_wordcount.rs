@@ -22,6 +22,7 @@ const END_TS: i64 = i64::MAX / 16;
 struct Outcome {
     tput_tps: f64,
     lat_p50_us: u64,
+    lat_p99_us: u64,
     forwarded_per_tuple: f64,
 }
 
@@ -40,12 +41,18 @@ fn corpus(n: usize) -> Vec<Tuple<Tweet>> {
         .take(n)
 }
 
-fn run_vsn(level: &str, tuples: &[Tuple<Tweet>], pi: usize) -> Outcome {
+fn run_vsn(
+    level: &str,
+    tuples: &[Tuple<Tweet>],
+    pi: usize,
+    tuning: &stretch::config::BatchTuning,
+) -> Outcome {
     let spec = WindowSpec::new(10_000, 10_000);
     let def = count_per_key_op("q1", spec, key_fn(level));
     let (mut engine, mut ingress, mut readers) = VsnEngine::setup(
         def,
-        VsnOptions { initial: pi, max: pi, upstreams: 1, ..Default::default() },
+        VsnOptions { initial: pi, max: pi, upstreams: 1, ..Default::default() }
+            .with_batch(tuning),
     );
     let clock = engine.clock.clone();
     let mut ing = ingress.remove(0);
@@ -85,19 +92,27 @@ fn run_vsn(level: &str, tuples: &[Tuple<Tweet>], pi: usize) -> Outcome {
     Outcome {
         tput_tps: tuples.len() as f64 / dt,
         lat_p50_us: lat.p50(),
+        lat_p99_us: lat.p99(),
         forwarded_per_tuple: 1.0, // VSN: one shared add per tuple
     }
 }
 
-fn run_sn(level: &str, tuples: &[Tuple<Tweet>], pi: usize) -> Outcome {
+fn run_sn(
+    level: &str,
+    tuples: &[Tuple<Tweet>],
+    pi: usize,
+    tuning: &stretch::config::BatchTuning,
+) -> Outcome {
     // The SN pipeline per Corollary 1 (what Flink actually runs): an M
     // stage materializes ONE single-key tuple per key of the tweet, and
     // the key-by routes each to its instance — that materialization IS
     // the duplication overhead of Theorem 1.
     let spec = WindowSpec::new(10_000, 10_000);
     let def = count_per_key_op::<Key, _>("q1-sn", spec, |t, keys| keys.push(t.payload));
-    let (mut engine, mut ingress, mut egress) =
-        SnEngine::setup(def, SnOptions { parallelism: pi, upstreams: 1, ..Default::default() });
+    let (mut engine, mut ingress, mut egress) = SnEngine::setup(
+        def,
+        SnOptions { parallelism: pi, upstreams: 1, ..Default::default() }.with_batch(tuning),
+    );
     let clock = engine.clock.clone();
     let mut ing = ingress.remove(0);
     let t0 = Instant::now();
@@ -105,15 +120,20 @@ fn run_sn(level: &str, tuples: &[Tuple<Tweet>], pi: usize) -> Outcome {
     let kf = key_fn(level);
     let feeder = std::thread::spawn(move || {
         let mut keys = Vec::new();
+        let mut run: Vec<Tuple<Key>> = Vec::with_capacity(256);
         for t in feed {
             let ingest = clock.now_us();
             keys.clear();
             kf(&t, &mut keys);
             // M: one materialized tuple per key (Alg. 7/9)
             for &k in &keys {
-                ing.forward(Tuple::data(t.ts, k).with_ingest(ingest));
+                run.push(Tuple::data(t.ts, k).with_ingest(ingest));
+            }
+            if run.len() >= 256 {
+                ing.forward_batch(&mut run);
             }
         }
+        ing.forward_batch(&mut run);
         ing.heartbeat(END_TS);
     });
     let mut last_data = Instant::now();
@@ -135,6 +155,7 @@ fn run_sn(level: &str, tuples: &[Tuple<Tweet>], pi: usize) -> Outcome {
     Outcome {
         tput_tps: tuples.len() as f64 / dt,
         lat_p50_us: lat.p50(),
+        lat_p99_us: lat.p99(),
         forwarded_per_tuple: forwarded as f64 / tuples.len() as f64,
     }
 }
@@ -143,10 +164,13 @@ fn main() {
     let args = stretch::cli::Cli::new("bench_q1_wordcount", "Fig. 6: VSN vs SN by duplication level")
         .opt("tuples", "tweets per run", Some("12000"))
         .opt("pi", "parallelism degree", Some("3"))
+        .opt("batch", "data-plane batch size (worker + SN queue hops)", Some("128"))
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
     let n = args.usize_or("tuples", 12_000);
     let pi = args.usize_or("pi", 3);
+    let b = args.usize_or("batch", 128).max(1);
+    let tuning = stretch::config::BatchTuning { worker: b, ingress: b.max(256), queue: b };
     let tuples = corpus(n);
 
     let mut csv = CsvWriter::create(
@@ -158,11 +182,24 @@ fn main() {
         "level", "dup", "VSN t/s", "SN t/s", "Δtput", "VSN p50 µs", "SN p50 µs", "SN copies/t",
     ]);
     println!("Q1 (Fig. 6): {n} tweets, Π={pi} — higher duplication should widen the VSN win\n");
+    let mut levels_json: Vec<stretch::metrics::Json> = Vec::new();
     for level in ["wordcount", "pair-L", "pair-M", "pair-H"] {
         let dup = duplication_factor(&tuples, key_fn(level));
-        let v = run_vsn(level, &tuples, pi);
-        let s = run_sn(level, &tuples, pi);
+        let v = run_vsn(level, &tuples, pi, &tuning);
+        let s = run_sn(level, &tuples, pi, &tuning);
         let gain = (v.tput_tps / s.tput_tps - 1.0) * 100.0;
+        levels_json.push(stretch::metrics::Json::obj(vec![
+            ("level", level.into()),
+            ("dup_factor", dup.into()),
+            ("vsn_tput_tps", v.tput_tps.into()),
+            ("sn_tput_tps", s.tput_tps.into()),
+            ("tput_gain_pct", gain.into()),
+            ("vsn_lat_p50_us", v.lat_p50_us.into()),
+            ("vsn_lat_p99_us", v.lat_p99_us.into()),
+            ("sn_lat_p50_us", s.lat_p50_us.into()),
+            ("sn_lat_p99_us", s.lat_p99_us.into()),
+            ("sn_forwarded_per_tuple", s.forwarded_per_tuple.into()),
+        ]));
         stretch::csv_row!(
             csv, level, format!("{dup:.2}"), format!("{:.0}", v.tput_tps),
             format!("{:.0}", s.tput_tps), format!("{gain:.1}"),
@@ -181,6 +218,16 @@ fn main() {
     }
     csv.flush().unwrap();
     table.print();
+    let mut report = stretch::metrics::BenchReport::new("q1_wordcount");
+    report
+        .set("tuples", n)
+        .set("pi", pi)
+        .set("batch", b)
+        .set("levels", stretch::metrics::Json::Arr(levels_json));
+    match report.write() {
+        Ok(p) => println!("\njson: {}", p.display()),
+        Err(e) => eprintln!("\nBENCH_q1_wordcount.json write failed: {e}"),
+    }
     println!("\npaper: wordcount +17% tput / −94% latency; pair-L/M/H +137/+237/+283% tput");
     println!("csv: results/q1_wordcount.csv");
 }

@@ -74,6 +74,7 @@ fn main() {
         Table::new(&["Π", "STRETCH t/s", "SN t/s", "ratio", "STRETCH lat ms", "SN lat ms"]);
     let st = Arch::StretchForward;
     let sn = Arch::SnForward;
+    let mut sweep_json: Vec<stretch::metrics::Json> = Vec::new();
     for pi in [2usize, 4, 8, 12, 16, 24, 36] {
         let rs = st.max_rate(&cal, pi);
         let rn = sn.max_rate(&cal, pi);
@@ -94,19 +95,40 @@ fn main() {
             format!("{ls:.1}"),
             format!("{ln:.1}"),
         ]);
+        sweep_json.push(stretch::metrics::Json::obj(vec![
+            ("pi", pi.into()),
+            ("stretch_tput_tps", rs.into()),
+            ("sn_tput_tps", rn.into()),
+            ("ratio", (rs / rn).into()),
+            ("stretch_lat_ms", ls.into()),
+            ("sn_lat_ms", ln.into()),
+        ]));
     }
     csv.flush().unwrap();
     println!("Q2 (Fig. 7) — simulated sweep (calibrated):");
     table.print();
     println!("\npaper: STRETCH 120k→100k t/s; Flink 40k→2k t/s; 3×-50× ratio; <30ms vs >100ms lat");
 
+    let mut real_json: Vec<stretch::metrics::Json> = Vec::new();
     if !args.flag("no-real") {
         let n = args.usize_or("tuples", 30_000);
         println!("\nreal threaded spot-check (1-core box, both instances share the core):");
         for pi in [1usize, 2] {
             let tps = real_vsn_forward(pi, n);
             println!("  Π={pi}: VSN forwarding sustained {tps:.0} t/s (wall-clock, threaded)");
+            real_json.push(stretch::metrics::Json::obj(vec![
+                ("pi", pi.into()),
+                ("vsn_tput_tps", tps.into()),
+            ]));
         }
+    }
+    let mut report = stretch::metrics::BenchReport::new("q2_forward");
+    report
+        .set("sim_sweep", stretch::metrics::Json::Arr(sweep_json))
+        .set("real_spot_checks", stretch::metrics::Json::Arr(real_json));
+    match report.write() {
+        Ok(p) => println!("json: {}", p.display()),
+        Err(e) => eprintln!("BENCH_q2_forward.json write failed: {e}"),
     }
     println!("csv: results/q2_forward.csv");
 }

@@ -58,10 +58,19 @@ fn main() {
     let mut table = Table::new(&[
         "Π", "STRETCH t/s", "ScaleJoin t/s", "1T t/s", "STRETCH c/s", "lat ms", "1T lat ms",
     ]);
+    let mut sweep_json: Vec<stretch::metrics::Json> = Vec::new();
     for pi in [1usize, 2, 4, 8, 16, 24, 36, 48, 60, 72] {
         let rs = stretch_arch.max_rate(&cal, pi);
         let rj = scalejoin_arch.max_rate(&cal, pi);
         let r1 = onet_arch.max_rate(&cal, pi);
+        sweep_json.push(stretch::metrics::Json::obj(vec![
+            ("pi", pi.into()),
+            ("stretch_rate_tps", rs.into()),
+            ("scalejoin_rate_tps", rj.into()),
+            ("onet_rate_tps", r1.into()),
+            ("stretch_cmp_per_s", stretch_arch.cmp_throughput(rs).into()),
+            ("stretch_lat_ms", stretch_arch.base_latency_ms(&cal, pi).into()),
+        ]));
         stretch::csv_row!(
             csv, pi, format!("{rs:.0}"), format!("{rj:.0}"), format!("{r1:.0}"),
             format!("{:.3e}", stretch_arch.cmp_throughput(rs)),
@@ -85,6 +94,8 @@ fn main() {
     println!("\npaper shape: STRETCH grows ~linearly with Π, matches ScaleJoin (small gap),");
     println!("1T flat with lowest latency; HT degradation beyond 36 threads");
 
+    let mut report = stretch::metrics::BenchReport::new("q3_scalejoin");
+    report.set("ws_ms", ws_ms).set("sim_sweep", stretch::metrics::Json::Arr(sweep_json));
     if !args.flag("no-real") {
         println!("\nmeasured anchors on this box:");
         let (tps_1t, cps_1t) = measure_1t(ws_ms);
@@ -103,6 +114,11 @@ fn main() {
             r.samples.iter().map(|s| s.cmp_per_s).sum::<f64>() / r.samples.len() as f64;
         let avg_lat: f64 =
             r.samples.iter().map(|s| s.latency_mean_us).sum::<f64>() / r.samples.len() as f64;
+        let p50 = {
+            let mut v: Vec<u64> = r.samples.iter().map(|s| s.latency_p50_us).collect();
+            v.sort_unstable();
+            v.get(v.len() / 2).copied().unwrap_or(0)
+        };
         println!(
             "  STRETCH Π=1: offered {target:.0} t/s → {:.2}M c/s, mean latency {:.1} ms (threaded)",
             avg_cps / 1e6,
@@ -112,6 +128,17 @@ fn main() {
             "  generic-O+ overhead vs 1T: {:.1}% (paper: STRETCH ≈ ScaleJoin ≈ 1T at Π=1)",
             (cps_1t / avg_cps.max(1.0) - 1.0) * 100.0
         );
+        report
+            .set("real_1t_tput_tps", tps_1t)
+            .set("real_1t_cmp_per_s", cps_1t)
+            .set("real_stretch_pi1_offered_tps", target)
+            .set("real_stretch_pi1_cmp_per_s", avg_cps)
+            .set("real_stretch_pi1_lat_mean_us", avg_lat)
+            .set("real_stretch_pi1_lat_p50_us", p50);
+    }
+    match report.write() {
+        Ok(p) => println!("json: {}", p.display()),
+        Err(e) => eprintln!("BENCH_q3_scalejoin.json write failed: {e}"),
     }
     println!("csv: results/q3_scalejoin.csv");
 }

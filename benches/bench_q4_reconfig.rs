@@ -136,6 +136,19 @@ fn main() {
             );
         }
         csv.flush().unwrap();
+        let times: Vec<f64> = r.reconfigs.iter().map(|&(_, ms)| ms).collect();
+        let lat_mean = r.samples.iter().map(|s| s.latency_mean_us).sum::<f64>()
+            / r.samples.len().max(1) as f64;
+        let mut report = stretch::metrics::BenchReport::new("q4_reconfig");
+        report
+            .set("mode", "dynamics")
+            .set("reconfig_ms", times)
+            .set("lat_mean_us", lat_mean)
+            .set("peak_threads", r.samples.iter().map(|s| s.threads).max().unwrap_or(0));
+        match report.write() {
+            Ok(p) => println!("json: {}", p.display()),
+            Err(e) => eprintln!("BENCH_q4_reconfig.json write failed: {e}"),
+        }
         println!("\nreconfigs: {:?} (ms)", r.reconfigs);
         println!("csv: results/q4_dynamics.csv");
         return;
@@ -147,6 +160,7 @@ fn main() {
     )
     .unwrap();
     let mut table = Table::new(&["mode", "start Π", "action", "end Π", "reconfig ms", "load CV %"]);
+    let mut runs_json: Vec<stretch::metrics::Json> = Vec::new();
     let starts: Vec<usize> = (1..max).collect();
     println!("Q4 (Fig. 9 / Table 4): measured reconfiguration times (threaded engine)\n");
     // (a) protocol time: steady load, scripted switch — the <40ms claim
@@ -162,6 +176,14 @@ fn main() {
             };
             let action = if provision { "provision" } else { "decommission" };
             let (end, times, cv) = protocol_run(pi, target, ws_ms, max, model);
+            runs_json.push(stretch::metrics::Json::obj(vec![
+                ("mode", "protocol".into()),
+                ("start_pi", pi.into()),
+                ("action", action.into()),
+                ("end_pi", end.unwrap_or(0).into()),
+                ("reconfig_ms", times.clone().into()),
+                ("load_cv_pct", cv.into()),
+            ]));
             for ms in &times {
                 stretch::csv_row!(
                     csv, "protocol", pi, action, end.unwrap_or(0), format!("{ms:.2}"), format!("{cv:.2}")
@@ -186,6 +208,14 @@ fn main() {
             let (end, times, cv) = reconfig_run(pi, max, ws_ms, provision, model);
             let action = if provision { "provision" } else { "decommission" };
             let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+            runs_json.push(stretch::metrics::Json::obj(vec![
+                ("mode", "loaded".into()),
+                ("start_pi", pi.into()),
+                ("action", action.into()),
+                ("end_pi", end.unwrap_or(0).into()),
+                ("reconfig_ms", times.clone().into()),
+                ("load_cv_pct", cv.into()),
+            ]));
             for ms in &times {
                 stretch::csv_row!(
                     csv, "loaded", pi, action, end.unwrap_or(0), format!("{ms:.2}"), format!("{cv:.2}")
@@ -203,6 +233,12 @@ fn main() {
     }
     csv.flush().unwrap();
     table.print();
+    let mut report = stretch::metrics::BenchReport::new("q4_reconfig");
+    report.set("mode", "protocol+loaded").set("runs", stretch::metrics::Json::Arr(runs_json));
+    match report.write() {
+        Ok(p) => println!("json: {}", p.display()),
+        Err(e) => eprintln!("BENCH_q4_reconfig.json write failed: {e}"),
+    }
     println!("\npaper: all reconfiguration times < 40 ms; load imbalance ≤ 2%");
     println!("protocol rows isolate the epoch switch; loaded rows include 1-core backlog drain");
     println!("csv: results/q4_reconfig.csv");

@@ -76,6 +76,26 @@ fn main() {
     );
     println!("  thread trajectory: {:?}", r.samples.iter().map(|s| s.threads).collect::<Vec<_>>());
     assert!(!times.is_empty(), "controller never reconfigured — schedule too tame");
+    let lat_p50 = {
+        let mut v: Vec<u64> = r.samples.iter().map(|s| s.latency_p50_us).collect();
+        v.sort_unstable();
+        v.get(v.len() / 2).copied().unwrap_or(0)
+    };
+    let in_tps_avg =
+        r.samples.iter().map(|s| s.in_tps).sum::<f64>() / r.samples.len().max(1) as f64;
+    let mut report = stretch::metrics::BenchReport::new("q5_multi");
+    report
+        .set("real_duration_s", dur as u64)
+        .set("real_in_tps_avg", in_tps_avg)
+        .set("real_lat_mean_ms", lat_avg)
+        .set("real_lat_p50_us", lat_p50)
+        .set("real_reconfig_count", times.len())
+        .set("real_reconfig_worst_ms", worst)
+        .set("real_reconfig_ms", times.clone());
+    match report.write() {
+        Ok(p) => println!("  json: {}", p.display()),
+        Err(e) => eprintln!("  BENCH_q5_multi.json write failed: {e}"),
+    }
 
     // ---- (b) paper-scale fluid replay --------------------------------
     println!("\nQ5 paper-scale replay (fluid sim, same controller code):");

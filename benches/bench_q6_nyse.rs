@@ -14,7 +14,7 @@ use stretch::sim::{calibrate, Arch, FluidSim};
 use stretch::tuple::Tuple;
 use stretch::workloads::nyse::{HedgePredicate, NyseConfig, NyseGen, Trade};
 
-fn real_hedge_run(duration_s: u32, peak: f64) -> (u64, u64, f64, f64) {
+fn real_hedge_run(duration_s: u32, peak: f64) -> (u64, u64, f64, f64, u64, u64) {
     let (rates, trades) = NyseGen::new(NyseConfig {
         duration_s,
         peak_rate: peak,
@@ -75,8 +75,10 @@ fn real_hedge_run(duration_s: u32, peak: f64) -> (u64, u64, f64, f64) {
     let snap = metrics.snapshot();
     let matches = egress.count;
     let lat = egress.latency_us.mean() / 1e3;
+    let lat_p50 = egress.latency_us.p50();
+    let lat_p99 = egress.latency_us.p99();
     engine.shutdown();
-    (2 * n as u64, matches, snap.comparisons as f64 / dt, lat)
+    (2 * n as u64, matches, snap.comparisons as f64 / dt, lat, lat_p50, lat_p99)
 }
 
 fn main() {
@@ -87,13 +89,25 @@ fn main() {
         .unwrap_or_else(|e| panic!("{e}"));
 
     println!("Q6 (Fig. 13) — NYSE hedge self-join\n");
-    let (tuples, matches, cps, lat) = real_hedge_run(
+    let (tuples, matches, cps, lat, lat_p50, lat_p99) = real_hedge_run(
         args.u64_or("duration", 30) as u32,
         args.f64_or("peak", 900.0),
     );
     println!("real threaded run (Π=2):");
     println!("  {tuples} trade tuples → {matches} hedge matches");
     println!("  {:.2}M comparisons/s, mean latency {:.1} ms (paper: ~1-21 ms)", cps / 1e6, lat);
+    let mut report = stretch::metrics::BenchReport::new("q6_nyse");
+    report
+        .set("real_tuples", tuples)
+        .set("real_matches", matches)
+        .set("real_cmp_per_s", cps)
+        .set("real_lat_mean_ms", lat)
+        .set("real_lat_p50_us", lat_p50)
+        .set("real_lat_p99_us", lat_p99);
+    match report.write() {
+        Ok(p) => println!("  json: {}", p.display()),
+        Err(e) => eprintln!("  BENCH_q6_nyse.json write failed: {e}"),
+    }
 
     // paper-scale fluid replay with the reactive controller
     let cal = calibrate();

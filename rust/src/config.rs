@@ -9,6 +9,41 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
 
+/// Data-plane batch sizes (§Perf): how many tuples move per gate/queue
+/// synchronization on each hot path. Parsed from a config's `[batch]`
+/// section; engine option structs consume it via
+/// `VsnOptions::with_batch` / `SnOptions::with_batch`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchTuning {
+    /// VSN worker gate synchronization granularity (ESG get_batch /
+    /// add_batch per instance loop iteration).
+    pub worker: usize,
+    /// Ingress run length: tuples an upstream accumulates before one
+    /// batched `addSTRETCH` / `forwardSN`.
+    pub ingress: usize,
+    /// SN instance queue hop granularity (SPSC push_slice / pop_chunk).
+    pub queue: usize,
+}
+
+impl Default for BatchTuning {
+    fn default() -> Self {
+        BatchTuning { worker: 128, ingress: 256, queue: 128 }
+    }
+}
+
+impl BatchTuning {
+    /// Read the `[batch]` section (missing keys keep defaults; values
+    /// are clamped to ≥ 1 so a zero can never stall a loop).
+    pub fn from_config(c: &Config) -> Self {
+        let d = BatchTuning::default();
+        BatchTuning {
+            worker: (c.int_or("batch.worker", d.worker as i64).max(1)) as usize,
+            ingress: (c.int_or("batch.ingress", d.ingress as i64).max(1)) as usize,
+            queue: (c.int_or("batch.queue", d.queue as i64).max(1)) as usize,
+        }
+    }
+}
+
 /// Parsed configuration value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ConfigValue {
@@ -360,6 +395,17 @@ rate_scale = 1.5
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn batch_tuning_defaults_and_overrides() {
+        let d = BatchTuning::from_config(&Config::parse("").unwrap());
+        assert_eq!(d, BatchTuning::default());
+        let c = Config::parse("[batch]\nworker = 32\nqueue = 0").unwrap();
+        let t = BatchTuning::from_config(&c);
+        assert_eq!(t.worker, 32);
+        assert_eq!(t.ingress, BatchTuning::default().ingress);
+        assert_eq!(t.queue, 1); // clamped
     }
 
     #[test]

@@ -142,6 +142,36 @@ impl<P: Clone + Default + Send + Sync + 'static> StretchIngress<P> {
         self.src.add(t);
     }
 
+    /// Batched Alg. 5: drain pending control commands FIRST (control
+    /// tuples cut ahead of the whole run, stamped with the last forwarded
+    /// τ — so a reconfiguration is never delayed behind a data run), then
+    /// hand the ts-sorted run to the gate with one batched add. Drains
+    /// `run`.
+    pub fn add_batch(&mut self, run: &mut Vec<Tuple<P>>) {
+        let Some(first) = run.first() else { return };
+        if self.control.has_pending(self.upstream) {
+            let probe = first.clone();
+            while let Some(cmd) = self.control.drain(self.upstream) {
+                let ts = self.last_ts;
+                self.control.note_issued(cmd.spec.epoch, cmd.issued);
+                self.src.add(Tuple {
+                    ts,
+                    kind: crate::tuple::Kind::Control(cmd.spec.clone()),
+                    input: probe.input,
+                    ingest_us: 0,
+                    payload: probe.payload.clone(),
+                });
+            }
+        }
+        debug_assert!(
+            run.first().unwrap().ts >= self.last_ts,
+            "upstream {} not ts-sorted",
+            self.upstream
+        );
+        self.last_ts = run.last().unwrap().ts;
+        self.src.add_batch(run);
+    }
+
     /// Advance this upstream's clock without data (rate drop to zero).
     pub fn heartbeat(&mut self, ts: EventTime) {
         // control tuples must still flow even without data

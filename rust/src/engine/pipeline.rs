@@ -15,9 +15,12 @@
 //! * sources = upstream stage's `max` worker slots **plus one reserved
 //!   control slot** (the last source id), readers = downstream stage's
 //!   `max` worker slots;
-//! * data flows ESG-native: upstream workers add, their handle clocks
-//!   carry the watermark (Lemma 2), and they forward explicit heartbeat
-//!   entries so downstream windows expire when rates drop to zero;
+//! * data flows ESG-native and *batch-native* (§Perf): upstream workers
+//!   stage their emissions and hand whole ts-sorted runs over with one
+//!   batched add per [`VsnOptions::worker_batch`] tuples, downstream
+//!   workers take runs via `get_batch`, their handle clocks carry the
+//!   watermark (Lemma 2), and they forward explicit heartbeat entries so
+//!   downstream windows expire when rates drop to zero;
 //! * reconfigurations of the downstream stage enter through the reserved
 //!   control slot ([`ControlInjector`]): the slot is activated with the
 //!   gate's current readiness bound as its Lemma-3 clock floor, the

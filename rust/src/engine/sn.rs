@@ -29,11 +29,22 @@ pub struct SnOptions {
     pub upstreams: usize,
     /// Capacity of each dedicated queue (backpressure bound).
     pub queue_capacity: usize,
+    /// Tuples moved per queue synchronization (SPSC push_slice /
+    /// pop_chunk granularity on the instance and egress hops).
+    pub batch: usize,
 }
 
 impl Default for SnOptions {
     fn default() -> Self {
-        SnOptions { parallelism: 1, upstreams: 1, queue_capacity: 1 << 12 }
+        SnOptions { parallelism: 1, upstreams: 1, queue_capacity: 1 << 12, batch: 128 }
+    }
+}
+
+impl SnOptions {
+    /// Apply the `[batch]` section of an experiment config.
+    pub fn with_batch(mut self, tuning: &crate::config::BatchTuning) -> Self {
+        self.batch = tuning.queue.max(1);
+        self
     }
 }
 
@@ -57,6 +68,9 @@ pub struct SnIngress<L: OperatorLogic> {
     queues: Vec<Producer<Tuple<L::In>>>,
     keys_buf: Vec<crate::tuple::Key>,
     targets: Vec<bool>,
+    /// Per-target clone staging for [`forward_batch`](Self::forward_batch)
+    /// (lazily sized to the queue count).
+    staging: Vec<Vec<Tuple<L::In>>>,
     forwarded: Arc<AtomicU64>,
     running: Arc<AtomicBool>,
 }
@@ -87,6 +101,48 @@ impl<L: OperatorLogic> SnIngress<L> {
         self.forwarded.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Batched forwardSN: route a ts-sorted run, staging the clones per
+    /// target queue and flushing each with batched pushes — one
+    /// tail publish per (run, target) instead of per (tuple, target).
+    /// Drains `run` (the caller's buffer keeps its allocation, like the
+    /// other batch APIs).
+    pub fn forward_batch(&mut self, run: &mut Vec<Tuple<L::In>>) {
+        if self.staging.is_empty() {
+            self.staging = (0..self.queues.len()).map(|_| Vec::new()).collect();
+        }
+        let mut n = 0u64;
+        for t in run.drain(..) {
+            if !t.kind.is_data() {
+                // order matters: drain staged data ahead of the broadcast
+                self.flush_staging();
+                for q in self.queues.iter_mut() {
+                    push_blocking(q, t.clone(), &self.running);
+                }
+                continue;
+            }
+            self.keys_buf.clear();
+            self.logic.keys(&t, &mut self.keys_buf);
+            self.targets.iter_mut().for_each(|x| *x = false);
+            for &k in &self.keys_buf {
+                self.targets[self.mapper.map(k)] = true;
+            }
+            for (j, &hit) in self.targets.iter().enumerate() {
+                if hit {
+                    self.staging[j].push(t.clone());
+                    n += 1;
+                }
+            }
+        }
+        self.flush_staging();
+        self.forwarded.fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn flush_staging(&mut self) {
+        for (j, buf) in self.staging.iter_mut().enumerate() {
+            push_slice_blocking(&mut self.queues[j], buf, &self.running);
+        }
+    }
+
     /// Advance all downstream channels when this upstream idles.
     pub fn heartbeat(&mut self, ts: crate::time::EventTime)
     where
@@ -113,26 +169,52 @@ fn push_blocking<T>(q: &mut Producer<T>, mut v: T, running: &AtomicBool) {
     }
 }
 
+/// Batched [`push_blocking`]: drain `buf` into the queue with one tail
+/// publish per accepted chunk, spinning on backpressure.
+fn push_slice_blocking<T>(q: &mut Producer<T>, buf: &mut Vec<T>, running: &AtomicBool) {
+    let mut b = Backoff::active();
+    while !buf.is_empty() {
+        if q.push_slice(buf, usize::MAX) == 0 {
+            if q.is_closed() || !running.load(Ordering::Acquire) {
+                buf.clear();
+                return;
+            }
+            b.snooze();
+        } else {
+            b.reset();
+        }
+    }
+}
+
 /// Egress endpoint: merge-sorts the instances' output channels and
 /// records throughput + latency (driven by the caller, like the paper's
 /// sink).
 pub struct SnEgress<Out: Clone + Send + Sync + 'static> {
     channels: Vec<Consumer<Tuple<Out>>>,
     sorter: MergeSorter<Out>,
+    /// Chunked-pop scratch (batched intake).
+    intake: Vec<Tuple<Out>>,
+    batch: usize,
     pub clock: EngineClock,
     pub count: u64,
     pub latency_us: Arc<Histogram>,
 }
 
 impl<Out: Clone + Send + Sync + 'static> SnEgress<Out> {
-    /// Drain available output tuples; returns how many data tuples passed.
-    pub fn poll(&mut self) -> usize {
-        // pull everything available into the sorter
+    /// Pull everything available into the sorter, one chunk at a time.
+    fn intake_all(&mut self) {
         for (ch, c) in self.channels.iter_mut().enumerate() {
-            while let Some(t) = c.try_pop() {
-                self.sorter.offer(ch, t);
+            while c.pop_chunk(&mut self.intake, self.batch) > 0 {
+                for t in self.intake.drain(..) {
+                    self.sorter.offer(ch, t);
+                }
             }
         }
+    }
+
+    /// Drain available output tuples; returns how many data tuples passed.
+    pub fn poll(&mut self) -> usize {
+        self.intake_all();
         let mut n = 0;
         while let Some(t) = self.sorter.pop_ready() {
             if t.kind.is_data() {
@@ -162,11 +244,7 @@ impl<Out: Clone + Send + Sync + 'static> SnEgress<Out> {
 
     /// Like [`poll`](Self::poll) but hands every ready data tuple to `f`.
     pub fn poll_tuples(&mut self, f: &mut dyn FnMut(&Tuple<Out>)) -> usize {
-        for (ch, c) in self.channels.iter_mut().enumerate() {
-            while let Some(t) = c.try_pop() {
-                self.sorter.offer(ch, t);
-            }
-        }
+        self.intake_all();
         let mut n = 0;
         while let Some(t) = self.sorter.pop_ready() {
             if t.kind.is_data() {
@@ -225,6 +303,7 @@ where
             egress_consumers.push(c);
         }
 
+        let batch = opts.batch.max(1);
         let mut threads = Vec::with_capacity(pi);
         for (j, (consumers, mut egress)) in
             instance_consumers.into_iter().zip(egress_producers).enumerate()
@@ -237,7 +316,9 @@ where
                 std::thread::Builder::new()
                     .name(format!("{}-sn-{j}", def.name))
                     .spawn(move || {
-                        run_instance::<L>(def, j, consumers, &mut egress, mapper, metrics, running)
+                        run_instance::<L>(
+                            def, j, consumers, &mut egress, mapper, metrics, running, batch,
+                        )
                     })
                     .expect("spawn sn instance"),
             );
@@ -251,6 +332,7 @@ where
                 targets: vec![false; pi],
                 queues,
                 keys_buf: Vec::with_capacity(16),
+                staging: Vec::new(),
                 forwarded: forwarded.clone(),
                 running: running.clone(),
             })
@@ -259,6 +341,8 @@ where
         let egress = SnEgress {
             sorter: MergeSorter::new(pi),
             channels: egress_consumers,
+            intake: Vec::with_capacity(batch),
+            batch,
             clock: clock.clone(),
             count: 0,
             latency_us: Arc::new(Histogram::new()),
@@ -288,8 +372,10 @@ impl<L: OperatorLogic> Drop for SnEngine<L> {
     }
 }
 
-/// One SN instance thread: merge-sort dedicated queues, processSN, forward
-/// outputs (plus watermark heartbeats) to the egress channel.
+/// One SN instance thread: merge-sort dedicated queues (chunked pops),
+/// processSN, forward outputs (plus watermark heartbeats) to the egress
+/// channel with batched pushes.
+#[allow(clippy::too_many_arguments)]
 fn run_instance<L: OperatorLogic>(
     def: OperatorDef<L>,
     j: usize,
@@ -298,6 +384,7 @@ fn run_instance<L: OperatorLogic>(
     mapper: Mapper,
     metrics: Arc<OperatorMetrics>,
     running: Arc<AtomicBool>,
+    batch: usize,
 ) where
     L::Out: Default,
 {
@@ -305,12 +392,17 @@ fn run_instance<L: OperatorLogic>(
     let mut sorter: MergeSorter<L::In> = MergeSorter::new(consumers.len());
     let mut backoff = Backoff::pooled();
     let mut last_emitted = crate::time::TIME_MIN;
+    let mut in_buf: Vec<Tuple<L::In>> = Vec::with_capacity(batch);
+    // outputs stage here and leave via one batched push per flush point
+    let mut out_buf: Vec<Tuple<L::Out>> = Vec::with_capacity(batch);
     while running.load(Ordering::Acquire) {
-        // intake
+        // intake: one head/tail synchronization per chunk, not per tuple
         let mut moved = false;
         for (ch, c) in consumers.iter_mut().enumerate() {
-            while let Some(t) = c.try_pop() {
-                sorter.offer(ch, t);
+            while c.pop_chunk(&mut in_buf, batch) > 0 {
+                for t in in_buf.drain(..) {
+                    sorter.offer(ch, t);
+                }
                 moved = true;
             }
         }
@@ -322,12 +414,12 @@ fn run_instance<L: OperatorLogic>(
             let grew = core.observe(t.ts);
             let mut emitted = 0u64;
             {
-                let running = &running;
                 let last = &mut last_emitted;
+                let ob = &mut out_buf;
                 let mut sink = |o: Tuple<L::Out>| {
                     emitted += 1;
                     *last = (*last).max(o.ts);
-                    push_blocking(egress, o, running);
+                    ob.push(o);
                 };
                 let mut ctx = Ctx::new(&mut sink);
                 ctx.ingest_us = t.ingest_us;
@@ -349,8 +441,11 @@ fn run_instance<L: OperatorLogic>(
                 // watermark heartbeat so the egress sorter can progress;
                 // never below anything already emitted (channel sortedness)
                 let hb_ts = core.watermark().max(last_emitted);
-                push_blocking(egress, Tuple::heartbeat(hb_ts), &running);
+                out_buf.push(Tuple::heartbeat(hb_ts));
                 last_emitted = hb_ts;
+            }
+            if out_buf.len() >= batch {
+                push_slice_blocking(egress, &mut out_buf, &running);
             }
             if processed > 256 {
                 drained = false;
@@ -366,12 +461,12 @@ fn run_instance<L: OperatorLogic>(
         if drained && wm > core.watermark() && core.observe(wm) {
             let mut emitted = 0u64;
             {
-                let running = &running;
                 let last = &mut last_emitted;
+                let ob = &mut out_buf;
                 let mut sink = |o: Tuple<L::Out>| {
                     emitted += 1;
                     *last = (*last).max(o.ts);
-                    push_blocking(egress, o, running);
+                    ob.push(o);
                 };
                 let mut ctx = Ctx::new(&mut sink);
                 core.advance(&mapper, &mut ctx);
@@ -380,9 +475,11 @@ fn run_instance<L: OperatorLogic>(
                 core.metrics.record_out(emitted);
             }
             let hb_ts = core.watermark().max(last_emitted);
-            push_blocking(egress, Tuple::heartbeat(hb_ts), &running);
+            out_buf.push(Tuple::heartbeat(hb_ts));
             last_emitted = hb_ts;
         }
+        // per-iteration flush: idle loops must not sit on staged outputs
+        push_slice_blocking(egress, &mut out_buf, &running);
         if moved || processed > 0 {
             backoff.reset();
         } else {

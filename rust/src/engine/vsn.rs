@@ -28,9 +28,12 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-/// Tuples a worker takes from ESG_in per gate synchronization (see
-/// [`ReaderHandle::get_batch`]); also the egress drain granularity.
-pub const WORKER_BATCH: usize = 64;
+/// Default tuples a worker takes from ESG_in per gate synchronization
+/// (see [`ReaderHandle::get_batch`]) and emits downstream per
+/// [`SourceHandle::add_batch`]; also the egress drain granularity.
+/// Tunable per engine via [`VsnOptions::worker_batch`] /
+/// [`crate::config::BatchTuning`].
+pub const WORKER_BATCH: usize = 128;
 
 /// Engine construction options.
 #[derive(Clone, Debug)]
@@ -47,6 +50,9 @@ pub struct VsnOptions {
     pub gate_capacity: usize,
     /// σ shard count.
     pub shards: usize,
+    /// Tuples moved per worker gate synchronization, in and out
+    /// ([`ReaderHandle::get_batch`] / [`SourceHandle::add_batch`]).
+    pub worker_batch: usize,
 }
 
 impl Default for VsnOptions {
@@ -58,11 +64,17 @@ impl Default for VsnOptions {
             egress_readers: 1,
             gate_capacity: 1 << 15,
             shards: crate::operator::state::DEFAULT_SHARDS,
+            worker_batch: WORKER_BATCH,
         }
     }
 }
 
 impl VsnOptions {
+    /// Apply the `[batch]` section of an experiment config.
+    pub fn with_batch(mut self, tuning: &crate::config::BatchTuning) -> Self {
+        self.worker_batch = tuning.worker.max(1);
+        self
+    }
     /// ESG_in geometry: `upstreams` writers, up to `max` worker readers.
     pub fn in_gate_config(&self) -> EsgConfig {
         EsgConfig::for_gate(self.upstreams, self.max, self.gate_capacity)
@@ -175,12 +187,15 @@ where
         let barrier = Arc::new(EpochBarrier::new());
         let running = Arc::new(AtomicBool::new(true));
 
+        let batch = opts.worker_batch.max(1);
         let mut threads = Vec::with_capacity(opts.max);
         for (id, (reader, out)) in io.in_readers.into_iter().zip(io.out_sources).enumerate() {
             let mut worker = Worker {
                 core: OperatorCore::new(def.clone(), id, state.clone(), metrics.clone()),
                 reader,
                 out,
+                out_buf: Vec::with_capacity(batch),
+                batch,
                 epoch: epoch.clone(),
                 barrier: barrier.clone(),
                 control: control.clone(),
@@ -252,6 +267,11 @@ struct Worker<L: OperatorLogic> {
     core: OperatorCore<L>,
     reader: ReaderHandle<Tuple<L::In>>,
     out: SourceHandle<Tuple<L::Out>>,
+    /// Emissions staged for one batched gate add (§Perf): flushed when
+    /// full, before every clock publish, and before reconfigurations.
+    out_buf: Vec<Tuple<L::Out>>,
+    /// Tuples per gate synchronization, in and out.
+    batch: usize,
     epoch: Arc<EpochState>,
     barrier: Arc<EpochBarrier>,
     control: Arc<ControlPlane>,
@@ -267,13 +287,15 @@ where
     fn run(&mut self) {
         let mut backoff = Backoff::pooled();
         // Tuples are pulled in batches (one gate synchronization per
-        // WORKER_BATCH) and processed newest-last via pop() off the
-        // reversed buffer, so `batch.len()` is always the number of
+        // `self.batch` tuples) and processed newest-last via pop() off
+        // the reversed buffer, so `batch.len()` is always the number of
         // retrieved-but-unprocessed tuples — do_reconfig needs it to seed
         // new readers at the tuple currently being processed.
-        let mut batch: Vec<Tuple<L::In>> = Vec::with_capacity(WORKER_BATCH);
+        let mut batch: Vec<Tuple<L::In>> = Vec::with_capacity(self.batch);
         while self.running.load(Ordering::Acquire) {
-            if self.reader.get_batch(&mut batch, WORKER_BATCH) == 0 {
+            if self.reader.get_batch(&mut batch, self.batch) == 0 {
+                // idle: don't sit on staged emissions
+                self.flush_out();
                 backoff.snooze();
                 continue;
             }
@@ -292,6 +314,34 @@ where
                     self.core.rebuild_expiry_index(&self.cur.mapper);
                 }
                 self.step(t, batch.len());
+            }
+            // one batched downstream add per input batch
+            self.flush_out();
+        }
+    }
+
+    /// Drain the staged emissions into ESG_out with batched adds
+    /// (blocking, with a shutdown escape); drops them silently when this
+    /// worker's out-source was decommissioned, like the per-tuple path.
+    fn flush_out(&mut self) {
+        let mut b = Backoff::active();
+        while !self.out_buf.is_empty() {
+            match self.out.try_add_batch(&mut self.out_buf) {
+                Ok(0) => {
+                    if !self.running.load(Ordering::Acquire) {
+                        self.out_buf.clear();
+                        return;
+                    }
+                    b.snooze();
+                }
+                Ok(_) => b.reset(),
+                Err(crate::scalegate::AddError::Inactive(_)) => {
+                    self.out_buf.clear(); // decommissioned
+                    return;
+                }
+                Err(crate::scalegate::AddError::Full(_)) => {
+                    unreachable!("try_add_batch signals Full as Ok(0)")
+                }
             }
         }
     }
@@ -316,13 +366,12 @@ where
                         }
                     }
                 }
-                // split borrows for the emission closure
-                let out = &mut self.out;
-                let running = &self.running;
-                let mut emitted = 0u64;
+                // split borrows for the emission closure: outputs are
+                // staged in out_buf and leave via batched adds (§Perf)
+                let out_buf = &mut self.out_buf;
+                let staged0 = out_buf.len();
                 let mut sink = |o: Tuple<L::Out>| {
-                    emitted += 1;
-                    blocking_add(out, o, running);
+                    out_buf.push(o);
                 };
                 let mut ctx = Ctx::new(&mut sink);
                 ctx.ingest_us = t.ingest_us;
@@ -336,12 +385,16 @@ where
                 if ctx.comparisons > 0 {
                     self.core.metrics.record_comparisons(ctx.comparisons);
                 }
+                let emitted = (self.out_buf.len() - staged0) as u64;
                 if emitted > 0 {
                     self.core.metrics.record_out(emitted);
                 }
                 if grew {
                     // implicit watermark to downstream (Lemma 2): all
-                    // future emissions carry ts > W
+                    // future emissions carry ts > W. Flush FIRST — the
+                    // staged outputs carry ts ≤ W and must enter the gate
+                    // before the clock passes them.
+                    self.flush_out();
                     self.out.advance_clock(self.core.watermark());
                     if matches!(t.kind, Kind::Heartbeat) {
                         // Forward an explicit heartbeat ENTRY: downstream
@@ -349,12 +402,11 @@ where
                         // delivered tuples, so a clock-only advance would
                         // strand their windows when the rate drops to
                         // zero (§2.3; the egress driver ignores these).
-                        blocking_add(
-                            &mut self.out,
-                            Tuple::heartbeat(self.core.watermark()),
-                            &self.running,
-                        );
+                        self.out_buf.push(Tuple::heartbeat(self.core.watermark()));
+                        self.flush_out();
                     }
+                } else if self.out_buf.len() >= self.batch {
+                    self.flush_out();
                 }
             }
             Kind::Flush | Kind::Dummy => {}
@@ -363,6 +415,10 @@ where
 
     /// The epoch switch (Alg. 4 L17-21).
     fn do_reconfig(&mut self, t: &Tuple<L::In>, unconsumed: usize) {
+        // Staged emissions precede the switch: flush before the barrier
+        // so elasticity latency stays batching-independent and the new
+        // out-sources (clock floor t.ts) never trail buffered outputs.
+        self.flush_out();
         let p = self.pending.take().expect("reconfig without pending spec");
         // barrier over the *current* epoch's instances 𝕆
         let leader = self.barrier.wait(self.cur.instances.len());
@@ -400,30 +456,6 @@ where
         }
         self.cur = newcfg;
         self.core.rebuild_expiry_index(&self.cur.mapper);
-    }
-}
-
-/// Blocking gate add with a shutdown escape (flow control); silently
-/// drops the tuple when the source slot was decommissioned.
-fn blocking_add<T: crate::scalegate::GateEntry>(
-    out: &mut SourceHandle<T>,
-    t: T,
-    running: &AtomicBool,
-) {
-    let mut v = t;
-    let mut b = Backoff::active();
-    loop {
-        match out.try_add(v) {
-            Ok(()) => break,
-            Err(crate::scalegate::AddError::Inactive(_)) => break, // decommissioned
-            Err(crate::scalegate::AddError::Full(back)) => {
-                if !running.load(Ordering::Acquire) {
-                    break;
-                }
-                v = back;
-                b.snooze();
-            }
-        }
     }
 }
 

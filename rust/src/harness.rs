@@ -80,6 +80,12 @@ pub struct JoinRunConfig {
     pub controller_period_s: u32,
     pub seed: u64,
     pub gate_capacity: usize,
+    /// Worker gate synchronization granularity (tuples per
+    /// `get_batch`/`add_batch`) — the `[batch] worker` config knob.
+    pub worker_batch: usize,
+    /// Max run length per batched ingress add — the `[batch] ingress`
+    /// config knob.
+    pub ingress_batch: usize,
     /// Scripted reconfigurations: (event second, new instance set) —
     /// issued directly, bypassing the controller (Q4 protocol timing).
     pub manual_reconfigs: Vec<(u32, Vec<usize>)>,
@@ -98,6 +104,8 @@ impl Default for JoinRunConfig {
             controller_period_s: 1,
             seed: 7,
             gate_capacity: 1 << 13,
+            worker_batch: crate::engine::WORKER_BATCH,
+            ingress_batch: 256,
             manual_reconfigs: Vec::new(),
         }
     }
@@ -154,6 +162,9 @@ pub struct PipelineRunConfig {
     pub flush_slack_ms: EventTime,
     /// Wall time to keep draining the egress after end-of-stream.
     pub drain: Duration,
+    /// Max run length handed to the ingress per batched add — the
+    /// `[batch] ingress` config knob (bounds gate burstiness).
+    pub ingress_batch: usize,
 }
 
 impl Default for PipelineRunConfig {
@@ -164,6 +175,7 @@ impl Default for PipelineRunConfig {
             stages: Vec::new(),
             flush_slack_ms: 15_000,
             drain: Duration::from_millis(500),
+            ingress_batch: 256,
         }
     }
 }
@@ -257,6 +269,8 @@ where
     let duration_s = cfg.schedule.duration_s();
     let mut pending_event_tuples = 0.0f64;
     let mut event_ms_total: f64 = 0.0;
+    // per-tick feed run, handed to the gate via one batched add (§Perf)
+    let mut feed_buf: Vec<Tuple<In>> = Vec::new();
     let t0 = Instant::now();
 
     // wall tick: 20 ms of *wall* time per loop iteration
@@ -281,11 +295,17 @@ where
             let n = pending_event_tuples.floor() as usize;
             pending_event_tuples -= n as f64;
             event_ms_total += tick_event_s * 1e3;
+            debug_assert!(feed_buf.is_empty());
+            let ingress_batch = cfg.ingress_batch.max(1);
             for _ in 0..n {
                 let mut t = source.next();
                 t.ingest_us = clock.now_us();
-                ing.add(t);
+                feed_buf.push(t);
+                if feed_buf.len() >= ingress_batch {
+                    ing.add_batch(&mut feed_buf);
+                }
             }
+            ing.add_batch(&mut feed_buf);
         }
         egress.poll();
 
@@ -429,6 +449,7 @@ pub fn run_elastic_join(cfg: JoinRunConfig) -> RunResult {
             upstreams: 1,
             egress_readers: 1,
             gate_capacity: cfg.gate_capacity,
+            worker_batch: cfg.worker_batch.max(1),
             ..Default::default()
         },
     )
@@ -444,6 +465,7 @@ pub fn run_elastic_join(cfg: JoinRunConfig) -> RunResult {
         }],
         flush_slack_ms: cfg.ws_ms + 10_000,
         drain: Duration::from_millis(500),
+        ingress_batch: cfg.ingress_batch.max(1),
     };
     let r = run_pipeline(pipeline, pcfg, &mut gen);
     let stage0 = r.stages.into_iter().next().expect("single-stage pipeline");
@@ -456,6 +478,16 @@ mod tests {
     use crate::elastic::{JoinCostModel, ReactiveController, Thresholds};
     use crate::workloads::nyse::NyseConfig;
     use crate::workloads::{hedge_join_op, trade_fanout_op};
+
+    #[test]
+    fn batch_tuning_reaches_engine_options() {
+        let cfg = crate::config::Config::parse("[batch]\nworker = 32\nqueue = 16").unwrap();
+        let t = crate::config::BatchTuning::from_config(&cfg);
+        let v = VsnOptions::default().with_batch(&t);
+        assert_eq!(v.worker_batch, 32);
+        let s = crate::engine::SnOptions::default().with_batch(&t);
+        assert_eq!(s.batch, 16);
+    }
 
     #[test]
     fn harness_steady_run_produces_samples() {
@@ -522,6 +554,7 @@ mod tests {
                 ],
                 flush_slack_ms: 5_000,
                 drain: Duration::from_millis(500),
+                ..Default::default()
             },
             &mut source,
         );

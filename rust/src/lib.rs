@@ -8,14 +8,19 @@
 //!
 //! ## Layers
 //! * [`scalegate`] — the ScaleGate / Elastic ScaleGate shared tuple buffer
-//!   (the paper's TB object, Table 2), with batched reads and runtime
+//!   (the paper's TB object, Table 2), with a batch-native data plane
+//!   (`add_batch`/`get_batch`, run-granularity cooperative merge, one
+//!   log publish per run), cache-padded slot arrays, and runtime
 //!   source/reader membership.
 //! * [`operator`] — the generalized stateful operator `O+` (§4) and the
 //!   operator library (Map, Aggregate, Join, ScaleJoin, …), including
 //!   Map-as-elastic-stage ([`operator::map::MapStageLogic`]).
 //! * [`engine`] — the SN baseline engine, the VSN (STRETCH) engine with
 //!   epoch-based, state-transfer-free elasticity (§5, §7), and the
-//!   multi-stage pipeline layer ([`engine::pipeline`]).
+//!   multi-stage pipeline layer ([`engine::pipeline`]); all hot loops
+//!   move tuples in runs (tunable via [`config::BatchTuning`] /
+//!   `VsnOptions::worker_batch`), with control tuples still cutting
+//!   batches so reconfiguration latency is batching-independent.
 //! * [`elastic`] — reconfiguration controllers (reactive + proactive).
 //! * [`harness`] — rate-scheduled pipeline run loop with per-stage
 //!   controllers and per-stage metrics sampling.
@@ -25,6 +30,10 @@
 //!   2-stage pipeline operator sets (tokenize → count, fan-out → join).
 //! * [`sim`] — calibrated multicore discrete-event simulator (testbed
 //!   substitution; see DESIGN.md §5).
+//! * [`metrics`] — §8 counters/histograms plus
+//!   [`metrics::BenchReport`]: every bench writes a machine-readable
+//!   `BENCH_<name>.json` (throughput, p50/p99 latency, reconfiguration
+//!   times) so the perf trajectory is a diffable record.
 //!
 //! ## Pipelines
 //! Applications compose as DAG chains `source → stage₁ → … → stageₖ →

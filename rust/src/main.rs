@@ -8,7 +8,7 @@
 //! ```
 
 use stretch::cli::Cli;
-use stretch::config::Config;
+use stretch::config::{BatchTuning, Config};
 use stretch::elastic::{JoinCostModel, ProactiveController, ReactiveController, Thresholds};
 use stretch::harness::{run_elastic_join, JoinRunConfig};
 use stretch::sim::calibrate;
@@ -18,7 +18,13 @@ fn cmd_calibrate() {
     let c = calibrate();
     println!("calibration (this machine, this build):");
     println!("  band comparisons : {:.1} M/s per thread", c.cmp_per_sec / 1e6);
-    println!("  ESG round trip   : {:.3} µs/tuple", c.gate_tuple_s * 1e6);
+    println!("  ESG round trip   : {:.3} µs/tuple (per-tuple add/get)", c.gate_tuple_s * 1e6);
+    println!(
+        "  ESG batched      : {:.3} µs/tuple ({:.1}× win, batch {})",
+        c.gate_batch_tuple_s * 1e6,
+        c.gate_tuple_s / c.gate_batch_tuple_s.max(1e-12),
+        stretch::sim::calibrate::GATE_BATCH
+    );
     println!("  SPSC hop         : {:.3} µs/tuple", c.queue_tuple_s * 1e6);
     println!("  merge-sort ingest: {:.3} µs/tuple", c.sort_tuple_s * 1e6);
 }
@@ -93,11 +99,14 @@ fn cmd_run(path: &str) {
             )),
         };
 
+    // `[batch]` section: data-plane batch sizes (§Perf)
+    let batch = BatchTuning::from_config(&cfg);
     println!(
-        "running `{}`: WS={ws_ms}ms keys={n_keys} Π={initial}..{max} {}s ({}x compressed)",
+        "running `{}`: WS={ws_ms}ms keys={n_keys} Π={initial}..{max} {}s ({}x compressed, batch {})",
         cfg.str_or("name", path),
         duration,
-        time_scale
+        time_scale,
+        batch.worker
     );
     let r = run_elastic_join(JoinRunConfig {
         ws_ms,
@@ -110,6 +119,8 @@ fn cmd_run(path: &str) {
         controller_period_s: cfg.int_or("elastic.period_s", 2) as u32,
         seed,
         gate_capacity: cfg.int_or("engine.gate_capacity", 8192) as usize,
+        worker_batch: batch.worker,
+        ingress_batch: batch.ingress,
         manual_reconfigs: Vec::new(),
     });
     println!("\n  t  offered   served   cmp/s      lat(ms)  Π backlog");

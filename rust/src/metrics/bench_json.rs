@@ -1,0 +1,214 @@
+//! Machine-readable benchmark reports: every `benches/bench_*.rs` writes
+//! a `BENCH_<name>.json` next to its human output so the repo's perf
+//! trajectory is a diffable record (throughput, p50/p99 latency,
+//! reconfiguration times) rather than scrollback. Std-only JSON emitter
+//! (serde is unavailable offline).
+
+use std::fmt;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// A JSON value (the subset bench reports need).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Finite numbers only; NaN/∞ serialize as `null`.
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Build an object from (key, value) pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(v: i64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+impl<V: Into<Json>> From<Vec<V>> for Json {
+    fn from(v: Vec<V>) -> Json {
+        Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+fn escape(s: &str, out: &mut fmt::Formatter<'_>) -> fmt::Result {
+    out.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => out.write_str("\\\"")?,
+            '\\' => out.write_str("\\\\")?,
+            '\n' => out.write_str("\\n")?,
+            '\r' => out.write_str("\\r")?,
+            '\t' => out.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(out, "\\u{:04x}", c as u32)?,
+            c => write!(out, "{c}")?,
+        }
+    }
+    out.write_str("\"")
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(v) if !v.is_finite() => f.write_str("null"),
+            Json::Num(v) => {
+                if *v == v.trunc() && v.abs() < 9.0e15 {
+                    write!(f, "{}", *v as i64)
+                } else {
+                    write!(f, "{v}")
+                }
+            }
+            Json::Str(s) => escape(s, f),
+            Json::Arr(xs) => {
+                f.write_str("[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(kvs) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    escape(k, f)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+/// Builder for one bench's `BENCH_<name>.json`.
+pub struct BenchReport {
+    name: String,
+    fields: Vec<(String, Json)>,
+}
+
+impl BenchReport {
+    /// `name` is the suffix: `BenchReport::new("micro")` →
+    /// `BENCH_micro.json`.
+    pub fn new(name: &str) -> Self {
+        BenchReport {
+            name: name.to_string(),
+            fields: vec![("bench".to_string(), Json::Str(name.to_string()))],
+        }
+    }
+
+    /// Set a top-level field (insertion order preserved).
+    pub fn set(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        self.fields.push((key.to_string(), value.into()));
+        self
+    }
+
+    /// Serialize the report (pretty enough to diff: one field per line).
+    pub fn render(&self) -> String {
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            s.push_str(&format!("  {}: {}", Json::Str(k.clone()), v));
+            if i + 1 < self.fields.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    /// Write `BENCH_<name>.json` into the current directory (the repo
+    /// root when run via cargo) and return the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        self.write_to(std::path::Path::new("."))
+    }
+
+    /// Write `BENCH_<name>.json` into `dir` and return the path.
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.render().as_bytes())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_scalars_arrays_objects() {
+        let j = Json::obj(vec![
+            ("a", Json::from(1.5)),
+            ("b", Json::from("x\"y")),
+            ("c", Json::from(vec![1u64, 2, 3])),
+            ("d", Json::Null),
+            ("e", Json::from(f64::NAN)),
+        ]);
+        assert_eq!(j.to_string(), r#"{"a":1.5,"b":"x\"y","c":[1,2,3],"d":null,"e":null}"#);
+    }
+
+    #[test]
+    fn integral_floats_render_without_fraction() {
+        assert_eq!(Json::from(250_000.0f64).to_string(), "250000");
+        assert_eq!(Json::from(0.25f64).to_string(), "0.25");
+    }
+
+    #[test]
+    fn report_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join(format!("stretch_bj_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut r = BenchReport::new("unit");
+        r.set("tput_tps", 123.0)
+            .set("levels", Json::Arr(vec![Json::obj(vec![("p50_us", Json::from(7u64))])]));
+        let path = r.write_to(&dir).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(s.contains("\"bench\": \"unit\""));
+        assert!(s.contains("\"tput_tps\": 123"));
+        assert!(s.starts_with("{\n") && s.ends_with("}\n"));
+    }
+}

@@ -7,6 +7,7 @@
 //! (`truncate_below`), keeping memory proportional to the reader lag bound
 //! enforced by flow control.
 
+use crate::util::CachePadded;
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -41,7 +42,9 @@ struct Segments<T> {
 pub struct Log<T> {
     segments: RwLock<Segments<T>>,
     /// Number of published entries; indices `< ready` are readable.
-    ready: AtomicU64,
+    /// Padded: every reader polls it while the merge-lock holder stores
+    /// it — it must not share a line with the segment-table lock.
+    ready: CachePadded<AtomicU64>,
 }
 
 /// A reader-side cache of one segment, avoiding the segment-table lock on
@@ -61,7 +64,7 @@ impl<T: Clone + Send + Sync> Log<T> {
     pub fn new() -> Self {
         Log {
             segments: RwLock::new(Segments { base: 0, segs: vec![Segment::new()] }),
-            ready: AtomicU64::new(0),
+            ready: CachePadded::new(AtomicU64::new(0)),
         }
     }
 
@@ -71,36 +74,64 @@ impl<T: Clone + Send + Sync> Log<T> {
         self.ready.load(Ordering::Acquire)
     }
 
-    /// Append one entry and publish it. MUST be called by at most one
-    /// thread at a time (the merge-lock holder).
-    pub fn push(&self, v: T) {
-        let idx = self.ready.load(Ordering::Relaxed);
-        let seg_no = idx >> SEG_SHIFT;
-        let off = (idx & (SEG_SIZE as u64 - 1)) as usize;
+    /// The segment holding global index range `[seg_no << SEG_SHIFT, …)`,
+    /// appending fresh segments as needed. Writer-side only (the
+    /// merge-lock holder), so `seg_no` is never below the truncation
+    /// point.
+    fn segment_for_write(&self, seg_no: u64) -> Arc<Segment<T>> {
         {
             let guard = self.segments.read().unwrap();
             let first_seg_no = guard.base >> SEG_SHIFT;
             let local = (seg_no - first_seg_no) as usize;
             if local < guard.segs.len() {
-                let seg = &guard.segs[local];
-                unsafe { *seg.slots[off].get() = Some(v) };
-                drop(guard);
-                self.ready.store(idx + 1, Ordering::Release);
-                return;
+                return guard.segs[local].clone();
             }
         }
-        // Need a new segment.
-        {
-            let mut guard = self.segments.write().unwrap();
-            let first_seg_no = guard.base >> SEG_SHIFT;
-            while ((seg_no - first_seg_no) as usize) >= guard.segs.len() {
-                guard.segs.push(Segment::new());
-            }
-            let local = (seg_no - first_seg_no) as usize;
-            let seg = &guard.segs[local];
-            unsafe { *seg.slots[off].get() = Some(v) };
+        let mut guard = self.segments.write().unwrap();
+        let first_seg_no = guard.base >> SEG_SHIFT;
+        while ((seg_no - first_seg_no) as usize) >= guard.segs.len() {
+            guard.segs.push(Segment::new());
         }
+        let local = (seg_no - first_seg_no) as usize;
+        guard.segs[local].clone()
+    }
+
+    /// Append one entry and publish it. MUST be called by at most one
+    /// thread at a time (the merge-lock holder).
+    pub fn push(&self, v: T) {
+        let idx = self.ready.load(Ordering::Relaxed);
+        let seg = self.segment_for_write(idx >> SEG_SHIFT);
+        let off = (idx & (SEG_SIZE as u64 - 1)) as usize;
+        unsafe { *seg.slots[off].get() = Some(v) };
         self.ready.store(idx + 1, Ordering::Release);
+    }
+
+    /// Append a whole run and publish it with ONE `ready` store: readers
+    /// see either none or all of the run, and the merge-lock holder pays
+    /// one Release fence (plus one segment-table lock per crossed
+    /// segment) per run instead of per tuple. Drains `run`. Same
+    /// single-writer contract as [`push`](Self::push).
+    pub fn push_run(&self, run: &mut Vec<T>) {
+        let n = run.len() as u64;
+        if n == 0 {
+            return;
+        }
+        let start = self.ready.load(Ordering::Relaxed);
+        let end = start + n;
+        let mut drain = run.drain(..);
+        let mut idx = start;
+        while idx < end {
+            let seg_no = idx >> SEG_SHIFT;
+            let seg = self.segment_for_write(seg_no);
+            let chunk_end = end.min((seg_no + 1) << SEG_SHIFT);
+            for i in idx..chunk_end {
+                let off = (i & (SEG_SIZE as u64 - 1)) as usize;
+                unsafe { *seg.slots[off].get() = Some(drain.next().unwrap()) };
+            }
+            idx = chunk_end;
+        }
+        drop(drain);
+        self.ready.store(end, Ordering::Release);
     }
 
     /// Read entry `idx` (must be `< ready()`), using and refreshing the
@@ -186,6 +217,28 @@ mod tests {
         for i in [0u64, n - 1, SEG_SIZE as u64, 1, n / 2] {
             assert_eq!(log.get(i, &mut cache), i);
         }
+    }
+
+    #[test]
+    fn push_run_crosses_segments_single_publish() {
+        let log: Log<u64> = Log::new();
+        // straddle two segment boundaries in one run
+        let lead = SEG_SIZE as u64 - 7;
+        for i in 0..lead {
+            log.push(i);
+        }
+        let n = (SEG_SIZE + 20) as u64;
+        let mut run: Vec<u64> = (lead..lead + n).collect();
+        log.push_run(&mut run);
+        assert!(run.is_empty());
+        assert_eq!(log.ready(), lead + n);
+        let mut cache = SegCache::default();
+        for i in 0..lead + n {
+            assert_eq!(log.get(i, &mut cache), i);
+        }
+        // empty runs are a no-op
+        log.push_run(&mut run);
+        assert_eq!(log.ready(), lead + n);
     }
 
     #[test]

@@ -202,6 +202,7 @@ mod tests {
         Calibration {
             cmp_per_sec: 50e6,
             gate_tuple_s: 1e-6,
+            gate_batch_tuple_s: 2e-7,
             queue_tuple_s: 2e-7,
             sort_tuple_s: 3e-7,
             contention_alpha: 0.006,

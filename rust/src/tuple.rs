@@ -44,6 +44,16 @@ pub fn mix64(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Multiply-shift range reduction (Lemire): map a mixed 64-bit hash onto
+/// `0..n` with one widening multiply instead of the hardware-division
+/// `%` — `map` sits on every routed tuple (§Perf). Uniform because the
+/// hash is already finalized by [`mix64`].
+#[inline]
+fn range_reduce(hash: u64, n: usize) -> usize {
+    debug_assert!(n > 0);
+    ((hash as u128 * n as u128) >> 64) as usize
+}
+
 impl Mapper {
     /// Hash-mod mapper over instances `0..n`.
     pub fn hash_mod(n: usize) -> Self {
@@ -60,12 +70,10 @@ impl Mapper {
     #[inline]
     pub fn map(&self, k: Key) -> InstanceId {
         match self {
-            Mapper::HashMod { instances } => {
-                instances[(mix64(k) % instances.len() as u64) as usize]
-            }
+            Mapper::HashMod { instances } => instances[range_reduce(mix64(k), instances.len())],
             Mapper::Explicit { map, fallback } => match map.get(&k) {
                 Some(&i) => i,
-                None => fallback[(mix64(k) % fallback.len() as u64) as usize],
+                None => fallback[range_reduce(mix64(k), fallback.len())],
             },
         }
     }
@@ -213,6 +221,19 @@ mod tests {
         for c in counts {
             let dev = (c as f64 - expect).abs() / expect;
             assert!(dev < 0.05, "imbalance {dev}");
+        }
+    }
+
+    #[test]
+    fn range_reduce_covers_and_bounds() {
+        for n in [1usize, 2, 3, 7, 64] {
+            let mut seen = vec![false; n];
+            for k in 0..20_000u64 {
+                let i = range_reduce(mix64(k), n);
+                assert!(i < n);
+                seen[i] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "n={n} not covered");
         }
     }
 

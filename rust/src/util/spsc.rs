@@ -8,7 +8,12 @@
 //!
 //! The queue is a classic ring buffer with cached head/tail indices
 //! (Lamport queue with the producer/consumer caching optimization).
+//! `head` and `tail` are [`CachePadded`] onto separate cache-line pairs
+//! so producer and consumer never false-share, and the batch operations
+//! ([`Producer::push_slice`], [`Consumer::pop_chunk`]) amortize the
+//! remaining head/tail atomic traffic over whole runs of tuples.
 
+use crate::util::CachePadded;
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -17,8 +22,8 @@ use std::sync::Arc;
 struct Inner<T> {
     buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
     cap: usize,
-    head: AtomicUsize, // next slot to pop
-    tail: AtomicUsize, // next slot to push
+    head: CachePadded<AtomicUsize>, // next slot to pop
+    tail: CachePadded<AtomicUsize>, // next slot to push
     closed: AtomicBool,
 }
 
@@ -55,8 +60,8 @@ pub fn spsc<T>(cap: usize) -> (Producer<T>, Consumer<T>) {
     let inner = Arc::new(Inner {
         buf: buf.into_boxed_slice(),
         cap,
-        head: AtomicUsize::new(0),
-        tail: AtomicUsize::new(0),
+        head: CachePadded::new(AtomicUsize::new(0)),
+        tail: CachePadded::new(AtomicUsize::new(0)),
         closed: AtomicBool::new(false),
     });
     (
@@ -102,6 +107,48 @@ impl<T> Producer<T> {
         }
     }
 
+    /// Free slots available to the producer right now (refreshes the
+    /// cached head). Monotone until the next push: the consumer can only
+    /// pop, so a subsequent [`push_slice`](Self::push_slice) of at most
+    /// this many items is guaranteed to take them all.
+    pub fn free(&mut self) -> usize {
+        let inner = &*self.inner;
+        let tail = inner.tail.load(Ordering::Relaxed);
+        if tail.wrapping_sub(self.head_cache) >= inner.cap {
+            self.head_cache = inner.head.load(Ordering::Acquire);
+        }
+        inner.cap - tail.wrapping_sub(self.head_cache)
+    }
+
+    /// Whether the channel was closed (by either end).
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::Acquire)
+    }
+
+    /// Batched push: move up to `max` items off the *front* of `items`
+    /// into the queue with ONE tail publish, returning how many were
+    /// taken. 0 can mean full, closed, or an empty `items` — callers that
+    /// care distinguish via [`is_closed`](Self::is_closed)/[`free`](Self::free).
+    pub fn push_slice(&mut self, items: &mut Vec<T>, max: usize) -> usize {
+        if items.is_empty() || max == 0 || self.inner.closed.load(Ordering::Acquire) {
+            return 0;
+        }
+        let n = self.free().min(items.len()).min(max);
+        if n == 0 {
+            return 0;
+        }
+        let inner = &*self.inner;
+        let tail = inner.tail.load(Ordering::Relaxed);
+        let mask = inner.cap - 1;
+        for (i, v) in items.drain(..n).enumerate() {
+            unsafe {
+                (*inner.buf[tail.wrapping_add(i) & mask].get()).write(v);
+            }
+        }
+        inner.tail.store(tail.wrapping_add(n), Ordering::Release);
+        n
+    }
+
     /// Number of elements currently queued (approximate under concurrency).
     pub fn len(&self) -> usize {
         let t = self.inner.tail.load(Ordering::Relaxed);
@@ -137,6 +184,32 @@ impl<T> Consumer<T> {
         let v = unsafe { (*inner.buf[head & (inner.cap - 1)].get()).assume_init_read() };
         inner.head.store(head.wrapping_add(1), Ordering::Release);
         Some(v)
+    }
+
+    /// Batched pop: append up to `max` queued items to `buf` with ONE
+    /// head publish, returning how many were taken.
+    pub fn pop_chunk(&mut self, buf: &mut Vec<T>, max: usize) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        let inner = &*self.inner;
+        let head = inner.head.load(Ordering::Relaxed);
+        if head == self.tail_cache {
+            self.tail_cache = inner.tail.load(Ordering::Acquire);
+            if head == self.tail_cache {
+                return 0;
+            }
+        }
+        let n = self.tail_cache.wrapping_sub(head).min(max);
+        let mask = inner.cap - 1;
+        buf.reserve(n);
+        for i in 0..n {
+            buf.push(unsafe {
+                (*inner.buf[head.wrapping_add(i) & mask].get()).assume_init_read()
+            });
+        }
+        inner.head.store(head.wrapping_add(n), Ordering::Release);
+        n
     }
 
     /// True when producer closed AND the queue is drained.
@@ -252,6 +325,83 @@ mod tests {
                     backoff.reset();
                 }
                 None => backoff.snooze(),
+            }
+        }
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn push_slice_pop_chunk_roundtrip() {
+        let (mut p, mut c) = spsc::<u32>(8);
+        let mut items: Vec<u32> = (0..12).collect();
+        // only 8 fit; the pushed prefix is drained off `items`
+        assert_eq!(p.push_slice(&mut items, usize::MAX), 8);
+        assert_eq!(items, vec![8, 9, 10, 11]);
+        assert_eq!(p.push_slice(&mut items, usize::MAX), 0); // full
+        let mut out = Vec::new();
+        assert_eq!(c.pop_chunk(&mut out, 5), 5);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        // freed space admits the remainder
+        assert_eq!(p.push_slice(&mut items, usize::MAX), 4);
+        assert!(items.is_empty());
+        // the consumer's cached tail refreshes lazily: drain in chunks
+        let mut got = 0;
+        loop {
+            let k = c.pop_chunk(&mut out, usize::MAX);
+            if k == 0 {
+                break;
+            }
+            got += k;
+        }
+        assert_eq!(got, 7);
+        assert_eq!(out, (0..12).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn push_slice_respects_max_and_close() {
+        let (mut p, mut c) = spsc::<u32>(8);
+        let mut items: Vec<u32> = (0..6).collect();
+        assert_eq!(p.push_slice(&mut items, 2), 2);
+        assert_eq!(p.free(), 6);
+        c.close();
+        assert_eq!(p.push_slice(&mut items, usize::MAX), 0);
+        assert!(p.is_closed());
+        assert_eq!(items.len(), 4);
+    }
+
+    #[test]
+    fn batched_concurrent_fifo_order() {
+        let (mut p, mut c) = spsc::<u64>(64);
+        let n = 200_000u64;
+        let producer = std::thread::spawn(move || {
+            let mut pending: Vec<u64> = Vec::new();
+            let mut next = 0u64;
+            let mut backoff = crate::util::backoff::Backoff::active();
+            while next < n || !pending.is_empty() {
+                while pending.len() < 17 && next < n {
+                    pending.push(next);
+                    next += 1;
+                }
+                if p.push_slice(&mut pending, usize::MAX) == 0 {
+                    backoff.snooze();
+                } else {
+                    backoff.reset();
+                }
+            }
+        });
+        let mut expected = 0u64;
+        let mut buf = Vec::new();
+        let mut backoff = crate::util::backoff::Backoff::active();
+        while expected < n {
+            buf.clear();
+            if c.pop_chunk(&mut buf, 23) == 0 {
+                backoff.snooze();
+                continue;
+            }
+            backoff.reset();
+            for &v in &buf {
+                assert_eq!(v, expected);
+                expected += 1;
             }
         }
         producer.join().unwrap();

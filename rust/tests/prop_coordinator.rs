@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use stretch::engine::{VsnEngine, VsnOptions};
 use stretch::operator::join::{scalejoin_op, Either, JoinPredicate};
-use stretch::scalegate::{scale_gate, Esg, EsgConfig};
+use stretch::scalegate::{scale_gate, Esg, EsgConfig, ReaderHandle};
 use stretch::testkit::{check, sorted_timestamps};
 use stretch::time::WindowSpec;
 use stretch::tuple::{Mapper, Tuple};
@@ -145,6 +145,238 @@ fn prop_esg_membership_ops_preserve_order() {
             r1.push(t.ts);
         }
         assert!(r1.windows(2).all(|w| w[0] <= w[1]));
+    });
+}
+
+// --- batched data plane ≡ per-tuple data plane ------------------------
+
+/// One step of the scripted gate workload. Timestamps are globally
+/// unique and strictly increasing across the script, so the merged log
+/// order is fully determined and the per-tuple and batched executions
+/// must produce *identical* per-reader sequences.
+#[derive(Clone, Debug)]
+enum GateOp {
+    Add { src: usize, ts: i64, seq: u64 },
+    Drain { max: usize },
+    AddSource { src: usize, floor: i64 },
+    RemoveSource { src: usize },
+    AddReader,
+    RemoveReader,
+}
+
+fn drain_gate_readers(
+    rdrs: &mut [ReaderHandle<Tuple<u64>>],
+    active: &[bool; 2],
+    seqs: &mut [Vec<(i64, u64)>; 2],
+    batched: bool,
+    max: usize,
+) {
+    for i in 0..2 {
+        if !active[i] {
+            continue;
+        }
+        if batched {
+            let mut buf: Vec<Tuple<u64>> = Vec::new();
+            while rdrs[i].get_batch(&mut buf, max) > 0 {
+                for t in buf.drain(..) {
+                    seqs[i].push((t.ts, t.payload));
+                }
+            }
+        } else {
+            while let Some(t) = rdrs[i].get() {
+                seqs[i].push((t.ts, t.payload));
+            }
+        }
+    }
+}
+
+/// Execute the script on a fresh gate. `batched: false` uses
+/// `add`/`get`, `batched: true` uses `add_batch` (runs buffered per
+/// source) and `get_batch`.
+fn run_gate_script(script: &[GateOp], batched: bool) -> [Vec<(i64, u64)>; 2] {
+    let (g, mut srcs, mut rdrs): (Esg<Tuple<u64>>, _, _) = Esg::new(
+        EsgConfig { max_sources: 4, max_readers: 2, capacity: 1 << 14, source_queue: 4096 },
+        2,
+        1,
+    );
+    let mut seqs: [Vec<(i64, u64)>; 2] = [Vec::new(), Vec::new()];
+    let mut reader_active = [true, false];
+    let mut pending: Vec<Vec<Tuple<u64>>> = (0..4).map(|_| Vec::new()).collect();
+    for op in script {
+        match op {
+            GateOp::Add { src, ts, seq } => {
+                let t = Tuple::data(*ts, *seq);
+                if batched {
+                    pending[*src].push(t);
+                    if pending[*src].len() >= 9 {
+                        srcs[*src].add_batch(&mut pending[*src]);
+                    }
+                } else {
+                    srcs[*src].add(t);
+                }
+            }
+            GateOp::Drain { max } => {
+                if batched {
+                    for (s, buf) in pending.iter_mut().enumerate() {
+                        if !buf.is_empty() {
+                            srcs[s].add_batch(buf);
+                        }
+                    }
+                }
+                drain_gate_readers(&mut rdrs, &reader_active, &mut seqs, batched, *max);
+            }
+            GateOp::AddSource { src, floor } => {
+                assert!(g.add_sources(&[*src], *floor));
+            }
+            GateOp::RemoveSource { src } => {
+                if batched && !pending[*src].is_empty() {
+                    srcs[*src].add_batch(&mut pending[*src]);
+                }
+                assert!(g.remove_sources(&[*src]));
+            }
+            GateOp::AddReader => {
+                // the script drains fully right before, so reader 0's
+                // cursor (and hence the seed position) is identical in
+                // both executions
+                assert!(g.add_readers(&[1], 0));
+                reader_active[1] = true;
+            }
+            GateOp::RemoveReader => {
+                assert!(g.remove_readers(&[1]));
+                reader_active[1] = false;
+            }
+        }
+    }
+    for (s, buf) in pending.iter_mut().enumerate() {
+        if batched && !buf.is_empty() {
+            srcs[s].add_batch(buf);
+        }
+    }
+    for s in 0..4 {
+        if g.source_active(s) {
+            srcs[s].advance_clock(i64::MAX / 8);
+        }
+    }
+    drain_gate_readers(&mut rdrs, &reader_active, &mut seqs, batched, 33);
+    seqs
+}
+
+#[test]
+fn prop_batched_path_matches_per_tuple_path() {
+    check("batched ≡ per-tuple", 25, |tc| {
+        // script generation: 2 active sources (0,1), pool 2-3; reader 1
+        // joins (and may leave) mid-run; ts strictly increasing ⇒ unique
+        let n_ops = tc.rng.range(100, 600);
+        let mut script = Vec::with_capacity(n_ops + 8);
+        let mut ts = 0i64;
+        let mut seq = 0u64;
+        let mut active: Vec<usize> = vec![0, 1];
+        let mut next_pool = 2usize;
+        let mut reader1_state = 0u8; // 0 = never added, 1 = active, 2 = removed
+        for _ in 0..n_ops {
+            let r = tc.rng.gen_range(100);
+            if r < 70 {
+                let s = active[tc.rng.range(0, active.len())];
+                ts += 1 + tc.rng.gen_range(3) as i64;
+                script.push(GateOp::Add { src: s, ts, seq });
+                seq += 1;
+            } else if r < 82 {
+                script.push(GateOp::Drain { max: tc.rng.range(1, 64) });
+            } else if r < 87 && active.len() > 1 {
+                let s = active.remove(tc.rng.range(0, active.len()));
+                script.push(GateOp::Drain { max: 8 });
+                script.push(GateOp::RemoveSource { src: s });
+            } else if r < 92 && next_pool < 4 {
+                script.push(GateOp::AddSource { src: next_pool, floor: ts });
+                active.push(next_pool);
+                next_pool += 1;
+            } else if r < 96 && reader1_state == 0 {
+                script.push(GateOp::Drain { max: 16 });
+                script.push(GateOp::AddReader);
+                reader1_state = 1;
+            } else if reader1_state == 1 {
+                script.push(GateOp::Drain { max: 16 });
+                script.push(GateOp::RemoveReader);
+                reader1_state = 2;
+            }
+        }
+        let per_tuple = run_gate_script(&script, false);
+        let batched = run_gate_script(&script, true);
+        for i in 0..2 {
+            assert_eq!(
+                per_tuple[i], batched[i],
+                "seed {:#x}: reader {i} diverged between per-tuple and batched",
+                tc.seed
+            );
+        }
+        // Definition 6 on the shared prefix: sorted, exactly-once
+        assert!(per_tuple[0].windows(2).all(|w| w[0].0 < w[1].0), "ts order/uniqueness violated");
+        let mut ids: Vec<u64> = per_tuple[0].iter().map(|&(_, p)| p).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), per_tuple[0].len(), "duplicate delivery");
+    });
+}
+
+#[test]
+fn prop_batched_concurrent_exactly_once_same_order() {
+    check("batched concurrent delivery", 4, |tc| {
+        let n = 15_000u64; // per source
+        let (_g, srcs, rdrs) = scale_gate::<Tuple<u64>>(2, 2, 1 << 15);
+        let run_seed = tc.seed;
+        let producers: Vec<_> = srcs
+            .into_iter()
+            .take(2)
+            .map(|mut s| {
+                std::thread::spawn(move || {
+                    let sid = s.id() as u64;
+                    let mut rng = stretch::util::Rng::new(run_seed ^ (sid + 1));
+                    let mut run: Vec<Tuple<u64>> = Vec::new();
+                    let mut i = 0u64;
+                    while i < n {
+                        let len = 1 + rng.gen_range(40) as u64;
+                        for _ in 0..len.min(n - i) {
+                            // globally unique, per-source sorted ts
+                            let ts = (2 * i + sid) as i64;
+                            run.push(Tuple::data(ts, ts as u64));
+                            i += 1;
+                        }
+                        s.add_batch(&mut run);
+                    }
+                    s.advance_clock(i64::MAX / 8);
+                })
+            })
+            .collect();
+        let readers: Vec<_> = rdrs
+            .into_iter()
+            .take(2)
+            .map(|mut r| {
+                std::thread::spawn(move || {
+                    let total = 2 * n as usize;
+                    let mut got: Vec<u64> = Vec::with_capacity(total);
+                    let mut buf: Vec<Tuple<u64>> = Vec::new();
+                    let mut backoff = Backoff::active();
+                    while got.len() < total {
+                        if r.get_batch(&mut buf, 57) == 0 {
+                            backoff.snooze();
+                            continue;
+                        }
+                        backoff.reset();
+                        for t in buf.drain(..) {
+                            got.push(t.payload);
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        let expect: Vec<u64> = (0..2 * n).collect();
+        for h in readers {
+            let got = h.join().unwrap();
+            assert_eq!(got, expect, "seed {:#x}: batched delivery diverged", tc.seed);
+        }
     });
 }
 
