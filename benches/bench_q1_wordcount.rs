@@ -62,9 +62,9 @@ fn run_vsn(
     let feeder = std::thread::spawn(move || {
         for mut t in feed {
             t.ingest_us = clock.now_us();
-            ing.add(t);
+            ing.add(t).unwrap();
         }
-        ing.heartbeat(END_TS);
+        ing.heartbeat(END_TS).unwrap();
     });
     // drain until quiet after feeder ends
     let clock2 = engine.clock.clone();

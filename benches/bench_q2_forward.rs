@@ -26,11 +26,11 @@ fn real_vsn_forward(pi: usize, n: usize) -> f64 {
     let feeder = std::thread::spawn(move || {
         for i in 0..n as i64 {
             // two logical inputs, interleaved
-            ing0.add(Tuple::data_on(i, 0, i as u64));
-            ing1.add(Tuple::data_on(i, 1, i as u64));
+            ing0.add(Tuple::data_on(i, 0, i as u64)).unwrap();
+            ing1.add(Tuple::data_on(i, 1, i as u64)).unwrap();
         }
-        ing0.heartbeat(i64::MAX / 16);
-        ing1.heartbeat(i64::MAX / 16);
+        ing0.heartbeat(i64::MAX / 16).unwrap();
+        ing1.heartbeat(i64::MAX / 16).unwrap();
     });
     let expect = (2 * n * pi) as u64; // each instance forwards every tuple
     let mut got = 0u64;

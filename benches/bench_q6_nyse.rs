@@ -53,10 +53,10 @@ fn real_hedge_run(duration_s: u32, peak: f64) -> (u64, u64, f64, f64, u64, u64) 
             let r: Tuple<stretch::operator::join::Either<Trade, Trade>> =
                 Tuple::data_on(t.ts, 1, stretch::operator::join::Either::R(t.payload))
                     .with_ingest(ingest);
-            ing.add(l);
-            ing.add(r);
+            ing.add(l).unwrap();
+            ing.add(r).unwrap();
         }
-        ing.heartbeat(i64::MAX / 16);
+        ing.heartbeat(i64::MAX / 16).unwrap();
     });
     let t0 = Instant::now();
     let mut quiet = Instant::now();

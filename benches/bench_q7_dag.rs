@@ -1,0 +1,153 @@
+//! Q7 — diamond DAG under load: trade filter → (left leg ∥ right leg) →
+//! hedge join, driven by the generic N-ingress/M-egress harness with the
+//! topology-aware [`DagController`] co-scheduling all four stages
+//! against a global core budget from their per-stage `in_backlog`.
+//!
+//! Writes `BENCH_q7_dag.json`: end-to-end throughput/latency, per-stage
+//! final parallelism and reconfiguration counts — the perf trajectory
+//! record for the DAG layer.
+//!
+//! ```sh
+//! cargo bench --bench bench_q7_dag                  # full run
+//! cargo bench --bench bench_q7_dag -- --budget-ms 10  # CI smoke
+//! ```
+
+use std::time::Duration;
+use stretch::elastic::DagController;
+use stretch::engine::dag::DagBuilder;
+use stretch::engine::VsnOptions;
+use stretch::harness::{run_pipeline, PipelineRunConfig, StageRunConfig};
+use stretch::workloads::nyse::{
+    hedge_join_op, left_leg_op, right_leg_op, trade_filter_op, HedgeOut, NyseConfig, Trade,
+    TradeStream,
+};
+use stretch::workloads::RateSchedule;
+
+fn main() {
+    let args = stretch::cli::Cli::new("bench_q7_dag", "diamond DAG + global-budget controller")
+        .opt("budget-ms", "wall-clock budget for the paced run (ms)", Some("3000"))
+        .opt("cores", "global core budget for the DagController", Some("6"))
+        .opt("lo", "low offered rate (t/s)", Some("500"))
+        .opt("hi", "high offered rate (t/s)", Some("4000"))
+        .parse()
+        .unwrap_or_else(|e| panic!("{e}"));
+    let budget_ms = args.u64_or("budget-ms", 3_000).max(1);
+    let cores = args.usize_or("cores", 6);
+    let lo = args.f64_or("lo", 500.0);
+    let hi = args.f64_or("hi", 4_000.0);
+
+    // compress wall time: `time_scale` event seconds replay per wall
+    // second; duration follows the wall budget
+    let time_scale = 8.0f64;
+    let duration_s = ((budget_ms as f64 / 1e3) * time_scale).ceil().max(2.0) as u32;
+    let step_at = duration_s / 2;
+
+    println!("Q7 — diamond DAG (fan-out + fan-in) under a {lo}→{hi} t/s step\n");
+    println!(
+        "  {duration_s} event-s at {time_scale}× compression, core budget {cores}, \
+         step at {step_at} s"
+    );
+
+    let ws_ms = 1_000i64;
+    let mut b = DagBuilder::<Trade, HedgeOut>::new();
+    let s = b.source(
+        trade_filter_op(64),
+        VsnOptions { initial: 1, max: 2, gate_capacity: 1 << 14, ..Default::default() },
+    );
+    let l = b.node(
+        left_leg_op(64),
+        VsnOptions { initial: 1, max: 2, gate_capacity: 1 << 14, ..Default::default() },
+        &[s],
+    );
+    let r = b.node(
+        right_leg_op(64),
+        VsnOptions { initial: 1, max: 2, gate_capacity: 1 << 14, ..Default::default() },
+        &[s],
+    );
+    let j = b.node(
+        hedge_join_op(ws_ms, 64),
+        VsnOptions { initial: 1, max: 4, gate_capacity: 1 << 14, ..Default::default() },
+        &[l, r],
+    );
+    let pipeline = b.build(&[j]).expect("diamond is a valid DAG");
+    let n_stages = pipeline.depth();
+
+    let mut source = TradeStream::new(&NyseConfig { symbols: 10, ..Default::default() }, lo);
+    let cfg = PipelineRunConfig {
+        schedule: RateSchedule::step(duration_s, step_at, lo, hi),
+        time_scale,
+        stages: (0..n_stages).map(|_| StageRunConfig::default()).collect(),
+        flush_slack_ms: ws_ms + 10_000,
+        drain: Duration::from_millis(300),
+        ingress_batch: 256,
+        dag_controller: Some(
+            DagController::new(cores).with_thresholds(2_048, 64).with_cooldown(1),
+        ),
+        dag_controller_period_s: 1,
+    };
+    let r = run_pipeline(pipeline, cfg, &mut source).expect("diamond topology is well-formed");
+
+    let mut report = stretch::metrics::BenchReport::new("q7_dag");
+    report
+        .set("duration_event_s", duration_s as u64)
+        .set("core_budget", cores as u64)
+        .set("rate_lo_tps", lo)
+        .set("rate_hi_tps", hi)
+        .set("egress_matches", r.egress_count)
+        .set("latency_p50_us", r.latency_p50_us)
+        .set("latency_mean_us", r.latency_mean_us);
+    let mut total_reconfigs = 0usize;
+    let mut peak_total_threads = 0usize;
+    for s in r.stages.iter() {
+        let final_threads = s.samples.last().map(|x| x.threads).unwrap_or(0);
+        let peak = s.samples.iter().map(|x| x.threads).max().unwrap_or(0);
+        let max_backlog = s.samples.iter().map(|x| x.backlog).max().unwrap_or(0);
+        total_reconfigs += s.reconfigs.len();
+        println!(
+            "  stage {:<12} Π_final={final_threads} Π_peak={peak} reconfigs={} max_backlog={}",
+            s.name,
+            s.reconfigs.len(),
+            max_backlog
+        );
+        report
+            .set(&format!("{}_final_threads", s.name), final_threads as u64)
+            .set(&format!("{}_peak_threads", s.name), peak as u64)
+            .set(&format!("{}_reconfigs", s.name), s.reconfigs.len() as u64)
+            .set(&format!("{}_max_backlog", s.name), max_backlog);
+    }
+    // budget check over the sampled timeline: Σ threads per sample ≤
+    // cores. A single over-budget sample can be a legitimate transient
+    // (a shrink+grow wave installs asynchronously per stage); TWO
+    // consecutive over-budget samples is a DagController regression.
+    let samples = r.stages[0].samples.len();
+    let mut over_streak = 0usize;
+    let mut max_over_streak = 0usize;
+    for i in 0..samples {
+        let total: usize =
+            r.stages.iter().filter_map(|s| s.samples.get(i)).map(|x| x.threads).sum();
+        peak_total_threads = peak_total_threads.max(total);
+        over_streak = if total > cores { over_streak + 1 } else { 0 };
+        max_over_streak = max_over_streak.max(over_streak);
+    }
+    report.set("total_reconfigs", total_reconfigs as u64);
+    report.set("peak_total_threads", peak_total_threads as u64);
+    println!(
+        "\n  {} matches at the egress, e2e p50 {} µs, {total_reconfigs} reconfigs, \
+         peak Σ threads {peak_total_threads} (budget {cores})",
+        r.egress_count, r.latency_p50_us
+    );
+    if peak_total_threads > cores {
+        println!("  note: transient over-budget sample (reconfig wave in flight)");
+    }
+    match report.write() {
+        Ok(p) => println!("  json: {}", p.display()),
+        Err(e) => eprintln!("  BENCH_q7_dag.json write failed: {e}"),
+    }
+    if max_over_streak >= 2 {
+        eprintln!(
+            "  FAIL: core budget {cores} exceeded for {max_over_streak} consecutive samples \
+             — DagController regression"
+        );
+        std::process::exit(1);
+    }
+}

@@ -87,10 +87,10 @@ fn main() {
     let fed = progress.clone();
     let feeder = std::thread::spawn(move || {
         for t in feed {
-            ing.add(t);
+            ing.add(t).unwrap();
             fed.fetch_add(1, Ordering::Relaxed);
         }
-        ing.heartbeat(horizon);
+        ing.heartbeat(horizon).unwrap();
     });
 
     let mut reader = pipeline.egress.remove(0);

@@ -47,12 +47,14 @@ fn main() {
             let ingest = clock.now_us();
             ing.add(
                 Tuple::data_on(t.ts, 0, Either::<Trade, Trade>::L(t.payload)).with_ingest(ingest),
-            );
+            )
+            .unwrap();
             ing.add(
                 Tuple::data_on(t.ts, 1, Either::<Trade, Trade>::R(t.payload)).with_ingest(ingest),
-            );
+            )
+            .unwrap();
         }
-        ing.heartbeat(i64::MAX / 16);
+        ing.heartbeat(i64::MAX / 16).unwrap();
     });
     let mut pair_counts = std::collections::HashMap::<(u16, u16), u64>::new();
     let mut total = 0u64;

@@ -39,7 +39,7 @@ fn main() {
             1 => vec![1, 2],       // "A" + "B"  (multi-key: no duplication!)
             _ => vec![2, 3],       // "B" + "C"
         };
-        ing.add(Tuple::data(i * 2, Arc::new(keys))); // 2ms apart → 2 windows per 10s
+        ing.add(Tuple::data(i * 2, Arc::new(keys))).unwrap(); // 2ms apart → 2 windows per 10s
 
         // 4. Mid-stream: provision instances 2 and 3 (epoch switch, <40ms,
         //    no state transfer — σ is shared).
@@ -48,7 +48,7 @@ fn main() {
             println!("  requested reconfiguration to Π=4 (epoch {epoch})");
         }
     }
-    ing.heartbeat(1_000_000); // end-of-stream watermark
+    ing.heartbeat(1_000_000).unwrap(); // end-of-stream watermark
 
     // 5. Read the windowed counts.
     let mut results: Vec<(i64, u64, u64)> = Vec::new();

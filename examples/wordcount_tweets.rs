@@ -41,9 +41,9 @@ fn main() {
     let feed = tuples.clone();
     let feeder = std::thread::spawn(move || {
         for t in feed {
-            ing.add(t);
+            ing.add(t).unwrap();
         }
-        ing.heartbeat(horizon);
+        ing.heartbeat(horizon).unwrap();
     });
     let mut counts: Vec<(u64, u64)> = Vec::new();
     let deadline = std::time::Instant::now() + Duration::from_secs(30);
@@ -88,9 +88,9 @@ fn main() {
     let horizon2 = tuples.last().unwrap().ts + 7_200_000;
     let feeder2 = std::thread::spawn(move || {
         for t in tuples {
-            ing2.add(t);
+            ing2.add(t).unwrap();
         }
-        ing2.heartbeat(horizon2);
+        ing2.heartbeat(horizon2).unwrap();
     });
     let mut longest: Vec<(u64, u64)> = Vec::new();
     let deadline = std::time::Instant::now() + Duration::from_secs(30);

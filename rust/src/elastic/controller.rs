@@ -43,6 +43,10 @@ pub trait Controller: Send {
 /// Choose the next instance set of size `target` given the current set:
 /// keep existing ids, grow from the lowest free ids, shrink from the
 /// highest active ids (the paper's pool semantics, §7).
+///
+/// O(active + max): one boolean-membership pass replaces the former
+/// `set.contains` scan inside the free-id loop (O(active·max)), which
+/// stalled controller ticks on pools with `max` in the hundreds.
 pub fn resize_instance_set(active: &[InstanceId], max: usize, target: usize) -> Vec<InstanceId> {
     let target = target.clamp(1, max);
     let mut set: Vec<InstanceId> = active.to_vec();
@@ -51,13 +55,19 @@ pub fn resize_instance_set(active: &[InstanceId], max: usize, target: usize) -> 
         set.truncate(target);
         return set;
     }
-    let mut free: Vec<InstanceId> = (0..max).filter(|i| !set.contains(i)).collect();
-    free.sort_unstable();
-    for id in free {
+    let mut member = vec![false; max];
+    for &i in &set {
+        if i < max {
+            member[i] = true;
+        }
+    }
+    for (id, used) in member.iter().enumerate() {
         if set.len() == target {
             break;
         }
-        set.push(id);
+        if !used {
+            set.push(id);
+        }
     }
     set.sort_unstable();
     set

@@ -1,0 +1,212 @@
+//! Topology-aware elasticity: co-schedule per-stage parallelism against
+//! a global core budget.
+//!
+//! Per-stage controllers (reactive/proactive) decide in isolation — on a
+//! multi-stage topology they can collectively over-subscribe the
+//! machine, or starve the stage that actually gates end-to-end
+//! throughput. [`DagController`] looks at every stage of a pipeline/DAG
+//! at once (Röger & Mayer's survey calls this the *global* scaling
+//! scope; Elasticutor's coordinator plays the same role) and divides a
+//! fixed core budget by need, where need is each stage's `in_backlog` —
+//! the one signal that composes across stages, because a bottleneck
+//! stage's gate is where tuples visibly pile up.
+//!
+//! Policy per tick (deterministic, O(stages·log stages)):
+//! 1. cold stages (backlog ≤ `shrink_backlog`) release one core;
+//! 2. hot stages (backlog ≥ `grow_backlog`) request one core, granted in
+//!    descending-backlog order while the budget holds — a core released
+//!    in step 1 is re-grantable in the same tick, so load shifts between
+//!    stages in one reconfiguration wave instead of two;
+//! 3. if the budget is exceeded (e.g. a shrunken budget), the coldest
+//!    stages are forcibly shrunk until the sum fits.
+//!
+//! Instance-id selection reuses [`resize_instance_set`] (keep existing,
+//! grow from the lowest pool ids, shrink from the highest).
+
+use crate::elastic::controller::{resize_instance_set, Decision, Observation};
+
+/// Global, budgeted multi-stage controller. Tick it with one
+/// [`Observation`] per stage (same order every tick); it returns one
+/// [`Decision`] per stage.
+pub struct DagController {
+    /// Global core budget: Σ per-stage parallelism stays ≤ this.
+    pub cores: usize,
+    /// Backlog at/above which a stage requests one more core.
+    pub grow_backlog: u64,
+    /// Backlog at/below which a stage releases one core.
+    pub shrink_backlog: u64,
+    /// Ticks a stage holds still after a reconfiguration it took part in.
+    pub cooldown_ticks: u32,
+    cool: Vec<u32>,
+}
+
+impl DagController {
+    pub fn new(cores: usize) -> Self {
+        DagController {
+            cores: cores.max(1),
+            grow_backlog: 4096,
+            shrink_backlog: 64,
+            cooldown_ticks: 1,
+            cool: Vec::new(),
+        }
+    }
+
+    pub fn with_thresholds(mut self, grow_backlog: u64, shrink_backlog: u64) -> Self {
+        self.grow_backlog = grow_backlog.max(1);
+        self.shrink_backlog = shrink_backlog.min(self.grow_backlog.saturating_sub(1));
+        self
+    }
+
+    pub fn with_cooldown(mut self, ticks: u32) -> Self {
+        self.cooldown_ticks = ticks;
+        self
+    }
+
+    /// One co-scheduling round over every stage.
+    pub fn tick(&mut self, obs: &[Observation]) -> Vec<Decision> {
+        if self.cool.len() < obs.len() {
+            self.cool.resize(obs.len(), 0);
+        }
+        let mut target: Vec<usize> = obs.iter().map(|o| o.active.len()).collect();
+        let mut movable: Vec<bool> = Vec::with_capacity(obs.len());
+        for (i, o) in obs.iter().enumerate() {
+            let free = self.cool[i] == 0;
+            if !free {
+                self.cool[i] -= 1;
+            }
+            movable.push(free);
+            // 1. cold stages release a core
+            if free && o.backlog <= self.shrink_backlog && target[i] > 1 {
+                target[i] -= 1;
+            }
+        }
+        // 2. hot stages take cores in descending-backlog order
+        let mut used: usize = target.iter().sum();
+        let mut want: Vec<usize> = (0..obs.len())
+            .filter(|&i| {
+                movable[i] && obs[i].backlog >= self.grow_backlog && target[i] < obs[i].max
+            })
+            .collect();
+        want.sort_by_key(|&i| std::cmp::Reverse(obs[i].backlog));
+        for i in want {
+            if used < self.cores {
+                target[i] += 1;
+                used += 1;
+            }
+        }
+        // 3. over budget (shrunk budget or oversized initial config):
+        // force the coldest movable stages down until the sum fits
+        if used > self.cores {
+            let mut by_cold: Vec<usize> = (0..obs.len()).collect();
+            by_cold.sort_by_key(|&i| obs[i].backlog);
+            'fit: while used > self.cores {
+                let mut any = false;
+                for &i in &by_cold {
+                    if movable[i] && target[i] > 1 {
+                        target[i] -= 1;
+                        used -= 1;
+                        any = true;
+                        if used <= self.cores {
+                            break 'fit;
+                        }
+                    }
+                }
+                if !any {
+                    break; // every stage at 1 or cooling — nothing to take
+                }
+            }
+        }
+        obs.iter()
+            .enumerate()
+            .map(|(i, o)| {
+                if target[i] == o.active.len() {
+                    Decision::Hold
+                } else {
+                    self.cool[i] = self.cooldown_ticks;
+                    Decision::Reconfigure(resize_instance_set(&o.active, o.max, target[i]))
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(active: usize, max: usize, backlog: u64) -> Observation {
+        Observation {
+            in_rate: 0.0,
+            cmp_per_s: 0.0,
+            backlog,
+            dt: 1.0,
+            active: (0..active).collect(),
+            max,
+        }
+    }
+
+    #[test]
+    fn hottest_stage_wins_the_last_core() {
+        let mut c = DagController::new(4).with_thresholds(100, 10).with_cooldown(0);
+        // 3 stages × 1 core used; 1 core free; two stages hot
+        let d = c.tick(&[obs(1, 4, 5_000), obs(1, 4, 500), obs(1, 4, 50)]);
+        assert_eq!(d[0], Decision::Reconfigure(vec![0, 1]), "hottest grows");
+        assert_eq!(d[1], Decision::Hold, "budget exhausted for the cooler stage");
+        assert_eq!(d[2], Decision::Hold);
+    }
+
+    #[test]
+    fn cold_stage_releases_core_for_hot_stage_same_tick() {
+        let mut c = DagController::new(4).with_thresholds(100, 10).with_cooldown(0);
+        // budget fully used (2+2); stage 1 idle, stage 0 overloaded
+        let d = c.tick(&[obs(2, 4, 10_000), obs(2, 4, 0)]);
+        assert_eq!(d[0], Decision::Reconfigure(vec![0, 1, 2]), "hot stage takes the freed core");
+        assert_eq!(d[1], Decision::Reconfigure(vec![0]), "cold stage yields");
+    }
+
+    #[test]
+    fn holds_inside_the_band_and_respects_max() {
+        let mut c = DagController::new(8).with_thresholds(100, 10).with_cooldown(0);
+        let d = c.tick(&[obs(2, 2, 50_000), obs(1, 4, 50)]);
+        assert_eq!(d[0], Decision::Hold, "already at max");
+        assert_eq!(d[1], Decision::Hold, "inside the hold band");
+    }
+
+    #[test]
+    fn over_budget_config_is_forced_down() {
+        let mut c = DagController::new(3).with_thresholds(1_000_000, 0).with_cooldown(0);
+        // 2+2+2 = 6 on a 3-core budget, nobody hot or cold
+        let d = c.tick(&[obs(2, 4, 500), obs(2, 4, 400), obs(2, 4, 300)]);
+        let total: usize = d
+            .iter()
+            .zip([2, 2, 2])
+            .map(|(dec, cur)| match dec {
+                Decision::Hold => cur,
+                Decision::Reconfigure(set) => set.len(),
+            })
+            .sum();
+        assert!(total <= 3, "budget must be enforced, got {total}");
+        assert!(d.iter().all(|dec| match dec {
+            Decision::Hold => true,
+            Decision::Reconfigure(set) => !set.is_empty(),
+        }));
+    }
+
+    #[test]
+    fn cooldown_freezes_a_stage_for_a_tick() {
+        let mut c = DagController::new(8).with_thresholds(100, 10).with_cooldown(1);
+        let d = c.tick(&[obs(1, 4, 5_000)]);
+        assert!(matches!(d[0], Decision::Reconfigure(_)));
+        let d = c.tick(&[obs(2, 4, 5_000)]);
+        assert_eq!(d[0], Decision::Hold, "cooling down");
+        let d = c.tick(&[obs(2, 4, 5_000)]);
+        assert!(matches!(d[0], Decision::Reconfigure(_)), "cooldown expired");
+    }
+
+    #[test]
+    fn never_shrinks_below_one() {
+        let mut c = DagController::new(4).with_thresholds(100, 10).with_cooldown(0);
+        let d = c.tick(&[obs(1, 4, 0), obs(1, 4, 0)]);
+        assert_eq!(d, vec![Decision::Hold, Decision::Hold]);
+    }
+}

@@ -4,14 +4,18 @@
 //! control tuples, `crate::engine`); these are the external policy modules
 //! the evaluation plugs in: the reactive 90/70/45 threshold controller
 //! (Q4) and the proactive model-based controller (Q5), both built on the
-//! calibrated stream-join cost model of DEBS'17 [22].
+//! calibrated stream-join cost model of DEBS'17 [22], plus the
+//! topology-aware [`DagController`] that co-schedules every stage of a
+//! pipeline/DAG against a global core budget.
 
 pub mod controller;
+pub mod dag;
 pub mod model;
 pub mod proactive;
 pub mod reactive;
 
 pub use controller::{resize_instance_set, Controller, Decision, Observation};
+pub use dag::DagController;
 pub use model::JoinCostModel;
 pub use proactive::ProactiveController;
 pub use reactive::{ReactiveController, Thresholds};

@@ -1,0 +1,660 @@
+//! True DAG topologies over shared Elastic ScaleGates: fan-out and
+//! fan-in, the §2 shape [`crate::engine::pipeline`]'s linear chains
+//! could not express.
+//!
+//! A DAG edge-group is ONE shared gate:
+//!
+//! * **fan-out** — a stage feeding several downstream stages publishes
+//!   once into its ESG_out; every downstream stage registers as an extra
+//!   *reader group* (a contiguous reader-slot range) on that same gate.
+//!   The ESG's exactly-once-per-reader delivery (Def. 6) gives each
+//!   consumer stage the full stream with zero duplication of the data
+//!   plane — the SN baseline would clone per downstream.
+//! * **fan-in** — a stage merging several upstreams owns ONE ESG_in with
+//!   one *source-slot group* per upstream stage; the existing
+//!   multi-source cooperative merge delivers one globally ts-sorted
+//!   stream (the readiness bound is the min over every upstream's worker
+//!   clocks, so watermarks compose across branches for free).
+//! * **per-edge control** — every consumer stage of a gate owns a
+//!   reserved control slot (after all worker source slots) and a control
+//!   *tag*: control tuples are broadcast to all reader groups, so a
+//!   worker only adopts specs whose `Tuple::input` matches its stage's
+//!   tag. Each stage therefore stays independently elastic, exactly as
+//!   in the linear builder.
+//!
+//! Grouping rule: consumer stages sharing an upstream must consume the
+//! *identical* upstream set (the gate is a hyperedge — a reader group
+//! sees everything published into the gate, so differing upstream sets
+//! would leak one branch's tuples into another). The diamond
+//! `S → {A, B} → J` satisfies it: A and B both consume exactly `{S}`,
+//! J consumes exactly `{A, B}`.
+//!
+//! Construction is two-phase: [`DagBuilder::source`]/[`DagBuilder::node`]
+//! record typed per-node spawn closures; [`DagBuilder::build`] validates
+//! the topology, lays out every gate's slot geometry (offsets per
+//! stage), then runs the closures — gates are created lazily by the
+//! first participant and shared through a type-erased store (the handle
+//! types guarantee every participant agrees on the payload type).
+
+use crate::engine::ingress::StretchIngress;
+use crate::engine::pipeline::{ControlInjector, Pipeline, StageHandle, VsnStage};
+use crate::engine::vsn::{EngineClock, StageIo, VsnEngine, VsnOptions};
+use crate::operator::{OperatorDef, OperatorLogic};
+use crate::scalegate::{Esg, EsgConfig, GateEntry, ReaderHandle, SourceHandle};
+use crate::time::TIME_MIN;
+use crate::tuple::{Payload, Tuple};
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::marker::PhantomData;
+
+/// Typed reference to a declared DAG node; the payload type parameter is
+/// the node's *output*, so edges type-check at `node()` call sites.
+pub struct NodeHandle<P> {
+    idx: usize,
+    _m: PhantomData<fn() -> P>,
+}
+
+impl<P> Clone for NodeHandle<P> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<P> Copy for NodeHandle<P> {}
+
+impl<P> NodeHandle<P> {
+    /// Index of this node in `Pipeline::stages` (declaration order).
+    pub fn index(&self) -> usize {
+        self.idx
+    }
+}
+
+/// Topology validation errors from [`DagBuilder::build`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DagError {
+    /// The builder holds no nodes.
+    Empty,
+    /// A `node()` call listed the same upstream more than once.
+    DuplicateUpstream { node: &'static str },
+    /// Two consumers share an upstream but not the full upstream set —
+    /// the shared gate would leak one branch's stream into the other.
+    FanOutSetConflict { node: &'static str },
+    /// A handle passed to `build()` as a sink is consumed by another node.
+    SinkNotEgress { node: &'static str },
+    /// A node with no consumers was not passed to `build()` as a sink —
+    /// its output gate would have no reader and fill up.
+    MissingSink { node: &'static str },
+    /// The same sink handle was passed twice.
+    DuplicateSink { node: &'static str },
+    /// More than 256 consumer stages on one gate (control tags are u8).
+    TooManyConsumers { node: &'static str },
+}
+
+impl fmt::Display for DagError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DagError::Empty => write!(f, "DAG has no nodes"),
+            DagError::DuplicateUpstream { node } => {
+                write!(f, "node `{node}` lists the same upstream twice")
+            }
+            DagError::FanOutSetConflict { node } => write!(
+                f,
+                "node `{node}` is consumed by stages with differing upstream sets \
+                 (consumers of a shared gate must consume the identical upstream set)"
+            ),
+            DagError::SinkNotEgress { node } => {
+                write!(f, "sink `{node}` is consumed by another node")
+            }
+            DagError::MissingSink { node } => write!(
+                f,
+                "node `{node}` has no consumers but was not declared a sink \
+                 (its output gate would have no reader)"
+            ),
+            DagError::DuplicateSink { node } => write!(f, "sink `{node}` passed twice"),
+            DagError::TooManyConsumers { node } => {
+                write!(f, "gate fed by `{node}` has more than 256 consumer stages")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DagError {}
+
+/// Slot-range assignment of one node on its (possibly shared) gates.
+#[derive(Clone, Copy, Debug, Default)]
+struct NodePlan {
+    /// Edge-group of the node's ESG_in (`None` ⇒ external source node).
+    in_group: Option<usize>,
+    /// Edge-group of the node's ESG_out (`None` ⇒ sink node).
+    out_group: Option<usize>,
+    /// First reader slot of this stage on its ESG_in.
+    reader_base: usize,
+    /// First source slot of this stage on its ESG_out.
+    source_base: usize,
+    /// Reserved control slot on the ESG_in (consumer stages only).
+    ctrl_slot: usize,
+    /// Control tag on the ESG_in (consumer index within the gate).
+    ctrl_tag: u8,
+}
+
+/// Untyped geometry of one edge-group gate, fixed before any gate is
+/// created: slot counts plus which slots start active.
+struct GateGeom {
+    cfg: EsgConfig,
+    active_sources: Vec<usize>,
+    active_readers: Vec<usize>,
+}
+
+/// A created-but-not-fully-claimed gate: participants take their slot
+/// ranges out of the `Option`s as their spawn closures run.
+struct PendingGate<T: GateEntry> {
+    esg: Esg<T>,
+    sources: Vec<Option<SourceHandle<T>>>,
+    readers: Vec<Option<ReaderHandle<T>>>,
+}
+
+impl<T: GateEntry> PendingGate<T> {
+    fn build(geom: &GateGeom) -> Self {
+        // all slots start inactive; activation is per-slot because each
+        // participant's active prefix sits at its own offset
+        let (esg, sources, readers) = Esg::new(geom.cfg, 0, 0);
+        // fail fast (release builds too): a silently inactive slot would
+        // not error later, it would hang the topology — no data flows and
+        // readiness never advances past the dead group
+        if !geom.active_sources.is_empty() {
+            let ok = esg.add_sources(&geom.active_sources, TIME_MIN);
+            assert!(ok, "fresh gate rejected initial source activation (geometry bug)");
+        }
+        if !geom.active_readers.is_empty() {
+            let ok = esg.add_readers_at(&geom.active_readers, 0);
+            assert!(ok, "fresh gate rejected initial reader activation (geometry bug)");
+        }
+        PendingGate {
+            esg,
+            sources: sources.into_iter().map(Some).collect(),
+            readers: readers.into_iter().map(Some).collect(),
+        }
+    }
+
+    fn take_sources(&mut self, base: usize, n: usize) -> Vec<SourceHandle<T>> {
+        (base..base + n)
+            .map(|i| self.sources[i].take().expect("source slot claimed twice"))
+            .collect()
+    }
+
+    fn take_source(&mut self, i: usize) -> SourceHandle<T> {
+        self.sources[i].take().expect("control slot claimed twice")
+    }
+
+    fn take_readers(&mut self, base: usize, n: usize) -> Vec<ReaderHandle<T>> {
+        (base..base + n)
+            .map(|i| self.readers[i].take().expect("reader slot claimed twice"))
+            .collect()
+    }
+}
+
+/// Shared state the spawn closures build against.
+struct BuildCtx {
+    geoms: Vec<GateGeom>,
+    /// One lazily created gate per edge-group (`PendingGate<Tuple<P>>`
+    /// behind `Any`; the handle types guarantee agreement on `P`).
+    gates: Vec<Option<Box<dyn Any>>>,
+    /// Sink nodes' private output gates, keyed by node index.
+    sink_gates: Vec<Option<Box<dyn Any>>>,
+    clock: EngineClock,
+}
+
+impl BuildCtx {
+    /// The edge-group's gate, created on first touch.
+    fn gate<T: GateEntry>(&mut self, g: usize) -> &mut PendingGate<T> {
+        if self.gates[g].is_none() {
+            self.gates[g] = Some(Box::new(PendingGate::<T>::build(&self.geoms[g])));
+        }
+        self.gates[g]
+            .as_mut()
+            .unwrap()
+            .downcast_mut::<PendingGate<T>>()
+            .expect("edge payload type mismatch (handle types guarantee agreement)")
+    }
+}
+
+type Spawn<In> =
+    Box<dyn FnOnce(&mut BuildCtx, &NodePlan) -> (Box<dyn StageHandle>, Vec<StretchIngress<In>>)>;
+
+struct NodeDecl<In: Payload + Default> {
+    name: &'static str,
+    /// Upstream node indices (empty ⇔ external source node).
+    ups: Vec<usize>,
+    max: usize,
+    initial: usize,
+    gate_capacity: usize,
+    spawn: Spawn<In>,
+}
+
+/// Builder for DAG topologies: declare nodes with [`source`]/[`node`]
+/// (handles enforce edge types), then [`build`] into a running
+/// [`Pipeline`]. `In` is the external input payload (every source node
+/// consumes it), `Out` the sink output payload (every sink emits it).
+///
+/// ```ignore
+/// let mut b = DagBuilder::<Trade, HedgeOut>::new();
+/// let s = b.source(trade_filter_op(64), opts_s);
+/// let a = b.node(left_leg_op(64), opts_a, &[s]);   // fan-out: a and b
+/// let c = b.node(right_leg_op(64), opts_b, &[s]);  //   share s's gate
+/// let j = b.node(hedge_join_op(ws, 32), opts_j, &[a, c]); // fan-in
+/// let pipeline = b.build(&[j])?;
+/// ```
+///
+/// [`source`]: DagBuilder::source
+/// [`node`]: DagBuilder::node
+/// [`build`]: DagBuilder::build
+pub struct DagBuilder<In: Payload + Default, Out: Payload + Default> {
+    nodes: Vec<NodeDecl<In>>,
+    clock: EngineClock,
+    _m: PhantomData<fn(In) -> Out>,
+}
+
+impl<In: Payload + Default, Out: Payload + Default> Default for DagBuilder<In, Out> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<In: Payload + Default, Out: Payload + Default> DagBuilder<In, Out> {
+    pub fn new() -> Self {
+        DagBuilder { nodes: Vec::new(), clock: EngineClock::new(), _m: PhantomData }
+    }
+
+    /// Number of declared nodes so far.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Declare an external source node: `opts.upstreams` ingress wrappers
+    /// feed its private ESG_in (control rides the wrappers, Alg. 5).
+    pub fn source<L>(&mut self, def: OperatorDef<L>, opts: VsnOptions) -> NodeHandle<L::Out>
+    where
+        L: OperatorLogic<In = In>,
+        L::Out: Default,
+    {
+        let idx = self.nodes.len();
+        let name = def.name;
+        let (max, initial, gate_capacity) = (opts.max, opts.initial, opts.gate_capacity);
+        let spawn: Spawn<In> = Box::new(move |ctx, plan| {
+            let (esg_in, in_sources, in_readers) =
+                Esg::new(opts.in_gate_config(), opts.upstreams, opts.initial);
+            let (esg_out, out_sources, source_base) =
+                claim_out_gate::<L::Out>(ctx, plan, &opts, idx);
+            let io = StageIo {
+                esg_in,
+                in_sources,
+                in_readers,
+                esg_out,
+                out_sources,
+                reader_base: 0,
+                source_base,
+                ctrl_tag: 0,
+            };
+            let max = opts.max;
+            let (engine, ingress) = VsnEngine::setup_with_gates(def, opts, io, ctx.clock.clone());
+            (Box::new(VsnStage::new(name, engine, None, max)) as Box<dyn StageHandle>, ingress)
+        });
+        self.nodes.push(NodeDecl { name, ups: Vec::new(), max, initial, gate_capacity, spawn });
+        NodeHandle { idx, _m: PhantomData }
+    }
+
+    /// Declare an internal node consuming one or more upstream nodes.
+    /// One upstream = a chain hop; several = fan-in (one source-slot
+    /// group per upstream on the shared ESG_in). Several nodes declaring
+    /// the same upstream set = fan-out (each becomes a reader group on
+    /// the shared gate). `opts.upstreams` is ignored — the input sources
+    /// are the upstream stages' workers plus this node's control slot.
+    pub fn node<L>(
+        &mut self,
+        def: OperatorDef<L>,
+        opts: VsnOptions,
+        ups: &[NodeHandle<L::In>],
+    ) -> NodeHandle<L::Out>
+    where
+        L: OperatorLogic,
+        L::In: Default,
+        L::Out: Default,
+    {
+        assert!(!ups.is_empty(), "node() needs upstreams; use source() for external inputs");
+        let idx = self.nodes.len();
+        let name = def.name;
+        let (max, initial, gate_capacity) = (opts.max, opts.initial, opts.gate_capacity);
+        let ups_idx: Vec<usize> = ups.iter().map(|h| h.idx).collect();
+        let spawn: Spawn<In> = Box::new(move |ctx, plan| {
+            let g_in = plan.in_group.expect("node() always has an in-group");
+            let (esg_in, in_readers, ctrl_src) = {
+                let pg = ctx.gate::<Tuple<L::In>>(g_in);
+                (
+                    pg.esg.clone(),
+                    pg.take_readers(plan.reader_base, opts.max),
+                    pg.take_source(plan.ctrl_slot),
+                )
+            };
+            let (esg_out, out_sources, source_base) =
+                claim_out_gate::<L::Out>(ctx, plan, &opts, idx);
+            let io = StageIo {
+                esg_in,
+                in_sources: Vec::new(),
+                in_readers,
+                esg_out,
+                out_sources,
+                reader_base: plan.reader_base,
+                source_base,
+                ctrl_tag: plan.ctrl_tag,
+            };
+            let max = opts.max;
+            let (engine, _no_ingress) =
+                VsnEngine::setup_with_gates(def, opts, io, ctx.clock.clone());
+            let injector =
+                ControlInjector::new(ctrl_src, engine.control.clone()).with_tag(plan.ctrl_tag);
+            (
+                Box::new(VsnStage::new(name, engine, Some(injector), max)) as Box<dyn StageHandle>,
+                Vec::new(),
+            )
+        });
+        self.nodes.push(NodeDecl { name, ups: ups_idx, max, initial, gate_capacity, spawn });
+        NodeHandle { idx, _m: PhantomData }
+    }
+
+    /// Validate the topology, lay out every shared gate, spawn every
+    /// stage, and return the running [`Pipeline`]. `sinks` must list
+    /// exactly the nodes no other node consumes; their output gates get
+    /// `opts.egress_readers` reader ends each, concatenated into
+    /// `Pipeline::egress` in the given order.
+    pub fn build(self, sinks: &[NodeHandle<Out>]) -> Result<Pipeline<In, Out>, DagError> {
+        let n = self.nodes.len();
+        if n == 0 {
+            return Err(DagError::Empty);
+        }
+
+        // -- edge-groups: consumers keyed by their (sorted) upstream set
+        struct Group {
+            ups: Vec<usize>,
+            consumers: Vec<usize>,
+        }
+        let mut group_of: BTreeMap<Vec<usize>, usize> = BTreeMap::new();
+        let mut groups: Vec<Group> = Vec::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            if node.ups.is_empty() {
+                continue;
+            }
+            let mut key = node.ups.clone();
+            key.sort_unstable();
+            if key.windows(2).any(|w| w[0] == w[1]) {
+                return Err(DagError::DuplicateUpstream { node: node.name });
+            }
+            let g = *group_of.entry(key.clone()).or_insert_with(|| {
+                groups.push(Group { ups: key, consumers: Vec::new() });
+                groups.len() - 1
+            });
+            groups[g].consumers.push(i);
+        }
+
+        // -- every upstream node publishes into exactly one gate
+        let mut plans: Vec<NodePlan> = vec![NodePlan::default(); n];
+        for (g, group) in groups.iter().enumerate() {
+            for &u in &group.ups {
+                if plans[u].out_group.is_some() {
+                    return Err(DagError::FanOutSetConflict { node: self.nodes[u].name });
+                }
+                plans[u].out_group = Some(g);
+            }
+        }
+
+        // -- sinks = nodes nothing consumes; must match the caller's list
+        let mut is_sink = vec![false; n];
+        for s in sinks {
+            if is_sink[s.idx] {
+                return Err(DagError::DuplicateSink { node: self.nodes[s.idx].name });
+            }
+            if plans[s.idx].out_group.is_some() {
+                return Err(DagError::SinkNotEgress { node: self.nodes[s.idx].name });
+            }
+            is_sink[s.idx] = true;
+        }
+        for i in 0..n {
+            if plans[i].out_group.is_none() && !is_sink[i] {
+                return Err(DagError::MissingSink { node: self.nodes[i].name });
+            }
+        }
+
+        // -- per-group slot layout + geometry
+        let mut geoms: Vec<GateGeom> = Vec::with_capacity(groups.len());
+        for (g, group) in groups.iter().enumerate() {
+            if group.consumers.len() > u8::MAX as usize + 1 {
+                return Err(DagError::TooManyConsumers { node: self.nodes[group.ups[0]].name });
+            }
+            let mut capacity = 0usize;
+            let mut src_off = 0usize;
+            let mut active_sources = Vec::new();
+            for &u in &group.ups {
+                plans[u].source_base = src_off;
+                active_sources.extend(src_off..src_off + self.nodes[u].initial);
+                src_off += self.nodes[u].max;
+                capacity = capacity.max(self.nodes[u].gate_capacity);
+            }
+            let mut rdr_off = 0usize;
+            let mut active_readers = Vec::new();
+            for (j, &c) in group.consumers.iter().enumerate() {
+                plans[c].in_group = Some(g);
+                plans[c].reader_base = rdr_off;
+                plans[c].ctrl_slot = src_off + j;
+                plans[c].ctrl_tag = j as u8;
+                active_readers.extend(rdr_off..rdr_off + self.nodes[c].initial);
+                rdr_off += self.nodes[c].max;
+                capacity = capacity.max(self.nodes[c].gate_capacity);
+            }
+            geoms.push(GateGeom {
+                cfg: EsgConfig::for_gate(src_off + group.consumers.len(), rdr_off, capacity),
+                active_sources,
+                active_readers,
+            });
+        }
+
+        // -- spawn every stage in declaration (= topological) order
+        let mut ctx = BuildCtx {
+            gates: (0..geoms.len()).map(|_| None).collect(),
+            geoms,
+            sink_gates: (0..n).map(|_| None).collect(),
+            clock: self.clock.clone(),
+        };
+        let mut stages: Vec<Box<dyn StageHandle>> = Vec::with_capacity(n);
+        let mut ingress: Vec<StretchIngress<In>> = Vec::new();
+        for (i, node) in self.nodes.into_iter().enumerate() {
+            let (handle, node_ingress) = (node.spawn)(&mut ctx, &plans[i]);
+            stages.push(handle);
+            ingress.extend(node_ingress);
+        }
+
+        // -- collect sink egress readers + gates (caller's sink order)
+        let mut egress: Vec<ReaderHandle<Tuple<Out>>> = Vec::new();
+        let mut out_gates: Vec<Esg<Tuple<Out>>> = Vec::new();
+        for s in sinks {
+            let pg = ctx.sink_gates[s.idx]
+                .as_mut()
+                .expect("sink gate missing")
+                .downcast_mut::<PendingGate<Tuple<Out>>>()
+                .expect("sink payload type mismatch (handle types guarantee agreement)");
+            let readers = pg.readers.len();
+            egress.extend(pg.take_readers(0, readers));
+            out_gates.push(pg.esg.clone());
+        }
+
+        Ok(Pipeline { clock: self.clock, ingress, egress, out_gates, stages })
+    }
+}
+
+/// Claim a node's output-gate ends: a slot range on the shared edge-group
+/// gate, or a fresh private gate for sink nodes (stashed for
+/// `build()`'s egress collection).
+fn claim_out_gate<P: Payload + Default>(
+    ctx: &mut BuildCtx,
+    plan: &NodePlan,
+    opts: &VsnOptions,
+    idx: usize,
+) -> (Esg<Tuple<P>>, Vec<SourceHandle<Tuple<P>>>, usize) {
+    match plan.out_group {
+        Some(g) => {
+            let pg = ctx.gate::<Tuple<P>>(g);
+            (pg.esg.clone(), pg.take_sources(plan.source_base, opts.max), plan.source_base)
+        }
+        None => {
+            let (esg, sources, readers) =
+                Esg::new(opts.out_gate_config(), opts.initial, opts.egress_readers);
+            ctx.sink_gates[idx] = Some(Box::new(PendingGate {
+                esg: esg.clone(),
+                sources: Vec::new(),
+                readers: readers.into_iter().map(Some).collect(),
+            }));
+            (esg, sources, 0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operator::map::{map_stage_op, MapLogic, MapStageLogic};
+
+    struct IdMap;
+    impl MapLogic for IdMap {
+        type In = u64;
+        type Out = u64;
+        fn flat_map(&self, t: &Tuple<u64>, emit: &mut dyn FnMut(u64)) {
+            emit(t.payload)
+        }
+    }
+
+    fn id_op(name: &'static str) -> OperatorDef<MapStageLogic<IdMap>> {
+        map_stage_op(name, IdMap, 8)
+    }
+
+    fn opts(initial: usize, max: usize) -> VsnOptions {
+        VsnOptions { initial, max, gate_capacity: 4096, ..Default::default() }
+    }
+
+    #[test]
+    fn diamond_topology_builds_and_flows() {
+        let mut b = DagBuilder::<u64, u64>::new();
+        let s = b.source(id_op("s"), opts(1, 2));
+        let a = b.node(id_op("a"), opts(1, 2), &[s]);
+        let c = b.node(id_op("b"), opts(1, 2), &[s]);
+        let j = b.node(id_op("j"), opts(1, 2), &[a, c]);
+        let mut p = b.build(&[j]).unwrap();
+        assert_eq!(p.stages.len(), 4);
+        assert_eq!(p.ingress.len(), 1);
+        assert_eq!(p.egress.len(), 1);
+        assert_eq!(p.out_gates.len(), 1);
+
+        let mut ing = p.ingress.remove(0);
+        let n = 500u64;
+        for i in 0..n {
+            ing.add(Tuple::data(i as i64, i)).unwrap();
+        }
+        ing.heartbeat(1_000_000).unwrap();
+        // fan-out duplicates the stream per branch; fan-in merges both
+        let mut reader = p.egress.remove(0);
+        let mut got = 0u64;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        let mut buf: Vec<Tuple<u64>> = Vec::new();
+        let mut last_ts = i64::MIN;
+        while got < 2 * n && std::time::Instant::now() < deadline {
+            buf.clear();
+            if reader.get_batch(&mut buf, 128) == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(100));
+                continue;
+            }
+            for t in &buf {
+                if t.kind.is_data() {
+                    assert!(t.ts >= last_ts, "fan-in merge must stay ts-sorted");
+                    last_ts = t.ts;
+                    got += 1;
+                }
+            }
+        }
+        p.shutdown();
+        assert_eq!(got, 2 * n, "each branch must deliver the full stream exactly once");
+    }
+
+    #[test]
+    fn conflicting_fanout_sets_rejected() {
+        let mut b = DagBuilder::<u64, u64>::new();
+        let s = b.source(id_op("s"), opts(1, 2));
+        let s2 = b.source(id_op("s2"), opts(1, 2));
+        let _a = b.node(id_op("a"), opts(1, 2), &[s]);
+        let _c = b.node(id_op("b"), opts(1, 2), &[s, s2]);
+        // `s` would publish into two different gates
+        let err = b.build(&[]).unwrap_err();
+        assert!(matches!(err, DagError::FanOutSetConflict { .. }), "{err}");
+    }
+
+    #[test]
+    fn sink_validation() {
+        let mut b = DagBuilder::<u64, u64>::new();
+        let s = b.source(id_op("s"), opts(1, 2));
+        let a = b.node(id_op("a"), opts(1, 2), &[s]);
+        // `a` is the sink, `s` is consumed: passing `s` must fail…
+        let err = b.build(&[s, a]).unwrap_err();
+        assert!(matches!(err, DagError::SinkNotEgress { .. }), "{err}");
+        // …and omitting `a` must fail too
+        let mut b = DagBuilder::<u64, u64>::new();
+        let s = b.source(id_op("s"), opts(1, 2));
+        let _a = b.node(id_op("a"), opts(1, 2), &[s]);
+        let err = b.build(&[]).unwrap_err();
+        assert!(matches!(err, DagError::MissingSink { .. }), "{err}");
+    }
+
+    #[test]
+    fn empty_dag_rejected() {
+        let b = DagBuilder::<u64, u64>::new();
+        assert_eq!(b.build(&[]).unwrap_err(), DagError::Empty);
+    }
+
+    #[test]
+    fn duplicate_upstream_rejected() {
+        let mut b = DagBuilder::<u64, u64>::new();
+        let s = b.source(id_op("s"), opts(1, 2));
+        let _a = b.node(id_op("a"), opts(1, 2), &[s, s]);
+        let err = b.build(&[]).unwrap_err();
+        assert!(matches!(err, DagError::DuplicateUpstream { .. }), "{err}");
+    }
+
+    #[test]
+    fn multi_sink_dag_exposes_all_egress() {
+        // S fans out to two sinks: both must surface readers + gates
+        let mut b = DagBuilder::<u64, u64>::new();
+        let s = b.source(id_op("s"), opts(1, 2));
+        let a = b.node(id_op("a"), opts(1, 2), &[s]);
+        let c = b.node(id_op("b"), opts(1, 2), &[s]);
+        let mut p = b.build(&[a, c]).unwrap();
+        assert_eq!(p.egress.len(), 2);
+        assert_eq!(p.out_gates.len(), 2);
+        let mut ing = p.ingress.remove(0);
+        for i in 0..100u64 {
+            ing.add(Tuple::data(i as i64, i)).unwrap();
+        }
+        ing.heartbeat(1_000_000).unwrap();
+        for mut r in p.egress.drain(..) {
+            let mut got = 0;
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+            while got < 100 && std::time::Instant::now() < deadline {
+                match r.get() {
+                    Some(t) if t.kind.is_data() => got += 1,
+                    Some(_) => {}
+                    None => std::thread::sleep(std::time::Duration::from_micros(100)),
+                }
+            }
+            assert_eq!(got, 100, "each sink sees the full stream");
+        }
+        p.shutdown();
+    }
+}

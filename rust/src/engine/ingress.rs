@@ -7,7 +7,7 @@
 //! wrapping the pending (e*, 𝕆*, f_μ*) into a control tuple stamped with
 //! the last forwarded timestamp τ.
 
-use crate::scalegate::SourceHandle;
+use crate::scalegate::{AddError, SourceHandle};
 use crate::time::EventTime;
 use crate::tuple::{InstanceId, Mapper, ReconfigSpec, Tuple};
 use std::collections::VecDeque;
@@ -120,47 +120,61 @@ impl<P: Clone + Default + Send + Sync + 'static> StretchIngress<P> {
     }
 
     /// Alg. 5: drain pending control commands as control tuples carrying
-    /// the last forwarded timestamp, then add the data tuple.
-    pub fn add(&mut self, t: Tuple<P>) {
+    /// the last forwarded timestamp, then add the data tuple. If the
+    /// underlying source slot was decommissioned, the tuple is handed
+    /// back via `Err(Inactive(t))` — the caller re-routes or drops it
+    /// deliberately (no silent loss, no abort).
+    pub fn add(&mut self, t: Tuple<P>) -> Result<(), AddError<Tuple<P>>> {
         if self.control.has_pending(self.upstream) {
             while let Some(cmd) = self.control.drain(self.upstream) {
                 // γ = τ of the last forwarded tuple (TIME_MIN before any —
                 // then the first data tuple will trigger immediately).
                 let ts = self.last_ts;
                 self.control.note_issued(cmd.spec.epoch, cmd.issued);
-                self.src.add(Tuple {
+                // `input` 0: the ingress wrapper always addresses stage 0
+                // of its gate (control tags disambiguate consumer stages
+                // on shared DAG gates, not logical join inputs).
+                let ctrl = Tuple {
                     ts,
                     kind: crate::tuple::Kind::Control(cmd.spec.clone()),
-                    input: t.input,
+                    input: 0,
                     ingest_us: 0,
                     payload: t.payload.clone(),
-                });
+                };
+                if self.src.add(ctrl).is_err() {
+                    // hand the *data* tuple back (the caller's property)
+                    return Err(AddError::Inactive(t));
+                }
             }
         }
         debug_assert!(t.ts >= self.last_ts, "upstream {} not ts-sorted", self.upstream);
         self.last_ts = t.ts;
-        self.src.add(t);
+        self.src.add(t)
     }
 
     /// Batched Alg. 5: drain pending control commands FIRST (control
     /// tuples cut ahead of the whole run, stamped with the last forwarded
     /// τ — so a reconfiguration is never delayed behind a data run), then
     /// hand the ts-sorted run to the gate with one batched add. Drains
-    /// `run`.
-    pub fn add_batch(&mut self, run: &mut Vec<Tuple<P>>) {
-        let Some(first) = run.first() else { return };
+    /// `run` on success; on `Err(Inactive)` the unconsumed residual stays
+    /// in `run` for the caller to re-route or drop deliberately.
+    pub fn add_batch(&mut self, run: &mut Vec<Tuple<P>>) -> Result<(), AddError<()>> {
+        let Some(first) = run.first() else { return Ok(()) };
         if self.control.has_pending(self.upstream) {
             let probe = first.clone();
             while let Some(cmd) = self.control.drain(self.upstream) {
                 let ts = self.last_ts;
                 self.control.note_issued(cmd.spec.epoch, cmd.issued);
-                self.src.add(Tuple {
+                let ctrl = Tuple {
                     ts,
                     kind: crate::tuple::Kind::Control(cmd.spec.clone()),
-                    input: probe.input,
+                    input: 0,
                     ingest_us: 0,
                     payload: probe.payload.clone(),
-                });
+                };
+                if self.src.add(ctrl).is_err() {
+                    return Err(AddError::Inactive(()));
+                }
             }
         }
         debug_assert!(
@@ -169,11 +183,13 @@ impl<P: Clone + Default + Send + Sync + 'static> StretchIngress<P> {
             self.upstream
         );
         self.last_ts = run.last().unwrap().ts;
-        self.src.add_batch(run);
+        self.src.add_batch(run)
     }
 
     /// Advance this upstream's clock without data (rate drop to zero).
-    pub fn heartbeat(&mut self, ts: EventTime) {
+    /// `Err(Inactive)` reports a decommissioned slot (nothing to hand
+    /// back — heartbeats carry no data).
+    pub fn heartbeat(&mut self, ts: EventTime) -> Result<(), AddError<()>> {
         // control tuples must still flow even without data
         if self.control.has_pending(self.upstream) {
             while let Some(cmd) = self.control.drain(self.upstream) {
@@ -186,7 +202,9 @@ impl<P: Clone + Default + Send + Sync + 'static> StretchIngress<P> {
                     mapper: cmd.spec.mapper.clone(),
                 });
                 t.kind = crate::tuple::Kind::Control(cmd.spec.clone());
-                self.src.add(t);
+                if self.src.add(t).is_err() {
+                    return Err(AddError::Inactive(()));
+                }
             }
         }
         // Deliver an explicit heartbeat ENTRY (§2.3): instance watermarks
@@ -194,8 +212,11 @@ impl<P: Clone + Default + Send + Sync + 'static> StretchIngress<P> {
         // leave windows unexpired when the rate drops to zero.
         if ts > self.last_ts {
             self.last_ts = ts;
-            self.src.add(Tuple::heartbeat(ts));
+            if self.src.add(Tuple::heartbeat(ts)).is_err() {
+                return Err(AddError::Inactive(()));
+            }
         }
+        Ok(())
     }
 
     pub fn last_ts(&self) -> EventTime {

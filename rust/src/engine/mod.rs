@@ -4,15 +4,20 @@
 //! * [`vsn`] — `setup(O+, m, n)` with shared σ, shared gates, instance
 //!   pool, and epoch-based state-transfer-free elasticity (§5-§7), split
 //!   into gate construction + worker spawning so engines can share gates;
-//! * [`pipeline`] — DAG/topology layer: stages chained through shared
+//! * [`pipeline`] — linear topology layer: stages chained through shared
 //!   ESGs (stage N's ESG_out ≡ stage N+1's ESG_in), each stage
 //!   independently elastic via its own control plane;
+//! * [`dag`] — true DAG topologies: fan-out (several reader groups on
+//!   one shared ESG_out) and fan-in (one source-slot group per upstream
+//!   on a shared ESG_in), with a reserved control slot + tag per edge so
+//!   every stage stays independently elastic;
 //! * [`sn`] — the shared-nothing comparison engine (§2.2): dedicated
 //!   queues + data duplication + private state;
 //! * [`barrier`], [`epoch`], [`ingress`] — the reconfiguration protocol
 //!   pieces (Alg. 4 L17-21, Alg. 5, Alg. 6).
 
 pub mod barrier;
+pub mod dag;
 pub mod epoch;
 pub mod ingress;
 pub mod pipeline;
@@ -20,6 +25,7 @@ pub mod sn;
 pub mod vsn;
 
 pub use barrier::EpochBarrier;
+pub use dag::{DagBuilder, DagError, NodeHandle};
 pub use epoch::{EpochConfig, EpochState, PendingReconfig};
 pub use ingress::{ControlPlane, StretchIngress};
 pub use pipeline::{ControlInjector, Pipeline, PipelineBuilder, StageHandle};

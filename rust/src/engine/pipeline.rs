@@ -53,11 +53,21 @@ pub struct ControlInjector<P: Payload + Default> {
     src: SourceHandle<Tuple<P>>,
     control: Arc<ControlPlane>,
     last_ts: EventTime,
+    /// Target tag stamped into `Tuple::input`: a shared fan-out gate
+    /// broadcasts control tuples to every consumer stage's readers, and
+    /// only workers whose stage tag matches adopt the spec.
+    tag: u8,
 }
 
 impl<P: Payload + Default> ControlInjector<P> {
     pub fn new(src: SourceHandle<Tuple<P>>, control: Arc<ControlPlane>) -> Self {
-        ControlInjector { src, control, last_ts: TIME_MIN }
+        ControlInjector { src, control, last_ts: TIME_MIN, tag: 0 }
+    }
+
+    /// Address a specific consumer stage of a shared gate (DAG fan-out).
+    pub fn with_tag(mut self, tag: u8) -> Self {
+        self.tag = tag;
+        self
     }
 
     /// Issue (e*, 𝕆*, f_μ*) to the stage. Returns the new epoch id.
@@ -78,6 +88,7 @@ impl<P: Payload + Default> ControlInjector<P> {
         // thread must not deadlock behind backpressure it is responsible
         // for draining further downstream. Bounded by the slot queue.
         let mut t = Tuple::control(ts, spec);
+        t.input = self.tag;
         let mut backoff = Backoff::active();
         loop {
             match self.src.force_add(t) {
@@ -117,8 +128,10 @@ pub trait StageHandle: Send {
     fn shutdown(&mut self);
 }
 
-/// A [`StageHandle`] over a live [`VsnEngine`].
-struct VsnStage<L: OperatorLogic>
+/// A [`StageHandle`] over a live [`VsnEngine`]. Shared with the DAG
+/// builder ([`crate::engine::dag`]), which wires the same engine over
+/// offset slot ranges of shared gates.
+pub(crate) struct VsnStage<L: OperatorLogic>
 where
     L::In: Default,
     L::Out: Default,
@@ -128,6 +141,21 @@ where
     /// `None` for the first stage (control rides the ingress wrappers).
     injector: Option<ControlInjector<L::In>>,
     max: usize,
+}
+
+impl<L: OperatorLogic> VsnStage<L>
+where
+    L::In: Default,
+    L::Out: Default,
+{
+    pub(crate) fn new(
+        name: &'static str,
+        engine: VsnEngine<L>,
+        injector: Option<ControlInjector<L::In>>,
+        max: usize,
+    ) -> Self {
+        VsnStage { name, engine, injector, max }
+    }
 }
 
 impl<L: OperatorLogic> StageHandle for VsnStage<L>
@@ -159,7 +187,7 @@ where
     }
 
     fn in_backlog(&self) -> u64 {
-        self.engine.esg_in.backlog()
+        self.engine.in_backlog()
     }
 
     fn completion_times(&self) -> Vec<(Epoch, f64)> {
@@ -171,17 +199,21 @@ where
     }
 }
 
-/// A running multi-stage pipeline: external ingress into stage 0, egress
-/// readers off the last stage, and a type-erased handle per stage.
+/// A running multi-stage topology — a linear chain from
+/// [`PipelineBuilder`] or a general DAG from
+/// [`crate::engine::dag::DagBuilder`]: external ingress wrappers into the
+/// source stage(s), egress readers off the sink stage(s), and a
+/// type-erased handle per stage (declaration order, upstream first).
 pub struct Pipeline<In: Payload + Default, Out: Payload + Default> {
     /// Shared wall-clock origin of every stage (end-to-end latency).
     pub clock: EngineClock,
-    /// addSTRETCH wrappers over stage 0's ESG_in sources.
+    /// addSTRETCH wrappers over the source stages' ESG_in sources.
     pub ingress: Vec<StretchIngress<In>>,
-    /// Reader ends of the last stage's ESG_out.
+    /// Reader ends of the sink stages' output gates.
     pub egress: Vec<ReaderHandle<Tuple<Out>>>,
-    /// The final output gate (diagnostics: backlog, published count).
-    pub esg_out: Esg<Tuple<Out>>,
+    /// The final output gate of every sink stage (diagnostics: backlog,
+    /// published count). One entry for linear chains.
+    pub out_gates: Vec<Esg<Tuple<Out>>>,
     /// One handle per stage, upstream first.
     pub stages: Vec<Box<dyn StageHandle>>,
 }
@@ -247,10 +279,19 @@ impl<In: Payload + Default, Cur: Payload + Default> PipelineBuilder<In, Cur> {
         let clock2 = clock.clone();
         let opts2 = opts.clone();
         let finish: Finish<In, Cur> = Box::new(move |esg_out, out_sources| {
-            let io = StageIo { esg_in, in_sources, in_readers, esg_out, out_sources };
+            let io = StageIo {
+                esg_in,
+                in_sources,
+                in_readers,
+                esg_out,
+                out_sources,
+                reader_base: 0,
+                source_base: 0,
+                ctrl_tag: 0,
+            };
             let max = opts2.max;
             let (engine, ingress) = VsnEngine::setup_with_gates(def, opts2, io, clock2);
-            (Box::new(VsnStage { name, engine, injector: None, max }) as Box<dyn StageHandle>, ingress)
+            (Box::new(VsnStage::new(name, engine, None, max)) as Box<dyn StageHandle>, ingress)
         });
         PipelineBuilder { clock, stages: Vec::new(), ingress: Vec::new(), finish, pending_opts: opts }
     }
@@ -287,12 +328,15 @@ impl<In: Payload + Default, Cur: Payload + Default> PipelineBuilder<In, Cur> {
                 in_readers: readers,
                 esg_out,
                 out_sources,
+                reader_base: 0,
+                source_base: 0,
+                ctrl_tag: 0,
             };
             let max = opts2.max;
             let (engine, _no_ingress) = VsnEngine::setup_with_gates(def, opts2, io, clock2);
             let injector = ControlInjector::new(ctrl_src, engine.control.clone());
             (
-                Box::new(VsnStage { name, engine, injector: Some(injector), max })
+                Box::new(VsnStage::new(name, engine, Some(injector), max))
                     as Box<dyn StageHandle>,
                 Vec::new(),
             )
@@ -316,6 +360,6 @@ impl<In: Payload + Default, Cur: Payload + Default> PipelineBuilder<In, Cur> {
         stages.push(handle);
         let mut ingress = self.ingress;
         ingress.extend(ingress0);
-        Pipeline { clock: self.clock, ingress, egress: readers, esg_out: gate, stages }
+        Pipeline { clock: self.clock, ingress, egress: readers, out_gates: vec![gate], stages }
     }
 }

@@ -125,6 +125,18 @@ pub struct StageIo<L: OperatorLogic> {
     pub esg_out: Esg<Tuple<L::Out>>,
     /// Worker writer endpoints of ESG_out; exactly `opts.max` of them.
     pub out_sources: Vec<SourceHandle<Tuple<L::Out>>>,
+    /// Gate slot index of `in_readers[0]`. On a shared fan-out gate each
+    /// consumer stage owns a contiguous reader-slot range; instance j of
+    /// this stage reads slot `reader_base + j`. 0 for private gates.
+    pub reader_base: usize,
+    /// Gate slot index of `out_sources[0]`. On a shared fan-in gate each
+    /// upstream stage owns a contiguous source-slot range; instance j of
+    /// this stage writes slot `source_base + j`. 0 for private gates.
+    pub source_base: usize,
+    /// This stage's control tag on its (possibly shared) ESG_in: control
+    /// tuples are broadcast to every reader group of the gate, so workers
+    /// only adopt specs whose `Tuple::input` matches their stage's tag.
+    pub ctrl_tag: u8,
 }
 
 /// The running engine; dropping it shuts the instance threads down.
@@ -138,6 +150,9 @@ pub struct VsnEngine<L: OperatorLogic> {
     state: Arc<SharedState<L::State>>,
     running: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
+    /// This stage's reader-slot range on ESG_in (`backlog_range` group).
+    in_reader_lo: usize,
+    in_reader_hi: usize,
 }
 
 impl<L: OperatorLogic> VsnEngine<L>
@@ -156,7 +171,16 @@ where
             Esg::new(opts.in_gate_config(), opts.upstreams, opts.initial);
         let (esg_out, out_sources, out_readers) =
             Esg::new(opts.out_gate_config(), opts.initial, opts.egress_readers);
-        let io = StageIo { esg_in, in_sources, in_readers, esg_out, out_sources };
+        let io = StageIo {
+            esg_in,
+            in_sources,
+            in_readers,
+            esg_out,
+            out_sources,
+            reader_base: 0,
+            source_base: 0,
+            ctrl_tag: 0,
+        };
         let (engine, ingress) = Self::setup_with_gates(def, opts, io, EngineClock::new());
         (engine, ingress, out_readers)
     }
@@ -190,6 +214,8 @@ where
         let batch = opts.worker_batch.max(1);
         let mut threads = Vec::with_capacity(opts.max);
         for (id, (reader, out)) in io.in_readers.into_iter().zip(io.out_sources).enumerate() {
+            debug_assert_eq!(reader.id(), io.reader_base + id, "reader slot range mismatch");
+            debug_assert_eq!(out.id(), io.source_base + id, "source slot range mismatch");
             let mut worker = Worker {
                 core: OperatorCore::new(def.clone(), id, state.clone(), metrics.clone()),
                 reader,
@@ -202,6 +228,9 @@ where
                 running: running.clone(),
                 cur: epoch.current(),
                 pending: None,
+                reader_base: io.reader_base,
+                source_base: io.source_base,
+                ctrl_tag: io.ctrl_tag,
             };
             threads.push(
                 std::thread::Builder::new()
@@ -229,9 +258,18 @@ where
                 state,
                 running,
                 threads,
+                in_reader_lo: io.reader_base,
+                in_reader_hi: io.reader_base + opts.max,
             },
             ingress,
         )
+    }
+
+    /// Pending backlog on this stage's ESG_in, restricted to the stage's
+    /// own reader-slot group — on a shared fan-out gate a slow *sibling*
+    /// stage's entries are not this stage's pending work.
+    pub fn in_backlog(&self) -> u64 {
+        self.esg_in.backlog_range(self.in_reader_lo, self.in_reader_hi)
     }
 
     /// Current epoch configuration (e, 𝕆, f_μ).
@@ -278,6 +316,14 @@ struct Worker<L: OperatorLogic> {
     running: Arc<AtomicBool>,
     cur: Arc<EpochConfig>,
     pending: Option<PendingReconfig>,
+    /// Gate slot offsets: instance j ⇔ reader slot `reader_base + j` on
+    /// ESG_in and source slot `source_base + j` on ESG_out (shared DAG
+    /// gates place each stage's slots at an offset; 0 for private gates).
+    reader_base: usize,
+    source_base: usize,
+    /// Control tuples are broadcast to every reader group on a shared
+    /// gate; only specs tagged for this stage are adopted.
+    ctrl_tag: u8,
 }
 
 impl<L: OperatorLogic> Worker<L>
@@ -352,8 +398,11 @@ where
     fn step(&mut self, t: Tuple<L::In>, unconsumed: usize) {
         match &t.kind {
             Kind::Control(spec) => {
-                // prepareReconfig (Alg. 6): adopt only newer epochs
-                if spec.epoch > self.cur.epoch {
+                // prepareReconfig (Alg. 6): adopt only newer epochs, and
+                // only specs addressed to THIS stage — a shared fan-out
+                // gate broadcasts every consumer stage's control tuples
+                // to every reader group (`input` carries the target tag).
+                if t.input == self.ctrl_tag && spec.epoch > self.cur.epoch {
                     self.pending = Some(PendingReconfig { spec: spec.clone(), gamma: t.ts });
                 }
             }
@@ -431,23 +480,31 @@ where
         let leaving: Vec<InstanceId> =
             old.iter().copied().filter(|i| !p.spec.instances.contains(i)).collect();
         let mut performed = false;
+        // instance id → gate slot id (shared DAG gates offset each
+        // stage's slot ranges; 0-offset for private gates)
+        let rd = |ids: &[InstanceId]| -> Vec<usize> {
+            ids.iter().map(|i| i + self.reader_base).collect()
+        };
+        let sr = |ids: &[InstanceId]| -> Vec<usize> {
+            ids.iter().map(|i| i + self.source_base).collect()
+        };
         if !joining.is_empty() {
             // provision: TB_out sources first, then TB_in readers
             // (Alg. 4 L19); ESG arbitration lets exactly one succeed.
             // New readers start at the tuple *currently being processed*
             // (Theorem 3): our consume cursor is past the whole batch, so
             // the tuple's own index is cursor − unconsumed − 1.
-            if self.out.gate().add_sources(&joining, t.ts) {
+            if self.out.gate().add_sources(&sr(&joining), t.ts) {
                 let pos = self.reader.cursor().saturating_sub(unconsumed as u64 + 1);
-                self.reader.gate().add_readers_at(&joining, pos);
+                self.reader.gate().add_readers_at(&rd(&joining), pos);
                 performed = true;
             }
         }
         if !leaving.is_empty() {
             // decommission: TB_in readers first, then TB_out sources
             // (Alg. 4 L20).
-            if self.reader.gate().remove_readers(&leaving) {
-                self.out.gate().remove_sources(&leaving);
+            if self.reader.gate().remove_readers(&rd(&leaving)) {
+                self.out.gate().remove_sources(&sr(&leaving));
                 performed = true;
             }
         }

@@ -1,21 +1,26 @@
-//! Experiment harness: drive a live VSN *pipeline* under a rate schedule
-//! with per-stage controllers in the loop, sampling the §8 metrics once
-//! per event second **per stage**.
+//! Experiment harness: drive a live VSN *topology* (linear pipeline or
+//! DAG) under a rate schedule with per-stage controllers in the loop,
+//! sampling the §8 metrics once per event second **per stage**.
 //!
-//! [`run_pipeline`] is the generic loop: it feeds a [`PacedSource`] into
-//! stage 0, drains the last stage's egress, and per tick gives every
-//! stage its scripted reconfigurations and controller decisions
-//! independently. [`run_elastic_join`] — the Q3-Q6 entry point — is a
-//! thin compatibility wrapper that builds a single-stage ScaleJoin
-//! pipeline and reshapes the result.
+//! [`run_pipeline`] is the generic loop: it paces a [`PacedSource`]
+//! round-robin across every ingress wrapper (N ingress sources), drains
+//! every egress reader (M sinks / readers — leaving one undrained would
+//! pin its gate's backlog at capacity and stall the upstream stage), and
+//! per tick gives every stage its scripted reconfigurations and
+//! controller decisions independently; an optional topology-aware
+//! [`DagController`] co-schedules all stages against a global core
+//! budget. Degenerate topologies (no ingress, no egress) are typed
+//! [`HarnessError`]s, not panics. [`run_elastic_join`] — the Q3-Q6 entry
+//! point — is a thin compatibility wrapper that builds a single-stage
+//! ScaleJoin pipeline and reshapes the result.
 //!
 //! Wall-clock pacing is compressible (`time_scale`) so the paper's
 //! 20-minute runs replay in seconds; event time always advances at the
 //! schedule's nominal pace.
 
-use crate::elastic::{Controller, Decision, Observation};
+use crate::elastic::{Controller, DagController, Decision, Observation};
 use crate::engine::pipeline::{Pipeline, PipelineBuilder};
-use crate::engine::{EgressDriver, VsnOptions};
+use crate::engine::{EgressDriver, StretchIngress, VsnOptions};
 use crate::metrics::MetricsSnapshot;
 use crate::time::EventTime;
 use crate::tuple::{Mapper, Payload, Tuple};
@@ -23,6 +28,7 @@ use crate::workloads::nyse::{Trade, TradeStream};
 use crate::workloads::rates::RateSchedule;
 use crate::workloads::scalejoin_bench::{q3_operator, SjGen, SjPayload};
 use crate::workloads::tweets::{Tweet, TweetGen};
+use std::fmt;
 use std::time::{Duration, Instant};
 
 /// A generator the harness can pace against a [`RateSchedule`]: emits
@@ -165,6 +171,13 @@ pub struct PipelineRunConfig {
     /// Max run length handed to the ingress per batched add — the
     /// `[batch] ingress` config knob (bounds gate burstiness).
     pub ingress_batch: usize,
+    /// Optional topology-aware controller: co-schedules EVERY stage's
+    /// parallelism against a global core budget from their `in_backlog`
+    /// (takes priority over nothing — per-stage controllers still run;
+    /// use one or the other per stage in practice).
+    pub dag_controller: Option<DagController>,
+    /// Tick period of the DAG controller in event-time seconds.
+    pub dag_controller_period_s: u32,
 }
 
 impl Default for PipelineRunConfig {
@@ -176,9 +189,41 @@ impl Default for PipelineRunConfig {
             flush_slack_ms: 15_000,
             drain: Duration::from_millis(500),
             ingress_batch: 256,
+            dag_controller: None,
+            dag_controller_period_s: 1,
         }
     }
 }
+
+/// Typed configuration errors from [`run_pipeline`] — degenerate
+/// topologies are reported, not asserted (no panic path).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HarnessError {
+    /// The pipeline exposes no ingress wrapper to feed.
+    NoIngress,
+    /// The pipeline exposes no egress reader: the sink gates would fill
+    /// to capacity and stall their stages with nobody draining them.
+    NoEgress,
+    /// More per-stage configs than stages — the extra scripted
+    /// reconfigurations/controllers would be silently dropped.
+    ExtraStageConfigs { given: usize, stages: usize },
+}
+
+impl fmt::Display for HarnessError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HarnessError::NoIngress => write!(f, "pipeline has no ingress source to drive"),
+            HarnessError::NoEgress => write!(f, "pipeline has no egress reader to drain"),
+            HarnessError::ExtraStageConfigs { given, stages } => write!(
+                f,
+                "{given} stage configs for a {stages}-stage pipeline — \
+                 scripted reconfigs would be dropped"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for HarnessError {}
 
 /// Per-stage outcome of a pipeline run.
 pub struct StageRunStats {
@@ -193,6 +238,11 @@ pub struct PipelineRunResult {
     pub stages: Vec<StageRunStats>,
     /// Data tuples drained at the final egress.
     pub egress_count: u64,
+    /// Tuples the harness had to discard because their ingress wrapper's
+    /// source slot was decommissioned mid-run (the wrapper leaves the
+    /// feed rotation; 0 in healthy runs — nonzero means egress/latency
+    /// stats cover only part of the offered stream).
+    pub ingress_dropped: u64,
     /// Whole-run end-to-end latency (ingest stamp at stage 0 → final
     /// egress) over every stamped output tuple.
     pub latency_p50_us: u64,
@@ -213,37 +263,52 @@ struct StageLoopState {
     samples: Vec<RunSample>,
 }
 
-/// Drive a live, threaded VSN pipeline: pace `source` through stage 0
-/// according to the schedule, drain the final egress, tick every stage's
-/// manual/controller reconfigurations independently, and sample per-stage
-/// metrics once per event second.
+/// Drive a live, threaded VSN topology: pace `source` round-robin
+/// across every ingress wrapper, drain every egress reader, tick every
+/// stage's manual/controller reconfigurations (and the optional global
+/// [`DagController`]) independently, and sample per-stage metrics once
+/// per event second.
+///
+/// Every ingress wrapper is fed every tick (an idle wrapper's gate clock
+/// would hold back readiness) and every egress reader is drained (an
+/// undrained reader would pin its gate's backlog at capacity and stall
+/// the sink stage) — that is what makes N-ingress/M-egress DAG shapes
+/// safe where the old single-path loop had to panic.
 pub fn run_pipeline<In, Out>(
     mut pipeline: Pipeline<In, Out>,
-    cfg: PipelineRunConfig,
+    mut cfg: PipelineRunConfig,
     source: &mut dyn PacedSource<In>,
-) -> PipelineRunResult
+) -> Result<PipelineRunResult, HarnessError>
 where
     In: Payload + Default,
     Out: Payload + Default,
 {
-    // A dropped-but-active ESG source would gate readiness forever, so
-    // the loop only supports the single-upstream shape (upstreams = 1);
-    // likewise a dropped-but-active egress reader would pin the final
-    // gate's backlog at capacity and stall the last stage.
-    assert_eq!(pipeline.ingress.len(), 1, "run_pipeline drives exactly one ingress source");
-    assert_eq!(pipeline.egress.len(), 1, "run_pipeline drains exactly one egress reader");
     let clock = pipeline.clock.clone();
-    let mut ing = pipeline.ingress.remove(0);
-    let mut egress = EgressDriver::new(pipeline.egress.remove(0), clock.clone());
+    let mut ings: Vec<StretchIngress<In>> = std::mem::take(&mut pipeline.ingress);
+    let n_ing = ings.len();
+    if n_ing == 0 {
+        return Err(HarnessError::NoIngress);
+    }
+    if pipeline.egress.is_empty() {
+        return Err(HarnessError::NoEgress);
+    }
+    let mut egress: Vec<EgressDriver<Tuple<Out>>> = std::mem::take(&mut pipeline.egress)
+        .into_iter()
+        .map(|r| EgressDriver::new(r, clock.clone()))
+        .collect();
+    // all drivers record into ONE histogram pair: end-to-end latency is
+    // a property of the whole topology, whichever sink a tuple exits
+    let (lat, lat_total) = (egress[0].latency_us.clone(), egress[0].latency_total_us.clone());
+    for d in egress.iter_mut().skip(1) {
+        d.latency_us = lat.clone();
+        d.latency_total_us = lat_total.clone();
+    }
 
     let n_stages = pipeline.depth();
-    assert!(
-        cfg.stages.len() <= n_stages,
-        "{} stage configs for a {}-stage pipeline — scripted reconfigs would be dropped",
-        cfg.stages.len(),
-        n_stages
-    );
-    let mut stage_cfgs: Vec<StageRunConfig> = cfg.stages.into_iter().collect();
+    if cfg.stages.len() > n_stages {
+        return Err(HarnessError::ExtraStageConfigs { given: cfg.stages.len(), stages: n_stages });
+    }
+    let mut stage_cfgs: Vec<StageRunConfig> = std::mem::take(&mut cfg.stages);
     while stage_cfgs.len() < n_stages {
         stage_cfgs.push(StageRunConfig::default());
     }
@@ -269,8 +334,17 @@ where
     let duration_s = cfg.schedule.duration_s();
     let mut pending_event_tuples = 0.0f64;
     let mut event_ms_total: f64 = 0.0;
-    // per-tick feed run, handed to the gate via one batched add (§Perf)
-    let mut feed_buf: Vec<Tuple<In>> = Vec::new();
+    // per-tick feed runs, one per ingress wrapper (round-robin split so
+    // EVERY wrapper's gate clock advances every tick), each handed over
+    // via one batched add (§Perf). A wrapper whose slot is decommissioned
+    // under us (`Err(Inactive)`) leaves the rotation; its residual is
+    // counted in `ingress_dropped`, never silently discarded.
+    let mut feed_bufs: Vec<Vec<Tuple<In>>> = (0..n_ing).map(|_| Vec::new()).collect();
+    let mut alive: Vec<bool> = vec![true; n_ing];
+    let mut n_alive = n_ing;
+    let mut ingress_dropped = 0u64;
+    let mut rr = 0usize;
+    let mut next_dag_ctl_s: u32 = cfg.dag_controller_period_s.max(1);
     let t0 = Instant::now();
 
     // wall tick: 20 ms of *wall* time per loop iteration
@@ -295,19 +369,42 @@ where
             let n = pending_event_tuples.floor() as usize;
             pending_event_tuples -= n as f64;
             event_ms_total += tick_event_s * 1e3;
-            debug_assert!(feed_buf.is_empty());
             let ingress_batch = cfg.ingress_batch.max(1);
             for _ in 0..n {
                 let mut t = source.next();
                 t.ingest_us = clock.now_us();
-                feed_buf.push(t);
-                if feed_buf.len() >= ingress_batch {
-                    ing.add_batch(&mut feed_buf);
+                if n_alive == 0 {
+                    ingress_dropped += 1; // every wrapper decommissioned
+                    continue;
+                }
+                while !alive[rr] {
+                    rr = (rr + 1) % n_ing;
+                }
+                feed_bufs[rr].push(t);
+                if feed_bufs[rr].len() >= ingress_batch
+                    && ings[rr].add_batch(&mut feed_bufs[rr]).is_err()
+                {
+                    // decommissioned mid-run: retire the wrapper from the
+                    // rotation and account for the lost residual
+                    ingress_dropped += feed_bufs[rr].len() as u64;
+                    feed_bufs[rr].clear();
+                    alive[rr] = false;
+                    n_alive -= 1;
+                }
+                rr = (rr + 1) % n_ing;
+            }
+            for (i, buf) in feed_bufs.iter_mut().enumerate() {
+                if alive[i] && ings[i].add_batch(buf).is_err() {
+                    ingress_dropped += buf.len() as u64;
+                    buf.clear();
+                    alive[i] = false;
+                    n_alive -= 1;
                 }
             }
-            ing.add_batch(&mut feed_buf);
         }
-        egress.poll();
+        for d in egress.iter_mut() {
+            d.poll();
+        }
 
         // per-event-second sampling, every stage
         while (next_sample_s as f64) <= event_s && next_sample_s <= duration_s {
@@ -344,9 +441,12 @@ where
                 st.last_arrival_tps = arrival_tps;
                 st.samples.push(RunSample {
                     t_s: next_sample_s,
-                    // stage 0 is offered the schedule; downstream stages
-                    // are offered whatever their upstream emits
-                    offered_tps: if k == 0 {
+                    // With ONE ingress wrapper, stage 0 is offered the
+                    // whole schedule. With several wrappers the harness
+                    // cannot map wrappers to source stages (a DAG may
+                    // have several), so every stage reports its measured
+                    // arrival rate instead of a guessed split.
+                    offered_tps: if k == 0 && n_ing == 1 {
                         cfg.schedule.rate_at(next_sample_s - 1)
                     } else {
                         arrival_tps
@@ -355,8 +455,8 @@ where
                     in_tps: arrival_tps,
                     out_tps: rates.out_tps / cfg.time_scale,
                     cmp_per_s: rates.cmp_per_s / cfg.time_scale,
-                    latency_p50_us: egress.latency_us.p50(),
-                    latency_mean_us: egress.latency_us.mean(),
+                    latency_p50_us: lat.p50(),
+                    latency_mean_us: lat.mean(),
                     threads: active.len(),
                     backlog: stage.in_backlog(),
                     load_cv_pct: cv,
@@ -365,7 +465,7 @@ where
             }
             // end-to-end latency is a property of the whole pipeline; the
             // per-second histogram resets once all stages sampled it
-            egress.latency_us.reset();
+            lat.reset();
             next_sample_s += 1;
         }
 
@@ -388,7 +488,15 @@ where
                     let stage = &mut pipeline.stages[k];
                     let active = stage.active_instances();
                     let obs = Observation {
-                        in_rate: if k == 0 { cur_rate } else { st.last_arrival_tps },
+                        // the schedule rate only describes stage 0 when a
+                        // single wrapper feeds it the whole stream; with
+                        // several wrappers (possibly several source
+                        // stages) use the measured arrival rate
+                        in_rate: if k == 0 && n_ing == 1 {
+                            cur_rate
+                        } else {
+                            st.last_arrival_tps
+                        },
                         cmp_per_s: st.samples.last().map(|s| s.cmp_per_s).unwrap_or(0.0),
                         backlog: stage.in_backlog(),
                         dt: period as f64,
@@ -398,6 +506,36 @@ where
                     if let Decision::Reconfigure(set) = ctl.tick(&obs) {
                         let mapper = Mapper::over(set.clone());
                         stage.reconfigure(set, mapper);
+                    }
+                }
+            }
+        }
+        // global co-scheduling tick: one observation per stage, one
+        // decision wave against the shared core budget
+        if let Some(dc) = cfg.dag_controller.as_mut() {
+            let period = cfg.dag_controller_period_s.max(1);
+            if (next_dag_ctl_s as f64) <= event_s {
+                next_dag_ctl_s += period;
+                let obs: Vec<Observation> = loops
+                    .iter()
+                    .enumerate()
+                    .map(|(k, st)| Observation {
+                        in_rate: if k == 0 && n_ing == 1 {
+                            cur_rate
+                        } else {
+                            st.last_arrival_tps
+                        },
+                        cmp_per_s: st.samples.last().map(|s| s.cmp_per_s).unwrap_or(0.0),
+                        backlog: pipeline.stages[k].in_backlog(),
+                        dt: period as f64,
+                        active: pipeline.stages[k].active_instances(),
+                        max: pipeline.stages[k].max_parallelism(),
+                    })
+                    .collect();
+                for (k, d) in dc.tick(&obs).into_iter().enumerate() {
+                    if let Decision::Reconfigure(set) = d {
+                        let mapper = Mapper::over(set.clone());
+                        pipeline.stages[k].reconfigure(set, mapper);
                     }
                 }
             }
@@ -412,18 +550,28 @@ where
         }
     }
 
-    // flush: end-of-stream heartbeat (workers forward it stage to stage),
-    // then drain remaining outputs briefly
-    ing.heartbeat(event_ms_total as EventTime + cfg.flush_slack_ms);
+    // flush: end-of-stream heartbeat on EVERY ingress wrapper (workers
+    // forward it stage to stage; a silent wrapper would hold back every
+    // downstream watermark), then drain remaining outputs briefly
+    let horizon = event_ms_total as EventTime + cfg.flush_slack_ms;
+    for (i, ing) in ings.iter_mut().enumerate() {
+        if alive[i] {
+            let _ = ing.heartbeat(horizon); // heartbeats carry no data
+        }
+    }
     let drain_until = Instant::now() + cfg.drain;
     while Instant::now() < drain_until {
-        if egress.poll() == 0 {
+        let mut polled = 0;
+        for d in egress.iter_mut() {
+            polled += d.poll();
+        }
+        if polled == 0 {
             std::thread::sleep(Duration::from_millis(2));
         }
     }
-    let latency_p50_us = egress.latency_total_us.p50();
-    let latency_mean_us = egress.latency_total_us.mean();
-    let egress_count = egress.count;
+    let latency_p50_us = lat_total.p50();
+    let latency_mean_us = lat_total.mean();
+    let egress_count = egress.iter().map(|d| d.count).sum();
     let stages = loops
         .into_iter()
         .enumerate()
@@ -434,7 +582,13 @@ where
         })
         .collect();
     pipeline.shutdown();
-    PipelineRunResult { stages, egress_count, latency_p50_us, latency_mean_us }
+    Ok(PipelineRunResult {
+        stages,
+        egress_count,
+        ingress_dropped,
+        latency_p50_us,
+        latency_mean_us,
+    })
 }
 
 /// Run a live, threaded VSN ScaleJoin experiment — the Q3-Q6 entry point,
@@ -466,8 +620,12 @@ pub fn run_elastic_join(cfg: JoinRunConfig) -> RunResult {
         flush_slack_ms: cfg.ws_ms + 10_000,
         drain: Duration::from_millis(500),
         ingress_batch: cfg.ingress_batch.max(1),
+        ..Default::default()
     };
-    let r = run_pipeline(pipeline, pcfg, &mut gen);
+    // the builder above wires exactly one ingress and one egress, so the
+    // typed degenerate-topology errors cannot occur here
+    let r = run_pipeline(pipeline, pcfg, &mut gen)
+        .expect("single-stage pipeline always has one ingress and one egress");
     let stage0 = r.stages.into_iter().next().expect("single-stage pipeline");
     RunResult { samples: stage0.samples, reconfigs: stage0.reconfigs, egress_count: r.egress_count }
 }
@@ -525,6 +683,35 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_topologies_are_typed_errors_not_panics() {
+        // no egress reader: the sink gate would fill with nobody draining
+        let pipeline = PipelineBuilder::new(
+            q3_operator(1_000, 8),
+            VsnOptions { initial: 1, max: 2, egress_readers: 0, ..Default::default() },
+        )
+        .build();
+        let mut gen = SjGen::new(1, 1.0);
+        match run_pipeline(pipeline, PipelineRunConfig::default(), &mut gen) {
+            Err(HarnessError::NoEgress) => {}
+            other => panic!("expected NoEgress, got {:?}", other.map(|_| ()).err()),
+        }
+        // more stage configs than stages: scripted reconfigs would drop
+        let pipeline = PipelineBuilder::new(
+            q3_operator(1_000, 8),
+            VsnOptions { initial: 1, max: 2, ..Default::default() },
+        )
+        .build();
+        let cfg = PipelineRunConfig {
+            stages: vec![StageRunConfig::default(), StageRunConfig::default()],
+            ..Default::default()
+        };
+        match run_pipeline(pipeline, cfg, &mut gen) {
+            Err(HarnessError::ExtraStageConfigs { given: 2, stages: 1 }) => {}
+            other => panic!("expected ExtraStageConfigs, got {:?}", other.map(|_| ()).err()),
+        }
+    }
+
+    #[test]
     fn pipeline_harness_runs_two_stages_with_manual_reconfigs() {
         // NYSE fan-out → hedge join, reconfiguring EACH stage once
         let pipeline = PipelineBuilder::new(
@@ -557,7 +744,8 @@ mod tests {
                 ..Default::default()
             },
             &mut source,
-        );
+        )
+        .unwrap();
         assert_eq!(r.stages.len(), 2);
         assert_eq!(r.stages[0].samples.len(), 4);
         assert_eq!(r.stages[1].samples.len(), 4);

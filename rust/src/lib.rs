@@ -16,14 +16,20 @@
 //!   operator library (Map, Aggregate, Join, ScaleJoin, …), including
 //!   Map-as-elastic-stage ([`operator::map::MapStageLogic`]).
 //! * [`engine`] — the SN baseline engine, the VSN (STRETCH) engine with
-//!   epoch-based, state-transfer-free elasticity (§5, §7), and the
-//!   multi-stage pipeline layer ([`engine::pipeline`]); all hot loops
-//!   move tuples in runs (tunable via [`config::BatchTuning`] /
-//!   `VsnOptions::worker_batch`), with control tuples still cutting
-//!   batches so reconfiguration latency is batching-independent.
-//! * [`elastic`] — reconfiguration controllers (reactive + proactive).
-//! * [`harness`] — rate-scheduled pipeline run loop with per-stage
-//!   controllers and per-stage metrics sampling.
+//!   epoch-based, state-transfer-free elasticity (§5, §7), the linear
+//!   pipeline layer ([`engine::pipeline`]) and the true DAG layer
+//!   ([`engine::dag`]: fan-out = reader groups, fan-in = source-slot
+//!   groups, per-edge control slots); all hot loops move tuples in runs
+//!   (tunable via [`config::BatchTuning`] / `VsnOptions::worker_batch`),
+//!   with control tuples still cutting batches so reconfiguration
+//!   latency is batching-independent.
+//! * [`elastic`] — reconfiguration controllers (reactive + proactive
+//!   per-stage, plus the topology-aware budgeted
+//!   [`elastic::DagController`]).
+//! * [`harness`] — rate-scheduled topology run loop (N ingress sources,
+//!   M egress readers — degenerate shapes are typed errors, not panics)
+//!   with per-stage controllers, an optional global DAG controller, and
+//!   per-stage metrics sampling.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled kernels
 //!   (stubbed unless built with `--features pjrt`).
 //! * [`workloads`] — generators for every evaluation workload (§8), plus
@@ -35,20 +41,30 @@
 //!   `BENCH_<name>.json` (throughput, p50/p99 latency, reconfiguration
 //!   times) so the perf trajectory is a diffable record.
 //!
-//! ## Pipelines
-//! Applications compose as DAG chains `source → stage₁ → … → stageₖ →
-//! sink` via [`engine::pipeline::PipelineBuilder`]: typed
-//! `stage(OperatorDef, VsnOptions)` chaining where stage N's ESG_out
-//! **is** stage N+1's ESG_in — one shared gate, zero-copy hand-off, no
-//! re-ingestion. Watermarks propagate through the gate's source clocks
-//! (Lemma 2) plus forwarded heartbeat entries; each stage keeps its own
-//! instance pool and [`engine::ControlPlane`], so stages scale
-//! independently at runtime with no state transfer (first stage: control
-//! tuples ride the ingress wrappers, Alg. 5; later stages: a reserved
-//! control slot on the shared gate, [`engine::pipeline::ControlInjector`]).
-//! `examples/dag_pipeline.rs` runs a two-stage tokenize → wordcount
-//! pipeline, reconfigures both stages mid-run, and checks the output
-//! against a sequential reference.
+//! ## Topologies
+//! Linear chains compose via [`engine::pipeline::PipelineBuilder`]:
+//! typed `stage(OperatorDef, VsnOptions)` chaining where stage N's
+//! ESG_out **is** stage N+1's ESG_in — one shared gate, zero-copy
+//! hand-off, no re-ingestion. True DAGs compose via
+//! [`engine::dag::DagBuilder`] (`source`/`node`/`build`): a stage fans
+//! OUT by every downstream registering a reader group on its shared
+//! ESG_out (exactly-once per group, no data duplication), and fans IN by
+//! owning one ESG_in with a source-slot group per upstream (the
+//! cooperative merge composes watermarks across branches). Watermarks
+//! propagate through the gate's source clocks (Lemma 2) plus forwarded
+//! heartbeat entries; each stage keeps its own instance pool and
+//! [`engine::ControlPlane`], so stages scale independently at runtime
+//! with no state transfer (source stages: control tuples ride the
+//! ingress wrappers, Alg. 5; downstream stages: a reserved per-edge
+//! control slot + tag on the shared gate,
+//! [`engine::pipeline::ControlInjector`]). `examples/dag_pipeline.rs`
+//! runs a two-stage tokenize → wordcount chain;
+//! `examples/diamond_dag.rs` runs the diamond
+//! (filter → L-leg ∥ R-leg → hedge join), reconfigures all four stages
+//! mid-run, and checks exact equivalence against a sequential
+//! reference; `bench_q7_dag` drives the same diamond under a rate step
+//! with [`elastic::DagController`] dividing a global core budget by
+//! per-stage backlog.
 //!
 //! ## Quickstart
 //! See `examples/quickstart.rs`: build an `O+`, wrap it in a VSN engine,

@@ -198,9 +198,20 @@ impl<T: GateEntry> Inner<T> {
 
     /// Published-but-unconsumed entries w.r.t. the slowest active reader.
     fn backlog(&self) -> u64 {
+        self.backlog_range(0, self.readers.len())
+    }
+
+    /// [`backlog`](Self::backlog) restricted to reader slots `lo..hi` —
+    /// the per-consumer-group flow signal on shared fan-out gates, where
+    /// each downstream stage owns a contiguous reader-slot range.
+    fn backlog_range(&self, lo: usize, hi: usize) -> u64 {
+        let (lo, hi) = (lo.min(self.readers.len()), hi.min(self.readers.len()));
+        if lo >= hi {
+            return 0; // empty or inverted range: no readers, no backlog
+        }
         let ready = self.log.ready();
         let mut min_cur = u64::MAX;
-        for r in &self.readers {
+        for r in &self.readers[lo..hi] {
             if r.active.load(Ordering::Acquire) {
                 min_cur = min_cur.min(r.cursor.load(Ordering::Acquire));
             }
@@ -500,6 +511,14 @@ impl<T: GateEntry> Esg<T> {
         self.inner.backlog()
     }
 
+    /// Backlog w.r.t. the slowest active reader in slots `lo..hi` only.
+    /// On a shared fan-out gate each downstream stage owns a contiguous
+    /// reader range; this is that stage's `in_backlog` (a slow sibling
+    /// stage holds log entries but is not *this* stage's pending work).
+    pub fn backlog_range(&self, lo: usize, hi: usize) -> u64 {
+        self.inner.backlog_range(lo, hi)
+    }
+
     /// Current readiness bound: min over active sources of their handle
     /// clocks (+∞ when no source is active). Pipeline control injection
     /// stamps control tuples with this — the Lemma-3-safe "now" of the
@@ -605,18 +624,22 @@ impl<T: GateEntry> SourceHandle<T> {
     }
 
     /// Blocking [`try_add_batch`](Self::try_add_batch): backoff until the
-    /// whole run is in (generator-side flow control). Panics if the
-    /// source slot is inactive, like [`add`](Self::add).
-    pub fn add_batch(&mut self, run: &mut Vec<T>) {
+    /// whole run is in (generator-side flow control). If the source slot
+    /// is decommissioned mid-drain, returns `Err(Inactive)` with the
+    /// unconsumed residual still in `run` — the caller decides whether to
+    /// re-route it (e.g. through another slot) or drop it deliberately;
+    /// the tuples are never silently lost.
+    pub fn add_batch(&mut self, run: &mut Vec<T>) -> Result<(), AddError<()>> {
         let mut backoff = Backoff::active();
         while !run.is_empty() {
             match self.try_add_batch(run) {
                 Ok(0) => backoff.snooze(),
                 Ok(_) => backoff.reset(),
-                Err(AddError::Inactive(_)) => panic!("add_batch on inactive source {}", self.id),
+                Err(AddError::Inactive(())) => return Err(AddError::Inactive(())),
                 Err(AddError::Full(_)) => unreachable!("try_add_batch signals Full as Ok(0)"),
             }
         }
+        Ok(())
     }
 
     /// Like [`try_add`](Self::try_add) but exempt from the gate's
@@ -644,13 +667,16 @@ impl<T: GateEntry> SourceHandle<T> {
         Ok(())
     }
 
-    /// Blocking add with backoff (generator-side flow control).
-    pub fn add(&mut self, mut t: T) {
+    /// Blocking add with backoff (generator-side flow control). If the
+    /// source slot is decommissioned before the tuple is accepted, the
+    /// tuple is handed back via `Err(Inactive(t))` instead of aborting —
+    /// the caller re-routes or drops it deliberately.
+    pub fn add(&mut self, mut t: T) -> Result<(), AddError<T>> {
         let mut backoff = Backoff::active();
         loop {
             match self.try_add(t) {
-                Ok(()) => return,
-                Err(AddError::Inactive(_)) => panic!("add on inactive source {}", self.id),
+                Ok(()) => return Ok(()),
+                Err(AddError::Inactive(back)) => return Err(AddError::Inactive(back)),
                 Err(AddError::Full(back)) => {
                     t = back;
                     backoff.snooze();
@@ -775,7 +801,7 @@ mod tests {
     fn single_source_single_reader() {
         let (_g, mut src, mut rdr) = gate(1, 1);
         for ts in [1i64, 2, 5] {
-            src[0].add(Tuple::data(ts, ts as u64));
+            src[0].add(Tuple::data(ts, ts as u64)).unwrap();
         }
         // all ready (bound = 5): expect 1, 2, 5
         let out: Vec<i64> = std::iter::from_fn(|| rdr[0].get()).map(|t| t.ts).collect();
@@ -785,11 +811,11 @@ mod tests {
     #[test]
     fn readiness_gated_by_slowest_source() {
         let (_g, mut src, mut rdr) = gate(2, 1);
-        src[0].add(Tuple::data(10, 0));
-        src[0].add(Tuple::data(20, 0));
+        src[0].add(Tuple::data(10, 0)).unwrap();
+        src[0].add(Tuple::data(20, 0)).unwrap();
         // source 1 silent: nothing ready
         assert!(rdr[0].get().is_none());
-        src[1].add(Tuple::data(15, 1));
+        src[1].add(Tuple::data(15, 1)).unwrap();
         // bound = min(20, 15) = 15: tuples 10 and 15 ready
         assert_eq!(rdr[0].get().unwrap().ts, 10);
         assert_eq!(rdr[0].get().unwrap().ts, 15);
@@ -800,7 +826,7 @@ mod tests {
     fn all_readers_see_all_tuples_same_order() {
         let (_g, mut src, mut rdr) = gate(2, 3);
         for i in 0..50i64 {
-            src[(i % 2) as usize].add(Tuple::data(i, i as u64));
+            src[(i % 2) as usize].add(Tuple::data(i, i as u64)).unwrap();
         }
         // bound = min(48, 49) = 48 → 49 entries ready
         let seqs: Vec<Vec<u64>> = rdr
@@ -828,7 +854,7 @@ mod tests {
                     let mut ts = 0i64;
                     for _ in 0..n {
                         ts += rng.gen_range(3) as i64;
-                        s.add(Tuple::data(ts, s.id() as u64));
+                        s.add(Tuple::data(ts, s.id() as u64)).unwrap();
                     }
                     s.advance_clock(i64::MAX / 8);
                 })
@@ -857,7 +883,7 @@ mod tests {
     fn add_readers_positions_at_invokers_current_tuple() {
         let (g, mut src, mut rdr) = gate(1, 1);
         for ts in 0..10i64 {
-            src[0].add(Tuple::data(ts, ts as u64));
+            src[0].add(Tuple::data(ts, ts as u64)).unwrap();
         }
         // reader 0 consumes 5 (last retrieved: ts=4, "currently processing")
         for _ in 0..5 {
@@ -885,21 +911,21 @@ mod tests {
     #[test]
     fn add_sources_floor_allows_progress() {
         let (g, mut src, mut rdr) = gate(1, 1);
-        src[0].add(Tuple::data(100, 0));
+        src[0].add(Tuple::data(100, 0)).unwrap();
         // activate source 1 with floor 100 (Lemma 3 bound)
         assert!(g.add_sources(&[1], 100));
         // bound = min(100, 100) = 100 → tuple ready without source 1 adding
         assert_eq!(rdr[0].get().unwrap().ts, 100);
         // source 1 may now add from ts >= 100
-        src[1].add(Tuple::data(101, 1));
-        src[0].add(Tuple::data(102, 0));
+        src[1].add(Tuple::data(101, 1)).unwrap();
+        src[0].add(Tuple::data(102, 0)).unwrap();
         assert_eq!(rdr[0].get().unwrap().ts, 101);
     }
 
     #[test]
     fn remove_sources_unblocks_readiness() {
         let (g, mut src, mut rdr) = gate(2, 1);
-        src[0].add(Tuple::data(10, 0));
+        src[0].add(Tuple::data(10, 0)).unwrap();
         assert!(rdr[0].get().is_none()); // source 1 gating
         assert!(g.remove_sources(&[1]));
         // flush semantics: source 1 no longer gates
@@ -909,8 +935,8 @@ mod tests {
     #[test]
     fn removed_source_pending_still_drains() {
         let (g, mut src, mut rdr) = gate(2, 1);
-        src[0].add(Tuple::data(5, 0));
-        src[1].add(Tuple::data(3, 1));
+        src[0].add(Tuple::data(5, 0)).unwrap();
+        src[1].add(Tuple::data(3, 1)).unwrap();
         assert!(g.remove_sources(&[1])); // its queued ts=3 must still come out first
         let a = rdr[0].get().unwrap();
         let b = rdr[0].get().unwrap();
@@ -920,8 +946,8 @@ mod tests {
     #[test]
     fn inactive_reader_gets_none() {
         let (_g, mut src, mut rdr) = gate(1, 1);
-        src[0].add(Tuple::data(1, 0));
-        src[0].add(Tuple::data(2, 0));
+        src[0].add(Tuple::data(1, 0)).unwrap();
+        src[0].add(Tuple::data(2, 0)).unwrap();
         assert!(rdr[1].get().is_none()); // slot 1 inactive (pool)
         assert_eq!(rdr[0].get().unwrap().ts, 1);
     }
@@ -951,7 +977,7 @@ mod tests {
     #[test]
     fn heartbeat_clock_advance() {
         let (_g, mut src, mut rdr) = gate(2, 1);
-        src[0].add(Tuple::data(10, 0));
+        src[0].add(Tuple::data(10, 0)).unwrap();
         assert!(rdr[0].get().is_none());
         // source 1 has no data but advances its clock (heartbeat)
         src[1].advance_clock(50);
@@ -962,7 +988,7 @@ mod tests {
     fn get_batch_drains_in_order() {
         let (_g, mut src, mut rdr) = gate(1, 1);
         for ts in 0..100i64 {
-            src[0].add(Tuple::data(ts, ts as u64));
+            src[0].add(Tuple::data(ts, ts as u64)).unwrap();
         }
         let mut buf: Vec<T> = Vec::new();
         assert_eq!(rdr[0].get_batch(&mut buf, 64), 64);
@@ -972,7 +998,7 @@ mod tests {
         assert_eq!(buf.last().unwrap().ts, 99);
         assert_eq!(rdr[0].get_batch(&mut buf, 64), 0);
         // interleaves with get()
-        src[0].add(Tuple::data(100, 100));
+        src[0].add(Tuple::data(100, 100)).unwrap();
         assert_eq!(rdr[0].get().unwrap().ts, 100);
     }
 
@@ -980,7 +1006,7 @@ mod tests {
     fn get_batch_respects_max_and_cursor() {
         let (_g, mut src, mut rdr) = gate(1, 2);
         for ts in 0..10i64 {
-            src[0].add(Tuple::data(ts, ts as u64));
+            src[0].add(Tuple::data(ts, ts as u64)).unwrap();
         }
         let mut buf: Vec<T> = Vec::new();
         assert_eq!(rdr[0].get_batch(&mut buf, 4), 4);
@@ -993,7 +1019,7 @@ mod tests {
     fn add_readers_at_seeds_inside_a_batch() {
         let (g, mut src, mut rdr) = gate(1, 1);
         for ts in 0..10i64 {
-            src[0].add(Tuple::data(ts, ts as u64));
+            src[0].add(Tuple::data(ts, ts as u64)).unwrap();
         }
         let mut buf: Vec<T> = Vec::new();
         assert_eq!(rdr[0].get_batch(&mut buf, 8), 8); // cursor = 8
@@ -1011,8 +1037,8 @@ mod tests {
         // interleaved sorted runs from two sources
         let mut r0: Vec<T> = [1i64, 3, 5, 7, 9].iter().map(|&ts| Tuple::data(ts, 0)).collect();
         let mut r1: Vec<T> = [2i64, 4, 6, 8, 10].iter().map(|&ts| Tuple::data(ts, 1)).collect();
-        src[0].add_batch(&mut r0);
-        src[1].add_batch(&mut r1);
+        src[0].add_batch(&mut r0).unwrap();
+        src[1].add_batch(&mut r1).unwrap();
         assert!(r0.is_empty() && r1.is_empty());
         let mut buf: Vec<T> = Vec::new();
         // bound = min(9, 10) = 9 → 9 entries ready
@@ -1048,7 +1074,7 @@ mod tests {
         let (_g, mut src, mut rdr) = gate(1, 1);
         let n = 5_000i64; // > MERGE_RUN_MAX and > MERGE_CHUNK
         let mut run: Vec<T> = (0..n).map(|ts| Tuple::data(ts, ts as u64)).collect();
-        src[0].add_batch(&mut run);
+        src[0].add_batch(&mut run).unwrap();
         let mut buf: Vec<T> = Vec::new();
         while rdr[0].get_batch(&mut buf, 512) > 0 {}
         assert_eq!(buf.len(), n as usize);
@@ -1065,6 +1091,56 @@ mod tests {
         // clamps low and high
         assert_eq!(EsgConfig::for_gate(64, 1, 64).source_queue, 64);
         assert_eq!(EsgConfig::for_gate(1, 1, 1 << 20).source_queue, 1 << 14);
+    }
+
+    #[test]
+    fn decommission_mid_batch_returns_residual_run() {
+        // capacity 8 with an idle reader: only a prefix of the run fits,
+        // so the source is decommissioned *mid-drain* with a residual
+        let (g, mut src, _rdr): (Esg<T>, _, Vec<ReaderHandle<T>>) = Esg::new(
+            EsgConfig { max_sources: 2, max_readers: 1, capacity: 8, source_queue: 8192 },
+            2,
+            1,
+        );
+        let mut run: Vec<T> = (0..100i64).map(|ts| Tuple::data(ts, ts as u64)).collect();
+        let accepted = src[0].try_add_batch(&mut run).unwrap();
+        assert!(accepted > 0 && accepted < 100, "accepted={accepted}");
+        assert!(g.remove_sources(&[0]));
+        // the residual run comes back instead of aborting the process
+        assert_eq!(src[0].try_add_batch(&mut run), Err(AddError::Inactive(())));
+        assert_eq!(run.len(), 100 - accepted, "residual run lost");
+        assert_eq!(run[0].ts, accepted as i64, "residual must start at the unconsumed prefix");
+        // the blocking wrapper surfaces the same typed error, residual intact
+        assert_eq!(src[0].add_batch(&mut run), Err(AddError::Inactive(())));
+        assert_eq!(run.len(), 100 - accepted);
+        // per-tuple path: the tuple itself is handed back
+        assert!(g.remove_sources(&[1]));
+        match src[1].add(Tuple::data(500, 7)) {
+            Err(AddError::Inactive(t)) => assert_eq!((t.ts, t.payload), (500, 7)),
+            other => panic!("expected Inactive with the tuple back, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backlog_range_isolates_reader_groups() {
+        // two "stages" on one gate: group A = reader 0, group B = reader 1
+        let (g, mut src, mut rdr) = gate(1, 2);
+        for ts in 0..10i64 {
+            src[0].add(Tuple::data(ts, ts as u64)).unwrap();
+        }
+        // both groups start with the full backlog
+        assert_eq!(g.backlog_range(0, 1), g.backlog_range(1, 2));
+        let full = g.backlog_range(0, 1);
+        assert!(full >= 9, "expected most entries published, got {full}");
+        // group A drains; group B still holds its backlog
+        let mut buf: Vec<T> = Vec::new();
+        while rdr[0].get_batch(&mut buf, 64) > 0 {}
+        assert_eq!(g.backlog_range(0, 1), 0);
+        assert_eq!(g.backlog_range(1, 2), full);
+        // whole-gate backlog is the max over groups (slowest reader)
+        assert_eq!(g.backlog(), full);
+        // a range with no active readers reports zero
+        assert_eq!(g.backlog_range(3, 4), 0);
     }
 
     #[test]
@@ -1093,7 +1169,7 @@ mod tests {
         let n = 30_000i64;
         let producer = std::thread::spawn(move || {
             for ts in 0..n {
-                src[0].add(Tuple::data(ts, ts as u64));
+                src[0].add(Tuple::data(ts, ts as u64)).unwrap();
             }
             src[0].advance_clock(i64::MAX / 8);
         });

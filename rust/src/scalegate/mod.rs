@@ -29,8 +29,8 @@ mod tests {
         let (_g, mut src, mut rdr) = scale_gate::<Tuple<u32>>(2, 2, 1024);
         assert_eq!(src.len(), 2);
         assert_eq!(rdr.len(), 2);
-        src[0].add(Tuple::data(1, 0));
-        src[1].add(Tuple::data(2, 0));
+        src[0].add(Tuple::data(1, 0)).unwrap();
+        src[1].add(Tuple::data(2, 0)).unwrap();
         assert_eq!(rdr[0].get().unwrap().ts, 1);
         assert_eq!(rdr[1].get().unwrap().ts, 1);
     }

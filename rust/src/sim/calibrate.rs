@@ -88,7 +88,7 @@ pub fn measure_gate_cost(ms: u64) -> f64 {
     let n_warm = 1_000;
     for _ in 0..n_warm {
         ts += 1;
-        src[0].add(Tuple::data(ts, 1));
+        src[0].add(Tuple::data(ts, 1)).unwrap();
         let _ = rdr[0].get();
     }
     let t0 = Instant::now();
@@ -96,7 +96,7 @@ pub fn measure_gate_cost(ms: u64) -> f64 {
     while t0.elapsed().as_millis() < ms as u128 {
         for _ in 0..256 {
             ts += 1;
-            src[0].add(Tuple::data(ts, 1));
+            src[0].add(Tuple::data(ts, 1)).unwrap();
             while rdr[0].get().is_some() {}
             n += 1;
         }
@@ -118,7 +118,7 @@ pub fn measure_gate_batch_cost(batch: usize, ms: u64) -> f64 {
             ts += 1;
             run.push(Tuple::data(ts, 1));
         }
-        src[0].add_batch(&mut run);
+        src[0].add_batch(&mut run).unwrap();
         while rdr[0].get_batch(&mut out, batch) > 0 {}
         out.clear();
     }
@@ -129,7 +129,7 @@ pub fn measure_gate_batch_cost(batch: usize, ms: u64) -> f64 {
             ts += 1;
             run.push(Tuple::data(ts, 1));
         }
-        src[0].add_batch(&mut run);
+        src[0].add_batch(&mut run).unwrap();
         while rdr[0].get_batch(&mut out, batch) > 0 {}
         out.clear();
         n += batch as u64;

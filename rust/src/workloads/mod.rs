@@ -5,8 +5,9 @@
 //!   functions (Q1, Q2) and the 2-stage tokenize → count pipeline ops;
 //! * [`scalejoin_bench`] — the §8.3 band-join streams, the 1T baseline,
 //!   and the PJRT offload adapter (Q3-Q5);
-//! * [`nyse`] — the synthetic NYSE trade trace + hedge predicate (Q6)
-//!   and the 2-stage fan-out → band-join pipeline ops;
+//! * [`nyse`] — the synthetic NYSE trade trace + hedge predicate (Q6),
+//!   the 2-stage fan-out → band-join pipeline ops, and the diamond-DAG
+//!   ops (filter → L-leg ∥ R-leg → hedge join, Q7);
 //! * [`rates`] — phased rate schedules (Q5) and rate steps (Q4);
 //! * [`ops`] — the Appendix-D operator definitions.
 
@@ -16,7 +17,10 @@ pub mod rates;
 pub mod scalejoin_bench;
 pub mod tweets;
 
-pub use nyse::{hedge_join_op, trade_fanout_op, TradeStream};
+pub use nyse::{
+    hedge_diamond_oracle, hedge_join_op, left_leg_op, right_leg_op, trade_fanout_op,
+    trade_filter_op, TradeStream,
+};
 pub use ops::{forward_op, longest_tweet_op, paircount_op, wordcount_op};
 pub use rates::RateSchedule;
 pub use tweets::{tokenize_op, word_count_stage_op};

@@ -95,6 +95,91 @@ pub fn trade_fanout_op(lb_keys: u64) -> OperatorDef<MapStageLogic<TradeFanout>> 
     map_stage_op("trade-fanout", TradeFanout, lb_keys)
 }
 
+// ---- the diamond DAG (filter → L-leg ∥ R-leg → hedge join) -----------
+//
+// The true-DAG flavour of the Q6 pipeline: instead of one Map stage
+// materializing both join sides, the filtered trade stream FANS OUT to
+// two independent Map stages — one per join side — whose outputs FAN IN
+// to the hedge `J+`'s shared ESG_in. Per-branch elasticity is the point:
+// the two legs scale independently (e.g. asymmetric per-side costs).
+
+/// Diamond source stage: drop trades whose previous-day average is zero
+/// (they can never satisfy the hedge predicate) and forward the rest.
+pub struct TradeFilter;
+
+impl MapLogic for TradeFilter {
+    type In = Trade;
+    type Out = Trade;
+
+    fn flat_map(&self, t: &Tuple<Trade>, emit: &mut dyn FnMut(Trade)) {
+        if t.payload.avg != 0 {
+            emit(t.payload);
+        }
+    }
+}
+
+/// Diamond branch: materialize the LEFT join side of each trade.
+pub struct LeftLeg;
+
+impl MapLogic for LeftLeg {
+    type In = Trade;
+    type Out = Either<Trade, Trade>;
+
+    fn flat_map(&self, t: &Tuple<Trade>, emit: &mut dyn FnMut(Either<Trade, Trade>)) {
+        emit(Either::L(t.payload));
+    }
+}
+
+/// Diamond branch: materialize the RIGHT join side of each trade.
+pub struct RightLeg;
+
+impl MapLogic for RightLeg {
+    type In = Trade;
+    type Out = Either<Trade, Trade>;
+
+    fn flat_map(&self, t: &Tuple<Trade>, emit: &mut dyn FnMut(Either<Trade, Trade>)) {
+        emit(Either::R(t.payload));
+    }
+}
+
+/// Diamond source stage (filter) as an elastic Map stage.
+pub fn trade_filter_op(lb_keys: u64) -> OperatorDef<MapStageLogic<TradeFilter>> {
+    map_stage_op("trade-filter", TradeFilter, lb_keys)
+}
+
+/// Diamond left branch as an elastic Map stage.
+pub fn left_leg_op(lb_keys: u64) -> OperatorDef<MapStageLogic<LeftLeg>> {
+    map_stage_op("left-leg", LeftLeg, lb_keys)
+}
+
+/// Diamond right branch as an elastic Map stage.
+pub fn right_leg_op(lb_keys: u64) -> OperatorDef<MapStageLogic<RightLeg>> {
+    map_stage_op("right-leg", RightLeg, lb_keys)
+}
+
+/// Sequential reference for the diamond: every ordered trade pair
+/// (l, r), l ≠ r, within the strict WS band, tested with the hedge
+/// predicate — exactly the match set the fan-out → fan-in → `J+`
+/// topology produces (both sides of every trade reach the join).
+pub fn hedge_diamond_oracle(trades: &[Tuple<Trade>], ws_ms: EventTime) -> Vec<HedgeOut> {
+    let p = HedgePredicate;
+    let mut out = Vec::new();
+    for (i, a) in trades.iter().enumerate() {
+        for (j, b) in trades.iter().enumerate() {
+            if i == j || a.payload.avg == 0 || b.payload.avg == 0 {
+                continue;
+            }
+            if (a.ts - b.ts).abs() >= ws_ms {
+                continue;
+            }
+            if p.matches(&a.payload, &b.payload) {
+                out.push(p.combine(&a.payload, &b.payload));
+            }
+        }
+    }
+    out
+}
+
 /// Stage-2 operator: the hedge band self-join over the fanned-out stream
 /// (WS in event-time ms; the paper uses 30 s).
 pub fn hedge_join_op(
@@ -302,6 +387,33 @@ mod tests {
         let mut out2 = Vec::new();
         TradeFanout.flat_map(&bad, &mut |e| out2.push(e));
         assert!(out2.is_empty());
+    }
+
+    #[test]
+    fn diamond_legs_materialize_one_side_each() {
+        let t = Tuple::data(42, Trade { id: 3, price: 105, avg: 100 });
+        let (mut l_out, mut r_out) = (Vec::new(), Vec::new());
+        LeftLeg.flat_map(&t, &mut |e| l_out.push(e));
+        RightLeg.flat_map(&t, &mut |e| r_out.push(e));
+        assert!(matches!(l_out[..], [Either::L(x)] if x.id == 3));
+        assert!(matches!(r_out[..], [Either::R(x)] if x.id == 3));
+        // the filter stage drops zero-average trades; the legs pass all
+        let bad = Tuple::data(43, Trade { id: 1, price: 5, avg: 0 });
+        let mut f_out = Vec::new();
+        TradeFilter.flat_map(&bad, &mut |e| f_out.push(e));
+        assert!(f_out.is_empty());
+        TradeFilter.flat_map(&t, &mut |e| f_out.push(e));
+        assert_eq!(f_out.len(), 1);
+    }
+
+    #[test]
+    fn diamond_oracle_counts_both_orientations_within_strict_window() {
+        let a = Tuple::data(0, Trade { id: 1, price: 105, avg: 100 }); // nd = 0.05
+        let b = Tuple::data(10, Trade { id: 2, price: 95, avg: 100 }); // nd = -0.05
+        // both (La, Rb) and (Lb, Ra) hit the band (ratio −1 each way)
+        assert_eq!(hedge_diamond_oracle(&[a.clone(), b.clone()], 100).len(), 2);
+        // strict window: |Δts| ≥ WS never matches
+        assert_eq!(hedge_diamond_oracle(&[a, b], 10).len(), 0);
     }
 
     #[test]

@@ -12,10 +12,15 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use stretch::engine::dag::DagBuilder;
 use stretch::engine::pipeline::PipelineBuilder;
 use stretch::engine::VsnOptions;
 use stretch::time::WindowSpec;
 use stretch::tuple::{Key, Tuple};
+use stretch::workloads::nyse::{
+    hedge_diamond_oracle, hedge_join_op, left_leg_op, right_leg_op, trade_filter_op, HedgeOut,
+    NyseConfig, Trade, TradeStream,
+};
 use stretch::workloads::tweets::{
     tokenize_op, word_count_stage_op, wordcount_keys, Tweet, TweetGen, TweetGenConfig,
 };
@@ -84,10 +89,10 @@ fn two_stage_pipeline_matches_reference_under_per_stage_reconfigs() {
     let fed = progress.clone();
     let feeder = std::thread::spawn(move || {
         for t in feed {
-            ing.add(t);
+            ing.add(t).unwrap();
             fed.fetch_add(1, Ordering::Relaxed);
         }
-        ing.heartbeat(horizon);
+        ing.heartbeat(horizon).unwrap();
     });
 
     // collect while reconfiguring each stage once, mid-run
@@ -160,10 +165,10 @@ fn pipeline_shrink_preserves_equivalence() {
     let fed = progress.clone();
     let feeder = std::thread::spawn(move || {
         for t in feed {
-            ing.add(t);
+            ing.add(t).unwrap();
             fed.fetch_add(1, Ordering::Relaxed);
         }
-        ing.heartbeat(horizon);
+        ing.heartbeat(horizon).unwrap();
     });
 
     let mut reader = pipeline.egress.remove(0);
@@ -187,4 +192,126 @@ fn pipeline_shrink_preserves_equivalence() {
     feeder.join().unwrap();
     pipeline.shutdown();
     assert_eq!(got, oracle, "shrink reconfigs must not lose or double-count windows");
+}
+
+/// The tentpole's end-to-end proof: a DIAMOND topology
+/// (filter → L-leg ∥ R-leg → hedge join → sink) built on shared gates —
+/// fan-out as two reader groups on one ESG_out, fan-in as two
+/// source-slot groups on the join's ESG_in — producing EXACTLY the
+/// sequential reference's match multiset while every one of the four
+/// stages reconfigures mid-run through its own per-edge control slot.
+#[test]
+fn diamond_dag_matches_reference_while_every_stage_reconfigures() {
+    let ws_ms = 800i64;
+    let n = 2_500usize;
+    let cfg = NyseConfig { symbols: 8, ..Default::default() };
+    let mut stream = TradeStream::new(&cfg, 1_000.0);
+    let trades: Vec<Tuple<Trade>> = (0..n).map(|_| stream.next()).collect();
+    let horizon = trades.last().unwrap().ts + ws_ms + 10_000;
+
+    let oracle = {
+        let mut o: Vec<(u16, i32, u16, i32)> = hedge_diamond_oracle(&trades, ws_ms)
+            .into_iter()
+            .map(|h| (h.l_id, h.l_price, h.r_id, h.r_price))
+            .collect();
+        o.sort_unstable();
+        o
+    };
+    assert!(!oracle.is_empty(), "degenerate corpus: no hedge matches");
+
+    let mut b = DagBuilder::<Trade, HedgeOut>::new();
+    let s = b.source(
+        trade_filter_op(64),
+        VsnOptions { initial: 1, max: 2, gate_capacity: 8192, ..Default::default() },
+    );
+    let l = b.node(
+        left_leg_op(64),
+        VsnOptions { initial: 1, max: 2, gate_capacity: 8192, ..Default::default() },
+        &[s],
+    );
+    let r = b.node(
+        right_leg_op(64),
+        VsnOptions { initial: 2, max: 2, gate_capacity: 8192, ..Default::default() },
+        &[s],
+    );
+    let j = b.node(
+        hedge_join_op(ws_ms, 32),
+        VsnOptions { initial: 1, max: 3, gate_capacity: 8192, ..Default::default() },
+        &[l, r],
+    );
+    let mut pipeline = b.build(&[j]).expect("diamond is a valid DAG");
+    assert_eq!(pipeline.depth(), 4);
+    assert_eq!(pipeline.ingress.len(), 1);
+    assert_eq!(pipeline.egress.len(), 1);
+
+    let progress = Arc::new(AtomicUsize::new(0));
+    let feed = trades.clone();
+    let mut ing = pipeline.ingress.remove(0);
+    let fed = progress.clone();
+    let feeder = std::thread::spawn(move || {
+        for t in feed {
+            ing.add(t).unwrap();
+            fed.fetch_add(1, Ordering::Relaxed);
+        }
+        ing.heartbeat(horizon).unwrap();
+    });
+
+    // collect while reconfiguring EVERY stage mid-run: grow the source,
+    // grow the left leg, SHRINK the right leg, grow the join
+    let mut reader = pipeline.egress.remove(0);
+    let mut got: Vec<(u16, i32, u16, i32)> = Vec::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    let mut fired = [false; 4];
+    let mut buf: Vec<Tuple<HedgeOut>> = Vec::new();
+    while got.len() < oracle.len() && std::time::Instant::now() < deadline {
+        let p = progress.load(Ordering::Relaxed);
+        if !fired[0] && p > n / 5 {
+            pipeline.reconfigure_stage(0, vec![0, 1]); // filter 1 → 2
+            fired[0] = true;
+        }
+        if !fired[1] && p > 2 * n / 5 {
+            pipeline.reconfigure_stage(1, vec![0, 1]); // left leg 1 → 2
+            fired[1] = true;
+        }
+        if !fired[2] && p > 3 * n / 5 {
+            pipeline.reconfigure_stage(2, vec![1]); // right leg 2 → 1
+            fired[2] = true;
+        }
+        if !fired[3] && p > 4 * n / 5 {
+            pipeline.reconfigure_stage(3, vec![0, 1, 2]); // join 1 → 3
+            fired[3] = true;
+        }
+        buf.clear();
+        if reader.get_batch(&mut buf, 256) == 0 {
+            std::thread::sleep(Duration::from_micros(200));
+            continue;
+        }
+        for t in &buf {
+            if t.kind.is_data() {
+                got.push((t.payload.l_id, t.payload.l_price, t.payload.r_id, t.payload.r_price));
+            }
+        }
+    }
+    feeder.join().unwrap();
+    assert!(fired.iter().all(|&f| f), "not every reconfig trigger fired: {fired:?}");
+
+    // every stage completed its reconfiguration independently
+    let t0 = std::time::Instant::now();
+    while pipeline.stages.iter().any(|s| s.completion_times().is_empty())
+        && t0.elapsed() < Duration::from_secs(5)
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for (k, stage) in pipeline.stages.iter().enumerate() {
+        assert_eq!(stage.completion_times().len(), 1, "stage {k} ({}) reconfig lost", stage.name());
+    }
+    assert_eq!(pipeline.stages[0].active_instances(), vec![0, 1]);
+    assert_eq!(pipeline.stages[1].active_instances(), vec![0, 1]);
+    assert_eq!(pipeline.stages[2].active_instances(), vec![1]);
+    assert_eq!(pipeline.stages[3].active_instances(), vec![0, 1, 2]);
+    pipeline.shutdown();
+
+    got.sort_unstable();
+    assert_eq!(got.len(), oracle.len(), "match count diverged from the sequential reference");
+    assert_eq!(got, oracle, "diamond DAG output diverged from the sequential reference");
 }

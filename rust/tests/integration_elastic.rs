@@ -96,9 +96,9 @@ fn run_elastic(
                 feed_control.reconfigure(set.clone(), Mapper::over(set));
                 next_rc += 1;
             }
-            ing0.add(t.clone());
+            ing0.add(t.clone()).unwrap();
         }
-        ing0.heartbeat(10_000_000);
+        ing0.heartbeat(10_000_000).unwrap();
     });
     let mut out = Vec::new();
     let mut reader = readers.remove(0);

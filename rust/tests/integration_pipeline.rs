@@ -54,15 +54,15 @@ fn two_stage_pipeline_preserves_counts() {
         for (i, &k) in keys1.iter().enumerate() {
             let ts = i as i64;
             if i % 2 == 0 {
-                s1a.add(Tuple::data_on(ts, 0, k));
-                s1b.heartbeat(ts);
+                s1a.add(Tuple::data_on(ts, 0, k)).unwrap();
+                s1b.heartbeat(ts).unwrap();
             } else {
-                s1b.add(Tuple::data_on(ts, 1, k));
-                s1a.heartbeat(ts);
+                s1b.add(Tuple::data_on(ts, 1, k)).unwrap();
+                s1a.heartbeat(ts).unwrap();
             }
         }
-        s1a.heartbeat(1_000_000);
-        s1b.heartbeat(1_000_000);
+        s1a.heartbeat(1_000_000).unwrap();
+        s1b.heartbeat(1_000_000).unwrap();
     });
 
     // pump: stage-1 egress → stage-2 ingress (the gate hand-off)
@@ -77,7 +77,7 @@ fn two_stage_pipeline_preserves_counts() {
             match stage1_reader.get() {
                 Some(t) if t.kind.is_data() => {
                     last_ts = t.ts;
-                    stage2_in.add(Tuple::data(t.ts, Arc::new(vec![t.payload])));
+                    stage2_in.add(Tuple::data(t.ts, Arc::new(vec![t.payload]))).unwrap();
                     forwarded += 1;
                 }
                 Some(t) => {
@@ -86,7 +86,7 @@ fn two_stage_pipeline_preserves_counts() {
                 None => std::thread::sleep(Duration::from_micros(100)),
             }
         }
-        stage2_in.heartbeat(2_000_000);
+        stage2_in.heartbeat(2_000_000).unwrap();
         forwarded
     });
 
@@ -130,9 +130,9 @@ fn pipeline_stage1_reconfig_transparent_downstream() {
             if i == n / 2 {
                 control.reconfigure(vec![0, 1, 2], stretch::tuple::Mapper::hash_mod(3));
             }
-            s1.add(Tuple::data(i, (i % 7) as u64));
+            s1.add(Tuple::data(i, (i % 7) as u64)).unwrap();
         }
-        s1.heartbeat(1_000_000);
+        s1.heartbeat(1_000_000).unwrap();
     });
     // drain stage 1 directly, counting per key and checking sortedness
     let mut reader = out1.remove(0);

@@ -60,9 +60,9 @@ fn collect_vsn_counts(
         VsnOptions { initial: m, max: m + 2, upstreams: 1, ..Default::default() },
     );
     for t in tuples {
-        ingress[0].add(t.clone());
+        ingress[0].add(t.clone()).unwrap();
     }
-    ingress[0].heartbeat(horizon);
+    ingress[0].heartbeat(horizon).unwrap();
     let expected = count_oracle(tuples, spec, horizon).len() as u64;
     let mut out = BTreeMap::new();
     let mut reader = readers.remove(0);
@@ -94,9 +94,17 @@ fn collect_sn_counts(
         def,
         SnOptions { parallelism: pi, upstreams: 1, ..Default::default() },
     );
+    // batched forwardSN (the harness path): one staged flush per run
+    // instead of a per-(tuple, target) push, so SN-vs-VSN comparisons
+    // measure the engines, not an unbatched baseline
+    let mut run: Vec<Tuple<WcIn>> = Vec::with_capacity(256);
     for t in tuples {
-        ingress[0].forward(t.clone());
+        run.push(t.clone());
+        if run.len() >= 256 {
+            ingress[0].forward_batch(&mut run);
+        }
     }
+    ingress[0].forward_batch(&mut run);
     ingress[0].heartbeat(horizon);
     let expected = count_oracle(tuples, spec, horizon).len() as u64;
     let mut out = BTreeMap::new();
@@ -222,9 +230,9 @@ fn run_vsn_join(tuples: &[Tuple<SjIn>], ws: i64, m: usize, expected: usize) -> V
     let mut ing0 = ingress.remove(0);
     let feeder = std::thread::spawn(move || {
         for t in feed {
-            ing0.add(t);
+            ing0.add(t).unwrap();
         }
-        ing0.heartbeat(10_000_000);
+        ing0.heartbeat(10_000_000).unwrap();
     });
     let mut out = Vec::new();
     let mut reader = readers.remove(0);

@@ -68,7 +68,7 @@ fn prop_esg_same_order_exactly_once() {
                 }
             }
             let Some((ts, s)) = pick else { break };
-            srcs[s].add(Tuple::data(ts, (s, idx[s])));
+            srcs[s].add(Tuple::data(ts, (s, idx[s]))).unwrap();
             idx[s] += 1;
         }
         for s in srcs.iter_mut() {
@@ -121,7 +121,7 @@ fn prop_esg_membership_ops_preserve_order() {
             ts += tc.rng.gen_range(3) as i64;
             let s = tc.rng.range(0, 2);
             if g.source_active(s) {
-                srcs[s].add(Tuple::data(ts, seq));
+                srcs[s].add(Tuple::data(ts, seq)).unwrap();
                 seq += 1;
             }
             if i == add_reader_at {
@@ -209,17 +209,17 @@ fn run_gate_script(script: &[GateOp], batched: bool) -> [Vec<(i64, u64)>; 2] {
                 if batched {
                     pending[*src].push(t);
                     if pending[*src].len() >= 9 {
-                        srcs[*src].add_batch(&mut pending[*src]);
+                        srcs[*src].add_batch(&mut pending[*src]).unwrap();
                     }
                 } else {
-                    srcs[*src].add(t);
+                    srcs[*src].add(t).unwrap();
                 }
             }
             GateOp::Drain { max } => {
                 if batched {
                     for (s, buf) in pending.iter_mut().enumerate() {
                         if !buf.is_empty() {
-                            srcs[s].add_batch(buf);
+                            srcs[s].add_batch(buf).unwrap();
                         }
                     }
                 }
@@ -230,7 +230,7 @@ fn run_gate_script(script: &[GateOp], batched: bool) -> [Vec<(i64, u64)>; 2] {
             }
             GateOp::RemoveSource { src } => {
                 if batched && !pending[*src].is_empty() {
-                    srcs[*src].add_batch(&mut pending[*src]);
+                    srcs[*src].add_batch(&mut pending[*src]).unwrap();
                 }
                 assert!(g.remove_sources(&[*src]));
             }
@@ -249,7 +249,7 @@ fn run_gate_script(script: &[GateOp], batched: bool) -> [Vec<(i64, u64)>; 2] {
     }
     for (s, buf) in pending.iter_mut().enumerate() {
         if batched && !buf.is_empty() {
-            srcs[s].add_batch(buf);
+            srcs[s].add_batch(buf).unwrap();
         }
     }
     for s in 0..4 {
@@ -340,7 +340,7 @@ fn prop_batched_concurrent_exactly_once_same_order() {
                             run.push(Tuple::data(ts, ts as u64));
                             i += 1;
                         }
-                        s.add_batch(&mut run);
+                        s.add_batch(&mut run).unwrap();
                     }
                     s.advance_clock(i64::MAX / 8);
                 })
@@ -469,9 +469,9 @@ fn prop_random_reconfigs_preserve_join_semantics() {
                     control.reconfigure(set.clone(), Mapper::over(set));
                     next += 1;
                 }
-                ing.add(t);
+                ing.add(t).unwrap();
             }
-            ing.heartbeat(10_000_000);
+            ing.heartbeat(10_000_000).unwrap();
         });
         let mut got = Vec::new();
         let mut reader = readers.remove(0);
@@ -487,5 +487,194 @@ fn prop_random_reconfigs_preserve_join_semantics() {
         engine.shutdown();
         got.sort();
         assert_eq!(got, oracle, "seed {:#x}: match set diverged", tc.seed);
+    });
+}
+
+// --- scripted diamond DAG ≡ per-tuple linear reference ----------------
+
+/// Gate-level diamond: one external source gate G1 fanning out to two
+/// "stages" A (reader slots 0-1, transform v → 2v) and B (reader slots
+/// 2-3, transform v → 2v+1), whose emissions fan in through G2 (A's
+/// source slots 0-1, B's 2-3) to a single output reader. Because every
+/// A slot id < every B slot id and timestamps are unique, the fan-in
+/// merge order is FULLY determined: for each input tuple, A's output
+/// precedes B's — so the DAG output must equal, as an exact sequence,
+/// the trivial per-tuple linear reference `[2v, 2v+1]` per input, no
+/// matter how instances are added/removed per stage mid-run.
+#[test]
+fn prop_scripted_diamond_dag_matches_per_tuple_linear_reference() {
+    use stretch::scalegate::SourceHandle;
+
+    const A_BASE: usize = 0; // A's slots: 0-1
+    const B_BASE: usize = 2; // B's slots: 2-3
+    const PER_STAGE: usize = 2;
+
+    struct Stage {
+        /// Reader handles on G1 (one per slot of this stage's range).
+        readers: Vec<ReaderHandle<Tuple<u64>>>,
+        /// Source handles on G2, same slot count.
+        sources: Vec<SourceHandle<Tuple<u64>>>,
+        /// Locally active instance offsets (0-based within the stage).
+        active: Vec<usize>,
+        /// Gate slot offsets of this stage's ranges.
+        rdr_base: usize,
+        src_base: usize,
+        /// Last input ts this stage has fully drained (its watermark).
+        wm: i64,
+    }
+
+    impl Stage {
+        /// Drain G1 fully; each ACTIVE instance takes everything, emits
+        /// the transform of the tuples routed to it into ITS G2 slot,
+        /// then advances its G2 clock to the drained watermark.
+        fn drain(&mut self, f: impl Fn(u64) -> u64) {
+            let active = self.active.clone();
+            let mut emitted: Vec<Vec<Tuple<u64>>> = vec![Vec::new(); self.readers.len()];
+            let mut buf: Vec<Tuple<u64>> = Vec::new();
+            for &k in &active {
+                loop {
+                    buf.clear();
+                    if self.readers[k].get_batch(&mut buf, 64) == 0 {
+                        break;
+                    }
+                    for t in &buf {
+                        self.wm = self.wm.max(t.ts);
+                        // deterministic exactly-once routing over the
+                        // CURRENT active set (membership only changes
+                        // between fully drained script points)
+                        let owner = active[(t.payload % active.len() as u64) as usize];
+                        if owner == k {
+                            emitted[k].push(Tuple::data(t.ts, f(t.payload)));
+                        }
+                    }
+                }
+            }
+            for &k in &active {
+                if !emitted[k].is_empty() {
+                    self.sources[k].add_batch(&mut emitted[k]).unwrap();
+                }
+                self.sources[k].advance_clock(self.wm);
+            }
+        }
+
+        fn add_instance(&mut self, g1: &Esg<Tuple<u64>>, g2: &Esg<Tuple<u64>>, k: usize) {
+            assert!(!self.active.contains(&k));
+            // seed the new reader at an existing member's position (all
+            // equal after a full drain) and the new source at the
+            // stage's watermark (Lemma 3 floor)
+            let pos = self.readers[self.active[0]].cursor();
+            assert!(g1.add_readers_at(&[self.rdr_base + k], pos));
+            assert!(g2.add_sources(&[self.src_base + k], self.wm));
+            self.active.push(k);
+            self.active.sort_unstable();
+        }
+
+        fn remove_instance(&mut self, g1: &Esg<Tuple<u64>>, g2: &Esg<Tuple<u64>>, k: usize) {
+            assert!(self.active.len() > 1);
+            assert!(g1.remove_readers(&[self.rdr_base + k]));
+            assert!(g2.remove_sources(&[self.src_base + k]));
+            self.active.retain(|&x| x != k);
+        }
+    }
+
+    check("scripted diamond dag", 20, |tc| {
+        // G1: 1 external source, 4 reader slots (A: 0-1, B: 2-3)
+        let (g1, mut ext, rdrs): (Esg<Tuple<u64>>, _, _) = Esg::new(
+            EsgConfig { max_sources: 1, max_readers: 4, capacity: 1 << 15, source_queue: 4096 },
+            1,
+            0,
+        );
+        // G2: 4 source slots (A: 0-1, B: 2-3), 1 reader
+        let (g2, srcs2, mut out): (Esg<Tuple<u64>>, _, _) = Esg::new(
+            EsgConfig { max_sources: 4, max_readers: 1, capacity: 1 << 15, source_queue: 4096 },
+            0,
+            1,
+        );
+        // initial activation: one instance per stage, output reader 0
+        assert!(g1.add_readers_at(&[A_BASE, B_BASE], 0));
+        assert!(g2.add_sources(&[A_BASE, B_BASE], stretch::time::TIME_MIN));
+
+        let mut rdrs = rdrs;
+        let mut srcs2 = srcs2;
+        // split handles into the two stages (readers/sources come out in
+        // slot order)
+        let b_readers = rdrs.split_off(PER_STAGE);
+        let b_sources = srcs2.split_off(PER_STAGE);
+        let mut stage_a = Stage {
+            readers: rdrs,
+            sources: srcs2,
+            active: vec![0],
+            rdr_base: A_BASE,
+            src_base: A_BASE,
+            wm: stretch::time::TIME_MIN,
+        };
+        let mut stage_b = Stage {
+            readers: b_readers,
+            sources: b_sources,
+            active: vec![0],
+            rdr_base: B_BASE,
+            src_base: B_BASE,
+            wm: stretch::time::TIME_MIN,
+        };
+
+        let n = tc.rng.range(80, 400);
+        let mut ts = 0i64;
+        let mut val = 0u64;
+        let mut reference: Vec<(i64, u64)> = Vec::new();
+        let mut got: Vec<(i64, u64)> = Vec::new();
+        let mut drain_out = |got: &mut Vec<(i64, u64)>, out: &mut Vec<ReaderHandle<Tuple<u64>>>| {
+            let mut buf: Vec<Tuple<u64>> = Vec::new();
+            while out[0].get_batch(&mut buf, 64) > 0 {
+                for t in buf.drain(..) {
+                    got.push((t.ts, t.payload));
+                }
+            }
+        };
+
+        for _ in 0..n {
+            let r = tc.rng.gen_range(100);
+            if r < 60 {
+                // feed one tuple; the per-tuple linear reference is
+                // simply [A-transform, B-transform] in input order
+                ts += 1 + tc.rng.gen_range(3) as i64;
+                ext[0].add(Tuple::data(ts, val)).unwrap();
+                reference.push((ts, 2 * val));
+                reference.push((ts, 2 * val + 1));
+                val += 1;
+            } else if r < 75 {
+                stage_a.drain(|v| 2 * v);
+                stage_b.drain(|v| 2 * v + 1);
+                drain_out(&mut got, &mut out);
+            } else {
+                // per-stage membership change at a fully drained point
+                stage_a.drain(|v| 2 * v);
+                stage_b.drain(|v| 2 * v + 1);
+                let stage = if tc.rng.chance(0.5) { &mut stage_a } else { &mut stage_b };
+                if stage.active.len() == 1 {
+                    let k = 1 - stage.active[0];
+                    stage.add_instance(&g1, &g2, k);
+                } else {
+                    let k = stage.active[tc.rng.range(0, stage.active.len())];
+                    stage.remove_instance(&g1, &g2, k);
+                }
+            }
+        }
+        // end of stream: flush everything through both stages
+        ext[0].advance_clock(i64::MAX / 8);
+        stage_a.drain(|v| 2 * v);
+        stage_b.drain(|v| 2 * v + 1);
+        for &k in &stage_a.active {
+            stage_a.sources[k].advance_clock(i64::MAX / 8);
+        }
+        for &k in &stage_b.active {
+            stage_b.sources[k].advance_clock(i64::MAX / 8);
+        }
+        drain_out(&mut got, &mut out);
+
+        assert_eq!(
+            got, reference,
+            "seed {:#x}: diamond DAG output diverged from the per-tuple linear reference",
+            tc.seed
+        );
     });
 }
