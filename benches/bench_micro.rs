@@ -8,6 +8,7 @@
 //! tiny budget so bench bit-rot fails the pipeline). Writes
 //! `BENCH_micro.json` next to the human output.
 
+use stretch::cli::OrExit;
 use std::time::Instant;
 use stretch::metrics::{BenchReport, Json};
 use stretch::metrics::reporter::Table;
@@ -63,7 +64,7 @@ fn main() {
         .flag("no-offload", "skip the PJRT offload sweep")
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
-    let budget_ms = args.u64_or("budget-ms", 100).max(5);
+    let budget_ms = args.u64_or("budget-ms", 100).or_exit().max(5);
 
     println!("micro-benchmarks (release numbers feed the simulator + EXPERIMENTS.md §Perf)\n");
     let cal = calibrate_with(budget_ms);

@@ -6,6 +6,7 @@
 //! responsible instance), VSN shares each tuple through the ESG.
 //! Writes results/q1_wordcount.csv; prints the paper-style summary.
 
+use stretch::cli::OrExit;
 use std::time::{Duration, Instant};
 use stretch::engine::{SnEngine, SnOptions, VsnEngine, VsnOptions};
 use stretch::metrics::reporter::Table;
@@ -167,9 +168,9 @@ fn main() {
         .opt("batch", "data-plane batch size (worker + SN queue hops)", Some("128"))
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
-    let n = args.usize_or("tuples", 12_000);
-    let pi = args.usize_or("pi", 3);
-    let b = args.usize_or("batch", 128).max(1);
+    let n = args.usize_or("tuples", 12_000).or_exit();
+    let pi = args.usize_or("pi", 3).or_exit();
+    let b = args.usize_or("batch", 128).or_exit().max(1);
     let tuning = stretch::config::BatchTuning { worker: b, ingress: b.max(256), queue: b };
     let tuples = corpus(n);
 

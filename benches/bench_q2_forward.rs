@@ -4,6 +4,7 @@
 //! Scaling beyond one core uses the calibrated simulator (DESIGN.md §5);
 //! a real threaded spot-check anchors the Π ∈ {1, 2} points on this box.
 
+use stretch::cli::OrExit;
 use std::time::{Duration, Instant};
 use stretch::engine::{VsnEngine, VsnOptions};
 use stretch::metrics::reporter::Table;
@@ -111,7 +112,7 @@ fn main() {
 
     let mut real_json: Vec<stretch::metrics::Json> = Vec::new();
     if !args.flag("no-real") {
-        let n = args.usize_or("tuples", 30_000);
+        let n = args.usize_or("tuples", 30_000).or_exit();
         println!("\nreal threaded spot-check (1-core box, both instances share the core):");
         for pi in [1usize, 2] {
             let tps = real_vsn_forward(pi, n);

@@ -6,6 +6,7 @@
 //! STRETCH Π = 1 point are *measured* on this box (real threaded runs),
 //! anchoring the curves.
 
+use stretch::cli::OrExit;
 use std::time::Instant;
 use stretch::harness::{run_elastic_join, JoinRunConfig};
 use stretch::metrics::reporter::Table;
@@ -41,7 +42,7 @@ fn main() {
         .flag("no-real", "skip real measured anchors")
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
-    let ws_ms: i64 = args.u64_or("ws-ms", 5_000) as i64;
+    let ws_ms: i64 = args.u64_or("ws-ms", 5_000).or_exit() as i64;
     let ws_s = ws_ms as f64 / 1e3;
 
     println!("calibrating...");

@@ -9,6 +9,7 @@
 //! load. `--dynamics` replays the Fig. 10 rate step and prints the
 //! rate/throughput/latency time series.
 
+use stretch::cli::OrExit;
 use stretch::elastic::{JoinCostModel, ReactiveController, Thresholds};
 use stretch::harness::{run_elastic_join, JoinRunConfig};
 use stretch::metrics::reporter::Table;
@@ -91,8 +92,8 @@ fn main() {
         .flag("dynamics", "run the Fig. 10 time-series instead")
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
-    let ws_ms = args.u64_or("ws-ms", 3_000) as i64;
-    let max = args.usize_or("max", 6);
+    let ws_ms = args.u64_or("ws-ms", 3_000).or_exit() as i64;
+    let max = args.usize_or("max", 6).or_exit();
 
     let cal = calibrate();
     // model calibrated to this box, shared by controller and rate choice;

@@ -8,6 +8,7 @@
 //! paper's full [500, 8000] t/s 20-minute schedule with the same
 //! controller code, producing the Fig. 11 series shape.
 
+use stretch::cli::OrExit;
 use stretch::elastic::{Controller, Decision, JoinCostModel, Observation, ProactiveController};
 use stretch::harness::{run_elastic_join, JoinRunConfig};
 use stretch::metrics::CsvWriter;
@@ -21,8 +22,8 @@ fn main() {
         .opt("seed", "schedule seed", Some("11"))
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
-    let ws_ms = args.u64_or("ws-ms", 2_000) as i64;
-    let seed = args.u64_or("seed", 11);
+    let ws_ms = args.u64_or("ws-ms", 2_000).or_exit() as i64;
+    let seed = args.u64_or("seed", 11).or_exit();
 
     let cal = calibrate();
 
@@ -32,7 +33,7 @@ fn main() {
     // scale the paper's [500, 8000] t/s band to fit Π ∈ [1, max] here
     let r_hi = model.max_rate(max) * 0.85;
     let r_lo = r_hi / 16.0;
-    let dur = args.u64_or("real-duration", 60) as u32;
+    let dur = args.u64_or("real-duration", 60).or_exit() as u32;
     let schedule = RateSchedule::q5(seed, dur, r_lo, r_hi, 8, 20);
     println!(
         "Q5 real run: {dur}s event time, rates [{r_lo:.0}, {r_hi:.0}] t/s, WS={ws_ms}ms, proactive controller"

@@ -5,6 +5,7 @@
 //! (b) paper-scale fluid replay (0-8000 t/s, reactive controller) for
 //! the Fig. 13 time-series shape.
 
+use stretch::cli::OrExit;
 use std::time::{Duration, Instant};
 use stretch::elastic::{Controller, Decision, JoinCostModel, Observation, ReactiveController, Thresholds};
 use stretch::engine::{EgressDriver, VsnEngine, VsnOptions};
@@ -90,8 +91,8 @@ fn main() {
 
     println!("Q6 (Fig. 13) — NYSE hedge self-join\n");
     let (tuples, matches, cps, lat, lat_p50, lat_p99) = real_hedge_run(
-        args.u64_or("duration", 30) as u32,
-        args.f64_or("peak", 900.0),
+        args.u64_or("duration", 30).or_exit() as u32,
+        args.f64_or("peak", 900.0).or_exit(),
     );
     println!("real threaded run (Π=2):");
     println!("  {tuples} trade tuples → {matches} hedge matches");

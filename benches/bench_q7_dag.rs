@@ -12,13 +12,14 @@
 //! cargo bench --bench bench_q7_dag -- --budget-ms 10  # CI smoke
 //! ```
 
+use stretch::cli::OrExit;
 use std::time::Duration;
 use stretch::elastic::DagController;
 use stretch::engine::dag::DagBuilder;
 use stretch::engine::VsnOptions;
 use stretch::harness::{run_pipeline, PipelineRunConfig, StageRunConfig};
 use stretch::workloads::nyse::{
-    hedge_join_op, left_leg_op, right_leg_op, trade_filter_op, HedgeOut, NyseConfig, Trade,
+    hedge_join_op, left_leg_op, right_leg_op, trade_filter_op, NyseConfig, Trade,
     TradeStream,
 };
 use stretch::workloads::RateSchedule;
@@ -31,10 +32,10 @@ fn main() {
         .opt("hi", "high offered rate (t/s)", Some("4000"))
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
-    let budget_ms = args.u64_or("budget-ms", 3_000).max(1);
-    let cores = args.usize_or("cores", 6);
-    let lo = args.f64_or("lo", 500.0);
-    let hi = args.f64_or("hi", 4_000.0);
+    let budget_ms = args.u64_or("budget-ms", 3_000).or_exit().max(1);
+    let cores = args.usize_or("cores", 6).or_exit();
+    let lo = args.f64_or("lo", 500.0).or_exit();
+    let hi = args.f64_or("hi", 4_000.0).or_exit();
 
     // compress wall time: `time_scale` event seconds replay per wall
     // second; duration follows the wall budget
@@ -49,7 +50,7 @@ fn main() {
     );
 
     let ws_ms = 1_000i64;
-    let mut b = DagBuilder::<Trade, HedgeOut>::new();
+    let mut b = DagBuilder::<Trade>::new();
     let s = b.source(
         trade_filter_op(64),
         VsnOptions { initial: 1, max: 2, gate_capacity: 1 << 14, ..Default::default() },

@@ -1,9 +1,10 @@
-//! DAG pipeline demo: a two-stage VSN pipeline — tokenize Map → windowed
-//! wordcount Aggregate — chained through ONE shared Elastic ScaleGate
-//! (stage 1's ESG_out *is* stage 2's ESG_in; zero-copy hand-off, no
-//! re-ingestion), with BOTH stages reconfigured independently at runtime
-//! and the final output checked for exact equivalence against a
-//! single-threaded sequential reference (no state transfer anywhere).
+//! Two-stage pipeline demo, *declaratively*: the tokenize → windowed
+//! wordcount topology comes from `examples/configs/dag_pipeline.conf`
+//! via the JobSpec layer (the stages chain through ONE shared Elastic
+//! ScaleGate, planned by the engine); this file keeps only the
+//! payload-specific proof — feed a fixed tweet corpus, reconfigure both
+//! stages independently mid-run, and check the final windowed counts for
+//! exact equivalence against a single-threaded sequential reference.
 //!
 //! ```sh
 //! cargo run --release --example dag_pipeline -- --tweets 30000
@@ -14,13 +15,16 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use stretch::engine::pipeline::PipelineBuilder;
-use stretch::engine::VsnOptions;
+use stretch::cli::OrExit;
+use stretch::config::Config;
+use stretch::engine::JobSpec;
 use stretch::time::WindowSpec;
 use stretch::tuple::{Key, Tuple};
-use stretch::workloads::tweets::{
-    tokenize_op, word_count_stage_op, wordcount_keys, Tweet, TweetGen, TweetGenConfig,
-};
+use stretch::workloads::registry::{into_job_tuple, JobPayload};
+use stretch::workloads::tweets::{wordcount_keys, Tweet, TweetGen, TweetGenConfig};
+
+const DEFAULT_CONFIG: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/examples/configs/dag_pipeline.conf");
 
 fn reference_counts(
     tuples: &[Tuple<Tweet>],
@@ -46,78 +50,97 @@ fn reference_counts(
 }
 
 fn main() {
-    let args = stretch::cli::Cli::new("dag_pipeline", "2-stage elastic VSN pipeline demo")
+    let args = stretch::cli::Cli::new("dag_pipeline", "declarative 2-stage pipeline demo")
         .opt("tweets", "corpus size", Some("30000"))
+        .opt("config", "job config declaring the topology", Some(DEFAULT_CONFIG))
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
-    let n = args.usize_or("tweets", 30_000);
+    let n = args.usize_or("tweets", 30_000).or_exit();
+    let path = args.str_or("config", DEFAULT_CONFIG);
 
-    println!("═══ STRETCH multi-stage pipeline: tokenize → windowed wordcount ═══\n");
-    let spec = WindowSpec::new(1_000, 1_000);
+    println!("═══ STRETCH multi-stage pipeline (declared in {path}) ═══\n");
+    let cfg = Config::load(path).unwrap_or_else(|e| panic!("config error: {e}"));
+    let job = JobSpec::from_config(&cfg).unwrap_or_else(|e| panic!("job error: {e}"));
+    let count = job
+        .stages
+        .iter()
+        .find(|s| s.operator == "word-count")
+        .expect("config declares a word-count stage");
+    let spec = WindowSpec::new(count.params.wa_ms, count.params.ws_ms);
+
     let tuples = TweetGen::new(TweetGenConfig {
-        vocab: 3_000,
+        vocab: cfg.int_or("source.vocab", 3_000).max(1) as usize,
         seed: 0xDA61,
         mean_gap_ms: 1.5,
         ..Default::default()
     })
     .take(n);
     let horizon = tuples.last().unwrap().ts + 30_000;
-    println!("[1/3] sequential reference: {n} tweets, tumbling {} ms windows", spec.size);
+    println!("[1/3] sequential reference: {n} tweets, {} ms windows", spec.size);
     let oracle = reference_counts(&tuples, spec, horizon);
     println!("      {} (window, word) result entries expected\n", oracle.len());
 
-    // stage 1: tokenize (Map as an elastic stage), Π: 1 of max 3
-    // stage 2: windowed count (A+), Π: 2 of max 4 — note the shared gate:
-    // stage 1's max workers + 1 control slot write it, stage 2's max read it
-    let mut pipeline = PipelineBuilder::new(
-        tokenize_op(64),
-        VsnOptions { initial: 1, max: 3, gate_capacity: 1 << 14, ..Default::default() },
-    )
-    .stage(
-        word_count_stage_op(spec),
-        VsnOptions { initial: 2, max: 4, gate_capacity: 1 << 14, ..Default::default() },
-    )
-    .build();
-    println!("[2/3] live run: {} stages, independent mid-run reconfigurations", pipeline.depth());
+    // the topology is a config: one build() call, zero wiring here
+    let mut built = job.build().unwrap_or_else(|e| panic!("job error: {e}"));
+    let mut ing = built.pipeline.ingress.remove(0);
+    println!(
+        "[2/3] live run: {} stages ({}), independent mid-run reconfigurations",
+        built.pipeline.depth(),
+        built.stage_names.join(" → ")
+    );
 
     let t0 = Instant::now();
     let progress = Arc::new(AtomicUsize::new(0));
     let feed = tuples.clone();
-    let mut ing = pipeline.ingress.remove(0);
     let fed = progress.clone();
     let feeder = std::thread::spawn(move || {
         for t in feed {
-            ing.add(t).unwrap();
+            ing.add(into_job_tuple(t)).unwrap();
             fed.fetch_add(1, Ordering::Relaxed);
         }
         ing.heartbeat(horizon).unwrap();
     });
 
-    let mut reader = pipeline.egress.remove(0);
+    let tok = built.stage_index("tokenize").expect("config names `tokenize`");
+    let cnt = built.stage_index("count").expect("config names `count`");
+    // the demo's reconfig plan grows tokenize to 3 and count to 4
+    // instances; fail up front if the --config override can't host it
+    for (name, need) in [("tokenize", 3usize), ("count", 4usize)] {
+        let st = job.stages.iter().find(|s| s.name == name).expect("stage exists");
+        assert!(
+            st.max >= need,
+            "stage `{name}` has max = {} but the demo's reconfig plan needs max ≥ {need}",
+            st.max
+        );
+    }
+    let mut reader = built.pipeline.egress.remove(0);
     let mut got: BTreeMap<(i64, Key), u64> = BTreeMap::new();
     let deadline = Instant::now() + Duration::from_secs(120);
     let (mut did0_up, mut did1_up, mut did0_down) = (false, false, false);
     while got.len() < oracle.len() && Instant::now() < deadline {
         let p = progress.load(Ordering::Relaxed);
         if !did0_up && p > n / 4 {
-            let e = pipeline.reconfigure_stage(0, vec![0, 1, 2]);
-            println!("      @{p:>6} tuples: stage 1 (tokenize)  Π 1 → 3   (epoch {e})");
+            let e = built.pipeline.reconfigure_stage(tok, vec![0, 1, 2]);
+            println!("      @{p:>6} tuples: stage `tokenize` Π 1 → 3   (epoch {e})");
             did0_up = true;
         }
         if !did1_up && p > n / 2 {
-            let e = pipeline.reconfigure_stage(1, vec![0, 1, 2, 3]);
-            println!("      @{p:>6} tuples: stage 2 (wordcount) Π 2 → 4   (epoch {e})");
+            let e = built.pipeline.reconfigure_stage(cnt, vec![0, 1, 2, 3]);
+            println!("      @{p:>6} tuples: stage `count`    Π 2 → 4   (epoch {e})");
             did1_up = true;
         }
         if !did0_down && p > 3 * n / 4 {
-            let e = pipeline.reconfigure_stage(0, vec![2]);
-            println!("      @{p:>6} tuples: stage 1 (tokenize)  Π 3 → 1   (epoch {e})");
+            let e = built.pipeline.reconfigure_stage(tok, vec![2]);
+            println!("      @{p:>6} tuples: stage `tokenize` Π 3 → 1   (epoch {e})");
             did0_down = true;
         }
         match reader.get() {
-            Some(t) if t.kind.is_data() => {
-                got.insert((t.ts, t.payload.0), t.payload.1);
-            }
+            Some(t) if t.kind.is_data() => match &t.payload {
+                JobPayload::WordCount((k, c)) => {
+                    got.insert((t.ts, *k), *c);
+                }
+                other => panic!("wordcount sink must emit counts, got {other:?}"),
+            },
             Some(_) => {}
             None => std::thread::sleep(Duration::from_micros(100)),
         }
@@ -127,8 +150,8 @@ fn main() {
 
     // wait for the reconfiguration completions to be recorded
     let tw = Instant::now();
-    while (pipeline.stages[0].completion_times().len() < 2
-        || pipeline.stages[1].completion_times().is_empty())
+    while (built.pipeline.stages[tok].completion_times().len() < 2
+        || built.pipeline.stages[cnt].completion_times().is_empty())
         && tw.elapsed() < Duration::from_secs(5)
     {
         std::thread::sleep(Duration::from_millis(5));
@@ -136,11 +159,11 @@ fn main() {
 
     println!("\n[3/3] results:");
     let mut ok = true;
-    for (k, stage) in pipeline.stages.iter().enumerate() {
+    for (k, stage) in built.pipeline.stages.iter().enumerate() {
         let m = stage.metrics().snapshot();
         println!(
             "      stage {} ({:<10}) in={:>8} out={:>8} tuples, Π_final={}",
-            k + 1,
+            built.stage_names[k],
             stage.name(),
             m.tuples_in,
             m.tuples_out,
@@ -151,13 +174,13 @@ fn main() {
             println!("        reconfig epoch {epoch}: {ms:.2} ms {verdict}");
         }
     }
-    let s0 = pipeline.stages[0].completion_times().len();
-    let s1 = pipeline.stages[1].completion_times().len();
+    let s0 = built.pipeline.stages[tok].completion_times().len();
+    let s1 = built.pipeline.stages[cnt].completion_times().len();
     if s0 < 2 || s1 < 1 {
-        println!("      ✗ reconfigurations incomplete (stage1: {s0}/2, stage2: {s1}/1)");
+        println!("      ✗ reconfigurations incomplete (tokenize: {s0}/2, count: {s1}/1)");
         ok = false;
     }
-    pipeline.shutdown();
+    built.pipeline.shutdown();
 
     if got == oracle {
         println!(
@@ -174,7 +197,7 @@ fn main() {
     println!(
         "\n{}",
         if ok {
-            "BOTH STAGES RECONFIGURED INDEPENDENTLY, OUTPUT EXACT — dag PASS"
+            "CONFIG-DECLARED PIPELINE: BOTH STAGES RECONFIGURED, OUTPUT EXACT — PASS"
         } else {
             "dag FAIL — see above"
         }

@@ -1,9 +1,9 @@
-//! Diamond DAG demo: trade filter → fan-out (left leg ∥ right leg) →
-//! fan-in hedge join → sink, on TRUE shared-gate DAG plumbing — the
-//! fan-out is two reader groups on one ESG_out, the fan-in two
-//! source-slot groups on the join's ESG_in, and every stage has its own
-//! per-edge control slot so all four reconfigure independently mid-run.
-//! The final match multiset is checked for exact equivalence against a
+//! Diamond DAG demo, *declaratively*: the whole topology — trade filter
+//! → fan-out (left leg ∥ right leg) → fan-in hedge join — comes from
+//! `examples/configs/diamond.conf` via the JobSpec layer; this file
+//! keeps only the payload-specific proof: feed a fixed trade corpus,
+//! reconfigure every stage mid-run through its per-edge control slot,
+//! and check the final match multiset for exact equivalence against a
 //! single-threaded sequential reference.
 //!
 //! ```sh
@@ -14,26 +14,40 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use stretch::engine::dag::DagBuilder;
-use stretch::engine::VsnOptions;
+use stretch::cli::OrExit;
+use stretch::config::Config;
+use stretch::engine::JobSpec;
 use stretch::tuple::Tuple;
-use stretch::workloads::nyse::{
-    hedge_diamond_oracle, hedge_join_op, left_leg_op, right_leg_op, trade_filter_op, HedgeOut,
-    NyseConfig, Trade, TradeStream,
-};
+use stretch::workloads::nyse::{hedge_diamond_oracle, NyseConfig, Trade, TradeStream};
+use stretch::workloads::registry::{into_job_tuple, JobPayload};
+
+const DEFAULT_CONFIG: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/examples/configs/diamond.conf");
 
 fn main() {
-    let args = stretch::cli::Cli::new("diamond_dag", "diamond DAG (fan-out + fan-in) demo")
+    let args = stretch::cli::Cli::new("diamond_dag", "declarative diamond DAG demo")
         .opt("trades", "corpus size", Some("4000"))
-        .opt("ws", "join window (event ms)", Some("800"))
+        .opt("config", "job config declaring the topology", Some(DEFAULT_CONFIG))
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
-    let n = args.usize_or("trades", 4_000);
-    let ws_ms = args.u64_or("ws", 800) as i64;
+    let n = args.usize_or("trades", 4_000).or_exit();
+    let path = args.str_or("config", DEFAULT_CONFIG);
 
-    println!("═══ STRETCH diamond DAG: filter → (L-leg ∥ R-leg) → hedge join ═══\n");
-    let cfg = NyseConfig { symbols: 8, ..Default::default() };
-    let mut stream = TradeStream::new(&cfg, 1_000.0);
+    println!("═══ STRETCH diamond DAG (declared in {path}) ═══\n");
+    let cfg = Config::load(path).unwrap_or_else(|e| panic!("config error: {e}"));
+    let spec = JobSpec::from_config(&cfg).unwrap_or_else(|e| panic!("job error: {e}"));
+    let ws_ms = spec
+        .stages
+        .iter()
+        .find(|s| s.operator == "hedge-join")
+        .map(|s| s.params.ws_ms)
+        .expect("diamond config declares a hedge-join stage");
+
+    let stream_cfg = NyseConfig {
+        symbols: cfg.int_or("source.symbols", 8).max(1) as usize,
+        ..Default::default()
+    };
+    let mut stream = TradeStream::new(&stream_cfg, 1_000.0);
     let trades: Vec<Tuple<Trade>> = (0..n).map(|_| stream.next()).collect();
     let horizon = trades.last().unwrap().ts + ws_ms + 10_000;
 
@@ -45,61 +59,61 @@ fn main() {
     oracle.sort_unstable();
     println!("      {} hedge matches expected\n", oracle.len());
 
-    // the diamond: one shared gate S→{L,R} (two reader groups), one
-    // shared gate {L,R}→J (two source groups + J's control slot)
-    let mut b = DagBuilder::<Trade, HedgeOut>::new();
-    let s = b.source(
-        trade_filter_op(64),
-        VsnOptions { initial: 1, max: 2, gate_capacity: 1 << 14, ..Default::default() },
+    // the topology is a config: one build() call, zero wiring here
+    let mut built = spec.build().unwrap_or_else(|e| panic!("job error: {e}"));
+    let mut ing = built.pipeline.ingress.remove(0);
+    println!(
+        "[2/3] live run: {} stages ({}), every stage reconfigured mid-run",
+        built.pipeline.depth(),
+        built.stage_names.join(" → ")
     );
-    let l = b.node(
-        left_leg_op(64),
-        VsnOptions { initial: 1, max: 2, gate_capacity: 1 << 14, ..Default::default() },
-        &[s],
-    );
-    let r = b.node(
-        right_leg_op(64),
-        VsnOptions { initial: 2, max: 2, gate_capacity: 1 << 14, ..Default::default() },
-        &[s],
-    );
-    let j = b.node(
-        hedge_join_op(ws_ms, 32),
-        VsnOptions { initial: 1, max: 3, gate_capacity: 1 << 14, ..Default::default() },
-        &[l, r],
-    );
-    let mut pipeline = b.build(&[j]).expect("diamond is a valid DAG");
-    println!("[2/3] live run: {} stages, every stage reconfigured mid-run", pipeline.depth());
 
     let t0 = Instant::now();
     let progress = Arc::new(AtomicUsize::new(0));
     let feed = trades.clone();
-    let mut ing = pipeline.ingress.remove(0);
     let fed = progress.clone();
     let feeder = std::thread::spawn(move || {
         for t in feed {
-            ing.add(t).unwrap();
+            ing.add(into_job_tuple(t)).unwrap();
             fed.fetch_add(1, Ordering::Relaxed);
         }
         ing.heartbeat(horizon).unwrap();
     });
 
-    let mut reader = pipeline.egress.remove(0);
+    let mut reader = built.pipeline.egress.remove(0);
     let mut got: Vec<(u16, i32, u16, i32)> = Vec::new();
     let deadline = Instant::now() + Duration::from_secs(120);
     let mut fired = [false; 4];
-    let plan: [(usize, Vec<usize>, &str); 4] = [
-        (0, vec![0, 1], "filter    Π 1 → 2"),
-        (1, vec![0, 1], "left-leg  Π 1 → 2"),
-        (2, vec![1], "right-leg Π 2 → 1"),
-        (3, vec![0, 1, 2], "join      Π 1 → 3"),
+    let plan: [(&str, Vec<usize>, &str); 4] = [
+        ("filter", vec![0, 1], "filter    Π 1 → 2"),
+        ("left", vec![0, 1], "left-leg  Π 1 → 2"),
+        ("right", vec![1], "right-leg Π 2 → 1"),
+        ("join", vec![0, 1, 2], "join      Π 1 → 3"),
     ];
-    let mut buf: Vec<Tuple<HedgeOut>> = Vec::new();
+    // the reconfig plan is part of this demo, the topology comes from
+    // --config: fail up front if the config can't host the plan (an
+    // instance id ≥ a stage's max would address another stage's slots)
+    for (stage, set, _) in &plan {
+        let st = spec
+            .stages
+            .iter()
+            .find(|s| s.name == *stage)
+            .unwrap_or_else(|| panic!("config must declare a `{stage}` stage for this demo"));
+        let need = set.iter().max().unwrap() + 1;
+        assert!(
+            st.max >= need,
+            "stage `{stage}` has max = {} but the demo's reconfig plan needs max ≥ {need}",
+            st.max
+        );
+    }
+    let mut buf: Vec<Tuple<JobPayload>> = Vec::new();
     while got.len() < oracle.len() && Instant::now() < deadline {
         let p = progress.load(Ordering::Relaxed);
         for (i, (stage, set, label)) in plan.iter().enumerate() {
             if !fired[i] && p > (i + 1) * n / 5 {
-                let e = pipeline.reconfigure_stage(*stage, set.clone());
-                println!("      @{p:>6} trades: stage {} {label}   (epoch {e})", stage + 1);
+                let k = built.stage_index(stage).expect("config names the stage");
+                let e = built.pipeline.reconfigure_stage(k, set.clone());
+                println!("      @{p:>6} trades: stage `{stage}` {label}   (epoch {e})");
                 fired[i] = true;
             }
         }
@@ -110,7 +124,12 @@ fn main() {
         }
         for t in &buf {
             if t.kind.is_data() {
-                got.push((t.payload.l_id, t.payload.l_price, t.payload.r_id, t.payload.r_price));
+                match &t.payload {
+                    JobPayload::Hedge(h) => {
+                        got.push((h.l_id, h.l_price, h.r_id, h.r_price));
+                    }
+                    other => panic!("diamond sink must emit hedge matches, got {other:?}"),
+                }
             }
         }
     }
@@ -118,7 +137,7 @@ fn main() {
     let wall = t0.elapsed().as_secs_f64();
 
     let tw = Instant::now();
-    while pipeline.stages.iter().any(|s| s.completion_times().is_empty())
+    while built.pipeline.stages.iter().any(|s| s.completion_times().is_empty())
         && tw.elapsed() < Duration::from_secs(5)
     {
         std::thread::sleep(Duration::from_millis(5));
@@ -126,12 +145,12 @@ fn main() {
 
     println!("\n[3/3] results:");
     let mut ok = true;
-    for (k, stage) in pipeline.stages.iter().enumerate() {
+    for (k, stage) in built.pipeline.stages.iter().enumerate() {
         let m = stage.metrics().snapshot();
         let done = stage.completion_times().len();
         println!(
             "      stage {} ({:<12}) in={:>8} out={:>8} tuples, Π_final={}, reconfigs={}",
-            k + 1,
+            built.stage_names[k],
             stage.name(),
             m.tuples_in,
             m.tuples_out,
@@ -146,7 +165,7 @@ fn main() {
             ok = false;
         }
     }
-    pipeline.shutdown();
+    built.pipeline.shutdown();
 
     got.sort_unstable();
     if got == oracle {
@@ -165,7 +184,7 @@ fn main() {
     println!(
         "\n{}",
         if ok {
-            "ALL FOUR STAGES RECONFIGURED INDEPENDENTLY, OUTPUT EXACT — diamond PASS"
+            "CONFIG-DECLARED DIAMOND: ALL FOUR STAGES RECONFIGURED, OUTPUT EXACT — PASS"
         } else {
             "diamond FAIL — see above"
         }

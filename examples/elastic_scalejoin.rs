@@ -6,6 +6,7 @@
 //! cargo run --release --example elastic_scalejoin
 //! ```
 
+use stretch::cli::OrExit;
 use stretch::elastic::{JoinCostModel, ReactiveController, Thresholds};
 use stretch::harness::{run_elastic_join, JoinRunConfig};
 use stretch::sim::calibrate;
@@ -17,8 +18,8 @@ fn main() {
         .opt("max", "max parallelism", Some("4"))
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
-    let ws_ms = args.u64_or("ws-ms", 2_000) as i64;
-    let max = args.usize_or("max", 4);
+    let ws_ms = args.u64_or("ws-ms", 2_000).or_exit() as i64;
+    let max = args.usize_or("max", 4).or_exit();
 
     println!("calibrating the join cost model on this machine...");
     let cal = calibrate();

@@ -5,6 +5,7 @@
 //! cargo run --release --example nyse_hedge -- --duration 20
 //! ```
 
+use stretch::cli::OrExit;
 use std::time::Duration;
 use stretch::engine::{VsnEngine, VsnOptions};
 use stretch::operator::join::{scalejoin_op, Either};
@@ -18,10 +19,11 @@ fn main() {
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
 
+    let peak = args.f64_or("peak", 1500.0).or_exit();
     let cfg = NyseConfig {
-        duration_s: args.u64_or("duration", 20) as u32,
-        peak_rate: args.f64_or("peak", 1500.0),
-        floor_rate: args.f64_or("peak", 1500.0) / 15.0,
+        duration_s: args.u64_or("duration", 20).or_exit() as u32,
+        peak_rate: peak,
+        floor_rate: peak / 15.0,
         ..Default::default()
     };
     println!("generating {}s of synthetic NYSE trades ({} symbols)...", cfg.duration_s, cfg.symbols);

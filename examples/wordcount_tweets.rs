@@ -7,6 +7,7 @@
 //! cargo run --release --example wordcount_tweets -- --tweets 20000
 //! ```
 
+use stretch::cli::OrExit;
 use std::time::Duration;
 use stretch::engine::{VsnEngine, VsnOptions};
 use stretch::time::WindowSpec;
@@ -18,7 +19,7 @@ fn main() {
         .opt("tweets", "corpus size", Some("20000"))
         .parse()
         .unwrap_or_else(|e| panic!("{e}"));
-    let n = args.usize_or("tweets", 20_000);
+    let n = args.usize_or("tweets", 20_000).or_exit();
 
     let mut gen = TweetGen::new(TweetGenConfig { vocab: 8_000, seed: 99, ..Default::default() });
     let tuples = gen.take(n);

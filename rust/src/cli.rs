@@ -32,17 +32,58 @@ impl Args {
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Shared parse path: `Ok(None)` when the flag is absent, one error
+    /// format for every malformed value.
+    fn parse_flag<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get(name)
+            .map(|v| {
+                v.parse::<T>()
+                    .map_err(|e| format!("invalid value for --{name}: `{v}` ({e})"))
+            })
+            .transpose()
     }
-    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    fn num_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.parse_flag(name)?.unwrap_or(default))
     }
-    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Numeric getters: a MISSING flag yields the default, but a present,
+    /// malformed value is an error naming the offending flag — it must
+    /// never be silently swallowed into the default.
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.num_or(name, default)
+    }
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        self.num_or(name, default)
+    }
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        self.num_or(name, default)
+    }
+    /// Optional numeric flag: `Ok(None)` when absent.
+    pub fn u64_opt(&self, name: &str) -> Result<Option<u64>, String> {
+        self.parse_flag(name)
     }
     pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
+    }
+}
+
+/// `result.or_exit()` — print the CLI error to stderr and exit 2, the
+/// uniform way binaries surface [`Args`] parse failures.
+pub trait OrExit<T> {
+    fn or_exit(self) -> T;
+}
+
+impl<T> OrExit<T> for Result<T, String> {
+    fn or_exit(self) -> T {
+        self.unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        })
     }
 }
 
@@ -160,7 +201,7 @@ mod tests {
     #[test]
     fn defaults_apply() {
         let a = parse(&[]);
-        assert_eq!(a.usize_or("threads", 0), 4);
+        assert_eq!(a.usize_or("threads", 0).unwrap(), 4);
         assert!(a.get("mode").is_none());
         assert!(!a.flag("verbose"));
     }
@@ -168,8 +209,44 @@ mod tests {
     #[test]
     fn space_and_equals_forms() {
         let a = parse(&["--threads", "8", "--mode=sim"]);
-        assert_eq!(a.usize_or("threads", 0), 8);
+        assert_eq!(a.usize_or("threads", 0).unwrap(), 8);
         assert_eq!(a.get("mode"), Some("sim"));
+    }
+
+    #[test]
+    fn malformed_numeric_value_errors_name_the_flag() {
+        let a = parse(&["--threads", "lots"]);
+        let e = a.usize_or("threads", 4).unwrap_err();
+        assert!(e.contains("--threads") && e.contains("lots"), "unhelpful error: {e}");
+        let e = a.u64_or("threads", 4).unwrap_err();
+        assert!(e.contains("--threads"), "{e}");
+        let a = parse(&["--mode", "fast"]);
+        let e = a.f64_or("mode", 1.0).unwrap_err();
+        assert!(e.contains("--mode") && e.contains("fast"), "{e}");
+    }
+
+    #[test]
+    fn missing_flag_still_yields_default_not_error() {
+        let a = parse(&[]);
+        assert_eq!(a.u64_or("mode", 9).unwrap(), 9);
+        assert_eq!(a.f64_or("mode", 2.5).unwrap(), 2.5);
+        assert_eq!(a.u64_opt("mode").unwrap(), None);
+    }
+
+    #[test]
+    fn optional_numeric_flag_parses_or_errors() {
+        let a = parse(&["--threads", "12"]);
+        assert_eq!(a.u64_opt("threads").unwrap(), Some(12));
+        let a = parse(&["--threads", "12x"]);
+        assert!(a.u64_opt("threads").unwrap_err().contains("--threads"));
+    }
+
+    #[test]
+    fn negative_and_overflow_values_error() {
+        let a = parse(&["--threads", "-3"]);
+        assert!(a.usize_or("threads", 1).is_err(), "negative must not fall back to default");
+        let a = parse(&["--threads", "99999999999999999999999999"]);
+        assert!(a.u64_or("threads", 1).is_err(), "overflow must not fall back to default");
     }
 
     #[test]

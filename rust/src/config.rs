@@ -23,23 +23,49 @@ pub struct BatchTuning {
     pub ingress: usize,
     /// SN instance queue hop granularity (SPSC push_slice / pop_chunk).
     pub queue: usize,
+    /// Adaptive worker-batch sizing (`[batch] adaptive = true`): the
+    /// harness re-derives each stage's effective worker batch from its
+    /// observed `in_backlog` every controller tick — cold stages flush
+    /// small for latency, hot stages batch large for throughput.
+    pub adaptive: bool,
+    /// Lower clamp of the adaptive worker batch.
+    pub worker_min: usize,
+    /// Upper clamp of the adaptive worker batch (≥ `worker_min`).
+    pub worker_max: usize,
 }
 
 impl Default for BatchTuning {
     fn default() -> Self {
-        BatchTuning { worker: 128, ingress: 256, queue: 128 }
+        BatchTuning {
+            worker: 128,
+            ingress: 256,
+            queue: 128,
+            adaptive: false,
+            worker_min: 16,
+            worker_max: 1024,
+        }
     }
 }
 
 impl BatchTuning {
     /// Read the `[batch]` section (missing keys keep defaults; values
-    /// are clamped to ≥ 1 so a zero can never stall a loop).
+    /// are clamped to ≥ 1 so a zero can never stall a loop, and
+    /// `worker_max` is clamped to ≥ `worker_min`).
+    ///
+    /// Adding a key here? Also register it in
+    /// `harness::JOB_SECTION_KEYS`, or job configs using it will be
+    /// rejected as typos.
     pub fn from_config(c: &Config) -> Self {
         let d = BatchTuning::default();
+        let worker_min = (c.int_or("batch.worker_min", d.worker_min as i64).max(1)) as usize;
         BatchTuning {
             worker: (c.int_or("batch.worker", d.worker as i64).max(1)) as usize,
             ingress: (c.int_or("batch.ingress", d.ingress as i64).max(1)) as usize,
             queue: (c.int_or("batch.queue", d.queue as i64).max(1)) as usize,
+            adaptive: c.bool_or("batch.adaptive", d.adaptive),
+            worker_min,
+            worker_max: (c.int_or("batch.worker_max", d.worker_max as i64).max(1) as usize)
+                .max(worker_min),
         }
     }
 }
@@ -406,6 +432,20 @@ rate_scale = 1.5
         assert_eq!(t.worker, 32);
         assert_eq!(t.ingress, BatchTuning::default().ingress);
         assert_eq!(t.queue, 1); // clamped
+        assert!(!t.adaptive);
+    }
+
+    #[test]
+    fn adaptive_batch_bounds_parse_and_clamp() {
+        let c =
+            Config::parse("[batch]\nadaptive = true\nworker_min = 8\nworker_max = 256").unwrap();
+        let t = BatchTuning::from_config(&c);
+        assert!(t.adaptive);
+        assert_eq!((t.worker_min, t.worker_max), (8, 256));
+        // worker_max can never undercut worker_min
+        let c = Config::parse("[batch]\nworker_min = 64\nworker_max = 4").unwrap();
+        let t = BatchTuning::from_config(&c);
+        assert_eq!((t.worker_min, t.worker_max), (64, 64));
     }
 
     #[test]

@@ -234,10 +234,14 @@ struct NodeDecl<In: Payload + Default> {
 /// Builder for DAG topologies: declare nodes with [`source`]/[`node`]
 /// (handles enforce edge types), then [`build`] into a running
 /// [`Pipeline`]. `In` is the external input payload (every source node
-/// consumes it), `Out` the sink output payload (every sink emits it).
+/// consumes it); the sink output payload is a parameter of [`build`]
+/// itself, so one builder value can grow through stages of arbitrary
+/// intermediate types — which is what lets the linear
+/// [`crate::engine::pipeline::PipelineBuilder`] be a thin façade over
+/// this type.
 ///
 /// ```ignore
-/// let mut b = DagBuilder::<Trade, HedgeOut>::new();
+/// let mut b = DagBuilder::<Trade>::new();
 /// let s = b.source(trade_filter_op(64), opts_s);
 /// let a = b.node(left_leg_op(64), opts_a, &[s]);   // fan-out: a and b
 /// let c = b.node(right_leg_op(64), opts_b, &[s]);  //   share s's gate
@@ -248,21 +252,20 @@ struct NodeDecl<In: Payload + Default> {
 /// [`source`]: DagBuilder::source
 /// [`node`]: DagBuilder::node
 /// [`build`]: DagBuilder::build
-pub struct DagBuilder<In: Payload + Default, Out: Payload + Default> {
+pub struct DagBuilder<In: Payload + Default> {
     nodes: Vec<NodeDecl<In>>,
     clock: EngineClock,
-    _m: PhantomData<fn(In) -> Out>,
 }
 
-impl<In: Payload + Default, Out: Payload + Default> Default for DagBuilder<In, Out> {
+impl<In: Payload + Default> Default for DagBuilder<In> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<In: Payload + Default, Out: Payload + Default> DagBuilder<In, Out> {
+impl<In: Payload + Default> DagBuilder<In> {
     pub fn new() -> Self {
-        DagBuilder { nodes: Vec::new(), clock: EngineClock::new(), _m: PhantomData }
+        DagBuilder { nodes: Vec::new(), clock: EngineClock::new() }
     }
 
     /// Number of declared nodes so far.
@@ -369,8 +372,12 @@ impl<In: Payload + Default, Out: Payload + Default> DagBuilder<In, Out> {
     /// stage, and return the running [`Pipeline`]. `sinks` must list
     /// exactly the nodes no other node consumes; their output gates get
     /// `opts.egress_readers` reader ends each, concatenated into
-    /// `Pipeline::egress` in the given order.
-    pub fn build(self, sinks: &[NodeHandle<Out>]) -> Result<Pipeline<In, Out>, DagError> {
+    /// `Pipeline::egress` in the given order. `Out` (every sink's output
+    /// payload) is inferred from the sink handles.
+    pub fn build<Out: Payload + Default>(
+        self,
+        sinks: &[NodeHandle<Out>],
+    ) -> Result<Pipeline<In, Out>, DagError> {
         let n = self.nodes.len();
         if n == 0 {
             return Err(DagError::Empty);
@@ -544,7 +551,7 @@ mod tests {
 
     #[test]
     fn diamond_topology_builds_and_flows() {
-        let mut b = DagBuilder::<u64, u64>::new();
+        let mut b = DagBuilder::<u64>::new();
         let s = b.source(id_op("s"), opts(1, 2));
         let a = b.node(id_op("a"), opts(1, 2), &[s]);
         let c = b.node(id_op("b"), opts(1, 2), &[s]);
@@ -587,51 +594,51 @@ mod tests {
 
     #[test]
     fn conflicting_fanout_sets_rejected() {
-        let mut b = DagBuilder::<u64, u64>::new();
+        let mut b = DagBuilder::<u64>::new();
         let s = b.source(id_op("s"), opts(1, 2));
         let s2 = b.source(id_op("s2"), opts(1, 2));
         let _a = b.node(id_op("a"), opts(1, 2), &[s]);
         let _c = b.node(id_op("b"), opts(1, 2), &[s, s2]);
         // `s` would publish into two different gates
-        let err = b.build(&[]).unwrap_err();
+        let err = b.build::<u64>(&[]).unwrap_err();
         assert!(matches!(err, DagError::FanOutSetConflict { .. }), "{err}");
     }
 
     #[test]
     fn sink_validation() {
-        let mut b = DagBuilder::<u64, u64>::new();
+        let mut b = DagBuilder::<u64>::new();
         let s = b.source(id_op("s"), opts(1, 2));
         let a = b.node(id_op("a"), opts(1, 2), &[s]);
         // `a` is the sink, `s` is consumed: passing `s` must fail…
         let err = b.build(&[s, a]).unwrap_err();
         assert!(matches!(err, DagError::SinkNotEgress { .. }), "{err}");
         // …and omitting `a` must fail too
-        let mut b = DagBuilder::<u64, u64>::new();
+        let mut b = DagBuilder::<u64>::new();
         let s = b.source(id_op("s"), opts(1, 2));
         let _a = b.node(id_op("a"), opts(1, 2), &[s]);
-        let err = b.build(&[]).unwrap_err();
+        let err = b.build::<u64>(&[]).unwrap_err();
         assert!(matches!(err, DagError::MissingSink { .. }), "{err}");
     }
 
     #[test]
     fn empty_dag_rejected() {
-        let b = DagBuilder::<u64, u64>::new();
-        assert_eq!(b.build(&[]).unwrap_err(), DagError::Empty);
+        let b = DagBuilder::<u64>::new();
+        assert_eq!(b.build::<u64>(&[]).unwrap_err(), DagError::Empty);
     }
 
     #[test]
     fn duplicate_upstream_rejected() {
-        let mut b = DagBuilder::<u64, u64>::new();
+        let mut b = DagBuilder::<u64>::new();
         let s = b.source(id_op("s"), opts(1, 2));
         let _a = b.node(id_op("a"), opts(1, 2), &[s, s]);
-        let err = b.build(&[]).unwrap_err();
+        let err = b.build::<u64>(&[]).unwrap_err();
         assert!(matches!(err, DagError::DuplicateUpstream { .. }), "{err}");
     }
 
     #[test]
     fn multi_sink_dag_exposes_all_egress() {
         // S fans out to two sinks: both must surface readers + gates
-        let mut b = DagBuilder::<u64, u64>::new();
+        let mut b = DagBuilder::<u64>::new();
         let s = b.source(id_op("s"), opts(1, 2));
         let a = b.node(id_op("a"), opts(1, 2), &[s]);
         let c = b.node(id_op("b"), opts(1, 2), &[s]);

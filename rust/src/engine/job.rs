@@ -1,0 +1,756 @@
+//! The declarative JobSpec layer: a topology as *configuration*, not
+//! code.
+//!
+//! STRETCH's pitch is that VSN keeps the widely-adopted SN-style APIs
+//! while the runtime handles scale-up and sub-40 ms reconfiguration —
+//! and in engines people actually adopt, a job is a *declaration* the
+//! engine plans (Flink jobs, Elasticutor's executor model, the
+//! parallelization plans of Röger & Mayer's survey), not bespoke wiring
+//! in the host language. This module closes that gap: a `[topology]` /
+//! `[stage.<name>]` config (parsed by [`crate::config::Config`])
+//! declares stages by name, edges, per-stage parallelism and operator
+//! parameters; [`JobSpec::from_config`] validates it (unknown operator,
+//! dangling edge, cycle, edge payload-type mismatch → typed
+//! [`JobError`]s) and [`JobSpec::build`] resolves every stage through
+//! the operator registry ([`crate::workloads::registry`]) into ONE
+//! [`DagBuilder`] pass — the same construction path the typed
+//! [`crate::engine::pipeline::PipelineBuilder`] and hand-built DAGs use,
+//! so a config-built topology is gate-for-gate identical to a hand-built
+//! one.
+//!
+//! ```text
+//! [topology]
+//! stages = ["filter", "left", "right", "join"]
+//!
+//! [stage.filter]
+//! operator = "trade-filter"
+//! max = 2
+//!
+//! [stage.left]
+//! operator = "left-leg"
+//! inputs = ["filter"]          # or: [topology] edges = ["filter -> left"]
+//! ...
+//! ```
+//!
+//! Stage order in the config is free — stages are topologically sorted
+//! before building (sources first), and [`BuiltJob::stage_names`] maps
+//! the running pipeline's stage indices back to config names. Driving a
+//! job under a rate schedule (controllers, adaptive batching,
+//! `BENCH_<job>.json`) lives in [`crate::harness::run_job`]; the
+//! `stretch run --config job.conf` CLI entrypoint wraps that.
+
+use crate::config::{Config, ConfigError, ConfigValue};
+use crate::engine::dag::{DagBuilder, DagError, NodeHandle};
+use crate::engine::pipeline::Pipeline;
+use crate::engine::vsn::VsnOptions;
+use crate::harness::HarnessError;
+use crate::workloads::registry::{self, JobPayload, PayloadKind, StageParams};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Typed errors of the declarative job layer — every way a config can be
+/// wrong is reported by name, before any thread or gate exists.
+#[derive(Debug)]
+pub enum JobError {
+    /// The config file failed to load/parse.
+    Config(ConfigError),
+    /// `[topology] stages` is missing or empty.
+    NoStages,
+    /// The same stage name is declared twice.
+    DuplicateStage(String),
+    /// A stage names an operator the registry does not know.
+    UnknownOperator { stage: String, operator: String },
+    /// An edge references an undeclared stage.
+    DanglingEdge { stage: String, input: String },
+    /// The same edge is declared twice (via `inputs` and/or `edges`).
+    DuplicateEdge { stage: String, input: String },
+    /// The edges contain a cycle through this stage.
+    Cycle { stage: String },
+    /// An edge's upstream output payload kind does not match the
+    /// consumer's input kind.
+    TypeMismatch {
+        stage: String,
+        input: String,
+        expected: PayloadKind,
+        got: PayloadKind,
+    },
+    /// Source stages disagree on the external input payload kind (one
+    /// paced generator feeds every ingress).
+    MixedSourceKinds {
+        first: PayloadKind,
+        stage: String,
+        got: PayloadKind,
+    },
+    /// No paced generator produces this payload kind (the job can still
+    /// be built and fed manually — only `run_job` needs a generator).
+    NoSource(PayloadKind),
+    /// A key exists but its value is out of range / of the wrong type.
+    BadValue { key: String, msg: String },
+    /// The declared topology failed DAG validation (fan-out set
+    /// conflicts and friends).
+    Dag(DagError),
+    /// The built job could not be driven (degenerate ingress/egress).
+    Harness(HarnessError),
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::Config(e) => write!(f, "config: {e}"),
+            JobError::NoStages => {
+                write!(f, "`[topology] stages` is missing or empty — nothing to build")
+            }
+            JobError::DuplicateStage(s) => write!(f, "stage `{s}` declared twice"),
+            JobError::UnknownOperator { stage, operator } => write!(
+                f,
+                "stage `{stage}`: unknown operator `{operator}` (known: {})",
+                registry::OPERATORS
+                    .iter()
+                    .map(|e| e.name)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+            JobError::DanglingEdge { stage, input } => write!(
+                f,
+                "stage `{stage}` consumes `{input}`, which is not a declared stage"
+            ),
+            JobError::DuplicateEdge { stage, input } => {
+                write!(f, "edge `{input}` -> `{stage}` declared twice")
+            }
+            JobError::Cycle { stage } => write!(
+                f,
+                "topology has a cycle through stage `{stage}` — jobs must be DAGs"
+            ),
+            JobError::TypeMismatch { stage, input, expected, got } => write!(
+                f,
+                "stage `{stage}` consumes `{expected}` but upstream `{input}` produces `{got}`"
+            ),
+            JobError::MixedSourceKinds { first, stage, got } => write!(
+                f,
+                "source stages disagree on the external payload kind: \
+                 saw `{first}`, but `{stage}` consumes `{got}`"
+            ),
+            JobError::NoSource(kind) => {
+                write!(f, "no paced generator produces payload kind `{kind}`")
+            }
+            JobError::BadValue { key, msg } => write!(f, "key `{key}`: {msg}"),
+            JobError::Dag(e) => write!(f, "topology: {e}"),
+            JobError::Harness(e) => write!(f, "harness: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            JobError::Config(e) => Some(e),
+            JobError::Dag(e) => Some(e),
+            JobError::Harness(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ConfigError> for JobError {
+    fn from(e: ConfigError) -> Self {
+        JobError::Config(e)
+    }
+}
+
+impl From<DagError> for JobError {
+    fn from(e: DagError) -> Self {
+        JobError::Dag(e)
+    }
+}
+
+/// One declared stage, fully resolved against the config defaults.
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    pub name: String,
+    /// Registry operator name (validated to exist).
+    pub operator: String,
+    /// Upstream stage names (empty ⇔ external source stage).
+    pub inputs: Vec<String>,
+    /// Initial / maximum parallelism (m, n).
+    pub initial: usize,
+    pub max: usize,
+    pub gate_capacity: usize,
+    pub worker_batch: usize,
+    /// External ingress wrappers (source stages only).
+    pub upstreams: usize,
+    /// Egress reader ends (sink stages only).
+    pub egress_readers: usize,
+    /// Operator parameters (`ws_ms`, `wa_ms`, `lb_keys`, `keys`).
+    pub params: StageParams,
+}
+
+/// A validated, topologically ordered job declaration.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub name: String,
+    /// Stages in topological order (sources first) — the order their
+    /// engines are built and the order of `Pipeline::stages`.
+    pub stages: Vec<StageSpec>,
+    /// External input payload kind every source stage consumes.
+    pub source_kind: PayloadKind,
+    /// Sink stage names (stages nothing consumes), topological order.
+    pub sinks: Vec<String>,
+}
+
+/// A running, config-built topology plus the name map back into the
+/// config's stage names.
+pub struct BuiltJob {
+    pub pipeline: Pipeline<JobPayload, JobPayload>,
+    /// Config stage names aligned with `pipeline.stages` indices.
+    pub stage_names: Vec<String>,
+}
+
+impl BuiltJob {
+    /// Stage index of a config stage name (for `reconfigure_stage`).
+    pub fn stage_index(&self, name: &str) -> Option<usize> {
+        self.stage_names.iter().position(|n| n == name)
+    }
+}
+
+fn int_field(c: &Config, key: String, default: i64) -> Result<i64, JobError> {
+    match c.get(&key) {
+        None => Ok(default),
+        Some(ConfigValue::Int(v)) => Ok(*v),
+        Some(other) => Err(JobError::BadValue {
+            key,
+            msg: format!("expected an integer, got `{other}`"),
+        }),
+    }
+}
+
+fn positive(key: String, v: i64) -> Result<usize, JobError> {
+    if v >= 1 {
+        Ok(v as usize)
+    } else {
+        Err(JobError::BadValue { key, msg: format!("must be ≥ 1, got {v}") })
+    }
+}
+
+fn string_list(c: &Config, key: &str) -> Result<Option<Vec<String>>, JobError> {
+    match c.get(key) {
+        None => Ok(None),
+        Some(ConfigValue::List(xs)) => xs
+            .iter()
+            .map(|x| match x {
+                ConfigValue::Str(s) => Ok(s.clone()),
+                other => Err(JobError::BadValue {
+                    key: key.to_string(),
+                    msg: format!("expected a string list element, got `{other}`"),
+                }),
+            })
+            .collect::<Result<Vec<_>, _>>()
+            .map(Some),
+        Some(other) => Err(JobError::BadValue {
+            key: key.to_string(),
+            msg: format!("expected a list, got `{other}`"),
+        }),
+    }
+}
+
+impl JobSpec {
+    /// Parse and validate a job declaration from a config. Every failure
+    /// mode is a typed [`JobError`]; nothing is spawned here.
+    pub fn from_config(c: &Config) -> Result<JobSpec, JobError> {
+        let stage_names = match string_list(c, "topology.stages")? {
+            Some(v) if !v.is_empty() => v,
+            _ => return Err(JobError::NoStages),
+        };
+        for (i, n) in stage_names.iter().enumerate() {
+            if stage_names[..i].contains(n) {
+                return Err(JobError::DuplicateStage(n.clone()));
+            }
+            if n.is_empty() || !n.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '-' || ch == '_') {
+                return Err(JobError::BadValue {
+                    key: "topology.stages".into(),
+                    msg: format!(
+                        "stage name `{n}` must be non-empty [A-Za-z0-9_-] \
+                         (it becomes a `[stage.<name>]` section key)"
+                    ),
+                });
+            }
+        }
+
+        // Reject unknown `[topology]` / `[stage.*]` keys up front: a
+        // typo'd key (e.g. `window_ms` for `ws_ms`) silently falling
+        // back to a default would run a different job than the one the
+        // user declared — the opposite of this layer's contract.
+        const STAGE_KEYS: &[&str] = &[
+            "operator",
+            "inputs",
+            "initial",
+            "max",
+            "gate_capacity",
+            "worker_batch",
+            "upstreams",
+            "egress_readers",
+            "ws_ms",
+            "wa_ms",
+            "lb_keys",
+            "keys",
+        ];
+        for k in c.keys() {
+            if let Some(rest) = k.strip_prefix("topology.") {
+                if rest != "stages" && rest != "edges" {
+                    return Err(JobError::BadValue {
+                        key: k.to_string(),
+                        msg: "unknown `[topology]` key (expected `stages` or `edges`)".into(),
+                    });
+                }
+            } else if let Some(rest) = k.strip_prefix("stage.") {
+                let (stage, field) = rest.split_once('.').ok_or_else(|| JobError::BadValue {
+                    key: k.to_string(),
+                    msg: "expected `stage.<name>.<field>`".into(),
+                })?;
+                if !stage_names.iter().any(|n| n == stage) {
+                    return Err(JobError::BadValue {
+                        key: k.to_string(),
+                        msg: format!(
+                            "section `[stage.{stage}]` does not match any declared stage \
+                             (declared: {})",
+                            stage_names.join(", ")
+                        ),
+                    });
+                }
+                if !STAGE_KEYS.contains(&field) {
+                    return Err(JobError::BadValue {
+                        key: k.to_string(),
+                        msg: format!("unknown stage key `{field}` (known: {})", STAGE_KEYS.join(", ")),
+                    });
+                }
+            }
+        }
+
+        let default_batch = crate::config::BatchTuning::from_config(c).worker;
+        let mut stages: Vec<StageSpec> = Vec::with_capacity(stage_names.len());
+        for n in &stage_names {
+            let key = |k: &str| format!("stage.{n}.{k}");
+            let operator = match c.get(&key("operator")) {
+                Some(ConfigValue::Str(s)) => s.clone(),
+                Some(other) => {
+                    return Err(JobError::BadValue {
+                        key: key("operator"),
+                        msg: format!("expected an operator name string, got `{other}`"),
+                    })
+                }
+                None => {
+                    return Err(JobError::BadValue {
+                        key: key("operator"),
+                        msg: "every stage needs an `operator = \"...\"`".into(),
+                    })
+                }
+            };
+            if registry::lookup(&operator).is_none() {
+                return Err(JobError::UnknownOperator { stage: n.clone(), operator });
+            }
+            let inputs = string_list(c, &key("inputs"))?.unwrap_or_default();
+            let initial = positive(key("initial"), int_field(c, key("initial"), 1)?)?;
+            let max = positive(key("max"), int_field(c, key("max"), 4)?)?;
+            if initial > max {
+                return Err(JobError::BadValue {
+                    key: key("initial"),
+                    msg: format!("initial parallelism {initial} exceeds max {max}"),
+                });
+            }
+            let ws_ms = positive(key("ws_ms"), int_field(c, key("ws_ms"), 1_000)?)? as i64;
+            let wa_ms = positive(key("wa_ms"), int_field(c, key("wa_ms"), ws_ms)?)? as i64;
+            stages.push(StageSpec {
+                name: n.clone(),
+                operator,
+                inputs,
+                initial,
+                max,
+                gate_capacity: positive(
+                    key("gate_capacity"),
+                    int_field(c, key("gate_capacity"), 1 << 15)?,
+                )?,
+                worker_batch: positive(
+                    key("worker_batch"),
+                    int_field(c, key("worker_batch"), default_batch as i64)?,
+                )?,
+                upstreams: positive(key("upstreams"), int_field(c, key("upstreams"), 1)?)?,
+                egress_readers: positive(
+                    key("egress_readers"),
+                    int_field(c, key("egress_readers"), 1)?,
+                )?,
+                params: StageParams {
+                    ws_ms,
+                    wa_ms,
+                    lb_keys: positive(key("lb_keys"), int_field(c, key("lb_keys"), 64)?)? as u64,
+                    n_keys: positive(key("keys"), int_field(c, key("keys"), 32)?)? as u64,
+                },
+            });
+        }
+
+        // `[topology] edges = ["a -> b", ...]` is sugar for per-stage
+        // `inputs`; both merge (edge list appended in declaration order).
+        // Keyed off `stage_names` (same order as `stages`) so the map's
+        // borrows don't alias the mutable edge-merging below.
+        let idx_of: BTreeMap<&str, usize> =
+            stage_names.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
+        if let Some(edges) = string_list(c, "topology.edges")? {
+            for e in &edges {
+                let (from, to) = e.split_once("->").ok_or_else(|| JobError::BadValue {
+                    key: "topology.edges".into(),
+                    msg: format!("expected `from -> to`, got `{e}`"),
+                })?;
+                let (from, to) = (from.trim().to_string(), to.trim().to_string());
+                let Some(&ti) = idx_of.get(to.as_str()) else {
+                    return Err(JobError::DanglingEdge { stage: to, input: from });
+                };
+                stages[ti].inputs.push(from);
+            }
+        }
+
+        // edge validation: dangling references, duplicates, self-loops
+        for s in &stages {
+            for (i, inp) in s.inputs.iter().enumerate() {
+                if !idx_of.contains_key(inp.as_str()) {
+                    return Err(JobError::DanglingEdge {
+                        stage: s.name.clone(),
+                        input: inp.clone(),
+                    });
+                }
+                if s.inputs[..i].contains(inp) {
+                    return Err(JobError::DuplicateEdge {
+                        stage: s.name.clone(),
+                        input: inp.clone(),
+                    });
+                }
+                if inp == &s.name {
+                    return Err(JobError::Cycle { stage: s.name.clone() });
+                }
+            }
+        }
+
+        // stable topological sort (Kahn): config order is free, engines
+        // must be built sources-first; a stall means a cycle
+        let n = stages.len();
+        let mut placed = vec![false; n];
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        while order.len() < n {
+            let mut progressed = false;
+            for i in 0..n {
+                if !placed[i] && stages[i].inputs.iter().all(|inp| placed[idx_of[inp.as_str()]]) {
+                    placed[i] = true;
+                    order.push(i);
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                let stuck = (0..n).find(|&i| !placed[i]).expect("unplaced stage exists");
+                return Err(JobError::Cycle { stage: stages[stuck].name.clone() });
+            }
+        }
+
+        // edge payload-type checking against the registry
+        for s in &stages {
+            let entry = registry::lookup(&s.operator).expect("validated above");
+            for inp in &s.inputs {
+                let up = &stages[idx_of[inp.as_str()]];
+                let up_entry = registry::lookup(&up.operator).expect("validated above");
+                if up_entry.output != entry.input {
+                    return Err(JobError::TypeMismatch {
+                        stage: s.name.clone(),
+                        input: inp.clone(),
+                        expected: entry.input,
+                        got: up_entry.output,
+                    });
+                }
+            }
+        }
+
+        // external source kind: every source stage must agree (one paced
+        // generator feeds all ingress wrappers)
+        let mut source_kind: Option<PayloadKind> = None;
+        for s in &stages {
+            if !s.inputs.is_empty() {
+                continue;
+            }
+            let kind = registry::lookup(&s.operator).expect("validated above").input;
+            match source_kind {
+                None => source_kind = Some(kind),
+                Some(first) if first != kind => {
+                    return Err(JobError::MixedSourceKinds {
+                        first,
+                        stage: s.name.clone(),
+                        got: kind,
+                    })
+                }
+                Some(_) => {}
+            }
+        }
+        let source_kind = source_kind.expect("a DAG always has a source stage");
+
+        // sinks: stages nothing consumes, in topological order
+        let consumed: Vec<&String> = stages.iter().flat_map(|s| s.inputs.iter()).collect();
+        let stages: Vec<StageSpec> = order.into_iter().map(|i| stages[i].clone()).collect();
+        let sinks: Vec<String> = stages
+            .iter()
+            .filter(|s| !consumed.iter().any(|c| *c == &s.name))
+            .map(|s| s.name.clone())
+            .collect();
+
+        Ok(JobSpec {
+            name: c.str_or("name", "job").to_string(),
+            stages,
+            source_kind,
+            sinks,
+        })
+    }
+
+    /// Resolve every stage through the operator registry and build the
+    /// running topology — one [`DagBuilder`] pass, the same construction
+    /// path hand-built topologies use.
+    pub fn build(&self) -> Result<BuiltJob, JobError> {
+        let mut b = DagBuilder::<JobPayload>::new();
+        let mut handles: BTreeMap<&str, NodeHandle<JobPayload>> = BTreeMap::new();
+        for s in &self.stages {
+            let entry = registry::lookup(&s.operator).expect("JobSpec is validated");
+            let ups: Vec<NodeHandle<JobPayload>> =
+                s.inputs.iter().map(|i| handles[i.as_str()]).collect();
+            let opts = VsnOptions {
+                initial: s.initial,
+                max: s.max,
+                upstreams: s.upstreams,
+                egress_readers: s.egress_readers,
+                gate_capacity: s.gate_capacity,
+                worker_batch: s.worker_batch,
+                ..Default::default()
+            };
+            let h = entry.instantiate(&s.params, &mut b, opts, &ups);
+            handles.insert(&s.name, h);
+        }
+        let sinks: Vec<NodeHandle<JobPayload>> =
+            self.sinks.iter().map(|n| handles[n.as_str()]).collect();
+        let pipeline = b.build(&sinks)?;
+        Ok(BuiltJob {
+            pipeline,
+            stage_names: self.stages.iter().map(|s| s.name.clone()).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<JobSpec, JobError> {
+        JobSpec::from_config(&Config::parse(text).unwrap())
+    }
+
+    const DIAMOND: &str = r#"
+name = "diamond"
+[topology]
+stages = ["join", "left", "right", "filter"]   # deliberately NOT topo order
+[stage.filter]
+operator = "trade-filter"
+max = 2
+[stage.left]
+operator = "left-leg"
+inputs = ["filter"]
+max = 2
+[stage.right]
+operator = "right-leg"
+inputs = ["filter"]
+initial = 2
+max = 2
+[stage.join]
+operator = "hedge-join"
+inputs = ["left", "right"]
+ws_ms = 800
+keys = 32
+max = 3
+"#;
+
+    #[test]
+    fn diamond_round_trip_topo_sorts_and_infers_kinds() {
+        let spec = parse(DIAMOND).unwrap();
+        assert_eq!(spec.name, "diamond");
+        let names: Vec<&str> = spec.stages.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names[0], "filter", "sources must sort first");
+        assert_eq!(names.last().copied(), Some("join"));
+        assert_eq!(spec.sinks, vec!["join"]);
+        assert_eq!(spec.source_kind, PayloadKind::Trade);
+        let join = spec.stages.iter().find(|s| s.name == "join").unwrap();
+        assert_eq!(join.params.ws_ms, 800);
+        assert_eq!(join.params.n_keys, 32);
+        assert_eq!(join.inputs, vec!["left", "right"]);
+    }
+
+    #[test]
+    fn edges_sugar_is_equivalent_to_inputs() {
+        let spec = parse(
+            r#"
+[topology]
+stages = ["a", "b"]
+edges = ["a -> b"]
+[stage.a]
+operator = "tweet-tokenize"
+[stage.b]
+operator = "word-count"
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.stages[1].inputs, vec!["a"]);
+        assert_eq!(spec.sinks, vec!["b"]);
+        assert_eq!(spec.source_kind, PayloadKind::Tweet);
+    }
+
+    #[test]
+    fn cycle_is_a_typed_error() {
+        let err = parse(
+            r#"
+[topology]
+stages = ["a", "b"]
+[stage.a]
+operator = "trade-filter"
+inputs = ["b"]
+[stage.b]
+operator = "trade-filter"
+inputs = ["a"]
+"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::Cycle { .. }), "{err}");
+        // self-loop is a (degenerate) cycle too
+        let err = parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"trade-filter\"\ninputs = [\"a\"]",
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::Cycle { .. }), "{err}");
+    }
+
+    #[test]
+    fn unknown_operator_is_a_typed_error() {
+        let err = parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"frobnicate\"",
+        )
+        .unwrap_err();
+        match err {
+            JobError::UnknownOperator { stage, operator } => {
+                assert_eq!((stage.as_str(), operator.as_str()), ("a", "frobnicate"));
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn dangling_edge_is_a_typed_error() {
+        let err = parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"trade-filter\"\ninputs = [\"ghost\"]",
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::DanglingEdge { .. }), "{err}");
+        // ...and via the edges sugar, in either position
+        let err = parse(
+            "[topology]\nstages = [\"a\"]\nedges = [\"a -> ghost\"]\n[stage.a]\noperator = \"trade-filter\"",
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::DanglingEdge { .. }), "{err}");
+    }
+
+    #[test]
+    fn edge_type_mismatch_is_a_typed_error() {
+        let err = parse(
+            r#"
+[topology]
+stages = ["a", "b"]
+[stage.a]
+operator = "trade-filter"
+[stage.b]
+operator = "word-count"     # consumes words, not trades
+inputs = ["a"]
+"#,
+        )
+        .unwrap_err();
+        match err {
+            JobError::TypeMismatch { expected, got, .. } => {
+                assert_eq!((expected, got), (PayloadKind::Word, PayloadKind::Trade));
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn no_stages_duplicates_and_bad_values_are_typed_errors() {
+        assert!(matches!(parse("x = 1").unwrap_err(), JobError::NoStages));
+        assert!(matches!(parse("[topology]\nstages = []").unwrap_err(), JobError::NoStages));
+        let err = parse("[topology]\nstages = [\"a\", \"a\"]").unwrap_err();
+        assert!(matches!(err, JobError::DuplicateStage(_)), "{err}");
+        let err = parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"trade-filter\"\ninitial = 0",
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::BadValue { .. }), "{err}");
+        let err = parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"trade-filter\"\ninitial = 3\nmax = 2",
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::BadValue { .. }), "{err}");
+        let err = parse("[topology]\nstages = [\"a\"]").unwrap_err();
+        assert!(matches!(err, JobError::BadValue { .. }), "missing operator: {err}");
+    }
+
+    #[test]
+    fn unknown_keys_are_typed_errors_not_silent_defaults() {
+        // typo'd operator parameter: must not silently run ws_ms = 1000
+        let err = parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"hedge-join\"\nwindow_ms = 800",
+        )
+        .unwrap_err();
+        match err {
+            JobError::BadValue { key, .. } => assert_eq!(key, "stage.a.window_ms"),
+            other => panic!("{other}"),
+        }
+        // section for an undeclared stage
+        let err = parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"trade-filter\"\n\
+             [stage.b]\noperator = \"trade-filter\"",
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::BadValue { .. }), "{err}");
+        // typo'd topology key
+        let err = parse("[topology]\nstages = [\"a\"]\nedgez = [\"a -> a\"]\n[stage.a]\noperator = \"trade-filter\"")
+            .unwrap_err();
+        assert!(matches!(err, JobError::BadValue { .. }), "{err}");
+    }
+
+    #[test]
+    fn duplicate_edge_is_a_typed_error() {
+        let err = parse(
+            r#"
+[topology]
+stages = ["a", "b"]
+edges = ["a -> b"]
+[stage.a]
+operator = "trade-filter"
+[stage.b]
+operator = "trade-filter"
+inputs = ["a"]
+"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::DuplicateEdge { .. }), "{err}");
+    }
+
+    #[test]
+    fn config_built_diamond_spawns_and_exposes_name_map() {
+        let spec = parse(DIAMOND).unwrap();
+        let mut built = spec.build().unwrap();
+        assert_eq!(built.pipeline.depth(), 4);
+        assert_eq!(built.pipeline.ingress.len(), 1);
+        assert_eq!(built.pipeline.egress.len(), 1);
+        assert_eq!(built.stage_index("filter"), Some(0));
+        assert_eq!(built.stage_index("join"), Some(3));
+        assert_eq!(built.stage_index("ghost"), None);
+        // operator names surfaced on the type-erased handles
+        assert_eq!(built.pipeline.stages[0].name(), "trade-filter");
+        assert_eq!(built.pipeline.stages[3].name(), "hedge");
+        built.pipeline.shutdown();
+    }
+}

@@ -7,10 +7,16 @@
 //! * [`pipeline`] — linear topology layer: stages chained through shared
 //!   ESGs (stage N's ESG_out ≡ stage N+1's ESG_in), each stage
 //!   independently elastic via its own control plane;
-//! * [`dag`] — true DAG topologies: fan-out (several reader groups on
-//!   one shared ESG_out) and fan-in (one source-slot group per upstream
-//!   on a shared ESG_in), with a reserved control slot + tag per edge so
-//!   every stage stays independently elastic;
+//! * [`dag`] — THE topology construction path: fan-out (several reader
+//!   groups on one shared ESG_out) and fan-in (one source-slot group per
+//!   upstream on a shared ESG_in), with a reserved control slot + tag
+//!   per edge so every stage stays independently elastic; linear chains
+//!   ([`pipeline`]) and config-built jobs ([`job`]) both reduce to it;
+//! * [`job`] — the declarative JobSpec layer: `[topology]`/`[stage.*]`
+//!   config sections resolved against the operator registry
+//!   ([`crate::workloads::registry`]) into a running topology, with
+//!   typed validation errors (cycle, unknown operator, dangling edge,
+//!   edge payload-type mismatch);
 //! * [`sn`] — the shared-nothing comparison engine (§2.2): dedicated
 //!   queues + data duplication + private state;
 //! * [`barrier`], [`epoch`], [`ingress`] — the reconfiguration protocol
@@ -20,12 +26,14 @@ pub mod barrier;
 pub mod dag;
 pub mod epoch;
 pub mod ingress;
+pub mod job;
 pub mod pipeline;
 pub mod sn;
 pub mod vsn;
 
 pub use barrier::EpochBarrier;
 pub use dag::{DagBuilder, DagError, NodeHandle};
+pub use job::{BuiltJob, JobError, JobSpec, StageSpec};
 pub use epoch::{EpochConfig, EpochState, PendingReconfig};
 pub use ingress::{ControlPlane, StretchIngress};
 pub use pipeline::{ControlInjector, Pipeline, PipelineBuilder, StageHandle};

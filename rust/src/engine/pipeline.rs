@@ -10,36 +10,32 @@
 //! topology (Elasticutor's per-operator executors; Röger & Mayer's
 //! survey), with no state transfer anywhere.
 //!
-//! Mechanics of the hand-off gate, built by [`PipelineBuilder::stage`]:
-//!
-//! * sources = upstream stage's `max` worker slots **plus one reserved
-//!   control slot** (the last source id), readers = downstream stage's
-//!   `max` worker slots;
-//! * data flows ESG-native and *batch-native* (§Perf): upstream workers
-//!   stage their emissions and hand whole ts-sorted runs over with one
-//!   batched add per [`VsnOptions::worker_batch`] tuples, downstream
-//!   workers take runs via `get_batch`, their handle clocks carry the
-//!   watermark (Lemma 2), and they forward explicit heartbeat entries so
-//!   downstream windows expire when rates drop to zero;
-//! * reconfigurations of the downstream stage enter through the reserved
-//!   control slot ([`ControlInjector`]): the slot is activated with the
-//!   gate's current readiness bound as its Lemma-3 clock floor, the
-//!   control tuple (stamped γ = that bound) is added, and the slot is
-//!   removed again — the paper's addSources/removeSources dance, so an
-//!   idle control slot never gates readiness.
+//! Since PR 4 a linear chain is *literally* a degenerate DAG:
+//! [`PipelineBuilder`] is a thin typed façade over
+//! [`crate::engine::dag::DagBuilder`] — every `stage()` call declares a
+//! DAG node consuming the previous one, and `build()` delegates gate
+//! construction (slot geometry, reserved per-edge control slots,
+//! reader/source groups, elasticity wiring) to the one shared DAG
+//! construction path. See the [`crate::engine::dag`] module docs for the
+//! hand-off gate mechanics; data still flows ESG-native and batch-native
+//! (§Perf), watermarks via handle clocks plus forwarded heartbeat
+//! entries, and downstream reconfigurations via [`ControlInjector`]'s
+//! activate → add → remove protocol over the reserved control slot.
 //!
 //! Stage chaining is *typed*: `PipelineBuilder<In, Cur>` only accepts a
-//! next stage whose operator consumes `Cur`. Engines are constructed
-//! lazily (a stage's ESG_out geometry depends on the NEXT stage's
-//! parallelism), which is why the builder carries a deferred finisher
-//! closure instead of a live engine.
+//! next stage whose operator consumes `Cur`.
+//!
+//! This module keeps the pieces every topology shape shares: the
+//! type-erased [`StageHandle`]/[`VsnStage`], the running [`Pipeline`],
+//! and [`ControlInjector`].
 
+use crate::engine::dag::{DagBuilder, NodeHandle};
 use crate::engine::ingress::ControlPlane;
-use crate::engine::vsn::{EngineClock, StageIo, VsnEngine, VsnOptions};
+use crate::engine::vsn::{EngineClock, VsnEngine, VsnOptions};
 use crate::engine::StretchIngress;
 use crate::metrics::OperatorMetrics;
 use crate::operator::{OperatorDef, OperatorLogic};
-use crate::scalegate::{AddError, Esg, EsgConfig, ReaderHandle, SourceHandle};
+use crate::scalegate::{AddError, Esg, ReaderHandle, SourceHandle};
 use crate::time::{EventTime, TIME_MAX, TIME_MIN};
 use crate::tuple::{Epoch, InstanceId, Mapper, Payload, ReconfigSpec, Tuple};
 use crate::util::Backoff;
@@ -122,6 +118,12 @@ pub trait StageHandle: Send {
     fn max_parallelism(&self) -> usize;
     /// Pending backlog on the stage's ESG_in (flow-control signal).
     fn in_backlog(&self) -> u64;
+    /// Current effective worker batch (tuples per gate synchronization).
+    fn worker_batch(&self) -> usize;
+    /// Retune the worker batch at runtime — adaptive batch sizing: the
+    /// harness derives it from observed `in_backlog`, clamped to
+    /// [`crate::config::BatchTuning`] min/max, each controller tick.
+    fn set_worker_batch(&self, n: usize);
     /// Completed reconfigurations of this stage: (epoch, wall ms).
     fn completion_times(&self) -> Vec<(Epoch, f64)>;
     /// Stop and join the stage's instance threads.
@@ -190,6 +192,14 @@ where
         self.engine.in_backlog()
     }
 
+    fn worker_batch(&self) -> usize {
+        self.engine.worker_batch()
+    }
+
+    fn set_worker_batch(&self, n: usize) {
+        self.engine.set_worker_batch(n);
+    }
+
     fn completion_times(&self) -> Vec<(Epoch, f64)> {
         self.engine.control.completion_times()
     }
@@ -239,29 +249,23 @@ impl<In: Payload + Default, Out: Payload + Default> Pipeline<In, Out> {
     }
 }
 
-/// The deferred finisher of the most recently declared stage: given its
-/// ESG_out (gate + this stage's worker source ends), spawn the engine and
-/// return the type-erased handle (plus ingress wrappers — non-empty only
-/// for stage 0).
-type Finish<In, Out> = Box<
-    dyn FnOnce(
-        Esg<Tuple<Out>>,
-        Vec<SourceHandle<Tuple<Out>>>,
-    ) -> (Box<dyn StageHandle>, Vec<StretchIngress<In>>),
->;
-
 /// Typed builder: `PipelineBuilder::new(def₀, opts₀).stage(def₁, opts₁)
 /// .…​.build()`. `In` is the pipeline input payload, `Cur` the output
 /// payload of the last declared stage (the only thing the next stage may
 /// consume).
+///
+/// A linear chain is just a degenerate DAG, so this builder constructs
+/// NOTHING itself: it is a thin typed façade over
+/// [`crate::engine::dag::DagBuilder`] — `new` declares the source node,
+/// every `stage` call declares a node consuming the previous one, and
+/// `build` hands the whole chain to [`DagBuilder::build`]. Gates,
+/// reader/source slot groups, reserved control slots and elasticity
+/// wiring therefore come from ONE construction path shared with every
+/// other topology shape (see the [`crate::engine::dag`] module docs for
+/// the mechanics).
 pub struct PipelineBuilder<In: Payload + Default, Cur: Payload + Default> {
-    clock: EngineClock,
-    stages: Vec<Box<dyn StageHandle>>,
-    ingress: Vec<StretchIngress<In>>,
-    finish: Finish<In, Cur>,
-    /// Options of the pending (last declared, not yet spawned) stage —
-    /// they size its ESG_out.
-    pending_opts: VsnOptions,
+    dag: DagBuilder<In>,
+    last: NodeHandle<Cur>,
 }
 
 impl<In: Payload + Default, Cur: Payload + Default> PipelineBuilder<In, Cur> {
@@ -272,94 +276,29 @@ impl<In: Payload + Default, Cur: Payload + Default> PipelineBuilder<In, Cur> {
     where
         L: OperatorLogic<In = In, Out = Cur>,
     {
-        let clock = EngineClock::new();
-        let (esg_in, in_sources, in_readers) =
-            Esg::new(opts.in_gate_config(), opts.upstreams, opts.initial);
-        let name = def.name;
-        let clock2 = clock.clone();
-        let opts2 = opts.clone();
-        let finish: Finish<In, Cur> = Box::new(move |esg_out, out_sources| {
-            let io = StageIo {
-                esg_in,
-                in_sources,
-                in_readers,
-                esg_out,
-                out_sources,
-                reader_base: 0,
-                source_base: 0,
-                ctrl_tag: 0,
-            };
-            let max = opts2.max;
-            let (engine, ingress) = VsnEngine::setup_with_gates(def, opts2, io, clock2);
-            (Box::new(VsnStage::new(name, engine, None, max)) as Box<dyn StageHandle>, ingress)
-        });
-        PipelineBuilder { clock, stages: Vec::new(), ingress: Vec::new(), finish, pending_opts: opts }
+        let mut dag = DagBuilder::new();
+        let last = dag.source(def, opts);
+        PipelineBuilder { dag, last }
     }
 
-    /// Chain the next stage: builds the shared hand-off gate (upstream's
-    /// ESG_out ≡ this stage's ESG_in), finishes the upstream stage over
-    /// it, and defers this stage until ITS output geometry is known.
+    /// Chain the next stage through a shared hand-off gate (upstream's
+    /// ESG_out ≡ this stage's ESG_in, plus a reserved control slot).
     /// `opts.upstreams` is ignored for chained stages — their input
     /// sources are the upstream workers plus the reserved control slot.
-    pub fn stage<L>(self, def: OperatorDef<L>, opts: VsnOptions) -> PipelineBuilder<In, L::Out>
+    pub fn stage<L>(mut self, def: OperatorDef<L>, opts: VsnOptions) -> PipelineBuilder<In, L::Out>
     where
         L: OperatorLogic<In = Cur>,
         L::Out: Default,
     {
-        let up = &self.pending_opts;
-        // +1 writer slot: the downstream stage's reserved control slot.
-        let cfg = EsgConfig::for_gate(up.max + 1, opts.max, opts.gate_capacity);
-        let (gate, mut sources, readers) = Esg::new(cfg, up.initial, opts.initial);
-        let ctrl_src = sources.pop().expect("control slot");
-        debug_assert_eq!(sources.len(), up.max);
-        let (handle, ingress0) = (self.finish)(gate.clone(), sources);
-        let mut stages = self.stages;
-        stages.push(handle);
-        let mut ingress = self.ingress;
-        ingress.extend(ingress0);
-
-        let name = def.name;
-        let clock2 = self.clock.clone();
-        let opts2 = opts.clone();
-        let finish: Finish<In, L::Out> = Box::new(move |esg_out, out_sources| {
-            let io = StageIo {
-                esg_in: gate,
-                in_sources: Vec::new(),
-                in_readers: readers,
-                esg_out,
-                out_sources,
-                reader_base: 0,
-                source_base: 0,
-                ctrl_tag: 0,
-            };
-            let max = opts2.max;
-            let (engine, _no_ingress) = VsnEngine::setup_with_gates(def, opts2, io, clock2);
-            let injector = ControlInjector::new(ctrl_src, engine.control.clone());
-            (
-                Box::new(VsnStage::new(name, engine, Some(injector), max))
-                    as Box<dyn StageHandle>,
-                Vec::new(),
-            )
-        });
-        PipelineBuilder {
-            clock: self.clock,
-            stages,
-            ingress,
-            finish,
-            pending_opts: opts,
-        }
+        let last = self.dag.node(def, opts, &[self.last]);
+        PipelineBuilder { dag: self.dag, last }
     }
 
-    /// Terminate the pipeline: build the last stage's ESG_out with
-    /// `pending_opts.egress_readers` reader ends and spawn it.
+    /// Terminate the pipeline: the last declared stage becomes the sole
+    /// sink, its ESG_out gets `opts.egress_readers` reader ends.
     pub fn build(self) -> Pipeline<In, Cur> {
-        let po = &self.pending_opts;
-        let (gate, sources, readers) = Esg::new(po.out_gate_config(), po.initial, po.egress_readers);
-        let (handle, ingress0) = (self.finish)(gate.clone(), sources);
-        let mut stages = self.stages;
-        stages.push(handle);
-        let mut ingress = self.ingress;
-        ingress.extend(ingress0);
-        Pipeline { clock: self.clock, ingress, egress: readers, out_gates: vec![gate], stages }
+        self.dag
+            .build(&[self.last])
+            .expect("a linear chain is always a valid DAG")
     }
 }

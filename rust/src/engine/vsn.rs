@@ -24,7 +24,7 @@ use crate::operator::{Ctx, OperatorCore, OperatorDef, OperatorLogic};
 use crate::scalegate::{Esg, EsgConfig, ReaderHandle, SourceHandle};
 use crate::tuple::{InstanceId, Kind, Mapper, Tuple};
 use crate::util::Backoff;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -149,6 +149,10 @@ pub struct VsnEngine<L: OperatorLogic> {
     epoch: Arc<EpochState>,
     state: Arc<SharedState<L::State>>,
     running: Arc<AtomicBool>,
+    /// Live worker-batch tunable: workers re-read it every gate
+    /// synchronization, so the harness can resize batches from observed
+    /// backlog without a reconfiguration (adaptive batch sizing).
+    batch_knob: Arc<AtomicUsize>,
     threads: Vec<std::thread::JoinHandle<()>>,
     /// This stage's reader-slot range on ESG_in (`backlog_range` group).
     in_reader_lo: usize,
@@ -212,6 +216,7 @@ where
         let running = Arc::new(AtomicBool::new(true));
 
         let batch = opts.worker_batch.max(1);
+        let batch_knob = Arc::new(AtomicUsize::new(batch));
         let mut threads = Vec::with_capacity(opts.max);
         for (id, (reader, out)) in io.in_readers.into_iter().zip(io.out_sources).enumerate() {
             debug_assert_eq!(reader.id(), io.reader_base + id, "reader slot range mismatch");
@@ -222,6 +227,7 @@ where
                 out,
                 out_buf: Vec::with_capacity(batch),
                 batch,
+                batch_knob: batch_knob.clone(),
                 epoch: epoch.clone(),
                 barrier: barrier.clone(),
                 control: control.clone(),
@@ -257,6 +263,7 @@ where
                 epoch,
                 state,
                 running,
+                batch_knob,
                 threads,
                 in_reader_lo: io.reader_base,
                 in_reader_hi: io.reader_base + opts.max,
@@ -270,6 +277,19 @@ where
     /// stage's entries are not this stage's pending work.
     pub fn in_backlog(&self) -> u64 {
         self.esg_in.backlog_range(self.in_reader_lo, self.in_reader_hi)
+    }
+
+    /// Current effective worker batch (tuples per gate synchronization).
+    pub fn worker_batch(&self) -> usize {
+        self.batch_knob.load(Ordering::Relaxed)
+    }
+
+    /// Retune the worker batch at runtime (clamped to ≥ 1); workers pick
+    /// the new value up at their next gate synchronization. Used by the
+    /// harness's adaptive batch sizing: cold stages flush small for
+    /// latency, hot stages batch large for throughput.
+    pub fn set_worker_batch(&self, n: usize) {
+        self.batch_knob.store(n.max(1), Ordering::Relaxed);
     }
 
     /// Current epoch configuration (e, 𝕆, f_μ).
@@ -308,8 +328,11 @@ struct Worker<L: OperatorLogic> {
     /// Emissions staged for one batched gate add (§Perf): flushed when
     /// full, before every clock publish, and before reconfigurations.
     out_buf: Vec<Tuple<L::Out>>,
-    /// Tuples per gate synchronization, in and out.
+    /// Tuples per gate synchronization, in and out — a cached copy of
+    /// `batch_knob`, refreshed once per input batch.
     batch: usize,
+    /// Shared live tunable (see [`VsnEngine::set_worker_batch`]).
+    batch_knob: Arc<AtomicUsize>,
     epoch: Arc<EpochState>,
     barrier: Arc<EpochBarrier>,
     control: Arc<ControlPlane>,
@@ -339,6 +362,9 @@ where
         // new readers at the tuple currently being processed.
         let mut batch: Vec<Tuple<L::In>> = Vec::with_capacity(self.batch);
         while self.running.load(Ordering::Acquire) {
+            // adaptive batch sizing: pick up the harness's latest tuning
+            // (one uncontended relaxed load per gate synchronization)
+            self.batch = self.batch_knob.load(Ordering::Relaxed).max(1);
             if self.reader.get_batch(&mut batch, self.batch) == 0 {
                 // idle: don't sit on staged emissions
                 self.flush_out();

@@ -18,14 +18,21 @@
 //! 20-minute runs replay in seconds; event time always advances at the
 //! schedule's nominal pace.
 
-use crate::elastic::{Controller, DagController, Decision, Observation};
+use crate::config::{BatchTuning, Config};
+use crate::elastic::{
+    Controller, DagController, Decision, JoinCostModel, Observation, ProactiveController,
+    ReactiveController, Thresholds,
+};
+use crate::engine::job::{JobError, JobSpec};
 use crate::engine::pipeline::{Pipeline, PipelineBuilder};
 use crate::engine::{EgressDriver, StretchIngress, VsnOptions};
 use crate::metrics::MetricsSnapshot;
+use crate::sim::calibrate;
 use crate::time::EventTime;
 use crate::tuple::{Mapper, Payload, Tuple};
 use crate::workloads::nyse::{Trade, TradeStream};
 use crate::workloads::rates::RateSchedule;
+use crate::workloads::registry::{JobPayload, JobSource};
 use crate::workloads::scalejoin_bench::{q3_operator, SjGen, SjPayload};
 use crate::workloads::tweets::{Tweet, TweetGen};
 use std::fmt;
@@ -64,6 +71,15 @@ impl PacedSource<Trade> for TradeStream {
     }
     fn next(&mut self) -> Tuple<Trade> {
         TradeStream::next(self)
+    }
+}
+
+impl PacedSource<JobPayload> for JobSource {
+    fn set_rate(&mut self, tps: f64) {
+        JobSource::set_rate(self, tps);
+    }
+    fn next(&mut self) -> Tuple<JobPayload> {
+        self.next_tuple()
     }
 }
 
@@ -130,6 +146,9 @@ pub struct RunSample {
     pub threads: usize,
     pub backlog: u64,
     pub load_cv_pct: f64,
+    /// Effective worker batch of the stage at sample time (moves when
+    /// adaptive batch sizing is on).
+    pub worker_batch: usize,
 }
 
 /// Result of a single-stage harness run (the historical shape).
@@ -141,6 +160,35 @@ pub struct RunResult {
     pub egress_count: u64,
 }
 
+/// Bounds of the adaptive worker-batch policy (the `[batch]`
+/// `worker_min`/`worker_max` knobs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdaptiveBatch {
+    pub min: usize,
+    pub max: usize,
+}
+
+impl From<&BatchTuning> for AdaptiveBatch {
+    fn from(t: &BatchTuning) -> Self {
+        AdaptiveBatch { min: t.worker_min, max: t.worker_max }
+    }
+}
+
+/// Adaptive batch sizing policy (ROADMAP follow-up): derive a stage's
+/// effective worker batch from its observed `in_backlog`. A cold stage
+/// (little queued work) flushes small so tuples don't sit in `out_buf`
+/// waiting for batch-mates (latency); a hot stage batches large so the
+/// gate synchronization cost amortizes (throughput). `backlog / 4`
+/// reaches the upper clamp once ~4 full batches are queued — past that
+/// point a bigger batch no longer changes the arrival/service balance,
+/// it only adds latency. Clamped to `[min, max]` from
+/// [`BatchTuning`]; monotone in `backlog`.
+pub fn adaptive_worker_batch(backlog: u64, bounds: AdaptiveBatch) -> usize {
+    let lo = bounds.min.max(1);
+    let hi = bounds.max.max(lo);
+    ((backlog / 4).min(hi as u64) as usize).clamp(lo, hi)
+}
+
 /// Per-stage runtime policy for a pipeline run.
 pub struct StageRunConfig {
     /// Optional elasticity controller for this stage.
@@ -149,11 +197,19 @@ pub struct StageRunConfig {
     pub controller_period_s: u32,
     /// Scripted reconfigurations: (event second, new instance set).
     pub manual_reconfigs: Vec<(u32, Vec<usize>)>,
+    /// When set, the stage's worker batch is re-derived from its
+    /// `in_backlog` every controller tick via [`adaptive_worker_batch`].
+    pub adaptive_batch: Option<AdaptiveBatch>,
 }
 
 impl Default for StageRunConfig {
     fn default() -> Self {
-        StageRunConfig { controller: None, controller_period_s: 1, manual_reconfigs: Vec::new() }
+        StageRunConfig {
+            controller: None,
+            controller_period_s: 1,
+            manual_reconfigs: Vec::new(),
+            adaptive_batch: None,
+        }
     }
 }
 
@@ -460,6 +516,7 @@ where
                     threads: active.len(),
                     backlog: stage.in_backlog(),
                     load_cv_pct: cv,
+                    worker_batch: stage.worker_batch(),
                 });
                 st.last_snap = snap;
             }
@@ -479,34 +536,39 @@ where
                 st.next_manual += 1;
             }
         }
-        // per-stage controller ticks
+        // per-stage controller ticks (the tick also carries the adaptive
+        // batch-sizing update, so it fires with or without a controller)
         for (k, st) in loops.iter_mut().enumerate() {
             let period = st.cfg.controller_period_s.max(1);
+            if (st.next_controller_s as f64) > event_s {
+                continue;
+            }
+            st.next_controller_s += period;
+            let stage = &mut pipeline.stages[k];
+            if let Some(bounds) = st.cfg.adaptive_batch {
+                stage.set_worker_batch(adaptive_worker_batch(stage.in_backlog(), bounds));
+            }
             if let Some(ctl) = st.cfg.controller.as_mut() {
-                if (st.next_controller_s as f64) <= event_s {
-                    st.next_controller_s += period;
-                    let stage = &mut pipeline.stages[k];
-                    let active = stage.active_instances();
-                    let obs = Observation {
-                        // the schedule rate only describes stage 0 when a
-                        // single wrapper feeds it the whole stream; with
-                        // several wrappers (possibly several source
-                        // stages) use the measured arrival rate
-                        in_rate: if k == 0 && n_ing == 1 {
-                            cur_rate
-                        } else {
-                            st.last_arrival_tps
-                        },
-                        cmp_per_s: st.samples.last().map(|s| s.cmp_per_s).unwrap_or(0.0),
-                        backlog: stage.in_backlog(),
-                        dt: period as f64,
-                        active,
-                        max: stage.max_parallelism(),
-                    };
-                    if let Decision::Reconfigure(set) = ctl.tick(&obs) {
-                        let mapper = Mapper::over(set.clone());
-                        stage.reconfigure(set, mapper);
-                    }
+                let active = stage.active_instances();
+                let obs = Observation {
+                    // the schedule rate only describes stage 0 when a
+                    // single wrapper feeds it the whole stream; with
+                    // several wrappers (possibly several source
+                    // stages) use the measured arrival rate
+                    in_rate: if k == 0 && n_ing == 1 {
+                        cur_rate
+                    } else {
+                        st.last_arrival_tps
+                    },
+                    cmp_per_s: st.samples.last().map(|s| s.cmp_per_s).unwrap_or(0.0),
+                    backlog: stage.in_backlog(),
+                    dt: period as f64,
+                    active,
+                    max: stage.max_parallelism(),
+                };
+                if let Decision::Reconfigure(set) = ctl.tick(&obs) {
+                    let mapper = Mapper::over(set.clone());
+                    stage.reconfigure(set, mapper);
                 }
             }
         }
@@ -616,6 +678,7 @@ pub fn run_elastic_join(cfg: JoinRunConfig) -> RunResult {
             controller: cfg.controller,
             controller_period_s: cfg.controller_period_s,
             manual_reconfigs: cfg.manual_reconfigs,
+            adaptive_batch: None,
         }],
         flush_slack_ms: cfg.ws_ms + 10_000,
         drain: Duration::from_millis(500),
@@ -628,6 +691,268 @@ pub fn run_elastic_join(cfg: JoinRunConfig) -> RunResult {
         .expect("single-stage pipeline always has one ingress and one egress");
     let stage0 = r.stages.into_iter().next().expect("single-stage pipeline");
     RunResult { samples: stage0.samples, reconfigs: stage0.reconfigs, egress_count: r.egress_count }
+}
+
+/// Build a reactive ("reactive" or anything unrecognized, the classic
+/// default) or proactive ("proactive") controller from the `[elastic]`
+/// thresholds — the ONE construction path shared by the classic
+/// experiment launcher and the per-stage declarative path, so the two
+/// can never drift on thresholds or cooldown.
+pub fn controller_from_config(
+    cfg: &Config,
+    kind: &str,
+    model: JoinCostModel,
+) -> Box<dyn Controller> {
+    if kind == "proactive" {
+        Box::new(ProactiveController::new(model))
+    } else {
+        Box::new(
+            ReactiveController::new(
+                model,
+                Thresholds {
+                    upper: cfg.float_or("elastic.upper", 0.90),
+                    target: cfg.float_or("elastic.target", 0.70),
+                    lower: cfg.float_or("elastic.lower", 0.45),
+                },
+            )
+            .with_cooldown(2),
+        )
+    }
+}
+
+/// Expected value shape of a job config key ([`check_job_section_keys`]).
+#[derive(Clone, Copy)]
+enum KeyKind {
+    Int,
+    /// Accepts ints too (the usual numeric widening).
+    Float,
+    Str,
+    Bool,
+}
+
+impl KeyKind {
+    fn matches(self, v: &crate::config::ConfigValue) -> bool {
+        use crate::config::ConfigValue as V;
+        match self {
+            KeyKind::Int => matches!(v, V::Int(_)),
+            KeyKind::Float => matches!(v, V::Int(_) | V::Float(_)),
+            KeyKind::Str => matches!(v, V::Str(_)),
+            KeyKind::Bool => matches!(v, V::Bool(_)),
+        }
+    }
+    fn name(self) -> &'static str {
+        match self {
+            KeyKind::Int => "an integer",
+            KeyKind::Float => "a number",
+            KeyKind::Str => "a string",
+            KeyKind::Bool => "a bool",
+        }
+    }
+}
+
+/// Keys [`run_job`] consumes, per section, with their expected value
+/// shapes — an unknown key OR a wrong-typed value under these sections
+/// is a typo that would silently change the job, so both are rejected
+/// (same contract as `JobSpec`'s `[topology]`/`[stage.*]` validation,
+/// which covers those two prefixes itself). This table is the
+/// authoritative list for the job path: keep it in sync with
+/// [`RateSchedule::from_config`], [`JobSource::for_kind`],
+/// [`BatchTuning::from_config`] and the `[elastic]` reads in [`run_job`]
+/// (each of those carries a pointer back here).
+const JOB_SECTION_KEYS: &[(&str, &[(&str, KeyKind)])] = &[
+    (
+        "run.",
+        &[
+            ("duration_s", KeyKind::Int),
+            ("rate", KeyKind::Float),
+            ("schedule", KeyKind::Str),
+            ("seed", KeyKind::Int),
+            ("min_rate", KeyKind::Float),
+            ("max_rate", KeyKind::Float),
+            ("min_phase_s", KeyKind::Int),
+            ("max_phase_s", KeyKind::Int),
+            ("step_at_s", KeyKind::Int),
+            ("step_rate", KeyKind::Float),
+            ("time_scale", KeyKind::Float),
+            ("flush_slack_ms", KeyKind::Int),
+            ("drain_ms", KeyKind::Int),
+        ],
+    ),
+    (
+        "elastic.",
+        &[
+            ("controller", KeyKind::Str),
+            ("cores", KeyKind::Int),
+            ("grow_backlog", KeyKind::Int),
+            ("shrink_backlog", KeyKind::Int),
+            ("cooldown_ticks", KeyKind::Int),
+            ("period_s", KeyKind::Int),
+            ("upper", KeyKind::Float),
+            ("target", KeyKind::Float),
+            ("lower", KeyKind::Float),
+        ],
+    ),
+    (
+        "source.",
+        &[("symbols", KeyKind::Int), ("seed", KeyKind::Int), ("vocab", KeyKind::Int)],
+    ),
+    (
+        "batch.",
+        &[
+            ("worker", KeyKind::Int),
+            ("ingress", KeyKind::Int),
+            ("queue", KeyKind::Int),
+            ("adaptive", KeyKind::Bool),
+            ("worker_min", KeyKind::Int),
+            ("worker_max", KeyKind::Int),
+        ],
+    ),
+];
+
+/// Validate a job config's run-level sections: unknown sections, unknown
+/// keys inside known sections, and wrong-typed values are all typed
+/// errors — a declarative job must never silently run with defaults in
+/// place of what the user wrote.
+fn check_job_section_keys(cfg: &Config) -> Result<(), JobError> {
+    'keys: for k in cfg.keys() {
+        // `[topology]`/`[stage.*]` are JobSpec::from_config's territory;
+        // the bare `name` key is the only free-form top-level one.
+        if k == "name" || k.starts_with("topology.") || k.starts_with("stage.") {
+            continue;
+        }
+        for (prefix, known) in JOB_SECTION_KEYS {
+            if let Some(rest) = k.strip_prefix(prefix) {
+                match known.iter().find(|(name, _)| *name == rest) {
+                    None => {
+                        return Err(JobError::BadValue {
+                            key: k.to_string(),
+                            msg: format!(
+                                "unknown `[{}]` key (known: {})",
+                                &prefix[..prefix.len() - 1],
+                                known.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+                            ),
+                        })
+                    }
+                    Some((_, kind)) => {
+                        let v = cfg.get(k).expect("keys() yields existing keys");
+                        if !kind.matches(v) {
+                            return Err(JobError::BadValue {
+                                key: k.to_string(),
+                                msg: format!("expected {}, got `{v}`", kind.name()),
+                            });
+                        }
+                        continue 'keys;
+                    }
+                }
+            }
+        }
+        // no known prefix matched: a misspelled section name would
+        // silently drop the whole section — reject it by name
+        return Err(JobError::BadValue {
+            key: k.to_string(),
+            msg: "unknown section/key for a job config (expected `name`, `[topology]`, \
+                  `[stage.<name>]`, `[run]`, `[elastic]`, `[source]`, or `[batch]`)"
+                .into(),
+        });
+    }
+    Ok(())
+}
+
+/// Outcome of a declarative-job run ([`run_job`]).
+pub struct JobRunOutcome {
+    /// The config's `name` key.
+    pub name: String,
+    /// Config stage names aligned with `result.stages` indices.
+    pub stage_names: Vec<String>,
+    pub result: PipelineRunResult,
+}
+
+/// Run a config-declared job end to end: parse + validate the
+/// [`JobSpec`], build the topology through the operator registry, pick
+/// the paced generator matching the source stages' payload kind, wire
+/// the `[elastic]` controller choice (`none` / `reactive` / `proactive`
+/// per stage, or the global budgeted `dag` controller with
+/// `elastic.cores`) and the `[batch]` adaptive batch sizing, then drive
+/// everything through [`run_pipeline`] under the `[run]` rate schedule.
+///
+/// `budget_ms`, when given, caps the WALL-clock duration of the paced
+/// phase by raising `time_scale` — the CI smoke knob (`stretch run
+/// --config job.conf --budget-ms 10`).
+pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, JobError> {
+    check_job_section_keys(cfg)?;
+    let spec = JobSpec::from_config(cfg)?;
+    // resolve the generator BEFORE spawning anything — NoSource is a
+    // pure config error and must not cost a topology spawn + teardown
+    let mut source =
+        JobSource::for_kind(spec.source_kind, cfg).ok_or(JobError::NoSource(spec.source_kind))?;
+    let built = spec.build()?;
+    let schedule = RateSchedule::from_config(cfg);
+    let batch = BatchTuning::from_config(cfg);
+    let n_stages = built.pipeline.depth();
+    let adaptive = if batch.adaptive { Some(AdaptiveBatch::from(&batch)) } else { None };
+    let period = cfg.int_or("elastic.period_s", 1).max(1) as u32;
+
+    let mut dag_controller = None;
+    let mut per_stage: Vec<Option<Box<dyn Controller>>> = (0..n_stages).map(|_| None).collect();
+    match cfg.str_or("elastic.controller", "none") {
+        "none" => {}
+        "dag" => {
+            dag_controller = Some(
+                DagController::new(cfg.int_or("elastic.cores", 8).max(1) as usize)
+                    .with_thresholds(
+                        cfg.int_or("elastic.grow_backlog", 4096).max(1) as u64,
+                        cfg.int_or("elastic.shrink_backlog", 64).max(0) as u64,
+                    )
+                    .with_cooldown(cfg.int_or("elastic.cooldown_ticks", 1).max(0) as u32),
+            );
+        }
+        kind if kind == "reactive" || kind == "proactive" => {
+            // per-stage controllers, each modelled on this machine's
+            // calibrated costs and the stage's own window/parallelism
+            let cal = calibrate();
+            for (k, st) in spec.stages.iter().enumerate() {
+                let model = JoinCostModel::new(
+                    cal.cmp_per_sec / st.max.max(1) as f64,
+                    st.params.ws_ms as f64 / 1e3,
+                );
+                per_stage[k] = Some(controller_from_config(cfg, kind, model));
+            }
+        }
+        other => {
+            return Err(JobError::BadValue {
+                key: "elastic.controller".into(),
+                msg: format!("unknown controller `{other}` (expected none/reactive/proactive/dag)"),
+            })
+        }
+    }
+
+    let stages: Vec<StageRunConfig> = per_stage
+        .into_iter()
+        .map(|controller| StageRunConfig {
+            controller,
+            controller_period_s: period,
+            manual_reconfigs: Vec::new(),
+            adaptive_batch: adaptive,
+        })
+        .collect();
+
+    let max_ws = spec.stages.iter().map(|s| s.params.ws_ms).max().unwrap_or(1_000);
+    let mut time_scale = cfg.float_or("run.time_scale", 1.0).max(1e-6);
+    if let Some(ms) = budget_ms {
+        time_scale = time_scale.max(schedule.duration_s() as f64 * 1000.0 / ms.max(1) as f64);
+    }
+    let pcfg = PipelineRunConfig {
+        schedule,
+        time_scale,
+        stages,
+        flush_slack_ms: cfg.int_or("run.flush_slack_ms", max_ws + 10_000),
+        drain: Duration::from_millis(cfg.int_or("run.drain_ms", 500).max(0) as u64),
+        ingress_batch: batch.ingress,
+        dag_controller,
+        dag_controller_period_s: period,
+    };
+    let result = run_pipeline(built.pipeline, pcfg, &mut source).map_err(JobError::Harness)?;
+    Ok(JobRunOutcome { name: spec.name, stage_names: built.stage_names, result })
 }
 
 #[cfg(test)]
@@ -645,6 +970,139 @@ mod tests {
         assert_eq!(v.worker_batch, 32);
         let s = crate::engine::SnOptions::default().with_batch(&t);
         assert_eq!(s.batch, 16);
+    }
+
+    #[test]
+    fn adaptive_batch_policy_clamps_and_is_monotone() {
+        let b = AdaptiveBatch { min: 16, max: 256 };
+        assert_eq!(adaptive_worker_batch(0, b), 16, "cold stage flushes small");
+        assert_eq!(adaptive_worker_batch(63, b), 16);
+        assert_eq!(adaptive_worker_batch(256, b), 64);
+        assert_eq!(adaptive_worker_batch(1 << 20, b), 256, "hot stage batches large");
+        let mut last = 0;
+        for backlog in [0u64, 10, 100, 1_000, 10_000, 100_000] {
+            let v = adaptive_worker_batch(backlog, b);
+            assert!(v >= last, "policy must be monotone in backlog");
+            last = v;
+        }
+        // degenerate bounds can never stall a worker loop
+        assert_eq!(adaptive_worker_batch(0, AdaptiveBatch { min: 0, max: 0 }), 1);
+    }
+
+    #[test]
+    fn adaptive_batch_retunes_stages_from_backlog() {
+        let pipeline = PipelineBuilder::new(
+            q3_operator(1_000, 8),
+            VsnOptions { initial: 1, max: 2, worker_batch: 128, ..Default::default() },
+        )
+        .build();
+        assert_eq!(pipeline.stages[0].worker_batch(), 128);
+        let mut gen = SjGen::new(5, 1.0);
+        let bounds = AdaptiveBatch { min: 8, max: 64 };
+        let r = run_pipeline(
+            pipeline,
+            PipelineRunConfig {
+                schedule: RateSchedule::constant(3, 400.0),
+                time_scale: 3.0,
+                stages: vec![StageRunConfig {
+                    adaptive_batch: Some(bounds),
+                    ..Default::default()
+                }],
+                ..Default::default()
+            },
+            &mut gen,
+        )
+        .unwrap();
+        // the first controller tick fires after the first sample; every
+        // later sample must reflect a batch re-derived inside the clamp
+        // (the configured 128 sits outside it on purpose)
+        let samples = &r.stages[0].samples;
+        assert_eq!(samples.len(), 3);
+        assert!(
+            samples[1..].iter().all(|s| (8..=64).contains(&s.worker_batch)),
+            "worker batch not re-derived: {:?}",
+            samples.iter().map(|s| s.worker_batch).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn run_job_drives_a_declarative_two_stage_job() {
+        let cfg = crate::config::Config::parse(
+            r#"
+name = "wc-smoke"
+[topology]
+stages = ["tok", "count"]
+[stage.tok]
+operator = "tweet-tokenize"
+max = 2
+[stage.count]
+operator = "word-count"
+inputs = ["tok"]
+ws_ms = 500
+max = 2
+[run]
+duration_s = 2
+rate = 300
+time_scale = 4
+[batch]
+adaptive = true
+"#,
+        )
+        .unwrap();
+        let out = run_job(&cfg, None).unwrap();
+        assert_eq!(out.name, "wc-smoke");
+        assert_eq!(out.stage_names, vec!["tok", "count"]);
+        assert_eq!(out.result.stages.len(), 2);
+        assert_eq!(out.result.stages[0].samples.len(), 2);
+        assert!(
+            out.result.egress_count > 0
+                || out
+                    .result
+                    .stages
+                    .iter()
+                    .any(|s| s.samples.iter().any(|x| x.out_tps > 0.0)),
+            "no data moved through the config-built pipeline"
+        );
+    }
+
+    #[test]
+    fn run_job_rejects_unknown_controller() {
+        let cfg = crate::config::Config::parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"tweet-tokenize\"\n\
+             [elastic]\ncontroller = \"warp\"",
+        )
+        .unwrap();
+        match run_job(&cfg, None) {
+            Err(JobError::BadValue { key, .. }) => assert_eq!(key, "elastic.controller"),
+            other => panic!("expected BadValue, got {:?}", other.map(|_| ()).err()),
+        }
+    }
+
+    #[test]
+    fn run_job_rejects_typod_section_keys() {
+        const STAGES: &str = "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"tweet-tokenize\"\n";
+        let bad_key = |body: &str| {
+            let cfg = crate::config::Config::parse(&format!("{STAGES}{body}")).unwrap();
+            match run_job(&cfg, None) {
+                Err(JobError::BadValue { key, .. }) => key,
+                other => panic!("expected BadValue, got {:?}", other.map(|_| ()).err()),
+            }
+        };
+        // typo'd key inside a known section: must not silently become
+        // the 30 s default schedule
+        assert_eq!(bad_key("[run]\nduraton_s = 60"), "run.duraton_s");
+        // typo'd SECTION name: must not silently drop the whole section
+        assert_eq!(bad_key("[elastc]\ncontroller = \"dag\""), "elastc.controller");
+        // right key, wrong value type: must not silently use the default
+        assert_eq!(bad_key("[run]\nrate = \"fast\""), "run.rate");
+        assert_eq!(bad_key("[run]\nduration_s = 2.5"), "run.duration_s");
+        assert_eq!(bad_key("[batch]\nadaptive = 1"), "batch.adaptive");
+        // numeric widening still allowed: an int where a float is expected
+        let cfg = crate::config::Config::parse(&format!(
+            "{STAGES}[run]\nduration_s = 1\nrate = 200\ntime_scale = 4"
+        ))
+        .unwrap();
+        assert!(run_job(&cfg, None).is_ok(), "int-for-float must stay accepted");
     }
 
     #[test]

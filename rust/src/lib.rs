@@ -16,20 +16,26 @@
 //!   operator library (Map, Aggregate, Join, ScaleJoin, …), including
 //!   Map-as-elastic-stage ([`operator::map::MapStageLogic`]).
 //! * [`engine`] — the SN baseline engine, the VSN (STRETCH) engine with
-//!   epoch-based, state-transfer-free elasticity (§5, §7), the linear
-//!   pipeline layer ([`engine::pipeline`]) and the true DAG layer
-//!   ([`engine::dag`]: fan-out = reader groups, fan-in = source-slot
-//!   groups, per-edge control slots); all hot loops move tuples in runs
-//!   (tunable via [`config::BatchTuning`] / `VsnOptions::worker_batch`),
-//!   with control tuples still cutting batches so reconfiguration
-//!   latency is batching-independent.
+//!   epoch-based, state-transfer-free elasticity (§5, §7), ONE topology
+//!   construction path ([`engine::dag`]: fan-out = reader groups, fan-in
+//!   = source-slot groups, per-edge control slots; linear chains via the
+//!   thin [`engine::pipeline::PipelineBuilder`] façade), and the
+//!   declarative JobSpec layer ([`engine::job`]: `[topology]`/`[stage.*]`
+//!   config sections → validated, registry-resolved running topologies);
+//!   all hot loops move tuples in runs (tunable via
+//!   [`config::BatchTuning`] / `VsnOptions::worker_batch`, retunable
+//!   live for adaptive batch sizing), with control tuples still cutting
+//!   batches so reconfiguration latency is batching-independent.
 //! * [`elastic`] — reconfiguration controllers (reactive + proactive
 //!   per-stage, plus the topology-aware budgeted
 //!   [`elastic::DagController`]).
 //! * [`harness`] — rate-scheduled topology run loop (N ingress sources,
 //!   M egress readers — degenerate shapes are typed errors, not panics)
-//!   with per-stage controllers, an optional global DAG controller, and
-//!   per-stage metrics sampling.
+//!   with per-stage controllers, an optional global DAG controller,
+//!   backlog-driven adaptive worker-batch sizing, per-stage metrics
+//!   sampling, and [`harness::run_job`]: the config-to-running-job
+//!   entrypoint behind `stretch run --config job.conf`
+//!   (emitting `BENCH_<job>.json`).
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled kernels
 //!   (stubbed unless built with `--features pjrt`).
 //! * [`workloads`] — generators for every evaluation workload (§8), plus
@@ -42,11 +48,8 @@
 //!   times) so the perf trajectory is a diffable record.
 //!
 //! ## Topologies
-//! Linear chains compose via [`engine::pipeline::PipelineBuilder`]:
-//! typed `stage(OperatorDef, VsnOptions)` chaining where stage N's
-//! ESG_out **is** stage N+1's ESG_in — one shared gate, zero-copy
-//! hand-off, no re-ingestion. True DAGs compose via
-//! [`engine::dag::DagBuilder`] (`source`/`node`/`build`): a stage fans
+//! ONE construction path builds every shape:
+//! [`engine::dag::DagBuilder`] (`source`/`node`/`build`). A stage fans
 //! OUT by every downstream registering a reader group on its shared
 //! ESG_out (exactly-once per group, no data duplication), and fans IN by
 //! owning one ESG_in with a source-slot group per upstream (the
@@ -57,18 +60,32 @@
 //! with no state transfer (source stages: control tuples ride the
 //! ingress wrappers, Alg. 5; downstream stages: a reserved per-edge
 //! control slot + tag on the shared gate,
-//! [`engine::pipeline::ControlInjector`]). `examples/dag_pipeline.rs`
-//! runs a two-stage tokenize → wordcount chain;
-//! `examples/diamond_dag.rs` runs the diamond
-//! (filter → L-leg ∥ R-leg → hedge join), reconfigures all four stages
-//! mid-run, and checks exact equivalence against a sequential
-//! reference; `bench_q7_dag` drives the same diamond under a rate step
-//! with [`elastic::DagController`] dividing a global core budget by
-//! per-stage backlog.
+//! [`engine::pipeline::ControlInjector`]). Linear chains are degenerate
+//! DAGs: [`engine::pipeline::PipelineBuilder`] is a thin typed façade
+//! that delegates everything to the DAG builder.
+//!
+//! On top sits the **declarative layer**: [`engine::job::JobSpec`]
+//! parses a `[topology]`/`[stage.*]` config (stages by name, edges,
+//! per-stage parallelism, per-stage operator params, controller choice +
+//! core budget, adaptive `[batch]` sizing), validates it with typed
+//! errors (cycle, unknown operator, dangling edge, edge payload-type
+//! mismatch), resolves operator names through
+//! [`workloads::registry`] and builds the running topology —
+//! `stretch run --config examples/configs/diamond.conf` is a whole
+//! elastic diamond with zero topology code.
+//! `examples/dag_pipeline.rs` and `examples/diamond_dag.rs` build their
+//! topologies from `examples/configs/*.conf` and check exact output
+//! equivalence against sequential references while every stage
+//! reconfigures mid-run (`integration_dag` additionally proves
+//! config-built ≡ hand-built); `bench_q7_dag` drives the diamond under
+//! a rate step with [`elastic::DagController`] dividing a global core
+//! budget by per-stage backlog.
 //!
 //! ## Quickstart
 //! See `examples/quickstart.rs`: build an `O+`, wrap it in a VSN engine,
-//! feed tuples, read results — then trigger a live reconfiguration.
+//! feed tuples, read results, trigger a live reconfiguration — then
+//! declare the same kind of topology as a 20-line job config and let
+//! [`harness::run_job`] drive it.
 
 pub mod cli;
 pub mod config;

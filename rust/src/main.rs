@@ -1,16 +1,26 @@
-//! `stretch` — the launcher: run config-driven elastic join experiments,
-//! calibrate the cost model, or inspect the runtime.
+//! `stretch` — the launcher: run declarative jobs or config-driven
+//! elastic join experiments, calibrate the cost model, or inspect the
+//! runtime.
 //!
 //! ```sh
 //! stretch calibrate
-//! stretch run configs/scalejoin.toml
+//! stretch run examples/configs/diamond.conf       # declarative job
+//! stretch run --config job.conf --budget-ms 10    # CI smoke form
+//! stretch run configs/scalejoin.toml              # classic Q3-Q6 shape
 //! stretch artifacts          # check the AOT kernel artifacts
 //! ```
+//!
+//! `run` dispatches on the config: a `[topology]` section makes it a
+//! *job* (stages by name, edges, per-stage parallelism — built through
+//! the operator registry and driven by `harness::run_job`, emitting
+//! `BENCH_<job>.json`); otherwise it is the classic single-stage
+//! ScaleJoin experiment shape.
 
-use stretch::cli::Cli;
+use stretch::cli::{Cli, OrExit};
 use stretch::config::{BatchTuning, Config};
-use stretch::elastic::{JoinCostModel, ProactiveController, ReactiveController, Thresholds};
-use stretch::harness::{run_elastic_join, JoinRunConfig};
+use stretch::elastic::JoinCostModel;
+use stretch::harness::{controller_from_config, run_elastic_join, run_job, JoinRunConfig};
+use stretch::metrics::{BenchReport, Json};
 use stretch::sim::calibrate;
 use stretch::workloads::RateSchedule;
 
@@ -47,63 +57,132 @@ fn cmd_artifacts() {
     }
 }
 
-fn cmd_run(path: &str) {
+/// `run`: dispatch on the config shape.
+fn cmd_run(path: &str, budget_ms: Option<u64>) {
     let cfg = Config::load(path).unwrap_or_else(|e| {
         eprintln!("config error: {e}");
         std::process::exit(1);
     });
+    // Any `[topology]` or `[stage.*]` key makes this a job config —
+    // dispatching on the whole prefix (not just `topology.stages`) means
+    // a misspelled `stages` key reaches run_job's typed NoStages error
+    // instead of silently running the classic experiment.
+    let is_job = cfg
+        .keys()
+        .any(|k| k.starts_with("topology.") || k.starts_with("stage."));
+    if is_job {
+        cmd_run_job(&cfg, budget_ms);
+    } else {
+        cmd_run_join(&cfg, budget_ms);
+    }
+}
+
+/// The declarative path: build + drive a `[topology]` job, emit
+/// `BENCH_<job>.json`.
+fn cmd_run_job(cfg: &Config, budget_ms: Option<u64>) {
+    let outcome = run_job(cfg, budget_ms).unwrap_or_else(|e| {
+        eprintln!("job error: {e}");
+        std::process::exit(1);
+    });
+    let r = &outcome.result;
+    println!("job `{}`: {} stages", outcome.name, outcome.stage_names.len());
+    println!("\n  stage        operator        Π  reconfigs  backlog  batch");
+    for (name, s) in outcome.stage_names.iter().zip(&r.stages) {
+        let last = s.samples.last();
+        println!(
+            "  {:<12} {:<14} {:>2} {:>10} {:>8} {:>6}",
+            name,
+            s.name,
+            last.map(|x| x.threads).unwrap_or(0),
+            s.reconfigs.len(),
+            last.map(|x| x.backlog).unwrap_or(0),
+            last.map(|x| x.worker_batch).unwrap_or(0),
+        );
+    }
+    println!(
+        "\n  egress: {} tuples (dropped {}), e2e latency p50 {:.2} ms / mean {:.2} ms",
+        r.egress_count,
+        r.ingress_dropped,
+        r.latency_p50_us as f64 / 1e3,
+        r.latency_mean_us / 1e3
+    );
+
+    // BENCH_<job>.json: the job's machine-readable perf record
+    let slug: String = outcome
+        .name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == '-' { c } else { '-' })
+        .collect();
+    let mut rep = BenchReport::new(&slug);
+    rep.set("kind", "job")
+        .set("stages", outcome.stage_names.len())
+        .set("egress_count", r.egress_count)
+        .set("ingress_dropped", r.ingress_dropped)
+        .set("latency_p50_us", r.latency_p50_us)
+        .set("latency_mean_us", r.latency_mean_us);
+    let stage_objs: Vec<Json> = outcome
+        .stage_names
+        .iter()
+        .zip(&r.stages)
+        .map(|(name, s)| {
+            let last = s.samples.last();
+            Json::obj(vec![
+                ("name", Json::from(name.as_str())),
+                ("operator", Json::from(s.name)),
+                ("reconfigs", Json::from(s.reconfigs.len())),
+                (
+                    "reconfig_ms_max",
+                    s.reconfigs
+                        .iter()
+                        .map(|&(_, ms)| ms)
+                        .fold(f64::NAN, f64::max)
+                        .into(),
+                ),
+                ("final_threads", Json::from(last.map(|x| x.threads).unwrap_or(0))),
+                ("final_backlog", Json::from(last.map(|x| x.backlog).unwrap_or(0))),
+                ("final_worker_batch", Json::from(last.map(|x| x.worker_batch).unwrap_or(0))),
+            ])
+        })
+        .collect();
+    rep.set("stage_stats", Json::Arr(stage_objs));
+    match rep.write() {
+        Ok(p) => println!("  json: {}", p.display()),
+        Err(e) => eprintln!("  BENCH_{slug}.json write failed: {e}"),
+    }
+}
+
+/// The classic config shape (no `[topology]`): a single-stage elastic
+/// ScaleJoin experiment. `budget_ms` caps the wall-clock run by raising
+/// `time_scale`, exactly like the job path — the flag means the same
+/// thing on both.
+fn cmd_run_join(cfg: &Config, budget_ms: Option<u64>) {
     let ws_ms = cfg.int_or("operator.ws_ms", 2_000);
     let n_keys = cfg.int_or("operator.keys", 64) as u64;
     let initial = cfg.int_or("engine.initial", 1) as usize;
     let max = cfg.int_or("engine.max", 4) as usize;
-    let time_scale = cfg.float_or("run.time_scale", 2.0);
+    let mut time_scale = cfg.float_or("run.time_scale", 2.0);
     let seed = cfg.int_or("run.seed", 7) as u64;
+    let schedule = RateSchedule::from_config(cfg);
+    let duration = schedule.duration_s();
+    if let Some(ms) = budget_ms {
+        time_scale = time_scale.max(duration as f64 * 1000.0 / ms.max(1) as f64);
+    }
 
-    // schedule: either constant or the Q5 random-phase stress profile
-    let duration = cfg.int_or("run.duration_s", 30) as u32;
-    let schedule = match cfg.str_or("run.schedule", "constant") {
-        "q5" => RateSchedule::q5(
-            seed,
-            duration,
-            cfg.float_or("run.min_rate", 500.0),
-            cfg.float_or("run.max_rate", 4000.0),
-            cfg.int_or("run.min_phase_s", 8) as u32,
-            cfg.int_or("run.max_phase_s", 20) as u32,
-        ),
-        "step" => RateSchedule::step(
-            duration,
-            cfg.int_or("run.step_at_s", duration as i64 / 3) as u32,
-            cfg.float_or("run.rate", 2000.0),
-            cfg.float_or("run.step_rate", 4000.0),
-        ),
-        _ => RateSchedule::constant(duration, cfg.float_or("run.rate", 2000.0)),
-    };
-
-    // controller: none / reactive / proactive, calibrated on this box
+    // controller: none / reactive (default) / proactive, calibrated on
+    // this box — same construction path as the declarative job runner
     let cal = calibrate();
     let model = JoinCostModel::new(cal.cmp_per_sec / max as f64, ws_ms as f64 / 1e3);
     let controller: Option<Box<dyn stretch::elastic::Controller>> =
         match cfg.str_or("elastic.controller", "reactive") {
             "none" => None,
-            "proactive" => Some(Box::new(ProactiveController::new(model))),
-            _ => Some(Box::new(
-                ReactiveController::new(
-                    model,
-                    Thresholds {
-                        upper: cfg.float_or("elastic.upper", 0.90),
-                        target: cfg.float_or("elastic.target", 0.70),
-                        lower: cfg.float_or("elastic.lower", 0.45),
-                    },
-                )
-                .with_cooldown(2),
-            )),
+            kind => Some(controller_from_config(cfg, kind, model)),
         };
 
     // `[batch]` section: data-plane batch sizes (§Perf)
-    let batch = BatchTuning::from_config(&cfg);
+    let batch = BatchTuning::from_config(cfg);
     println!(
         "running `{}`: WS={ws_ms}ms keys={n_keys} Π={initial}..{max} {}s ({}x compressed, batch {})",
-        cfg.str_or("name", path),
+        cfg.str_or("name", "experiment"),
         duration,
         time_scale,
         batch.worker
@@ -146,7 +225,9 @@ fn main() {
     let cli = Cli::new(
         "stretch",
         "STRETCH: virtual shared-nothing stream processing (paper reproduction)",
-    );
+    )
+    .opt("config", "config file for `run` (same as the positional path)", None)
+    .opt("budget-ms", "cap the wall-clock run time of a job (CI smoke)", None);
     let args = cli.parse().unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
@@ -154,19 +235,27 @@ fn main() {
     match args.positional().first().map(|s| s.as_str()) {
         Some("calibrate") => cmd_calibrate(),
         Some("artifacts") => cmd_artifacts(),
-        Some("run") => match args.positional().get(1) {
-            Some(path) => cmd_run(path),
-            None => {
-                eprintln!("usage: stretch run <config.toml>");
-                std::process::exit(2);
+        Some("run") => {
+            let path = args
+                .get("config")
+                .map(str::to_string)
+                .or_else(|| args.positional().get(1).cloned());
+            match path {
+                Some(p) => cmd_run(&p, args.u64_opt("budget-ms").or_exit()),
+                None => {
+                    eprintln!("usage: stretch run <job.conf>  (or --config <job.conf>)");
+                    std::process::exit(2);
+                }
             }
-        },
+        }
         _ => {
             println!("usage: stretch <command>\n");
             println!("  calibrate          measure this machine's cost model");
             println!("  artifacts          verify the AOT kernel artifacts + PJRT");
-            println!("  run <config.toml>  run a config-driven elastic join experiment");
-            println!("\nexperiment configs: see configs/*.toml; benches: cargo bench");
+            println!("  run <config>       run a declarative job ([topology] config,");
+            println!("                     see examples/configs/) or a classic elastic");
+            println!("                     join experiment (configs/*.toml)");
+            println!("\noptions for run: --config <path>, --budget-ms <ms> (CI smoke)");
         }
     }
 }

@@ -9,11 +9,16 @@
 //!   the 2-stage fan-out → band-join pipeline ops, and the diamond-DAG
 //!   ops (filter → L-leg ∥ R-leg → hedge join, Q7);
 //! * [`rates`] — phased rate schedules (Q5) and rate steps (Q4);
-//! * [`ops`] — the Appendix-D operator definitions.
+//! * [`ops`] — the Appendix-D operator definitions;
+//! * [`registry`] — the declarative layer's operator registry: names →
+//!   [`crate::operator::OperatorDef`] constructors over the common
+//!   [`registry::JobPayload`] enum, plus the paced [`registry::JobSource`]
+//!   generators (consumed by [`crate::engine::job`]).
 
 pub mod nyse;
 pub mod ops;
 pub mod rates;
+pub mod registry;
 pub mod scalejoin_bench;
 pub mod tweets;
 
@@ -23,4 +28,5 @@ pub use nyse::{
 };
 pub use ops::{forward_op, longest_tweet_op, paircount_op, wordcount_op};
 pub use rates::RateSchedule;
+pub use registry::{JobPayload, JobSource, PayloadKind};
 pub use tweets::{tokenize_op, word_count_stage_op};

@@ -62,6 +62,34 @@ impl RateSchedule {
     pub fn per_second(&self) -> Vec<f64> {
         (0..self.duration_s()).map(|s| self.rate_at(s)).collect()
     }
+
+    /// Build a schedule from a config's `[run]` section: `schedule` is
+    /// `constant` (default), `step`, or `q5`, each with its own rate
+    /// keys. Shared by the CLI's experiment and declarative-job paths.
+    ///
+    /// Adding a key here? Also register it in
+    /// `harness::JOB_SECTION_KEYS`, or job configs using it will be
+    /// rejected as typos.
+    pub fn from_config(c: &crate::config::Config) -> Self {
+        let duration = c.int_or("run.duration_s", 30).max(1) as u32;
+        match c.str_or("run.schedule", "constant") {
+            "q5" => RateSchedule::q5(
+                c.int_or("run.seed", 7) as u64,
+                duration,
+                c.float_or("run.min_rate", 500.0),
+                c.float_or("run.max_rate", 4000.0),
+                c.int_or("run.min_phase_s", 8) as u32,
+                c.int_or("run.max_phase_s", 20) as u32,
+            ),
+            "step" => RateSchedule::step(
+                duration,
+                (c.int_or("run.step_at_s", duration as i64 / 3) as u32).min(duration),
+                c.float_or("run.rate", 2000.0),
+                c.float_or("run.step_rate", 4000.0),
+            ),
+            _ => RateSchedule::constant(duration, c.float_or("run.rate", 2000.0)),
+        }
+    }
 }
 
 #[cfg(test)]

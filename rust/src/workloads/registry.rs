@@ -1,0 +1,583 @@
+//! Operator registry for the declarative JobSpec layer
+//! ([`crate::engine::job`]).
+//!
+//! A config file names its stages' operators (`tweet-tokenize`,
+//! `trade-filter`, `hedge-join`, …); this module resolves those names to
+//! [`OperatorDef`] constructors over ONE common payload enum,
+//! [`JobPayload`], so a whole declarative topology is monomorphic — every
+//! stage is an `OperatorLogic<In = JobPayload, Out = JobPayload>` and the
+//! [`DagBuilder`] needs no per-job generics.
+//!
+//! The bridge is [`DynOp`]: it wraps any typed operator whose In/Out
+//! payloads implement [`JobConvert`] and re-types tuples at the stage
+//! boundary (one payload clone per delegated `keys`/`update` call —
+//! payloads are small or `Arc`-backed, and the trait's `&self` methods
+//! leave nowhere thread-safe to cache the retyped tuple between calls;
+//! the perf-sensitive benches keep using the typed builders directly).
+//! Variant mismatches cannot occur at runtime:
+//! [`crate::engine::job::JobSpec`] type-checks every edge against the
+//! registry's declared [`PayloadKind`]s before anything is built.
+
+use crate::config::Config;
+use crate::engine::dag::{DagBuilder, NodeHandle};
+use crate::engine::vsn::VsnOptions;
+use crate::operator::join::Either;
+use crate::operator::state::WindowSet;
+use crate::operator::{Ctx, OperatorDef, OperatorLogic};
+use crate::time::{EventTime, WindowSpec};
+use crate::tuple::{Key, Tuple};
+use crate::workloads::nyse::{
+    hedge_join_op, left_leg_op, right_leg_op, trade_fanout_op, trade_filter_op, HedgeOut,
+    NyseConfig, Trade, TradeStream,
+};
+use crate::workloads::tweets::{tokenize_op, word_count_stage_op, Tweet, TweetGen, TweetGenConfig};
+use std::fmt;
+use std::sync::Arc;
+
+/// The payload *kind* an operator consumes/produces — the registry's
+/// type system: [`crate::engine::job::JobSpec`] checks every edge's
+/// upstream output kind against the consumer's input kind and rejects
+/// mismatches with a typed error before any gate exists.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// [`Trade`] — NYSE trade tuples.
+    Trade,
+    /// [`Either<Trade, Trade>`] — a trade materialized on one join side.
+    TradePair,
+    /// [`Tweet`] — the synthetic tweet corpus.
+    Tweet,
+    /// [`Key`] — a single interned word id.
+    Word,
+    /// `(Key, u64)` — a windowed per-key count.
+    WordCount,
+    /// [`HedgeOut`] — a hedge join match.
+    Hedge,
+}
+
+impl fmt::Display for PayloadKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            PayloadKind::Trade => "trade",
+            PayloadKind::TradePair => "trade-pair",
+            PayloadKind::Tweet => "tweet",
+            PayloadKind::Word => "word",
+            PayloadKind::WordCount => "word-count",
+            PayloadKind::Hedge => "hedge",
+        })
+    }
+}
+
+/// The common payload enum every declarative stage speaks — one variant
+/// per [`PayloadKind`].
+#[derive(Clone, Debug)]
+pub enum JobPayload {
+    Trade(Trade),
+    TradePair(Either<Trade, Trade>),
+    Tweet(Tweet),
+    Word(Key),
+    WordCount((Key, u64)),
+    Hedge(HedgeOut),
+}
+
+impl Default for JobPayload {
+    fn default() -> Self {
+        JobPayload::Word(0)
+    }
+}
+
+impl JobPayload {
+    pub fn kind(&self) -> PayloadKind {
+        match self {
+            JobPayload::Trade(_) => PayloadKind::Trade,
+            JobPayload::TradePair(_) => PayloadKind::TradePair,
+            JobPayload::Tweet(_) => PayloadKind::Tweet,
+            JobPayload::Word(_) => PayloadKind::Word,
+            JobPayload::WordCount(_) => PayloadKind::WordCount,
+            JobPayload::Hedge(_) => PayloadKind::Hedge,
+        }
+    }
+}
+
+/// A typed payload that maps to/from one [`JobPayload`] variant.
+/// `from_job` panics on a variant mismatch — unreachable for topologies
+/// that passed [`crate::engine::job::JobSpec`] validation, which is the
+/// only construction path.
+pub trait JobConvert: Clone + Send + Sync + Default + 'static {
+    const KIND: PayloadKind;
+    fn into_job(self) -> JobPayload;
+    fn from_job(p: JobPayload) -> Self;
+}
+
+#[cold]
+fn variant_mismatch(want: PayloadKind, got: &JobPayload) -> ! {
+    panic!(
+        "JobPayload variant mismatch: stage expected `{want}`, got `{}` \
+         (JobSpec edge type-checking should have rejected this topology)",
+        got.kind()
+    )
+}
+
+macro_rules! job_convert {
+    ($ty:ty, $kind:ident) => {
+        impl JobConvert for $ty {
+            const KIND: PayloadKind = PayloadKind::$kind;
+            fn into_job(self) -> JobPayload {
+                JobPayload::$kind(self)
+            }
+            fn from_job(p: JobPayload) -> Self {
+                match p {
+                    JobPayload::$kind(v) => v,
+                    other => variant_mismatch(Self::KIND, &other),
+                }
+            }
+        }
+    };
+}
+
+job_convert!(Trade, Trade);
+job_convert!(Either<Trade, Trade>, TradePair);
+job_convert!(Tweet, Tweet);
+job_convert!(Key, Word);
+job_convert!((Key, u64), WordCount);
+job_convert!(HedgeOut, Hedge);
+
+/// Re-type a whole tuple into the job's common payload (metadata — τ,
+/// kind, input tag, ingest stamp — is preserved verbatim).
+pub fn into_job_tuple<P: JobConvert>(t: Tuple<P>) -> Tuple<JobPayload> {
+    Tuple {
+        ts: t.ts,
+        kind: t.kind,
+        input: t.input,
+        ingest_us: t.ingest_us,
+        payload: t.payload.into_job(),
+    }
+}
+
+fn retype<P: JobConvert>(t: &Tuple<JobPayload>) -> Tuple<P> {
+    Tuple {
+        ts: t.ts,
+        kind: t.kind.clone(),
+        input: t.input,
+        ingest_us: t.ingest_us,
+        payload: P::from_job(t.payload.clone()),
+    }
+}
+
+/// Adapter deploying a typed [`OperatorLogic`] as a
+/// `JobPayload → JobPayload` stage: inputs are re-typed per call, inner
+/// emissions are staged through a private [`Ctx`] and re-wrapped into
+/// the outer one (timestamps, ingest stamps and comparison counts all
+/// carried over), so operator semantics are bit-identical to the typed
+/// deployment.
+pub struct DynOp<L: OperatorLogic> {
+    inner: Arc<L>,
+}
+
+impl<L> DynOp<L>
+where
+    L: OperatorLogic,
+    L::In: JobConvert,
+    L::Out: JobConvert,
+{
+    /// Run `f` against an inner `Ctx`, then replay its staged emissions
+    /// and comparison count into the outer context.
+    fn bridged(&self, ctx: &mut Ctx<'_, JobPayload>, f: impl FnOnce(&L, &mut Ctx<'_, L::Out>)) {
+        let mut staged: Vec<Tuple<L::Out>> = Vec::new();
+        let comparisons = {
+            let mut sink = |o: Tuple<L::Out>| staged.push(o);
+            let mut inner = Ctx::new(&mut sink);
+            inner.win_right = ctx.win_right;
+            inner.ingest_us = ctx.ingest_us;
+            f(&self.inner, &mut inner);
+            inner.flush();
+            inner.comparisons
+        };
+        if comparisons > 0 {
+            ctx.record_comparisons(comparisons);
+        }
+        for o in staged {
+            ctx.emit_at(o.ts, o.payload.into_job());
+        }
+    }
+}
+
+impl<L> OperatorLogic for DynOp<L>
+where
+    L: OperatorLogic,
+    L::In: JobConvert,
+    L::Out: JobConvert,
+{
+    type In = JobPayload;
+    type Out = JobPayload;
+    type State = L::State;
+
+    fn keys(&self, t: &Tuple<JobPayload>, keys: &mut Vec<Key>) {
+        self.inner.keys(&retype::<L::In>(t), keys);
+    }
+
+    fn update(
+        &self,
+        w: &mut WindowSet<L::State>,
+        t: &Tuple<JobPayload>,
+        ctx: &mut Ctx<'_, JobPayload>,
+    ) {
+        let t_in = retype::<L::In>(t);
+        self.bridged(ctx, |inner, ictx| inner.update(w, &t_in, ictx));
+    }
+
+    fn output(&self, w: &WindowSet<L::State>, ctx: &mut Ctx<'_, JobPayload>) {
+        self.bridged(ctx, |inner, ictx| inner.output(w, ictx));
+    }
+
+    fn slide(&self, w: &mut WindowSet<L::State>, new_l: EventTime) -> bool {
+        self.inner.slide(w, new_l)
+    }
+
+    fn has_output(&self) -> bool {
+        self.inner.has_output()
+    }
+
+    fn keys_are_constant(&self) -> bool {
+        self.inner.keys_are_constant()
+    }
+}
+
+/// Wrap a typed operator definition into its `JobPayload` deployment
+/// (geometry, input count, window type and name are preserved).
+pub fn wrap_op<L>(def: OperatorDef<L>) -> OperatorDef<DynOp<L>>
+where
+    L: OperatorLogic,
+    L::In: JobConvert,
+    L::Out: JobConvert,
+{
+    OperatorDef {
+        spec: def.spec,
+        inputs: def.inputs,
+        wt: def.wt,
+        logic: Arc::new(DynOp { inner: def.logic }),
+        name: def.name,
+    }
+}
+
+/// Per-stage operator parameters a config's `[stage.<name>]` section may
+/// override (each constructor reads the subset it needs).
+#[derive(Clone, Copy, Debug)]
+pub struct StageParams {
+    /// Window size WS in event-time ms (joins, aggregates).
+    pub ws_ms: EventTime,
+    /// Window advance WA in event-time ms (defaults to WS: tumbling).
+    pub wa_ms: EventTime,
+    /// Synthetic load-balancing key count of Map stages (≫ max Π).
+    pub lb_keys: u64,
+    /// Round-robin key count of ScaleJoin stages.
+    pub n_keys: u64,
+}
+
+impl Default for StageParams {
+    fn default() -> Self {
+        StageParams { ws_ms: 1_000, wa_ms: 1_000, lb_keys: 64, n_keys: 32 }
+    }
+}
+
+type MakeFn = fn(
+    &StageParams,
+    &mut DagBuilder<JobPayload>,
+    VsnOptions,
+    &[NodeHandle<JobPayload>],
+) -> NodeHandle<JobPayload>;
+
+/// One named operator the declarative layer can instantiate.
+pub struct OperatorEntry {
+    pub name: &'static str,
+    /// Payload kind consumed / produced (edge type checking).
+    pub input: PayloadKind,
+    pub output: PayloadKind,
+    pub about: &'static str,
+    make: MakeFn,
+}
+
+impl OperatorEntry {
+    /// Declare this operator as a DAG node (a source node when `ups` is
+    /// empty).
+    pub fn instantiate(
+        &self,
+        p: &StageParams,
+        b: &mut DagBuilder<JobPayload>,
+        opts: VsnOptions,
+        ups: &[NodeHandle<JobPayload>],
+    ) -> NodeHandle<JobPayload> {
+        (self.make)(p, b, opts, ups)
+    }
+}
+
+impl fmt::Debug for OperatorEntry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OperatorEntry")
+            .field("name", &self.name)
+            .field("input", &self.input)
+            .field("output", &self.output)
+            .finish()
+    }
+}
+
+fn add_node<L>(
+    b: &mut DagBuilder<JobPayload>,
+    def: OperatorDef<L>,
+    opts: VsnOptions,
+    ups: &[NodeHandle<JobPayload>],
+) -> NodeHandle<JobPayload>
+where
+    L: OperatorLogic<In = JobPayload, Out = JobPayload>,
+{
+    if ups.is_empty() {
+        b.source(def, opts)
+    } else {
+        b.node(def, opts, ups)
+    }
+}
+
+fn make_trade_filter(
+    p: &StageParams,
+    b: &mut DagBuilder<JobPayload>,
+    opts: VsnOptions,
+    ups: &[NodeHandle<JobPayload>],
+) -> NodeHandle<JobPayload> {
+    add_node(b, wrap_op(trade_filter_op(p.lb_keys)), opts, ups)
+}
+
+fn make_trade_fanout(
+    p: &StageParams,
+    b: &mut DagBuilder<JobPayload>,
+    opts: VsnOptions,
+    ups: &[NodeHandle<JobPayload>],
+) -> NodeHandle<JobPayload> {
+    add_node(b, wrap_op(trade_fanout_op(p.lb_keys)), opts, ups)
+}
+
+fn make_left_leg(
+    p: &StageParams,
+    b: &mut DagBuilder<JobPayload>,
+    opts: VsnOptions,
+    ups: &[NodeHandle<JobPayload>],
+) -> NodeHandle<JobPayload> {
+    add_node(b, wrap_op(left_leg_op(p.lb_keys)), opts, ups)
+}
+
+fn make_right_leg(
+    p: &StageParams,
+    b: &mut DagBuilder<JobPayload>,
+    opts: VsnOptions,
+    ups: &[NodeHandle<JobPayload>],
+) -> NodeHandle<JobPayload> {
+    add_node(b, wrap_op(right_leg_op(p.lb_keys)), opts, ups)
+}
+
+fn make_hedge_join(
+    p: &StageParams,
+    b: &mut DagBuilder<JobPayload>,
+    opts: VsnOptions,
+    ups: &[NodeHandle<JobPayload>],
+) -> NodeHandle<JobPayload> {
+    add_node(b, wrap_op(hedge_join_op(p.ws_ms, p.n_keys)), opts, ups)
+}
+
+fn make_tweet_tokenize(
+    p: &StageParams,
+    b: &mut DagBuilder<JobPayload>,
+    opts: VsnOptions,
+    ups: &[NodeHandle<JobPayload>],
+) -> NodeHandle<JobPayload> {
+    add_node(b, wrap_op(tokenize_op(p.lb_keys)), opts, ups)
+}
+
+fn make_word_count(
+    p: &StageParams,
+    b: &mut DagBuilder<JobPayload>,
+    opts: VsnOptions,
+    ups: &[NodeHandle<JobPayload>],
+) -> NodeHandle<JobPayload> {
+    // WindowSpec::new(advance, size)
+    add_node(b, wrap_op(word_count_stage_op(WindowSpec::new(p.wa_ms, p.ws_ms))), opts, ups)
+}
+
+/// Every operator a job config can name.
+pub const OPERATORS: &[OperatorEntry] = &[
+    OperatorEntry {
+        name: "trade-filter",
+        input: PayloadKind::Trade,
+        output: PayloadKind::Trade,
+        about: "drop trades whose previous-day average is zero",
+        make: make_trade_filter,
+    },
+    OperatorEntry {
+        name: "trade-fanout",
+        input: PayloadKind::Trade,
+        output: PayloadKind::TradePair,
+        about: "materialize both join sides of every trade (self-join fan-out)",
+        make: make_trade_fanout,
+    },
+    OperatorEntry {
+        name: "left-leg",
+        input: PayloadKind::Trade,
+        output: PayloadKind::TradePair,
+        about: "materialize the LEFT join side (diamond branch)",
+        make: make_left_leg,
+    },
+    OperatorEntry {
+        name: "right-leg",
+        input: PayloadKind::Trade,
+        output: PayloadKind::TradePair,
+        about: "materialize the RIGHT join side (diamond branch)",
+        make: make_right_leg,
+    },
+    OperatorEntry {
+        name: "hedge-join",
+        input: PayloadKind::TradePair,
+        output: PayloadKind::Hedge,
+        about: "hedge band self-join (WS = ws_ms, keys = keys)",
+        make: make_hedge_join,
+    },
+    OperatorEntry {
+        name: "tweet-tokenize",
+        input: PayloadKind::Tweet,
+        output: PayloadKind::Word,
+        about: "one output per distinct word of the tweet",
+        make: make_tweet_tokenize,
+    },
+    OperatorEntry {
+        name: "word-count",
+        input: PayloadKind::Word,
+        output: PayloadKind::WordCount,
+        about: "windowed count per word (WS = ws_ms, WA = wa_ms)",
+        make: make_word_count,
+    },
+];
+
+/// Look an operator up by its registry name.
+pub fn lookup(name: &str) -> Option<&'static OperatorEntry> {
+    OPERATORS.iter().find(|e| e.name == name)
+}
+
+/// A rate-paceable external source producing [`JobPayload`] tuples — the
+/// harness-facing generator of a declarative job (selected by the source
+/// stages' input kind).
+pub enum JobSource {
+    Trades(TradeStream),
+    Tweets(TweetGen),
+}
+
+impl JobSource {
+    /// The generator for source stages consuming `kind`, parameterized by
+    /// the config's `[source]` section. `None` when no generator produces
+    /// that payload kind.
+    ///
+    /// Adding a `[source]` key here? Also register it in
+    /// `harness::JOB_SECTION_KEYS`, or job configs using it will be
+    /// rejected as typos.
+    pub fn for_kind(kind: PayloadKind, cfg: &Config) -> Option<JobSource> {
+        match kind {
+            PayloadKind::Trade => Some(JobSource::Trades(TradeStream::new(
+                &NyseConfig {
+                    symbols: cfg.int_or("source.symbols", 10).max(1) as usize,
+                    seed: cfg.int_or("source.seed", 0x4E59_5345) as u64,
+                    ..Default::default()
+                },
+                1_000.0,
+            ))),
+            PayloadKind::Tweet => Some(JobSource::Tweets(TweetGen::new(TweetGenConfig {
+                vocab: cfg.int_or("source.vocab", 3_000).max(1) as usize,
+                seed: cfg.int_or("source.seed", 0x7EE75) as u64,
+                ..Default::default()
+            }))),
+            _ => None,
+        }
+    }
+
+    pub fn kind(&self) -> PayloadKind {
+        match self {
+            JobSource::Trades(_) => PayloadKind::Trade,
+            JobSource::Tweets(_) => PayloadKind::Tweet,
+        }
+    }
+
+    pub fn set_rate(&mut self, tps: f64) {
+        match self {
+            JobSource::Trades(s) => s.set_rate(tps),
+            JobSource::Tweets(s) => s.set_rate(tps),
+        }
+    }
+
+    pub fn next_tuple(&mut self) -> Tuple<JobPayload> {
+        match self {
+            JobSource::Trades(s) => into_job_tuple(s.next()),
+            JobSource::Tweets(s) => into_job_tuple(s.next()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::OperatorMetrics;
+    use crate::operator::state::SharedState;
+    use crate::operator::OperatorCore;
+    use crate::tuple::Mapper;
+
+    #[test]
+    fn registry_names_resolve_and_kinds_are_consistent() {
+        for e in OPERATORS {
+            assert_eq!(lookup(e.name).unwrap().name, e.name);
+        }
+        assert!(lookup("no-such-op").is_none());
+        let j = lookup("hedge-join").unwrap();
+        assert_eq!((j.input, j.output), (PayloadKind::TradePair, PayloadKind::Hedge));
+    }
+
+    #[test]
+    fn job_convert_round_trips_every_variant() {
+        let t = Trade { id: 3, price: 105, avg: 100 };
+        assert_eq!(Trade::from_job(t.into_job()).id, 3);
+        let w: Key = 42;
+        assert_eq!(Key::from_job(w.into_job()), 42);
+        let c: (Key, u64) = (7, 9);
+        assert_eq!(<(Key, u64)>::from_job(c.into_job()), (7, 9));
+        let h = HedgeOut { l_id: 1, l_price: 2, r_id: 3, r_price: 4 };
+        assert_eq!(HedgeOut::from_job(h.into_job()).r_price, 4);
+        assert_eq!(JobPayload::default().kind(), PayloadKind::Word);
+    }
+
+    #[test]
+    #[should_panic(expected = "variant mismatch")]
+    fn job_convert_mismatch_panics_with_kinds() {
+        let _ = Trade::from_job(JobPayload::Word(1));
+    }
+
+    #[test]
+    fn dyn_op_preserves_map_semantics_through_the_core() {
+        // wrapped trade-filter ≡ typed trade-filter on the same input
+        let def = wrap_op(trade_filter_op(8));
+        let mut core = OperatorCore::new(def, 0, SharedState::private(), OperatorMetrics::new(1));
+        let f_mu = Mapper::hash_mod(1);
+        let mut out: Vec<(i64, PayloadKind)> = Vec::new();
+        for (ts, avg) in [(1i64, 100), (2, 0), (3, 50)] {
+            let t = into_job_tuple(Tuple::data(ts, Trade { id: 1, price: 10, avg }));
+            let mut sink = |o: Tuple<JobPayload>| out.push((o.ts, o.payload.kind()));
+            let mut ctx = Ctx::new(&mut sink);
+            core.process(&t, &f_mu, &mut ctx);
+        }
+        // the avg == 0 trade is dropped, τ preserved, output kind Trade
+        assert_eq!(out, vec![(1, PayloadKind::Trade), (3, PayloadKind::Trade)]);
+    }
+
+    #[test]
+    fn job_source_selection_matches_kinds() {
+        let cfg = Config::parse("[source]\nsymbols = 4").unwrap();
+        let mut s = JobSource::for_kind(PayloadKind::Trade, &cfg).unwrap();
+        assert_eq!(s.kind(), PayloadKind::Trade);
+        let t = s.next_tuple();
+        assert_eq!(t.payload.kind(), PayloadKind::Trade);
+        assert!(JobSource::for_kind(PayloadKind::Hedge, &cfg).is_none());
+        let mut s = JobSource::for_kind(PayloadKind::Tweet, &cfg).unwrap();
+        assert_eq!(s.next_tuple().payload.kind(), PayloadKind::Tweet);
+    }
+}

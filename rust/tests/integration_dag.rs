@@ -12,15 +12,17 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use stretch::config::Config;
 use stretch::engine::dag::DagBuilder;
-use stretch::engine::pipeline::PipelineBuilder;
-use stretch::engine::VsnOptions;
+use stretch::engine::pipeline::{Pipeline, PipelineBuilder};
+use stretch::engine::{JobSpec, VsnOptions};
 use stretch::time::WindowSpec;
 use stretch::tuple::{Key, Tuple};
 use stretch::workloads::nyse::{
     hedge_diamond_oracle, hedge_join_op, left_leg_op, right_leg_op, trade_filter_op, HedgeOut,
     NyseConfig, Trade, TradeStream,
 };
+use stretch::workloads::registry::{into_job_tuple, JobPayload};
 use stretch::workloads::tweets::{
     tokenize_op, word_count_stage_op, wordcount_keys, Tweet, TweetGen, TweetGenConfig,
 };
@@ -194,32 +196,113 @@ fn pipeline_shrink_preserves_equivalence() {
     assert_eq!(got, oracle, "shrink reconfigs must not lose or double-count windows");
 }
 
-/// The tentpole's end-to-end proof: a DIAMOND topology
-/// (filter → L-leg ∥ R-leg → hedge join → sink) built on shared gates —
-/// fan-out as two reader groups on one ESG_out, fan-in as two
-/// source-slot groups on the join's ESG_in — producing EXACTLY the
-/// sequential reference's match multiset while every one of the four
-/// stages reconfigures mid-run through its own per-edge control slot.
-#[test]
-fn diamond_dag_matches_reference_while_every_stage_reconfigures() {
-    let ws_ms = 800i64;
-    let n = 2_500usize;
+type Match = (u16, i32, u16, i32);
+
+fn diamond_corpus(ws_ms: i64, n: usize) -> (Vec<Tuple<Trade>>, i64, Vec<Match>) {
     let cfg = NyseConfig { symbols: 8, ..Default::default() };
     let mut stream = TradeStream::new(&cfg, 1_000.0);
     let trades: Vec<Tuple<Trade>> = (0..n).map(|_| stream.next()).collect();
     let horizon = trades.last().unwrap().ts + ws_ms + 10_000;
-
-    let oracle = {
-        let mut o: Vec<(u16, i32, u16, i32)> = hedge_diamond_oracle(&trades, ws_ms)
-            .into_iter()
-            .map(|h| (h.l_id, h.l_price, h.r_id, h.r_price))
-            .collect();
-        o.sort_unstable();
-        o
-    };
+    let mut oracle: Vec<Match> = hedge_diamond_oracle(&trades, ws_ms)
+        .into_iter()
+        .map(|h| (h.l_id, h.l_price, h.r_id, h.r_price))
+        .collect();
+    oracle.sort_unstable();
     assert!(!oracle.is_empty(), "degenerate corpus: no hedge matches");
+    (trades, horizon, oracle)
+}
 
-    let mut b = DagBuilder::<Trade, HedgeOut>::new();
+/// Drive any 4-stage diamond (hand-built or config-built) with the same
+/// trade corpus while reconfiguring EVERY stage mid-run — grow the
+/// source, grow the left leg, SHRINK the right leg, grow the join —
+/// then return the sorted match multiset plus the final instance sets.
+fn drive_diamond<In, Out>(
+    mut pipeline: Pipeline<In, Out>,
+    trades: &[Tuple<Trade>],
+    horizon: i64,
+    expected: usize,
+    wrap: fn(Tuple<Trade>) -> Tuple<In>,
+    extract: fn(&Out) -> Match,
+) -> (Vec<Match>, Vec<Vec<usize>>)
+where
+    In: Clone + Send + Sync + Default + 'static,
+    Out: Clone + Send + Sync + Default + 'static,
+{
+    assert_eq!(pipeline.depth(), 4);
+    assert_eq!(pipeline.ingress.len(), 1);
+    assert_eq!(pipeline.egress.len(), 1);
+    let n = trades.len();
+
+    let progress = Arc::new(AtomicUsize::new(0));
+    let feed = trades.to_vec();
+    let mut ing = pipeline.ingress.remove(0);
+    let fed = progress.clone();
+    let feeder = std::thread::spawn(move || {
+        for t in feed {
+            ing.add(wrap(t)).unwrap();
+            fed.fetch_add(1, Ordering::Relaxed);
+        }
+        ing.heartbeat(horizon).unwrap();
+    });
+
+    let mut reader = pipeline.egress.remove(0);
+    let mut got: Vec<Match> = Vec::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    let mut fired = [false; 4];
+    let plan: [(usize, Vec<usize>); 4] =
+        [(0, vec![0, 1]), (1, vec![0, 1]), (2, vec![1]), (3, vec![0, 1, 2])];
+    let mut buf: Vec<Tuple<Out>> = Vec::new();
+    while got.len() < expected && std::time::Instant::now() < deadline {
+        let p = progress.load(Ordering::Relaxed);
+        for (i, (stage, set)) in plan.iter().enumerate() {
+            if !fired[i] && p > (i + 1) * n / 5 {
+                pipeline.reconfigure_stage(*stage, set.clone());
+                fired[i] = true;
+            }
+        }
+        buf.clear();
+        if reader.get_batch(&mut buf, 256) == 0 {
+            std::thread::sleep(Duration::from_micros(200));
+            continue;
+        }
+        for t in &buf {
+            if t.kind.is_data() {
+                got.push(extract(&t.payload));
+            }
+        }
+    }
+    feeder.join().unwrap();
+    assert!(fired.iter().all(|&f| f), "not every reconfig trigger fired: {fired:?}");
+
+    // every stage completed its reconfiguration independently
+    let t0 = std::time::Instant::now();
+    while pipeline.stages.iter().any(|s| s.completion_times().is_empty())
+        && t0.elapsed() < Duration::from_secs(5)
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for (k, stage) in pipeline.stages.iter().enumerate() {
+        assert_eq!(stage.completion_times().len(), 1, "stage {k} ({}) reconfig lost", stage.name());
+    }
+    let finals: Vec<Vec<usize>> = pipeline.stages.iter().map(|s| s.active_instances()).collect();
+    pipeline.shutdown();
+    got.sort_unstable();
+    (got, finals)
+}
+
+fn extract_hedge(h: &HedgeOut) -> Match {
+    (h.l_id, h.l_price, h.r_id, h.r_price)
+}
+
+fn extract_job(p: &JobPayload) -> Match {
+    match p {
+        JobPayload::Hedge(h) => (h.l_id, h.l_price, h.r_id, h.r_price),
+        other => panic!("diamond sink must emit hedge matches, got {other:?}"),
+    }
+}
+
+fn hand_built_diamond(ws_ms: i64) -> Pipeline<Trade, HedgeOut> {
+    let mut b = DagBuilder::<Trade>::new();
     let s = b.source(
         trade_filter_op(64),
         VsnOptions { initial: 1, max: 2, gate_capacity: 8192, ..Default::default() },
@@ -239,79 +322,96 @@ fn diamond_dag_matches_reference_while_every_stage_reconfigures() {
         VsnOptions { initial: 1, max: 3, gate_capacity: 8192, ..Default::default() },
         &[l, r],
     );
-    let mut pipeline = b.build(&[j]).expect("diamond is a valid DAG");
-    assert_eq!(pipeline.depth(), 4);
-    assert_eq!(pipeline.ingress.len(), 1);
-    assert_eq!(pipeline.egress.len(), 1);
+    b.build(&[j]).expect("diamond is a valid DAG")
+}
 
-    let progress = Arc::new(AtomicUsize::new(0));
-    let feed = trades.clone();
-    let mut ing = pipeline.ingress.remove(0);
-    let fed = progress.clone();
-    let feeder = std::thread::spawn(move || {
-        for t in feed {
-            ing.add(t).unwrap();
-            fed.fetch_add(1, Ordering::Relaxed);
-        }
-        ing.heartbeat(horizon).unwrap();
-    });
-
-    // collect while reconfiguring EVERY stage mid-run: grow the source,
-    // grow the left leg, SHRINK the right leg, grow the join
-    let mut reader = pipeline.egress.remove(0);
-    let mut got: Vec<(u16, i32, u16, i32)> = Vec::new();
-    let deadline = std::time::Instant::now() + Duration::from_secs(120);
-    let mut fired = [false; 4];
-    let mut buf: Vec<Tuple<HedgeOut>> = Vec::new();
-    while got.len() < oracle.len() && std::time::Instant::now() < deadline {
-        let p = progress.load(Ordering::Relaxed);
-        if !fired[0] && p > n / 5 {
-            pipeline.reconfigure_stage(0, vec![0, 1]); // filter 1 → 2
-            fired[0] = true;
-        }
-        if !fired[1] && p > 2 * n / 5 {
-            pipeline.reconfigure_stage(1, vec![0, 1]); // left leg 1 → 2
-            fired[1] = true;
-        }
-        if !fired[2] && p > 3 * n / 5 {
-            pipeline.reconfigure_stage(2, vec![1]); // right leg 2 → 1
-            fired[2] = true;
-        }
-        if !fired[3] && p > 4 * n / 5 {
-            pipeline.reconfigure_stage(3, vec![0, 1, 2]); // join 1 → 3
-            fired[3] = true;
-        }
-        buf.clear();
-        if reader.get_batch(&mut buf, 256) == 0 {
-            std::thread::sleep(Duration::from_micros(200));
-            continue;
-        }
-        for t in &buf {
-            if t.kind.is_data() {
-                got.push((t.payload.l_id, t.payload.l_price, t.payload.r_id, t.payload.r_price));
-            }
-        }
-    }
-    feeder.join().unwrap();
-    assert!(fired.iter().all(|&f| f), "not every reconfig trigger fired: {fired:?}");
-
-    // every stage completed its reconfiguration independently
-    let t0 = std::time::Instant::now();
-    while pipeline.stages.iter().any(|s| s.completion_times().is_empty())
-        && t0.elapsed() < Duration::from_secs(5)
-    {
-        std::thread::sleep(Duration::from_millis(5));
-    }
-    for (k, stage) in pipeline.stages.iter().enumerate() {
-        assert_eq!(stage.completion_times().len(), 1, "stage {k} ({}) reconfig lost", stage.name());
-    }
-    assert_eq!(pipeline.stages[0].active_instances(), vec![0, 1]);
-    assert_eq!(pipeline.stages[1].active_instances(), vec![0, 1]);
-    assert_eq!(pipeline.stages[2].active_instances(), vec![1]);
-    assert_eq!(pipeline.stages[3].active_instances(), vec![0, 1, 2]);
-    pipeline.shutdown();
-
-    got.sort_unstable();
+/// The tentpole's end-to-end proof: a DIAMOND topology
+/// (filter → L-leg ∥ R-leg → hedge join → sink) built on shared gates —
+/// fan-out as two reader groups on one ESG_out, fan-in as two
+/// source-slot groups on the join's ESG_in — producing EXACTLY the
+/// sequential reference's match multiset while every one of the four
+/// stages reconfigures mid-run through its own per-edge control slot.
+#[test]
+fn diamond_dag_matches_reference_while_every_stage_reconfigures() {
+    let ws_ms = 800i64;
+    let (trades, horizon, oracle) = diamond_corpus(ws_ms, 2_500);
+    let pipeline = hand_built_diamond(ws_ms);
+    let (got, finals) =
+        drive_diamond(pipeline, &trades, horizon, oracle.len(), |t| t, extract_hedge);
+    assert_eq!(
+        finals,
+        vec![vec![0, 1], vec![0, 1], vec![1], vec![0, 1, 2]],
+        "final instance sets diverged from the reconfig plan"
+    );
     assert_eq!(got.len(), oracle.len(), "match count diverged from the sequential reference");
     assert_eq!(got, oracle, "diamond DAG output diverged from the sequential reference");
+}
+
+/// The exact topology of [`hand_built_diamond`] as a `[topology]` config
+/// (same parallelism, gate capacities and join parameters) — the
+/// declarative layer's equivalence fixture.
+const DIAMOND_JOB: &str = r#"
+name = "diamond-equivalence"
+[topology]
+stages = ["filter", "left", "right", "join"]
+edges = ["filter -> left", "filter -> right", "left -> join", "right -> join"]
+[stage.filter]
+operator = "trade-filter"
+initial = 1
+max = 2
+gate_capacity = 8192
+[stage.left]
+operator = "left-leg"
+initial = 1
+max = 2
+gate_capacity = 8192
+[stage.right]
+operator = "right-leg"
+initial = 2
+max = 2
+gate_capacity = 8192
+[stage.join]
+operator = "hedge-join"
+ws_ms = 800
+keys = 32
+initial = 1
+max = 3
+gate_capacity = 8192
+"#;
+
+/// The JobSpec layer's acceptance proof: a diamond built FROM CONFIG
+/// produces output exactly equivalent to the hand-built `DagBuilder`
+/// diamond — same corpus, same mid-run reconfiguration of every stage,
+/// identical match multisets (and both equal the sequential reference).
+#[test]
+fn config_built_diamond_matches_hand_built_while_every_stage_reconfigures() {
+    let ws_ms = 800i64;
+    let (trades, horizon, oracle) = diamond_corpus(ws_ms, 2_500);
+
+    let (hand, hand_finals) = drive_diamond(
+        hand_built_diamond(ws_ms),
+        &trades,
+        horizon,
+        oracle.len(),
+        |t| t,
+        extract_hedge,
+    );
+
+    let spec = JobSpec::from_config(&Config::parse(DIAMOND_JOB).unwrap())
+        .expect("diamond job config is valid");
+    assert_eq!(spec.source_kind, stretch::workloads::PayloadKind::Trade);
+    let built = spec.build().expect("diamond job builds");
+    assert_eq!(built.stage_names, ["filter", "left", "right", "join"]);
+    let (conf, conf_finals) = drive_diamond(
+        built.pipeline,
+        &trades,
+        horizon,
+        oracle.len(),
+        into_job_tuple::<Trade>,
+        extract_job,
+    );
+
+    assert_eq!(hand, oracle, "hand-built diamond diverged from the sequential reference");
+    assert_eq!(conf, hand, "config-built diamond diverged from the hand-built one");
+    assert_eq!(conf_finals, hand_finals, "per-stage final instance sets diverged");
 }
