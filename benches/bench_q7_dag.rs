@@ -12,8 +12,8 @@
 //! cargo bench --bench bench_q7_dag -- --budget-ms 10  # CI smoke
 //! ```
 
-use stretch::cli::OrExit;
 use std::time::Duration;
+use stretch::cli::OrExit;
 use stretch::elastic::DagController;
 use stretch::engine::dag::DagBuilder;
 use stretch::engine::VsnOptions;
@@ -73,7 +73,7 @@ fn main() {
     let pipeline = b.build(&[j]).expect("diamond is a valid DAG");
     let n_stages = pipeline.depth();
 
-    let mut source = TradeStream::new(&NyseConfig { symbols: 10, ..Default::default() }, lo);
+    let source = TradeStream::new(&NyseConfig { symbols: 10, ..Default::default() }, lo);
     let cfg = PipelineRunConfig {
         schedule: RateSchedule::step(duration_s, step_at, lo, hi),
         time_scale,
@@ -86,7 +86,7 @@ fn main() {
         ),
         dag_controller_period_s: 1,
     };
-    let r = run_pipeline(pipeline, cfg, &mut source).expect("diamond topology is well-formed");
+    let r = run_pipeline(pipeline, cfg, source).expect("diamond topology is well-formed");
 
     let mut report = stretch::metrics::BenchReport::new("q7_dag");
     report

@@ -1,24 +1,27 @@
-//! Diamond DAG demo, *declaratively*: the whole topology — trade filter
-//! → fan-out (left leg ∥ right leg) → fan-in hedge join — comes from
-//! `examples/configs/diamond.conf` via the JobSpec layer; this file
-//! keeps only the payload-specific proof: feed a fixed trade corpus,
-//! reconfigure every stage mid-run through its per-edge control slot,
-//! and check the final match multiset for exact equivalence against a
+//! Diamond DAG demo, *declaratively and live*: the topology — trade
+//! filter → fan-out (left leg ∥ right leg) → fan-in hedge join — comes
+//! from `examples/configs/diamond.conf` via the JobSpec layer, and the
+//! run is driven through the live runtime API: `Job::launch` owns the
+//! feed/drain/sampling, while this file plays the external *policy* —
+//! it watches `sample()`, issues `scale_to` calls mid-run (one per
+//! stage, through each stage's per-edge control slot), reads every
+//! reconfiguration's measured latency off its `ReconfigTicket`, and
+//! checks the final match multiset for exact equivalence against a
 //! single-threaded sequential reference.
 //!
 //! ```sh
 //! cargo run --release --example diamond_dag -- --trades 4000
 //! ```
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use stretch::cli::OrExit;
 use stretch::config::Config;
 use stretch::engine::JobSpec;
+use stretch::harness::{Job, LaunchConfig, ReplaySource};
 use stretch::tuple::Tuple;
 use stretch::workloads::nyse::{hedge_diamond_oracle, NyseConfig, Trade, TradeStream};
+use stretch::workloads::rates::RateSchedule;
 use stretch::workloads::registry::{into_job_tuple, JobPayload};
 
 const DEFAULT_CONFIG: &str =
@@ -33,7 +36,7 @@ fn main() {
     let n = args.usize_or("trades", 4_000).or_exit();
     let path = args.str_or("config", DEFAULT_CONFIG);
 
-    println!("═══ STRETCH diamond DAG (declared in {path}) ═══\n");
+    println!("═══ STRETCH diamond DAG (declared in {path}, driven live) ═══\n");
     let cfg = Config::load(path).unwrap_or_else(|e| panic!("config error: {e}"));
     let spec = JobSpec::from_config(&cfg).unwrap_or_else(|e| panic!("job error: {e}"));
     let ws_ms = spec
@@ -49,7 +52,6 @@ fn main() {
     };
     let mut stream = TradeStream::new(&stream_cfg, 1_000.0);
     let trades: Vec<Tuple<Trade>> = (0..n).map(|_| stream.next()).collect();
-    let horizon = trades.last().unwrap().ts + ws_ms + 10_000;
 
     println!("[1/3] sequential reference: {n} trades, WS = {ws_ms} ms");
     let mut oracle: Vec<(u16, i32, u16, i32)> = hedge_diamond_oracle(&trades, ws_ms)
@@ -59,40 +61,15 @@ fn main() {
     oracle.sort_unstable();
     println!("      {} hedge matches expected\n", oracle.len());
 
-    // the topology is a config: one build() call, zero wiring here
-    let mut built = spec.build().unwrap_or_else(|e| panic!("job error: {e}"));
-    let mut ing = built.pipeline.ingress.remove(0);
-    println!(
-        "[2/3] live run: {} stages ({}), every stage reconfigured mid-run",
-        built.pipeline.depth(),
-        built.stage_names.join(" → ")
-    );
-
-    let t0 = Instant::now();
-    let progress = Arc::new(AtomicUsize::new(0));
-    let feed = trades.clone();
-    let fed = progress.clone();
-    let feeder = std::thread::spawn(move || {
-        for t in feed {
-            ing.add(into_job_tuple(t)).unwrap();
-            fed.fetch_add(1, Ordering::Relaxed);
-        }
-        ing.heartbeat(horizon).unwrap();
-    });
-
-    let mut reader = built.pipeline.egress.remove(0);
-    let mut got: Vec<(u16, i32, u16, i32)> = Vec::new();
-    let deadline = Instant::now() + Duration::from_secs(120);
-    let mut fired = [false; 4];
+    // the reconfig plan is part of this demo, the topology comes from
+    // --config: fail up front if the config can't host the plan (an
+    // instance id ≥ a stage's max would address another stage's slots)
     let plan: [(&str, Vec<usize>, &str); 4] = [
         ("filter", vec![0, 1], "filter    Π 1 → 2"),
         ("left", vec![0, 1], "left-leg  Π 1 → 2"),
         ("right", vec![1], "right-leg Π 2 → 1"),
         ("join", vec![0, 1, 2], "join      Π 1 → 3"),
     ];
-    // the reconfig plan is part of this demo, the topology comes from
-    // --config: fail up front if the config can't host the plan (an
-    // instance id ≥ a stage's max would address another stage's slots)
     for (stage, set, _) in &plan {
         let st = spec
             .stages
@@ -106,66 +83,109 @@ fn main() {
             st.max
         );
     }
-    let mut buf: Vec<Tuple<JobPayload>> = Vec::new();
-    while got.len() < oracle.len() && Instant::now() < deadline {
-        let p = progress.load(Ordering::Relaxed);
+
+    // the topology is a config, the run is a launch: one build(), one
+    // launch(), zero wiring here — the corpus replays through a
+    // ReplaySource (exactly once, end-of-stream on exhaustion)
+    let built = spec.build().unwrap_or_else(|e| panic!("job error: {e}"));
+    let stage_names = built.stage_names.clone();
+    let corpus: Vec<Tuple<JobPayload>> =
+        trades.iter().cloned().map(into_job_tuple).collect();
+    let t0 = Instant::now();
+    // ~4k tuples per wall second: the corpus spans ~1 s of wall time, so
+    // every feed-progress trigger fires comfortably before end-of-stream
+    // (a scale issued after the EOS heartbeat could never complete)
+    let handle = Job::new(built.pipeline, ReplaySource::new(corpus))
+        .with_config(LaunchConfig {
+            name: "diamond-live".into(),
+            stage_names: stage_names.clone(),
+            schedule: RateSchedule::constant(120, 2_000.0),
+            time_scale: 2.0,
+            flush_slack_ms: ws_ms + 10_000,
+            drain: Duration::from_millis(300),
+            capture_egress: true,
+            ..Default::default()
+        })
+        .launch()
+        .unwrap_or_else(|e| panic!("launch error: {e}"));
+    println!(
+        "[2/3] live run: {} stages ({}), every stage scaled through the JobHandle",
+        handle.depth(),
+        stage_names.join(" → ")
+    );
+
+    let stage_index = |name: &str| {
+        stage_names.iter().position(|s| s == name).expect("config names the stage")
+    };
+    let mut fired = [false; 4];
+    let mut tickets = Vec::new();
+    let mut got: Vec<(u16, i32, u16, i32)> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while Instant::now() < deadline {
+        let m = handle.sample();
         for (i, (stage, set, label)) in plan.iter().enumerate() {
-            if !fired[i] && p > (i + 1) * n / 5 {
-                let k = built.stage_index(stage).expect("config names the stage");
-                let e = built.pipeline.reconfigure_stage(k, set.clone());
-                println!("      @{p:>6} trades: stage `{stage}` {label}   (epoch {e})");
+            if !fired[i] && m.fed > ((i + 1) * n / 5) as u64 {
+                let ticket = handle.scale_to(stage_index(stage), set.clone());
+                println!("      @{:>6} trades fed: stage `{stage}` {label}", m.fed);
+                tickets.push(ticket);
                 fired[i] = true;
             }
         }
-        buf.clear();
-        if reader.get_batch(&mut buf, 256) == 0 {
-            std::thread::sleep(Duration::from_micros(100));
-            continue;
-        }
-        for t in &buf {
+        for t in handle.take_egress() {
             if t.kind.is_data() {
                 match &t.payload {
-                    JobPayload::Hedge(h) => {
-                        got.push((h.l_id, h.l_price, h.r_id, h.r_price));
-                    }
+                    JobPayload::Hedge(h) => got.push((h.l_id, h.l_price, h.r_id, h.r_price)),
                     other => panic!("diamond sink must emit hedge matches, got {other:?}"),
                 }
             }
         }
+        if (got.len() >= oracle.len() && fired.iter().all(|&f| f)) || handle.quiesced() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
     }
-    feeder.join().unwrap();
     let wall = t0.elapsed().as_secs_f64();
 
-    let tw = Instant::now();
-    while built.pipeline.stages.iter().any(|s| s.completion_times().is_empty())
-        && tw.elapsed() < Duration::from_secs(5)
-    {
-        std::thread::sleep(Duration::from_millis(5));
-    }
-
     println!("\n[3/3] results:");
-    let mut ok = true;
-    for (k, stage) in built.pipeline.stages.iter().enumerate() {
-        let m = stage.metrics().snapshot();
-        let done = stage.completion_times().len();
-        println!(
-            "      stage {} ({:<12}) in={:>8} out={:>8} tuples, Π_final={}, reconfigs={}",
-            built.stage_names[k],
-            stage.name(),
-            m.tuples_in,
-            m.tuples_out,
-            stage.active_instances().len(),
-            done,
-        );
-        for (epoch, ms) in stage.completion_times() {
-            let verdict = if ms < 40.0 { "✓ < 40 ms (paper bound)" } else { "" };
-            println!("        reconfig epoch {epoch}: {ms:.2} ms {verdict}");
-        }
-        if done < 1 {
-            ok = false;
+    let mut ok = fired.iter().all(|&f| f);
+    // each reconfiguration's measured latency, straight off its ticket
+    for t in &tickets {
+        match t.wait(Duration::from_secs(10)) {
+            Some(ms) => {
+                let verdict = if ms < 40.0 { "✓ < 40 ms (paper bound)" } else { "" };
+                println!(
+                    "      stage {:<8} epoch {:?}: reconfig {ms:.2} ms {verdict}",
+                    stage_names[t.stage()],
+                    t.epoch().unwrap_or(0),
+                );
+            }
+            None => {
+                println!("      stage {} reconfig NEVER COMPLETED", stage_names[t.stage()]);
+                ok = false;
+            }
         }
     }
-    built.pipeline.shutdown();
+    handle.await_quiesce();
+    for t in handle.take_egress() {
+        if t.kind.is_data() {
+            if let JobPayload::Hedge(h) = &t.payload {
+                got.push((h.l_id, h.l_price, h.r_id, h.r_price));
+            }
+        }
+    }
+    let final_m = handle.sample();
+    let outcome = handle.shutdown();
+    for ((name, s), live) in
+        outcome.stage_names.iter().zip(&outcome.result.stages).zip(&final_m.stages)
+    {
+        println!(
+            "      stage {:<8} ({:<12}) Π_final={} reconfigs={}",
+            name,
+            s.name,
+            live.active.len(),
+            s.reconfigs.len(),
+        );
+    }
 
     got.sort_unstable();
     if got == oracle {
@@ -184,7 +204,7 @@ fn main() {
     println!(
         "\n{}",
         if ok {
-            "CONFIG-DECLARED DIAMOND: ALL FOUR STAGES RECONFIGURED, OUTPUT EXACT — PASS"
+            "LIVE-DRIVEN DIAMOND: ALL FOUR STAGES SCALED THROUGH THE HANDLE, OUTPUT EXACT — PASS"
         } else {
             "diamond FAIL — see above"
         }

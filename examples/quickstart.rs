@@ -1,6 +1,10 @@
 //! Quickstart: define an `A+` (multi-key aggregate), run it on the
 //! STRETCH (VSN) engine, read results, then trigger a live elastic
-//! reconfiguration — no state transfer, no stream interruption.
+//! reconfiguration — no state transfer, no stream interruption. Then the
+//! two higher layers: declare a whole topology as 20 lines of config,
+//! and drive a live job from your own code through `Job::launch`'s
+//! `JobHandle` (scale with measured reconfig latencies, sample metrics,
+//! quiesce, shut down).
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -81,6 +85,7 @@ fn main() {
     engine.shutdown();
 
     declare_a_job_in_20_lines_of_config();
+    drive_a_live_job_from_your_own_code();
 }
 
 /// 7. The declarative layer: a whole elastic TOPOLOGY — stages, edges,
@@ -129,5 +134,66 @@ adaptive = true
     println!(
         "  {} windowed counts at the egress — same engine, zero topology code",
         out.result.egress_count
+    );
+}
+
+/// 8. The live runtime API: `Job::launch` owns the data plane (paced
+///    feed, egress drain, metrics sampling) on a background thread and
+///    hands back a `JobHandle` — your code is the elasticity *policy*:
+///    it samples `JobMetrics`, calls `scale` (each call returns a
+///    `ReconfigTicket` resolving to the measured reconfig latency), and
+///    decides when to quiesce. The built-in controllers are wired
+///    through exactly this surface.
+fn drive_a_live_job_from_your_own_code() {
+    use stretch::engine::pipeline::PipelineBuilder;
+    use stretch::engine::VsnOptions;
+    use stretch::harness::{Job, LaunchConfig};
+    use stretch::time::WindowSpec;
+    use stretch::workloads::tweets::{TweetGen, TweetGenConfig};
+    use stretch::workloads::{tokenize_op, word_count_stage_op, RateSchedule};
+
+    println!("\nlive job: tokenize → count, scaled from user code via the JobHandle...");
+    let pipeline = PipelineBuilder::new(
+        tokenize_op(64),
+        VsnOptions { initial: 1, max: 3, ..Default::default() },
+    )
+    .stage(
+        word_count_stage_op(WindowSpec::new(500, 500)),
+        VsnOptions { initial: 1, max: 4, ..Default::default() },
+    )
+    .build();
+    let source = TweetGen::new(TweetGenConfig { vocab: 2_000, seed: 11, ..Default::default() });
+    let handle = Job::new(pipeline, source)
+        .with_config(LaunchConfig {
+            name: "quickstart-live".into(),
+            schedule: RateSchedule::constant(3, 600.0),
+            time_scale: 3.0,
+            ..Default::default()
+        })
+        .launch()
+        .expect("two-stage pipeline launches");
+
+    // reconfigure both stages live; tickets carry the measured latency
+    let tickets = [("tokenize", handle.scale(0, 3)), ("count", handle.scale(1, 2))];
+    for (name, t) in &tickets {
+        match t.wait(Duration::from_secs(30)) {
+            Some(ms) => println!("  {name}: scaled in {ms:.2} ms (paper bound: 40 ms)"),
+            None => println!("  {name}: reconfiguration did not complete"),
+        }
+    }
+    let m = handle.sample();
+    println!(
+        "  live sample @ {:.1}s: Π = {:?}, backlog = {:?}",
+        m.event_s,
+        m.stages.iter().map(|s| s.active.len()).collect::<Vec<_>>(),
+        m.stages.iter().map(|s| s.backlog).collect::<Vec<_>>(),
+    );
+    handle.await_quiesce();
+    let out = handle.shutdown();
+    println!(
+        "  {} counts at the egress, {}/{} reconfig tickets resolved",
+        out.result.egress_count,
+        out.tickets.iter().filter(|t| t.latency_ms().is_some()).count(),
+        out.tickets.len(),
     );
 }

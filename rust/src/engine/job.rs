@@ -81,6 +81,10 @@ pub enum JobError {
         stage: String,
         got: PayloadKind,
     },
+    /// A payload-polymorphic operator (`forward`) was declared as a
+    /// source stage — with no upstream there is nothing to infer its
+    /// payload kind from.
+    PolymorphicSource { stage: String, operator: String },
     /// No paced generator produces this payload kind (the job can still
     /// be built and fed manually — only `run_job` needs a generator).
     NoSource(PayloadKind),
@@ -129,6 +133,11 @@ impl fmt::Display for JobError {
                 f,
                 "source stages disagree on the external payload kind: \
                  saw `{first}`, but `{stage}` consumes `{got}`"
+            ),
+            JobError::PolymorphicSource { stage, operator } => write!(
+                f,
+                "stage `{stage}`: operator `{operator}` adapts to its upstream's payload \
+                 kind, so it cannot be a source stage (give it an input)"
             ),
             JobError::NoSource(kind) => {
                 write!(f, "no paced generator produces payload kind `{kind}`")
@@ -231,7 +240,9 @@ fn positive(key: String, v: i64) -> Result<usize, JobError> {
     }
 }
 
-fn string_list(c: &Config, key: &str) -> Result<Option<Vec<String>>, JobError> {
+/// Read a list-of-strings key (shared with the harness's
+/// `[schedule.<stage>]` parsing).
+pub(crate) fn string_list(c: &Config, key: &str) -> Result<Option<Vec<String>>, JobError> {
     match c.get(key) {
         None => Ok(None),
         Some(ConfigValue::List(xs)) => xs
@@ -292,6 +303,7 @@ impl JobSpec {
             "wa_ms",
             "lb_keys",
             "keys",
+            "pair_bound",
         ];
         for k in c.keys() {
             if let Some(rest) = k.strip_prefix("topology.") {
@@ -382,6 +394,7 @@ impl JobSpec {
                     wa_ms,
                     lb_keys: positive(key("lb_keys"), int_field(c, key("lb_keys"), 64)?)? as u64,
                     n_keys: positive(key("keys"), int_field(c, key("keys"), 32)?)? as u64,
+                    pair_bound: positive(key("pair_bound"), int_field(c, key("pair_bound"), 10)?)?,
                 },
             });
         }
@@ -447,31 +460,55 @@ impl JobSpec {
             }
         }
 
-        // edge payload-type checking against the registry
+        // reorder topologically (sources first) before kind resolution,
+        // so every upstream's kind is known when its consumer is visited
+        let stages: Vec<StageSpec> = order.into_iter().map(|i| stages[i].clone()).collect();
+
+        // edge payload-type checking against the registry, with kind
+        // *resolution*: a fixed entry carries its kinds; a polymorphic
+        // entry (`forward`, input/output = None) adapts to its upstream's
+        // resolved output, so it can sit on any edge of the topology
+        let pos_of: BTreeMap<&str, usize> =
+            stages.iter().enumerate().map(|(i, s)| (s.name.as_str(), i)).collect();
+        let mut res_in: Vec<PayloadKind> = Vec::with_capacity(stages.len());
+        let mut res_out: Vec<PayloadKind> = Vec::with_capacity(stages.len());
         for s in &stages {
             let entry = registry::lookup(&s.operator).expect("validated above");
+            let rin = match entry.input {
+                Some(k) => k,
+                None => {
+                    let Some(first) = s.inputs.first() else {
+                        return Err(JobError::PolymorphicSource {
+                            stage: s.name.clone(),
+                            operator: s.operator.clone(),
+                        });
+                    };
+                    res_out[pos_of[first.as_str()]]
+                }
+            };
             for inp in &s.inputs {
-                let up = &stages[idx_of[inp.as_str()]];
-                let up_entry = registry::lookup(&up.operator).expect("validated above");
-                if up_entry.output != entry.input {
+                let got = res_out[pos_of[inp.as_str()]];
+                if got != rin {
                     return Err(JobError::TypeMismatch {
                         stage: s.name.clone(),
                         input: inp.clone(),
-                        expected: entry.input,
-                        got: up_entry.output,
+                        expected: rin,
+                        got,
                     });
                 }
             }
+            res_in.push(rin);
+            res_out.push(entry.output.unwrap_or(rin));
         }
 
         // external source kind: every source stage must agree (one paced
         // generator feeds all ingress wrappers)
         let mut source_kind: Option<PayloadKind> = None;
-        for s in &stages {
+        for (i, s) in stages.iter().enumerate() {
             if !s.inputs.is_empty() {
                 continue;
             }
-            let kind = registry::lookup(&s.operator).expect("validated above").input;
+            let kind = res_in[i];
             match source_kind {
                 None => source_kind = Some(kind),
                 Some(first) if first != kind => {
@@ -488,7 +525,6 @@ impl JobSpec {
 
         // sinks: stages nothing consumes, in topological order
         let consumed: Vec<&String> = stages.iter().flat_map(|s| s.inputs.iter()).collect();
-        let stages: Vec<StageSpec> = order.into_iter().map(|i| stages[i].clone()).collect();
         let sinks: Vec<String> = stages
             .iter()
             .filter(|s| !consumed.iter().any(|c| *c == &s.name))
@@ -736,6 +772,85 @@ inputs = ["a"]
         )
         .unwrap_err();
         assert!(matches!(err, JobError::DuplicateEdge { .. }), "{err}");
+    }
+
+    #[test]
+    fn forward_resolves_its_kind_from_the_upstream() {
+        // trade-filter → forward → forward → left-leg: both forwards
+        // resolve to the trade kind and the chain type-checks end to end
+        let spec = parse(
+            r#"
+[topology]
+stages = ["src", "fwd1", "fwd2", "leg"]
+edges = ["src -> fwd1", "fwd1 -> fwd2", "fwd2 -> leg"]
+[stage.src]
+operator = "trade-filter"
+[stage.fwd1]
+operator = "forward"
+[stage.fwd2]
+operator = "forward"
+[stage.leg]
+operator = "left-leg"
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.source_kind, PayloadKind::Trade);
+        assert_eq!(spec.sinks, vec!["leg"]);
+        // ...and the resolved topology actually spawns
+        let mut built = spec.build().unwrap();
+        assert_eq!(built.pipeline.depth(), 4);
+        built.pipeline.shutdown();
+        // a forward after a word stream feeds a word consumer (kind
+        // flows through), but a mismatched consumer is still rejected
+        let err = parse(
+            r#"
+[topology]
+stages = ["tok", "fwd", "join"]
+edges = ["tok -> fwd", "fwd -> join"]
+[stage.tok]
+operator = "tweet-tokenize"
+[stage.fwd]
+operator = "forward"
+[stage.join]
+operator = "hedge-join"
+"#,
+        )
+        .unwrap_err();
+        match err {
+            JobError::TypeMismatch { expected, got, .. } => {
+                assert_eq!((expected, got), (PayloadKind::TradePair, PayloadKind::Word));
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn forward_as_a_source_stage_is_a_typed_error() {
+        let err =
+            parse("[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"forward\"").unwrap_err();
+        match err {
+            JobError::PolymorphicSource { stage, operator } => {
+                assert_eq!((stage.as_str(), operator.as_str()), ("a", "forward"));
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn pair_count_stage_parses_its_bound() {
+        let spec = parse(
+            "[topology]\nstages = [\"pc\"]\n[stage.pc]\noperator = \"pair-count\"\n\
+             ws_ms = 2000\npair_bound = 3",
+        )
+        .unwrap();
+        assert_eq!(spec.source_kind, PayloadKind::Tweet);
+        assert_eq!(spec.stages[0].params.pair_bound, 3);
+        // bound must stay ≥ 1
+        let err = parse(
+            "[topology]\nstages = [\"pc\"]\n[stage.pc]\noperator = \"pair-count\"\npair_bound = 0",
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::BadValue { .. }), "{err}");
     }
 
     #[test]

@@ -102,7 +102,10 @@ impl<P: Payload + Default> ControlInjector<P> {
 }
 
 /// Type-erased per-stage handle: control, metrics and lifecycle of one
-/// VSN stage, independent of its operator's payload types.
+/// VSN stage, independent of its operator's payload types. This is the
+/// per-stage half of the live-job control surface — the job runtime
+/// ([`crate::harness::Job`]) owns a `Box<dyn StageHandle>` per stage and
+/// serves `scale`/`sample`/`set_worker_batch` calls through it.
 pub trait StageHandle: Send {
     /// Operator name (metrics, logs).
     fn name(&self) -> &'static str;
@@ -110,6 +113,15 @@ pub trait StageHandle: Send {
     /// control plane + ingress wrappers; later stages: via the reserved
     /// control slot). Returns the new epoch id.
     fn reconfigure(&mut self, instances: Vec<InstanceId>, mapper: Mapper) -> Epoch;
+    /// Scale this stage to `n` active instances — keep existing ids,
+    /// grow from the lowest pool ids, shrink from the highest (the pool
+    /// semantics of §7) — and return the new epoch id.
+    fn scale_to(&mut self, n: usize) -> Epoch {
+        let set =
+            crate::elastic::resize_instance_set(&self.active_instances(), self.max_parallelism(), n);
+        let mapper = Mapper::over(set.clone());
+        self.reconfigure(set, mapper)
+    }
     /// The stage's shared operator metrics.
     fn metrics(&self) -> Arc<OperatorMetrics>;
     /// Currently active instance ids (𝕆 of the installed epoch).

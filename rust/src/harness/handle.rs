@@ -1,0 +1,1075 @@
+//! The live-job runtime: [`Job::launch`] is the ONE way a running
+//! topology is owned.
+//!
+//! STRETCH's headline is *instantaneous* elasticity — sub-40 ms
+//! reconfigurations with no state transfer (§1, §6) — and the elasticity
+//! literature (Röger & Mayer's survey, PAPERS.md) frames that as a
+//! *mechanism* the engine provides to an external *policy* through a
+//! runtime interface. This module is that interface. `launch` moves the
+//! data plane — the paced feed, the egress drain and the per-event-second
+//! metrics sampling — onto a background runtime thread, and hands back a
+//! [`JobHandle`]: the live control surface.
+//!
+//! * [`JobCtl::scale`] / [`JobCtl::scale_to`] issue a reconfiguration and
+//!   return a [`ReconfigTicket`] that resolves to the *measured* reconfig
+//!   latency — the paper's <40 ms claim as a first-class observable;
+//! * [`JobCtl::set_rate`] overrides the offered rate from now on;
+//! * [`JobCtl::set_worker_batch`] retunes a stage's data-plane batching;
+//! * [`JobCtl::sample`] returns a [`JobMetrics`] snapshot (per-stage
+//!   backlog / parallelism / throughput / latency);
+//! * [`JobCtl::await_quiesce`] blocks until the feed has ended and the
+//!   egress has gone quiet;
+//! * [`JobHandle::shutdown`] stops the topology and returns the
+//!   [`JobRunOutcome`] (per-stage samples, reconfig times, tickets).
+//!
+//! Everything that *decides* — rate schedules beyond the launch plan,
+//! scripted reconfigurations, the `elastic` controllers — lives outside,
+//! as [`crate::harness::policy`] clients of this surface.
+//! [`crate::harness::run_pipeline`] and [`crate::harness::run_job`] are
+//! themselves thin clients: launch, drive policies, await quiesce,
+//! shut down.
+
+use super::{HarnessError, PacedSource, PipelineRunResult, RunSample, StageRunStats};
+use crate::engine::pipeline::Pipeline;
+use crate::engine::{EgressDriver, StretchIngress};
+use crate::metrics::MetricsSnapshot;
+use crate::time::EventTime;
+use crate::tuple::{Epoch, InstanceId, Mapper, Payload, Tuple};
+use crate::workloads::rates::RateSchedule;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Lifecycle of a launched job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum JobPhase {
+    /// The paced feed is running (schedule not yet exhausted).
+    Running,
+    /// End-of-stream heartbeats sent; in-flight outputs still draining.
+    Draining,
+    /// Feed done and the egress has gone quiet — results are stable.
+    /// The runtime keeps draining the egress and serving commands until
+    /// [`JobHandle::shutdown`].
+    Quiesced,
+    /// The runtime thread has exited.
+    Stopped,
+}
+
+/// Replay a fixed, ts-sorted corpus through the paced feed: `next` pops
+/// the front, [`PacedSource::exhausted`] flips once the corpus is
+/// consumed, and the runtime then cuts straight to end-of-stream — every
+/// tuple is fed exactly once. This is the exact-equivalence harness mode
+/// (the oracle tests feed a corpus, not a generator).
+pub struct ReplaySource<P: Payload> {
+    tuples: VecDeque<Tuple<P>>,
+}
+
+impl<P: Payload> ReplaySource<P> {
+    pub fn new(tuples: Vec<Tuple<P>>) -> Self {
+        ReplaySource { tuples: tuples.into() }
+    }
+}
+
+impl<P: Payload> PacedSource<P> for ReplaySource<P> {
+    fn next(&mut self) -> Tuple<P> {
+        self.tuples.pop_front().expect("ReplaySource drained past exhaustion")
+    }
+    fn exhausted(&self) -> bool {
+        self.tuples.is_empty()
+    }
+}
+
+#[derive(Default)]
+struct TicketInner {
+    epoch: Option<Epoch>,
+    latency_ms: Option<f64>,
+    /// The runtime exited without resolving this ticket (reconfiguration
+    /// never completed — e.g. issued after end-of-stream).
+    dead: bool,
+}
+
+struct TicketState {
+    inner: Mutex<TicketInner>,
+    cv: Condvar,
+}
+
+/// A pending reconfiguration issued through a [`JobCtl`]. Resolves to the
+/// measured reconfiguration latency (issue → completion barrier, wall ms)
+/// once every instance of the stage has switched epochs — the §8.4
+/// reconfiguration-time metric as a per-call observable.
+#[derive(Clone)]
+pub struct ReconfigTicket {
+    stage: usize,
+    state: Arc<TicketState>,
+}
+
+impl ReconfigTicket {
+    fn new(stage: usize) -> Self {
+        ReconfigTicket {
+            stage,
+            state: Arc::new(TicketState {
+                inner: Mutex::new(TicketInner::default()),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Stage index this reconfiguration targets.
+    pub fn stage(&self) -> usize {
+        self.stage
+    }
+
+    /// Epoch id, once the runtime has issued the control tuple.
+    pub fn epoch(&self) -> Option<Epoch> {
+        self.state.inner.lock().unwrap().epoch
+    }
+
+    /// Measured reconfiguration latency, once complete (non-blocking).
+    pub fn latency_ms(&self) -> Option<f64> {
+        self.state.inner.lock().unwrap().latency_ms
+    }
+
+    /// Block until the reconfiguration completes, the runtime gives up on
+    /// it, or `timeout` elapses. Returns the measured latency in ms.
+    pub fn wait(&self, timeout: Duration) -> Option<f64> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.state.inner.lock().unwrap();
+        loop {
+            if let Some(ms) = g.latency_ms {
+                return Some(ms);
+            }
+            if g.dead {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _) = self.state.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+
+    fn issue(&self, epoch: Epoch) {
+        self.state.inner.lock().unwrap().epoch = Some(epoch);
+    }
+
+    fn resolve(&self, ms: f64) {
+        self.state.inner.lock().unwrap().latency_ms = Some(ms);
+        self.state.cv.notify_all();
+    }
+
+    fn kill(&self) {
+        self.state.inner.lock().unwrap().dead = true;
+        self.state.cv.notify_all();
+    }
+}
+
+impl fmt::Debug for ReconfigTicket {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let g = self.state.inner.lock().unwrap();
+        f.debug_struct("ReconfigTicket")
+            .field("stage", &self.stage)
+            .field("epoch", &g.epoch)
+            .field("latency_ms", &g.latency_ms)
+            .field("dead", &g.dead)
+            .finish()
+    }
+}
+
+/// Live view of one stage (refreshed every runtime tick, ~20 ms).
+#[derive(Clone, Debug)]
+pub struct StageMetrics {
+    /// Operator name.
+    pub name: &'static str,
+    /// Currently active instance ids (𝕆).
+    pub active: Vec<InstanceId>,
+    /// Maximum parallelism n (pool included).
+    pub max: usize,
+    /// Pending backlog on the stage's ESG_in.
+    pub backlog: u64,
+    /// Current effective worker batch.
+    pub worker_batch: usize,
+    /// Latest per-event-second sample ([`RunSample::default`] before the
+    /// first event second completes).
+    pub last: RunSample,
+}
+
+/// A point-in-time observation of the whole job — what policies consume.
+#[derive(Clone, Debug)]
+pub struct JobMetrics {
+    /// Current event-time position in seconds (computed live at
+    /// [`JobCtl::sample`] time).
+    pub event_s: f64,
+    /// Scheduled feed duration in event seconds.
+    pub duration_s: u32,
+    /// Offered rate currently applied to the feed (t/event-s).
+    pub offered_tps: f64,
+    /// Number of ingress wrappers the topology launched with.
+    pub ingress: usize,
+    /// Tuples handed to the feed so far.
+    pub fed: u64,
+    /// Data tuples drained at the egress so far.
+    pub egress_count: u64,
+    /// Tuples dropped because their ingress slot was decommissioned.
+    pub ingress_dropped: u64,
+    /// Lifecycle phase at the last runtime tick.
+    pub phase: JobPhase,
+    /// One entry per stage, upstream first.
+    pub stages: Vec<StageMetrics>,
+}
+
+/// Launch-time plan of a job run — only the *data-plane* knobs: how the
+/// feed is paced and flushed. Policy (controllers, scripted steps) stays
+/// outside, driven through the handle.
+#[derive(Clone)]
+pub struct LaunchConfig {
+    /// Job name (reports, `BENCH_<name>.json`).
+    pub name: String,
+    /// Per-stage display names; when the length does not match the
+    /// topology depth, operator names are used.
+    pub stage_names: Vec<String>,
+    /// Offered-rate plan for the paced feed. [`JobCtl::set_rate`]
+    /// overrides it from the moment it is called.
+    pub schedule: RateSchedule,
+    /// Wall-time compression: 10.0 replays 10 event-seconds per
+    /// wall-second.
+    pub time_scale: f64,
+    /// End-of-stream heartbeat horizon beyond the last event ms (flush
+    /// windows; use ≥ the largest WS in the topology).
+    pub flush_slack_ms: EventTime,
+    /// Wall time to keep draining the egress after end-of-stream before
+    /// declaring the job quiesced (extended while output still arrives).
+    pub drain: Duration,
+    /// Max run length per batched ingress add (`[batch] ingress`).
+    pub ingress_batch: usize,
+    /// Keep every drained egress tuple for [`JobHandle::take_egress`]
+    /// (exact-output tests); off by default — benches only need counts.
+    pub capture_egress: bool,
+}
+
+impl Default for LaunchConfig {
+    fn default() -> Self {
+        LaunchConfig {
+            name: "job".into(),
+            stage_names: Vec::new(),
+            schedule: RateSchedule::constant(10, 1_000.0),
+            time_scale: 1.0,
+            flush_slack_ms: 15_000,
+            drain: Duration::from_millis(500),
+            ingress_batch: 256,
+            capture_egress: false,
+        }
+    }
+}
+
+/// Commands the handle sends to the runtime thread.
+enum Cmd {
+    Scale { stage: usize, target: ScaleTarget, ticket: ReconfigTicket },
+    SetWorkerBatch { stage: usize, n: usize },
+    SetRate(f64),
+}
+
+enum ScaleTarget {
+    /// Resize to this many instances (pool semantics, §7).
+    Count(usize),
+    /// Install exactly this instance set.
+    Set(Vec<InstanceId>),
+}
+
+/// State shared between the handle and the runtime thread.
+struct RtShared {
+    cmds: Mutex<VecDeque<Cmd>>,
+    metrics: Mutex<JobMetrics>,
+    phase: Mutex<JobPhase>,
+    phase_cv: Condvar,
+    stop: AtomicBool,
+    /// Every ticket ever issued through the handle, issue order.
+    tickets: Mutex<Vec<ReconfigTicket>>,
+}
+
+fn set_phase(shared: &RtShared, p: JobPhase) {
+    let mut g = shared.phase.lock().unwrap();
+    if *g < p {
+        *g = p;
+        shared.phase_cv.notify_all();
+    }
+}
+
+/// The payload-type-erased control surface of a live job. Cloneable and
+/// `&self` throughout, so policies, tests and user code can all hold one.
+#[derive(Clone)]
+pub struct JobCtl {
+    shared: Arc<RtShared>,
+    t0: Instant,
+    time_scale: f64,
+    /// Per-stage maximum parallelism (validates scale targets before
+    /// they reach the runtime thread).
+    maxes: Arc<Vec<usize>>,
+}
+
+impl JobCtl {
+    /// Number of stages.
+    pub fn depth(&self) -> usize {
+        self.maxes.len()
+    }
+
+    fn push_scale(&self, stage: usize, target: ScaleTarget) -> ReconfigTicket {
+        assert!(stage < self.depth(), "stage {stage} out of range ({} stages)", self.depth());
+        let ticket = ReconfigTicket::new(stage);
+        self.shared.tickets.lock().unwrap().push(ticket.clone());
+        self.shared
+            .cmds
+            .lock()
+            .unwrap()
+            .push_back(Cmd::Scale { stage, target, ticket: ticket.clone() });
+        ticket
+    }
+
+    /// Scale `stage` to `n` active instances (keep existing ids, grow
+    /// from the lowest pool ids, shrink from the highest; `n` clamps to
+    /// the stage's pool). The ticket resolves to the measured
+    /// reconfiguration latency. A reconfiguration reaching the runtime
+    /// after end-of-stream could never complete (no watermark advances
+    /// past it), so it is rejected and its ticket fails fast
+    /// ([`ReconfigTicket::wait`] returns `None` without timing out).
+    pub fn scale(&self, stage: usize, n: usize) -> ReconfigTicket {
+        self.push_scale(stage, ScaleTarget::Count(n.max(1)))
+    }
+
+    /// Reconfigure `stage` to exactly this instance set. Every id must
+    /// address one of the stage's own instance slots (`< max`) — on a
+    /// shared DAG gate an out-of-range id would address another stage's
+    /// slots, so it is a caller error, rejected here.
+    pub fn scale_to(&self, stage: usize, set: Vec<InstanceId>) -> ReconfigTicket {
+        assert!(!set.is_empty(), "instance set must be non-empty");
+        assert!(stage < self.depth(), "stage {stage} out of range ({} stages)", self.depth());
+        let max = self.maxes[stage];
+        assert!(
+            set.iter().all(|&i| i < max),
+            "instance set {set:?} exceeds stage {stage}'s pool (max parallelism {max})"
+        );
+        self.push_scale(stage, ScaleTarget::Set(set))
+    }
+
+    /// Override the offered feed rate (t/event-s) from now on.
+    pub fn set_rate(&self, tps: f64) {
+        self.shared.cmds.lock().unwrap().push_back(Cmd::SetRate(tps.max(0.0)));
+    }
+
+    /// Retune `stage`'s worker batch (live, no reconfiguration).
+    pub fn set_worker_batch(&self, stage: usize, n: usize) {
+        assert!(stage < self.depth(), "stage {stage} out of range ({} stages)", self.depth());
+        self.shared.cmds.lock().unwrap().push_back(Cmd::SetWorkerBatch { stage, n });
+    }
+
+    /// Snapshot the job's metrics. Per-stage fields are at most one
+    /// runtime tick (~20 ms) old; `event_s` is computed live.
+    pub fn sample(&self) -> JobMetrics {
+        let mut m = self.shared.metrics.lock().unwrap().clone();
+        m.event_s = self.t0.elapsed().as_secs_f64() * self.time_scale;
+        m
+    }
+
+    /// Current lifecycle phase.
+    pub fn phase(&self) -> JobPhase {
+        *self.shared.phase.lock().unwrap()
+    }
+
+    /// Whether the job has quiesced (feed ended, egress quiet).
+    pub fn quiesced(&self) -> bool {
+        self.phase() >= JobPhase::Quiesced
+    }
+
+    /// Block until the job quiesces (or the runtime stops).
+    pub fn await_quiesce(&self) {
+        let mut g = self.shared.phase.lock().unwrap();
+        while *g < JobPhase::Quiesced {
+            g = self.shared.phase_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Every reconfiguration ticket issued through this handle so far.
+    pub fn tickets(&self) -> Vec<ReconfigTicket> {
+        self.shared.tickets.lock().unwrap().clone()
+    }
+
+    /// A control surface with no runtime behind it — commands queue
+    /// forever. Lets policy unit tests observe what a policy *issues*.
+    #[cfg(test)]
+    pub(crate) fn detached(n_stages: usize) -> JobCtl {
+        JobCtl {
+            shared: Arc::new(RtShared {
+                cmds: Mutex::new(VecDeque::new()),
+                metrics: Mutex::new(JobMetrics {
+                    event_s: 0.0,
+                    duration_s: 0,
+                    offered_tps: 0.0,
+                    ingress: 1,
+                    fed: 0,
+                    egress_count: 0,
+                    ingress_dropped: 0,
+                    phase: JobPhase::Running,
+                    stages: Vec::new(),
+                }),
+                phase: Mutex::new(JobPhase::Running),
+                phase_cv: Condvar::new(),
+                stop: AtomicBool::new(false),
+                tickets: Mutex::new(Vec::new()),
+            }),
+            t0: Instant::now(),
+            time_scale: 1.0,
+            maxes: Arc::new(vec![8; n_stages]),
+        }
+    }
+}
+
+/// Outcome of a finished job run ([`JobHandle::shutdown`]).
+pub struct JobRunOutcome {
+    /// The job's name ([`LaunchConfig::name`] / the config's `name` key).
+    pub name: String,
+    /// Display stage names aligned with `result.stages` indices.
+    pub stage_names: Vec<String>,
+    pub result: PipelineRunResult,
+    /// Every reconfiguration issued through the handle (scripted-,
+    /// policy- or user-driven), with its measured latency once resolved —
+    /// the source for `BENCH_<job>.json`'s per-reconfig latencies.
+    pub tickets: Vec<ReconfigTicket>,
+}
+
+/// A built topology plus its paced source and launch plan — call
+/// [`Job::launch`] to start it and receive the [`JobHandle`].
+pub struct Job<In: Payload + Default, Out: Payload + Default> {
+    pub pipeline: Pipeline<In, Out>,
+    pub source: Box<dyn PacedSource<In>>,
+    pub cfg: LaunchConfig,
+}
+
+impl<In: Payload + Default, Out: Payload + Default> Job<In, Out> {
+    pub fn new(pipeline: Pipeline<In, Out>, source: impl PacedSource<In> + 'static) -> Self {
+        Job { pipeline, source: Box::new(source), cfg: LaunchConfig::default() }
+    }
+
+    pub fn with_config(mut self, cfg: LaunchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Start the job: validate the topology shape, move the data plane
+    /// (feed, drain, sampling) onto the runtime thread, and return the
+    /// live handle. Degenerate topologies are typed errors, before any
+    /// runtime thread exists.
+    pub fn launch(self) -> Result<JobHandle<Out>, HarnessError> {
+        let Job { pipeline, source, mut cfg } = self;
+        if pipeline.ingress.is_empty() {
+            return Err(HarnessError::NoIngress);
+        }
+        if pipeline.egress.is_empty() {
+            return Err(HarnessError::NoEgress);
+        }
+        // a zero/negative compression factor would freeze event time and
+        // make the job unquiesceable — clamp it for the runtime AND the
+        // handle's live event_s computation alike
+        cfg.time_scale = cfg.time_scale.max(1e-9);
+        let n_stages = pipeline.depth();
+        let name = cfg.name.clone();
+        let stage_names: Vec<String> = if cfg.stage_names.len() == n_stages {
+            cfg.stage_names.clone()
+        } else {
+            pipeline.stages.iter().map(|s| s.name().to_string()).collect()
+        };
+        let init_stages: Vec<StageMetrics> = pipeline
+            .stages
+            .iter()
+            .map(|s| StageMetrics {
+                name: s.name(),
+                active: s.active_instances(),
+                max: s.max_parallelism(),
+                backlog: 0,
+                worker_batch: s.worker_batch(),
+                last: RunSample::default(),
+            })
+            .collect();
+        let shared = Arc::new(RtShared {
+            cmds: Mutex::new(VecDeque::new()),
+            metrics: Mutex::new(JobMetrics {
+                event_s: 0.0,
+                duration_s: cfg.schedule.duration_s(),
+                offered_tps: cfg.schedule.rate_at(0),
+                ingress: pipeline.ingress.len(),
+                fed: 0,
+                egress_count: 0,
+                ingress_dropped: 0,
+                phase: JobPhase::Running,
+                stages: init_stages,
+            }),
+            phase: Mutex::new(JobPhase::Running),
+            phase_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            tickets: Mutex::new(Vec::new()),
+        });
+        let captured: Arc<Mutex<Vec<Tuple<Out>>>> = Arc::new(Mutex::new(Vec::new()));
+        let capture = cfg.capture_egress.then(|| captured.clone());
+        let maxes: Arc<Vec<usize>> =
+            Arc::new(pipeline.stages.iter().map(|s| s.max_parallelism()).collect());
+        let t0 = Instant::now();
+        let ctl = JobCtl { shared: shared.clone(), t0, time_scale: cfg.time_scale, maxes };
+        let thread = std::thread::Builder::new()
+            .name(format!("job-{name}"))
+            .spawn(move || runtime_loop(pipeline, source, cfg, shared, capture, t0))
+            .expect("spawn job runtime thread");
+        Ok(JobHandle { ctl, name, stage_names, captured, thread: Some(thread) })
+    }
+}
+
+/// Owner of a launched job: the [`JobCtl`] control surface (via `Deref`)
+/// plus the typed egress capture and the final [`JobRunOutcome`].
+pub struct JobHandle<Out: Payload + Default> {
+    ctl: JobCtl,
+    name: String,
+    stage_names: Vec<String>,
+    captured: Arc<Mutex<Vec<Tuple<Out>>>>,
+    thread: Option<std::thread::JoinHandle<RtFinal>>,
+}
+
+impl<Out: Payload + Default> std::ops::Deref for JobHandle<Out> {
+    type Target = JobCtl;
+    fn deref(&self) -> &JobCtl {
+        &self.ctl
+    }
+}
+
+impl<Out: Payload + Default> JobHandle<Out> {
+    /// A detachable clone of the control surface (policies, other
+    /// threads).
+    pub fn ctl(&self) -> JobCtl {
+        self.ctl.clone()
+    }
+
+    /// Display stage names, aligned with stage indices.
+    pub fn stage_names(&self) -> &[String] {
+        &self.stage_names
+    }
+
+    /// Drain the captured egress tuples accumulated so far (only
+    /// populated when launched with [`LaunchConfig::capture_egress`]).
+    pub fn take_egress(&self) -> Vec<Tuple<Out>> {
+        std::mem::take(&mut *self.captured.lock().unwrap())
+    }
+
+    /// Stop the runtime thread, shut every stage down (upstream first)
+    /// and return the run's outcome. Shutting down before
+    /// [`JobCtl::await_quiesce`] abandons in-flight tuples.
+    pub fn shutdown(mut self) -> JobRunOutcome {
+        self.ctl.shared.stop.store(true, Ordering::Release);
+        let fin = self
+            .thread
+            .take()
+            .expect("shutdown consumes the handle")
+            .join()
+            .unwrap_or_else(|_| panic!("job runtime thread panicked"));
+        JobRunOutcome {
+            name: std::mem::take(&mut self.name),
+            stage_names: std::mem::take(&mut self.stage_names),
+            result: PipelineRunResult {
+                stages: fin.stages,
+                egress_count: fin.egress_count,
+                ingress_dropped: fin.ingress_dropped,
+                latency_p50_us: fin.latency_p50_us,
+                latency_mean_us: fin.latency_mean_us,
+            },
+            tickets: self.ctl.tickets(),
+        }
+    }
+}
+
+impl<Out: Payload + Default> Drop for JobHandle<Out> {
+    fn drop(&mut self) {
+        if let Some(t) = self.thread.take() {
+            self.ctl.shared.stop.store(true, Ordering::Release);
+            let _ = t.join();
+        }
+    }
+}
+
+/// Final statistics the runtime thread returns at shutdown.
+struct RtFinal {
+    stages: Vec<StageRunStats>,
+    egress_count: u64,
+    ingress_dropped: u64,
+    latency_p50_us: u64,
+    latency_mean_us: f64,
+}
+
+/// Per-stage sampling bookkeeping local to the runtime thread.
+struct StageTrack {
+    last_snap: MetricsSnapshot,
+    prev_loads: Vec<u64>,
+    samples: Vec<RunSample>,
+}
+
+/// Resolve every pending ticket whose reconfiguration has completed
+/// (matched by epoch against the stage's recorded completion times) —
+/// called once per runtime tick and once more at finalize.
+fn resolve_completed(
+    pending: &mut Vec<(usize, Epoch, ReconfigTicket)>,
+    stages: &[Box<dyn crate::engine::pipeline::StageHandle>],
+) {
+    pending.retain(|(stage, epoch, ticket)| {
+        match stages[*stage].completion_times().iter().find(|(e, _)| e == epoch) {
+            Some(&(_, ms)) => {
+                ticket.resolve(ms);
+                false
+            }
+            None => true,
+        }
+    });
+}
+
+/// Ensures waiters wake even if the runtime thread panics.
+struct StopGuard(Arc<RtShared>);
+
+impl Drop for StopGuard {
+    fn drop(&mut self) {
+        set_phase(&self.0, JobPhase::Stopped);
+    }
+}
+
+/// The background drive loop: pace the source round-robin across every
+/// ingress wrapper, drain every egress reader, sample per-stage metrics
+/// once per event second, and serve the handle's commands — one wall tick
+/// (~20 ms) per pass. This is the old `run_pipeline` body with every
+/// *decision* (controllers, scripted reconfigs, adaptive batching)
+/// removed: those arrive as [`Cmd`]s through the handle.
+fn runtime_loop<In, Out>(
+    mut pipeline: Pipeline<In, Out>,
+    mut source: Box<dyn PacedSource<In>>,
+    cfg: LaunchConfig,
+    shared: Arc<RtShared>,
+    capture: Option<Arc<Mutex<Vec<Tuple<Out>>>>>,
+    t0: Instant,
+) -> RtFinal
+where
+    In: Payload + Default,
+    Out: Payload + Default,
+{
+    let _guard = StopGuard(shared.clone());
+    let clock = pipeline.clock.clone();
+    let mut ings: Vec<StretchIngress<In>> = std::mem::take(&mut pipeline.ingress);
+    let n_ing = ings.len();
+    let mut egress: Vec<EgressDriver<Tuple<Out>>> = std::mem::take(&mut pipeline.egress)
+        .into_iter()
+        .map(|r| EgressDriver::new(r, clock.clone()))
+        .collect();
+    // all drivers record into ONE histogram pair: end-to-end latency is
+    // a property of the whole topology, whichever sink a tuple exits
+    let (lat, lat_total) = (egress[0].latency_us.clone(), egress[0].latency_total_us.clone());
+    for d in egress.iter_mut().skip(1) {
+        d.latency_us = lat.clone();
+        d.latency_total_us = lat_total.clone();
+    }
+
+    let n_stages = pipeline.depth();
+    let mut tracks: Vec<StageTrack> = (0..n_stages)
+        .map(|k| StageTrack {
+            last_snap: MetricsSnapshot::default(),
+            prev_loads: vec![0; pipeline.stages[k].max_parallelism()],
+            samples: Vec::new(),
+        })
+        .collect();
+
+    let duration_s = cfg.schedule.duration_s();
+    let mut pending_event_tuples = 0.0f64;
+    let mut event_ms_total: f64 = 0.0;
+    // per-tick feed runs, one per ingress wrapper (round-robin split so
+    // EVERY wrapper's gate clock advances every tick), each handed over
+    // via one batched add (§Perf). A wrapper whose slot is decommissioned
+    // under us (`Err(Inactive)`) leaves the rotation; its residual is
+    // counted in `ingress_dropped`, never silently discarded.
+    let mut feed_bufs: Vec<Vec<Tuple<In>>> = (0..n_ing).map(|_| Vec::new()).collect();
+    let mut alive: Vec<bool> = vec![true; n_ing];
+    let mut n_alive = n_ing;
+    let mut ingress_dropped = 0u64;
+    let mut fed = 0u64;
+    let mut max_fed_ts: EventTime = 0;
+    let mut rr = 0usize;
+    let mut rate_override: Option<f64> = None;
+    // event second the current rate override took effect
+    let mut override_from_s: u32 = 0;
+    let mut pending_tickets: Vec<(usize, Epoch, ReconfigTicket)> = Vec::new();
+
+    // wall tick: 20 ms of *wall* time per loop iteration
+    let wall_tick = Duration::from_millis(20);
+    let mut next_tick = t0;
+    let mut next_sample_s: u32 = 1;
+    let mut eos = false;
+    let mut quiesce_at: Option<Instant> = None;
+    // extend the drain while output still arrives, in `quiet` increments
+    let quiet = cfg.drain.min(Duration::from_millis(200));
+
+    loop {
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let event_s = wall_s * cfg.time_scale;
+        let cur_rate = rate_override.unwrap_or_else(|| cfg.schedule.rate_at(event_s as u32));
+
+        if !eos && event_s < duration_s as f64 && !source.exhausted() {
+            source.set_rate(cur_rate);
+            // feed the tuples that belong to this tick
+            let tick_event_s = wall_tick.as_secs_f64() * cfg.time_scale;
+            pending_event_tuples += cur_rate * tick_event_s;
+            let n = pending_event_tuples.floor() as usize;
+            pending_event_tuples -= n as f64;
+            event_ms_total += tick_event_s * 1e3;
+            let ingress_batch = cfg.ingress_batch.max(1);
+            for _ in 0..n {
+                if source.exhausted() {
+                    break;
+                }
+                let mut t = source.next();
+                t.ingest_us = clock.now_us();
+                max_fed_ts = max_fed_ts.max(t.ts);
+                fed += 1;
+                if n_alive == 0 {
+                    ingress_dropped += 1; // every wrapper decommissioned
+                    continue;
+                }
+                while !alive[rr] {
+                    rr = (rr + 1) % n_ing;
+                }
+                feed_bufs[rr].push(t);
+                if feed_bufs[rr].len() >= ingress_batch
+                    && ings[rr].add_batch(&mut feed_bufs[rr]).is_err()
+                {
+                    // decommissioned mid-run: retire the wrapper from the
+                    // rotation and account for the lost residual
+                    ingress_dropped += feed_bufs[rr].len() as u64;
+                    feed_bufs[rr].clear();
+                    alive[rr] = false;
+                    n_alive -= 1;
+                }
+                rr = (rr + 1) % n_ing;
+            }
+            for (i, buf) in feed_bufs.iter_mut().enumerate() {
+                if alive[i] && !buf.is_empty() && ings[i].add_batch(buf).is_err() {
+                    ingress_dropped += buf.len() as u64;
+                    buf.clear();
+                    alive[i] = false;
+                    n_alive -= 1;
+                }
+            }
+        }
+
+        // drain every egress reader (an undrained sink gate would fill to
+        // capacity and stall its stage)
+        let mut polled = 0usize;
+        for d in egress.iter_mut() {
+            polled += match &capture {
+                Some(cap) => {
+                    let mut grabbed: Vec<Tuple<Out>> = Vec::new();
+                    let n = d.poll_tuples(&mut |t| grabbed.push(t.clone()));
+                    if !grabbed.is_empty() {
+                        cap.lock().unwrap().append(&mut grabbed);
+                    }
+                    n
+                }
+                None => d.poll(),
+            };
+        }
+
+        // per-event-second sampling, every stage
+        while (next_sample_s as f64) <= event_s && next_sample_s <= duration_s {
+            for (k, tr) in tracks.iter_mut().enumerate() {
+                let stage = &pipeline.stages[k];
+                let metrics = stage.metrics();
+                let snap = metrics.snapshot();
+                let dt = 1.0 / cfg.time_scale; // wall seconds per event second
+                let rates = snap.rates_since(&tr.last_snap, dt);
+                let active = stage.active_instances();
+                // per-interval load CV (Fig. 9 right): deltas, active set only
+                let cv = {
+                    let deltas: Vec<f64> = active
+                        .iter()
+                        .map(|&i| (metrics.instance_load(i) - tr.prev_loads[i]) as f64)
+                        .collect();
+                    for (i, p) in tr.prev_loads.iter_mut().enumerate() {
+                        *p = metrics.instance_load(i);
+                    }
+                    let mean = deltas.iter().sum::<f64>() / deltas.len().max(1) as f64;
+                    if deltas.len() < 2 || mean <= 0.0 {
+                        0.0
+                    } else {
+                        let var = deltas.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>()
+                            / deltas.len() as f64;
+                        100.0 * var.sqrt() / mean
+                    }
+                };
+                // Every active instance reads (and counts) every gate
+                // tuple, so the summed rate is m× the true arrival rate;
+                // dividing by the active count recovers arrivals.
+                let arrival_tps = rates.in_tps / cfg.time_scale / active.len().max(1) as f64;
+                tr.samples.push(RunSample {
+                    t_s: next_sample_s,
+                    // With ONE ingress wrapper, stage 0 is offered the
+                    // whole schedule. With several wrappers the runtime
+                    // cannot map wrappers to source stages (a DAG may
+                    // have several), so every stage reports its measured
+                    // arrival rate instead of a guessed split.
+                    offered_tps: if k == 0 && n_ing == 1 {
+                        // the override only describes seconds at/after it
+                        // landed — a catch-up sample of an earlier second
+                        // reports what the schedule actually offered then
+                        match rate_override {
+                            Some(r) if next_sample_s - 1 >= override_from_s => r,
+                            _ => cfg.schedule.rate_at(next_sample_s - 1),
+                        }
+                    } else {
+                        arrival_tps
+                    },
+                    // rates are per wall second; report per *event* second
+                    in_tps: arrival_tps,
+                    out_tps: rates.out_tps / cfg.time_scale,
+                    cmp_per_s: rates.cmp_per_s / cfg.time_scale,
+                    latency_p50_us: lat.p50(),
+                    latency_mean_us: lat.mean(),
+                    threads: active.len(),
+                    backlog: stage.in_backlog(),
+                    load_cv_pct: cv,
+                    worker_batch: stage.worker_batch(),
+                });
+                tr.last_snap = snap;
+            }
+            // end-to-end latency is a property of the whole topology; the
+            // per-second histogram resets once all stages sampled it
+            lat.reset();
+            {
+                let mut m = shared.metrics.lock().unwrap();
+                for (k, tr) in tracks.iter().enumerate() {
+                    if let Some(&s) = tr.samples.last() {
+                        m.stages[k].last = s;
+                    }
+                }
+            }
+            next_sample_s += 1;
+        }
+
+        // control surface: apply queued commands...
+        let cmds: Vec<Cmd> = {
+            let mut q = shared.cmds.lock().unwrap();
+            q.drain(..).collect()
+        };
+        for c in cmds {
+            match c {
+                Cmd::Scale { stage, target, ticket } => {
+                    if eos {
+                        // after the end-of-stream heartbeats no watermark
+                        // will ever pass a new control tuple, so the
+                        // reconfiguration could never complete — fail the
+                        // ticket immediately instead of letting wait()
+                        // stall to its timeout
+                        ticket.kill();
+                        continue;
+                    }
+                    let epoch = match target {
+                        ScaleTarget::Count(n) => pipeline.stages[stage].scale_to(n),
+                        ScaleTarget::Set(set) => {
+                            let mapper = Mapper::over(set.clone());
+                            pipeline.stages[stage].reconfigure(set, mapper)
+                        }
+                    };
+                    ticket.issue(epoch);
+                    pending_tickets.push((stage, epoch, ticket));
+                }
+                Cmd::SetWorkerBatch { stage, n } => pipeline.stages[stage].set_worker_batch(n),
+                Cmd::SetRate(tps) => {
+                    rate_override = Some(tps);
+                    // remember WHEN it took effect: catch-up samples of
+                    // earlier seconds must not retroactively report it
+                    override_from_s = event_s as u32;
+                }
+            }
+        }
+        // ...then resolve tickets whose reconfiguration completed
+        resolve_completed(&mut pending_tickets, &pipeline.stages);
+
+        // end of stream: the schedule ran out, or a finite source ran dry
+        if !eos && (event_s >= duration_s as f64 + 0.1 || source.exhausted()) {
+            // flush residual feed runs before the final heartbeat
+            for (i, buf) in feed_bufs.iter_mut().enumerate() {
+                if alive[i] && !buf.is_empty() && ings[i].add_batch(buf).is_err() {
+                    ingress_dropped += buf.len() as u64;
+                    buf.clear();
+                    alive[i] = false;
+                    n_alive -= 1;
+                }
+            }
+            // end-of-stream heartbeat on EVERY ingress wrapper (workers
+            // forward it stage to stage; a silent wrapper would hold back
+            // every downstream watermark)
+            let horizon = (event_ms_total as EventTime).max(max_fed_ts) + cfg.flush_slack_ms;
+            for (i, ing) in ings.iter_mut().enumerate() {
+                if alive[i] {
+                    let _ = ing.heartbeat(horizon); // heartbeats carry no data
+                }
+            }
+            eos = true;
+            quiesce_at = Some(Instant::now() + cfg.drain);
+            set_phase(&shared, JobPhase::Draining);
+        }
+        if eos && polled > 0 {
+            if let Some(at) = quiesce_at.as_mut() {
+                // output still arriving: hold the quiesce back a little
+                let earliest = Instant::now() + quiet;
+                if earliest > *at {
+                    *at = earliest;
+                }
+            }
+        }
+        if let Some(at) = quiesce_at {
+            if Instant::now() >= at {
+                set_phase(&shared, JobPhase::Quiesced);
+                quiesce_at = None;
+            }
+        }
+
+        // publish the live view
+        {
+            let phase = *shared.phase.lock().unwrap();
+            let mut m = shared.metrics.lock().unwrap();
+            m.offered_tps = cur_rate;
+            m.fed = fed;
+            m.ingress_dropped = ingress_dropped;
+            m.egress_count = egress.iter().map(|d| d.count).sum();
+            m.phase = phase;
+            for (k, s) in pipeline.stages.iter().enumerate() {
+                let sm = &mut m.stages[k];
+                sm.active = s.active_instances();
+                sm.backlog = s.in_backlog();
+                sm.worker_batch = s.worker_batch();
+            }
+        }
+
+        next_tick += wall_tick;
+        let now = Instant::now();
+        if next_tick > now {
+            std::thread::sleep(next_tick - now);
+        } else {
+            next_tick = now; // fell behind: don't try to catch up the wall
+        }
+    }
+
+    // finalize: one last ticket sweep, then give up on the rest — a
+    // reconfiguration that has not completed by shutdown never will
+    resolve_completed(&mut pending_tickets, &pipeline.stages);
+    for (_, _, ticket) in pending_tickets {
+        ticket.kill();
+    }
+    for c in shared.cmds.lock().unwrap().drain(..) {
+        if let Cmd::Scale { ticket, .. } = c {
+            ticket.kill();
+        }
+    }
+    let latency_p50_us = lat_total.p50();
+    let latency_mean_us = lat_total.mean();
+    let egress_count = egress.iter().map(|d| d.count).sum();
+    let stages = tracks
+        .into_iter()
+        .enumerate()
+        .map(|(k, tr)| StageRunStats {
+            name: pipeline.stages[k].name(),
+            samples: tr.samples,
+            reconfigs: pipeline.stages[k].completion_times(),
+        })
+        .collect();
+    pipeline.shutdown();
+    RtFinal { stages, egress_count, ingress_dropped, latency_p50_us, latency_mean_us }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::pipeline::PipelineBuilder;
+    use crate::engine::VsnOptions;
+    use crate::workloads::scalejoin_bench::{q3_operator, SjGen};
+
+    #[test]
+    fn replay_source_drains_in_order_and_reports_exhaustion() {
+        let tuples: Vec<Tuple<u32>> = (0..5).map(|i| Tuple::data(i, i as u32)).collect();
+        let mut s = ReplaySource::new(tuples);
+        assert!(!PacedSource::exhausted(&s));
+        for i in 0..5i64 {
+            assert_eq!(PacedSource::next(&mut s).ts, i);
+        }
+        assert!(PacedSource::exhausted(&s));
+    }
+
+    #[test]
+    fn ticket_wait_times_out_and_resolves() {
+        let t = ReconfigTicket::new(0);
+        assert_eq!(t.wait(Duration::from_millis(10)), None);
+        t.issue(7);
+        t.resolve(1.5);
+        assert_eq!(t.epoch(), Some(7));
+        assert_eq!(t.wait(Duration::from_millis(10)), Some(1.5));
+        let dead = ReconfigTicket::new(1);
+        dead.kill();
+        assert_eq!(dead.wait(Duration::from_secs(5)), None);
+    }
+
+    #[test]
+    fn launch_observe_scale_quiesce_shutdown_round_trip() {
+        let pipeline = PipelineBuilder::new(
+            q3_operator(1_000, 8),
+            VsnOptions { initial: 1, max: 3, ..Default::default() },
+        )
+        .build();
+        let handle = Job::new(pipeline, SjGen::new(3, 1.0))
+            .with_config(LaunchConfig {
+                name: "round-trip".into(),
+                schedule: RateSchedule::constant(3, 400.0),
+                time_scale: 3.0,
+                ..Default::default()
+            })
+            .launch()
+            .unwrap();
+        // live observation
+        let m = handle.sample();
+        assert_eq!(m.stages.len(), 1);
+        assert_eq!(m.ingress, 1);
+        assert_eq!(m.duration_s, 3);
+        // live reconfiguration with a measured latency
+        let ticket = handle.scale(0, 3);
+        let ms = ticket
+            .wait(Duration::from_secs(30))
+            .expect("scale must complete while data flows");
+        assert!(ms >= 0.0);
+        assert_eq!(ticket.stage(), 0);
+        assert!(ticket.epoch().is_some());
+        handle.await_quiesce();
+        assert!(handle.quiesced());
+        let out = handle.shutdown();
+        assert_eq!(out.name, "round-trip");
+        assert_eq!(out.result.stages.len(), 1);
+        assert_eq!(out.result.stages[0].samples.len(), 3);
+        assert_eq!(out.result.stages[0].samples.last().unwrap().threads, 3);
+        assert_eq!(out.tickets.len(), 1);
+        assert!(out.tickets[0].latency_ms().is_some());
+    }
+
+    #[test]
+    fn launch_rejects_degenerate_topologies_before_spawning() {
+        let pipeline = PipelineBuilder::new(
+            q3_operator(1_000, 8),
+            VsnOptions { initial: 1, max: 2, egress_readers: 0, ..Default::default() },
+        )
+        .build();
+        match Job::new(pipeline, SjGen::new(1, 1.0)).launch() {
+            Err(HarnessError::NoEgress) => {}
+            other => panic!("expected NoEgress, got {:?}", other.map(|_| ()).err()),
+        }
+    }
+}

@@ -1,42 +1,63 @@
-//! Experiment harness: drive a live VSN *topology* (linear pipeline or
-//! DAG) under a rate schedule with per-stage controllers in the loop,
-//! sampling the §8 metrics once per event second **per stage**.
+//! Experiment harness: launch, observe and reconfigure live VSN
+//! *topologies* — and the batch entry points built on top of that.
 //!
-//! [`run_pipeline`] is the generic loop: it paces a [`PacedSource`]
-//! round-robin across every ingress wrapper (N ingress sources), drains
-//! every egress reader (M sinks / readers — leaving one undrained would
-//! pin its gate's backlog at capacity and stall the upstream stage), and
-//! per tick gives every stage its scripted reconfigurations and
-//! controller decisions independently; an optional topology-aware
-//! [`DagController`] co-schedules all stages against a global core
-//! budget. Degenerate topologies (no ingress, no egress) are typed
-//! [`HarnessError`]s, not panics. [`run_elastic_join`] — the Q3-Q6 entry
-//! point — is a thin compatibility wrapper that builds a single-stage
-//! ScaleJoin pipeline and reshapes the result.
+//! The core is the live runtime API ([`handle`]): [`Job::launch`] is the
+//! ONE way a running topology is owned. It moves the data plane — the
+//! paced feed across every ingress wrapper, the egress drain, the
+//! per-event-second §8 metrics sampling — onto a background runtime
+//! thread and hands back a [`JobHandle`], the control surface:
+//! `scale`/`scale_to` (each returns a [`ReconfigTicket`] resolving to the
+//! measured reconfiguration latency — the paper's <40 ms claim as an
+//! observable), `set_rate`, `set_worker_batch`, `sample()` →
+//! [`JobMetrics`], `await_quiesce`, and `shutdown()` →
+//! [`JobRunOutcome`].
+//!
+//! Everything that *decides* is a policy outside the handle ([`policy`]):
+//! the `elastic` controllers (reactive / proactive / the budgeted
+//! [`DagController`]), scripted `[schedule.<stage>]` steps, and adaptive
+//! batch sizing all consume [`JobMetrics`] and call `scale` — exactly the
+//! mechanism/policy split of Röger & Mayer's elasticity survey, and the
+//! same surface user-written policies get.
+//!
+//! [`run_pipeline`] and [`run_job`] are thin clients of the handle:
+//! launch, [`drive`] the configured policies, await quiesce, shut down.
+//! [`run_elastic_join`] — the Q3-Q6 entry point — wraps `run_pipeline`
+//! with a single-stage ScaleJoin pipeline. Degenerate topologies (no
+//! ingress, no egress) are typed [`HarnessError`]s, not panics.
 //!
 //! Wall-clock pacing is compressible (`time_scale`) so the paper's
 //! 20-minute runs replay in seconds; event time always advances at the
 //! schedule's nominal pace.
 
+pub mod handle;
+pub mod policy;
+
+pub use handle::{
+    Job, JobCtl, JobHandle, JobMetrics, JobPhase, JobRunOutcome, LaunchConfig, ReconfigTicket,
+    ReplaySource, StageMetrics,
+};
+pub use policy::{
+    drive, AdaptiveBatchPolicy, ControllerPolicy, DagControllerPolicy, JobPolicy, RateStepPolicy,
+    ScriptedScalePolicy,
+};
+
 use crate::config::{BatchTuning, Config};
 use crate::elastic::{
-    Controller, DagController, Decision, JoinCostModel, Observation, ProactiveController,
-    ReactiveController, Thresholds,
+    Controller, DagController, JoinCostModel, ProactiveController, ReactiveController, Thresholds,
 };
-use crate::engine::job::{JobError, JobSpec};
+use crate::engine::job::{string_list, JobError, JobSpec};
 use crate::engine::pipeline::{Pipeline, PipelineBuilder};
-use crate::engine::{EgressDriver, StretchIngress, VsnOptions};
-use crate::metrics::MetricsSnapshot;
+use crate::engine::VsnOptions;
 use crate::sim::calibrate;
 use crate::time::EventTime;
-use crate::tuple::{Mapper, Payload, Tuple};
+use crate::tuple::{Payload, Tuple};
 use crate::workloads::nyse::{Trade, TradeStream};
-use crate::workloads::rates::RateSchedule;
+use crate::workloads::rates::{parse_steps, RateSchedule};
 use crate::workloads::registry::{JobPayload, JobSource};
 use crate::workloads::scalejoin_bench::{q3_operator, SjGen, SjPayload};
 use crate::workloads::tweets::{Tweet, TweetGen};
 use std::fmt;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// A generator the harness can pace against a [`RateSchedule`]: emits
 /// ts-sorted tuples whose event time advances at ~`1000 / rate` ms each.
@@ -45,6 +66,13 @@ pub trait PacedSource<P>: Send {
     fn set_rate(&mut self, _tps: f64) {}
     /// Next tuple (event time must not regress).
     fn next(&mut self) -> Tuple<P>;
+    /// A finite source reports `true` once drained; the job runtime then
+    /// cuts straight to end-of-stream instead of waiting out the
+    /// schedule (see [`ReplaySource`]). Infinite generators keep the
+    /// default `false`.
+    fn exhausted(&self) -> bool {
+        false
+    }
 }
 
 impl PacedSource<SjPayload> for SjGen {
@@ -263,6 +291,10 @@ pub enum HarnessError {
     /// More per-stage configs than stages — the extra scripted
     /// reconfigurations/controllers would be silently dropped.
     ExtraStageConfigs { given: usize, stages: usize },
+    /// A scripted reconfiguration names an empty instance set — a stage
+    /// cannot run with zero instances, and the panic would otherwise
+    /// fire mid-run instead of before launch.
+    EmptyReconfigSet { stage: usize },
 }
 
 impl fmt::Display for HarnessError {
@@ -274,6 +306,11 @@ impl fmt::Display for HarnessError {
                 f,
                 "{given} stage configs for a {stages}-stage pipeline — \
                  scripted reconfigs would be dropped"
+            ),
+            HarnessError::EmptyReconfigSet { stage } => write!(
+                f,
+                "stage {stage} has a scripted reconfiguration with an empty \
+                 instance set — a stage cannot run with zero instances"
             ),
         }
     }
@@ -305,61 +342,24 @@ pub struct PipelineRunResult {
     pub latency_mean_us: f64,
 }
 
-/// Book-keeping the run loop carries per stage.
-struct StageLoopState {
-    cfg: StageRunConfig,
-    last_snap: MetricsSnapshot,
-    prev_loads: Vec<u64>,
-    next_manual: usize,
-    next_controller_s: u32,
-    /// Arrival rate (t/event-s, de-duplicated across instances) of the
-    /// latest sample — the controller's offered-load estimate for
-    /// non-source stages.
-    last_arrival_tps: f64,
-    samples: Vec<RunSample>,
-}
-
-/// Drive a live, threaded VSN topology: pace `source` round-robin
-/// across every ingress wrapper, drain every egress reader, tick every
-/// stage's manual/controller reconfigurations (and the optional global
-/// [`DagController`]) independently, and sample per-stage metrics once
-/// per event second.
-///
-/// Every ingress wrapper is fed every tick (an idle wrapper's gate clock
-/// would hold back readiness) and every egress reader is drained (an
-/// undrained reader would pin its gate's backlog at capacity and stall
-/// the sink stage) — that is what makes N-ingress/M-egress DAG shapes
-/// safe where the old single-path loop had to panic.
-pub fn run_pipeline<In, Out>(
-    mut pipeline: Pipeline<In, Out>,
+/// Drive a live, threaded VSN topology to completion — a thin client of
+/// the live runtime API: [`Job::launch`] owns the data plane (paced feed
+/// across every ingress wrapper, egress drain, per-event-second
+/// sampling), while this function merely translates the
+/// [`PipelineRunConfig`] into [`policy`] objects — scripted
+/// reconfigurations, per-stage controllers, adaptive batch sizing, the
+/// optional global [`DagController`] — and [`drive`]s them through the
+/// [`JobHandle`] until the job quiesces.
+pub fn run_pipeline<In, Out, S>(
+    pipeline: Pipeline<In, Out>,
     mut cfg: PipelineRunConfig,
-    source: &mut dyn PacedSource<In>,
+    source: S,
 ) -> Result<PipelineRunResult, HarnessError>
 where
     In: Payload + Default,
     Out: Payload + Default,
+    S: PacedSource<In> + 'static,
 {
-    let clock = pipeline.clock.clone();
-    let mut ings: Vec<StretchIngress<In>> = std::mem::take(&mut pipeline.ingress);
-    let n_ing = ings.len();
-    if n_ing == 0 {
-        return Err(HarnessError::NoIngress);
-    }
-    if pipeline.egress.is_empty() {
-        return Err(HarnessError::NoEgress);
-    }
-    let mut egress: Vec<EgressDriver<Tuple<Out>>> = std::mem::take(&mut pipeline.egress)
-        .into_iter()
-        .map(|r| EgressDriver::new(r, clock.clone()))
-        .collect();
-    // all drivers record into ONE histogram pair: end-to-end latency is
-    // a property of the whole topology, whichever sink a tuple exits
-    let (lat, lat_total) = (egress[0].latency_us.clone(), egress[0].latency_total_us.clone());
-    for d in egress.iter_mut().skip(1) {
-        d.latency_us = lat.clone();
-        d.latency_total_us = lat_total.clone();
-    }
-
     let n_stages = pipeline.depth();
     if cfg.stages.len() > n_stages {
         return Err(HarnessError::ExtraStageConfigs { given: cfg.stages.len(), stages: n_stages });
@@ -368,289 +368,48 @@ where
     while stage_cfgs.len() < n_stages {
         stage_cfgs.push(StageRunConfig::default());
     }
-    let mut loops: Vec<StageLoopState> = stage_cfgs
-        .into_iter()
-        .take(n_stages)
-        .enumerate()
-        .map(|(k, mut sc)| {
-            sc.manual_reconfigs.sort_by_key(|&(at, _)| at);
-            let period = sc.controller_period_s.max(1);
-            StageLoopState {
-                last_snap: MetricsSnapshot::default(),
-                prev_loads: vec![0; pipeline.stages[k].max_parallelism()],
-                next_manual: 0,
-                next_controller_s: period,
-                last_arrival_tps: 0.0,
-                samples: Vec::new(),
-                cfg: sc,
-            }
+    // degenerate configs are typed errors BEFORE launch, not mid-run
+    // panics from the policy loop
+    for (k, sc) in stage_cfgs.iter().enumerate() {
+        if sc.manual_reconfigs.iter().any(|(_, set)| set.is_empty()) {
+            return Err(HarnessError::EmptyReconfigSet { stage: k });
+        }
+    }
+
+    let handle = Job::new(pipeline, source)
+        .with_config(LaunchConfig {
+            name: "pipeline".into(),
+            stage_names: Vec::new(),
+            schedule: cfg.schedule.clone(),
+            time_scale: cfg.time_scale,
+            flush_slack_ms: cfg.flush_slack_ms,
+            drain: cfg.drain,
+            ingress_batch: cfg.ingress_batch,
+            capture_egress: false,
         })
-        .collect();
+        .launch()?;
 
-    let duration_s = cfg.schedule.duration_s();
-    let mut pending_event_tuples = 0.0f64;
-    let mut event_ms_total: f64 = 0.0;
-    // per-tick feed runs, one per ingress wrapper (round-robin split so
-    // EVERY wrapper's gate clock advances every tick), each handed over
-    // via one batched add (§Perf). A wrapper whose slot is decommissioned
-    // under us (`Err(Inactive)`) leaves the rotation; its residual is
-    // counted in `ingress_dropped`, never silently discarded.
-    let mut feed_bufs: Vec<Vec<Tuple<In>>> = (0..n_ing).map(|_| Vec::new()).collect();
-    let mut alive: Vec<bool> = vec![true; n_ing];
-    let mut n_alive = n_ing;
-    let mut ingress_dropped = 0u64;
-    let mut rr = 0usize;
-    let mut next_dag_ctl_s: u32 = cfg.dag_controller_period_s.max(1);
-    let t0 = Instant::now();
-
-    // wall tick: 20 ms of *wall* time per loop iteration
-    let wall_tick = Duration::from_millis(20);
-    let mut next_tick = t0;
-    let mut next_sample_s: u32 = 1;
-
-    loop {
-        // how far event time should have progressed
-        let wall_s = t0.elapsed().as_secs_f64();
-        let event_s = wall_s * cfg.time_scale;
-        // run slightly past the end so the final per-second sample lands
-        if event_s >= duration_s as f64 + 0.1 {
-            break;
+    // same per-pass order as the historical loop: scripted steps first,
+    // then adaptive batching, then the stage controller, then the global
+    // co-scheduler
+    let mut policies: Vec<Box<dyn JobPolicy>> = Vec::new();
+    for (k, sc) in stage_cfgs.into_iter().enumerate() {
+        if !sc.manual_reconfigs.is_empty() {
+            policies.push(Box::new(ScriptedScalePolicy::sets(k, sc.manual_reconfigs)));
         }
-        let cur_rate = cfg.schedule.rate_at(event_s as u32);
-        if event_s < duration_s as f64 {
-            source.set_rate(cur_rate);
-            // feed the tuples that belong to this tick
-            let tick_event_s = wall_tick.as_secs_f64() * cfg.time_scale;
-            pending_event_tuples += cur_rate * tick_event_s;
-            let n = pending_event_tuples.floor() as usize;
-            pending_event_tuples -= n as f64;
-            event_ms_total += tick_event_s * 1e3;
-            let ingress_batch = cfg.ingress_batch.max(1);
-            for _ in 0..n {
-                let mut t = source.next();
-                t.ingest_us = clock.now_us();
-                if n_alive == 0 {
-                    ingress_dropped += 1; // every wrapper decommissioned
-                    continue;
-                }
-                while !alive[rr] {
-                    rr = (rr + 1) % n_ing;
-                }
-                feed_bufs[rr].push(t);
-                if feed_bufs[rr].len() >= ingress_batch
-                    && ings[rr].add_batch(&mut feed_bufs[rr]).is_err()
-                {
-                    // decommissioned mid-run: retire the wrapper from the
-                    // rotation and account for the lost residual
-                    ingress_dropped += feed_bufs[rr].len() as u64;
-                    feed_bufs[rr].clear();
-                    alive[rr] = false;
-                    n_alive -= 1;
-                }
-                rr = (rr + 1) % n_ing;
-            }
-            for (i, buf) in feed_bufs.iter_mut().enumerate() {
-                if alive[i] && ings[i].add_batch(buf).is_err() {
-                    ingress_dropped += buf.len() as u64;
-                    buf.clear();
-                    alive[i] = false;
-                    n_alive -= 1;
-                }
-            }
+        if let Some(bounds) = sc.adaptive_batch {
+            policies.push(Box::new(AdaptiveBatchPolicy::new(k, bounds, sc.controller_period_s)));
         }
-        for d in egress.iter_mut() {
-            d.poll();
-        }
-
-        // per-event-second sampling, every stage
-        while (next_sample_s as f64) <= event_s && next_sample_s <= duration_s {
-            for (k, st) in loops.iter_mut().enumerate() {
-                let stage = &pipeline.stages[k];
-                let metrics = stage.metrics();
-                let snap = metrics.snapshot();
-                let dt = 1.0 / cfg.time_scale; // wall seconds per event second
-                let rates = snap.rates_since(&st.last_snap, dt);
-                let active = stage.active_instances();
-                // per-interval load CV (Fig. 9 right): deltas, active set only
-                let cv = {
-                    let deltas: Vec<f64> = active
-                        .iter()
-                        .map(|&i| (metrics.instance_load(i) - st.prev_loads[i]) as f64)
-                        .collect();
-                    for (i, p) in st.prev_loads.iter_mut().enumerate() {
-                        *p = metrics.instance_load(i);
-                    }
-                    let mean = deltas.iter().sum::<f64>() / deltas.len().max(1) as f64;
-                    if deltas.len() < 2 || mean <= 0.0 {
-                        0.0
-                    } else {
-                        let var = deltas.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>()
-                            / deltas.len() as f64;
-                        100.0 * var.sqrt() / mean
-                    }
-                };
-                // Every active instance reads (and counts) every gate
-                // tuple, so the summed rate is m× the true arrival rate;
-                // dividing by the active count recovers arrivals.
-                let arrival_tps =
-                    rates.in_tps / cfg.time_scale / active.len().max(1) as f64;
-                st.last_arrival_tps = arrival_tps;
-                st.samples.push(RunSample {
-                    t_s: next_sample_s,
-                    // With ONE ingress wrapper, stage 0 is offered the
-                    // whole schedule. With several wrappers the harness
-                    // cannot map wrappers to source stages (a DAG may
-                    // have several), so every stage reports its measured
-                    // arrival rate instead of a guessed split.
-                    offered_tps: if k == 0 && n_ing == 1 {
-                        cfg.schedule.rate_at(next_sample_s - 1)
-                    } else {
-                        arrival_tps
-                    },
-                    // rates are per wall second; report per *event* second
-                    in_tps: arrival_tps,
-                    out_tps: rates.out_tps / cfg.time_scale,
-                    cmp_per_s: rates.cmp_per_s / cfg.time_scale,
-                    latency_p50_us: lat.p50(),
-                    latency_mean_us: lat.mean(),
-                    threads: active.len(),
-                    backlog: stage.in_backlog(),
-                    load_cv_pct: cv,
-                    worker_batch: stage.worker_batch(),
-                });
-                st.last_snap = snap;
-            }
-            // end-to-end latency is a property of the whole pipeline; the
-            // per-second histogram resets once all stages sampled it
-            lat.reset();
-            next_sample_s += 1;
-        }
-
-        // per-stage scripted reconfigurations (bypass the controllers)
-        for (k, st) in loops.iter_mut().enumerate() {
-            while st.next_manual < st.cfg.manual_reconfigs.len()
-                && (st.cfg.manual_reconfigs[st.next_manual].0 as f64) <= event_s
-            {
-                let set = st.cfg.manual_reconfigs[st.next_manual].1.clone();
-                pipeline.stages[k].reconfigure(set.clone(), Mapper::over(set));
-                st.next_manual += 1;
-            }
-        }
-        // per-stage controller ticks (the tick also carries the adaptive
-        // batch-sizing update, so it fires with or without a controller)
-        for (k, st) in loops.iter_mut().enumerate() {
-            let period = st.cfg.controller_period_s.max(1);
-            if (st.next_controller_s as f64) > event_s {
-                continue;
-            }
-            st.next_controller_s += period;
-            let stage = &mut pipeline.stages[k];
-            if let Some(bounds) = st.cfg.adaptive_batch {
-                stage.set_worker_batch(adaptive_worker_batch(stage.in_backlog(), bounds));
-            }
-            if let Some(ctl) = st.cfg.controller.as_mut() {
-                let active = stage.active_instances();
-                let obs = Observation {
-                    // the schedule rate only describes stage 0 when a
-                    // single wrapper feeds it the whole stream; with
-                    // several wrappers (possibly several source
-                    // stages) use the measured arrival rate
-                    in_rate: if k == 0 && n_ing == 1 {
-                        cur_rate
-                    } else {
-                        st.last_arrival_tps
-                    },
-                    cmp_per_s: st.samples.last().map(|s| s.cmp_per_s).unwrap_or(0.0),
-                    backlog: stage.in_backlog(),
-                    dt: period as f64,
-                    active,
-                    max: stage.max_parallelism(),
-                };
-                if let Decision::Reconfigure(set) = ctl.tick(&obs) {
-                    let mapper = Mapper::over(set.clone());
-                    stage.reconfigure(set, mapper);
-                }
-            }
-        }
-        // global co-scheduling tick: one observation per stage, one
-        // decision wave against the shared core budget
-        if let Some(dc) = cfg.dag_controller.as_mut() {
-            let period = cfg.dag_controller_period_s.max(1);
-            if (next_dag_ctl_s as f64) <= event_s {
-                next_dag_ctl_s += period;
-                let obs: Vec<Observation> = loops
-                    .iter()
-                    .enumerate()
-                    .map(|(k, st)| Observation {
-                        in_rate: if k == 0 && n_ing == 1 {
-                            cur_rate
-                        } else {
-                            st.last_arrival_tps
-                        },
-                        cmp_per_s: st.samples.last().map(|s| s.cmp_per_s).unwrap_or(0.0),
-                        backlog: pipeline.stages[k].in_backlog(),
-                        dt: period as f64,
-                        active: pipeline.stages[k].active_instances(),
-                        max: pipeline.stages[k].max_parallelism(),
-                    })
-                    .collect();
-                for (k, d) in dc.tick(&obs).into_iter().enumerate() {
-                    if let Decision::Reconfigure(set) = d {
-                        let mapper = Mapper::over(set.clone());
-                        pipeline.stages[k].reconfigure(set, mapper);
-                    }
-                }
-            }
-        }
-
-        next_tick += wall_tick;
-        let now = Instant::now();
-        if next_tick > now {
-            std::thread::sleep(next_tick - now);
-        } else {
-            next_tick = now; // fell behind: don't try to catch up the wall
+        if let Some(ctl) = sc.controller {
+            policies.push(Box::new(ControllerPolicy::new(k, ctl, sc.controller_period_s)));
         }
     }
-
-    // flush: end-of-stream heartbeat on EVERY ingress wrapper (workers
-    // forward it stage to stage; a silent wrapper would hold back every
-    // downstream watermark), then drain remaining outputs briefly
-    let horizon = event_ms_total as EventTime + cfg.flush_slack_ms;
-    for (i, ing) in ings.iter_mut().enumerate() {
-        if alive[i] {
-            let _ = ing.heartbeat(horizon); // heartbeats carry no data
-        }
+    if let Some(dc) = cfg.dag_controller.take() {
+        policies.push(Box::new(DagControllerPolicy::new(dc, cfg.dag_controller_period_s)));
     }
-    let drain_until = Instant::now() + cfg.drain;
-    while Instant::now() < drain_until {
-        let mut polled = 0;
-        for d in egress.iter_mut() {
-            polled += d.poll();
-        }
-        if polled == 0 {
-            std::thread::sleep(Duration::from_millis(2));
-        }
-    }
-    let latency_p50_us = lat_total.p50();
-    let latency_mean_us = lat_total.mean();
-    let egress_count = egress.iter().map(|d| d.count).sum();
-    let stages = loops
-        .into_iter()
-        .enumerate()
-        .map(|(k, st)| StageRunStats {
-            name: pipeline.stages[k].name(),
-            samples: st.samples,
-            reconfigs: pipeline.stages[k].completion_times(),
-        })
-        .collect();
-    pipeline.shutdown();
-    Ok(PipelineRunResult {
-        stages,
-        egress_count,
-        ingress_dropped,
-        latency_p50_us,
-        latency_mean_us,
-    })
+    // drive() returns once the job has quiesced
+    drive(&handle, &mut policies);
+    Ok(handle.shutdown().result)
 }
 
 /// Run a live, threaded VSN ScaleJoin experiment — the Q3-Q6 entry point,
@@ -670,7 +429,7 @@ pub fn run_elastic_join(cfg: JoinRunConfig) -> RunResult {
         },
     )
     .build();
-    let mut gen = SjGen::new(cfg.seed, 1.0);
+    let gen = SjGen::new(cfg.seed, 1.0);
     let pcfg = PipelineRunConfig {
         schedule: cfg.schedule,
         time_scale: cfg.time_scale,
@@ -687,7 +446,7 @@ pub fn run_elastic_join(cfg: JoinRunConfig) -> RunResult {
     };
     // the builder above wires exactly one ingress and one egress, so the
     // typed degenerate-topology errors cannot occur here
-    let r = run_pipeline(pipeline, pcfg, &mut gen)
+    let r = run_pipeline(pipeline, pcfg, gen)
         .expect("single-stage pipeline always has one ingress and one egress");
     let stage0 = r.stages.into_iter().next().expect("single-stage pipeline");
     RunResult { samples: stage0.samples, reconfigs: stage0.reconfigs, egress_count: r.egress_count }
@@ -815,9 +574,15 @@ const JOB_SECTION_KEYS: &[(&str, &[(&str, KeyKind)])] = &[
 /// place of what the user wrote.
 fn check_job_section_keys(cfg: &Config) -> Result<(), JobError> {
     'keys: for k in cfg.keys() {
-        // `[topology]`/`[stage.*]` are JobSpec::from_config's territory;
-        // the bare `name` key is the only free-form top-level one.
-        if k == "name" || k.starts_with("topology.") || k.starts_with("stage.") {
+        // `[topology]`/`[stage.*]` are JobSpec::from_config's territory,
+        // `[schedule.*]` is validated against the declared stage names by
+        // [`stage_schedules`]; the bare `name` key is the only free-form
+        // top-level one.
+        if k == "name"
+            || k.starts_with("topology.")
+            || k.starts_with("stage.")
+            || k.starts_with("schedule.")
+        {
             continue;
         }
         for (prefix, known) in JOB_SECTION_KEYS {
@@ -851,29 +616,108 @@ fn check_job_section_keys(cfg: &Config) -> Result<(), JobError> {
         return Err(JobError::BadValue {
             key: k.to_string(),
             msg: "unknown section/key for a job config (expected `name`, `[topology]`, \
-                  `[stage.<name>]`, `[run]`, `[elastic]`, `[source]`, or `[batch]`)"
+                  `[stage.<name>]`, `[schedule.<name>]`, `[run]`, `[elastic]`, `[source]`, \
+                  or `[batch]`)"
                 .into(),
         });
     }
     Ok(())
 }
 
-/// Outcome of a declarative-job run ([`run_job`]).
-pub struct JobRunOutcome {
-    /// The config's `name` key.
-    pub name: String,
-    /// Config stage names aligned with `result.stages` indices.
-    pub stage_names: Vec<String>,
-    pub result: PipelineRunResult,
+/// One stage's `[schedule.<stage>]` plan: timed `scale` and `rate` steps
+/// (both in the `"<event second> -> <value>"` arrow idiom, parsed by
+/// [`parse_steps`]), executed through the live [`JobHandle`] by
+/// [`run_job`] — the declarative face of [`ScriptedScalePolicy`] and
+/// [`RateStepPolicy`].
+pub struct StageSchedule {
+    /// Stage index into the topologically sorted [`JobSpec::stages`].
+    pub stage: usize,
+    /// (event second, target parallelism) — executed as `job.scale`.
+    pub scale: Vec<(u32, usize)>,
+    /// (event second, offered t/s) — executed as `job.set_rate`. The
+    /// feed is global, so rate steps usually live on a source stage's
+    /// section.
+    pub rate: Vec<(u32, f64)>,
 }
 
-/// Run a config-declared job end to end: parse + validate the
-/// [`JobSpec`], build the topology through the operator registry, pick
-/// the paced generator matching the source stages' payload kind, wire
+/// Parse and validate every `[schedule.<stage>]` section against the
+/// job's declared stages: unknown stage names, unknown keys, malformed
+/// steps and scale targets outside `1..=max` are all typed errors.
+pub fn stage_schedules(cfg: &Config, spec: &JobSpec) -> Result<Vec<StageSchedule>, JobError> {
+    use std::collections::BTreeMap;
+    let mut by_stage: BTreeMap<usize, StageSchedule> = BTreeMap::new();
+    for k in cfg.keys() {
+        let Some(rest) = k.strip_prefix("schedule.") else { continue };
+        let Some((stage, field)) = rest.split_once('.') else {
+            return Err(JobError::BadValue {
+                key: k.to_string(),
+                msg: "expected `schedule.<stage>.<scale|rate>`".into(),
+            });
+        };
+        let Some(idx) = spec.stages.iter().position(|s| s.name == stage) else {
+            return Err(JobError::BadValue {
+                key: k.to_string(),
+                msg: format!(
+                    "section `[schedule.{stage}]` does not match any declared stage \
+                     (declared: {})",
+                    spec.stages.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", ")
+                ),
+            });
+        };
+        if field != "scale" && field != "rate" {
+            return Err(JobError::BadValue {
+                key: k.to_string(),
+                msg: "unknown `[schedule.<stage>]` key (known: scale, rate)".into(),
+            });
+        }
+        let items = string_list(cfg, k)?.expect("keys() yields existing keys");
+        let steps = parse_steps(&items)
+            .map_err(|msg| JobError::BadValue { key: k.to_string(), msg })?;
+        let entry = by_stage
+            .entry(idx)
+            .or_insert_with(|| StageSchedule { stage: idx, scale: Vec::new(), rate: Vec::new() });
+        if field == "scale" {
+            let max = spec.stages[idx].max;
+            let mut scale = Vec::with_capacity(steps.len());
+            for (at, v) in steps {
+                if v.fract() != 0.0 || v < 1.0 || v > max as f64 {
+                    return Err(JobError::BadValue {
+                        key: k.to_string(),
+                        msg: format!(
+                            "scale step `{at} -> {v}` must target an integer parallelism \
+                             in 1..={max} (the stage's max)"
+                        ),
+                    });
+                }
+                scale.push((at, v as usize));
+            }
+            entry.scale = scale;
+        } else {
+            for &(at, v) in &steps {
+                if v < 0.0 {
+                    return Err(JobError::BadValue {
+                        key: k.to_string(),
+                        msg: format!("rate step `{at} -> {v}` must be ≥ 0 t/s"),
+                    });
+                }
+            }
+            entry.rate = steps;
+        }
+    }
+    Ok(by_stage.into_values().collect())
+}
+
+/// Run a config-declared job end to end — a thin client of the live
+/// runtime API: parse + validate the [`JobSpec`] and its
+/// `[schedule.<stage>]` sections, build the topology through the
+/// operator registry, [`Job::launch`] it under the `[run]` rate schedule,
+/// then [`drive`] the configured policies through the [`JobHandle`] —
 /// the `[elastic]` controller choice (`none` / `reactive` / `proactive`
 /// per stage, or the global budgeted `dag` controller with
-/// `elastic.cores`) and the `[batch]` adaptive batch sizing, then drive
-/// everything through [`run_pipeline`] under the `[run]` rate schedule.
+/// `elastic.cores`), the `[batch]` adaptive batch sizing, and the
+/// scripted `[schedule.<stage>]` scale/rate steps. Every policy-issued
+/// reconfiguration comes back as a [`ReconfigTicket`] in
+/// [`JobRunOutcome::tickets`], with its measured latency.
 ///
 /// `budget_ms`, when given, caps the WALL-clock duration of the paced
 /// phase by raising `time_scale` — the CI smoke knob (`stretch run
@@ -881,30 +725,64 @@ pub struct JobRunOutcome {
 pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, JobError> {
     check_job_section_keys(cfg)?;
     let spec = JobSpec::from_config(cfg)?;
+    let schedules = stage_schedules(cfg, &spec)?;
     // resolve the generator BEFORE spawning anything — NoSource is a
     // pure config error and must not cost a topology spawn + teardown
-    let mut source =
+    let source =
         JobSource::for_kind(spec.source_kind, cfg).ok_or(JobError::NoSource(spec.source_kind))?;
-    let built = spec.build()?;
     let schedule = RateSchedule::from_config(cfg);
+    // a step at/after the run's end would silently never execute
+    // (policies stop at end-of-stream) — reject it like every other
+    // malformed schedule input
+    let duration = schedule.duration_s();
+    for sch in &schedules {
+        let name = &spec.stages[sch.stage].name;
+        for (field, ats) in [
+            ("scale", sch.scale.iter().map(|&(at, _)| at).collect::<Vec<_>>()),
+            ("rate", sch.rate.iter().map(|&(at, _)| at).collect::<Vec<_>>()),
+        ] {
+            if let Some(&at) = ats.iter().find(|&&at| at >= duration) {
+                return Err(JobError::BadValue {
+                    key: format!("schedule.{name}.{field}"),
+                    msg: format!(
+                        "step at second {at} is at/after the run's end \
+                         ({duration} s) — it would never execute"
+                    ),
+                });
+            }
+        }
+    }
     let batch = BatchTuning::from_config(cfg);
-    let n_stages = built.pipeline.depth();
+    let n_stages = spec.stages.len();
     let adaptive = if batch.adaptive { Some(AdaptiveBatch::from(&batch)) } else { None };
     let period = cfg.int_or("elastic.period_s", 1).max(1) as u32;
 
-    let mut dag_controller = None;
-    let mut per_stage: Vec<Option<Box<dyn Controller>>> = (0..n_stages).map(|_| None).collect();
+    // assemble the policy set BEFORE launching — a bad `[elastic]`
+    // controller choice must not cost a topology spawn + teardown
+    let mut policies: Vec<Box<dyn JobPolicy>> = Vec::new();
+    for sch in schedules {
+        if !sch.scale.is_empty() {
+            policies.push(Box::new(ScriptedScalePolicy::counts(sch.stage, sch.scale)));
+        }
+        if !sch.rate.is_empty() {
+            policies.push(Box::new(RateStepPolicy::new(sch.rate)));
+        }
+    }
+    if let Some(bounds) = adaptive {
+        for k in 0..n_stages {
+            policies.push(Box::new(AdaptiveBatchPolicy::new(k, bounds, period)));
+        }
+    }
     match cfg.str_or("elastic.controller", "none") {
         "none" => {}
         "dag" => {
-            dag_controller = Some(
-                DagController::new(cfg.int_or("elastic.cores", 8).max(1) as usize)
-                    .with_thresholds(
-                        cfg.int_or("elastic.grow_backlog", 4096).max(1) as u64,
-                        cfg.int_or("elastic.shrink_backlog", 64).max(0) as u64,
-                    )
-                    .with_cooldown(cfg.int_or("elastic.cooldown_ticks", 1).max(0) as u32),
-            );
+            let dc = DagController::new(cfg.int_or("elastic.cores", 8).max(1) as usize)
+                .with_thresholds(
+                    cfg.int_or("elastic.grow_backlog", 4096).max(1) as u64,
+                    cfg.int_or("elastic.shrink_backlog", 64).max(0) as u64,
+                )
+                .with_cooldown(cfg.int_or("elastic.cooldown_ticks", 1).max(0) as u32);
+            policies.push(Box::new(DagControllerPolicy::new(dc, period)));
         }
         kind if kind == "reactive" || kind == "proactive" => {
             // per-stage controllers, each modelled on this machine's
@@ -915,7 +793,11 @@ pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, Jo
                     cal.cmp_per_sec / st.max.max(1) as f64,
                     st.params.ws_ms as f64 / 1e3,
                 );
-                per_stage[k] = Some(controller_from_config(cfg, kind, model));
+                policies.push(Box::new(ControllerPolicy::new(
+                    k,
+                    controller_from_config(cfg, kind, model),
+                    period,
+                )));
             }
         }
         other => {
@@ -926,33 +808,28 @@ pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, Jo
         }
     }
 
-    let stages: Vec<StageRunConfig> = per_stage
-        .into_iter()
-        .map(|controller| StageRunConfig {
-            controller,
-            controller_period_s: period,
-            manual_reconfigs: Vec::new(),
-            adaptive_batch: adaptive,
-        })
-        .collect();
-
+    let built = spec.build()?;
     let max_ws = spec.stages.iter().map(|s| s.params.ws_ms).max().unwrap_or(1_000);
     let mut time_scale = cfg.float_or("run.time_scale", 1.0).max(1e-6);
     if let Some(ms) = budget_ms {
         time_scale = time_scale.max(schedule.duration_s() as f64 * 1000.0 / ms.max(1) as f64);
     }
-    let pcfg = PipelineRunConfig {
-        schedule,
-        time_scale,
-        stages,
-        flush_slack_ms: cfg.int_or("run.flush_slack_ms", max_ws + 10_000),
-        drain: Duration::from_millis(cfg.int_or("run.drain_ms", 500).max(0) as u64),
-        ingress_batch: batch.ingress,
-        dag_controller,
-        dag_controller_period_s: period,
-    };
-    let result = run_pipeline(built.pipeline, pcfg, &mut source).map_err(JobError::Harness)?;
-    Ok(JobRunOutcome { name: spec.name, stage_names: built.stage_names, result })
+    let handle = Job::new(built.pipeline, source)
+        .with_config(LaunchConfig {
+            name: spec.name.clone(),
+            stage_names: built.stage_names.clone(),
+            schedule,
+            time_scale,
+            flush_slack_ms: cfg.int_or("run.flush_slack_ms", max_ws + 10_000),
+            drain: Duration::from_millis(cfg.int_or("run.drain_ms", 500).max(0) as u64),
+            ingress_batch: batch.ingress,
+            capture_egress: false,
+        })
+        .launch()
+        .map_err(JobError::Harness)?;
+    // drive() returns once the job has quiesced
+    drive(&handle, &mut policies);
+    Ok(handle.shutdown())
 }
 
 #[cfg(test)]
@@ -997,7 +874,6 @@ mod tests {
         )
         .build();
         assert_eq!(pipeline.stages[0].worker_batch(), 128);
-        let mut gen = SjGen::new(5, 1.0);
         let bounds = AdaptiveBatch { min: 8, max: 64 };
         let r = run_pipeline(
             pipeline,
@@ -1010,7 +886,7 @@ mod tests {
                 }],
                 ..Default::default()
             },
-            &mut gen,
+            SjGen::new(5, 1.0),
         )
         .unwrap();
         // the first controller tick fires after the first sample; every
@@ -1148,8 +1024,7 @@ adaptive = true
             VsnOptions { initial: 1, max: 2, egress_readers: 0, ..Default::default() },
         )
         .build();
-        let mut gen = SjGen::new(1, 1.0);
-        match run_pipeline(pipeline, PipelineRunConfig::default(), &mut gen) {
+        match run_pipeline(pipeline, PipelineRunConfig::default(), SjGen::new(1, 1.0)) {
             Err(HarnessError::NoEgress) => {}
             other => panic!("expected NoEgress, got {:?}", other.map(|_| ()).err()),
         }
@@ -1163,9 +1038,27 @@ adaptive = true
             stages: vec![StageRunConfig::default(), StageRunConfig::default()],
             ..Default::default()
         };
-        match run_pipeline(pipeline, cfg, &mut gen) {
+        match run_pipeline(pipeline, cfg, SjGen::new(1, 1.0)) {
             Err(HarnessError::ExtraStageConfigs { given: 2, stages: 1 }) => {}
             other => panic!("expected ExtraStageConfigs, got {:?}", other.map(|_| ()).err()),
+        }
+        // scripted reconfig to an empty instance set: rejected up front,
+        // not a mid-run panic from the policy loop
+        let pipeline = PipelineBuilder::new(
+            q3_operator(1_000, 8),
+            VsnOptions { initial: 1, max: 2, ..Default::default() },
+        )
+        .build();
+        let cfg = PipelineRunConfig {
+            stages: vec![StageRunConfig {
+                manual_reconfigs: vec![(1, Vec::new())],
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        match run_pipeline(pipeline, cfg, SjGen::new(1, 1.0)) {
+            Err(HarnessError::EmptyReconfigSet { stage: 0 }) => {}
+            other => panic!("expected EmptyReconfigSet, got {:?}", other.map(|_| ()).err()),
         }
     }
 
@@ -1181,7 +1074,7 @@ adaptive = true
             VsnOptions { initial: 1, max: 2, gate_capacity: 4096, ..Default::default() },
         )
         .build();
-        let mut source = TradeStream::new(&NyseConfig::default(), 400.0);
+        let source = TradeStream::new(&NyseConfig::default(), 400.0);
         let r = run_pipeline(
             pipeline,
             PipelineRunConfig {
@@ -1201,7 +1094,7 @@ adaptive = true
                 drain: Duration::from_millis(500),
                 ..Default::default()
             },
-            &mut source,
+            source,
         )
         .unwrap();
         assert_eq!(r.stages.len(), 2);
@@ -1214,5 +1107,79 @@ adaptive = true
         assert_eq!(r.stages[1].samples.last().unwrap().threads, 2);
         // data flowed through the shared gate into stage 2
         assert!(r.stages[1].samples.iter().any(|s| s.in_tps > 0.0));
+    }
+
+    const SCHED_STAGES: &str = "[topology]\nstages = [\"tok\", \"count\"]\n\
+        [stage.tok]\noperator = \"tweet-tokenize\"\nmax = 3\n\
+        [stage.count]\noperator = \"word-count\"\ninputs = [\"tok\"]\nws_ms = 500\nmax = 2\n";
+
+    #[test]
+    fn stage_schedules_parse_and_validate() {
+        let parse = |extra: &str| {
+            let cfg =
+                crate::config::Config::parse(&format!("{SCHED_STAGES}{extra}")).unwrap();
+            let spec = JobSpec::from_config(&cfg).unwrap();
+            stage_schedules(&cfg, &spec)
+        };
+        // happy path: steps sorted by second, per stage
+        let s = parse("[schedule.tok]\nscale = [\"4 -> 2\", \"1 -> 3\"]\nrate = [\"2 -> 800\"]")
+            .unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].scale, vec![(1, 3), (4, 2)]);
+        assert_eq!(s[0].rate, vec![(2, 800.0)]);
+        // `tok` sorts first topologically, so its index is 0
+        assert_eq!(s[0].stage, 0);
+
+        let bad_key = |extra: &str| match parse(extra) {
+            Err(JobError::BadValue { key, .. }) => key,
+            other => panic!("expected BadValue, got {:?}", other.map(|_| ()).err()),
+        };
+        // undeclared stage: must not be silently dropped
+        assert_eq!(bad_key("[schedule.ghost]\nscale = [\"1 -> 2\"]"), "schedule.ghost.scale");
+        // typo'd field
+        assert_eq!(bad_key("[schedule.tok]\nscael = [\"1 -> 2\"]"), "schedule.tok.scael");
+        // malformed step
+        assert_eq!(bad_key("[schedule.tok]\nscale = [\"soon: 2\"]"), "schedule.tok.scale");
+        // scale target outside the stage's pool
+        assert_eq!(bad_key("[schedule.tok]\nscale = [\"1 -> 9\"]"), "schedule.tok.scale");
+        assert_eq!(bad_key("[schedule.tok]\nscale = [\"1 -> 1.5\"]"), "schedule.tok.scale");
+    }
+
+    #[test]
+    fn run_job_rejects_schedule_steps_past_the_run_end() {
+        // duration_s = 2 but the step is due at second 5: it would
+        // silently never execute, so it must be a typed error
+        let cfg = crate::config::Config::parse(&format!(
+            "{SCHED_STAGES}[schedule.tok]\nscale = [\"5 -> 2\"]\n[run]\nduration_s = 2\n"
+        ))
+        .unwrap();
+        match run_job(&cfg, None) {
+            Err(JobError::BadValue { key, msg }) => {
+                assert_eq!(key, "schedule.tok.scale");
+                assert!(msg.contains("never execute"), "{msg}");
+            }
+            other => panic!("expected BadValue, got {:?}", other.map(|_| ()).err()),
+        }
+    }
+
+    #[test]
+    fn run_job_executes_stage_schedules_through_the_handle() {
+        let cfg = crate::config::Config::parse(&format!(
+            "name = \"wc-scripted\"\n{SCHED_STAGES}\
+             [schedule.tok]\nscale = [\"1 -> 3\"]\nrate = [\"1 -> 500\"]\n\
+             [schedule.count]\nscale = [\"1 -> 2\"]\n\
+             [run]\nduration_s = 3\nrate = 300\ntime_scale = 3\n"
+        ))
+        .unwrap();
+        let out = run_job(&cfg, None).unwrap();
+        assert_eq!(out.tickets.len(), 2, "one ticket per scripted scale step");
+        for t in &out.tickets {
+            let ms = t.latency_ms();
+            assert!(ms.is_some(), "scripted reconfig for stage {} unresolved", t.stage());
+            assert!(ms.unwrap() >= 0.0);
+        }
+        // the steps actually moved parallelism
+        assert_eq!(out.result.stages[0].samples.last().unwrap().threads, 3);
+        assert_eq!(out.result.stages[1].samples.last().unwrap().threads, 2);
     }
 }

@@ -1,0 +1,327 @@
+//! Policies: the decision loops of a live job, driven *through* the
+//! [`JobCtl`] control surface.
+//!
+//! STRETCH deliberately separates the reconfiguration *mechanism* (epochs
+//! + control tuples, `crate::engine`) from the *policy* that decides when
+//! to scale (§3; Röger & Mayer's survey calls these the elasticity
+//! mechanism and the elasticity policy). The [`crate::elastic`]
+//! controllers are pure policy already — this module is the thin layer
+//! that feeds them [`JobMetrics`] samples and forwards their decisions as
+//! [`JobCtl::scale_to`] calls, exactly like user-written policies would.
+//! The same shape covers scripted reconfigurations (`[schedule.<stage>]`
+//! steps, manual test plans) and the adaptive worker-batch sizing, so the
+//! run loop has ONE wiring path for all of them: [`drive`].
+
+use super::handle::{JobCtl, JobMetrics};
+use super::{adaptive_worker_batch, AdaptiveBatch};
+use crate::elastic::{Controller, DagController, Decision, Observation};
+use crate::tuple::InstanceId;
+use std::time::Duration;
+
+/// One decision loop over a live job. `tick` is called with a fresh
+/// metrics sample every few milliseconds until the job quiesces; a policy
+/// keeps its own cadence (usually against `m.event_s`) and issues
+/// commands through `job`.
+pub trait JobPolicy: Send {
+    fn tick(&mut self, m: &JobMetrics, job: &JobCtl);
+}
+
+/// Build a per-stage [`Observation`] from a metrics sample. The offered
+/// schedule rate only describes stage 0 when a single ingress wrapper
+/// feeds it the whole stream; otherwise the measured arrival rate is the
+/// controller's load estimate.
+fn observation(m: &JobMetrics, stage: usize, period_s: u32) -> Observation {
+    let st = &m.stages[stage];
+    Observation {
+        in_rate: if stage == 0 && m.ingress == 1 { m.offered_tps } else { st.last.in_tps },
+        cmp_per_s: st.last.cmp_per_s,
+        backlog: st.backlog,
+        dt: period_s as f64,
+        active: st.active.clone(),
+        max: st.max,
+    }
+}
+
+enum ScaleStep {
+    /// Exact instance set (manual test plans).
+    Set(Vec<InstanceId>),
+    /// Target parallelism (`[schedule.<stage>] scale` steps).
+    Count(usize),
+}
+
+/// Scripted reconfigurations: at event second `at`, scale one stage —
+/// each step fires exactly once, in time order, through the handle (so
+/// every step yields a [`super::ReconfigTicket`]).
+pub struct ScriptedScalePolicy {
+    stage: usize,
+    steps: Vec<(u32, ScaleStep)>,
+    next: usize,
+}
+
+impl ScriptedScalePolicy {
+    /// Steps as exact instance sets (the harness `manual_reconfigs`
+    /// shape).
+    pub fn sets(stage: usize, steps: Vec<(u32, Vec<InstanceId>)>) -> Self {
+        let mut steps: Vec<(u32, ScaleStep)> =
+            steps.into_iter().map(|(at, s)| (at, ScaleStep::Set(s))).collect();
+        steps.sort_by_key(|&(at, _)| at);
+        ScriptedScalePolicy { stage, steps, next: 0 }
+    }
+
+    /// Steps as target parallelism counts (the `[schedule.<stage>]`
+    /// shape).
+    pub fn counts(stage: usize, steps: Vec<(u32, usize)>) -> Self {
+        let mut steps: Vec<(u32, ScaleStep)> =
+            steps.into_iter().map(|(at, n)| (at, ScaleStep::Count(n))).collect();
+        steps.sort_by_key(|&(at, _)| at);
+        ScriptedScalePolicy { stage, steps, next: 0 }
+    }
+}
+
+impl JobPolicy for ScriptedScalePolicy {
+    fn tick(&mut self, m: &JobMetrics, job: &JobCtl) {
+        while let Some((at, step)) = self.steps.get(self.next) {
+            if (*at as f64) > m.event_s {
+                break;
+            }
+            match step {
+                ScaleStep::Set(set) => {
+                    job.scale_to(self.stage, set.clone());
+                }
+                ScaleStep::Count(n) => {
+                    job.scale(self.stage, *n);
+                }
+            }
+            self.next += 1;
+        }
+    }
+}
+
+/// Timed offered-rate steps (`[schedule.<stage>] rate`): at event second
+/// `at`, override the feed rate. The feed is global, so these usually
+/// live on a source stage's schedule section.
+pub struct RateStepPolicy {
+    steps: Vec<(u32, f64)>,
+    next: usize,
+}
+
+impl RateStepPolicy {
+    pub fn new(mut steps: Vec<(u32, f64)>) -> Self {
+        steps.sort_by_key(|&(at, _)| at);
+        RateStepPolicy { steps, next: 0 }
+    }
+}
+
+impl JobPolicy for RateStepPolicy {
+    fn tick(&mut self, m: &JobMetrics, job: &JobCtl) {
+        while let Some(&(at, tps)) = self.steps.get(self.next) {
+            if (at as f64) > m.event_s {
+                break;
+            }
+            job.set_rate(tps);
+            self.next += 1;
+        }
+    }
+}
+
+/// One per-stage [`Controller`] (reactive/proactive) ticked every
+/// `period_s` event seconds — the re-homed single-stage controller path.
+pub struct ControllerPolicy {
+    stage: usize,
+    controller: Box<dyn Controller>,
+    period_s: u32,
+    next_s: u32,
+}
+
+impl ControllerPolicy {
+    pub fn new(stage: usize, controller: Box<dyn Controller>, period_s: u32) -> Self {
+        let period_s = period_s.max(1);
+        ControllerPolicy { stage, controller, period_s, next_s: period_s }
+    }
+}
+
+impl JobPolicy for ControllerPolicy {
+    fn tick(&mut self, m: &JobMetrics, job: &JobCtl) {
+        if (self.next_s as f64) > m.event_s {
+            return;
+        }
+        self.next_s += self.period_s;
+        let obs = observation(m, self.stage, self.period_s);
+        if let Decision::Reconfigure(set) = self.controller.tick(&obs) {
+            job.scale_to(self.stage, set);
+        }
+    }
+}
+
+/// Adaptive worker-batch sizing: every `period_s` event seconds, re-derive
+/// one stage's batch from its observed backlog ([`adaptive_worker_batch`])
+/// and install it live through the handle.
+pub struct AdaptiveBatchPolicy {
+    stage: usize,
+    bounds: AdaptiveBatch,
+    period_s: u32,
+    next_s: u32,
+}
+
+impl AdaptiveBatchPolicy {
+    pub fn new(stage: usize, bounds: AdaptiveBatch, period_s: u32) -> Self {
+        let period_s = period_s.max(1);
+        AdaptiveBatchPolicy { stage, bounds, period_s, next_s: period_s }
+    }
+}
+
+impl JobPolicy for AdaptiveBatchPolicy {
+    fn tick(&mut self, m: &JobMetrics, job: &JobCtl) {
+        if (self.next_s as f64) > m.event_s {
+            return;
+        }
+        self.next_s += self.period_s;
+        job.set_worker_batch(self.stage, adaptive_worker_batch(m.stages[self.stage].backlog, self.bounds));
+    }
+}
+
+/// The topology-aware budgeted co-scheduler as a policy: one observation
+/// per stage, one decision wave per period, every reconfiguration issued
+/// through the handle.
+pub struct DagControllerPolicy {
+    controller: DagController,
+    period_s: u32,
+    next_s: u32,
+}
+
+impl DagControllerPolicy {
+    pub fn new(controller: DagController, period_s: u32) -> Self {
+        let period_s = period_s.max(1);
+        DagControllerPolicy { controller, period_s, next_s: period_s }
+    }
+}
+
+impl JobPolicy for DagControllerPolicy {
+    fn tick(&mut self, m: &JobMetrics, job: &JobCtl) {
+        if (self.next_s as f64) > m.event_s {
+            return;
+        }
+        self.next_s += self.period_s;
+        let obs: Vec<Observation> =
+            (0..m.stages.len()).map(|k| observation(m, k, self.period_s)).collect();
+        for (k, d) in self.controller.tick(&obs).into_iter().enumerate() {
+            if let Decision::Reconfigure(set) = d {
+                job.scale_to(k, set);
+            }
+        }
+    }
+}
+
+/// Drive a set of policies against a live job until it quiesces: sample,
+/// tick every policy, sleep, repeat. This is the ONE wiring loop shared
+/// by [`super::run_pipeline`] and [`super::run_job`] — and the template
+/// for driving a job from your own code.
+///
+/// Policies only tick while the feed is [`running`](JobPhase::Running):
+/// once end-of-stream heartbeats are out, a reconfiguration could never
+/// complete (no watermark advances past it), so decisions stop with the
+/// schedule — the same invariant the old monolithic loop kept
+/// implicitly. The poll period is half the runtime's publish tick:
+/// finer polling would mostly re-read identical snapshots.
+pub fn drive(job: &JobCtl, policies: &mut [Box<dyn JobPolicy>]) {
+    use super::handle::JobPhase;
+    loop {
+        let m = job.sample();
+        // gate on the LIVE phase, not the snapshot's (one tick stale):
+        // a decision issued into the end-of-stream window would be
+        // silently dropped
+        if job.phase() == JobPhase::Running {
+            for p in policies.iter_mut() {
+                p.tick(&m, job);
+            }
+        }
+        if job.quiesced() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::handle::{JobPhase, StageMetrics};
+    use crate::harness::RunSample;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    fn metrics(n_stages: usize) -> JobMetrics {
+        JobMetrics {
+            event_s: 0.0,
+            duration_s: 10,
+            offered_tps: 1_000.0,
+            ingress: 1,
+            fed: 0,
+            egress_count: 0,
+            ingress_dropped: 0,
+            phase: JobPhase::Running,
+            stages: (0..n_stages)
+                .map(|_| StageMetrics {
+                    name: "stage",
+                    active: vec![0],
+                    max: 4,
+                    backlog: 0,
+                    worker_batch: 128,
+                    last: RunSample::default(),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn scripted_policy_fires_each_step_once_in_time_order() {
+        let job = JobCtl::detached(2);
+        // deliberately unsorted input
+        let mut p = ScriptedScalePolicy::counts(1, vec![(3, 2), (1, 3)]);
+        let mut m = metrics(2);
+        m.event_s = 0.5;
+        p.tick(&m, &job);
+        assert_eq!(job.tickets().len(), 0, "nothing due yet");
+        m.event_s = 1.0;
+        p.tick(&m, &job);
+        assert_eq!(job.tickets().len(), 1, "first step due");
+        m.event_s = 5.0;
+        p.tick(&m, &job);
+        assert_eq!(job.tickets().len(), 2, "catch-up fires the rest");
+        p.tick(&m, &job);
+        assert_eq!(job.tickets().len(), 2, "steps must not refire");
+        assert!(job.tickets().iter().all(|t| t.stage() == 1));
+    }
+
+    struct CountingController(Arc<AtomicU32>);
+    impl Controller for CountingController {
+        fn tick(&mut self, _obs: &Observation) -> Decision {
+            self.0.fetch_add(1, Ordering::Relaxed);
+            Decision::Hold
+        }
+    }
+
+    #[test]
+    fn controller_policy_honors_its_period() {
+        let job = JobCtl::detached(1);
+        let calls = Arc::new(AtomicU32::new(0));
+        let mut p = ControllerPolicy::new(0, Box::new(CountingController(calls.clone())), 2);
+        let mut m = metrics(1);
+        for (event_s, want) in [(1.9, 0), (2.0, 1), (3.9, 1), (4.2, 2), (4.3, 2)] {
+            m.event_s = event_s;
+            p.tick(&m, &job);
+            assert_eq!(calls.load(Ordering::Relaxed), want, "at event_s={event_s}");
+        }
+    }
+
+    #[test]
+    fn observation_uses_schedule_rate_only_for_single_ingress_stage_zero() {
+        let mut m = metrics(2);
+        m.stages[1].last.in_tps = 123.0;
+        assert_eq!(observation(&m, 0, 1).in_rate, 1_000.0, "stage 0, one wrapper: offered");
+        assert_eq!(observation(&m, 1, 1).in_rate, 123.0, "downstream: measured arrivals");
+        m.ingress = 2;
+        m.stages[0].last.in_tps = 77.0;
+        assert_eq!(observation(&m, 0, 1).in_rate, 77.0, "multi-ingress: measured arrivals");
+    }
+}

@@ -28,14 +28,25 @@
 //!   batches so reconfiguration latency is batching-independent.
 //! * [`elastic`] — reconfiguration controllers (reactive + proactive
 //!   per-stage, plus the topology-aware budgeted
-//!   [`elastic::DagController`]).
-//! * [`harness`] — rate-scheduled topology run loop (N ingress sources,
-//!   M egress readers — degenerate shapes are typed errors, not panics)
-//!   with per-stage controllers, an optional global DAG controller,
-//!   backlog-driven adaptive worker-batch sizing, per-stage metrics
-//!   sampling, and [`harness::run_job`]: the config-to-running-job
-//!   entrypoint behind `stretch run --config job.conf`
-//!   (emitting `BENCH_<job>.json`).
+//!   [`elastic::DagController`]) — pure *policies*, driven through the
+//!   live job handle below.
+//! * [`harness`] — the live runtime API and the batch entry points on
+//!   top of it. [`harness::Job::launch`] is the ONE way a running
+//!   topology is owned: it moves the data plane (paced feed over N
+//!   ingress sources, M egress drains, per-event-second sampling;
+//!   degenerate shapes are typed errors, not panics) onto a runtime
+//!   thread and returns a [`harness::JobHandle`] — `scale` →
+//!   [`harness::ReconfigTicket`] (resolves to the measured reconfig
+//!   latency), `set_rate`, `set_worker_batch`, `sample()` →
+//!   [`harness::JobMetrics`], `await_quiesce`, `shutdown()` →
+//!   [`harness::JobRunOutcome`]. Decisions live outside as
+//!   [`harness::policy`] objects (controllers, scripted
+//!   `[schedule.<stage>]` steps, adaptive batch sizing);
+//!   [`harness::run_pipeline`] and [`harness::run_job`] — the
+//!   config-to-running-job entrypoint behind `stretch run --config
+//!   job.conf`, emitting `BENCH_<job>.json` with per-reconfig ticket
+//!   latencies — are thin clients: launch, drive policies, quiesce,
+//!   shut down.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled kernels
 //!   (stubbed unless built with `--features pjrt`).
 //! * [`workloads`] — generators for every evaluation workload (§8), plus
@@ -67,19 +78,44 @@
 //! On top sits the **declarative layer**: [`engine::job::JobSpec`]
 //! parses a `[topology]`/`[stage.*]` config (stages by name, edges,
 //! per-stage parallelism, per-stage operator params, controller choice +
-//! core budget, adaptive `[batch]` sizing), validates it with typed
-//! errors (cycle, unknown operator, dangling edge, edge payload-type
-//! mismatch), resolves operator names through
-//! [`workloads::registry`] and builds the running topology —
-//! `stretch run --config examples/configs/diamond.conf` is a whole
-//! elastic diamond with zero topology code.
+//! core budget, adaptive `[batch]` sizing, scripted `[schedule.<stage>]`
+//! scale/rate steps), validates it with typed errors (cycle, unknown
+//! operator, dangling edge, edge payload-type mismatch — polymorphic
+//! operators like `forward` resolve their kind from their upstream),
+//! resolves operator names through [`workloads::registry`] and builds
+//! the running topology — `stretch run --config
+//! examples/configs/diamond.conf` is a whole elastic diamond with zero
+//! topology code, and `examples/configs/diamond_scripted.conf` scales
+//! all four stages on a timed plan with no controller at all.
 //! `examples/dag_pipeline.rs` and `examples/diamond_dag.rs` build their
 //! topologies from `examples/configs/*.conf` and check exact output
 //! equivalence against sequential references while every stage
 //! reconfigures mid-run (`integration_dag` additionally proves
-//! config-built ≡ hand-built); `bench_q7_dag` drives the diamond under
-//! a rate step with [`elastic::DagController`] dividing a global core
-//! budget by per-stage backlog.
+//! config-built ≡ hand-built ≡ handle-scripted); `bench_q7_dag` drives
+//! the diamond under a rate step with [`elastic::DagController`]
+//! dividing a global core budget by per-stage backlog.
+//!
+//! ## Drive a live job from your own code
+//! The harness entry points are conveniences, not the API. Your code
+//! can own a running topology directly (see `examples/quickstart.rs`
+//! and `examples/diamond_dag.rs` for compiled versions of this flow):
+//!
+//! ```text
+//! let handle = Job::new(pipeline, source)        // any PacedSource
+//!     .with_config(LaunchConfig { schedule, time_scale, ..Default::default() })
+//!     .launch()?;                                // feed/drain/sampling move behind it
+//! let m = handle.sample();                       // JobMetrics: backlog, Π, rates, latency
+//! let ticket = handle.scale(2, 3);               // stage 2 → 3 instances, live
+//! let ms = ticket.wait(timeout);                 // measured reconfig latency (<40 ms claim)
+//! handle.set_rate(8_000.0);                      // retune the offered load
+//! handle.await_quiesce();                        // feed done, egress quiet
+//! let outcome = handle.shutdown();               // samples, reconfigs, tickets
+//! ```
+//!
+//! Anything that *decides* — thresholds, models, schedules — is a
+//! [`harness::policy::JobPolicy`]: it reads [`harness::JobMetrics`] and
+//! calls `scale`/`set_rate`, which is exactly how the built-in
+//! controllers are wired in.
 //!
 //! ## Quickstart
 //! See `examples/quickstart.rs`: build an `O+`, wrap it in a VSN engine,

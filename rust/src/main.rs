@@ -106,6 +106,30 @@ fn cmd_run_job(cfg: &Config, budget_ms: Option<u64>) {
         r.latency_p50_us as f64 / 1e3,
         r.latency_mean_us / 1e3
     );
+    // per-reconfig latencies, straight off the handle's tickets (scripted
+    // [schedule.*] steps and [elastic] controller decisions alike)
+    if !outcome.tickets.is_empty() {
+        println!("\n  reconfigs (measured via ReconfigTicket):");
+        for t in &outcome.tickets {
+            let stage = outcome
+                .stage_names
+                .get(t.stage())
+                .map(String::as_str)
+                .unwrap_or("?");
+            match (t.epoch(), t.latency_ms()) {
+                (Some(e), Some(ms)) => {
+                    let verdict = if ms < 40.0 { " (< 40 ms)" } else { "" };
+                    println!("    stage {stage:<12} epoch {e}: {ms:.2} ms{verdict}");
+                }
+                (e, _) => {
+                    let e = e.map(|v| v.to_string()).unwrap_or_else(|| "-".into());
+                    println!(
+                        "    stage {stage:<12} epoch {e}: unresolved (issued too close to EOS)"
+                    );
+                }
+            }
+        }
+    }
 
     // BENCH_<job>.json: the job's machine-readable perf record
     let slug: String = outcome
@@ -145,6 +169,26 @@ fn cmd_run_job(cfg: &Config, budget_ms: Option<u64>) {
         })
         .collect();
     rep.set("stage_stats", Json::Arr(stage_objs));
+    // per-reconfig latencies sourced from the run's ReconfigTickets
+    let ticket_objs: Vec<Json> = outcome
+        .tickets
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                (
+                    "stage",
+                    outcome
+                        .stage_names
+                        .get(t.stage())
+                        .map(|s| Json::from(s.as_str()))
+                        .unwrap_or(Json::Null),
+                ),
+                ("epoch", t.epoch().map(Json::from).unwrap_or(Json::Null)),
+                ("ms", t.latency_ms().map(Json::from).unwrap_or(Json::Null)),
+            ])
+        })
+        .collect();
+    rep.set("reconfigs", Json::Arr(ticket_objs));
     match rep.write() {
         Ok(p) => println!("  json: {}", p.display()),
         Err(e) => eprintln!("  BENCH_{slug}.json write failed: {e}"),

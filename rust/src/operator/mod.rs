@@ -78,9 +78,18 @@ impl<'a, Out> Ctx<'a, Out> {
     /// contract is `t_out.τ ← t_in.τ` (§2.1), not the window boundary.
     /// The caller must keep `ts` ≥ every timestamp it already emitted
     /// this epoch (true for τ-preserving maps fed a sorted stream), or
-    /// downstream per-source sortedness breaks.
+    /// downstream per-source sortedness breaks. Checked within the
+    /// emission buffer: a regression would silently corrupt the
+    /// downstream gate's merge order, so it fails loudly in debug builds
+    /// instead.
     #[inline]
     pub fn emit_at(&mut self, ts: EventTime, payload: Out) {
+        debug_assert!(
+            self.buf.last().map_or(true, |prev| ts >= prev.ts),
+            "emit_at: ts {ts} regresses behind ts {} already buffered — \
+             the per-source sortedness contract is broken",
+            self.buf.last().map(|p| p.ts).unwrap_or_default(),
+        );
         self.buf.push(Tuple { ts, kind: Kind::Data, input: 0, ingest_us: self.ingest_us, payload });
     }
 

@@ -7,10 +7,11 @@
 //!   sharing/sorting bottleneck.
 
 use crate::operator::aggregate::{count_per_key_op, CountPerKey, FnAggLogic};
+use crate::operator::map::{map_stage_op, MapLogic, MapStageLogic};
 use crate::operator::state::WindowSet;
 use crate::operator::{Ctx, OperatorDef, OperatorLogic, WindowType};
 use crate::time::{WindowSpec, DELTA};
-use crate::tuple::{Key, Tuple};
+use crate::tuple::{Key, Payload, Tuple};
 use crate::workloads::tweets::Tweet;
 
 /// Operator 2: longest tweet (in chars) per hashtag per window.
@@ -90,6 +91,34 @@ pub fn forward_op<P: crate::tuple::Payload>(n: usize) -> OperatorDef<ForwardLogi
     )
 }
 
+/// Identity map for the registry's `forward` stage: emit every input
+/// payload unchanged, τ preserved. Unlike [`ForwardLogic`] (Operator 6,
+/// which deliberately re-emits per *instance* to measure the data
+/// sharing/sorting bottleneck), this forwards each tuple exactly once —
+/// the cheap stateless stage schedule demos scale up and down.
+pub struct IdentityMap<P>(std::marker::PhantomData<fn(P) -> P>);
+
+impl<P> Default for IdentityMap<P> {
+    fn default() -> Self {
+        IdentityMap(std::marker::PhantomData)
+    }
+}
+
+impl<P: Payload> MapLogic for IdentityMap<P> {
+    type In = P;
+    type Out = P;
+
+    fn flat_map(&self, t: &Tuple<P>, emit: &mut dyn FnMut(P)) {
+        emit(t.payload.clone());
+    }
+}
+
+/// Deploy the identity forward as an elastic Map stage (the registry's
+/// `forward` operator; `lb_keys` synthetic routing keys, use ≫ max Π).
+pub fn forward_stage_op<P: Payload>(lb_keys: u64) -> OperatorDef<MapStageLogic<IdentityMap<P>>> {
+    map_stage_op("forward", IdentityMap::default(), lb_keys)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +148,22 @@ mod tests {
         }
         // each of the 10 tuples forwarded by each of 2 instances
         assert_eq!(out.len(), 20);
+    }
+
+    #[test]
+    fn identity_forward_stage_emits_each_tuple_once_with_ts() {
+        let def = forward_stage_op::<u32>(16);
+        let mut core =
+            OperatorCore::new(def, 0, SharedState::private(), OperatorMetrics::new(1));
+        let f_mu = Mapper::hash_mod(1);
+        let mut out: Vec<(i64, u32)> = Vec::new();
+        for ts in 1..=5i64 {
+            let t = Tuple::data(ts, ts as u32 * 10);
+            let mut sink = |o: Tuple<u32>| out.push((o.ts, o.payload));
+            let mut ctx = Ctx::new(&mut sink);
+            core.process(&t, &f_mu, &mut ctx);
+        }
+        assert_eq!(out, vec![(1, 10), (2, 20), (3, 30), (4, 40), (5, 50)]);
     }
 
     #[test]

@@ -92,9 +92,44 @@ impl RateSchedule {
     }
 }
 
+/// Parse timed steps `"<second> -> <value>"` (the arrow idiom shared
+/// with `[topology] edges`) into (second, value) pairs sorted by second.
+/// Used by the `[schedule.<stage>]` scale/rate steps.
+pub fn parse_steps(items: &[String]) -> Result<Vec<(u32, f64)>, String> {
+    let mut out = Vec::with_capacity(items.len());
+    for it in items {
+        let (at, val) = it
+            .split_once("->")
+            .ok_or_else(|| format!("expected `<second> -> <value>`, got `{it}`"))?;
+        let at: u32 = at
+            .trim()
+            .parse()
+            .map_err(|_| format!("`{it}`: the part before `->` must be an event second"))?;
+        let val: f64 = val
+            .trim()
+            .parse()
+            .map_err(|_| format!("`{it}`: the part after `->` must be a number"))?;
+        if !val.is_finite() {
+            return Err(format!("`{it}`: value must be finite"));
+        }
+        out.push((at, val));
+    }
+    out.sort_by_key(|&(at, _)| at);
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parse_steps_sorts_and_rejects_garbage() {
+        let ok = parse_steps(&["10 -> 2000".into(), "3 -> 500.5".into()]).unwrap();
+        assert_eq!(ok, vec![(3, 500.5), (10, 2000.0)]);
+        assert!(parse_steps(&["10: 2000".into()]).is_err(), "missing arrow");
+        assert!(parse_steps(&["x -> 2000".into()]).is_err(), "bad second");
+        assert!(parse_steps(&["1 -> fast".into()]).is_err(), "bad value");
+    }
 
     #[test]
     fn q5_phase_bounds() {

@@ -30,6 +30,7 @@ use crate::workloads::nyse::{
     hedge_join_op, left_leg_op, right_leg_op, trade_fanout_op, trade_filter_op, HedgeOut,
     NyseConfig, Trade, TradeStream,
 };
+use crate::workloads::ops::{forward_stage_op, paircount_op};
 use crate::workloads::tweets::{tokenize_op, word_count_stage_op, Tweet, TweetGen, TweetGenConfig};
 use std::fmt;
 use std::sync::Arc;
@@ -271,11 +272,14 @@ pub struct StageParams {
     pub lb_keys: u64,
     /// Round-robin key count of ScaleJoin stages.
     pub n_keys: u64,
+    /// Word-pair distance bound B of `pair-count` (Q1's L/M/H
+    /// duplication levels: 3 / 10 / large).
+    pub pair_bound: usize,
 }
 
 impl Default for StageParams {
     fn default() -> Self {
-        StageParams { ws_ms: 1_000, wa_ms: 1_000, lb_keys: 64, n_keys: 32 }
+        StageParams { ws_ms: 1_000, wa_ms: 1_000, lb_keys: 64, n_keys: 32, pair_bound: 10 }
     }
 }
 
@@ -289,9 +293,14 @@ type MakeFn = fn(
 /// One named operator the declarative layer can instantiate.
 pub struct OperatorEntry {
     pub name: &'static str,
-    /// Payload kind consumed / produced (edge type checking).
-    pub input: PayloadKind,
-    pub output: PayloadKind,
+    /// Payload kind consumed (edge type checking). `None` marks a
+    /// payload-polymorphic operator (`forward`) that adapts to whatever
+    /// its upstream produces — [`crate::engine::job::JobSpec`] resolves
+    /// the concrete kind per topology, so such an operator cannot be a
+    /// source stage.
+    pub input: Option<PayloadKind>,
+    /// Payload kind produced; `None` = same as the resolved input kind.
+    pub output: Option<PayloadKind>,
     pub about: &'static str,
     make: MakeFn,
 }
@@ -400,56 +409,97 @@ fn make_word_count(
     add_node(b, wrap_op(word_count_stage_op(WindowSpec::new(p.wa_ms, p.ws_ms))), opts, ups)
 }
 
+fn make_forward(
+    p: &StageParams,
+    b: &mut DagBuilder<JobPayload>,
+    opts: VsnOptions,
+    ups: &[NodeHandle<JobPayload>],
+) -> NodeHandle<JobPayload> {
+    // natively JobPayload → JobPayload: no DynOp re-typing needed, the
+    // identity forwards whatever variant flows through
+    add_node(b, forward_stage_op::<JobPayload>(p.lb_keys), opts, ups)
+}
+
+fn make_pair_count(
+    p: &StageParams,
+    b: &mut DagBuilder<JobPayload>,
+    opts: VsnOptions,
+    ups: &[NodeHandle<JobPayload>],
+) -> NodeHandle<JobPayload> {
+    add_node(
+        b,
+        wrap_op(paircount_op(WindowSpec::new(p.wa_ms, p.ws_ms), p.pair_bound)),
+        opts,
+        ups,
+    )
+}
+
 /// Every operator a job config can name.
 pub const OPERATORS: &[OperatorEntry] = &[
     OperatorEntry {
         name: "trade-filter",
-        input: PayloadKind::Trade,
-        output: PayloadKind::Trade,
+        input: Some(PayloadKind::Trade),
+        output: Some(PayloadKind::Trade),
         about: "drop trades whose previous-day average is zero",
         make: make_trade_filter,
     },
     OperatorEntry {
         name: "trade-fanout",
-        input: PayloadKind::Trade,
-        output: PayloadKind::TradePair,
+        input: Some(PayloadKind::Trade),
+        output: Some(PayloadKind::TradePair),
         about: "materialize both join sides of every trade (self-join fan-out)",
         make: make_trade_fanout,
     },
     OperatorEntry {
         name: "left-leg",
-        input: PayloadKind::Trade,
-        output: PayloadKind::TradePair,
+        input: Some(PayloadKind::Trade),
+        output: Some(PayloadKind::TradePair),
         about: "materialize the LEFT join side (diamond branch)",
         make: make_left_leg,
     },
     OperatorEntry {
         name: "right-leg",
-        input: PayloadKind::Trade,
-        output: PayloadKind::TradePair,
+        input: Some(PayloadKind::Trade),
+        output: Some(PayloadKind::TradePair),
         about: "materialize the RIGHT join side (diamond branch)",
         make: make_right_leg,
     },
     OperatorEntry {
         name: "hedge-join",
-        input: PayloadKind::TradePair,
-        output: PayloadKind::Hedge,
+        input: Some(PayloadKind::TradePair),
+        output: Some(PayloadKind::Hedge),
         about: "hedge band self-join (WS = ws_ms, keys = keys)",
         make: make_hedge_join,
     },
     OperatorEntry {
         name: "tweet-tokenize",
-        input: PayloadKind::Tweet,
-        output: PayloadKind::Word,
+        input: Some(PayloadKind::Tweet),
+        output: Some(PayloadKind::Word),
         about: "one output per distinct word of the tweet",
         make: make_tweet_tokenize,
     },
     OperatorEntry {
         name: "word-count",
-        input: PayloadKind::Word,
-        output: PayloadKind::WordCount,
+        input: Some(PayloadKind::Word),
+        output: Some(PayloadKind::WordCount),
         about: "windowed count per word (WS = ws_ms, WA = wa_ms)",
         make: make_word_count,
+    },
+    OperatorEntry {
+        name: "forward",
+        input: None,
+        output: None,
+        about: "forward every tuple unchanged (payload-polymorphic; \
+                cheap stateless stage for schedule demos)",
+        make: make_forward,
+    },
+    OperatorEntry {
+        name: "pair-count",
+        input: Some(PayloadKind::Tweet),
+        output: Some(PayloadKind::WordCount),
+        about: "windowed count per word pair within distance pair_bound \
+                (WS = ws_ms, WA = wa_ms)",
+        make: make_pair_count,
     },
 ];
 
@@ -530,7 +580,45 @@ mod tests {
         }
         assert!(lookup("no-such-op").is_none());
         let j = lookup("hedge-join").unwrap();
-        assert_eq!((j.input, j.output), (PayloadKind::TradePair, PayloadKind::Hedge));
+        assert_eq!((j.input, j.output), (Some(PayloadKind::TradePair), Some(PayloadKind::Hedge)));
+        // forward is the one payload-polymorphic entry: kind resolved per
+        // topology by JobSpec
+        let f = lookup("forward").unwrap();
+        assert_eq!((f.input, f.output), (None, None));
+        let p = lookup("pair-count").unwrap();
+        assert_eq!((p.input, p.output), (Some(PayloadKind::Tweet), Some(PayloadKind::WordCount)));
+    }
+
+    #[test]
+    fn pair_count_counts_pairs_within_the_bound() {
+        use crate::workloads::tweets::paircount_keys;
+        let def = wrap_op(crate::workloads::ops::paircount_op(WindowSpec::new(100, 100), 10));
+        let mut core = OperatorCore::new(def, 0, SharedState::private(), OperatorMetrics::new(1));
+        let f_mu = Mapper::hash_mod(1);
+        let tweet = Tweet {
+            user: 0,
+            words: Arc::new(vec![3, 7, 9]),
+            hashtags: Arc::new(vec![]),
+            chars: 18,
+        };
+        let t = into_job_tuple(Tuple::data(1, tweet.clone()));
+        let done = into_job_tuple(Tuple::<Tweet>::heartbeat(500));
+        let mut out: Vec<(Key, u64)> = Vec::new();
+        for tup in [t, done] {
+            let mut sink = |o: Tuple<JobPayload>| match o.payload {
+                JobPayload::WordCount(c) => out.push(c),
+                other => panic!("pair-count must emit word counts, got {other:?}"),
+            };
+            let mut ctx = Ctx::new(&mut sink);
+            core.process(&tup, &f_mu, &mut ctx);
+        }
+        // 3 distinct words → 3 pairs, each counted once in window [0,100)
+        let mut want = Vec::new();
+        paircount_keys(10)(&Tuple::data(1, tweet), &mut want);
+        out.sort_unstable();
+        let mut want: Vec<(Key, u64)> = want.into_iter().map(|k| (k, 1)).collect();
+        want.sort_unstable();
+        assert_eq!(out, want);
     }
 
     #[test]
