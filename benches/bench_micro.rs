@@ -2,18 +2,23 @@
 //! other bench — headlined by the per-tuple vs batched ESG data-plane
 //! comparison (§Perf; the acceptance gate is batched ≥ 2× per-tuple) —
 //! and the PJRT-offload batch-size sweep (the L1↔L3 crossover study
-//! referenced by DESIGN.md §Hardware-Adaptation).
+//! referenced by DESIGN.md §Hardware-Adaptation). The gate-placement
+//! experiment measures cross-thread ESG throughput under the best vs the
+//! worst placement the machine offers (NUMA local-vs-cross on a
+//! multi-socket box) — the data behind `[placement]`.
 //!
 //! `--budget-ms N` bounds each component measurement (CI smoke uses a
 //! tiny budget so bench bit-rot fails the pipeline). Writes
 //! `BENCH_micro.json` next to the human output.
 
-use stretch::cli::OrExit;
 use std::time::Instant;
-use stretch::metrics::{BenchReport, Json};
+use stretch::cli::OrExit;
 use stretch::metrics::reporter::Table;
-use stretch::runtime::{artifacts_available, JoinKernel};
-use stretch::sim::calibrate::{calibrate_with, measure_gate_batch_cost, GATE_BATCH};
+use stretch::metrics::{BenchReport, Json};
+use stretch::runtime::{artifacts_available, CoreMap, JoinKernel};
+use stretch::sim::calibrate::{
+    calibrate_with, measure_gate_batch_cost, measure_gate_cost_threaded, GATE_BATCH,
+};
 use stretch::util::Rng;
 
 fn offload_sweep(table: &mut Table) {
@@ -58,6 +63,44 @@ fn offload_sweep(table: &mut Table) {
     }
 }
 
+/// Outcome of the gate-placement experiment (the tentpole's measurable
+/// claim: reader locality matters on the gate hot path).
+struct PlacementResult {
+    /// What the machine could express: `local_vs_cross` (≥ 2 sockets),
+    /// `pinned_vs_unpinned` (≥ 2 cores, one socket), or `single_core`.
+    mode: &'static str,
+    sockets: usize,
+    cores: usize,
+    local_tps: f64,
+    remote_tps: f64,
+}
+
+/// Cross-thread gate throughput under the best placement the machine
+/// offers vs the worst (or no) placement. On a multi-socket box this is
+/// the NUMA local-vs-cross comparison the tentpole is about; on a
+/// single-socket box pinned-vs-unpinned still shows the scheduler-churn
+/// cost; a 1-core container degrades to one unpinned probe.
+fn placement_experiment(budget_ms: u64) -> PlacementResult {
+    let map = CoreMap::discover();
+    let ms = budget_ms.max(10);
+    let (mode, local_tps, remote_tps) = if map.sockets() >= 2 {
+        let s0 = map.cores_on(0);
+        let s1 = map.cores_on(1);
+        let local = measure_gate_cost_threaded(ms, Some(s0[0]), Some(s0[1 % s0.len()]));
+        let remote = measure_gate_cost_threaded(ms, Some(s0[0]), Some(s1[0]));
+        ("local_vs_cross", local, remote)
+    } else if map.len() >= 2 {
+        let cores = map.cores_on(0);
+        let pinned = measure_gate_cost_threaded(ms, Some(cores[0]), Some(cores[1]));
+        let floating = measure_gate_cost_threaded(ms, None, None);
+        ("pinned_vs_unpinned", pinned, floating)
+    } else {
+        let tput = measure_gate_cost_threaded(ms, None, None);
+        ("single_core", tput, tput)
+    };
+    PlacementResult { mode, sockets: map.sockets(), cores: map.len(), local_tps, remote_tps }
+}
+
 fn main() {
     let args = stretch::cli::Cli::new("bench_micro", "per-component costs + ESG batching win")
         .opt("budget-ms", "measurement budget per component (ms)", Some("100"))
@@ -100,6 +143,18 @@ fn main() {
         format!("{:.2} ns/cmp", 1e9 / cal.cmp_per_sec),
         "the paper's c/s metric".into(),
     ]);
+    let placement = placement_experiment(budget_ms);
+    table.row(&[
+        format!("gate placement ({})", placement.mode),
+        format!("{:.1}M t/s local", placement.local_tps / 1e6),
+        format!("{:.1}M t/s remote", placement.remote_tps / 1e6),
+        format!(
+            "{:.2}× ({} socket(s), {} core(s))",
+            placement.local_tps / placement.remote_tps.max(1.0),
+            placement.sockets,
+            placement.cores
+        ),
+    ]);
     if !args.flag("no-offload") {
         offload_sweep(&mut table);
     }
@@ -128,7 +183,17 @@ fn main() {
         .set("esg_batch_sweep", Json::Arr(sweep))
         .set("spsc_tps", 1.0 / cal.queue_tuple_s)
         .set("mergesort_tps", 1.0 / cal.sort_tuple_s)
-        .set("cmp_per_s", cal.cmp_per_sec);
+        .set("cmp_per_s", cal.cmp_per_sec)
+        .set("placement_mode", placement.mode)
+        .set("placement_sockets", placement.sockets)
+        .set("placement_cores", placement.cores)
+        .set("gate_local_tps", placement.local_tps)
+        .set("gate_remote_tps", placement.remote_tps)
+        .set("gate_local_speedup", placement.local_tps / placement.remote_tps.max(1.0))
+        .set(
+            "machine",
+            std::env::var("STRETCH_BENCH_MACHINE").unwrap_or_else(|_| "unnamed".into()),
+        );
     match report.write() {
         Ok(p) => println!("\njson: {}", p.display()),
         Err(e) => eprintln!("\nBENCH_micro.json write failed: {e}"),

@@ -132,6 +132,10 @@ fn main() {
     }
     report.set("total_reconfigs", total_reconfigs as u64);
     report.set("peak_total_threads", peak_total_threads as u64);
+    report.set(
+        "machine",
+        std::env::var("STRETCH_BENCH_MACHINE").unwrap_or_else(|_| "unnamed".into()),
+    );
     println!(
         "\n  {} matches at the egress, e2e p50 {} µs, {total_reconfigs} reconfigs, \
          peak Σ threads {peak_total_threads} (budget {cores})",

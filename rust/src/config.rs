@@ -70,6 +70,44 @@ impl BatchTuning {
     }
 }
 
+/// Core/NUMA placement knobs (see `runtime::placement`): parsed from a
+/// config's `[placement]` section. Off by default — pinning is a win on
+/// dedicated machines and a hazard on oversubscribed shared runners.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacementConfig {
+    /// Master switch: compute a `PlacementPlan` for the job and pin
+    /// threads / first-touch gate memory accordingly.
+    pub enabled: bool,
+    /// Pin the `JobHandle` runtime thread (feed/drain/sampling) to the
+    /// plan's runtime core.
+    pub pin_runtime: bool,
+    /// Pin worker threads and run gate first-touch initialization on
+    /// the owning stage's socket.
+    pub pin_workers: bool,
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        PlacementConfig { enabled: false, pin_runtime: true, pin_workers: true }
+    }
+}
+
+impl PlacementConfig {
+    /// Read the `[placement]` section (missing keys keep defaults).
+    ///
+    /// Adding a key here? Also register it in
+    /// `harness::JOB_SECTION_KEYS`, or job configs using it will be
+    /// rejected as typos.
+    pub fn from_config(c: &Config) -> Self {
+        let d = PlacementConfig::default();
+        PlacementConfig {
+            enabled: c.bool_or("placement.enabled", d.enabled),
+            pin_runtime: c.bool_or("placement.pin_runtime", d.pin_runtime),
+            pin_workers: c.bool_or("placement.pin_workers", d.pin_workers),
+        }
+    }
+}
+
 /// Parsed configuration value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ConfigValue {
@@ -446,6 +484,18 @@ rate_scale = 1.5
         let c = Config::parse("[batch]\nworker_min = 64\nworker_max = 4").unwrap();
         let t = BatchTuning::from_config(&c);
         assert_eq!((t.worker_min, t.worker_max), (64, 64));
+    }
+
+    #[test]
+    fn placement_defaults_and_overrides() {
+        let d = PlacementConfig::from_config(&Config::parse("").unwrap());
+        assert_eq!(d, PlacementConfig::default());
+        assert!(!d.enabled);
+        let c = Config::parse("[placement]\nenabled = true\npin_runtime = false").unwrap();
+        let p = PlacementConfig::from_config(&c);
+        assert!(p.enabled);
+        assert!(!p.pin_runtime);
+        assert!(p.pin_workers);
     }
 
     #[test]

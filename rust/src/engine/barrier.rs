@@ -6,6 +6,7 @@
 //! count — membership never changes *while* a barrier is pending
 //! (reconfigurations are serialized by the epoch protocol, §6).
 
+use crate::util::Backoff;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Duration;
 
@@ -39,17 +40,11 @@ impl EpochBarrier {
             self.generation.store(gen + 1, Ordering::Release);
             true
         } else {
-            let mut spins = 0u32;
+            // spin → yield → short sleeps: on 1-core boxes sleeping lets
+            // the stragglers run (the shared spin-then-yield policy)
+            let mut idle = Backoff::new(Duration::from_micros(50));
             while self.generation.load(Ordering::Acquire) == gen {
-                spins += 1;
-                if spins < 64 {
-                    std::hint::spin_loop();
-                } else if spins < 256 {
-                    std::thread::yield_now();
-                } else {
-                    // 1-core boxes: sleeping lets the stragglers run
-                    std::thread::sleep(Duration::from_micros(50));
-                }
+                idle.snooze();
             }
             false
         }
@@ -82,7 +77,8 @@ mod tests {
                 std::thread::spawn(move || b.wait(n))
             })
             .collect();
-        let leaders = handles.into_iter().filter(|h| false || true).map(|h| h.join().unwrap()).filter(|&l| l).count();
+        let leaders =
+            handles.into_iter().map(|h| h.join().unwrap()).filter(|&l| l).count();
         assert_eq!(leaders, 1);
         assert_eq!(b.generation(), 1);
     }

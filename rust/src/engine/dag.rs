@@ -255,6 +255,9 @@ struct NodeDecl<In: Payload + Default> {
 pub struct DagBuilder<In: Payload + Default> {
     nodes: Vec<NodeDecl<In>>,
     clock: EngineClock,
+    /// Per-node spawn-thread affinity (declaration order): `build()` runs
+    /// node `i`'s spawn closure pinned to `spawn_cores[i]` when set.
+    spawn_cores: Vec<Option<usize>>,
 }
 
 impl<In: Payload + Default> Default for DagBuilder<In> {
@@ -265,7 +268,20 @@ impl<In: Payload + Default> Default for DagBuilder<In> {
 
 impl<In: Payload + Default> DagBuilder<In> {
     pub fn new() -> Self {
-        DagBuilder { nodes: Vec::new(), clock: EngineClock::new() }
+        DagBuilder { nodes: Vec::new(), clock: EngineClock::new(), spawn_cores: Vec::new() }
+    }
+
+    /// Pin each node's spawn closure to a core during [`build`]: gate slot
+    /// arrays and `Log` segments are allocated (and first-written) inside
+    /// those closures, so on NUMA machines first-touch places them on the
+    /// pinned core's socket. Worker threads spawned inside the closure
+    /// also inherit the mask until they re-pin themselves. Indices follow
+    /// declaration order; missing or `None` entries leave the build thread
+    /// unpinned for that node.
+    ///
+    /// [`build`]: DagBuilder::build
+    pub fn set_spawn_cores(&mut self, cores: Vec<Option<usize>>) {
+        self.spawn_cores = cores;
     }
 
     /// Number of declared nodes so far.
@@ -476,7 +492,15 @@ impl<In: Payload + Default> DagBuilder<In> {
         };
         let mut stages: Vec<Box<dyn StageHandle>> = Vec::with_capacity(n);
         let mut ingress: Vec<StretchIngress<In>> = Vec::new();
+        let spawn_cores = self.spawn_cores;
         for (i, node) in self.nodes.into_iter().enumerate() {
+            // first-touch: run the spawn closure (gate + log allocation)
+            // on the node's assigned core; restored on drop each iteration
+            let _pin = spawn_cores
+                .get(i)
+                .copied()
+                .flatten()
+                .map(crate::runtime::placement::PinGuard::pin);
             let (handle, node_ingress) = (node.spawn)(&mut ctx, &plans[i]);
             stages.push(handle);
             ingress.extend(node_ingress);
@@ -531,6 +555,7 @@ fn claim_out_gate<P: Payload + Default>(
 mod tests {
     use super::*;
     use crate::operator::map::{map_stage_op, MapLogic, MapStageLogic};
+    use crate::util::Backoff;
 
     struct IdMap;
     impl MapLogic for IdMap {
@@ -574,12 +599,14 @@ mod tests {
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
         let mut buf: Vec<Tuple<u64>> = Vec::new();
         let mut last_ts = i64::MIN;
+        let mut idle = Backoff::active();
         while got < 2 * n && std::time::Instant::now() < deadline {
             buf.clear();
             if reader.get_batch(&mut buf, 128) == 0 {
-                std::thread::sleep(std::time::Duration::from_micros(100));
+                idle.snooze();
                 continue;
             }
+            idle.reset();
             for t in &buf {
                 if t.kind.is_data() {
                     assert!(t.ts >= last_ts, "fan-in merge must stay ts-sorted");
@@ -653,11 +680,15 @@ mod tests {
         for mut r in p.egress.drain(..) {
             let mut got = 0;
             let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+            let mut idle = Backoff::active();
             while got < 100 && std::time::Instant::now() < deadline {
                 match r.get() {
-                    Some(t) if t.kind.is_data() => got += 1,
-                    Some(_) => {}
-                    None => std::thread::sleep(std::time::Duration::from_micros(100)),
+                    Some(t) if t.kind.is_data() => {
+                        got += 1;
+                        idle.reset();
+                    }
+                    Some(_) => idle.reset(),
+                    None => idle.snooze(),
                 }
             }
             assert_eq!(got, 100, "each sink sees the full stream");

@@ -44,6 +44,7 @@ use crate::engine::dag::{DagBuilder, DagError, NodeHandle};
 use crate::engine::pipeline::Pipeline;
 use crate::engine::vsn::VsnOptions;
 use crate::harness::HarnessError;
+use crate::runtime::placement::{CoreMap, PlacementError, PlacementPlan, StageRequest};
 use crate::workloads::registry::{self, JobPayload, PayloadKind, StageParams};
 use std::collections::BTreeMap;
 use std::fmt;
@@ -189,6 +190,12 @@ pub struct StageSpec {
     pub upstreams: usize,
     /// Egress reader ends (sink stages only).
     pub egress_readers: usize,
+    /// Explicit kernel core ids for this stage's workers (`cores = [..]`
+    /// in `[stage.<name>]`) — validated against the machine's
+    /// [`CoreMap`] when a placement plan is computed.
+    pub cores: Vec<usize>,
+    /// Explicit socket index for this stage (`socket = N`).
+    pub socket: Option<usize>,
     /// Operator parameters (`ws_ms`, `wa_ms`, `lb_keys`, `keys`).
     pub params: StageParams,
 }
@@ -237,6 +244,29 @@ fn positive(key: String, v: i64) -> Result<usize, JobError> {
         Ok(v as usize)
     } else {
         Err(JobError::BadValue { key, msg: format!("must be ≥ 1, got {v}") })
+    }
+}
+
+/// Read an optional list of kernel core ids (`cores = [0, 4]`); absent →
+/// empty. Core ids must be ≥ 0 — existence on THIS machine is checked
+/// later, against a [`CoreMap`], so parse errors stay machine-independent.
+fn core_list(c: &Config, key: String) -> Result<Vec<usize>, JobError> {
+    match c.get(&key) {
+        None => Ok(Vec::new()),
+        Some(ConfigValue::List(xs)) => xs
+            .iter()
+            .map(|x| match x {
+                ConfigValue::Int(v) if *v >= 0 => Ok(*v as usize),
+                other => Err(JobError::BadValue {
+                    key: key.clone(),
+                    msg: format!("expected a core id ≥ 0, got `{other}`"),
+                }),
+            })
+            .collect(),
+        Some(other) => Err(JobError::BadValue {
+            key,
+            msg: format!("expected a list of core ids, got `{other}`"),
+        }),
     }
 }
 
@@ -299,6 +329,8 @@ impl JobSpec {
             "worker_batch",
             "upstreams",
             "egress_readers",
+            "cores",
+            "socket",
             "ws_ms",
             "wa_ms",
             "lb_keys",
@@ -370,6 +402,17 @@ impl JobSpec {
             }
             let ws_ms = positive(key("ws_ms"), int_field(c, key("ws_ms"), 1_000)?)? as i64;
             let wa_ms = positive(key("wa_ms"), int_field(c, key("wa_ms"), ws_ms)?)? as i64;
+            let cores = core_list(c, key("cores"))?;
+            let socket = match c.get(&key("socket")) {
+                None => None,
+                Some(ConfigValue::Int(v)) if *v >= 0 => Some(*v as usize),
+                Some(other) => {
+                    return Err(JobError::BadValue {
+                        key: key("socket"),
+                        msg: format!("expected a socket index ≥ 0, got `{other}`"),
+                    })
+                }
+            };
             stages.push(StageSpec {
                 name: n.clone(),
                 operator,
@@ -389,6 +432,8 @@ impl JobSpec {
                     key("egress_readers"),
                     int_field(c, key("egress_readers"), 1)?,
                 )?,
+                cores,
+                socket,
                 params: StageParams {
                     ws_ms,
                     wa_ms,
@@ -539,13 +584,55 @@ impl JobSpec {
         })
     }
 
+    /// Map this job onto a machine: one [`StageRequest`] per stage in
+    /// build order, workers = `max` (pooled instances are spawned during
+    /// the same build and inherit the build thread's affinity mask, so
+    /// every slot needs a core). Explicit `cores`/`socket` stage keys
+    /// are validated against `map` here — a core id that parsed fine can
+    /// still not exist on THIS machine.
+    pub fn placement_plan(&self, map: &CoreMap) -> Result<PlacementPlan, JobError> {
+        let pos: BTreeMap<&str, usize> =
+            self.stages.iter().enumerate().map(|(i, s)| (s.name.as_str(), i)).collect();
+        let reqs: Vec<StageRequest> = self
+            .stages
+            .iter()
+            .map(|s| StageRequest {
+                name: s.name.clone(),
+                workers: s.max,
+                cores: s.cores.clone(),
+                socket: s.socket,
+                upstreams: s.inputs.iter().map(|i| pos[i.as_str()]).collect(),
+            })
+            .collect();
+        PlacementPlan::assign(map, &reqs).map_err(|e| {
+            let key = match &e {
+                PlacementError::UnknownCore { stage, .. } => format!("stage.{stage}.cores"),
+                PlacementError::UnknownSocket { stage, .. } => format!("stage.{stage}.socket"),
+            };
+            JobError::BadValue { key, msg: e.to_string() }
+        })
+    }
+
     /// Resolve every stage through the operator registry and build the
     /// running topology — one [`DagBuilder`] pass, the same construction
     /// path hand-built topologies use.
     pub fn build(&self) -> Result<BuiltJob, JobError> {
+        self.build_planned(None)
+    }
+
+    /// [`build`](Self::build), placing threads and gate memory per
+    /// `plan` (from [`placement_plan`](Self::placement_plan)): each
+    /// stage's workers self-pin to their planned cores, and the build
+    /// runs each stage's spawn — including first-touch allocation of its
+    /// gate slot/`Log` arrays — pinned to a core of the owning socket.
+    pub fn build_planned(&self, plan: Option<&PlacementPlan>) -> Result<BuiltJob, JobError> {
         let mut b = DagBuilder::<JobPayload>::new();
+        if let Some(p) = plan {
+            debug_assert_eq!(p.stages.len(), self.stages.len(), "plan/spec stage mismatch");
+            b.set_spawn_cores(p.stages.iter().map(|sp| Some(sp.touch_core)).collect());
+        }
         let mut handles: BTreeMap<&str, NodeHandle<JobPayload>> = BTreeMap::new();
-        for s in &self.stages {
+        for (i, s) in self.stages.iter().enumerate() {
             let entry = registry::lookup(&s.operator).expect("JobSpec is validated");
             let ups: Vec<NodeHandle<JobPayload>> =
                 s.inputs.iter().map(|i| handles[i.as_str()]).collect();
@@ -556,6 +643,9 @@ impl JobSpec {
                 egress_readers: s.egress_readers,
                 gate_capacity: s.gate_capacity,
                 worker_batch: s.worker_batch,
+                worker_cores: plan
+                    .map(|p| p.stages[i].worker_cores.clone())
+                    .unwrap_or_default(),
                 ..Default::default()
             };
             let h = entry.instantiate(&s.params, &mut b, opts, &ups);
@@ -851,6 +941,85 @@ operator = "hedge-join"
         )
         .unwrap_err();
         assert!(matches!(err, JobError::BadValue { .. }), "{err}");
+    }
+
+    #[test]
+    fn placement_keys_round_trip_and_plan_against_a_fixture_map() {
+        let spec = parse(
+            r#"
+[topology]
+stages = ["a", "b"]
+edges = ["a -> b"]
+[stage.a]
+operator = "trade-filter"
+max = 2
+cores = [1, 0]
+[stage.b]
+operator = "left-leg"
+max = 2
+socket = 0
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.stages[0].cores, vec![1, 0]);
+        assert_eq!(spec.stages[0].socket, None);
+        assert_eq!(spec.stages[1].cores, Vec::<usize>::new());
+        assert_eq!(spec.stages[1].socket, Some(0));
+        let plan = spec.placement_plan(&CoreMap::flat(4)).unwrap();
+        assert_eq!(plan.stages[0].worker_cores, vec![1, 0]);
+        assert_eq!(plan.stages[1].socket, 0);
+        assert!(plan.runtime_core.is_some());
+    }
+
+    #[test]
+    fn negative_core_is_a_parse_time_error() {
+        let err = parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"trade-filter\"\ncores = [-1]",
+        )
+        .unwrap_err();
+        match err {
+            JobError::BadValue { key, .. } => assert_eq!(key, "stage.a.cores"),
+            other => panic!("{other}"),
+        }
+        let err = parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"trade-filter\"\nsocket = -2",
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::BadValue { .. }), "{err}");
+    }
+
+    #[test]
+    fn nonexistent_core_fails_the_plan_not_the_parse() {
+        let spec = parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"trade-filter\"\ncores = [9]",
+        )
+        .unwrap();
+        // parse accepts it (machine-independent)...
+        assert_eq!(spec.stages[0].cores, vec![9]);
+        // ...the plan against a 2-core machine rejects it by key
+        let err = spec.placement_plan(&CoreMap::flat(2)).unwrap_err();
+        match err {
+            JobError::BadValue { key, msg } => {
+                assert_eq!(key, "stage.a.cores");
+                assert!(msg.contains("core 9"), "{msg}");
+            }
+            other => panic!("{other}"),
+        }
+        // ...and on a big-enough machine the same spec plans fine
+        assert!(spec.placement_plan(&CoreMap::flat(16)).is_ok());
+    }
+
+    #[test]
+    fn planned_build_spawns_with_pinned_workers() {
+        // plan against the REAL machine map and build with it: threads
+        // self-pin (no-op if the kernel rejects the mask) and the
+        // topology still flows
+        let spec = parse(DIAMOND).unwrap();
+        let plan = spec.placement_plan(&CoreMap::discover()).unwrap();
+        assert_eq!(plan.stages.len(), spec.stages.len());
+        let mut built = spec.build_planned(Some(&plan)).unwrap();
+        assert_eq!(built.pipeline.depth(), 4);
+        built.pipeline.shutdown();
     }
 
     #[test]

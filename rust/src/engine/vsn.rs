@@ -53,6 +53,12 @@ pub struct VsnOptions {
     /// Tuples moved per worker gate synchronization, in and out
     /// ([`ReaderHandle::get_batch`] / [`SourceHandle::add_batch`]).
     pub worker_batch: usize,
+    /// Kernel core ids the instance threads pin themselves to (instance
+    /// id indexes the list; empty = no pinning). Cover ALL `max` slots,
+    /// not just `initial`: pooled instances spawn during the same build
+    /// and inherit the spawning thread's affinity mask otherwise. Filled
+    /// by a `runtime::placement::PlacementPlan`.
+    pub worker_cores: Vec<usize>,
 }
 
 impl Default for VsnOptions {
@@ -65,6 +71,7 @@ impl Default for VsnOptions {
             gate_capacity: 1 << 15,
             shards: crate::operator::state::DEFAULT_SHARDS,
             worker_batch: WORKER_BATCH,
+            worker_cores: Vec::new(),
         }
     }
 }
@@ -238,10 +245,16 @@ where
                 source_base: io.source_base,
                 ctrl_tag: io.ctrl_tag,
             };
+            let pin = opts.worker_cores.get(id).copied();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("{}-{id}", def.name))
-                    .spawn(move || worker.run())
+                    .spawn(move || {
+                        if let Some(core) = pin {
+                            crate::runtime::placement::pin_current(core);
+                        }
+                        worker.run()
+                    })
                     .expect("spawn instance thread"),
             );
         }

@@ -248,6 +248,10 @@ pub struct LaunchConfig {
     /// Keep every drained egress tuple for [`JobHandle::take_egress`]
     /// (exact-output tests); off by default — benches only need counts.
     pub capture_egress: bool,
+    /// Pin the job runtime thread (feed + drain + sampling) to this core.
+    /// Set by the placement plan so the drain stays NUMA-local to the
+    /// sink gates; `None` leaves the thread floating.
+    pub pin_core: Option<usize>,
 }
 
 impl Default for LaunchConfig {
@@ -261,6 +265,7 @@ impl Default for LaunchConfig {
             drain: Duration::from_millis(500),
             ingress_batch: 256,
             capture_egress: false,
+            pin_core: None,
         }
     }
 }
@@ -518,7 +523,12 @@ impl<In: Payload + Default, Out: Payload + Default> Job<In, Out> {
         let ctl = JobCtl { shared: shared.clone(), t0, time_scale: cfg.time_scale, maxes };
         let thread = std::thread::Builder::new()
             .name(format!("job-{name}"))
-            .spawn(move || runtime_loop(pipeline, source, cfg, shared, capture, t0))
+            .spawn(move || {
+                if let Some(core) = cfg.pin_core {
+                    crate::runtime::placement::pin_current(core);
+                }
+                runtime_loop(pipeline, source, cfg, shared, capture, t0)
+            })
             .expect("spawn job runtime thread");
         Ok(JobHandle { ctl, name, stage_names, captured, thread: Some(thread) })
     }

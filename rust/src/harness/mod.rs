@@ -41,13 +41,14 @@ pub use policy::{
     ScriptedScalePolicy,
 };
 
-use crate::config::{BatchTuning, Config};
+use crate::config::{BatchTuning, Config, PlacementConfig};
 use crate::elastic::{
     Controller, DagController, JoinCostModel, ProactiveController, ReactiveController, Thresholds,
 };
 use crate::engine::job::{string_list, JobError, JobSpec};
 use crate::engine::pipeline::{Pipeline, PipelineBuilder};
 use crate::engine::VsnOptions;
+use crate::runtime::placement::CoreMap;
 use crate::sim::calibrate;
 use crate::time::EventTime;
 use crate::tuple::{Payload, Tuple};
@@ -386,6 +387,7 @@ where
             drain: cfg.drain,
             ingress_batch: cfg.ingress_batch,
             capture_egress: false,
+            pin_core: None,
         })
         .launch()?;
 
@@ -566,6 +568,14 @@ const JOB_SECTION_KEYS: &[(&str, &[(&str, KeyKind)])] = &[
             ("worker_max", KeyKind::Int),
         ],
     ),
+    (
+        "placement.",
+        &[
+            ("enabled", KeyKind::Bool),
+            ("pin_runtime", KeyKind::Bool),
+            ("pin_workers", KeyKind::Bool),
+        ],
+    ),
 ];
 
 /// Validate a job config's run-level sections: unknown sections, unknown
@@ -617,7 +627,7 @@ fn check_job_section_keys(cfg: &Config) -> Result<(), JobError> {
             key: k.to_string(),
             msg: "unknown section/key for a job config (expected `name`, `[topology]`, \
                   `[stage.<name>]`, `[schedule.<name>]`, `[run]`, `[elastic]`, `[source]`, \
-                  or `[batch]`)"
+                  `[batch]`, or `[placement]`)"
                 .into(),
         });
     }
@@ -808,7 +818,16 @@ pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, Jo
         }
     }
 
-    let built = spec.build()?;
+    // `[placement]`: plan core assignments against the live topology map
+    // BEFORE building, so workers self-pin as they spawn and gate memory
+    // first-touches on the owning socket
+    let placement = PlacementConfig::from_config(cfg);
+    let plan = if placement.enabled {
+        Some(spec.placement_plan(&CoreMap::discover())?)
+    } else {
+        None
+    };
+    let built = spec.build_planned(plan.as_ref().filter(|_| placement.pin_workers))?;
     let max_ws = spec.stages.iter().map(|s| s.params.ws_ms).max().unwrap_or(1_000);
     let mut time_scale = cfg.float_or("run.time_scale", 1.0).max(1e-6);
     if let Some(ms) = budget_ms {
@@ -824,6 +843,10 @@ pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, Jo
             drain: Duration::from_millis(cfg.int_or("run.drain_ms", 500).max(0) as u64),
             ingress_batch: batch.ingress,
             capture_egress: false,
+            pin_core: plan
+                .as_ref()
+                .and_then(|p| p.runtime_core)
+                .filter(|_| placement.pin_runtime),
         })
         .launch()
         .map_err(JobError::Harness)?;
@@ -942,6 +965,46 @@ adaptive = true
     }
 
     #[test]
+    fn run_job_with_placement_enabled_pins_and_completes() {
+        // core 0 always exists (CoreMap::discover never returns an empty
+        // map), so this config is machine-independent
+        let cfg = crate::config::Config::parse(
+            r#"
+name = "wc-pinned"
+[topology]
+stages = ["tok", "count"]
+[stage.tok]
+operator = "tweet-tokenize"
+max = 2
+cores = [0]
+[stage.count]
+operator = "word-count"
+inputs = ["tok"]
+ws_ms = 500
+max = 2
+[run]
+duration_s = 2
+rate = 300
+time_scale = 4
+[placement]
+enabled = true
+"#,
+        )
+        .unwrap();
+        let out = run_job(&cfg, None).unwrap();
+        assert_eq!(out.result.stages.len(), 2);
+        assert!(
+            out.result.egress_count > 0
+                || out
+                    .result
+                    .stages
+                    .iter()
+                    .any(|s| s.samples.iter().any(|x| x.out_tps > 0.0)),
+            "no data moved through the pinned pipeline"
+        );
+    }
+
+    #[test]
     fn run_job_rejects_unknown_controller() {
         let cfg = crate::config::Config::parse(
             "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"tweet-tokenize\"\n\
@@ -973,6 +1036,8 @@ adaptive = true
         assert_eq!(bad_key("[run]\nrate = \"fast\""), "run.rate");
         assert_eq!(bad_key("[run]\nduration_s = 2.5"), "run.duration_s");
         assert_eq!(bad_key("[batch]\nadaptive = 1"), "batch.adaptive");
+        assert_eq!(bad_key("[placement]\npin_wrokers = true"), "placement.pin_wrokers");
+        assert_eq!(bad_key("[placement]\nenabled = 1"), "placement.enabled");
         // numeric widening still allowed: an int where a float is expected
         let cfg = crate::config::Config::parse(&format!(
             "{STAGES}[run]\nduration_s = 1\nrate = 200\ntime_scale = 4"

@@ -47,8 +47,20 @@
 //!   job.conf`, emitting `BENCH_<job>.json` with per-reconfig ticket
 //!   latencies — are thin clients: launch, drive policies, quiesce,
 //!   shut down.
-//! * [`runtime`] — PJRT loader/executor for the AOT-compiled kernels
-//!   (stubbed unless built with `--features pjrt`).
+//! * [`runtime`] — machine-facing services: the PJRT loader/executor for
+//!   the AOT-compiled kernels (stubbed unless built with `--features
+//!   pjrt`) and the placement-aware data plane
+//!   ([`runtime::placement`]): [`runtime::CoreMap`] discovers the
+//!   socket/core topology from sysfs, [`runtime::PlacementPlan`] assigns
+//!   stage workers, reader groups, and the runtime thread to cores so a
+//!   stage's readers stay NUMA-local to their upstream's ESG_out, and
+//!   gate slot/log arrays are first-touch-initialized on the owning
+//!   socket. Opt in per job with `[placement] enabled = true` (plus
+//!   optional per-stage `cores = [..]` / `socket = N` overrides);
+//!   everything degrades to a no-op on single-socket or non-Linux hosts.
+//!   `bench_micro` measures the local-vs-cross gate penalty and `stretch
+//!   bench-diff` gates the committed `BENCH_*.json` trajectory against
+//!   regressions.
 //! * [`workloads`] — generators for every evaluation workload (§8), plus
 //!   2-stage pipeline operator sets (tokenize → count, fan-out → join).
 //! * [`sim`] — calibrated multicore discrete-event simulator (testbed

@@ -8,6 +8,7 @@
 //! stretch run --config job.conf --budget-ms 10    # CI smoke form
 //! stretch run configs/scalejoin.toml              # classic Q3-Q6 shape
 //! stretch artifacts          # check the AOT kernel artifacts
+//! stretch bench-diff BENCH_micro.baseline.json BENCH_micro.json
 //! ```
 //!
 //! `run` dispatches on the config: a `[topology]` section makes it a
@@ -195,6 +196,25 @@ fn cmd_run_job(cfg: &Config, budget_ms: Option<u64>) {
     }
 }
 
+/// `bench-diff`: compare two `BENCH_*.json` snapshots under a tolerance
+/// factor and exit nonzero on regression — the CI perf gate
+/// (`stretch bench-diff BENCH_micro.baseline.json BENCH_micro.json`).
+fn cmd_bench_diff(baseline: &str, new: &str, tolerance: f64) {
+    match stretch::metrics::diff_files(baseline, new, tolerance) {
+        Ok(d) => {
+            println!("bench-diff {baseline} -> {new} (tolerance {tolerance}x)");
+            println!("{d}");
+            if d.is_regression() {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("bench-diff error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 /// The classic config shape (no `[topology]`): a single-stage elastic
 /// ScaleJoin experiment. `budget_ms` caps the wall-clock run by raising
 /// `time_scale`, exactly like the job path — the flag means the same
@@ -271,7 +291,8 @@ fn main() {
         "STRETCH: virtual shared-nothing stream processing (paper reproduction)",
     )
     .opt("config", "config file for `run` (same as the positional path)", None)
-    .opt("budget-ms", "cap the wall-clock run time of a job (CI smoke)", None);
+    .opt("budget-ms", "cap the wall-clock run time of a job (CI smoke)", None)
+    .opt("tolerance", "bench-diff tolerance factor before a field gates", Some("1.25"));
     let args = cli.parse().unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
@@ -279,6 +300,19 @@ fn main() {
     match args.positional().first().map(|s| s.as_str()) {
         Some("calibrate") => cmd_calibrate(),
         Some("artifacts") => cmd_artifacts(),
+        Some("bench-diff") => {
+            let (b, n) = match (args.positional().get(1), args.positional().get(2)) {
+                (Some(b), Some(n)) => (b.clone(), n.clone()),
+                _ => {
+                    eprintln!(
+                        "usage: stretch bench-diff <baseline.json> <new.json> \
+                         [--tolerance <factor>]"
+                    );
+                    std::process::exit(2);
+                }
+            };
+            cmd_bench_diff(&b, &n, args.f64_or("tolerance", 1.25).or_exit());
+        }
         Some("run") => {
             let path = args
                 .get("config")
@@ -299,7 +333,10 @@ fn main() {
             println!("  run <config>       run a declarative job ([topology] config,");
             println!("                     see examples/configs/) or a classic elastic");
             println!("                     join experiment (configs/*.toml)");
+            println!("  bench-diff <a> <b> compare two BENCH_*.json snapshots; exits 1");
+            println!("                     when a throughput/latency field regresses");
             println!("\noptions for run: --config <path>, --budget-ms <ms> (CI smoke)");
+            println!("options for bench-diff: --tolerance <factor> (default 1.25)");
         }
     }
 }

@@ -1,0 +1,444 @@
+//! Compare two `BENCH_*.json` snapshots — the `stretch bench-diff`
+//! subcommand and the CI perf gate.
+//!
+//! A committed baseline snapshot plus this comparator turn the repo's
+//! perf trajectory into an *enforced* contract: CI re-runs the micro
+//! bench and fails the pipeline when a throughput field fell (or a
+//! latency field rose) beyond a tolerance factor, the same way bit-rot
+//! already fails the build. Std-only: a small recursive-descent JSON
+//! parser into [`Json`] (serde is unavailable offline), then a top-level
+//! field-by-field comparison.
+//!
+//! Classification is by key name, matching the repo's report idiom:
+//! keys ending in `_tps` / `_per_s` are throughputs (higher is better),
+//! keys containing `p50` / `p99` / `latency` are latencies (lower is
+//! better); everything else is informational and never gates. Fields
+//! missing from either side, non-numeric fields, and fields whose
+//! baseline is ≤ 0 (a skipped or degenerate measurement) are skipped.
+
+use super::bench_json::Json;
+use std::fmt;
+
+/// JSON parse errors with a byte offset (good enough to locate a typo in
+/// a hand-edited baseline).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub at: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "JSON parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, ParseError> {
+        Err(ParseError { at: self.pos, msg: msg.into() })
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), ParseError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            self.err(format!("expected `{}`", b as char))
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str, v: Json) -> Result<Json, ParseError> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            self.err(format!("expected `{lit}`"))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, ParseError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.eat_lit("true", Json::Bool(true)),
+            Some(b'f') => self.eat_lit("false", Json::Bool(false)),
+            Some(b'n') => self.eat_lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => self.err(format!("unexpected byte `{}`", c as char)),
+            None => self.err("unexpected end of input"),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, ParseError> {
+        self.expect(b'{')?;
+        let mut kvs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(kvs));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            kvs.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kvs));
+                }
+                _ => return self.err("expected `,` or `}`"),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, ParseError> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => return self.err("expected `,` or `]`"),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, ParseError> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => return self.err("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'b') => s.push('\u{8}'),
+                        Some(b'f') => s.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok());
+                            match hex.and_then(char::from_u32) {
+                                // surrogate pairs are not worth the code:
+                                // bench reports never emit them
+                                Some(c) => {
+                                    s.push(c);
+                                    self.pos += 4;
+                                }
+                                None => return self.err("bad \\u escape"),
+                            }
+                        }
+                        _ => return self.err("bad escape"),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // multi-byte UTF-8 sequences pass through verbatim
+                    let start = self.pos;
+                    self.pos += 1;
+                    while self.pos < self.bytes.len() && (self.bytes[self.pos] & 0xc0) == 0x80 {
+                        self.pos += 1;
+                    }
+                    match std::str::from_utf8(&self.bytes[start..self.pos]) {
+                        Ok(frag) => s.push_str(frag),
+                        Err(_) => return self.err("invalid UTF-8 in string"),
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, ParseError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii slice");
+        match text.parse::<f64>() {
+            Ok(v) => Ok(Json::Num(v)),
+            Err(_) => self.err(format!("bad number `{text}`")),
+        }
+    }
+}
+
+/// Parse one JSON document (must consume the whole input).
+pub fn parse_json(text: &str) -> Result<Json, ParseError> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return p.err("trailing garbage after JSON value");
+    }
+    Ok(v)
+}
+
+/// How a compared field gates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FieldKind {
+    /// Higher is better (`*_tps`, `*_per_s`): regressed when
+    /// `new < baseline / tolerance`.
+    Throughput,
+    /// Lower is better (`*p50*`, `*p99*`, `*latency*`): regressed when
+    /// `new > baseline * tolerance`.
+    Latency,
+    /// Neither — reported for context, never gates.
+    Info,
+}
+
+/// Classify a report key by the repo's naming idiom.
+pub fn classify(key: &str) -> FieldKind {
+    if key.ends_with("_tps") || key.ends_with("_per_s") {
+        FieldKind::Throughput
+    } else if key.contains("p50") || key.contains("p99") || key.contains("latency") {
+        FieldKind::Latency
+    } else {
+        FieldKind::Info
+    }
+}
+
+/// One compared top-level field.
+#[derive(Clone, Debug)]
+pub struct FieldDiff {
+    pub key: String,
+    pub baseline: f64,
+    pub new: f64,
+    /// `new / baseline` (for latency a ratio > 1 means slower).
+    pub ratio: f64,
+    pub kind: FieldKind,
+    pub regressed: bool,
+}
+
+/// Outcome of comparing two reports.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    /// Every numeric top-level field present in BOTH reports, in the
+    /// baseline's field order.
+    pub fields: Vec<FieldDiff>,
+    /// Gated fields (throughput/latency) with a positive baseline that
+    /// moved beyond the tolerance factor.
+    pub regressions: usize,
+}
+
+impl DiffReport {
+    pub fn is_regression(&self) -> bool {
+        self.regressions > 0
+    }
+}
+
+impl fmt::Display for DiffReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for d in &self.fields {
+            let tag = match (d.kind, d.regressed) {
+                (_, true) => "REGRESSED",
+                (FieldKind::Info, _) => "info",
+                _ => "ok",
+            };
+            writeln!(
+                f,
+                "{:<28} {:>16.3} -> {:>16.3}  ({:>7.3}x)  {}",
+                d.key, d.baseline, d.new, d.ratio, tag
+            )?;
+        }
+        write!(f, "{} field(s) compared, {} regression(s)", self.fields.len(), self.regressions)
+    }
+}
+
+fn numeric_fields(doc: &Json) -> Vec<(String, f64)> {
+    match doc {
+        Json::Obj(kvs) => kvs
+            .iter()
+            .filter_map(|(k, v)| match v {
+                Json::Num(x) => Some((k.clone(), *x)),
+                _ => None,
+            })
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// Compare two parsed reports under a tolerance *factor* (1.25 = allow
+/// 25% drift before gating; CI on shared runners uses a much wider
+/// factor). Fields whose baseline is ≤ 0 never gate — a zero baseline
+/// marks a skipped/degenerate measurement, not a perf contract.
+pub fn compare(baseline: &Json, new: &Json, tolerance: f64) -> DiffReport {
+    let tol = tolerance.max(1.0);
+    let new_fields = numeric_fields(new);
+    let mut out = DiffReport::default();
+    for (key, base) in numeric_fields(baseline) {
+        let Some(&(_, cur)) = new_fields.iter().find(|(k, _)| *k == key) else { continue };
+        let kind = classify(&key);
+        let regressed = base > 0.0
+            && match kind {
+                FieldKind::Throughput => cur < base / tol,
+                FieldKind::Latency => cur > base * tol,
+                FieldKind::Info => false,
+            };
+        if regressed {
+            out.regressions += 1;
+        }
+        let ratio = if base != 0.0 { cur / base } else { f64::NAN };
+        out.fields.push(FieldDiff { key, baseline: base, new: cur, ratio, kind, regressed });
+    }
+    out
+}
+
+/// Errors from [`diff_files`].
+#[derive(Debug)]
+pub enum DiffError {
+    Io(String, std::io::Error),
+    Parse(String, ParseError),
+}
+
+impl fmt::Display for DiffError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DiffError::Io(path, e) => write!(f, "{path}: {e}"),
+            DiffError::Parse(path, e) => write!(f, "{path}: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DiffError {}
+
+/// Load, parse and compare two report files.
+pub fn diff_files(baseline: &str, new: &str, tolerance: f64) -> Result<DiffReport, DiffError> {
+    let load = |path: &str| -> Result<Json, DiffError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| DiffError::Io(path.to_string(), e))?;
+        parse_json(&text).map_err(|e| DiffError::Parse(path.to_string(), e))
+    };
+    Ok(compare(&load(baseline)?, &load(new)?, tolerance))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parser_round_trips_the_report_format() {
+        // exactly what BenchReport::render emits
+        let text = "{\n  \"bench\": \"micro\",\n  \"esg_per_tuple_tps\": 4200000,\n  \
+                    \"sweep\": [{\"batch\":16,\"us\":0.25},{\"batch\":64,\"us\":0.1}],\n  \
+                    \"ok\": true,\n  \"skipped\": null,\n  \"note\": \"a\\\"b\\u0041\"\n}\n";
+        let v = parse_json(text).unwrap();
+        let Json::Obj(kvs) = &v else { panic!("expected object") };
+        assert_eq!(kvs.len(), 6);
+        assert_eq!(kvs[0], ("bench".into(), Json::Str("micro".into())));
+        assert_eq!(kvs[1].1, Json::Num(4_200_000.0));
+        assert_eq!(kvs[5].1, Json::Str("a\"bA".into()));
+        // Display → parse is the identity on the value
+        assert_eq!(parse_json(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_input() {
+        for bad in ["", "{", "{\"a\" 1}", "[1,]", "nul", "{\"a\":1} x", "\"\\q\""] {
+            assert!(parse_json(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn classification_follows_key_names() {
+        assert_eq!(classify("esg_batched_tps"), FieldKind::Throughput);
+        assert_eq!(classify("cmp_per_s"), FieldKind::Throughput);
+        assert_eq!(classify("latency_p50_us"), FieldKind::Latency);
+        assert_eq!(classify("latency_mean_us"), FieldKind::Latency);
+        assert_eq!(classify("budget_ms"), FieldKind::Info);
+        assert_eq!(classify("esg_batch_size"), FieldKind::Info);
+    }
+
+    #[test]
+    fn throughput_drop_and_latency_rise_both_gate() {
+        let base = parse_json(r#"{"a_tps": 1000, "latency_p99_us": 100, "budget_ms": 10}"#)
+            .unwrap();
+        // throughput halved AND p99 doubled: both beyond a 1.25 factor
+        let worse = parse_json(r#"{"a_tps": 500, "latency_p99_us": 200, "budget_ms": 99}"#)
+            .unwrap();
+        let d = compare(&base, &worse, 1.25);
+        assert_eq!(d.regressions, 2, "{d}");
+        assert!(d.is_regression());
+        // the info field moved 10x but never gates
+        assert!(d.fields.iter().any(|f| f.key == "budget_ms" && !f.regressed));
+        // same numbers pass under a wide CI factor
+        assert!(!compare(&base, &worse, 50.0).is_regression());
+        // improvements never gate
+        let better = parse_json(r#"{"a_tps": 2000, "latency_p99_us": 50}"#).unwrap();
+        assert!(!compare(&base, &better, 1.25).is_regression());
+    }
+
+    #[test]
+    fn zero_baselines_and_missing_fields_are_skipped() {
+        let base = parse_json(r#"{"a_tps": 0, "b_tps": 100, "mode": "x"}"#).unwrap();
+        let new = parse_json(r#"{"a_tps": 0, "c_tps": 1}"#).unwrap();
+        let d = compare(&base, &new, 1.25);
+        // only a_tps is shared and numeric; zero baseline never gates
+        assert_eq!(d.fields.len(), 1);
+        assert_eq!(d.regressions, 0);
+    }
+
+    #[test]
+    fn diff_files_round_trip() {
+        let dir = std::env::temp_dir().join(format!("stretch_bd_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = dir.join("base.json");
+        let b = dir.join("new.json");
+        std::fs::write(&a, "{\n  \"x_tps\": 100\n}\n").unwrap();
+        std::fs::write(&b, "{\n  \"x_tps\": 10\n}\n").unwrap();
+        let d = diff_files(a.to_str().unwrap(), b.to_str().unwrap(), 1.25).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(d.is_regression());
+        assert!(diff_files("/nonexistent.json", "/nonexistent.json", 1.25).is_err());
+    }
+}

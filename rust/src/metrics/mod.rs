@@ -6,10 +6,12 @@
 //! §8), and reconfiguration time. Plus per-thread load for the coefficient
 //! of variation reported in Fig. 9.
 
+pub mod bench_diff;
 pub mod bench_json;
 pub mod histogram;
 pub mod reporter;
 
+pub use bench_diff::{diff_files, parse_json, DiffReport, FieldDiff, FieldKind};
 pub use bench_json::{BenchReport, Json};
 pub use histogram::{HistSnapshot, Histogram};
 pub use reporter::CsvWriter;

@@ -125,6 +125,27 @@ impl<L: MapLogic> OperatorLogic for MapStageLogic<L> {
     }
 }
 
+impl<In, Out, F> OperatorDef<MapStageLogic<FnMapLogic<In, Out, F>>>
+where
+    In: Payload,
+    Out: Payload,
+    F: Fn(&Tuple<In>, &mut dyn FnMut(Out)) + Send + Sync + 'static,
+{
+    /// Closure escape hatch: build a deployable Map stage straight from a
+    /// `Fn(&Tuple<In>, emit)` without naming a [`MapLogic`] type. The
+    /// closure must preserve timestamps implicitly — outputs are stamped
+    /// with the input's τ by the stage ([`Ctx::emit_at`]).
+    ///
+    /// ```ignore
+    /// let def = OperatorDef::from_fn("double", 64, |t: &Tuple<u32>, emit| {
+    ///     emit(t.payload * 2);
+    /// });
+    /// ```
+    pub fn from_fn(name: &'static str, lb_keys: u64, f: F) -> Self {
+        map_stage_op(name, FnMapLogic::new(f), lb_keys)
+    }
+}
+
 /// Build a Map pipeline stage from a [`MapLogic`].
 pub fn map_stage_op<L: MapLogic>(
     name: &'static str,
@@ -226,6 +247,28 @@ mod tests {
         let mut out = [per_core[0].clone(), per_core[1].clone()].concat();
         out.sort_unstable();
         assert_eq!(out, (0..200).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn from_fn_builds_a_working_stage() {
+        use crate::metrics::OperatorMetrics;
+        use crate::operator::state::SharedState;
+        use crate::operator::OperatorCore;
+        use crate::tuple::Mapper;
+        let def = OperatorDef::from_fn("triple", 8, |t: &Tuple<u32>, emit: &mut dyn FnMut(u32)| {
+            emit(t.payload * 3);
+        });
+        assert_eq!(def.name, "triple");
+        let mut core = OperatorCore::new(def, 0, SharedState::private(), OperatorMetrics::new(1));
+        let f_mu = Mapper::hash_mod(1);
+        let mut out: Vec<(i64, u32)> = Vec::new();
+        for ts in 1..=3i64 {
+            let t = Tuple::data(ts, ts as u32);
+            let mut sink = |o: Tuple<u32>| out.push((o.ts, o.payload));
+            let mut ctx = Ctx::new(&mut sink);
+            core.process(&t, &f_mu, &mut ctx);
+        }
+        assert_eq!(out, vec![(1, 3), (2, 6), (3, 9)]);
     }
 
     #[test]

@@ -1,6 +1,14 @@
-//! The PJRT runtime bridge: load AOT-compiled JAX/Pallas artifacts
-//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and execute
-//! them from the rust hot path. Python never runs at request time.
+//! Machine-facing runtime services: CPU/NUMA placement and the PJRT
+//! offload bridge.
+//!
+//! [`placement`] owns the core-topology map, thread-affinity primitives
+//! and the per-stage [`PlacementPlan`] that keeps reader groups
+//! NUMA-local to the gates they drain — see its module docs.
+//!
+//! The rest of this module is the PJRT bridge: load AOT-compiled
+//! JAX/Pallas artifacts (`artifacts/*.hlo.txt`, built once by
+//! `make artifacts`) and execute them from the rust hot path. Python
+//! never runs at request time.
 //!
 //! The real bridge needs the `xla` and `anyhow` crates, which this
 //! offline container does not carry; it is therefore gated behind the
@@ -11,6 +19,10 @@
 //! loader returns [`RuntimeError`]; the engine falls back to the scalar
 //! comparison loops (which the §Perf pass shows win on CPU anyway — the
 //! offload is compile-only here).
+
+pub mod placement;
+
+pub use placement::{pin_current, CoreMap, PinGuard, PlacementPlan};
 
 #[cfg(feature = "pjrt")]
 pub mod executable;

@@ -1,0 +1,598 @@
+//! Core/NUMA placement for the data plane (the "shared gates stay cheap
+//! to share" prerequisite, PAPER.md §8).
+//!
+//! The engine is batched and false-sharing-free but — without this
+//! module — placement-blind: worker threads, the job runtime thread and
+//! every gate's slot/`Log` arrays land wherever the scheduler and
+//! first-touch allocation happen to put them, so a reader group can sit
+//! a socket away from the `ESG_out` it drains. Three pieces fix that:
+//!
+//! * [`CoreMap`] — the machine's topology (logical CPUs → sockets, SMT
+//!   siblings), discovered from `/sys/devices/system/cpu` with a flat
+//!   single-socket fallback when sysfs is absent (non-Linux, containers
+//!   with a masked `/sys`).
+//! * [`pin_current`] — a thin `sched_setaffinity` wrapper (no-op off
+//!   Linux) so spawned threads self-pin; [`PinGuard`] is the RAII
+//!   variant used to run first-touch initialization of gate memory on a
+//!   core of the owning socket, restoring the caller's affinity after.
+//! * [`PlacementPlan`] — assigns each stage's worker slots, its gate
+//!   first-touch core and the job runtime thread to cores such that a
+//!   stage's readers stay NUMA-local to its upstream's `ESG_out`
+//!   whenever the socket has capacity. Explicit per-stage `cores`/
+//!   `socket` config keys override the locality heuristic.
+//!
+//! Knobs: `[placement]` in job config ([`crate::config::PlacementConfig`])
+//! plus per-stage `cores = [..]` / `socket = N` keys parsed into
+//! [`crate::engine::job::JobSpec`].
+
+use std::path::Path;
+
+/// Words in the affinity mask: 16 × 64 = 1024 logical CPUs.
+const MASK_WORDS: usize = 16;
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+}
+
+/// Pin the calling thread to one logical CPU. Returns whether the
+/// kernel accepted the mask (always `false` off Linux, or for cores
+/// outside the 1024-CPU mask or the process cpuset).
+pub fn pin_current(core: usize) -> bool {
+    if core >= MASK_WORDS * 64 {
+        return false;
+    }
+    #[cfg(target_os = "linux")]
+    {
+        let mut mask = [0u64; MASK_WORDS];
+        mask[core / 64] = 1u64 << (core % 64);
+        unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+    }
+    #[cfg(not(target_os = "linux"))]
+    false
+}
+
+/// The calling thread's current affinity mask, `None` when unavailable.
+fn current_affinity() -> Option<[u64; MASK_WORDS]> {
+    #[cfg(target_os = "linux")]
+    {
+        let mut mask = [0u64; MASK_WORDS];
+        let rc =
+            unsafe { sched_getaffinity(0, std::mem::size_of_val(&mask), mask.as_mut_ptr()) };
+        if rc == 0 {
+            return Some(mask);
+        }
+    }
+    None
+}
+
+/// Logical CPUs the calling thread may run on (empty when unknown —
+/// non-Linux, or a kernel without affinity syscalls).
+pub fn allowed_cores() -> Vec<usize> {
+    match current_affinity() {
+        Some(mask) => {
+            (0..MASK_WORDS * 64).filter(|c| (mask[c / 64] >> (c % 64)) & 1 == 1).collect()
+        }
+        None => Vec::new(),
+    }
+}
+
+/// RAII pin: restrict the current thread to `core`, restoring the
+/// previous affinity mask on drop. Used to run first-touch allocation
+/// of a stage's gate slot/`Log` arrays on a core of the owning socket
+/// without leaking the mask to the rest of the build.
+pub struct PinGuard {
+    #[cfg_attr(not(target_os = "linux"), allow(dead_code))]
+    saved: Option<[u64; MASK_WORDS]>,
+}
+
+impl PinGuard {
+    pub fn pin(core: usize) -> PinGuard {
+        let saved = current_affinity();
+        pin_current(core);
+        PinGuard { saved }
+    }
+}
+
+impl Drop for PinGuard {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if let Some(mask) = self.saved.take() {
+            unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+        }
+    }
+}
+
+/// One logical CPU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Core {
+    /// Kernel CPU id (the `N` of `/sys/devices/system/cpu/cpuN`).
+    pub id: usize,
+    /// Dense socket index in `0..CoreMap::sockets()` (kernel package
+    /// ids need not be contiguous; they are renumbered in sorted order).
+    pub socket: usize,
+    /// First sibling of its SMT group — the "physical core" proxy the
+    /// plan prefers before doubling up on hyper-threads.
+    pub is_primary: bool,
+}
+
+/// The machine's CPU topology.
+#[derive(Clone, Debug)]
+pub struct CoreMap {
+    cores: Vec<Core>,
+    sockets: usize,
+}
+
+impl CoreMap {
+    /// Discover the topology: sysfs on Linux, flat
+    /// `available_parallelism` fallback elsewhere (or when `/sys` is
+    /// masked, as in minimal containers).
+    pub fn discover() -> CoreMap {
+        #[cfg(target_os = "linux")]
+        if let Some(m) = CoreMap::from_sysfs(Path::new("/sys/devices/system/cpu")) {
+            return m;
+        }
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        CoreMap::flat(n)
+    }
+
+    /// A uniform single-socket map of `n` physical cores (fallback and
+    /// test helper).
+    pub fn flat(n: usize) -> CoreMap {
+        let n = n.max(1);
+        CoreMap {
+            cores: (0..n).map(|id| Core { id, socket: 0, is_primary: true }).collect(),
+            sockets: 1,
+        }
+    }
+
+    /// Parse a sysfs cpu tree rooted at `root` (`/sys/devices/system/cpu`
+    /// in production; fixture snapshots in tests). `None` when the tree
+    /// is absent or yields no parseable cpu.
+    pub fn from_sysfs(root: &Path) -> Option<CoreMap> {
+        let entries = std::fs::read_dir(root).ok()?;
+        // (cpu id, kernel package id, first SMT sibling)
+        let mut raw: Vec<(usize, usize, usize)> = Vec::new();
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(id) = name.strip_prefix("cpu").and_then(|d| d.parse::<usize>().ok())
+            else {
+                continue; // cpufreq, cpuidle, possible, online, ...
+            };
+            let topo = e.path().join("topology");
+            let Some(pkg) = read_usize(&topo.join("physical_package_id")) else {
+                continue; // offline cpus export no topology
+            };
+            let first_sibling = read_trimmed(&topo.join("thread_siblings_list"))
+                .and_then(|s| parse_cpu_list(&s))
+                .and_then(|l| l.into_iter().min())
+                .unwrap_or(id);
+            raw.push((id, pkg, first_sibling));
+        }
+        if raw.is_empty() {
+            return None;
+        }
+        raw.sort_unstable();
+        // dense socket indices in kernel-package-id order
+        let mut pkgs: Vec<usize> = raw.iter().map(|r| r.1).collect();
+        pkgs.sort_unstable();
+        pkgs.dedup();
+        let cores = raw
+            .into_iter()
+            .map(|(id, pkg, first)| Core {
+                id,
+                socket: pkgs.binary_search(&pkg).unwrap(),
+                is_primary: first == id,
+            })
+            .collect();
+        Some(CoreMap { cores, sockets: pkgs.len() })
+    }
+
+    /// Number of logical CPUs.
+    pub fn len(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cores.is_empty()
+    }
+
+    /// Number of sockets (≥ 1).
+    pub fn sockets(&self) -> usize {
+        self.sockets
+    }
+
+    /// All cores, sorted by kernel id.
+    pub fn cores(&self) -> &[Core] {
+        &self.cores
+    }
+
+    /// Kernel ids of the cores on `socket`, primaries first (so plans
+    /// fill physical cores before hyper-thread siblings).
+    pub fn cores_on(&self, socket: usize) -> Vec<usize> {
+        let mut on: Vec<&Core> = self.cores.iter().filter(|c| c.socket == socket).collect();
+        on.sort_by_key(|c| (!c.is_primary, c.id));
+        on.iter().map(|c| c.id).collect()
+    }
+
+    /// Socket of kernel cpu `core`, `None` if the map has no such core.
+    pub fn socket_of(&self, core: usize) -> Option<usize> {
+        self.cores.iter().find(|c| c.id == core).map(|c| c.socket)
+    }
+}
+
+fn read_trimmed(p: &Path) -> Option<String> {
+    std::fs::read_to_string(p).ok().map(|s| s.trim().to_string())
+}
+
+fn read_usize(p: &Path) -> Option<usize> {
+    read_trimmed(p)?.parse().ok()
+}
+
+/// Parse a sysfs cpu list: `"0-3"`, `"0,4"`, `"0,2-5,8"`.
+fn parse_cpu_list(s: &str) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            let a: usize = a.trim().parse().ok()?;
+            let b: usize = b.trim().parse().ok()?;
+            if b < a {
+                return None;
+            }
+            out.extend(a..=b);
+        } else {
+            out.push(part.parse().ok()?);
+        }
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// What one stage asks of the placement planner, in DAG declaration
+/// order (the same order `DagBuilder` spawns nodes).
+#[derive(Clone, Debug, Default)]
+pub struct StageRequest {
+    pub name: String,
+    /// Worker slots to place. Use the stage's `max`, not `initial`:
+    /// pooled instances are spawned during the same build and inherit
+    /// the build thread's mask, so they must self-pin too.
+    pub workers: usize,
+    /// Explicit kernel core ids from config — wins over everything.
+    pub cores: Vec<usize>,
+    /// Explicit socket from config — wins over the locality heuristic.
+    pub socket: Option<usize>,
+    /// Indices (into the request slice) of upstream stages.
+    pub upstreams: Vec<usize>,
+}
+
+/// Where one stage landed.
+#[derive(Clone, Debug)]
+pub struct StagePlacement {
+    /// Socket owning the stage's workers and gate memory.
+    pub socket: usize,
+    /// One kernel core id per worker slot (`len == workers`).
+    pub worker_cores: Vec<usize>,
+    /// Core to run first-touch initialization of the stage's gate
+    /// slot/`Log` arrays on (a core of `socket`).
+    pub touch_core: usize,
+}
+
+/// A full job-to-machine assignment.
+#[derive(Clone, Debug)]
+pub struct PlacementPlan {
+    /// Per-stage placements, parallel to the request slice.
+    pub stages: Vec<StagePlacement>,
+    /// Core for the `JobHandle` runtime thread (feed/drain/sampling):
+    /// the least-loaded socket's last core, away from the worker
+    /// round-robin front.
+    pub runtime_core: Option<usize>,
+}
+
+/// Validation failure against a concrete [`CoreMap`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlacementError {
+    UnknownCore { stage: String, core: usize, cores: usize },
+    UnknownSocket { stage: String, socket: usize, sockets: usize },
+}
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlacementError::UnknownCore { stage, core, cores } => write!(
+                f,
+                "stage `{stage}`: core {core} not in the machine's core map ({cores} cores)"
+            ),
+            PlacementError::UnknownSocket { stage, socket, sockets } => write!(
+                f,
+                "stage `{stage}`: socket {socket} out of range (machine has {sockets})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
+impl PlacementPlan {
+    /// Assign every stage's worker slots (and the runtime thread) to
+    /// cores. Preference order per stage: explicit `cores` → explicit
+    /// `socket` → the first already-placed upstream's socket when it
+    /// still has spare cores (readers drain that upstream's `ESG_out`,
+    /// so this is the NUMA-locality invariant) → the least-loaded
+    /// socket. Within a socket, cores are handed out round-robin,
+    /// primaries first, wrapping once a socket oversubscribes.
+    pub fn assign(
+        map: &CoreMap,
+        stages: &[StageRequest],
+    ) -> Result<PlacementPlan, PlacementError> {
+        let n_sock = map.sockets();
+        let socket_cores: Vec<Vec<usize>> = (0..n_sock).map(|s| map.cores_on(s)).collect();
+        let mut load = vec![0usize; n_sock];
+        let mut cursor = vec![0usize; n_sock];
+        let least = |load: &[usize]| (0..n_sock).min_by_key(|&s| (load[s], s)).unwrap_or(0);
+        let mut out: Vec<StagePlacement> = Vec::with_capacity(stages.len());
+        for (i, st) in stages.iter().enumerate() {
+            for &c in &st.cores {
+                if map.socket_of(c).is_none() {
+                    return Err(PlacementError::UnknownCore {
+                        stage: st.name.clone(),
+                        core: c,
+                        cores: map.len(),
+                    });
+                }
+            }
+            if let Some(s) = st.socket {
+                if s >= n_sock {
+                    return Err(PlacementError::UnknownSocket {
+                        stage: st.name.clone(),
+                        socket: s,
+                        sockets: n_sock,
+                    });
+                }
+            }
+            let socket = if let Some(&c0) = st.cores.first() {
+                map.socket_of(c0).unwrap()
+            } else if let Some(s) = st.socket {
+                s
+            } else if let Some(up_sock) =
+                st.upstreams.iter().filter(|&&u| u < i).map(|&u| out[u].socket).next()
+            {
+                if load[up_sock] + st.workers <= socket_cores[up_sock].len() {
+                    up_sock
+                } else {
+                    least(&load)
+                }
+            } else {
+                least(&load)
+            };
+            let worker_cores: Vec<usize> = if st.cores.is_empty() {
+                let cs = &socket_cores[socket];
+                (0..st.workers)
+                    .map(|_| {
+                        let c = cs[cursor[socket] % cs.len()];
+                        cursor[socket] += 1;
+                        c
+                    })
+                    .collect()
+            } else {
+                (0..st.workers).map(|k| st.cores[k % st.cores.len()]).collect()
+            };
+            load[socket] += st.workers;
+            let touch_core = worker_cores.first().copied().unwrap_or(socket_cores[socket][0]);
+            out.push(StagePlacement { socket, worker_cores, touch_core });
+        }
+        let rt_sock = least(&load);
+        let runtime_core = socket_cores[rt_sock].last().copied();
+        Ok(PlacementPlan { stages: out, runtime_core })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    /// Build a fixture `/sys/devices/system/cpu` snapshot.
+    fn fixture(tag: &str, cpus: &[(usize, usize, &str)]) -> PathBuf {
+        let root = std::env::temp_dir().join(format!("stretch_sysfs_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        for (id, pkg, siblings) in cpus {
+            let topo = root.join(format!("cpu{id}")).join("topology");
+            std::fs::create_dir_all(&topo).unwrap();
+            std::fs::write(topo.join("physical_package_id"), format!("{pkg}\n")).unwrap();
+            std::fs::write(topo.join("thread_siblings_list"), format!("{siblings}\n")).unwrap();
+        }
+        root
+    }
+
+    #[test]
+    fn parses_single_socket_snapshot() {
+        let root = fixture(
+            "1s",
+            &[(0, 0, "0"), (1, 0, "1"), (2, 0, "2"), (3, 0, "3")],
+        );
+        // decoy entries real sysfs also has
+        std::fs::create_dir_all(root.join("cpufreq")).unwrap();
+        std::fs::write(root.join("online"), "0-3\n").unwrap();
+        let m = CoreMap::from_sysfs(&root).unwrap();
+        std::fs::remove_dir_all(&root).ok();
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.sockets(), 1);
+        assert!(m.cores().iter().all(|c| c.socket == 0 && c.is_primary));
+        assert_eq!(m.cores_on(0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn parses_dual_socket_with_sparse_package_ids() {
+        // kernel package ids 0 and 3 → dense sockets 0 and 1
+        let root = fixture(
+            "2s",
+            &[(0, 0, "0"), (1, 0, "1"), (2, 3, "2"), (3, 3, "3")],
+        );
+        let m = CoreMap::from_sysfs(&root).unwrap();
+        std::fs::remove_dir_all(&root).ok();
+        assert_eq!(m.sockets(), 2);
+        assert_eq!(m.socket_of(1), Some(0));
+        assert_eq!(m.socket_of(2), Some(1));
+        assert_eq!(m.cores_on(1), vec![2, 3]);
+    }
+
+    #[test]
+    fn parses_smt_siblings_and_orders_primaries_first() {
+        // 2 physical cores × 2 threads: (0,2) and (1,3) are sibling pairs
+        let root = fixture(
+            "smt",
+            &[(0, 0, "0,2"), (1, 0, "1,3"), (2, 0, "0,2"), (3, 0, "1,3")],
+        );
+        let m = CoreMap::from_sysfs(&root).unwrap();
+        std::fs::remove_dir_all(&root).ok();
+        assert_eq!(m.len(), 4);
+        let primary: Vec<bool> = m.cores().iter().map(|c| c.is_primary).collect();
+        assert_eq!(primary, vec![true, true, false, false]);
+        // physical cores handed out before hyper-thread siblings
+        assert_eq!(m.cores_on(0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn garbled_or_empty_tree_is_none_and_discover_still_works() {
+        let root =
+            std::env::temp_dir().join(format!("stretch_sysfs_empty_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(root.join("cpufreq")).unwrap();
+        assert!(CoreMap::from_sysfs(&root).is_none());
+        std::fs::remove_dir_all(&root).ok();
+        assert!(CoreMap::from_sysfs(Path::new("/nonexistent/sysfs")).is_none());
+        let m = CoreMap::discover();
+        assert!(!m.is_empty());
+        assert!(m.sockets() >= 1);
+    }
+
+    #[test]
+    fn cpu_list_formats() {
+        assert_eq!(parse_cpu_list("0-3"), Some(vec![0, 1, 2, 3]));
+        assert_eq!(parse_cpu_list("0,4"), Some(vec![0, 4]));
+        assert_eq!(parse_cpu_list("0,2-4,8"), Some(vec![0, 2, 3, 4, 8]));
+        assert_eq!(parse_cpu_list(" 7 "), Some(vec![7]));
+        assert_eq!(parse_cpu_list("3-1"), None);
+        assert_eq!(parse_cpu_list("x"), None);
+        assert_eq!(parse_cpu_list(""), None);
+    }
+
+    fn req(name: &str, workers: usize, ups: &[usize]) -> StageRequest {
+        StageRequest {
+            name: name.into(),
+            workers,
+            cores: Vec::new(),
+            socket: None,
+            upstreams: ups.to_vec(),
+        }
+    }
+
+    fn dual_socket_map() -> CoreMap {
+        CoreMap {
+            cores: (0..8)
+                .map(|id| Core { id, socket: id / 4, is_primary: true })
+                .collect(),
+            sockets: 2,
+        }
+    }
+
+    #[test]
+    fn readers_stay_local_to_upstream_when_capacity_allows() {
+        let map = dual_socket_map();
+        // diamond: src → (left, right) → join; 2 workers each
+        let reqs = [
+            req("src", 2, &[]),
+            req("left", 2, &[0]),
+            req("right", 2, &[0]),
+            req("join", 2, &[1, 2]),
+        ];
+        let plan = PlacementPlan::assign(&map, &reqs).unwrap();
+        // locality invariant: every stage with an upstream shares that
+        // upstream's socket when the socket had room
+        assert_eq!(plan.stages[1].socket, plan.stages[0].socket);
+        // right no longer fits on socket 0 (src+left filled it) → spills
+        assert_ne!(plan.stages[2].socket, plan.stages[0].socket);
+        // join follows its first upstream (left, socket 0)? left's socket
+        // is full, so it lands on the least-loaded one instead
+        assert!(plan.stages[3].socket < map.sockets());
+        for (p, r) in plan.stages.iter().zip(&reqs) {
+            assert_eq!(p.worker_cores.len(), r.workers);
+            for &c in &p.worker_cores {
+                assert_eq!(map.socket_of(c), Some(p.socket));
+            }
+            assert_eq!(map.socket_of(p.touch_core), Some(p.socket));
+        }
+        assert!(plan.runtime_core.is_some());
+    }
+
+    #[test]
+    fn single_socket_everything_lands_on_socket_zero() {
+        let map = CoreMap::flat(2);
+        let reqs = [req("a", 3, &[]), req("b", 3, &[0])];
+        let plan = PlacementPlan::assign(&map, &reqs).unwrap();
+        assert!(plan.stages.iter().all(|p| p.socket == 0));
+        // oversubscription wraps round-robin instead of failing
+        assert_eq!(plan.stages[0].worker_cores, vec![0, 1, 0]);
+        assert_eq!(plan.runtime_core, Some(1));
+    }
+
+    #[test]
+    fn explicit_cores_and_socket_override_locality() {
+        let map = dual_socket_map();
+        let mut a = req("a", 2, &[]);
+        a.cores = vec![5, 6];
+        let mut b = req("b", 1, &[0]);
+        b.socket = Some(0);
+        let plan = PlacementPlan::assign(&map, &[a, b]).unwrap();
+        assert_eq!(plan.stages[0].socket, 1);
+        assert_eq!(plan.stages[0].worker_cores, vec![5, 6]);
+        assert_eq!(plan.stages[0].touch_core, 5);
+        assert_eq!(plan.stages[1].socket, 0);
+    }
+
+    #[test]
+    fn unknown_core_and_socket_are_typed_errors() {
+        let map = CoreMap::flat(2);
+        let mut a = req("a", 1, &[]);
+        a.cores = vec![9];
+        match PlacementPlan::assign(&map, &[a]).unwrap_err() {
+            PlacementError::UnknownCore { stage, core, cores } => {
+                assert_eq!((stage.as_str(), core, cores), ("a", 9, 2));
+            }
+            e => panic!("wrong error: {e}"),
+        }
+        let mut b = req("b", 1, &[]);
+        b.socket = Some(1);
+        assert!(matches!(
+            PlacementPlan::assign(&map, &[b]).unwrap_err(),
+            PlacementError::UnknownSocket { socket: 1, sockets: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn pin_guard_restores_previous_affinity() {
+        let before = allowed_cores();
+        let Some(&core) = before.first() else {
+            return; // affinity unavailable on this platform
+        };
+        {
+            let _g = PinGuard::pin(core);
+            assert_eq!(allowed_cores(), vec![core]);
+        }
+        assert_eq!(allowed_cores(), before);
+    }
+
+    #[test]
+    fn pin_out_of_mask_is_rejected() {
+        assert!(!pin_current(MASK_WORDS * 64));
+    }
+}

@@ -287,13 +287,17 @@ mod tests {
                 std::thread::spawn(move || {
                     let mut cache = SegCache::default();
                     let mut next = 0u64;
+                    let mut idle = crate::util::Backoff::active();
                     while next < 100_000 {
                         let r = log.ready();
+                        if next < r {
+                            idle.reset();
+                        }
                         while next < r {
                             assert_eq!(log.get(next, &mut cache), next);
                             next += 1;
                         }
-                        std::hint::spin_loop();
+                        idle.snooze();
                     }
                 })
             })

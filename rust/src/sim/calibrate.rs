@@ -137,6 +137,83 @@ pub fn measure_gate_batch_cost(batch: usize, ms: u64) -> f64 {
     t0.elapsed().as_secs_f64() / n as f64
 }
 
+/// Cross-thread ESG throughput (tuples/s): a feeder thread `add_batch`es
+/// 256-tuple runs while a reader thread drains with `get_batch`, each
+/// optionally pinned to a core via [`crate::runtime::placement`]. This is
+/// the placement experiment's probe — run it once with both threads on
+/// the producer's socket and once with the reader on a remote socket to
+/// measure the NUMA penalty on the gate hot path (`bench_micro` records
+/// both in `BENCH_micro.json`).
+pub fn measure_gate_cost_threaded(
+    ms: u64,
+    src_core: Option<usize>,
+    rdr_core: Option<usize>,
+) -> f64 {
+    use crate::runtime::placement::pin_current;
+    use crate::util::Backoff;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let (_g, mut src, mut rdr) = scale_gate::<Tuple<u64>>(1, 1, 1 << 14);
+    let mut src0 = src.remove(0);
+    let mut rdr0 = rdr.remove(0);
+    let stop = Arc::new(AtomicBool::new(false));
+    let done_feeding = Arc::new(AtomicBool::new(false));
+
+    let feeder = {
+        let stop = stop.clone();
+        let done = done_feeding.clone();
+        std::thread::spawn(move || {
+            if let Some(c) = src_core {
+                pin_current(c);
+            }
+            let mut ts = 0i64;
+            let mut run: Vec<Tuple<u64>> = Vec::with_capacity(256);
+            while !stop.load(Ordering::Acquire) {
+                for _ in 0..256 {
+                    ts += 1;
+                    run.push(Tuple::data(ts, 1));
+                }
+                src0.add_batch(&mut run).unwrap();
+            }
+            // the reader keeps draining until this flips, so a feeder
+            // blocked on a full gate always gets space to finish
+            done.store(true, Ordering::Release);
+        })
+    };
+    let reader = {
+        let done = done_feeding.clone();
+        std::thread::spawn(move || {
+            if let Some(c) = rdr_core {
+                pin_current(c);
+            }
+            let mut out: Vec<Tuple<u64>> = Vec::with_capacity(256);
+            let mut idle = Backoff::active();
+            let mut n = 0u64;
+            loop {
+                let got = rdr0.get_batch(&mut out, 256);
+                n += got as u64;
+                out.clear();
+                if got == 0 {
+                    if done.load(Ordering::Acquire) {
+                        break;
+                    }
+                    idle.snooze();
+                } else {
+                    idle.reset();
+                }
+            }
+            n
+        })
+    };
+    let t0 = Instant::now();
+    std::thread::sleep(std::time::Duration::from_millis(ms.max(1)));
+    stop.store(true, Ordering::Release);
+    feeder.join().unwrap();
+    let n = reader.join().unwrap();
+    n as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
 /// Dedicated SPSC queue push + pop.
 pub fn measure_queue_cost(ms: u64) -> f64 {
     let (mut p, mut c) = spsc::spsc::<Tuple<u64>>(1 << 12);
@@ -187,5 +264,17 @@ mod tests {
         // NOTE: the batched-vs-per-tuple perf bar is deliberately NOT
         // asserted here — timing comparisons flake under CI scheduler
         // noise; bench_micro owns that gate (≥ 2× at full budget).
+    }
+
+    #[test]
+    fn threaded_gate_probe_moves_tuples_pinned_or_not() {
+        assert!(measure_gate_cost_threaded(20, None, None) > 0.0);
+        // pinning both threads to an allowed core must still flow (on a
+        // 1-core box both land on the same core and simply time-share)
+        let cores = crate::runtime::placement::allowed_cores();
+        if let Some(&c) = cores.first() {
+            let pinned = measure_gate_cost_threaded(20, Some(c), Some(*cores.last().unwrap()));
+            assert!(pinned > 0.0, "pinned probe moved no tuples");
+        }
     }
 }
