@@ -3,9 +3,14 @@
 //! topology-aware [`DagController`] co-scheduling all four stages
 //! against a global core budget from their per-stage `in_backlog`.
 //!
+//! Partway through the low-rate phase a scripted fault stalls one hedge
+//! worker for 400 ms; the attached [`SupervisorPolicy`] must detect the
+//! frozen progress epoch and the run records the detection→healed
+//! latency as `mttr_ms` (informational — never a bench-diff gate).
+//!
 //! Writes `BENCH_q7_dag.json`: end-to-end throughput/latency, per-stage
-//! final parallelism and reconfiguration counts — the perf trajectory
-//! record for the DAG layer.
+//! final parallelism and reconfiguration counts, and the recovery MTTR —
+//! the perf trajectory record for the DAG layer.
 //!
 //! ```sh
 //! cargo bench --bench bench_q7_dag                  # full run
@@ -17,7 +22,10 @@ use stretch::cli::OrExit;
 use stretch::elastic::DagController;
 use stretch::engine::dag::DagBuilder;
 use stretch::engine::VsnOptions;
-use stretch::harness::{run_pipeline, PipelineRunConfig, StageRunConfig};
+use stretch::harness::{
+    drive, DagControllerPolicy, FaultPlan, FaultPolicy, Job, JobPolicy, LaunchConfig,
+    RecoveryLog, SupervisorConfig, SupervisorPolicy,
+};
 use stretch::workloads::nyse::{
     hedge_join_op, left_leg_op, right_leg_op, trade_filter_op, NyseConfig, Trade,
     TradeStream,
@@ -71,22 +79,44 @@ fn main() {
         &[l, r],
     );
     let pipeline = b.build(&[j]).expect("diamond is a valid DAG");
-    let n_stages = pipeline.depth();
 
     let source = TradeStream::new(&NyseConfig { symbols: 10, ..Default::default() }, lo);
-    let cfg = PipelineRunConfig {
-        schedule: RateSchedule::step(duration_s, step_at, lo, hi),
-        time_scale,
-        stages: (0..n_stages).map(|_| StageRunConfig::default()).collect(),
-        flush_slack_ms: ws_ms + 10_000,
-        drain: Duration::from_millis(300),
-        ingress_batch: 256,
-        dag_controller: Some(
+    // Scripted chaos: stall one hedge worker for 400 ms during the
+    // low-rate phase. A stall (not a kill) keeps the scenario
+    // deterministic under the DagController — it may have shrunk any
+    // stage to a single worker, and healing a stall needs no survivors;
+    // worker 0 always exists (resizes keep the lowest ids).
+    let fault_at = (step_at / 2).max(1);
+    let pools = [("trade-filter", 2), ("left-leg", 2), ("right-leg", 2), ("hedge", 4)];
+    let plan = FaultPlan::parse(&[format!("{fault_at} -> stall hedge:0 400")], &pools)
+        .expect("scripted fault is well-formed");
+    let handle = Job::new(pipeline, source)
+        .with_config(LaunchConfig {
+            name: "q7_dag".into(),
+            schedule: RateSchedule::step(duration_s, step_at, lo, hi),
+            time_scale,
+            flush_slack_ms: ws_ms + 10_000,
+            drain: Duration::from_millis(300),
+            ingress_batch: 256,
+            stall_after_ms: 120,
+            ..LaunchConfig::default()
+        })
+        .launch()
+        .expect("diamond topology is well-formed");
+    let log = RecoveryLog::new();
+    let mut policies: Vec<Box<dyn JobPolicy>> = vec![
+        Box::new(DagControllerPolicy::new(
             DagController::new(cores).with_thresholds(2_048, 64).with_cooldown(1),
-        ),
-        dag_controller_period_s: 1,
-    };
-    let r = run_pipeline(pipeline, cfg, source).expect("diamond topology is well-formed");
+            1,
+        )),
+        Box::new(FaultPolicy::new(plan)),
+        Box::new(SupervisorPolicy::new(SupervisorConfig::default(), log.clone())),
+    ];
+    drive(&handle, &mut policies);
+    let out = handle.shutdown();
+    log.close_unresolved();
+    let recoveries = log.tickets();
+    let r = out.result;
 
     let mut report = stretch::metrics::BenchReport::new("q7_dag");
     report
@@ -132,6 +162,30 @@ fn main() {
     }
     report.set("total_reconfigs", total_reconfigs as u64);
     report.set("peak_total_threads", peak_total_threads as u64);
+    // Recovery MTTR from the injected stall. `mttr_ms` classifies as an
+    // informational field in bench-diff (never a throughput/latency
+    // gate); at tiny CI budgets the stall may outlive the run, in which
+    // case the ticket closes Failed and the field is simply absent.
+    let healed: Vec<f64> = recoveries.iter().filter_map(|t| t.mttr_ms()).collect();
+    report.set("recoveries", recoveries.len() as u64);
+    if !healed.is_empty() {
+        let mttr_ms = healed.iter().sum::<f64>() / healed.len() as f64;
+        report.set("mttr_ms", mttr_ms);
+        println!(
+            "  fault recovery: {}/{} healed, mttr {mttr_ms:.1} ms",
+            healed.len(),
+            recoveries.len()
+        );
+    } else if !recoveries.is_empty() {
+        println!(
+            "  fault recovery: {} ticket(s) unresolved at end-of-stream \
+             (budget too small for the stall to heal in-run)",
+            recoveries.len()
+        );
+    }
+    if log.degraded() {
+        println!("  note: supervisor marked the job DEGRADED");
+    }
     report.set(
         "machine",
         std::env::var("STRETCH_BENCH_MACHINE").unwrap_or_else(|_| "unnamed".into()),

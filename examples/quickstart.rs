@@ -4,7 +4,8 @@
 //! two higher layers: declare a whole topology as 20 lines of config,
 //! and drive a live job from your own code through `Job::launch`'s
 //! `JobHandle` (scale with measured reconfig latencies, sample metrics,
-//! quiesce, shut down).
+//! quiesce, shut down). Finally: kill a worker mid-run and watch the
+//! supervisor heal it by reconfiguration alone.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -87,6 +88,7 @@ fn main() {
     declare_a_job_in_20_lines_of_config();
     drive_a_live_job_from_your_own_code();
     pin_the_data_plane_with_placement();
+    kill_a_worker_and_watch_it_heal();
 }
 
 /// 7. The declarative layer: a whole elastic TOPOLOGY — stages, edges,
@@ -242,5 +244,60 @@ enabled = true
     println!(
         "  pinned job done: {} counts at the egress — same topology, NUMA-local gates",
         out.result.egress_count
+    );
+}
+
+/// 10. Self-healing: kill a worker mid-run and watch it heal. A
+///     `[faults]` section scripts the crash; containment catches the
+///     panic (the slot goes Dead but keeps its gate share), detection
+///     flags it on the next runtime tick, and the supervisor — attached
+///     automatically whenever `[faults]` is present — evicts the dead
+///     worker through a NORMAL epoch switch: its zombie replays the
+///     unprocessed share through the surviving epoch (no state
+///     transfer), then the stage re-grows onto a fresh slot. Each
+///     recovery is a ticket whose detection→healed latency is the
+///     `mttr_ms` of `BENCH_<job>.json`.
+fn kill_a_worker_and_watch_it_heal() {
+    let job = stretch::config::Config::parse(
+        r#"
+name = "quickstart-chaos"
+[topology]
+stages = ["tokenize", "count"]
+edges = ["tokenize -> count"]
+[stage.tokenize]
+operator = "tweet-tokenize"
+initial = 2
+max = 3
+[stage.count]
+operator = "word-count"
+ws_ms = 500
+initial = 2
+max = 2
+[run]
+duration_s = 3
+rate = 400
+time_scale = 3.0
+[faults]
+steps = ["1 -> kill tokenize:0"]
+"#,
+    )
+    .unwrap();
+    println!("\nchaos: kill tokenize worker 0 at event second 1 and let the supervisor heal it...");
+    let out = stretch::harness::run_job(&job, None).unwrap_or_else(|e| panic!("job error: {e}"));
+    for r in &out.recoveries {
+        let stage = &out.stage_names[r.stage()];
+        match r.mttr_ms() {
+            Some(ms) => println!(
+                "  {stage} worker {} ({:?}): healed in {ms:.1} ms (detection → healed)",
+                r.worker(),
+                r.kind()
+            ),
+            None => println!("  {stage} worker {}: NOT healed before end-of-stream", r.worker()),
+        }
+    }
+    println!(
+        "  {} counts at the egress{} — crash recovery IS reconfiguration",
+        out.result.egress_count,
+        if out.degraded { " (job DEGRADED)" } else { "" }
     );
 }

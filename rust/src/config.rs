@@ -108,6 +108,51 @@ impl PlacementConfig {
     }
 }
 
+/// Fault-injection & supervision knobs: parsed from a config's
+/// `[faults]` section (the chaos face of `harness::faults`). Absent
+/// section ⇒ `enabled = false` and NO supervisor is attached — healthy
+/// jobs keep exactly their pre-supervision behavior.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultsConfig {
+    /// True iff the config has any `faults.*` key: the opt-in switch for
+    /// the whole supervision machinery (detector thresholds, supervisor
+    /// policy, recovery tickets).
+    pub enabled: bool,
+    /// Attach a `SupervisorPolicy` so injected faults self-heal (default
+    /// true); `false` runs the raw containment story — workers die and
+    /// stay dead, for experiments that measure degradation itself.
+    pub supervise: bool,
+    /// Stall detector window (ms): a worker whose progress epoch hasn't
+    /// advanced for this long while its stage has backlog is classified
+    /// stalled.
+    pub stall_after_ms: u64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig { enabled: false, supervise: true, stall_after_ms: 250 }
+    }
+}
+
+impl FaultsConfig {
+    /// Read the `[faults]` section (missing keys keep defaults). The
+    /// scripted `steps` list is parsed separately —
+    /// `harness::FaultPlan::parse` needs the declared stage names.
+    ///
+    /// Adding a key here? Also register it in
+    /// `harness::JOB_SECTION_KEYS`, or job configs using it will be
+    /// rejected as typos.
+    pub fn from_config(c: &Config) -> Self {
+        let d = FaultsConfig::default();
+        FaultsConfig {
+            enabled: c.keys().any(|k| k.starts_with("faults.")),
+            supervise: c.bool_or("faults.supervise", d.supervise),
+            stall_after_ms: c.int_or("faults.stall_after_ms", d.stall_after_ms as i64).max(1)
+                as u64,
+        }
+    }
+}
+
 /// Parsed configuration value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ConfigValue {
@@ -371,6 +416,23 @@ impl Config {
         }
     }
 
+    pub fn str_list(&self, key: &str) -> Result<Vec<String>, ConfigError> {
+        match self.require(key)? {
+            ConfigValue::List(xs) => xs
+                .iter()
+                .map(|x| match x {
+                    ConfigValue::Str(s) => Ok(s.clone()),
+                    other => Err(ConfigError::Type {
+                        key: key.into(),
+                        expected: "string list",
+                        got: other.to_string(),
+                    }),
+                })
+                .collect(),
+            other => Err(ConfigError::Type { key: key.into(), expected: "list", got: other.to_string() }),
+        }
+    }
+
     /// Typed getter with default.
     pub fn int_or(&self, key: &str, default: i64) -> i64 {
         self.int(key).unwrap_or(default)
@@ -496,6 +558,25 @@ rate_scale = 1.5
         assert!(p.enabled);
         assert!(!p.pin_runtime);
         assert!(p.pin_workers);
+    }
+
+    #[test]
+    fn faults_section_defaults_and_overrides() {
+        let d = FaultsConfig::from_config(&Config::parse("").unwrap());
+        assert_eq!(d, FaultsConfig::default());
+        assert!(!d.enabled, "no [faults] section means no supervision machinery");
+        let c = Config::parse("[faults]\nsupervise = false\nstall_after_ms = 100").unwrap();
+        let f = FaultsConfig::from_config(&c);
+        assert!(f.enabled);
+        assert!(!f.supervise);
+        assert_eq!(f.stall_after_ms, 100);
+        // the steps list alone flips the section on
+        let c = Config::parse("[faults]\nsteps = [\"1 -> kill a:0\"]").unwrap();
+        assert!(FaultsConfig::from_config(&c).enabled);
+        assert_eq!(c.str_list("faults.steps").unwrap(), vec!["1 -> kill a:0".to_string()]);
+        assert!(c.str_list("faults.missing").is_err(), "missing key is a typed error");
+        let c = Config::parse("[faults]\nsteps = [1, 2]").unwrap();
+        assert!(c.str_list("faults.steps").is_err(), "non-string elements are typed errors");
     }
 
     #[test]

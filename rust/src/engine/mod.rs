@@ -38,4 +38,7 @@ pub use epoch::{EpochConfig, EpochState, PendingReconfig};
 pub use ingress::{ControlPlane, StretchIngress};
 pub use pipeline::{ControlInjector, Pipeline, PipelineBuilder, StageHandle};
 pub use sn::{SnEgress, SnEngine, SnIngress, SnOptions};
-pub use vsn::{EgressDriver, EngineClock, StageIo, VsnEngine, VsnOptions, WORKER_BATCH};
+pub use vsn::{
+    EgressDriver, EngineClock, InjectedFault, StageIo, VsnEngine, VsnOptions, WorkerHealth,
+    WorkerHealthSnapshot, WorkerState, WORKER_BATCH,
+};

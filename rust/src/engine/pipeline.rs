@@ -138,6 +138,11 @@ pub trait StageHandle: Send {
     fn set_worker_batch(&self, n: usize);
     /// Completed reconfigurations of this stage: (epoch, wall ms).
     fn completion_times(&self) -> Vec<(Epoch, f64)>;
+    /// The stage's per-worker health slab (supervision + fault
+    /// injection). `None` for engines without a supervision surface.
+    fn worker_health(&self) -> Option<Arc<crate::engine::vsn::WorkerHealth>> {
+        None
+    }
     /// Stop and join the stage's instance threads.
     fn shutdown(&mut self);
 }
@@ -214,6 +219,10 @@ where
 
     fn completion_times(&self) -> Vec<(Epoch, f64)> {
         self.engine.control.completion_times()
+    }
+
+    fn worker_health(&self) -> Option<Arc<crate::engine::vsn::WorkerHealth>> {
+        Some(self.engine.health())
     }
 
     fn shutdown(&mut self) {

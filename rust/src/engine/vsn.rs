@@ -14,6 +14,30 @@
 //! gate — stage N's ESG_out is stage N+1's ESG_in, the zero-copy hand-off
 //! behind [`crate::engine::pipeline`]. [`VsnEngine::setup`] composes the
 //! two halves for the classic single-operator shape.
+//!
+//! ## Supervision & fault containment
+//! Each worker's batch loop runs under `catch_unwind`: an operator panic
+//! marks the slot [`WorkerState::Dead`] in the per-stage [`WorkerHealth`]
+//! slab and flips the worker into *zombie* mode — it keeps reading (so
+//! epoch barriers still form and its backlog share stays GC-accounted)
+//! but processes nothing, never beats, and never advances its out clock.
+//! The frozen clock holds the downstream merge at the death watermark; at
+//! the healing epoch switch the zombie replays its pinned unprocessed
+//! share `[first_unprocessed, S)` through the ordinary `handle_input`
+//! path (recovery IS reconfiguration — no state transfer), a second
+//! barrier orders slot removal after the replay, and the thread exits
+//! once its reader is decommissioned. Fault-model boundaries, by design:
+//! injected kills panic at an exact batch boundary so replay is exact;
+//! a *real* mid-tuple panic drops the in-flight tuple's partial staged
+//! emissions and replays it in full, which is exactly-once for emissions
+//! but at-least-once for that one tuple's shared-state side effects; a
+//! panic that poisons a shard lock cascades to the other instances
+//! touching that shard (they die and heal the same way); a second panic
+//! during replay abandons the dead share. During a recovery window the
+//! out-gate bound freezes at the dead worker's clock, so survivors can
+//! only run ahead by their per-source SPSC queue capacity — supervision
+//! must heal promptly (the shipped [`crate::harness::policy`] supervisor
+//! reacts on its first tick).
 
 use crate::engine::barrier::EpochBarrier;
 use crate::engine::epoch::{EpochConfig, EpochState, PendingReconfig};
@@ -22,11 +46,13 @@ use crate::metrics::{Histogram, OperatorMetrics};
 use crate::operator::state::SharedState;
 use crate::operator::{Ctx, OperatorCore, OperatorDef, OperatorLogic};
 use crate::scalegate::{Esg, EsgConfig, ReaderHandle, SourceHandle};
+use crate::time::EventTime;
 use crate::tuple::{InstanceId, Kind, Mapper, Tuple};
-use crate::util::Backoff;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::{Backoff, CachePadded};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Default tuples a worker takes from ESG_in per gate synchronization
 /// (see [`ReaderHandle::get_batch`]) and emits downstream per
@@ -116,6 +142,199 @@ impl Default for EngineClock {
     }
 }
 
+/// Lifecycle of one worker slot as the supervision layer sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Processing (or idle with nothing to do).
+    Live,
+    /// Progress stopped while backlog is nonzero (detector-classified) or
+    /// an injected stall is in effect. Recovers by itself: the next
+    /// processed batch flips the slot back to [`WorkerState::Live`].
+    Stalled,
+    /// The worker panicked (or an injected kill fired). Terminal for the
+    /// slot — dead instances leave the epoch via reconfiguration and
+    /// their threads exit once decommissioned.
+    Dead,
+}
+
+/// A scripted fault armed into a worker's health slot; the worker applies
+/// it at its next batch boundary ([`WorkerHealth::inject`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InjectedFault {
+    /// Panic before popping any tuple of the next batch — containment
+    /// catches it at an exact batch boundary, so crash replay is exact.
+    Kill,
+    /// Stop reading, beating and advancing clocks for this many wall ms,
+    /// then resume and catch up (position-deterministic, so exactly-once
+    /// needs no repair).
+    Stall(u64),
+    /// Sleep this many microseconds before each processed batch.
+    Slow(u64),
+}
+
+const FAULT_NONE: u64 = 0;
+const FAULT_KILL: u64 = 1;
+const FAULT_STALL: u64 = 2;
+const FAULT_SLOW: u64 = 3;
+
+impl InjectedFault {
+    fn encode(self) -> u64 {
+        match self {
+            InjectedFault::Kill => FAULT_KILL,
+            InjectedFault::Stall(ms) => FAULT_STALL | (ms << 8),
+            InjectedFault::Slow(us) => FAULT_SLOW | (us << 8),
+        }
+    }
+
+    fn decode(v: u64) -> Option<InjectedFault> {
+        match v & 0xff {
+            FAULT_NONE => None,
+            FAULT_KILL => Some(InjectedFault::Kill),
+            FAULT_STALL => Some(InjectedFault::Stall(v >> 8)),
+            FAULT_SLOW => Some(InjectedFault::Slow(v >> 8)),
+            _ => None,
+        }
+    }
+}
+
+const STATE_LIVE: u8 = 0;
+const STATE_STALLED: u8 = 1;
+const STATE_DEAD: u8 = 2;
+
+/// One worker slot's health cell. Cache-padded: the owning worker beats
+/// into it once per batch while the runtime detector reads every slot
+/// every tick — adjacent slots must not share a line.
+struct HealthSlot {
+    /// `WorkerState` encoding (`STATE_*`).
+    state: AtomicU8,
+    /// Monotone progress epoch: batches processed since launch.
+    progress: AtomicU64,
+    /// µs since the slab's origin at the last progress beat.
+    last_advance_us: AtomicU64,
+    /// Pending injected fault (encoded; 0 = none).
+    fault: AtomicU64,
+}
+
+/// Point-in-time copy of one slot (detector / metrics consumption).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerHealthSnapshot {
+    pub state: WorkerState,
+    pub progress: u64,
+    pub last_advance_us: u64,
+}
+
+/// Per-worker health slab shared between a stage's workers (writers), the
+/// runtime detector (reader + stall classifier) and the fault injector.
+/// One cache-padded slot per instance slot (`0..max`).
+pub struct WorkerHealth {
+    origin: Instant,
+    slots: Vec<CachePadded<HealthSlot>>,
+}
+
+impl WorkerHealth {
+    pub fn new(n: usize) -> Arc<Self> {
+        let origin = Instant::now();
+        Arc::new(WorkerHealth {
+            origin,
+            slots: (0..n)
+                .map(|_| {
+                    CachePadded::new(HealthSlot {
+                        state: AtomicU8::new(STATE_LIVE),
+                        progress: AtomicU64::new(0),
+                        last_advance_us: AtomicU64::new(0),
+                        fault: AtomicU64::new(FAULT_NONE),
+                    })
+                })
+                .collect(),
+        })
+    }
+
+    /// Number of slots (the stage's max parallelism).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// µs since the slab's origin — the time base of
+    /// [`WorkerHealthSnapshot::last_advance_us`].
+    pub fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    /// Progress beat from worker `id`: bump the progress epoch, stamp the
+    /// advance time, and clear a detector-applied stall mark. Never
+    /// resurrects a dead slot.
+    pub fn beat(&self, id: InstanceId) {
+        let s = &self.slots[id];
+        s.progress.fetch_add(1, Ordering::Relaxed);
+        s.last_advance_us.store(self.now_us(), Ordering::Relaxed);
+        let _ = s.state.compare_exchange(
+            STATE_STALLED,
+            STATE_LIVE,
+            Ordering::AcqRel,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// Detector-side stall classification (progress epoch unchanged past
+    /// the stall window while backlog is nonzero). Only a live slot can
+    /// become stalled; the worker un-stalls itself at its next beat.
+    pub fn mark_stalled(&self, id: InstanceId) {
+        let _ = self.slots[id].state.compare_exchange(
+            STATE_LIVE,
+            STATE_STALLED,
+            Ordering::AcqRel,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// Worker-side death mark (caught panic). Terminal.
+    pub fn mark_dead(&self, id: InstanceId) {
+        self.slots[id].state.store(STATE_DEAD, Ordering::Release);
+    }
+
+    pub fn state(&self, id: InstanceId) -> WorkerState {
+        match self.slots[id].state.load(Ordering::Acquire) {
+            STATE_LIVE => WorkerState::Live,
+            STATE_STALLED => WorkerState::Stalled,
+            _ => WorkerState::Dead,
+        }
+    }
+
+    pub fn progress(&self, id: InstanceId) -> u64 {
+        self.slots[id].progress.load(Ordering::Relaxed)
+    }
+
+    pub fn last_advance_us(&self, id: InstanceId) -> u64 {
+        self.slots[id].last_advance_us.load(Ordering::Relaxed)
+    }
+
+    /// Arm a fault into slot `id`; the worker applies it at its next
+    /// batch boundary. A second injection before pickup overwrites.
+    pub fn inject(&self, id: InstanceId, fault: InjectedFault) {
+        self.slots[id].fault.store(fault.encode(), Ordering::Release);
+    }
+
+    /// Worker-side pickup: take and clear the pending fault, if any.
+    pub fn take_fault(&self, id: InstanceId) -> Option<InjectedFault> {
+        InjectedFault::decode(self.slots[id].fault.swap(FAULT_NONE, Ordering::AcqRel))
+    }
+
+    /// Copy every slot (runtime detector / [`crate::harness`] metrics).
+    pub fn snapshot(&self) -> Vec<WorkerHealthSnapshot> {
+        (0..self.slots.len())
+            .map(|i| WorkerHealthSnapshot {
+                state: self.state(i),
+                progress: self.progress(i),
+                last_advance_us: self.last_advance_us(i),
+            })
+            .collect()
+    }
+}
+
 /// The gate ends one engine needs: its input gate (with the worker-side
 /// readers and any external-source handles) and its output gate (with the
 /// worker-side sources). Output *readers* are not part of a stage — they
@@ -156,6 +375,8 @@ pub struct VsnEngine<L: OperatorLogic> {
     epoch: Arc<EpochState>,
     state: Arc<SharedState<L::State>>,
     running: Arc<AtomicBool>,
+    /// Per-worker health slab (containment + detection + injection).
+    health: Arc<WorkerHealth>,
     /// Live worker-batch tunable: workers re-read it every gate
     /// synchronization, so the harness can resize batches from observed
     /// backlog without a reconfiguration (adaptive batch sizing).
@@ -221,6 +442,7 @@ where
         let control = ControlPlane::new(io.in_sources.len(), 0);
         let barrier = Arc::new(EpochBarrier::new());
         let running = Arc::new(AtomicBool::new(true));
+        let health = WorkerHealth::new(opts.max);
 
         let batch = opts.worker_batch.max(1);
         let batch_knob = Arc::new(AtomicUsize::new(batch));
@@ -239,11 +461,19 @@ where
                 barrier: barrier.clone(),
                 control: control.clone(),
                 running: running.clone(),
+                health: health.clone(),
                 cur: epoch.current(),
                 pending: None,
                 reader_base: io.reader_base,
                 source_base: io.source_base,
                 ctrl_tag: io.ctrl_tag,
+                dead: false,
+                dead_wm: crate::time::TIME_MIN,
+                replay: Vec::new(),
+                armed_kill: false,
+                slow_us: 0,
+                in_flight: false,
+                staged_mark: 0,
             };
             let pin = opts.worker_cores.get(id).copied();
             threads.push(
@@ -276,6 +506,7 @@ where
                 epoch,
                 state,
                 running,
+                health,
                 batch_knob,
                 threads,
                 in_reader_lo: io.reader_base,
@@ -308,6 +539,12 @@ where
     /// Current epoch configuration (e, 𝕆, f_μ).
     pub fn epoch_config(&self) -> Arc<EpochConfig> {
         self.epoch.current()
+    }
+
+    /// The stage's per-worker health slab: the supervision layer's view
+    /// of every instance slot, and the fault-injection surface.
+    pub fn health(&self) -> Arc<WorkerHealth> {
+        self.health.clone()
     }
 
     /// The shared state σ (diagnostics / tests).
@@ -350,6 +587,7 @@ struct Worker<L: OperatorLogic> {
     barrier: Arc<EpochBarrier>,
     control: Arc<ControlPlane>,
     running: Arc<AtomicBool>,
+    health: Arc<WorkerHealth>,
     cur: Arc<EpochConfig>,
     pending: Option<PendingReconfig>,
     /// Gate slot offsets: instance j ⇔ reader slot `reader_base + j` on
@@ -360,6 +598,32 @@ struct Worker<L: OperatorLogic> {
     /// Control tuples are broadcast to every reader group on a shared
     /// gate; only specs tagged for this stage are adopted.
     ctrl_tag: u8,
+    /// Zombie mode: a caught panic flips this. The worker keeps reading
+    /// (so epoch barriers still form and its backlog share stays
+    /// GC-accounted) but processes nothing, never beats, and never
+    /// advances its out clock — the frozen clock holds the downstream
+    /// merge at the death watermark until crash replay runs.
+    dead: bool,
+    /// The zombie's watermark mirror — `observe` on the (possibly
+    /// poisoned) core is off-limits, but delivered tuples are globally
+    /// ts-sorted, so a running max is exactly the live trigger condition.
+    dead_wm: EventTime,
+    /// Crash-replay segments: (first log index, epoch config in force
+    /// from that index). Seeded at death with the unprocessed share's
+    /// start; extended at every epoch switch the zombie lives through.
+    replay: Vec<(u64, Arc<EpochConfig>)>,
+    /// Injected kill armed at the last batch boundary: panic at the top
+    /// of the next batch, before any tuple is popped.
+    armed_kill: bool,
+    /// Injected slowdown: sleep this long before each processed batch.
+    slow_us: u64,
+    /// True while one tuple is popped but not fully stepped — a real
+    /// panic mid-tuple must replay that tuple too.
+    in_flight: bool,
+    /// `out_buf` length at the current tuple's step entry: emissions past
+    /// this mark belong to the in-flight tuple and are dropped on a
+    /// crash (the replay re-emits them in full).
+    staged_mark: usize,
 }
 
 impl<L: OperatorLogic> Worker<L>
@@ -378,7 +642,19 @@ where
             // adaptive batch sizing: pick up the harness's latest tuning
             // (one uncontended relaxed load per gate synchronization)
             self.batch = self.batch_knob.load(Ordering::Relaxed).max(1);
+            if !self.dead {
+                self.apply_fault();
+            }
             if self.reader.get_batch(&mut batch, self.batch) == 0 {
+                if self.dead {
+                    // decommissioned zombie: the heal removed this slot
+                    // from the gate, nothing is left to drain — exit.
+                    if !self.reader.is_active() {
+                        break;
+                    }
+                    backoff.snooze();
+                    continue;
+                }
                 // idle: don't sit on staged emissions
                 self.flush_out();
                 backoff.snooze();
@@ -386,22 +662,126 @@ where
             }
             backoff.reset();
             batch.reverse();
-            while let Some(t) = batch.pop() {
-                // Pool instances activated while parked adopt the installed
-                // epoch here (one uncontended atomic load per tuple; active
-                // instances update `cur` themselves at the barrier). Checked
-                // per tuple, not per batch: the Acquire read of the reader's
-                // active flag in get_batch happens-before this load, so a
-                // freshly provisioned instance can never process its seed
-                // batch under a stale f_μ.
-                if self.cur.epoch != self.epoch.epoch_no() {
-                    self.cur = self.epoch.current();
-                    self.core.rebuild_expiry_index(&self.cur.mapper);
-                }
-                self.step(t, batch.len());
+            if self.dead {
+                self.drain_dead(&mut batch);
+                continue;
             }
-            // one batched downstream add per input batch
-            self.flush_out();
+            // Containment: an operator panic is caught at batch
+            // granularity. The worker enters zombie mode instead of
+            // unwinding the thread — a vanished thread would deadlock
+            // every future epoch barrier and strand its backlog share.
+            if std::panic::catch_unwind(AssertUnwindSafe(|| self.process_batch(&mut batch)))
+                .is_err()
+            {
+                self.enter_dead(&mut batch);
+            }
+        }
+    }
+
+    /// One live input batch: the old `run` inner loop, hoisted so the
+    /// panic boundary sits exactly at batch granularity.
+    fn process_batch(&mut self, batch: &mut Vec<Tuple<L::In>>) {
+        if self.armed_kill {
+            self.armed_kill = false;
+            panic!("injected fault: kill (worker {})", self.core.id);
+        }
+        if self.slow_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.slow_us));
+        }
+        while let Some(t) = batch.pop() {
+            // Pool instances activated while parked adopt the installed
+            // epoch here (one uncontended atomic load per tuple; active
+            // instances update `cur` themselves at the barrier). Checked
+            // per tuple, not per batch: the Acquire read of the reader's
+            // active flag in get_batch happens-before this load, so a
+            // freshly provisioned instance can never process its seed
+            // batch under a stale f_μ.
+            if self.cur.epoch != self.epoch.epoch_no() {
+                self.cur = self.epoch.current();
+                self.core.rebuild_expiry_index(&self.cur.mapper);
+            }
+            self.in_flight = true;
+            self.step(t, batch.len());
+            self.in_flight = false;
+        }
+        // one batched downstream add per input batch
+        self.flush_out();
+        self.health.beat(self.core.id);
+    }
+
+    /// Apply a pending injected fault at this batch boundary.
+    fn apply_fault(&mut self) {
+        match self.health.take_fault(self.core.id) {
+            None => {}
+            Some(InjectedFault::Kill) => self.armed_kill = true,
+            Some(InjectedFault::Slow(us)) => self.slow_us = us,
+            Some(InjectedFault::Stall(ms)) => {
+                // sleep in slices so shutdown stays responsive; no reads,
+                // no beats, no clock advances — exactly what a wedged
+                // worker looks like. On resume the worker catches up
+                // through the position-deterministic epoch machinery.
+                let until = Instant::now() + Duration::from_millis(ms);
+                while Instant::now() < until && self.running.load(Ordering::Acquire) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    /// A panic escaped the operator: mark this slot dead and switch to
+    /// zombie mode. The unprocessed share `[first_unprocessed, …)` is
+    /// pinned in the gate log for crash replay at the healing epoch
+    /// switch; completed tuples' staged emissions are flushed (they
+    /// happened), the in-flight tuple's partial emissions are dropped
+    /// (replay re-emits them in full).
+    fn enter_dead(&mut self, batch: &mut Vec<Tuple<L::In>>) {
+        self.out_buf.truncate(self.staged_mark);
+        self.flush_out();
+        let first =
+            self.reader.cursor().saturating_sub(batch.len() as u64 + u64::from(self.in_flight));
+        self.reader.pin_floor(first);
+        self.replay.clear();
+        self.replay.push((first, self.cur.clone()));
+        self.dead = true;
+        self.dead_wm = self.core.watermark();
+        self.in_flight = false;
+        self.health.mark_dead(self.core.id);
+        // the batch remainder may hold control/heartbeat tuples this
+        // worker must still react to — losing a control tuple here would
+        // wedge the stage's next barrier
+        self.drain_dead(batch);
+    }
+
+    /// Zombie batch drain: adopt controls, track the watermark, trigger
+    /// epoch switches — process no data, emit nothing, never beat.
+    fn drain_dead(&mut self, batch: &mut Vec<Tuple<L::In>>) {
+        while let Some(t) = batch.pop() {
+            self.step_dead(&t, batch.len());
+        }
+    }
+
+    /// The zombie's `step`: the control-plane half of processVSN only.
+    /// The watermark mirror is a running max over delivered ts — gate
+    /// delivery is globally ts-sorted, so the epoch-switch trigger fires
+    /// at exactly the same log index as on every live worker.
+    fn step_dead(&mut self, t: &Tuple<L::In>, unconsumed: usize) {
+        match &t.kind {
+            Kind::Control(spec) => {
+                if t.input == self.ctrl_tag && spec.epoch > self.cur.epoch {
+                    self.pending = Some(PendingReconfig { spec: spec.clone(), gamma: t.ts });
+                }
+            }
+            Kind::Data | Kind::Heartbeat => {
+                if t.ts > self.dead_wm {
+                    self.dead_wm = t.ts;
+                    if let Some(p) = &self.pending {
+                        if self.dead_wm > p.gamma {
+                            self.do_reconfig(t, unconsumed);
+                        }
+                    }
+                }
+            }
+            Kind::Flush | Kind::Dummy => {}
         }
     }
 
@@ -435,6 +815,9 @@ where
     /// number of tuples this worker has already taken from the gate but
     /// not yet processed (its batch remainder).
     fn step(&mut self, t: Tuple<L::In>, unconsumed: usize) {
+        // crash boundary: emissions staged past this mark belong to the
+        // tuple now in flight (see `enter_dead`)
+        self.staged_mark = self.out_buf.len();
         match &t.kind {
             Kind::Control(spec) => {
                 // prepareReconfig (Alg. 6): adopt only newer epochs, and
@@ -501,15 +884,28 @@ where
         }
     }
 
-    /// The epoch switch (Alg. 4 L17-21).
+    /// The epoch switch (Alg. 4 L17-21), extended with crash replay: a
+    /// dead instance leaving the epoch re-processes its unprocessed,
+    /// pinned share `[first_unprocessed, S)` under each replay segment's
+    /// f_μ before ANY membership change, where S is the trigger tuple's
+    /// log index — the same index on every reader, because the switch
+    /// fires at the FIRST tuple with ts > γ. Its emissions leave through
+    /// its own out source, whose clock froze at the death watermark, so
+    /// they still merge downstream in ts order (Lemma 2). A second
+    /// barrier then keeps slot removal (and with it gate GC) ordered
+    /// after the replay.
     fn do_reconfig(&mut self, t: &Tuple<L::In>, unconsumed: usize) {
         // Staged emissions precede the switch: flush before the barrier
         // so elasticity latency stays batching-independent and the new
         // out-sources (clock floor t.ts) never trail buffered outputs.
-        self.flush_out();
+        if !self.dead {
+            self.flush_out();
+        }
         let p = self.pending.take().expect("reconfig without pending spec");
-        // barrier over the *current* epoch's instances 𝕆
-        let leader = self.barrier.wait(self.cur.instances.len());
+        // barrier over the *current* epoch's instances 𝕆 — zombies keep
+        // reading precisely so they arrive here and the barrier forms
+        let parties = self.cur.instances.len();
+        let leader = self.barrier.wait(parties);
         // install the new epoch config (idempotent across instances)
         let newcfg = self.epoch.install(&p.spec);
         // membership deltas
@@ -518,6 +914,32 @@ where
             p.spec.instances.iter().copied().filter(|i| !old.contains(i)).collect();
         let leaving: Vec<InstanceId> =
             old.iter().copied().filter(|i| !p.spec.instances.contains(i)).collect();
+        // Every party marked dead did so before arriving at the barrier
+        // above, so all instances compute the same answer here.
+        let dead_leaving =
+            leaving.iter().any(|i| self.health.state(*i) == WorkerState::Dead);
+        if dead_leaving || (self.dead && !leaving.contains(&self.core.id)) {
+            // the trigger tuple's own log index (it is processed under
+            // the NEW f_μ by the survivors, so replay excludes it)
+            let s_idx = self.reader.cursor().saturating_sub(unconsumed as u64 + 1);
+            if self.dead {
+                if leaving.contains(&self.core.id) {
+                    self.replay_dead(s_idx);
+                } else {
+                    // the zombie survives this switch: its share of
+                    // [S, …) is decided by the NEW mapper — open a new
+                    // replay segment at S (S itself included)
+                    self.replay.push((s_idx, newcfg.clone()));
+                }
+            }
+            if dead_leaving {
+                // hold EVERY instance here until the replay finished:
+                // removing the dead slot below would unpin its floor
+                // (GC could eat the range) and racing membership against
+                // the replayed adds is unordered
+                self.barrier.wait(parties);
+            }
+        }
         let mut performed = false;
         // instance id → gate slot id (shared DAG gates offset each
         // stage's slot ranges; 0-offset for private gates)
@@ -551,7 +973,64 @@ where
             self.control.complete(p.spec.epoch);
         }
         self.cur = newcfg;
-        self.core.rebuild_expiry_index(&self.cur.mapper);
+        if !self.dead {
+            // a zombie's core may be poisoned mid-update; it processes no
+            // live tuples, so its expiry index is irrelevant anyway
+            self.core.rebuild_expiry_index(&self.cur.mapper);
+        }
+    }
+
+    /// Crash replay (recovery IS reconfiguration): re-process this dead
+    /// instance's pinned unprocessed share `[first_unprocessed, end)`,
+    /// each segment under the f_μ that governed its index range, through
+    /// the plain `handle_input` path — the internal f_μ filter selects
+    /// exactly this instance's keys, so this is the same work the live
+    /// loop would have done, in the same order. No `observe`/`advance`
+    /// during replay: window closes for remapped keys come from their
+    /// new owners via the post-switch expiry-index rebuild. Emissions
+    /// leave through the zombie's frozen-clock out source and therefore
+    /// merge downstream in ts order (delivered ts are sorted, so every
+    /// replayed ts ≥ the death watermark the clock froze at).
+    ///
+    /// A second panic here (a core poisoned beyond replay) abandons the
+    /// share — the documented boundary of the fault model.
+    fn replay_dead(&mut self, end: u64) {
+        let segs = std::mem::take(&mut self.replay);
+        let crashed = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            for (i, (from, cfg)) in segs.iter().enumerate() {
+                // each later segment starts at (and owns) its own epoch
+                // switch's trigger index
+                let hi = segs.get(i + 1).map_or(end, |next| next.0.min(end));
+                for idx in *from..hi {
+                    let Some(t) = self.reader.peek(idx) else { break };
+                    if !t.kind.is_data() {
+                        continue;
+                    }
+                    let out_buf = &mut self.out_buf;
+                    let staged0 = out_buf.len();
+                    let mut sink = |o: Tuple<L::Out>| {
+                        out_buf.push(o);
+                    };
+                    let mut ctx = Ctx::new(&mut sink);
+                    ctx.ingest_us = t.ingest_us;
+                    self.core.handle_input(&t, &cfg.mapper, &mut ctx);
+                    self.core.metrics.record_in(self.core.id);
+                    let emitted = (self.out_buf.len() - staged0) as u64;
+                    if emitted > 0 {
+                        self.core.metrics.record_out(emitted);
+                    }
+                    if self.out_buf.len() >= self.batch {
+                        self.flush_out();
+                    }
+                }
+            }
+            self.flush_out();
+        }))
+        .is_err();
+        if crashed {
+            self.out_buf.clear();
+        }
+        self.reader.unpin_floor();
     }
 }
 
@@ -621,5 +1100,84 @@ impl<Out: Clone + Send + Sync + 'static> EgressDriver<Tuple<Out>> {
             }
         }
         self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_beat_advances_progress_and_keeps_live() {
+        let h = WorkerHealth::new(2);
+        assert_eq!(h.len(), 2);
+        assert!(!h.is_empty());
+        assert_eq!(h.state(0), WorkerState::Live);
+        assert_eq!(h.progress(0), 0);
+        h.beat(0);
+        h.beat(0);
+        assert_eq!(h.progress(0), 2);
+        assert_eq!(h.state(0), WorkerState::Live);
+        // slot 1 untouched
+        assert_eq!(h.progress(1), 0);
+    }
+
+    #[test]
+    fn health_stall_is_cleared_by_next_beat() {
+        let h = WorkerHealth::new(1);
+        h.mark_stalled(0);
+        assert_eq!(h.state(0), WorkerState::Stalled);
+        h.beat(0);
+        assert_eq!(h.state(0), WorkerState::Live);
+    }
+
+    #[test]
+    fn health_dead_is_terminal() {
+        let h = WorkerHealth::new(1);
+        h.mark_dead(0);
+        assert_eq!(h.state(0), WorkerState::Dead);
+        // neither a beat nor a stall mark resurrects a dead slot
+        h.beat(0);
+        assert_eq!(h.state(0), WorkerState::Dead);
+        h.mark_stalled(0);
+        assert_eq!(h.state(0), WorkerState::Dead);
+    }
+
+    #[test]
+    fn fault_injection_roundtrips_params() {
+        let h = WorkerHealth::new(3);
+        h.inject(0, InjectedFault::Kill);
+        h.inject(1, InjectedFault::Stall(750));
+        h.inject(2, InjectedFault::Slow(12_345));
+        assert_eq!(h.take_fault(0), Some(InjectedFault::Kill));
+        assert_eq!(h.take_fault(1), Some(InjectedFault::Stall(750)));
+        assert_eq!(h.take_fault(2), Some(InjectedFault::Slow(12_345)));
+        // pickup clears the pending fault
+        assert_eq!(h.take_fault(0), None);
+        assert_eq!(h.take_fault(1), None);
+        assert_eq!(h.take_fault(2), None);
+    }
+
+    #[test]
+    fn fault_injection_overwrites_before_pickup() {
+        let h = WorkerHealth::new(1);
+        h.inject(0, InjectedFault::Stall(100));
+        h.inject(0, InjectedFault::Kill);
+        assert_eq!(h.take_fault(0), Some(InjectedFault::Kill));
+    }
+
+    #[test]
+    fn health_snapshot_copies_every_slot() {
+        let h = WorkerHealth::new(3);
+        h.beat(0);
+        h.mark_stalled(1);
+        h.mark_dead(2);
+        let snap = h.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap[0].state, WorkerState::Live);
+        assert_eq!(snap[0].progress, 1);
+        assert!(snap[0].last_advance_us <= h.now_us());
+        assert_eq!(snap[1].state, WorkerState::Stalled);
+        assert_eq!(snap[2].state, WorkerState::Dead);
     }
 }

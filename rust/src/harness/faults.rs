@@ -1,0 +1,321 @@
+//! Scripted fault injection: the `[faults]` section of a job config,
+//! parsed into a [`FaultPlan`] and driven through the live [`JobCtl`] by
+//! a [`FaultPolicy`] — the chaos half of the supervision story (the
+//! healing half is [`super::policy::SupervisorPolicy`]).
+//!
+//! Steps use the same `"<second> -> <action>"` arrow idiom as
+//! `[schedule.<stage>]` ([`crate::workloads::rates::parse_steps`]), with
+//! a fault action on the right-hand side:
+//!
+//! ```text
+//! [faults]
+//! steps = [
+//!   "2 -> kill filter:0",     # panic worker 0 of stage `filter`
+//!   "3 -> stall join:1 300",  # freeze worker 1 of `join` for 300 ms
+//!   "1 -> slow left:0 4",     # ~4 ms extra latency per batch on left:0
+//!   "5 -> poison right",      # kill EVERY active worker of `right`
+//! ]
+//! ```
+//!
+//! Faults are delivered through [`JobCtl::inject_fault`] →
+//! [`crate::engine::WorkerHealth::inject`]; the worker picks its fault up
+//! at the top of its batch loop, BEFORE popping tuples, so an injected
+//! kill is crash-exact: replay after healing re-processes precisely the
+//! unprocessed gate suffix (see `engine::vsn`'s supervision notes).
+//! `poison` fans a kill out to every active worker, leaving the
+//! supervisor no survivor set — the bounded fail-fast path (shed + mark
+//! degraded), not a hang.
+
+use super::handle::{JobCtl, JobMetrics};
+use super::policy::JobPolicy;
+use crate::engine::InjectedFault;
+use crate::tuple::InstanceId;
+
+/// One parsed fault action (the right-hand side of a step).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic one worker at the top of its next batch.
+    Kill { stage: usize, worker: InstanceId },
+    /// Freeze one worker for `ms` wall milliseconds (no reads, no
+    /// progress beats); it resumes by itself — exactly-once is automatic.
+    Stall { stage: usize, worker: InstanceId, ms: u64 },
+    /// Slow one worker down by ~`factor` ms of extra latency per batch.
+    Slow { stage: usize, worker: InstanceId, factor: u64 },
+    /// Kill EVERY worker active on the stage at fire time.
+    Poison { stage: usize },
+}
+
+/// One timed step of a [`FaultPlan`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultStep {
+    /// Event second the fault fires at.
+    pub at: u32,
+    pub action: FaultAction,
+}
+
+/// A validated, time-sorted fault script (`[faults] steps`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub steps: Vec<FaultStep>,
+}
+
+fn stage_index(name: &str, stages: &[(&str, usize)], it: &str) -> Result<usize, String> {
+    stages.iter().position(|(n, _)| *n == name).ok_or_else(|| {
+        format!(
+            "`{it}`: unknown stage `{name}` (declared: {})",
+            stages.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+        )
+    })
+}
+
+/// Parse a `<stage>:<worker>` reference against the declared stages and
+/// their pool sizes.
+fn worker_ref(
+    tok: &str,
+    stages: &[(&str, usize)],
+    it: &str,
+) -> Result<(usize, InstanceId), String> {
+    let (name, idx) = tok
+        .split_once(':')
+        .ok_or_else(|| format!("`{it}`: expected `<stage>:<worker>`, got `{tok}`"))?;
+    let k = stage_index(name.trim(), stages, it)?;
+    let w: InstanceId = idx
+        .trim()
+        .parse()
+        .map_err(|_| format!("`{it}`: worker index in `{tok}` must be an integer"))?;
+    let (sname, max) = stages[k];
+    if w >= max {
+        return Err(format!(
+            "`{it}`: worker {w} is outside stage `{sname}`'s pool (max parallelism {max})"
+        ));
+    }
+    Ok((k, w))
+}
+
+impl FaultPlan {
+    /// Parse `[faults] steps` items against the declared stages
+    /// (`(name, max parallelism)` pairs, topology order). Unknown stages,
+    /// unknown verbs, worker indices outside the pool, malformed numbers
+    /// and trailing garbage are all errors — a fault script that silently
+    /// skips a step would make a chaos run look healthier than it is.
+    pub fn parse(items: &[String], stages: &[(&str, usize)]) -> Result<FaultPlan, String> {
+        let mut steps = Vec::with_capacity(items.len());
+        for it in items {
+            let (at, rhs) = it
+                .split_once("->")
+                .ok_or_else(|| format!("expected `<second> -> <action>`, got `{it}`"))?;
+            let at: u32 = at
+                .trim()
+                .parse()
+                .map_err(|_| format!("`{it}`: the part before `->` must be an event second"))?;
+            let mut words = rhs.split_whitespace();
+            let verb = words
+                .next()
+                .ok_or_else(|| format!("`{it}`: missing action after `->`"))?;
+            let action = match verb {
+                "kill" => {
+                    let tok = words
+                        .next()
+                        .ok_or_else(|| format!("`{it}`: kill needs `<stage>:<worker>`"))?;
+                    let (stage, worker) = worker_ref(tok, stages, it)?;
+                    FaultAction::Kill { stage, worker }
+                }
+                "stall" => {
+                    let tok = words
+                        .next()
+                        .ok_or_else(|| format!("`{it}`: stall needs `<stage>:<worker> <ms>`"))?;
+                    let (stage, worker) = worker_ref(tok, stages, it)?;
+                    let ms: u64 = words
+                        .next()
+                        .ok_or_else(|| format!("`{it}`: stall needs a duration in ms"))?
+                        .parse()
+                        .map_err(|_| format!("`{it}`: stall duration must be an integer (ms)"))?;
+                    if ms == 0 {
+                        return Err(format!("`{it}`: stall duration must be ≥ 1 ms"));
+                    }
+                    FaultAction::Stall { stage, worker, ms }
+                }
+                "slow" => {
+                    let tok = words
+                        .next()
+                        .ok_or_else(|| format!("`{it}`: slow needs `<stage>:<worker> <factor>`"))?;
+                    let (stage, worker) = worker_ref(tok, stages, it)?;
+                    let factor: u64 = words
+                        .next()
+                        .ok_or_else(|| format!("`{it}`: slow needs a factor"))?
+                        .parse()
+                        .map_err(|_| format!("`{it}`: slow factor must be an integer"))?;
+                    if factor == 0 {
+                        return Err(format!("`{it}`: slow factor must be ≥ 1"));
+                    }
+                    FaultAction::Slow { stage, worker, factor }
+                }
+                "poison" => {
+                    let name = words
+                        .next()
+                        .ok_or_else(|| format!("`{it}`: poison needs a stage name"))?;
+                    FaultAction::Poison { stage: stage_index(name, stages, it)? }
+                }
+                other => {
+                    return Err(format!(
+                        "`{it}`: unknown fault `{other}` (known: kill, stall, slow, poison)"
+                    ))
+                }
+            };
+            if let Some(extra) = words.next() {
+                return Err(format!("`{it}`: unexpected trailing `{extra}`"));
+            }
+            steps.push(FaultStep { at, action });
+        }
+        steps.sort_by_key(|s| s.at);
+        Ok(FaultPlan { steps })
+    }
+}
+
+/// Drives a [`FaultPlan`] through a live job: each step fires exactly
+/// once when event time passes its second, as a [`JobCtl::inject_fault`]
+/// call — the same policy shape as [`super::policy::ScriptedScalePolicy`]
+/// so [`super::drive`] needs no special casing for chaos runs.
+pub struct FaultPolicy {
+    steps: Vec<FaultStep>,
+    next: usize,
+}
+
+impl FaultPolicy {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultPolicy { steps: plan.steps, next: 0 }
+    }
+
+    /// How many steps have fired so far.
+    pub fn fired(&self) -> usize {
+        self.next
+    }
+}
+
+impl JobPolicy for FaultPolicy {
+    fn tick(&mut self, m: &JobMetrics, job: &JobCtl) {
+        while let Some(step) = self.steps.get(self.next) {
+            if (step.at as f64) > m.event_s {
+                break;
+            }
+            match &step.action {
+                FaultAction::Kill { stage, worker } => {
+                    job.inject_fault(*stage, *worker, InjectedFault::Kill);
+                }
+                FaultAction::Stall { stage, worker, ms } => {
+                    job.inject_fault(*stage, *worker, InjectedFault::Stall(*ms));
+                }
+                FaultAction::Slow { stage, worker, factor } => {
+                    // factor ≈ extra milliseconds per batch
+                    job.inject_fault(
+                        *stage,
+                        *worker,
+                        InjectedFault::Slow(factor.saturating_mul(1_000)),
+                    );
+                }
+                FaultAction::Poison { stage } => {
+                    // fan a kill out to every worker active RIGHT NOW —
+                    // by design this leaves the supervisor no survivors
+                    for w in m.stages[*stage].active.clone() {
+                        job.inject_fault(*stage, w, InjectedFault::Kill);
+                    }
+                }
+            }
+            self.next += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::handle::{JobPhase, StageHealth, StageMetrics};
+    use crate::harness::RunSample;
+
+    const STAGES: &[(&str, usize)] = &[("filter", 3), ("join", 2)];
+
+    fn strs(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn metrics(event_s: f64) -> JobMetrics {
+        JobMetrics {
+            event_s,
+            duration_s: 10,
+            offered_tps: 500.0,
+            ingress: 1,
+            fed: 0,
+            egress_count: 0,
+            ingress_dropped: 0,
+            phase: JobPhase::Running,
+            stages: STAGES
+                .iter()
+                .map(|&(_name, max)| StageMetrics {
+                    name: "s",
+                    active: (0..max.min(2)).collect(),
+                    max,
+                    backlog: 0,
+                    worker_batch: 128,
+                    health: StageHealth::default(),
+                    last: RunSample::default(),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn fault_plan_parses_every_verb_and_sorts() {
+        let p = FaultPlan::parse(
+            &strs(&["3 -> stall join:1 300", "1 -> kill filter:0", "2 -> slow filter:2 4",
+                "4 -> poison join"]),
+            STAGES,
+        )
+        .unwrap();
+        assert_eq!(p.steps.len(), 4);
+        assert_eq!(p.steps[0],
+            FaultStep { at: 1, action: FaultAction::Kill { stage: 0, worker: 0 } });
+        assert_eq!(p.steps[1],
+            FaultStep { at: 2, action: FaultAction::Slow { stage: 0, worker: 2, factor: 4 } });
+        assert_eq!(p.steps[2],
+            FaultStep { at: 3, action: FaultAction::Stall { stage: 1, worker: 1, ms: 300 } });
+        assert_eq!(p.steps[3], FaultStep { at: 4, action: FaultAction::Poison { stage: 1 } });
+    }
+
+    #[test]
+    fn fault_plan_rejects_malformed_steps() {
+        let bad = |items: &[&str], needle: &str| {
+            let err = FaultPlan::parse(&strs(items), STAGES).unwrap_err();
+            assert!(err.contains(needle), "error `{err}` should mention `{needle}`");
+        };
+        bad(&["kill filter:0"], "expected `<second> -> <action>`");
+        bad(&["x -> kill filter:0"], "event second");
+        bad(&["1 -> vaporize filter:0"], "unknown fault");
+        bad(&["1 -> kill ghost:0"], "unknown stage");
+        bad(&["1 -> kill filter"], "expected `<stage>:<worker>`");
+        bad(&["1 -> kill filter:9"], "outside stage `filter`'s pool");
+        bad(&["1 -> stall join:0"], "stall needs a duration");
+        bad(&["1 -> stall join:0 0"], "must be ≥ 1 ms");
+        bad(&["1 -> slow join:0 x"], "slow factor must be an integer");
+        bad(&["1 -> poison"], "poison needs a stage name");
+        bad(&["1 -> kill filter:0 extra"], "unexpected trailing");
+    }
+
+    #[test]
+    fn fault_policy_fires_each_step_once_in_time_order() {
+        let plan = FaultPlan::parse(
+            &strs(&["1 -> kill filter:0", "3 -> stall join:1 50", "5 -> poison join"]),
+            STAGES,
+        )
+        .unwrap();
+        let mut p = FaultPolicy::new(plan);
+        let job = JobCtl::detached(2);
+        p.tick(&metrics(0.5), &job);
+        assert_eq!(p.fired(), 0, "nothing due yet");
+        p.tick(&metrics(1.2), &job);
+        assert_eq!(p.fired(), 1);
+        p.tick(&metrics(1.9), &job);
+        assert_eq!(p.fired(), 1, "steps fire once");
+        p.tick(&metrics(6.0), &job);
+        assert_eq!(p.fired(), 3, "late tick drains every due step");
+    }
+}

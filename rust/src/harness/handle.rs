@@ -57,6 +57,29 @@ pub enum JobPhase {
     Stopped,
 }
 
+/// Default deadline of [`JobCtl::await_quiesce`] — generous (a healthy
+/// drain is sub-second), but finite: a wedged drain returns instead of
+/// hanging the caller forever.
+pub const QUIESCE_CAP: Duration = Duration::from_secs(120);
+
+/// The drain never went quiet within the deadline
+/// ([`JobCtl::await_quiesce_timeout`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuiesceTimeout {
+    /// How long the caller waited.
+    pub waited: Duration,
+    /// The job's lifecycle phase at the deadline.
+    pub phase: JobPhase,
+}
+
+impl fmt::Display for QuiesceTimeout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job did not quiesce within {:?} (phase {:?})", self.waited, self.phase)
+    }
+}
+
+impl std::error::Error for QuiesceTimeout {}
+
 /// Replay a fixed, ts-sorted corpus through the paced feed: `next` pops
 /// the front, [`PacedSource::exhausted`] flips once the corpus is
 /// consumed, and the runtime then cuts straight to end-of-stream — every
@@ -81,13 +104,41 @@ impl<P: Payload> PacedSource<P> for ReplaySource<P> {
     }
 }
 
+/// Why the runtime refused a reconfiguration without attempting it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Issued after end-of-stream: no watermark will ever pass the
+    /// control tuple, so the epoch switch could never complete.
+    AfterEos,
+    /// The target instance set contains a crashed worker's slot — dead
+    /// slots are terminal for the run and can never rejoin an epoch.
+    DeadInstance,
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::AfterEos => write!(f, "issued after end-of-stream"),
+            RejectReason::DeadInstance => write!(f, "target set contains a dead instance"),
+        }
+    }
+}
+
+/// Terminal state of a [`ReconfigTicket`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TicketOutcome {
+    /// The reconfiguration completed: measured issue→barrier wall ms.
+    Completed(f64),
+    /// Refused up front, with the typed reason.
+    Rejected(RejectReason),
+    /// The runtime shut down before the reconfiguration completed.
+    Abandoned,
+}
+
 #[derive(Default)]
 struct TicketInner {
     epoch: Option<Epoch>,
-    latency_ms: Option<f64>,
-    /// The runtime exited without resolving this ticket (reconfiguration
-    /// never completed — e.g. issued after end-of-stream).
-    dead: bool,
+    outcome: Option<TicketOutcome>,
 }
 
 struct TicketState {
@@ -128,20 +179,25 @@ impl ReconfigTicket {
 
     /// Measured reconfiguration latency, once complete (non-blocking).
     pub fn latency_ms(&self) -> Option<f64> {
-        self.state.inner.lock().unwrap().latency_ms
+        match self.state.inner.lock().unwrap().outcome {
+            Some(TicketOutcome::Completed(ms)) => Some(ms),
+            _ => None,
+        }
     }
 
-    /// Block until the reconfiguration completes, the runtime gives up on
-    /// it, or `timeout` elapses. Returns the measured latency in ms.
-    pub fn wait(&self, timeout: Duration) -> Option<f64> {
+    /// The terminal outcome, once there is one (non-blocking).
+    pub fn outcome(&self) -> Option<TicketOutcome> {
+        self.state.inner.lock().unwrap().outcome
+    }
+
+    /// Block until the ticket reaches a terminal outcome or `timeout`
+    /// elapses (`None` = still pending at the deadline).
+    pub fn wait_outcome(&self, timeout: Duration) -> Option<TicketOutcome> {
         let deadline = Instant::now() + timeout;
         let mut g = self.state.inner.lock().unwrap();
         loop {
-            if let Some(ms) = g.latency_ms {
-                return Some(ms);
-            }
-            if g.dead {
-                return None;
+            if let Some(o) = g.outcome {
+                return Some(o);
             }
             let now = Instant::now();
             if now >= deadline {
@@ -152,18 +208,39 @@ impl ReconfigTicket {
         }
     }
 
+    /// Block until the reconfiguration completes, is rejected/abandoned,
+    /// or `timeout` elapses. Returns the measured latency in ms; `None`
+    /// for every non-completed outcome (see [`Self::wait_outcome`] for
+    /// the typed version).
+    pub fn wait(&self, timeout: Duration) -> Option<f64> {
+        match self.wait_outcome(timeout) {
+            Some(TicketOutcome::Completed(ms)) => Some(ms),
+            _ => None,
+        }
+    }
+
     fn issue(&self, epoch: Epoch) {
         self.state.inner.lock().unwrap().epoch = Some(epoch);
     }
 
-    fn resolve(&self, ms: f64) {
-        self.state.inner.lock().unwrap().latency_ms = Some(ms);
+    fn finish(&self, o: TicketOutcome) {
+        let mut g = self.state.inner.lock().unwrap();
+        if g.outcome.is_none() {
+            g.outcome = Some(o);
+        }
         self.state.cv.notify_all();
     }
 
-    fn kill(&self) {
-        self.state.inner.lock().unwrap().dead = true;
-        self.state.cv.notify_all();
+    pub(crate) fn resolve(&self, ms: f64) {
+        self.finish(TicketOutcome::Completed(ms));
+    }
+
+    pub(crate) fn reject(&self, why: RejectReason) {
+        self.finish(TicketOutcome::Rejected(why));
+    }
+
+    pub(crate) fn kill(&self) {
+        self.finish(TicketOutcome::Abandoned);
     }
 }
 
@@ -173,9 +250,29 @@ impl fmt::Debug for ReconfigTicket {
         f.debug_struct("ReconfigTicket")
             .field("stage", &self.stage)
             .field("epoch", &g.epoch)
-            .field("latency_ms", &g.latency_ms)
-            .field("dead", &g.dead)
+            .field("outcome", &g.outcome)
             .finish()
+    }
+}
+
+/// Supervision view of one stage, detector-classified every runtime
+/// tick from the engine's [`crate::engine::WorkerHealth`] slab.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StageHealth {
+    /// Crashed instance ids (terminal — healing evicts them from the
+    /// epoch via reconfiguration).
+    pub dead: Vec<InstanceId>,
+    /// Instances whose progress epoch has not advanced for
+    /// [`LaunchConfig::stall_after_ms`] while the stage's backlog is
+    /// nonzero (or with an injected stall in effect). Self-recovering:
+    /// the next processed batch clears the mark.
+    pub stalled: Vec<InstanceId>,
+}
+
+impl StageHealth {
+    /// No dead and no stalled workers.
+    pub fn is_healthy(&self) -> bool {
+        self.dead.is_empty() && self.stalled.is_empty()
     }
 }
 
@@ -192,6 +289,8 @@ pub struct StageMetrics {
     pub backlog: u64,
     /// Current effective worker batch.
     pub worker_batch: usize,
+    /// Dead/stalled classification of this stage's workers.
+    pub health: StageHealth,
     /// Latest per-event-second sample ([`RunSample::default`] before the
     /// first event second completes).
     pub last: RunSample,
@@ -241,8 +340,17 @@ pub struct LaunchConfig {
     /// windows; use ≥ the largest WS in the topology).
     pub flush_slack_ms: EventTime,
     /// Wall time to keep draining the egress after end-of-stream before
-    /// declaring the job quiesced (extended while output still arrives).
+    /// declaring the job quiesced (extended while output still arrives,
+    /// up to `drain_cap`).
     pub drain: Duration,
+    /// Hard ceiling on the post-EOS drain window: a sink that trickles
+    /// output forever (or a wedged stage) can otherwise extend the drain
+    /// indefinitely and [`JobCtl::await_quiesce`] would never return.
+    pub drain_cap: Duration,
+    /// Stall detector window: a worker whose progress epoch has not
+    /// advanced for this long while its stage's backlog is nonzero is
+    /// classified [`crate::engine::WorkerState::Stalled`].
+    pub stall_after_ms: u64,
     /// Max run length per batched ingress add (`[batch] ingress`).
     pub ingress_batch: usize,
     /// Keep every drained egress tuple for [`JobHandle::take_egress`]
@@ -263,6 +371,8 @@ impl Default for LaunchConfig {
             time_scale: 1.0,
             flush_slack_ms: 15_000,
             drain: Duration::from_millis(500),
+            drain_cap: Duration::from_secs(30),
+            stall_after_ms: 250,
             ingress_batch: 256,
             capture_egress: false,
             pin_core: None,
@@ -275,6 +385,7 @@ enum Cmd {
     Scale { stage: usize, target: ScaleTarget, ticket: ReconfigTicket },
     SetWorkerBatch { stage: usize, n: usize },
     SetRate(f64),
+    InjectFault { stage: usize, worker: InstanceId, fault: crate::engine::InjectedFault },
 }
 
 enum ScaleTarget {
@@ -370,6 +481,19 @@ impl JobCtl {
         self.shared.cmds.lock().unwrap().push_back(Cmd::SetWorkerBatch { stage, n });
     }
 
+    /// Arm a fault into one worker slot of `stage` (chaos testing); the
+    /// worker applies it at its next batch boundary. Out-of-range worker
+    /// ids are ignored by the runtime.
+    pub fn inject_fault(
+        &self,
+        stage: usize,
+        worker: InstanceId,
+        fault: crate::engine::InjectedFault,
+    ) {
+        assert!(stage < self.depth(), "stage {stage} out of range ({} stages)", self.depth());
+        self.shared.cmds.lock().unwrap().push_back(Cmd::InjectFault { stage, worker, fault });
+    }
+
     /// Snapshot the job's metrics. Per-stage fields are at most one
     /// runtime tick (~20 ms) old; `event_s` is computed live.
     pub fn sample(&self) -> JobMetrics {
@@ -388,12 +512,29 @@ impl JobCtl {
         self.phase() >= JobPhase::Quiesced
     }
 
-    /// Block until the job quiesces (or the runtime stops).
+    /// Block until the job quiesces (or the runtime stops), bounded by a
+    /// generous default deadline ([`QUIESCE_CAP`]): a wedged drain makes
+    /// this return — late, but never hung. Use
+    /// [`Self::await_quiesce_timeout`] to observe the timeout as a typed
+    /// error and pick your own deadline.
     pub fn await_quiesce(&self) {
+        let _ = self.await_quiesce_timeout(QUIESCE_CAP);
+    }
+
+    /// Block until the job quiesces, the runtime stops, or `timeout`
+    /// elapses — the deadline-bounded quiesce wait.
+    pub fn await_quiesce_timeout(&self, timeout: Duration) -> Result<(), QuiesceTimeout> {
+        let deadline = Instant::now() + timeout;
         let mut g = self.shared.phase.lock().unwrap();
         while *g < JobPhase::Quiesced {
-            g = self.shared.phase_cv.wait(g).unwrap();
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(QuiesceTimeout { waited: timeout, phase: *g });
+            }
+            let (ng, _) = self.shared.phase_cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
         }
+        Ok(())
     }
 
     /// Every reconfiguration ticket issued through this handle so far.
@@ -442,6 +583,14 @@ pub struct JobRunOutcome {
     /// policy- or user-driven), with its measured latency once resolved —
     /// the source for `BENCH_<job>.json`'s per-reconfig latencies.
     pub tickets: Vec<ReconfigTicket>,
+    /// Every fault recovery a supervisor drove during the run, with its
+    /// measured detection→healed latency (MTTR) — empty unless a
+    /// [`super::policy::SupervisorPolicy`] was attached ([`super::run_job`]
+    /// fills this from its [`super::policy::RecoveryLog`] after quiesce).
+    pub recoveries: Vec<super::policy::RecoveryTicket>,
+    /// Whether the supervisor exhausted its escalation ladder on some
+    /// fault and marked the job degraded (results are best-effort).
+    pub degraded: bool,
 }
 
 /// A built topology plus its paced source and launch plan — call
@@ -494,6 +643,7 @@ impl<In: Payload + Default, Out: Payload + Default> Job<In, Out> {
                 max: s.max_parallelism(),
                 backlog: 0,
                 worker_batch: s.worker_batch(),
+                health: StageHealth::default(),
                 last: RunSample::default(),
             })
             .collect();
@@ -591,6 +741,8 @@ impl<Out: Payload + Default> JobHandle<Out> {
                 latency_mean_us: fin.latency_mean_us,
             },
             tickets: self.ctl.tickets(),
+            recoveries: Vec::new(),
+            degraded: false,
         }
     }
 }
@@ -716,8 +868,10 @@ where
     let mut next_sample_s: u32 = 1;
     let mut eos = false;
     let mut quiesce_at: Option<Instant> = None;
+    let mut drain_deadline: Option<Instant> = None;
     // extend the drain while output still arrives, in `quiet` increments
     let quiet = cfg.drain.min(Duration::from_millis(200));
+    let stall_after_us = cfg.stall_after_ms.saturating_mul(1_000);
 
     loop {
         if shared.stop.load(Ordering::Acquire) {
@@ -878,23 +1032,47 @@ where
                     if eos {
                         // after the end-of-stream heartbeats no watermark
                         // will ever pass a new control tuple, so the
-                        // reconfiguration could never complete — fail the
-                        // ticket immediately instead of letting wait()
-                        // stall to its timeout
-                        ticket.kill();
+                        // reconfiguration could never complete — reject
+                        // the ticket immediately instead of letting
+                        // wait() stall to its timeout
+                        ticket.reject(RejectReason::AfterEos);
                         continue;
                     }
-                    let epoch = match target {
-                        ScaleTarget::Count(n) => pipeline.stages[stage].scale_to(n),
-                        ScaleTarget::Set(set) => {
-                            let mapper = Mapper::over(set.clone());
-                            pipeline.stages[stage].reconfigure(set, mapper)
-                        }
+                    // the set the switch would install (Count resolves
+                    // through the same pool semantics scale_to applies)
+                    let set = match &target {
+                        ScaleTarget::Count(n) => crate::elastic::resize_instance_set(
+                            &pipeline.stages[stage].active_instances(),
+                            pipeline.stages[stage].max_parallelism(),
+                            *n,
+                        ),
+                        ScaleTarget::Set(set) => set.clone(),
                     };
+                    // dead slots are terminal: an epoch containing one
+                    // would wait forever for a worker that processes
+                    // nothing — refuse up front
+                    let has_dead = pipeline.stages[stage].worker_health().is_some_and(|h| {
+                        set.iter().any(|&i| {
+                            i < h.len() && h.state(i) == crate::engine::WorkerState::Dead
+                        })
+                    });
+                    if has_dead {
+                        ticket.reject(RejectReason::DeadInstance);
+                        continue;
+                    }
+                    let mapper = Mapper::over(set.clone());
+                    let epoch = pipeline.stages[stage].reconfigure(set, mapper);
                     ticket.issue(epoch);
                     pending_tickets.push((stage, epoch, ticket));
                 }
                 Cmd::SetWorkerBatch { stage, n } => pipeline.stages[stage].set_worker_batch(n),
+                Cmd::InjectFault { stage, worker, fault } => {
+                    if let Some(h) = pipeline.stages[stage].worker_health() {
+                        if worker < h.len() {
+                            h.inject(worker, fault);
+                        }
+                    }
+                }
                 Cmd::SetRate(tps) => {
                     rate_override = Some(tps);
                     // remember WHEN it took effect: catch-up samples of
@@ -928,12 +1106,20 @@ where
             }
             eos = true;
             quiesce_at = Some(Instant::now() + cfg.drain);
+            // hard ceiling on the whole drain window: trickling output
+            // may extend the quiesce, but never past this deadline
+            drain_deadline = Some(Instant::now() + cfg.drain_cap.max(cfg.drain));
             set_phase(&shared, JobPhase::Draining);
         }
         if eos && polled > 0 {
             if let Some(at) = quiesce_at.as_mut() {
                 // output still arriving: hold the quiesce back a little
-                let earliest = Instant::now() + quiet;
+                // (bounded by the drain cap — a sink that never goes
+                // quiet must not hold quiesce forever)
+                let mut earliest = Instant::now() + quiet;
+                if let Some(cap) = drain_deadline {
+                    earliest = earliest.min(cap);
+                }
                 if earliest > *at {
                     *at = earliest;
                 }
@@ -945,6 +1131,40 @@ where
                 quiesce_at = None;
             }
         }
+
+        // supervision detector: classify every stage's worker slots —
+        // dead (self-marked on a caught panic) and stalled (progress
+        // epoch unchanged past the stall window while backlog is
+        // nonzero). Runs every tick, so detection latency is one tick.
+        let health: Vec<StageHealth> = pipeline
+            .stages
+            .iter()
+            .map(|s| {
+                let Some(h) = s.worker_health() else { return StageHealth::default() };
+                let backlog = s.in_backlog();
+                let now_us = h.now_us();
+                let mut sh = StageHealth::default();
+                for &i in &s.active_instances() {
+                    if i >= h.len() {
+                        continue;
+                    }
+                    match h.state(i) {
+                        crate::engine::WorkerState::Dead => sh.dead.push(i),
+                        crate::engine::WorkerState::Stalled => sh.stalled.push(i),
+                        crate::engine::WorkerState::Live => {
+                            if backlog > 0
+                                && stall_after_us > 0
+                                && now_us.saturating_sub(h.last_advance_us(i)) > stall_after_us
+                            {
+                                h.mark_stalled(i);
+                                sh.stalled.push(i);
+                            }
+                        }
+                    }
+                }
+                sh
+            })
+            .collect();
 
         // publish the live view
         {
@@ -960,6 +1180,7 @@ where
                 sm.active = s.active_instances();
                 sm.backlog = s.in_backlog();
                 sm.worker_batch = s.worker_batch();
+                sm.health = health[k].clone();
             }
         }
 
@@ -1021,13 +1242,67 @@ mod tests {
     fn ticket_wait_times_out_and_resolves() {
         let t = ReconfigTicket::new(0);
         assert_eq!(t.wait(Duration::from_millis(10)), None);
+        assert_eq!(t.outcome(), None);
         t.issue(7);
         t.resolve(1.5);
         assert_eq!(t.epoch(), Some(7));
         assert_eq!(t.wait(Duration::from_millis(10)), Some(1.5));
+        assert_eq!(t.outcome(), Some(TicketOutcome::Completed(1.5)));
         let dead = ReconfigTicket::new(1);
         dead.kill();
         assert_eq!(dead.wait(Duration::from_secs(5)), None);
+        assert_eq!(dead.outcome(), Some(TicketOutcome::Abandoned));
+        let rejected = ReconfigTicket::new(2);
+        rejected.reject(RejectReason::AfterEos);
+        assert_eq!(rejected.wait(Duration::from_secs(5)), None);
+        assert_eq!(
+            rejected.wait_outcome(Duration::from_secs(5)),
+            Some(TicketOutcome::Rejected(RejectReason::AfterEos))
+        );
+        // the first terminal outcome wins
+        rejected.resolve(9.0);
+        assert_eq!(rejected.outcome(), Some(TicketOutcome::Rejected(RejectReason::AfterEos)));
+    }
+
+    #[test]
+    fn post_eos_scale_rejects_with_after_eos() {
+        let pipeline = PipelineBuilder::new(
+            q3_operator(1_000, 8),
+            VsnOptions { initial: 1, max: 3, ..Default::default() },
+        )
+        .build();
+        let handle = Job::new(pipeline, SjGen::new(3, 1.0))
+            .with_config(LaunchConfig {
+                name: "post-eos".into(),
+                schedule: RateSchedule::constant(1, 200.0),
+                time_scale: 4.0,
+                ..Default::default()
+            })
+            .launch()
+            .unwrap();
+        handle.await_quiesce();
+        // the feed has ended: a new reconfiguration can never complete,
+        // so the ticket resolves immediately with the typed rejection
+        // instead of dangling until shutdown
+        let ticket = handle.scale(0, 2);
+        assert_eq!(
+            ticket.wait_outcome(Duration::from_secs(10)),
+            Some(TicketOutcome::Rejected(RejectReason::AfterEos))
+        );
+        assert_eq!(ticket.latency_ms(), None);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn await_quiesce_timeout_returns_typed_error() {
+        // a detached ctl has no runtime behind it: the phase stays
+        // Running forever — exactly a wedged drain from the caller's view
+        let ctl = JobCtl::detached(1);
+        let err = ctl
+            .await_quiesce_timeout(Duration::from_millis(25))
+            .expect_err("must time out, not hang");
+        assert_eq!(err.waited, Duration::from_millis(25));
+        assert_eq!(err.phase, JobPhase::Running);
     }
 
     #[test]

@@ -29,19 +29,23 @@
 //! 20-minute runs replay in seconds; event time always advances at the
 //! schedule's nominal pace.
 
+pub mod faults;
 pub mod handle;
 pub mod policy;
 
+pub use faults::{FaultAction, FaultPlan, FaultPolicy, FaultStep};
 pub use handle::{
-    Job, JobCtl, JobHandle, JobMetrics, JobPhase, JobRunOutcome, LaunchConfig, ReconfigTicket,
-    ReplaySource, StageMetrics,
+    Job, JobCtl, JobHandle, JobMetrics, JobPhase, JobRunOutcome, LaunchConfig, QuiesceTimeout,
+    ReconfigTicket, RejectReason, ReplaySource, StageHealth, StageMetrics, TicketOutcome,
+    QUIESCE_CAP,
 };
 pub use policy::{
     drive, AdaptiveBatchPolicy, ControllerPolicy, DagControllerPolicy, JobPolicy, RateStepPolicy,
-    ScriptedScalePolicy,
+    RecoveryKind, RecoveryLog, RecoveryOutcome, RecoveryTicket, ScriptedScalePolicy,
+    SupervisorConfig, SupervisorPolicy,
 };
 
-use crate::config::{BatchTuning, Config, PlacementConfig};
+use crate::config::{BatchTuning, Config, FaultsConfig, PlacementConfig};
 use crate::elastic::{
     Controller, DagController, JoinCostModel, ProactiveController, ReactiveController, Thresholds,
 };
@@ -388,6 +392,7 @@ where
             ingress_batch: cfg.ingress_batch,
             capture_egress: false,
             pin_core: None,
+            ..LaunchConfig::default()
         })
         .launch()?;
 
@@ -489,6 +494,9 @@ enum KeyKind {
     Float,
     Str,
     Bool,
+    /// A list value (element types are the consumer's contract — e.g.
+    /// `[faults] steps` strings are parsed by [`FaultPlan::parse`]).
+    List,
 }
 
 impl KeyKind {
@@ -499,6 +507,7 @@ impl KeyKind {
             KeyKind::Float => matches!(v, V::Int(_) | V::Float(_)),
             KeyKind::Str => matches!(v, V::Str(_)),
             KeyKind::Bool => matches!(v, V::Bool(_)),
+            KeyKind::List => matches!(v, V::List(_)),
         }
     }
     fn name(self) -> &'static str {
@@ -507,6 +516,7 @@ impl KeyKind {
             KeyKind::Float => "a number",
             KeyKind::Str => "a string",
             KeyKind::Bool => "a bool",
+            KeyKind::List => "a list",
         }
     }
 }
@@ -576,6 +586,14 @@ const JOB_SECTION_KEYS: &[(&str, &[(&str, KeyKind)])] = &[
             ("pin_workers", KeyKind::Bool),
         ],
     ),
+    (
+        "faults.",
+        &[
+            ("steps", KeyKind::List),
+            ("supervise", KeyKind::Bool),
+            ("stall_after_ms", KeyKind::Int),
+        ],
+    ),
 ];
 
 /// Validate a job config's run-level sections: unknown sections, unknown
@@ -627,7 +645,7 @@ fn check_job_section_keys(cfg: &Config) -> Result<(), JobError> {
             key: k.to_string(),
             msg: "unknown section/key for a job config (expected `name`, `[topology]`, \
                   `[stage.<name>]`, `[schedule.<name>]`, `[run]`, `[elastic]`, `[source]`, \
-                  `[batch]`, or `[placement]`)"
+                  `[batch]`, `[placement]`, or `[faults]`)"
                 .into(),
         });
     }
@@ -762,6 +780,32 @@ pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, Jo
             }
         }
     }
+    // `[faults]`: parse + validate the scripted fault plan against the
+    // declared stages — same arrow idiom, same fail-before-launch
+    // contract as `[schedule.*]`
+    let faults = FaultsConfig::from_config(cfg);
+    let fault_plan = if cfg.get("faults.steps").is_some() {
+        let items = cfg
+            .str_list("faults.steps")
+            .map_err(|e| JobError::BadValue { key: "faults.steps".into(), msg: e.to_string() })?;
+        let stages: Vec<(&str, usize)> =
+            spec.stages.iter().map(|s| (s.name.as_str(), s.max)).collect();
+        let plan = FaultPlan::parse(&items, &stages)
+            .map_err(|msg| JobError::BadValue { key: "faults.steps".into(), msg })?;
+        if let Some(step) = plan.steps.iter().find(|s| s.at >= duration) {
+            return Err(JobError::BadValue {
+                key: "faults.steps".into(),
+                msg: format!(
+                    "fault at second {} is at/after the run's end ({duration} s) — \
+                     it would never fire",
+                    step.at
+                ),
+            });
+        }
+        Some(plan)
+    } else {
+        None
+    };
     let batch = BatchTuning::from_config(cfg);
     let n_stages = spec.stages.len();
     let adaptive = if batch.adaptive { Some(AdaptiveBatch::from(&batch)) } else { None };
@@ -817,6 +861,20 @@ pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, Jo
             })
         }
     }
+    // chaos + healing ride the same policy loop as everything else: the
+    // fault script fires through `inject_fault`, and (unless opted out)
+    // a supervisor watches the health detector and heals through the
+    // ordinary reconfiguration path, logging one RecoveryTicket per fault
+    if let Some(plan) = fault_plan {
+        policies.push(Box::new(FaultPolicy::new(plan)));
+    }
+    let recovery_log = if faults.enabled && faults.supervise {
+        let log = RecoveryLog::new();
+        policies.push(Box::new(SupervisorPolicy::new(SupervisorConfig::default(), log.clone())));
+        Some(log)
+    } else {
+        None
+    };
 
     // `[placement]`: plan core assignments against the live topology map
     // BEFORE building, so workers self-pin as they spawn and gate memory
@@ -847,12 +905,22 @@ pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, Jo
                 .as_ref()
                 .and_then(|p| p.runtime_core)
                 .filter(|_| placement.pin_runtime),
+            stall_after_ms: faults.stall_after_ms,
+            ..LaunchConfig::default()
         })
         .launch()
         .map_err(JobError::Harness)?;
     // drive() returns once the job has quiesced
     drive(&handle, &mut policies);
-    Ok(handle.shutdown())
+    let mut out = handle.shutdown();
+    if let Some(log) = recovery_log {
+        // anything still open when the run ended never healed — a chaos
+        // run must not report an unresolved ticket as success
+        log.close_unresolved();
+        out.recoveries = log.tickets();
+        out.degraded = log.degraded();
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -1225,6 +1293,79 @@ enabled = true
             }
             other => panic!("expected BadValue, got {:?}", other.map(|_| ()).err()),
         }
+    }
+
+    #[test]
+    fn run_job_rejects_bad_fault_configs() {
+        let bad = |faults: &str| {
+            let cfg = crate::config::Config::parse(&format!(
+                "{SCHED_STAGES}[run]\nduration_s = 2\n[faults]\n{faults}"
+            ))
+            .unwrap();
+            match run_job(&cfg, None) {
+                Err(JobError::BadValue { key, msg }) => (key, msg),
+                other => panic!("expected BadValue, got {:?}", other.map(|_| ()).err()),
+            }
+        };
+        // unknown stage in a step: a script that silently skips a fault
+        // would make the chaos run look healthier than it is
+        let (key, msg) = bad("steps = [\"1 -> kill ghost:0\"]");
+        assert_eq!(key, "faults.steps");
+        assert!(msg.contains("unknown stage"), "{msg}");
+        // a fault at/after the run's end would never fire
+        let (_, msg) = bad("steps = [\"5 -> kill tok:0\"]");
+        assert!(msg.contains("never fire"), "{msg}");
+        // typo'd key inside [faults]: same contract as every section
+        let (key, _) = bad("stpes = [\"1 -> kill tok:0\"]");
+        assert_eq!(key, "faults.stpes");
+        // wrong value shape
+        let (key, _) = bad("steps = \"1 -> kill tok:0\"");
+        assert_eq!(key, "faults.steps");
+    }
+
+    #[test]
+    fn run_job_chaos_kill_heals_and_reports_mttr() {
+        // one worker of a two-worker stage is killed mid-run; the
+        // supervisor must evict it through an ordinary epoch switch,
+        // re-grow, and report the measured detection→healed latency
+        let cfg = crate::config::Config::parse(
+            r#"
+name = "wc-chaos"
+[topology]
+stages = ["tok", "count"]
+[stage.tok]
+operator = "tweet-tokenize"
+initial = 2
+max = 3
+[stage.count]
+operator = "word-count"
+inputs = ["tok"]
+ws_ms = 500
+max = 2
+[run]
+duration_s = 3
+rate = 300
+time_scale = 3
+[faults]
+steps = ["1 -> kill tok:0"]
+"#,
+        )
+        .unwrap();
+        let out = run_job(&cfg, None).unwrap();
+        assert!(!out.degraded, "a single kill with a live survivor must heal");
+        assert_eq!(out.recoveries.len(), 1, "exactly one fault, one recovery ticket");
+        let r = &out.recoveries[0];
+        assert_eq!((r.stage(), r.worker()), (0, 0));
+        assert!(
+            r.mttr_ms().is_some(),
+            "recovery ticket must resolve with an MTTR, got {:?}",
+            r.outcome()
+        );
+        assert!(mttr_sane(r.mttr_ms().unwrap()));
+    }
+
+    fn mttr_sane(ms: f64) -> bool {
+        ms.is_finite() && ms >= 0.0
     }
 
     #[test]

@@ -12,11 +12,14 @@
 //! steps, manual test plans) and the adaptive worker-batch sizing, so the
 //! run loop has ONE wiring path for all of them: [`drive`].
 
-use super::handle::{JobCtl, JobMetrics};
+use super::handle::{JobCtl, JobMetrics, ReconfigTicket, StageHealth, TicketOutcome};
 use super::{adaptive_worker_batch, AdaptiveBatch};
 use crate::elastic::{Controller, DagController, Decision, Observation};
 use crate::tuple::InstanceId;
-use std::time::Duration;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// One decision loop over a live job. `tick` is called with a fresh
 /// metrics sample every few milliseconds until the job quiesces; a policy
@@ -212,6 +215,497 @@ impl JobPolicy for DagControllerPolicy {
     }
 }
 
+/// What a [`RecoveryTicket`] is recovering from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryKind {
+    /// The worker panicked ([`crate::engine::WorkerState::Dead`]) —
+    /// healed by evicting it through an epoch switch (crash replay).
+    Crash,
+    /// The worker stopped making progress — healed by the worker itself
+    /// (the next processed batch clears the mark); the supervisor only
+    /// sheds load if the stall persists.
+    Stall,
+}
+
+/// Terminal state of a recovery.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RecoveryOutcome {
+    /// The fault healed; detection→healed wall ms — one MTTR sample.
+    Healed(f64),
+    /// The escalation ladder ran out (no survivors, repeated rejected
+    /// switches, or shutdown first): the job is degraded and this fault
+    /// stays unrepaired.
+    Failed,
+}
+
+struct RecoveryInner {
+    outcome: Option<RecoveryOutcome>,
+}
+
+struct RecoveryState {
+    inner: Mutex<RecoveryInner>,
+    cv: Condvar,
+}
+
+/// One detected fault and its repair — the recovery mirror of
+/// [`ReconfigTicket`]: issued by the [`SupervisorPolicy`] at detection,
+/// resolved when the fault is healed, with the measured detection→healed
+/// latency (the `mttr_ms` samples of `BENCH_<job>.json`).
+#[derive(Clone)]
+pub struct RecoveryTicket {
+    stage: usize,
+    worker: InstanceId,
+    kind: RecoveryKind,
+    state: Arc<RecoveryState>,
+}
+
+impl RecoveryTicket {
+    fn new(stage: usize, worker: InstanceId, kind: RecoveryKind) -> Self {
+        RecoveryTicket {
+            stage,
+            worker,
+            kind,
+            state: Arc::new(RecoveryState {
+                inner: Mutex::new(RecoveryInner { outcome: None }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Stage index the faulted worker belongs to.
+    pub fn stage(&self) -> usize {
+        self.stage
+    }
+
+    /// The faulted worker's instance id.
+    pub fn worker(&self) -> InstanceId {
+        self.worker
+    }
+
+    /// What is being recovered from.
+    pub fn kind(&self) -> RecoveryKind {
+        self.kind
+    }
+
+    /// The terminal outcome, once there is one (non-blocking).
+    pub fn outcome(&self) -> Option<RecoveryOutcome> {
+        self.state.inner.lock().unwrap().outcome
+    }
+
+    /// Measured detection→healed latency, if healed (non-blocking).
+    pub fn mttr_ms(&self) -> Option<f64> {
+        match self.outcome() {
+            Some(RecoveryOutcome::Healed(ms)) => Some(ms),
+            _ => None,
+        }
+    }
+
+    /// Block until the recovery reaches a terminal outcome or `timeout`
+    /// elapses (`None` = still open at the deadline).
+    pub fn wait(&self, timeout: Duration) -> Option<RecoveryOutcome> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.state.inner.lock().unwrap();
+        loop {
+            if let Some(o) = g.outcome {
+                return Some(o);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _) = self.state.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+
+    fn finish(&self, o: RecoveryOutcome) {
+        let mut g = self.state.inner.lock().unwrap();
+        if g.outcome.is_none() {
+            g.outcome = Some(o);
+        }
+        self.state.cv.notify_all();
+    }
+
+    fn resolve(&self, mttr_ms: f64) {
+        self.finish(RecoveryOutcome::Healed(mttr_ms));
+    }
+
+    fn fail(&self) {
+        self.finish(RecoveryOutcome::Failed);
+    }
+}
+
+impl fmt::Debug for RecoveryTicket {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RecoveryTicket")
+            .field("stage", &self.stage)
+            .field("worker", &self.worker)
+            .field("kind", &self.kind)
+            .field("outcome", &self.outcome())
+            .finish()
+    }
+}
+
+/// Shared record of every recovery the supervisor opened, plus the job's
+/// degraded flag — created by the caller (e.g. [`super::run_job`]),
+/// cloned into the [`SupervisorPolicy`], read back after the run.
+#[derive(Clone, Default)]
+pub struct RecoveryLog {
+    tickets: Arc<Mutex<Vec<RecoveryTicket>>>,
+    degraded: Arc<AtomicBool>,
+}
+
+impl RecoveryLog {
+    pub fn new() -> Self {
+        RecoveryLog::default()
+    }
+
+    fn push(&self, t: RecoveryTicket) {
+        self.tickets.lock().unwrap().push(t);
+    }
+
+    /// Every recovery ticket opened so far, detection order.
+    pub fn tickets(&self) -> Vec<RecoveryTicket> {
+        self.tickets.lock().unwrap().clone()
+    }
+
+    /// Whether the supervisor exhausted its ladder on some fault.
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::Acquire)
+    }
+
+    fn mark_degraded(&self) {
+        self.degraded.store(true, Ordering::Release);
+    }
+
+    /// Fail every still-open ticket (end of run: what has not healed by
+    /// now never will). Idempotent.
+    pub fn close_unresolved(&self) {
+        for t in self.tickets.lock().unwrap().iter() {
+            if t.outcome().is_none() {
+                t.fail();
+            }
+        }
+    }
+}
+
+/// Supervisor tuning: retry/backoff and the escalation ladder.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// First retry delay after a failed heal attempt; doubles per attempt
+    /// (capped exponential). The FIRST attempt is always immediate —
+    /// while a dead worker's out clock is frozen, survivors can only run
+    /// ahead by their SPSC queue capacity, so healing must not idle.
+    pub backoff_base_ms: u64,
+    /// Retry delay ceiling.
+    pub backoff_cap_ms: u64,
+    /// Failed heal attempts before escalating to shed-load, and again
+    /// before marking the job degraded.
+    pub max_attempts: u32,
+    /// A heal ticket pending longer than this counts as a failed attempt
+    /// (the switch may still land later; a newer epoch supersedes it).
+    pub attempt_timeout_ms: u64,
+    /// Shed-load escalation: clamp the offered rate to this fraction.
+    pub shed_factor: f64,
+    /// Shed load if a stall persists this long.
+    pub stall_shed_after_ms: u64,
+    /// Give up on a stall (mark degraded, fail its ticket) after this.
+    pub stall_degraded_after_ms: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            backoff_base_ms: 50,
+            backoff_cap_ms: 1_000,
+            max_attempts: 4,
+            attempt_timeout_ms: 1_500,
+            shed_factor: 0.5,
+            stall_shed_after_ms: 2_000,
+            stall_degraded_after_ms: 8_000,
+        }
+    }
+}
+
+/// An in-flight healing reconfiguration.
+struct HealAttempt {
+    ticket: ReconfigTicket,
+    /// Dead workers this switch evicts (their crash tickets resolve when
+    /// it completes).
+    evicting: Vec<InstanceId>,
+    /// Parallelism to restore after the eviction lands (replace step).
+    restore_to: usize,
+    /// `true` once this attempt is the regrow (replace) switch.
+    regrow: bool,
+    issued: Instant,
+}
+
+/// One open stall observation.
+struct StallTrack {
+    worker: InstanceId,
+    ticket: RecoveryTicket,
+    since: Instant,
+    shed: bool,
+}
+
+/// Per-stage supervisor state.
+#[derive(Default)]
+struct StageSup {
+    /// Open crash recoveries: (worker, ticket, detection instant).
+    crash: Vec<(InstanceId, RecoveryTicket, Instant)>,
+    /// Every worker ever seen dead — terminal slots, excluded from
+    /// regrow sets and from duplicate ticket issuance.
+    known_dead: Vec<InstanceId>,
+    heal: Option<HealAttempt>,
+    stalls: Vec<StallTrack>,
+    /// Failed heal attempts since the last success.
+    attempts: u32,
+    /// Earliest instant the next heal attempt may be issued.
+    not_before: Option<Instant>,
+    /// Shed-load fired for this stage (once per escalation).
+    shed_done: bool,
+}
+
+/// Self-healing supervision: reads the per-stage [`StageHealth`]
+/// classification off every [`JobMetrics`] sample and repairs faults
+/// through the ordinary reconfiguration path — recovery IS
+/// reconfiguration, no state transfer (§Elasticity; Elasticutor makes
+/// the same argument for executor-level reassignment).
+///
+/// Crash ladder: **retry** (evict dead workers onto the survivor set —
+/// first attempt immediate, then capped-exponential backoff) →
+/// **replace** (re-grow to the pre-fault parallelism from the pool) →
+/// **shed load** (clamp the offered rate) → **mark the job degraded**.
+/// Stalls are never evicted — a deactivated reader's unread share would
+/// be lost — so their ladder is wait → shed load → degraded, and a stall
+/// heals itself the moment the worker beats again.
+pub struct SupervisorPolicy {
+    cfg: SupervisorConfig,
+    log: RecoveryLog,
+    stages: Vec<StageSup>,
+}
+
+impl SupervisorPolicy {
+    pub fn new(cfg: SupervisorConfig, log: RecoveryLog) -> Self {
+        SupervisorPolicy { cfg, log, stages: Vec::new() }
+    }
+
+    /// Capped-exponential retry delay: `base · 2^(attempts−1)`, capped.
+    fn backoff(cfg: &SupervisorConfig, attempts: u32) -> Duration {
+        let exp = attempts.saturating_sub(1).min(16);
+        let ms = cfg.backoff_base_ms.saturating_mul(1u64 << exp).min(cfg.backoff_cap_ms);
+        Duration::from_millis(ms)
+    }
+
+    /// Survivor set + regrow set for one stage, never containing a slot
+    /// ever seen dead.
+    fn regrow_set(
+        survivors: &[InstanceId],
+        known_dead: &[InstanceId],
+        max: usize,
+        target: usize,
+    ) -> Vec<InstanceId> {
+        let mut set: Vec<InstanceId> = survivors.to_vec();
+        for i in 0..max {
+            if set.len() >= target {
+                break;
+            }
+            if !set.contains(&i) && !known_dead.contains(&i) {
+                set.push(i);
+            }
+        }
+        set.sort_unstable();
+        set
+    }
+
+    fn tick_stage(&mut self, k: usize, m: &JobMetrics, job: &JobCtl) {
+        let health: StageHealth = m.stages[k].health.clone();
+        let active = m.stages[k].active.clone();
+        let max = m.stages[k].max;
+        let cfg = self.cfg;
+        let now = Instant::now();
+
+        // open a crash ticket for every newly-dead worker
+        for &w in &health.dead {
+            if !self.stages[k].known_dead.contains(&w) {
+                self.stages[k].known_dead.push(w);
+                let t = RecoveryTicket::new(k, w, RecoveryKind::Crash);
+                self.log.push(t.clone());
+                self.stages[k].crash.push((w, t, now));
+            }
+        }
+
+        // drive the in-flight heal attempt, if any
+        let mut done_regrow: Option<(Vec<InstanceId>, usize)> = None;
+        if let Some(h) = &self.stages[k].heal {
+            match h.ticket.outcome() {
+                Some(TicketOutcome::Completed(_)) => {
+                    if h.regrow {
+                        self.stages[k].attempts = 0;
+                        self.stages[k].heal = None;
+                    } else {
+                        // the eviction landed: the dead share is replayed
+                        // and the epoch is healthy — resolve MTTR for the
+                        // workers THIS switch evicted
+                        let evicted = h.evicting.clone();
+                        let restore_to = h.restore_to;
+                        let st = &mut self.stages[k];
+                        st.crash.retain(|(w, t, since)| {
+                            if evicted.contains(w) {
+                                t.resolve(since.elapsed().as_secs_f64() * 1e3);
+                                false
+                            } else {
+                                true
+                            }
+                        });
+                        st.attempts = 0;
+                        st.heal = None;
+                        // replace: restore the pre-fault parallelism
+                        let survivors: Vec<InstanceId> = active
+                            .iter()
+                            .copied()
+                            .filter(|i| !st.known_dead.contains(i))
+                            .collect();
+                        if survivors.len() < restore_to {
+                            done_regrow = Some((survivors, restore_to));
+                        }
+                    }
+                }
+                Some(_) => {
+                    // rejected or abandoned: a failed attempt
+                    self.stages[k].heal = None;
+                    self.stages[k].attempts += 1;
+                    let d = Self::backoff(&cfg, self.stages[k].attempts);
+                    self.stages[k].not_before = Some(now + d);
+                }
+                None => {
+                    if h.issued.elapsed() > Duration::from_millis(cfg.attempt_timeout_ms) {
+                        self.stages[k].heal = None;
+                        self.stages[k].attempts += 1;
+                        let d = Self::backoff(&cfg, self.stages[k].attempts);
+                        self.stages[k].not_before = Some(now + d);
+                    }
+                }
+            }
+        }
+        if let Some((survivors, target)) = done_regrow {
+            let set = Self::regrow_set(&survivors, &self.stages[k].known_dead, max, target);
+            if set.len() > survivors.len() {
+                let ticket = job.scale_to(k, set);
+                self.stages[k].heal = Some(HealAttempt {
+                    ticket,
+                    evicting: Vec::new(),
+                    restore_to: target,
+                    regrow: true,
+                    issued: now,
+                });
+            }
+        }
+
+        // escalation: past the retry budget, shed load once, then degrade
+        if self.stages[k].attempts > cfg.max_attempts {
+            if !self.stages[k].shed_done {
+                job.set_rate(m.offered_tps * cfg.shed_factor);
+                self.stages[k].shed_done = true;
+                // one more retry round after shedding
+                self.stages[k].attempts = cfg.max_attempts;
+            } else {
+                self.log.mark_degraded();
+                for (_, t, _) in self.stages[k].crash.drain(..) {
+                    t.fail();
+                }
+                self.stages[k].attempts = 0;
+                self.stages[k].not_before = None;
+            }
+        }
+
+        // issue the next heal attempt (the FIRST one immediately)
+        let due = self.stages[k].not_before.is_none_or(|t| now >= t);
+        if !self.stages[k].crash.is_empty() && self.stages[k].heal.is_none() && due {
+            let survivors: Vec<InstanceId> =
+                active.iter().copied().filter(|i| !self.stages[k].known_dead.contains(i)).collect();
+            if survivors.is_empty() {
+                // poison: every active worker of the stage is dead — no
+                // epoch can absorb the share. Shed load, degrade, fail.
+                if !self.stages[k].shed_done {
+                    job.set_rate(m.offered_tps * cfg.shed_factor);
+                    self.stages[k].shed_done = true;
+                }
+                self.log.mark_degraded();
+                for (_, t, _) in self.stages[k].crash.drain(..) {
+                    t.fail();
+                }
+            } else {
+                let evicting: Vec<InstanceId> =
+                    self.stages[k].crash.iter().map(|&(w, _, _)| w).collect();
+                let ticket = job.scale_to(k, survivors);
+                self.stages[k].heal = Some(HealAttempt {
+                    ticket,
+                    evicting,
+                    restore_to: active.len(),
+                    regrow: false,
+                    issued: now,
+                });
+                self.stages[k].not_before = None;
+            }
+        }
+
+        // stalls: open on first sight, resolve on self-recovery, shed
+        // load if persistent, degrade if hopeless. NEVER evict a stalled
+        // worker — deactivating its reader would lose its unread share.
+        for &w in &health.stalled {
+            if !self.stages[k].stalls.iter().any(|s| s.worker == w) {
+                let t = RecoveryTicket::new(k, w, RecoveryKind::Stall);
+                self.log.push(t.clone());
+                self.stages[k].stalls.push(StallTrack {
+                    worker: w,
+                    ticket: t,
+                    since: now,
+                    shed: false,
+                });
+            }
+        }
+        let mut shed_now = false;
+        let log = self.log.clone();
+        self.stages[k].stalls.retain_mut(|s| {
+            if health.dead.contains(&s.worker) {
+                // superseded: the crash path owns this worker now
+                s.ticket.fail();
+                return false;
+            }
+            if !health.stalled.contains(&s.worker) {
+                s.ticket.resolve(s.since.elapsed().as_secs_f64() * 1e3);
+                return false;
+            }
+            let stalled_ms = s.since.elapsed().as_millis() as u64;
+            if stalled_ms > cfg.stall_degraded_after_ms {
+                log.mark_degraded();
+                s.ticket.fail();
+                return false;
+            }
+            if !s.shed && stalled_ms > cfg.stall_shed_after_ms {
+                s.shed = true;
+                shed_now = true;
+            }
+            true
+        });
+        if shed_now {
+            job.set_rate(m.offered_tps * cfg.shed_factor);
+        }
+    }
+}
+
+impl JobPolicy for SupervisorPolicy {
+    fn tick(&mut self, m: &JobMetrics, job: &JobCtl) {
+        while self.stages.len() < m.stages.len() {
+            self.stages.push(StageSup::default());
+        }
+        for k in 0..m.stages.len() {
+            self.tick_stage(k, m, job);
+        }
+    }
+}
+
 /// Drive a set of policies against a live job until it quiesces: sample,
 /// tick every policy, sleep, repeat. This is the ONE wiring loop shared
 /// by [`super::run_pipeline`] and [`super::run_job`] — and the template
@@ -267,6 +761,7 @@ mod tests {
                     max: 4,
                     backlog: 0,
                     worker_batch: 128,
+                    health: StageHealth::default(),
                     last: RunSample::default(),
                 })
                 .collect(),
@@ -312,6 +807,128 @@ mod tests {
             p.tick(&m, &job);
             assert_eq!(calls.load(Ordering::Relaxed), want, "at event_s={event_s}");
         }
+    }
+
+    /// Supervisor config with tiny backoffs so the tests run in ms.
+    fn sup_cfg() -> SupervisorConfig {
+        SupervisorConfig {
+            backoff_base_ms: 2,
+            backoff_cap_ms: 8,
+            max_attempts: 1,
+            attempt_timeout_ms: 60_000,
+            ..SupervisorConfig::default()
+        }
+    }
+
+    #[test]
+    fn supervisor_heals_a_dead_worker_immediately_with_survivors() {
+        let job = JobCtl::detached(1);
+        let log = RecoveryLog::new();
+        let mut p = SupervisorPolicy::new(sup_cfg(), log.clone());
+        let mut m = metrics(1);
+        m.stages[0].active = vec![0, 1, 2];
+        m.stages[0].health.dead = vec![1];
+        p.tick(&m, &job);
+        // first attempt is immediate: one eviction onto the survivor set
+        let tickets = job.tickets();
+        assert_eq!(tickets.len(), 1, "one heal switch issued");
+        assert_eq!(tickets[0].stage(), 0);
+        // and one crash recovery ticket opened, still pending
+        let recs = log.tickets();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].kind(), RecoveryKind::Crash);
+        assert_eq!(recs[0].worker(), 1);
+        assert_eq!(recs[0].outcome(), None);
+        // a second tick must not issue another switch while one is open
+        p.tick(&m, &job);
+        assert_eq!(job.tickets().len(), 1);
+        // the eviction completes → MTTR resolves, replace step re-grows
+        tickets[0].resolve(3.0);
+        p.tick(&m, &job);
+        assert!(matches!(recs[0].outcome(), Some(RecoveryOutcome::Healed(ms)) if ms >= 0.0));
+        assert_eq!(job.tickets().len(), 2, "regrow switch issued after heal");
+        assert!(!log.degraded());
+    }
+
+    #[test]
+    fn supervisor_backoff_then_shed_then_degraded() {
+        let job = JobCtl::detached(1);
+        let log = RecoveryLog::new();
+        let mut p = SupervisorPolicy::new(sup_cfg(), log.clone());
+        let mut m = metrics(1);
+        m.stages[0].active = vec![0, 1];
+        m.stages[0].health.dead = vec![0];
+        p.tick(&m, &job);
+        assert_eq!(job.tickets().len(), 1);
+        // attempt 1 fails → backoff, then retry (max_attempts = 1)
+        job.tickets()[0].kill();
+        p.tick(&m, &job);
+        assert_eq!(job.tickets().len(), 1, "backoff holds the retry");
+        std::thread::sleep(Duration::from_millis(10));
+        p.tick(&m, &job);
+        assert_eq!(job.tickets().len(), 2, "retry issued after backoff");
+        // attempt 2 fails → ladder escalates: shed load, one last round
+        job.tickets()[1].kill();
+        p.tick(&m, &job);
+        std::thread::sleep(Duration::from_millis(10));
+        p.tick(&m, &job);
+        let n = job.tickets().len();
+        assert!(n >= 3, "retry after shedding");
+        job.tickets()[n - 1].kill();
+        p.tick(&m, &job);
+        p.tick(&m, &job);
+        assert!(log.degraded(), "ladder exhausted: job degraded");
+        assert_eq!(log.tickets()[0].outcome(), Some(RecoveryOutcome::Failed));
+    }
+
+    #[test]
+    fn supervisor_poison_fails_fast_without_survivors() {
+        let job = JobCtl::detached(1);
+        let log = RecoveryLog::new();
+        let mut p = SupervisorPolicy::new(sup_cfg(), log.clone());
+        let mut m = metrics(1);
+        m.stages[0].active = vec![0, 1];
+        m.stages[0].health.dead = vec![0, 1];
+        p.tick(&m, &job);
+        // no survivor set exists: no switch can heal this — degrade now
+        assert_eq!(job.tickets().len(), 0, "no heal switch without survivors");
+        assert!(log.degraded());
+        assert!(log.tickets().iter().all(|t| t.outcome() == Some(RecoveryOutcome::Failed)));
+    }
+
+    #[test]
+    fn supervisor_stall_resolves_on_self_recovery() {
+        let job = JobCtl::detached(1);
+        let log = RecoveryLog::new();
+        let mut p = SupervisorPolicy::new(SupervisorConfig::default(), log.clone());
+        let mut m = metrics(1);
+        m.stages[0].active = vec![0, 1];
+        m.stages[0].health.stalled = vec![1];
+        p.tick(&m, &job);
+        let recs = log.tickets();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].kind(), RecoveryKind::Stall);
+        assert_eq!(recs[0].outcome(), None, "still stalled");
+        assert_eq!(job.tickets().len(), 0, "stalled workers are never evicted");
+        // the worker beats again: the stall heals itself, MTTR measured
+        m.stages[0].health.stalled.clear();
+        p.tick(&m, &job);
+        assert!(matches!(recs[0].outcome(), Some(RecoveryOutcome::Healed(ms)) if ms >= 0.0));
+        assert!(!log.degraded());
+    }
+
+    #[test]
+    fn recovery_log_close_unresolved_fails_open_tickets() {
+        let log = RecoveryLog::new();
+        let t = RecoveryTicket::new(0, 1, RecoveryKind::Crash);
+        log.push(t.clone());
+        t.resolve(5.0);
+        let open = RecoveryTicket::new(1, 0, RecoveryKind::Stall);
+        log.push(open.clone());
+        log.close_unresolved();
+        assert_eq!(t.mttr_ms(), Some(5.0), "resolved tickets keep their outcome");
+        assert_eq!(open.outcome(), Some(RecoveryOutcome::Failed));
+        assert_eq!(open.wait(Duration::from_secs(5)), Some(RecoveryOutcome::Failed));
     }
 
     #[test]

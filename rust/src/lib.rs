@@ -46,7 +46,18 @@
 //!   config-to-running-job entrypoint behind `stretch run --config
 //!   job.conf`, emitting `BENCH_<job>.json` with per-reconfig ticket
 //!   latencies — are thin clients: launch, drive policies, quiesce,
-//!   shut down.
+//!   shut down. The same layer SUPERVISES: per-worker health
+//!   ([`engine::WorkerHealth`]: Live/Stalled/Dead, panics contained at
+//!   the worker batch loop) is classified into [`harness::StageHealth`]
+//!   every runtime tick, scripted faults ([`harness::FaultPlan`], the
+//!   `[faults]` config section) are injected through the handle, and
+//!   [`harness::SupervisorPolicy`] heals crashes by reconfiguration
+//!   alone — evict the dead worker through a normal epoch switch (its
+//!   zombie replays the unprocessed share, no state transfer), re-grow
+//!   on fresh slots, escalate retry → replace → shed load → degraded —
+//!   each recovery a [`harness::RecoveryTicket`] whose detection→healed
+//!   latency lands as `mttr_ms` in `BENCH_<job>.json` (informational,
+//!   never a bench-diff gate).
 //! * [`runtime`] — machine-facing services: the PJRT loader/executor for
 //!   the AOT-compiled kernels (stubbed unless built with `--features
 //!   pjrt`) and the placement-aware data plane
@@ -133,7 +144,12 @@
 //! See `examples/quickstart.rs`: build an `O+`, wrap it in a VSN engine,
 //! feed tuples, read results, trigger a live reconfiguration — then
 //! declare the same kind of topology as a 20-line job config and let
-//! [`harness::run_job`] drive it.
+//! [`harness::run_job`] drive it, and finally kill a worker mid-run
+//! (`[faults] steps = ["1 -> kill tokenize:0"]`) and watch the
+//! supervisor heal it. `examples/configs/diamond_faults.conf` is the
+//! full chaos scenario: kills on every stateless diamond stage plus a
+//! stalled join worker, healed under an exact-output oracle
+//! (`integration_dag::chaos_diamond_heals_every_fault_and_matches_reference`).
 
 pub mod cli;
 pub mod config;

@@ -20,7 +20,9 @@
 use stretch::cli::{Cli, OrExit};
 use stretch::config::{BatchTuning, Config};
 use stretch::elastic::JoinCostModel;
-use stretch::harness::{controller_from_config, run_elastic_join, run_job, JoinRunConfig};
+use stretch::harness::{
+    controller_from_config, run_elastic_join, run_job, JoinRunConfig, TicketOutcome,
+};
 use stretch::metrics::{BenchReport, Json};
 use stretch::sim::calibrate;
 use stretch::workloads::RateSchedule;
@@ -117,19 +119,53 @@ fn cmd_run_job(cfg: &Config, budget_ms: Option<u64>) {
                 .get(t.stage())
                 .map(String::as_str)
                 .unwrap_or("?");
-            match (t.epoch(), t.latency_ms()) {
-                (Some(e), Some(ms)) => {
+            let e = t.epoch().map(|v| v.to_string()).unwrap_or_else(|| "-".into());
+            match t.outcome() {
+                Some(TicketOutcome::Completed(ms)) => {
                     let verdict = if ms < 40.0 { " (< 40 ms)" } else { "" };
                     println!("    stage {stage:<12} epoch {e}: {ms:.2} ms{verdict}");
                 }
-                (e, _) => {
-                    let e = e.map(|v| v.to_string()).unwrap_or_else(|| "-".into());
+                Some(TicketOutcome::Rejected(why)) => {
+                    println!("    stage {stage:<12} epoch {e}: rejected ({why})");
+                }
+                Some(TicketOutcome::Abandoned) => {
+                    println!("    stage {stage:<12} epoch {e}: abandoned (runtime shut down)");
+                }
+                None => {
                     println!(
                         "    stage {stage:<12} epoch {e}: unresolved (issued too close to EOS)"
                     );
                 }
             }
         }
+    }
+
+    // fault recoveries, straight off the supervisor's RecoveryTickets
+    // (only present when the config has a [faults] section)
+    if !outcome.recoveries.is_empty() {
+        println!("\n  recoveries (measured via RecoveryTicket):");
+        for rt in &outcome.recoveries {
+            let stage = outcome
+                .stage_names
+                .get(rt.stage())
+                .map(String::as_str)
+                .unwrap_or("?");
+            match rt.mttr_ms() {
+                Some(ms) => println!(
+                    "    stage {stage:<12} worker {} ({:?}): healed in {ms:.2} ms",
+                    rt.worker(),
+                    rt.kind()
+                ),
+                None => println!(
+                    "    stage {stage:<12} worker {} ({:?}): NOT healed",
+                    rt.worker(),
+                    rt.kind()
+                ),
+            }
+        }
+    }
+    if outcome.degraded {
+        println!("\n  job DEGRADED: the supervisor exhausted its escalation ladder");
     }
 
     // BENCH_<job>.json: the job's machine-readable perf record
@@ -190,6 +226,37 @@ fn cmd_run_job(cfg: &Config, budget_ms: Option<u64>) {
         })
         .collect();
     rep.set("reconfigs", Json::Arr(ticket_objs));
+    // recovery record: `mttr_ms` (mean over healed faults) is an INFO
+    // field by the bench-diff naming contract — recovery latency varies
+    // with injected fault timing and must never gate the perf trajectory
+    if !outcome.recoveries.is_empty() || outcome.degraded {
+        let healed: Vec<f64> =
+            outcome.recoveries.iter().filter_map(|rt| rt.mttr_ms()).collect();
+        if !healed.is_empty() {
+            rep.set("mttr_ms", healed.iter().sum::<f64>() / healed.len() as f64);
+        }
+        rep.set("degraded", outcome.degraded);
+        let rec_objs: Vec<Json> = outcome
+            .recoveries
+            .iter()
+            .map(|rt| {
+                Json::obj(vec![
+                    (
+                        "stage",
+                        outcome
+                            .stage_names
+                            .get(rt.stage())
+                            .map(|s| Json::from(s.as_str()))
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("worker", Json::from(rt.worker())),
+                    ("kind", Json::from(format!("{:?}", rt.kind()).to_lowercase())),
+                    ("mttr_ms", rt.mttr_ms().map(Json::from).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        rep.set("recoveries", Json::Arr(rec_objs));
+    }
     match rep.write() {
         Ok(p) => println!("  json: {}", p.display()),
         Err(e) => eprintln!("  BENCH_{slug}.json write failed: {e}"),

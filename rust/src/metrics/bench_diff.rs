@@ -397,6 +397,18 @@ mod tests {
         assert_eq!(classify("latency_mean_us"), FieldKind::Latency);
         assert_eq!(classify("budget_ms"), FieldKind::Info);
         assert_eq!(classify("esg_batch_size"), FieldKind::Info);
+        // recovery latency is an observability record, not a perf
+        // contract: chaos timing varies run to run and must never gate
+        assert_eq!(classify("mttr_ms"), FieldKind::Info);
+    }
+
+    #[test]
+    fn mttr_is_informational_and_never_gates() {
+        let base = parse_json(r#"{"a_tps": 1000, "mttr_ms": 5}"#).unwrap();
+        let worse = parse_json(r#"{"a_tps": 1000, "mttr_ms": 500}"#).unwrap();
+        let d = compare(&base, &worse, 1.25);
+        assert!(!d.is_regression(), "{d}");
+        assert!(d.fields.iter().any(|f| f.key == "mttr_ms" && f.kind == FieldKind::Info));
     }
 
     #[test]

@@ -350,6 +350,10 @@ pub struct ReaderHandle<T: GateEntry> {
     inner: Arc<Inner<T>>,
     id: usize,
     cache: SegCache<T>,
+    /// When set, `get`/`get_batch` never publish a processing floor above
+    /// this log index, so GC keeps `[pin, …)` reclaimable-proof while the
+    /// owner still needs to [`ReaderHandle::peek`] it (crash replay).
+    floor_pin: Option<u64>,
 }
 
 impl<T: GateEntry> Esg<T> {
@@ -404,7 +408,12 @@ impl<T: GateEntry> Esg<T> {
             .map(|(id, producer)| SourceHandle { inner: inner.clone(), id, producer })
             .collect();
         let rdr = (0..cfg.max_readers)
-            .map(|id| ReaderHandle { inner: inner.clone(), id, cache: SegCache::default() })
+            .map(|id| ReaderHandle {
+                inner: inner.clone(),
+                id,
+                cache: SegCache::default(),
+                floor_pin: None,
+            })
             .collect();
         (Esg { inner }, src, rdr)
     }
@@ -720,7 +729,7 @@ impl<T: GateEntry> ReaderHandle<T> {
         let cur = slot.cursor.load(Ordering::Acquire);
         if cur < self.inner.log.ready() {
             let v = self.inner.log.get(cur, &mut self.cache);
-            slot.floor.store(cur, Ordering::Release);
+            slot.floor.store(self.floor_pin.map_or(cur, |p| p.min(cur)), Ordering::Release);
             slot.cursor.store(cur + 1, Ordering::Release);
             return Some(v);
         }
@@ -729,7 +738,7 @@ impl<T: GateEntry> ReaderHandle<T> {
         let cur = slot.cursor.load(Ordering::Acquire);
         if cur < self.inner.log.ready() {
             let v = self.inner.log.get(cur, &mut self.cache);
-            slot.floor.store(cur, Ordering::Release);
+            slot.floor.store(self.floor_pin.map_or(cur, |p| p.min(cur)), Ordering::Release);
             slot.cursor.store(cur + 1, Ordering::Release);
             return Some(v);
         }
@@ -765,7 +774,7 @@ impl<T: GateEntry> ReaderHandle<T> {
         for i in 0..n as u64 {
             buf.push(self.inner.log.get(cur + i, &mut self.cache));
         }
-        slot.floor.store(cur, Ordering::Release);
+        slot.floor.store(self.floor_pin.map_or(cur, |p| p.min(cur)), Ordering::Release);
         slot.cursor.store(cur + n as u64, Ordering::Release);
         n
     }
@@ -773,6 +782,34 @@ impl<T: GateEntry> ReaderHandle<T> {
     /// This reader's consume cursor (next log index it will take).
     pub fn cursor(&self) -> u64 {
         self.inner.readers[self.id].cursor.load(Ordering::Acquire)
+    }
+
+    /// Read log index `idx` directly, without touching the cursor or
+    /// floor. `None` once `idx` reaches the published prefix. Crash
+    /// replay uses this to re-read a [`ReaderHandle::pin_floor`]-retained
+    /// range that `get_batch` already consumed.
+    pub fn peek(&mut self, idx: u64) -> Option<T> {
+        if idx < self.inner.log.ready() {
+            Some(self.inner.log.get(idx, &mut self.cache))
+        } else {
+            None
+        }
+    }
+
+    /// Pin this reader's processing floor at `pos`: until
+    /// [`ReaderHandle::unpin_floor`], `get`/`get_batch` never publish a
+    /// floor above `pos`, so GC retains `[pos, …)` even while the reader
+    /// keeps consuming past it. Pinning never *raises* the current floor.
+    pub fn pin_floor(&mut self, pos: u64) {
+        let slot = &self.inner.readers[self.id];
+        slot.floor.fetch_min(pos, Ordering::AcqRel);
+        self.floor_pin = Some(pos);
+    }
+
+    /// Release a [`ReaderHandle::pin_floor`]; the floor resumes tracking
+    /// the consume position at the next `get`/`get_batch`.
+    pub fn unpin_floor(&mut self) {
+        self.floor_pin = None;
     }
 
     /// The gate this reader belongs to (for membership calls from the
@@ -1161,6 +1198,53 @@ mod tests {
         // a control-style add still goes through
         assert!(src[0].force_add(Tuple::data(ts + 1, 99)).is_ok());
         assert!(g.backlog() > 8);
+    }
+
+    #[test]
+    fn peek_reads_published_entries_without_consuming() {
+        let (_g, mut src, mut rdr) = gate(1, 1);
+        for ts in 0..10i64 {
+            src[0].add(Tuple::data(ts, ts as u64)).unwrap();
+        }
+        let mut buf: Vec<T> = Vec::new();
+        let n = rdr[0].get_batch(&mut buf, 64) as u64;
+        assert!(n > 0);
+        // peek re-reads consumed entries and leaves the cursor alone
+        assert_eq!(rdr[0].peek(0).unwrap().ts, 0);
+        assert_eq!(rdr[0].peek(n - 1).unwrap().ts, (n - 1) as i64);
+        assert_eq!(rdr[0].cursor(), n);
+        // past the published prefix: None, not a panic
+        assert!(rdr[0].peek(1 << 20).is_none());
+    }
+
+    #[test]
+    fn pin_floor_survives_gc_and_unpin_releases() {
+        let (_g, mut src, mut rdr) = gate(1, 1);
+        let n = (2 * crate::scalegate::log::SEG_SIZE) as i64;
+        for ts in 0..n {
+            src[0].add(Tuple::data(ts, ts as u64)).unwrap();
+        }
+        rdr[0].pin_floor(0);
+        // consume everything — more than SEG_SIZE entries merge, so GC
+        // runs; the pin must keep index 0 readable throughout
+        let mut buf: Vec<T> = Vec::new();
+        let mut got = 0u64;
+        while rdr[0].get_batch(&mut buf, 256) > 0 {
+            got += buf.len() as u64;
+            buf.clear();
+        }
+        assert!(got >= crate::scalegate::log::SEG_SIZE as u64);
+        assert_eq!(rdr[0].peek(0).unwrap().ts, 0);
+        assert_eq!(rdr[0].peek(got - 1).unwrap().ts, (got - 1) as i64);
+        // release the pin: the floor resumes tracking consumption at the
+        // next gate synchronization (no panic, no stuck retention)
+        rdr[0].unpin_floor();
+        src[0].add(Tuple::data(n + 1, 0)).unwrap();
+        src[0].advance_clock(n + 10);
+        while rdr[0].get_batch(&mut buf, 256) > 0 {
+            buf.clear();
+        }
+        assert_eq!(rdr[0].cursor(), got + 1);
     }
 
     #[test]

@@ -12,11 +12,14 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use stretch::config::Config;
+use stretch::config::{Config, FaultsConfig};
 use stretch::engine::dag::DagBuilder;
 use stretch::engine::pipeline::{Pipeline, PipelineBuilder};
 use stretch::engine::{JobSpec, VsnOptions};
-use stretch::harness::{Job, LaunchConfig, ReplaySource};
+use stretch::harness::{
+    drive, FaultPlan, FaultPolicy, Job, JobPolicy, LaunchConfig, RecoveryKind, RecoveryLog,
+    ReplaySource, SupervisorConfig, SupervisorPolicy,
+};
 use stretch::time::WindowSpec;
 use stretch::tuple::{Key, Tuple};
 use stretch::workloads::nyse::{
@@ -454,6 +457,109 @@ fn handle_scripted_diamond_matches_reference_and_resolves_tickets() {
     got.sort_unstable();
     assert_eq!(got, oracle, "handle-scripted diamond diverged from the sequential reference");
     assert_eq!(got, hand, "handle-scripted diamond diverged from the manually driven run");
+}
+
+/// The diamond with enough slack for chaos: every stage has survivors
+/// (`initial = 2`) and a spare slot (`max = 3`) so a killed worker can
+/// be evicted and the stage re-grown onto a FRESH id (dead slots are
+/// terminal) — the same pools `examples/configs/diamond_faults.conf`
+/// declares.
+fn chaos_diamond(ws_ms: i64) -> Pipeline<Trade, HedgeOut> {
+    let opts =
+        |initial| VsnOptions { initial, max: 3, gate_capacity: 8192, ..Default::default() };
+    let mut b = DagBuilder::<Trade>::new();
+    let s = b.source(trade_filter_op(64), opts(2));
+    let l = b.node(left_leg_op(64), opts(2), &[s]);
+    let r = b.node(right_leg_op(64), opts(2), &[s]);
+    let j = b.node(hedge_join_op(ws_ms, 32), opts(2), &[l, r]);
+    b.build(&[j]).expect("diamond is a valid DAG")
+}
+
+/// The robustness tentpole's end-to-end proof: the diamond under the
+/// checked-in chaos script (`examples/configs/diamond_faults.conf`) —
+/// one worker KILLED on each stateless stage, one join worker STALLED
+/// past the detector window — driven by [`FaultPolicy`] +
+/// [`SupervisorPolicy`] through the live handle. Recovery IS
+/// reconfiguration: each dead worker's zombie replays its unprocessed
+/// share through the surviving epoch, the supervisor re-grows the stage
+/// on fresh slots, and the egress multiset must STILL equal the
+/// sequential oracle exactly. Every [`stretch::harness::RecoveryTicket`]
+/// must resolve healed with a measured MTTR and the job must not be
+/// marked degraded.
+#[test]
+fn chaos_diamond_heals_every_fault_and_matches_reference() {
+    let ws_ms = 800i64;
+    let (trades, _horizon, oracle) = diamond_corpus(ws_ms, 2_500);
+
+    // the fault script comes from the checked-in config — the test and
+    // the `stretch run` smoke exercise the same scenario
+    let conf = Config::load("examples/configs/diamond_faults.conf")
+        .expect("examples/configs/diamond_faults.conf loads");
+    let faults = FaultsConfig::from_config(&conf);
+    assert!(faults.enabled && faults.supervise, "conf must opt into supervision");
+    let steps = conf.str_list("faults.steps").expect("conf scripts its faults");
+    let plan = FaultPlan::parse(&steps, &[("filter", 3), ("left", 3), ("right", 3), ("join", 3)])
+        .expect("conf fault script parses against the diamond");
+
+    // replay slowly enough that the last fault (event second 3) heals
+    // well before end-of-stream: 2 500 tuples at 1 000 t/s wall ≈ 2.5 s
+    let handle = Job::new(chaos_diamond(ws_ms), ReplaySource::new(trades.clone()))
+        .with_config(LaunchConfig {
+            name: "diamond-chaos".into(),
+            schedule: RateSchedule::constant(60, 500.0),
+            time_scale: 2.0,
+            flush_slack_ms: ws_ms + 10_000,
+            drain: Duration::from_millis(300),
+            capture_egress: true,
+            stall_after_ms: faults.stall_after_ms,
+            ..Default::default()
+        })
+        .launch()
+        .expect("chaos diamond launches");
+
+    let log = RecoveryLog::new();
+    let mut policies: Vec<Box<dyn JobPolicy>> = vec![
+        Box::new(FaultPolicy::new(plan)),
+        Box::new(SupervisorPolicy::new(SupervisorConfig::default(), log.clone())),
+    ];
+    drive(&handle, &mut policies);
+
+    // quiesced: the healed membership is in the published live view
+    let finals: Vec<Vec<usize>> =
+        handle.sample().stages.iter().map(|s| s.active.clone()).collect();
+    assert_eq!(
+        finals,
+        vec![vec![1, 2], vec![0, 2], vec![1, 2], vec![0, 1]],
+        "each killed stage must be re-grown onto fresh slots, the stalled join untouched"
+    );
+
+    let mut got: Vec<Match> = handle
+        .take_egress()
+        .iter()
+        .filter(|t| t.kind.is_data())
+        .map(|t| extract_hedge(&t.payload))
+        .collect();
+    let outcome = handle.shutdown();
+    log.close_unresolved();
+
+    assert!(!log.degraded(), "every fault is recoverable — no escalation to degraded");
+    let recoveries = log.tickets();
+    let crashes =
+        recoveries.iter().filter(|t| t.kind() == RecoveryKind::Crash).count();
+    let stalls = recoveries.iter().filter(|t| t.kind() == RecoveryKind::Stall).count();
+    assert_eq!(crashes, 3, "one crash ticket per killed worker: {recoveries:?}");
+    assert!(stalls >= 1, "the stalled join worker must be detected: {recoveries:?}");
+    for t in &recoveries {
+        let ms = t.mttr_ms();
+        assert!(ms.is_some(), "recovery never healed: {t:?}");
+        assert!(ms.unwrap().is_finite() && ms.unwrap() >= 0.0, "bogus MTTR: {t:?}");
+    }
+    assert!(!outcome.tickets.is_empty(), "healing must flow through reconfig tickets");
+    assert_eq!(outcome.result.ingress_dropped, 0, "replay must not lose tuples");
+
+    got.sort_unstable();
+    assert_eq!(got.len(), oracle.len(), "match count diverged under chaos");
+    assert_eq!(got, oracle, "chaos diamond diverged from the sequential reference");
 }
 
 /// The exact topology of [`hand_built_diamond`] as a `[topology]` config
