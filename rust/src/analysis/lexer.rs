@@ -1,0 +1,386 @@
+//! Minimal Rust lexer for the in-tree concurrency analyzer.
+//!
+//! Tokenizes just enough of the language to make the [`super::rules`]
+//! checks reliable at the token level instead of the fragile line level:
+//!
+//! * comments are **retained** as tokens (the rules read `// SAFETY:` /
+//!   `// ORDERING:` justifications out of them), with nested `/* */`
+//!   handled;
+//! * string / raw-string / byte-string / char literals are classified,
+//!   so `"unsafe"` inside a literal or a doc example can never trigger a
+//!   rule;
+//! * `'a` lifetimes are distinguished from `'x'` char literals;
+//! * every token carries its 1-based source line for reporting.
+//!
+//! This is deliberately NOT a general Rust lexer — no macro expansion,
+//! no token trees, no float-suffix pedantry — but it is exact for the
+//! constructs the rules inspect.
+
+/// Token class. `Ident` covers keywords too — the rules match on text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `Ordering`, `Vec`, …).
+    Ident,
+    /// Single punctuation character (`::` arrives as two `:` tokens).
+    Punct,
+    /// `// …` comment, text includes the slashes (`///` and `//!` too).
+    LineComment,
+    /// `/* … */` comment (nested), text includes the delimiters.
+    BlockComment,
+    /// String literal: `"…"`, `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`.
+    Str,
+    /// Char or byte-char literal: `'x'`, `'\n'`, `b'x'`.
+    Char,
+    /// Lifetime: `'a`, `'_`, `'static`.
+    Lifetime,
+    /// Numeric literal (integer or float, suffixes included).
+    Num,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    /// Is this token a comment (line or block)?
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+
+    /// Is this an identifier with exactly this text?
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// Is this a punctuation token with exactly this char?
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into a token stream. Never fails: unterminated literals or
+/// comments simply run to end-of-input (the analyzer lints real files
+/// that rustc already accepted, so recovery precision is not critical).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut toks: Vec<Tok> = Vec::new();
+
+    let collect = |b: &[char], lo: usize, hi: usize| -> String { b[lo..hi].iter().collect() };
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (covers `///` docs and `//!` inner docs)
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let lo = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::LineComment, text: collect(&b, lo, i), line });
+            continue;
+        }
+        // block comment, nested
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let lo = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::BlockComment,
+                text: collect(&b, lo, i),
+                line: start_line,
+            });
+            continue;
+        }
+        // raw / byte string prefixes: r"…", r#"…"#, b"…", br"…", br#"…"#
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            let mut is_raw = c == 'r';
+            if c == 'b' && j < n && b[j] == 'r' {
+                is_raw = true;
+                j += 1;
+            }
+            if is_raw && j < n && (b[j] == '"' || b[j] == '#') {
+                // raw string: count hashes, then scan for `"` + hashes
+                let lo = i;
+                let start_line = line;
+                let mut hashes = 0usize;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    j += 1;
+                    'scan: while j < n {
+                        if b[j] == '\n' {
+                            line += 1;
+                            j += 1;
+                        } else if b[j] == '"' {
+                            let mut k = j + 1;
+                            let mut seen = 0usize;
+                            while k < n && seen < hashes && b[k] == '#' {
+                                seen += 1;
+                                k += 1;
+                            }
+                            if seen == hashes {
+                                j = k;
+                                break 'scan;
+                            }
+                            j += 1;
+                        } else {
+                            j += 1;
+                        }
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: collect(&b, lo, j),
+                        line: start_line,
+                    });
+                    i = j;
+                    continue;
+                }
+                // `r#ident` (raw identifier) — fall through to ident below
+            }
+            if c == 'b' && i + 1 < n && b[i + 1] == '"' {
+                // byte string: same scanner as a plain string
+                let lo = i;
+                let start_line = line;
+                i += 1; // position on the opening quote
+                i = scan_quoted(&b, i, '"', &mut line);
+                toks.push(Tok { kind: TokKind::Str, text: collect(&b, lo, i), line: start_line });
+                continue;
+            }
+            if c == 'b' && i + 1 < n && b[i + 1] == '\'' {
+                let lo = i;
+                i += 1;
+                i = scan_quoted(&b, i, '\'', &mut line);
+                toks.push(Tok { kind: TokKind::Char, text: collect(&b, lo, i), line });
+                continue;
+            }
+            // plain identifier starting with r/b
+        }
+        // plain string
+        if c == '"' {
+            let lo = i;
+            let start_line = line;
+            i = scan_quoted(&b, i, '"', &mut line);
+            toks.push(Tok { kind: TokKind::Str, text: collect(&b, lo, i), line: start_line });
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            // `'a`, `'_`, `'static` (no closing quote) are lifetimes;
+            // `'x'`, `'\n'` are chars. Disambiguate by lookahead: an
+            // ident char NOT followed by `'` starts a lifetime.
+            let is_lifetime = i + 1 < n
+                && is_ident_start(b[i + 1])
+                && !(i + 2 < n && b[i + 2] == '\'');
+            if is_lifetime {
+                let lo = i;
+                i += 1;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                toks.push(Tok { kind: TokKind::Lifetime, text: collect(&b, lo, i), line });
+            } else {
+                let lo = i;
+                i = scan_quoted(&b, i, '\'', &mut line);
+                toks.push(Tok { kind: TokKind::Char, text: collect(&b, lo, i), line });
+            }
+            continue;
+        }
+        // number
+        if c.is_ascii_digit() {
+            let lo = i;
+            i += 1;
+            while i < n
+                && (is_ident_cont(b[i])
+                    // decimal point only when followed by a digit, so
+                    // `0..len` lexes as Num(0) `.` `.` Ident(len)
+                    || (b[i] == '.' && i + 1 < n && b[i + 1].is_ascii_digit()))
+            {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Num, text: collect(&b, lo, i), line });
+            continue;
+        }
+        // identifier / keyword
+        if is_ident_start(c) {
+            let lo = i;
+            i += 1;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: collect(&b, lo, i), line });
+            continue;
+        }
+        // single punctuation char
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+/// Scan a quoted literal starting at the opening quote `b[i] == quote`.
+/// Returns the index one past the closing quote, honoring `\` escapes
+/// and counting newlines into `line`.
+fn scan_quoted(b: &[char], mut i: usize, quote: char, line: &mut u32) -> usize {
+    let n = b.len();
+    debug_assert!(b[i] == quote);
+    i += 1;
+    while i < n {
+        match b[i] {
+            '\\' => i += 2,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            c if c == quote => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_and_punct() {
+        let t = kinds("let x = a::b;");
+        assert_eq!(
+            t,
+            vec![
+                (TokKind::Ident, "let".into()),
+                (TokKind::Ident, "x".into()),
+                (TokKind::Punct, "=".into()),
+                (TokKind::Ident, "a".into()),
+                (TokKind::Punct, ":".into()),
+                (TokKind::Punct, ":".into()),
+                (TokKind::Ident, "b".into()),
+                (TokKind::Punct, ";".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn keyword_inside_string_is_a_str_token() {
+        let t = lex(r#"let s = "unsafe { Ordering::SeqCst }";"#);
+        assert!(t.iter().all(|t| !t.is_ident("unsafe")));
+        assert!(t.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn keyword_inside_comment_is_a_comment_token() {
+        let t = lex("// unsafe here is fine\nlet x = 1;");
+        assert_eq!(t[0].kind, TokKind::LineComment);
+        assert!(t[1..].iter().all(|t| !t.is_ident("unsafe")));
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let t = lex("/* outer /* inner unsafe */ still comment */ fn f() {}");
+        assert_eq!(t[0].kind, TokKind::BlockComment);
+        assert!(t[0].text.contains("inner unsafe"));
+        assert!(t[1].is_ident("fn"));
+    }
+
+    #[test]
+    fn raw_string_with_hashes_and_quotes() {
+        let t = lex(r##"let s = r#"contains "quotes" and unsafe"#; next"##);
+        let s = t.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert!(s.text.contains("quotes"));
+        assert!(t.iter().any(|t| t.is_ident("next")));
+        assert!(t.iter().all(|t| !t.is_ident("unsafe")));
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let t = kinds("fn f<'a>(x: &'a u8) { let c = 'x'; let nl = '\\n'; }");
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Lifetime && s == "'a"));
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Char && s == "'x'"));
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Char && s == "'\\n'"));
+    }
+
+    #[test]
+    fn static_lifetime_and_underscore() {
+        let t = kinds("&'static str; &'_ u8");
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Lifetime && s == "'static"));
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Lifetime && s == "'_"));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_and_multiline_literals() {
+        let src = "a\nb \"multi\nline\" c\n/* block\ncomment */ d";
+        let t = lex(src);
+        let find = |name: &str| t.iter().find(|t| t.is_ident(name)).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("b"), 2);
+        assert_eq!(find("c"), 3); // string swallowed one newline
+        assert_eq!(find("d"), 5); // block comment swallowed another
+    }
+
+    #[test]
+    fn numbers_do_not_eat_range_dots() {
+        let t = kinds("for i in 0..10 {}");
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Num && s == "0"));
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Num && s == "10"));
+        assert_eq!(t.iter().filter(|(k, s)| *k == TokKind::Punct && s == ".").count(), 2);
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let t = lex(r#"let a = b"bytes"; let c = b'x'; let d = br"raw";"#);
+        assert_eq!(t.iter().filter(|t| t.kind == TokKind::Str).count(), 2);
+        assert_eq!(t.iter().filter(|t| t.kind == TokKind::Char).count(), 1);
+    }
+
+    #[test]
+    fn escaped_quote_in_string() {
+        let t = lex(r#"let s = "he said \"unsafe\""; done"#);
+        assert!(t.iter().any(|t| t.is_ident("done")));
+        assert!(t.iter().all(|t| !t.is_ident("unsafe")));
+    }
+}

@@ -1,0 +1,198 @@
+//! `stretch lint` — the in-tree concurrency-correctness analyzer.
+//!
+//! STRETCH's exactly-once / ready-order guarantees are carried by a few
+//! hundred hand-placed atomic-ordering sites and `unsafe` blocks in the
+//! lock-free data plane. The compiler checks none of the *arguments*
+//! for those sites; this module does. It is a lightweight, std-only
+//! static analyzer (no rustc plumbing, no external crates):
+//! [`lexer`] tokenizes a file precisely enough that keywords inside
+//! strings or comments can never confuse a rule, and [`rules`] checks
+//! the repo's concurrency invariants L1–L5 (SAFETY comments on
+//! `unsafe`, ORDERING justifications on data-plane atomics,
+//! no ad-hoc sleeping/spinning, cache-padded slot arrays,
+//! lock-free-marker enforcement — see [`rules`] for the full table).
+//!
+//! Run it as `stretch lint [--format text|json] [paths…]` (default path
+//! `rust/src`); exit status 0 = clean, 1 = findings, 2 = I/O error. CI
+//! runs it as a blocking gate, and a self-test pins the committed tree
+//! to zero findings — a PR that adds an unjustified atomic op fails in
+//! both places.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_source, Finding};
+
+use crate::metrics::Json;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Lint files and/or directory trees (directories are walked
+/// recursively for `*.rs`, skipping `target/` and dot-dirs). Findings
+/// come back sorted by (file, line, rule).
+pub fn lint_paths(paths: &[PathBuf]) -> io::Result<Vec<Finding>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        collect_rs_files(p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut out = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        out.extend(lint_source(&f.to_string_lossy(), &src));
+    }
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(out)
+}
+
+fn collect_rs_files(p: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let meta = fs::metadata(p)?;
+    if meta.is_file() {
+        // explicit file arguments are linted even without a .rs suffix
+        out.push(p.to_path_buf());
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(p)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for e in entries {
+        let name = e.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if e.is_dir() {
+            if name == "target" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs_files(&e, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(e);
+        }
+    }
+    Ok(())
+}
+
+/// Human-readable report: one `file:line: [rule] message` per finding
+/// plus a summary line.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut s = String::new();
+    for f in findings {
+        s.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    if findings.is_empty() {
+        s.push_str("stretch lint: clean\n");
+    } else {
+        let files: std::collections::BTreeSet<&str> =
+            findings.iter().map(|f| f.file.as_str()).collect();
+        s.push_str(&format!(
+            "stretch lint: {} finding(s) in {} file(s)\n",
+            findings.len(),
+            files.len()
+        ));
+    }
+    s
+}
+
+/// Machine-readable report. Schema (stable, pinned by a test):
+///
+/// ```json
+/// {"tool": "stretch-lint", "version": 1, "count": N,
+///  "findings": [{"file": "...", "line": 12, "rule": "...", "message": "..."}]}
+/// ```
+pub fn render_json(findings: &[Finding]) -> String {
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("file", Json::from(f.file.as_str())),
+                ("line", Json::from(f.line as u64)),
+                ("rule", Json::from(f.rule)),
+                ("message", Json::from(f.message.as_str())),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("tool", Json::from("stretch-lint")),
+        ("version", Json::from(1u64)),
+        ("count", Json::from(findings.len())),
+        ("findings", Json::Arr(items)),
+    ]);
+    format!("{doc}\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::parse_json;
+
+    fn sample_findings() -> Vec<Finding> {
+        lint_source(
+            "rust/src/scalegate/bad.rs",
+            "fn f(x: &AtomicU64, p: *mut u8) {\n    x.store(1, Ordering::Release);\n    unsafe { p.write(0) }\n}",
+        )
+    }
+
+    #[test]
+    fn json_output_matches_schema_and_round_trips() {
+        let f = sample_findings();
+        assert!(!f.is_empty());
+        let doc = parse_json(&render_json(&f)).expect("render_json must emit valid JSON");
+        let Json::Obj(kvs) = doc else { panic!("top level must be an object") };
+        let get = |k: &str| kvs.iter().find(|(n, _)| n == k).map(|(_, v)| v);
+        assert_eq!(get("tool"), Some(&Json::Str("stretch-lint".into())));
+        assert_eq!(get("version"), Some(&Json::Num(1.0)));
+        assert_eq!(get("count"), Some(&Json::Num(f.len() as f64)));
+        let Some(Json::Arr(items)) = get("findings") else { panic!("findings must be an array") };
+        assert_eq!(items.len(), f.len());
+        for (item, expect) in items.iter().zip(&f) {
+            let Json::Obj(kv) = item else { panic!("finding must be an object") };
+            let g = |k: &str| kv.iter().find(|(n, _)| n == k).map(|(_, v)| v);
+            assert_eq!(g("file"), Some(&Json::Str(expect.file.clone())));
+            assert_eq!(g("line"), Some(&Json::Num(expect.line as f64)));
+            assert_eq!(g("rule"), Some(&Json::Str(expect.rule.to_string())));
+            assert!(matches!(g("message"), Some(Json::Str(_))));
+        }
+    }
+
+    #[test]
+    fn json_escapes_special_characters() {
+        let f = vec![Finding {
+            file: "a\\b.rs".into(),
+            line: 1,
+            rule: rules::RULE_SLEEP,
+            message: "quote \" and\nnewline".into(),
+        }];
+        // must still parse — escaping is the emitter's job
+        assert!(parse_json(&render_json(&f)).is_ok());
+    }
+
+    #[test]
+    fn text_output_names_file_line_rule() {
+        let f = sample_findings();
+        let txt = render_text(&f);
+        assert!(txt.contains("rust/src/scalegate/bad.rs:2:"));
+        assert!(txt.contains("[ordering-comment]"));
+        assert!(txt.contains("[safety-comment]"));
+        assert!(txt.contains("finding(s)"));
+        assert!(render_text(&[]).contains("clean"));
+    }
+
+    /// The keystone self-test: the committed tree has zero findings.
+    /// Every new `unsafe` block or data-plane atomic op added without a
+    /// SAFETY/ORDERING argument fails this test (and the CI lint gate).
+    #[test]
+    fn committed_tree_is_clean() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+        let findings = lint_paths(&[root]).expect("lint walk failed");
+        assert!(
+            findings.is_empty(),
+            "committed tree must lint clean:\n{}",
+            render_text(&findings)
+        );
+    }
+
+    #[test]
+    fn lint_paths_reports_missing_path_as_io_error() {
+        let missing = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("no/such/dir");
+        assert!(lint_paths(&[missing]).is_err());
+    }
+}

@@ -1,0 +1,811 @@
+//! The rule engine behind `stretch lint`: repo-specific concurrency
+//! invariants checked per file over the [`super::lexer`] token stream.
+//!
+//! | rule id            | invariant                                              |
+//! |--------------------|--------------------------------------------------------|
+//! | `safety-comment`   | L1: every `unsafe` (block/fn/impl) is immediately      |
+//! |                    | preceded by a `// SAFETY:` argument                    |
+//! | `ordering-comment` | L2: every atomic load/store/RMW/fence in the data-plane|
+//! |                    | modules carries an `// ORDERING:` justification on the |
+//! |                    | statement or its enclosing fn's doc comment            |
+//! | `seqcst`           | L2b: bare `Ordering::SeqCst` is "justify-or-weaken" —  |
+//! |                    | the justification must name SeqCst explicitly          |
+//! | `sleep`            | L3: no `thread::sleep` / `spin_loop` / `yield_now`     |
+//! |                    | outside `util::backoff`                                |
+//! | `cache-padded`     | L4: shared per-slot arrays in `scalegate/` wrap their  |
+//! |                    | elements in `CachePadded`                              |
+//! | `lock-free`        | L5: no `Mutex`/`RwLock`/`Condvar` in files declaring a |
+//! |                    | `//! lint: lock-free` marker                           |
+//!
+//! **Scope.** `#[cfg(test)]` / `#[test]` items are skipped by every rule
+//! (tests may sleep, take locks, and poke atomics freely). L2 applies
+//! only to the data-plane set named by the audit: `scalegate/`,
+//! `util/spsc.rs`, `engine/{vsn,barrier,epoch,sn}.rs`, and `metrics/`.
+//! L4 applies inside `scalegate/`; L5 only where the marker is declared.
+//!
+//! **Waivers.** A finding is suppressed by a comment on the same
+//! statement containing `lint: allow(<rule-id>) — <reason>`; the reason
+//! is part of the contract (a bare waiver reads as a TODO in review).
+//!
+//! A justification "on the statement" means: in a comment token lexically
+//! attached to the statement — above it (between the previous `;`/`{`/`}`
+//! and the site), inside it (multi-line statements work), or trailing on
+//! the terminator's line. "On the enclosing fn" means in the comment
+//! block that documents the fn (doc comments and attributes scanned as
+//! one header region).
+
+use super::lexer::{lex, Tok, TokKind};
+use std::collections::BTreeSet;
+
+/// Rule L1 — `unsafe` without `// SAFETY:`.
+pub const RULE_SAFETY: &str = "safety-comment";
+/// Rule L2 — data-plane atomic op without `// ORDERING:`.
+pub const RULE_ORDERING: &str = "ordering-comment";
+/// Rule L2b — `Ordering::SeqCst` whose justification doesn't name it.
+pub const RULE_SEQCST: &str = "seqcst";
+/// Rule L3 — blocking/spin primitive outside `util::backoff`.
+pub const RULE_SLEEP: &str = "sleep";
+/// Rule L4 — un-padded shared slot array in `scalegate/`.
+pub const RULE_CACHE_PADDED: &str = "cache-padded";
+/// Rule L5 — lock type in a `//! lint: lock-free` file.
+pub const RULE_LOCK_FREE: &str = "lock-free";
+
+/// One analyzer finding. `file` is the path as given (normalized to
+/// `/` separators), `line` is 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Lint one file's source. `path` decides rule scope (see module docs);
+/// it is not read from disk — callers pass fixtures directly in tests.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let path = path.replace('\\', "/");
+    let toks = lex(src);
+    let skip = test_skip_mask(&toks);
+    let fns = fn_spans(&toks);
+    let mut out = Vec::new();
+
+    check_safety(&path, &toks, &skip, &mut out);
+    if in_dataplane(&path) {
+        check_ordering(&path, &toks, &skip, &fns, &mut out);
+    }
+    if !path.ends_with("util/backoff.rs") {
+        check_sleep(&path, &toks, &skip, &fns, &mut out);
+    }
+    if path.contains("scalegate/") {
+        check_cache_padded(&path, &toks, &skip, &mut out);
+    }
+    check_lock_free(&path, &toks, &skip, &fns, &mut out);
+
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// L2's file scope: the lock-free data plane named by the audit.
+fn in_dataplane(path: &str) -> bool {
+    path.contains("scalegate/")
+        || path.contains("metrics/")
+        || path.ends_with("util/spsc.rs")
+        || path.ends_with("engine/vsn.rs")
+        || path.ends_with("engine/barrier.rs")
+        || path.ends_with("engine/epoch.rs")
+        || path.ends_with("engine/sn.rs")
+}
+
+// ---------------------------------------------------------------------
+// shared token-walking infrastructure
+// ---------------------------------------------------------------------
+
+/// Mark every token belonging to a `#[test]` / `#[cfg(test)]`-gated item
+/// (attributes included) so rules can skip test code wholesale.
+fn test_skip_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut skip = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].is_punct('#') && i + 1 < toks.len() && toks[i + 1].is_punct('[')) {
+            i += 1;
+            continue;
+        }
+        let attr_start = i;
+        // collect the attribute's identifiers up to the matching `]`
+        let mut idents: Vec<&str> = Vec::new();
+        let mut depth = 1usize;
+        let mut j = i + 2;
+        while j < toks.len() && depth > 0 {
+            if toks[j].is_punct('[') {
+                depth += 1;
+            } else if toks[j].is_punct(']') {
+                depth -= 1;
+            } else if toks[j].kind == TokKind::Ident {
+                idents.push(&toks[j].text);
+            }
+            j += 1;
+        }
+        // `#[test]`, or a `cfg(..)` whose predicate mentions `test`
+        // without negation; `cfg_attr` and `cfg(not(test))` stay live.
+        let is_test = matches!(idents.first(), Some(&"test"))
+            || (matches!(idents.first(), Some(&"cfg"))
+                && idents.iter().any(|s| *s == "test")
+                && !idents.iter().any(|s| *s == "not"));
+        if !is_test {
+            i = j;
+            continue;
+        }
+        // swallow any further attributes on the same item
+        let mut k = j;
+        while k + 1 < toks.len() && toks[k].is_punct('#') && toks[k + 1].is_punct('[') {
+            let mut d = 1usize;
+            k += 2;
+            while k < toks.len() && d > 0 {
+                if toks[k].is_punct('[') {
+                    d += 1;
+                } else if toks[k].is_punct(']') {
+                    d -= 1;
+                }
+                k += 1;
+            }
+        }
+        // the item itself: ends at a top-level `;` or the matching `}`
+        // of its first `{`
+        let mut end = k;
+        while end < toks.len() {
+            if toks[end].is_punct(';') {
+                break;
+            }
+            if toks[end].is_punct('{') {
+                let mut d = 1usize;
+                let mut m = end + 1;
+                while m < toks.len() && d > 0 {
+                    if toks[m].is_punct('{') {
+                        d += 1;
+                    } else if toks[m].is_punct('}') {
+                        d -= 1;
+                    }
+                    m += 1;
+                }
+                end = m.saturating_sub(1);
+                break;
+            }
+            end += 1;
+        }
+        let end = (end + 1).min(toks.len());
+        for s in skip.iter_mut().take(end).skip(attr_start) {
+            *s = true;
+        }
+        i = end;
+    }
+    skip
+}
+
+/// A `fn` item: its body token range and the comment blob documenting it
+/// (the header region preceding `fn` plus comments inside the signature).
+struct FnSpan {
+    body_start: usize,
+    body_end: usize,
+    doc: String,
+}
+
+fn fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("fn") {
+            continue;
+        }
+        let mut doc = String::new();
+        // backward over visibility/qualifiers/attributes to the previous
+        // item boundary, harvesting the doc-comment block
+        let mut j = i;
+        let mut steps = 0;
+        while j > 0 && steps < 64 {
+            j -= 1;
+            steps += 1;
+            let t = &toks[j];
+            if t.is_comment() {
+                doc.push_str(&t.text);
+                doc.push('\n');
+            } else if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+                break;
+            }
+        }
+        // forward across the signature to the body `{` (trait method
+        // declarations end at `;` and have no span)
+        let mut k = i + 1;
+        let mut body = None;
+        while k < toks.len() {
+            let t = &toks[k];
+            if t.is_comment() {
+                doc.push_str(&t.text);
+                doc.push('\n');
+                k += 1;
+                continue;
+            }
+            if t.is_punct(';') {
+                break;
+            }
+            if t.is_punct('{') {
+                body = Some(k);
+                break;
+            }
+            k += 1;
+        }
+        let Some(bs) = body else { continue };
+        let mut d = 1usize;
+        let mut m = bs + 1;
+        while m < toks.len() && d > 0 {
+            if toks[m].is_punct('{') {
+                d += 1;
+            } else if toks[m].is_punct('}') {
+                d -= 1;
+            }
+            m += 1;
+        }
+        spans.push(FnSpan { body_start: bs, body_end: m, doc });
+    }
+    spans
+}
+
+/// Doc blob of the innermost-declared fn whose body contains `site`
+/// (empty when the site is outside any fn body).
+fn enclosing_fn_doc<'a>(fns: &'a [FnSpan], site: usize) -> &'a str {
+    fns.iter()
+        .filter(|f| f.body_start < site && site < f.body_end)
+        .max_by_key(|f| f.body_start)
+        .map(|f| f.doc.as_str())
+        .unwrap_or("")
+}
+
+/// All comment text lexically attached to the statement containing
+/// `site`: comments above it back to the previous `;`/`{`/`}`, comments
+/// inside the (possibly multi-line) statement, and trailing comments on
+/// the terminator's line.
+fn stmt_comment_blob(toks: &[Tok], site: usize) -> String {
+    let mut blob = String::new();
+    let mut j = site;
+    let mut steps = 0;
+    while j > 0 && steps < 96 {
+        j -= 1;
+        steps += 1;
+        let t = &toks[j];
+        if t.is_comment() {
+            blob.push_str(&t.text);
+            blob.push('\n');
+        } else if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+            break;
+        }
+    }
+    let mut k = site + 1;
+    let mut steps = 0;
+    while k < toks.len() && steps < 96 {
+        let t = &toks[k];
+        if t.is_comment() {
+            blob.push_str(&t.text);
+            blob.push('\n');
+            k += 1;
+            steps += 1;
+            continue;
+        }
+        if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+            let term_line = t.line;
+            let mut m = k + 1;
+            while m < toks.len() && toks[m].is_comment() && toks[m].line == term_line {
+                blob.push_str(&toks[m].text);
+                blob.push('\n');
+                m += 1;
+            }
+            break;
+        }
+        k += 1;
+        steps += 1;
+    }
+    blob
+}
+
+/// `lint: allow(<rule>)` waiver anywhere in the statement's comments.
+fn waived(blob: &str, rule: &str) -> bool {
+    blob.contains(&format!("lint: allow({rule})"))
+}
+
+/// Previous non-comment token index, if any.
+fn prev_code(toks: &[Tok], i: usize) -> Option<usize> {
+    (0..i).rev().find(|&j| !toks[j].is_comment())
+}
+
+/// Next non-comment token index, if any.
+fn next_code(toks: &[Tok], i: usize) -> Option<usize> {
+    (i..toks.len()).find(|&j| !toks[j].is_comment())
+}
+
+// ---------------------------------------------------------------------
+// L1: SAFETY comments on `unsafe`
+// ---------------------------------------------------------------------
+
+fn check_safety(path: &str, toks: &[Tok], skip: &[bool], out: &mut Vec<Finding>) {
+    for (i, t) in toks.iter().enumerate() {
+        if skip[i] || !t.is_ident("unsafe") {
+            continue;
+        }
+        let blob = stmt_comment_blob(toks, i);
+        if blob.contains("SAFETY:") || waived(&blob, RULE_SAFETY) {
+            continue;
+        }
+        out.push(Finding {
+            file: path.to_string(),
+            line: t.line,
+            rule: RULE_SAFETY,
+            message: "`unsafe` without an immediately-preceding `// SAFETY:` argument"
+                .to_string(),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// L2: ORDERING comments on data-plane atomic ops
+// ---------------------------------------------------------------------
+
+const ATOMIC_ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+fn check_ordering(
+    path: &str,
+    toks: &[Tok],
+    skip: &[bool],
+    fns: &[FnSpan],
+    out: &mut Vec<Finding>,
+) {
+    for i in 0..toks.len() {
+        if skip[i] || !toks[i].is_ident("Ordering") {
+            continue;
+        }
+        // match `Ordering :: <variant>` through any interleaved comments
+        let Some(c1) = next_code(toks, i + 1) else { continue };
+        let Some(c2) = next_code(toks, c1 + 1) else { continue };
+        let Some(v) = next_code(toks, c2 + 1) else { continue };
+        if !(toks[c1].is_punct(':') && toks[c2].is_punct(':')) {
+            continue;
+        }
+        let variant = toks[v].text.as_str();
+        if toks[v].kind != TokKind::Ident || !ATOMIC_ORDERINGS.contains(&variant) {
+            continue;
+        }
+        let blob = stmt_comment_blob(toks, i);
+        let fn_doc = enclosing_fn_doc(fns, i);
+        let has_ordering = blob.contains("ORDERING:") || fn_doc.contains("ORDERING:");
+        if variant == "SeqCst" {
+            let names_seqcst = (blob.contains("ORDERING:") && blob.contains("SeqCst"))
+                || (fn_doc.contains("ORDERING:") && fn_doc.contains("SeqCst"));
+            if !names_seqcst && !waived(&blob, RULE_SEQCST) && !waived(fn_doc, RULE_SEQCST) {
+                out.push(Finding {
+                    file: path.to_string(),
+                    line: toks[i].line,
+                    rule: RULE_SEQCST,
+                    message: "bare `Ordering::SeqCst`: justify-or-weaken — the `// ORDERING:` \
+                              argument must say why no weaker ordering suffices (naming SeqCst), \
+                              or the site should be downgraded"
+                        .to_string(),
+                });
+            }
+        } else if !has_ordering && !waived(&blob, RULE_ORDERING) && !waived(fn_doc, RULE_ORDERING)
+        {
+            out.push(Finding {
+                file: path.to_string(),
+                line: toks[i].line,
+                rule: RULE_ORDERING,
+                message: format!(
+                    "atomic op with `Ordering::{variant}` lacks an `// ORDERING:` justification \
+                     on the statement or its enclosing fn"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// L3: no sleeping / spinning outside util::backoff
+// ---------------------------------------------------------------------
+
+fn check_sleep(path: &str, toks: &[Tok], skip: &[bool], fns: &[FnSpan], out: &mut Vec<Finding>) {
+    for (i, t) in toks.iter().enumerate() {
+        if skip[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        let hit = match t.text.as_str() {
+            // only the `thread::sleep` path-call form (a method named
+            // `sleep` on some future type should not trip this)
+            "sleep" => {
+                let p1 = prev_code(toks, i);
+                let p2 = p1.and_then(|j| prev_code(toks, j));
+                let p3 = p2.and_then(|j| prev_code(toks, j));
+                matches!((p1, p2, p3), (Some(a), Some(b), Some(c))
+                    if toks[a].is_punct(':') && toks[b].is_punct(':') && toks[c].is_ident("thread"))
+            }
+            "spin_loop" | "yield_now" => true,
+            _ => false,
+        };
+        if !hit {
+            continue;
+        }
+        let blob = stmt_comment_blob(toks, i);
+        if waived(&blob, RULE_SLEEP) || waived(enclosing_fn_doc(fns, i), RULE_SLEEP) {
+            continue;
+        }
+        out.push(Finding {
+            file: path.to_string(),
+            line: t.line,
+            rule: RULE_SLEEP,
+            message: format!(
+                "`{}` outside util::backoff — hot paths use `Backoff` (waive deliberate \
+                 wall-clock waits with `lint: allow(sleep) — <reason>`)",
+                t.text
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// L4: per-slot arrays in scalegate/ must be CachePadded
+// ---------------------------------------------------------------------
+
+fn check_cache_padded(path: &str, toks: &[Tok], skip: &[bool], out: &mut Vec<Finding>) {
+    // pass A: structs declared in this file that contain atomic fields
+    let mut atomic_structs: BTreeSet<String> = BTreeSet::new();
+    for i in 0..toks.len() {
+        if skip[i] || !toks[i].is_ident("struct") {
+            continue;
+        }
+        let Some(ni) = next_code(toks, i + 1) else { continue };
+        if toks[ni].kind != TokKind::Ident {
+            continue;
+        }
+        let name = toks[ni].text.clone();
+        // find the field list: `{`/`(` at generic-angle depth 0
+        let mut j = ni + 1;
+        let mut angle = 0i32;
+        let mut open: Option<(char, char, usize)> = None;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.is_punct('<') {
+                angle += 1;
+            } else if t.is_punct('>') {
+                angle -= 1;
+            } else if angle == 0 && t.is_punct('{') {
+                open = Some(('{', '}', j));
+                break;
+            } else if angle == 0 && t.is_punct('(') {
+                open = Some(('(', ')', j));
+                break;
+            } else if angle == 0 && t.is_punct(';') {
+                break;
+            }
+            j += 1;
+        }
+        let Some((o, c, fs)) = open else { continue };
+        let mut d = 1usize;
+        let mut m = fs + 1;
+        let mut has_atomic = false;
+        while m < toks.len() && d > 0 {
+            let t = &toks[m];
+            if t.is_punct(o) {
+                d += 1;
+            } else if t.is_punct(c) {
+                d -= 1;
+            } else if t.kind == TokKind::Ident && t.text.starts_with("Atomic") {
+                has_atomic = true;
+            }
+            m += 1;
+        }
+        if has_atomic {
+            atomic_structs.insert(name);
+        }
+    }
+    // pass B: Vec<…> whose first type ident is atomic-bearing and not
+    // CachePadded
+    for i in 0..toks.len() {
+        if skip[i] || !toks[i].is_ident("Vec") {
+            continue;
+        }
+        let Some(lt) = next_code(toks, i + 1) else { continue };
+        if !toks[lt].is_punct('<') {
+            continue;
+        }
+        let Some(inner_i) = (lt + 1..toks.len()).find(|&j| toks[j].kind == TokKind::Ident)
+        else {
+            continue;
+        };
+        let inner = toks[inner_i].text.as_str();
+        if inner == "CachePadded" {
+            continue;
+        }
+        if !(inner.starts_with("Atomic") || atomic_structs.contains(inner)) {
+            continue;
+        }
+        let blob = stmt_comment_blob(toks, i);
+        if waived(&blob, RULE_CACHE_PADDED) {
+            continue;
+        }
+        out.push(Finding {
+            file: path.to_string(),
+            line: toks[i].line,
+            rule: RULE_CACHE_PADDED,
+            message: format!(
+                "shared per-slot array `Vec<{inner}>` in scalegate/ must wrap its elements in \
+                 `CachePadded` (adjacent slots false-share otherwise)"
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// L5: lock types banned in `//! lint: lock-free` files
+// ---------------------------------------------------------------------
+
+fn check_lock_free(path: &str, toks: &[Tok], skip: &[bool], fns: &[FnSpan], out: &mut Vec<Finding>) {
+    let marked = toks.iter().any(|t| {
+        t.kind == TokKind::LineComment
+            && t.text.starts_with("//!")
+            && t.text.contains("lint: lock-free")
+    });
+    if !marked {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if skip[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        if !matches!(t.text.as_str(), "Mutex" | "RwLock" | "Condvar") {
+            continue;
+        }
+        let blob = stmt_comment_blob(toks, i);
+        if waived(&blob, RULE_LOCK_FREE) || waived(enclosing_fn_doc(fns, i), RULE_LOCK_FREE) {
+            continue;
+        }
+        out.push(Finding {
+            file: path.to_string(),
+            line: t.line,
+            rule: RULE_LOCK_FREE,
+            message: format!(
+                "`{}` referenced in a file declaring `//! lint: lock-free`",
+                t.text
+            ),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ----- L1 -----
+
+    #[test]
+    fn l1_unsafe_without_safety_flags() {
+        let src = "fn f(p: *mut u8) { unsafe { p.write(0) } }";
+        let f = lint_source("rust/src/foo.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_SAFETY]);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn l1_safety_comment_above_statement_passes() {
+        let src = "fn f(p: *mut u8) {\n    // SAFETY: p is valid for writes by contract.\n    unsafe { p.write(0) }\n}";
+        assert!(lint_source("rust/src/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l1_safety_on_multiline_let_statement_passes() {
+        let src = "fn f(p: *const u32) -> u32 {\n    // SAFETY: index masked to capacity, slot initialized by the writer.\n    let v = unsafe {\n        p.add(1)\n            .read()\n    };\n    v\n}";
+        assert!(lint_source("rust/src/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l1_unsafe_impl_each_needs_its_own_safety() {
+        let src = "struct X;\n// SAFETY: X owns no thread-affine state.\nunsafe impl Send for X {}\nunsafe impl Sync for X {}\n";
+        let f = lint_source("rust/src/foo.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_SAFETY]);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn l1_unsafe_inside_string_or_comment_is_ignored() {
+        let src = "fn f() {\n    let s = \"unsafe { boom }\";\n    // this mentions unsafe but is a comment\n    let r = r#\"also unsafe here\"#;\n    let _ = (s, r);\n}";
+        assert!(lint_source("rust/src/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l1_cfg_test_items_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(p: *mut u8) { unsafe { p.write(0) } }\n}";
+        assert!(lint_source("rust/src/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l1_waiver_suppresses() {
+        let src = "fn f(p: *mut u8) {\n    // lint: allow(safety-comment) — fixture for the doc example\n    unsafe { p.write(0) }\n}";
+        assert!(lint_source("rust/src/foo.rs", src).is_empty());
+    }
+
+    // ----- L2 -----
+
+    #[test]
+    fn l2_bare_atomic_in_dataplane_flags() {
+        let src = "fn f(x: &AtomicU64) { x.store(1, Ordering::Release); }";
+        let f = lint_source("rust/src/scalegate/x.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_ORDERING]);
+    }
+
+    #[test]
+    fn l2_out_of_scope_file_is_not_checked() {
+        let src = "fn f(x: &AtomicU64) { x.store(1, Ordering::Release); }";
+        assert!(lint_source("rust/src/harness/handle.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l2_statement_comment_justifies() {
+        let src = "fn f(x: &AtomicU64) {\n    // ORDERING: Release publish pairs with the reader's Acquire in `get`.\n    x.store(1, Ordering::Release);\n}";
+        assert!(lint_source("rust/src/scalegate/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l2_trailing_comment_on_terminator_line_justifies() {
+        let src = "fn f(x: &AtomicU64) {\n    x.store(1, Ordering::Release); // ORDERING: pairs with Acquire in `get`\n}";
+        assert!(lint_source("rust/src/util/spsc.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l2_enclosing_fn_doc_justifies_all_sites() {
+        let src = "/// Bump statistics counters.\n///\n/// ORDERING: Relaxed — pure statistics, no synchronization implied.\nfn bump(a: &AtomicU64, b: &AtomicU64) {\n    a.fetch_add(1, Ordering::Relaxed);\n    b.fetch_add(1, Ordering::Relaxed);\n}";
+        assert!(lint_source("rust/src/metrics/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l2_multiline_statement_both_orderings_covered() {
+        let src = "fn f(s: &AtomicU8) {\n    // ORDERING: AcqRel on success pairs with state() Acquire; Relaxed on\n    // failure — the loser retries with fresh loads.\n    let _ = s\n        .compare_exchange(0, 1, Ordering::AcqRel, Ordering::Relaxed);\n}";
+        assert!(lint_source("rust/src/engine/vsn.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l2_multiline_statement_unjustified_flags_both() {
+        let src = "fn f(s: &AtomicU8) {\n    let _ = s\n        .compare_exchange(0, 1, Ordering::AcqRel, Ordering::Relaxed);\n}";
+        let f = lint_source("rust/src/engine/vsn.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_ORDERING, RULE_ORDERING]);
+    }
+
+    #[test]
+    fn l2_seqcst_needs_named_justification() {
+        let bad = "fn f(x: &AtomicU64) {\n    // ORDERING: publish\n    x.store(1, Ordering::SeqCst);\n}";
+        let f = lint_source("rust/src/scalegate/x.rs", bad);
+        assert_eq!(rules_of(&f), vec![RULE_SEQCST]);
+
+        let good = "fn f(x: &AtomicU64) {\n    // ORDERING: SeqCst — the flag participates in a Dekker-style store/load\n    // pattern with `other`; Acquire/Release does not order the two stores.\n    x.store(1, Ordering::SeqCst);\n}";
+        assert!(lint_source("rust/src/scalegate/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn l2_ordering_in_string_is_ignored() {
+        let src = "fn f() { let s = \"Ordering::Relaxed\"; let _ = s; }";
+        assert!(lint_source("rust/src/scalegate/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l2_cmp_ordering_is_not_an_atomic_site() {
+        let src = "fn f(a: u32, b: u32) -> Ordering { a.cmp(&b) }\nfn g() -> Ordering { Ordering::Less }";
+        assert!(lint_source("rust/src/scalegate/x.rs", src).is_empty());
+    }
+
+    // ----- L3 -----
+
+    #[test]
+    fn l3_thread_sleep_flags() {
+        let src = "fn f() { std::thread::sleep(std::time::Duration::from_millis(1)); }";
+        let f = lint_source("rust/src/engine/vsn.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_SLEEP]);
+    }
+
+    #[test]
+    fn l3_spin_loop_and_yield_now_flag() {
+        let src = "fn f() { std::hint::spin_loop(); std::thread::yield_now(); }";
+        let f = lint_source("rust/src/foo.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_SLEEP, RULE_SLEEP]);
+    }
+
+    #[test]
+    fn l3_backoff_module_is_exempt() {
+        let src = "fn f() { std::hint::spin_loop(); std::thread::sleep(d); }";
+        assert!(lint_source("rust/src/util/backoff.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l3_waiver_with_reason_suppresses() {
+        let src = "fn f(d: Duration) {\n    // lint: allow(sleep) — wall-clock pacing of the runtime tick, not a wait\n    std::thread::sleep(d);\n}";
+        assert!(lint_source("rust/src/harness/handle.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l3_method_named_sleep_is_not_flagged() {
+        let src = "fn f(w: &Widget) { w.sleep(); }";
+        assert!(lint_source("rust/src/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l3_test_code_may_sleep() {
+        let src = "#[test]\nfn waits() { std::thread::sleep(std::time::Duration::from_millis(1)); }";
+        assert!(lint_source("rust/src/foo.rs", src).is_empty());
+    }
+
+    // ----- L4 -----
+
+    #[test]
+    fn l4_unpadded_atomic_vec_in_scalegate_flags() {
+        let src = "struct Gate {\n    cursors: Vec<AtomicU64>,\n}";
+        let f = lint_source("rust/src/scalegate/x.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_CACHE_PADDED]);
+    }
+
+    #[test]
+    fn l4_padded_vec_passes() {
+        let src = "struct Slot { cursor: AtomicU64 }\nstruct Gate {\n    slots: Vec<CachePadded<Slot>>,\n}";
+        assert!(lint_source("rust/src/scalegate/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l4_vec_of_atomic_bearing_struct_flags() {
+        let src = "struct Slot { active: AtomicBool, cursor: AtomicU64 }\nstruct Gate { slots: Vec<Slot> }";
+        let f = lint_source("rust/src/scalegate/x.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_CACHE_PADDED]);
+    }
+
+    #[test]
+    fn l4_outside_scalegate_not_checked() {
+        let src = "struct Gate { cursors: Vec<AtomicU64> }";
+        assert!(lint_source("rust/src/engine/vsn.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l4_plain_data_vec_passes() {
+        let src = "struct Seg { buf: Vec<UnsafeCell<MaybeUninit<u8>>> }";
+        assert!(lint_source("rust/src/scalegate/x.rs", src).is_empty());
+    }
+
+    // ----- L5 -----
+
+    #[test]
+    fn l5_lock_in_marked_file_flags() {
+        let src = "//! The ring. lint: lock-free\nuse std::sync::Mutex;\n";
+        let f = lint_source("rust/src/util/spsc.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_LOCK_FREE]);
+    }
+
+    #[test]
+    fn l5_unmarked_file_may_lock() {
+        let src = "use std::sync::{Mutex, RwLock};\n";
+        assert!(lint_source("rust/src/scalegate/esg.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l5_test_mod_in_marked_file_may_lock() {
+        let src = "//! lint: lock-free\n#[cfg(test)]\nmod tests {\n    use std::sync::Mutex;\n}";
+        assert!(lint_source("rust/src/util/spsc.rs", src).is_empty());
+    }
+
+    // ----- cross-cutting -----
+
+    #[test]
+    fn findings_are_sorted_by_line() {
+        let src = "fn f(x: &AtomicU64, p: *mut u8) {\n    x.store(1, Ordering::Release);\n    unsafe { p.write(0) }\n}";
+        let f = lint_source("rust/src/scalegate/x.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_ORDERING, RULE_SAFETY]);
+        assert!(f[0].line < f[1].line);
+    }
+
+    #[test]
+    fn cfg_not_test_is_still_linted() {
+        let src = "#[cfg(not(test))]\nfn f(p: *mut u8) { unsafe { p.write(0) } }";
+        let f = lint_source("rust/src/foo.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_SAFETY]);
+    }
+}

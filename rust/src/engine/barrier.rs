@@ -5,6 +5,20 @@
 //! observes the same trigger (W > γ) and calls `wait(|𝕆|)` with the same
 //! count — membership never changes *while* a barrier is pending
 //! (reconfigurations are serialized by the epoch protocol, §6).
+//!
+//! lint: lock-free — two atomics, no locks, no condvars.
+//!
+//! # Memory-ordering protocol
+//!
+//! Two-phase: (1) **arrive** — each party AcqRel-increments `arrived`,
+//! building a release sequence that makes every party's pre-barrier
+//! writes visible to the last arrival; (2) **release** — the last
+//! arrival Release-stores the bumped `generation`, and the waiters'
+//! Acquire spin loads pair with it. The two edges compose so that
+//! everything sequenced before ANY party's `wait` happens-before
+//! everything sequenced after EVERY party's `wait` — the property
+//! `do_reconfig` relies on when it reads other workers' health marks
+//! and replay state after the barrier.
 
 use crate::util::Backoff;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -32,17 +46,32 @@ impl EpochBarrier {
     /// arbitrated by the ESG itself).
     pub fn wait(&self, parties: usize) -> bool {
         debug_assert!(parties > 0);
+        // ORDERING: Acquire — `gen` must be this generation's value, i.e.
+        // happen-after the previous generation's Release bump.
         let gen = self.generation.load(Ordering::Acquire);
+        // ORDERING: AcqRel is load-bearing on BOTH halves here: Release
+        // chains each party's pre-barrier writes into `arrived`'s release
+        // sequence; Acquire lets the last arrival observe all of them
+        // before it opens the next phase. Not weakenable.
         let pos = self.arrived.fetch_add(1, Ordering::AcqRel) + 1;
         if pos == parties {
-            // last arrival: reset and release the others
+            // last arrival: reset, then release the others.
+            // ORDERING: Release — the reset is ordered before the
+            // `generation` publish below, and waiters of the NEXT
+            // generation Acquire-load `generation` first, so they can
+            // never increment a stale `arrived`.
             self.arrived.store(0, Ordering::Release);
+            // ORDERING: Release pairs with the waiters' Acquire spin
+            // below — the generation bump publishes the reset and every
+            // party's pre-barrier writes.
             self.generation.store(gen + 1, Ordering::Release);
             true
         } else {
             // spin → yield → short sleeps: on 1-core boxes sleeping lets
-            // the stragglers run (the shared spin-then-yield policy)
+            // the stragglers run (the shared spin-then-yield policy).
             let mut idle = Backoff::new(Duration::from_micros(50));
+            // ORDERING: Acquire pairs with the leader's Release bump —
+            // leaving the loop happens-after every party arrived.
             while self.generation.load(Ordering::Acquire) == gen {
                 idle.snooze();
             }
@@ -50,6 +79,8 @@ impl EpochBarrier {
         }
     }
 
+    /// ORDERING: Acquire pairs with the leader's Release bump — an
+    /// observed generation implies the barrier that produced it is done.
     pub fn generation(&self) -> u64 {
         self.generation.load(Ordering::Acquire)
     }

@@ -41,6 +41,10 @@ impl EpochState {
     }
 
     /// Cheap staleness check for cached configs (one atomic load).
+    ///
+    /// ORDERING: Acquire pairs with `install`'s Release store — a worker
+    /// that observes epoch e here will take the `current` lock and find a
+    /// config at least as new as e (the store happens under that lock).
     #[inline]
     pub fn epoch_no(&self) -> Epoch {
         self.epoch_no.load(Ordering::Acquire)
@@ -60,6 +64,9 @@ impl EpochState {
                 instances: spec.instances.clone(),
                 mapper: spec.mapper.clone(),
             });
+            // ORDERING: Release pairs with `epoch_no()`'s Acquire; stored
+            // under the `current` lock AFTER the config swap, so the
+            // staleness check never runs ahead of the installed config.
             self.epoch_no.store(spec.epoch, Ordering::Release);
         }
         cur.clone()

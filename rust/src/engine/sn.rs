@@ -98,6 +98,8 @@ impl<L: OperatorLogic> SnIngress<L> {
                 n += 1;
             }
         }
+        // ORDERING: Relaxed — duplication-overhead counter (Theorem 1
+        // accounting); read only in end-of-run reports.
         self.forwarded.fetch_add(n, Ordering::Relaxed);
     }
 
@@ -134,6 +136,8 @@ impl<L: OperatorLogic> SnIngress<L> {
             }
         }
         self.flush_staging();
+        // ORDERING: Relaxed — duplication-overhead counter, as in
+        // `forward`.
         self.forwarded.fetch_add(n, Ordering::Relaxed);
     }
 
@@ -159,6 +163,8 @@ fn push_blocking<T>(q: &mut Producer<T>, mut v: T, running: &AtomicBool) {
             Ok(()) => return,
             Err(PushError::Closed(_)) => return,
             Err(PushError::Full(back)) => {
+                // ORDERING: Acquire pairs with shutdown's Release store —
+                // the escape hatch out of backpressure at teardown.
                 if !running.load(Ordering::Acquire) {
                     return;
                 }
@@ -175,6 +181,7 @@ fn push_slice_blocking<T>(q: &mut Producer<T>, buf: &mut Vec<T>, running: &Atomi
     let mut b = Backoff::active();
     while !buf.is_empty() {
         if q.push_slice(buf, usize::MAX) == 0 {
+            // ORDERING: Acquire pairs with shutdown's Release store.
             if q.is_closed() || !running.load(Ordering::Acquire) {
                 buf.clear();
                 return;
@@ -356,6 +363,7 @@ where
     }
 
     pub fn shutdown(&mut self) {
+        // ORDERING: Release pairs with the instances' Acquire loop checks.
         self.running.store(false, Ordering::Release);
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -365,6 +373,7 @@ where
 
 impl<L: OperatorLogic> Drop for SnEngine<L> {
     fn drop(&mut self) {
+        // ORDERING: Release pairs with the instances' Acquire loop checks.
         self.running.store(false, Ordering::Release);
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -395,6 +404,7 @@ fn run_instance<L: OperatorLogic>(
     let mut in_buf: Vec<Tuple<L::In>> = Vec::with_capacity(batch);
     // outputs stage here and leave via one batched push per flush point
     let mut out_buf: Vec<Tuple<L::Out>> = Vec::with_capacity(batch);
+    // ORDERING: Acquire pairs with shutdown's Release store.
     while running.load(Ordering::Acquire) {
         // intake: one head/tail synchronization per chunk, not per tuple
         let mut moved = false;

@@ -38,6 +38,22 @@
 //! only run ahead by their per-source SPSC queue capacity — supervision
 //! must heal promptly (the shipped [`crate::harness::policy`] supervisor
 //! reacts on its first tick).
+//!
+//! ## Memory-ordering protocol
+//! The engine's own lock-free edges (the gates carry their own):
+//! * **health slab** — `state` transitions publish with Release
+//!   (`mark_dead`, the beat/stall CASes) and are read with Acquire
+//!   (`state()`), so `do_reconfig`'s same-answer-everywhere dead check
+//!   is sound; `progress`/`last_advance_us` are Relaxed monitoring
+//!   counters (the detector acts on values, not on inter-variable
+//!   ordering).
+//! * **fault injection** — `inject`'s Release store pairs with
+//!   `take_fault`'s Acquire swap: the worker that picks a fault up sees
+//!   everything the injector wrote before arming it.
+//! * **shutdown** — `running` Release store / Acquire loads; the flag
+//!   is the only channel, workers re-check it on every loop.
+//! * **batch knob** — Relaxed both sides: a tuning value acted on by
+//!   itself, synchronizing nothing.
 
 use crate::engine::barrier::EpochBarrier;
 use crate::engine::epoch::{EpochConfig, EpochState, PendingReconfig};
@@ -269,12 +285,21 @@ impl WorkerHealth {
     /// resurrects a dead slot.
     pub fn beat(&self, id: InstanceId) {
         let s = &self.slots[id];
+        // ORDERING: Relaxed — monitoring counter; the detector compares
+        // values across ticks and needs no happens-before from them.
         s.progress.fetch_add(1, Ordering::Relaxed);
+        // ORDERING: Relaxed — monitoring timestamp, same argument.
         s.last_advance_us.store(self.now_us(), Ordering::Relaxed);
+        // ORDERING: Release on success pairs with `state()`'s Acquire
+        // (an observed-Live slot has the beat's progress stamp visible);
+        // Relaxed on failure — the loaded value is discarded either way,
+        // which is also why the success side needs no Acquire half
+        // (weakened from AcqRel). Dead wins: the CAS only fires on
+        // STALLED, never resurrecting a dead slot.
         let _ = s.state.compare_exchange(
             STATE_STALLED,
             STATE_LIVE,
-            Ordering::AcqRel,
+            Ordering::Release,
             Ordering::Relaxed,
         );
     }
@@ -283,19 +308,29 @@ impl WorkerHealth {
     /// the stall window while backlog is nonzero). Only a live slot can
     /// become stalled; the worker un-stalls itself at its next beat.
     pub fn mark_stalled(&self, id: InstanceId) {
+        // ORDERING: Release on success pairs with `state()`'s Acquire;
+        // Relaxed on failure — loaded value discarded on both paths, so
+        // the success side needs no Acquire half (weakened from AcqRel).
+        // Live-only: a dead slot never becomes merely stalled.
         let _ = self.slots[id].state.compare_exchange(
             STATE_LIVE,
             STATE_STALLED,
-            Ordering::AcqRel,
+            Ordering::Release,
             Ordering::Relaxed,
         );
     }
 
     /// Worker-side death mark (caught panic). Terminal.
+    ///
+    /// ORDERING: Release pairs with `state()`'s Acquire — every write
+    /// the dying worker made before the mark (pinned floor, replay seed)
+    /// is visible to whoever observes it Dead.
     pub fn mark_dead(&self, id: InstanceId) {
         self.slots[id].state.store(STATE_DEAD, Ordering::Release);
     }
 
+    /// ORDERING: Acquire pairs with the Release publishes in
+    /// `mark_dead`/`mark_stalled`/`beat`.
     pub fn state(&self, id: InstanceId) -> WorkerState {
         match self.slots[id].state.load(Ordering::Acquire) {
             STATE_LIVE => WorkerState::Live,
@@ -304,23 +339,33 @@ impl WorkerHealth {
         }
     }
 
+    /// ORDERING: Relaxed — monitoring counter, compared across ticks.
     pub fn progress(&self, id: InstanceId) -> u64 {
         self.slots[id].progress.load(Ordering::Relaxed)
     }
 
+    /// ORDERING: Relaxed — monitoring stamp, compared across ticks.
     pub fn last_advance_us(&self, id: InstanceId) -> u64 {
         self.slots[id].last_advance_us.load(Ordering::Relaxed)
     }
 
     /// Arm a fault into slot `id`; the worker applies it at its next
     /// batch boundary. A second injection before pickup overwrites.
+    ///
+    /// ORDERING: Release pairs with `take_fault`'s Acquire — the worker
+    /// that applies the fault sees everything the injector wrote first.
     pub fn inject(&self, id: InstanceId, fault: InjectedFault) {
         self.slots[id].fault.store(fault.encode(), Ordering::Release);
     }
 
     /// Worker-side pickup: take and clear the pending fault, if any.
+    ///
+    /// ORDERING: Acquire pairs with `inject`'s Release publish; the
+    /// RMW's store half (clearing to `FAULT_NONE`) publishes nothing and
+    /// nobody Acquire-loads it, so the Release half of the former AcqRel
+    /// was unused — weakened to Acquire.
     pub fn take_fault(&self, id: InstanceId) -> Option<InjectedFault> {
-        InjectedFault::decode(self.slots[id].fault.swap(FAULT_NONE, Ordering::AcqRel))
+        InjectedFault::decode(self.slots[id].fault.swap(FAULT_NONE, Ordering::Acquire))
     }
 
     /// Copy every slot (runtime detector / [`crate::harness`] metrics).
@@ -524,6 +569,8 @@ where
     }
 
     /// Current effective worker batch (tuples per gate synchronization).
+    ///
+    /// ORDERING: Relaxed — a tuning value acted on by itself.
     pub fn worker_batch(&self) -> usize {
         self.batch_knob.load(Ordering::Relaxed)
     }
@@ -532,6 +579,9 @@ where
     /// the new value up at their next gate synchronization. Used by the
     /// harness's adaptive batch sizing: cold stages flush small for
     /// latency, hot stages batch large for throughput.
+    ///
+    /// ORDERING: Relaxed — no data rides along with the knob; workers
+    /// act on whatever value they observe next.
     pub fn set_worker_batch(&self, n: usize) {
         self.batch_knob.store(n.max(1), Ordering::Relaxed);
     }
@@ -554,6 +604,7 @@ where
 
     /// Stop all instance threads and join them.
     pub fn shutdown(&mut self) {
+        // ORDERING: Release pairs with the workers' Acquire loop checks.
         self.running.store(false, Ordering::Release);
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -563,6 +614,7 @@ where
 
 impl<L: OperatorLogic> Drop for VsnEngine<L> {
     fn drop(&mut self) {
+        // ORDERING: Release pairs with the workers' Acquire loop checks.
         self.running.store(false, Ordering::Release);
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -638,9 +690,11 @@ where
         // retrieved-but-unprocessed tuples — do_reconfig needs it to seed
         // new readers at the tuple currently being processed.
         let mut batch: Vec<Tuple<L::In>> = Vec::with_capacity(self.batch);
+        // ORDERING: Acquire pairs with shutdown's Release store.
         while self.running.load(Ordering::Acquire) {
-            // adaptive batch sizing: pick up the harness's latest tuning
-            // (one uncontended relaxed load per gate synchronization)
+            // adaptive batch sizing: pick up the harness's latest tuning.
+            // ORDERING: Relaxed — one uncontended load of a standalone
+            // tuning value per gate synchronization.
             self.batch = self.batch_knob.load(Ordering::Relaxed).max(1);
             if !self.dead {
                 self.apply_fault();
@@ -686,6 +740,8 @@ where
             panic!("injected fault: kill (worker {})", self.core.id);
         }
         if self.slow_us > 0 {
+            // lint: allow(sleep) — injected `Slow` fault: a deliberate
+            // wall-clock slowdown IS the behavior under test, not a wait.
             std::thread::sleep(Duration::from_micros(self.slow_us));
         }
         while let Some(t) = batch.pop() {
@@ -721,7 +777,10 @@ where
                 // worker looks like. On resume the worker catches up
                 // through the position-deterministic epoch machinery.
                 let until = Instant::now() + Duration::from_millis(ms);
+                // ORDERING: Acquire pairs with shutdown's Release store.
                 while Instant::now() < until && self.running.load(Ordering::Acquire) {
+                    // lint: allow(sleep) — injected `Stall` fault: the
+                    // wedged wall-clock pause IS the behavior under test.
                     std::thread::sleep(Duration::from_millis(1));
                 }
             }
@@ -793,6 +852,8 @@ where
         while !self.out_buf.is_empty() {
             match self.out.try_add_batch(&mut self.out_buf) {
                 Ok(0) => {
+                    // ORDERING: Acquire pairs with shutdown's Release —
+                    // the escape hatch out of backpressure at teardown.
                     if !self.running.load(Ordering::Acquire) {
                         self.out_buf.clear();
                         return;

@@ -1187,6 +1187,9 @@ where
         next_tick += wall_tick;
         let now = Instant::now();
         if next_tick > now {
+            // lint: allow(sleep) — wall-clock pacing of the runtime tick
+            // (feed/sample cadence), not a data-plane wait: nothing can
+            // arrive earlier than the next scheduled tick.
             std::thread::sleep(next_tick - now);
         } else {
             next_tick = now; // fell behind: don't try to catch up the wall

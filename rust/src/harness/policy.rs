@@ -732,6 +732,9 @@ pub fn drive(job: &JobCtl, policies: &mut [Box<dyn JobPolicy>]) {
         if job.quiesced() {
             break;
         }
+        // lint: allow(sleep) — control-plane poll cadence (half the
+        // runtime's publish tick); finer polling would only re-read
+        // identical metric snapshots.
         std::thread::sleep(Duration::from_millis(10));
     }
 }

@@ -150,7 +150,66 @@
 //! full chaos scenario: kills on every stateless diamond stage plus a
 //! stalled join worker, healed under an exact-output oracle
 //! (`integration_dag::chaos_diamond_heals_every_fault_and_matches_reference`).
+//!
+//! ## Concurrency correctness
+//! The exactly-once / ready-order guarantees rest on hand-placed atomic
+//! orderings and `unsafe` blocks in the lock-free data plane
+//! ([`scalegate`], [`util::spsc`], the VSN engine internals). The repo
+//! machine-checks the *arguments* for those sites with an in-tree
+//! analyzer, [`analysis`], run as `stretch lint` (a blocking CI gate
+//! plus the `analysis::tests::committed_tree_is_clean` self-test):
+//!
+//! * **L1** — every `unsafe` block/fn/impl is immediately preceded by a
+//!   `// SAFETY:` argument stating the invariant that makes it sound.
+//! * **L2** — every atomic load/store/RMW/fence in the data-plane
+//!   modules carries an `// ORDERING:` justification on the statement
+//!   or its enclosing fn's doc comment, naming the acquire/release
+//!   *pairing* it participates in (e.g. "Release publish of `ready`
+//!   pairs with the reader's Acquire load in `Log::get`").
+//!   `Ordering::SeqCst` is justify-or-weaken: the comment must say why
+//!   nothing weaker works, or the site gets downgraded.
+//! * **L3** — no `thread::sleep` / `spin_loop` / `yield_now` outside
+//!   [`util::backoff`]; deliberate wall-clock waits carry a
+//!   `lint: allow(sleep) — <reason>` waiver.
+//! * **L4** — per-slot shared arrays in [`scalegate`] wrap elements in
+//!   `CachePadded` (no false sharing between adjacent slots).
+//! * **L5** — files declaring `//! lint: lock-free` (the SPSC ring, the
+//!   epoch barrier) may not reference `Mutex`/`RwLock`/`Condvar`.
+//!
+//! To justify a new site, write the pairing, not the mechanism: say
+//! *which* Acquire observes *which* Release and what state that edge
+//! publishes. To run the sanitizers locally:
+//!
+//! ```sh
+//! # Miri (nightly): the SPSC ring + ScaleGate log/gate unit tests
+//! rustup +nightly component add miri
+//! MIRIFLAGS="-Zmiri-many-seeds" cargo +nightly miri test \
+//!     util::spsc scalegate::log scalegate::esg
+//! # ThreadSanitizer (nightly): the threaded exactly-once stress tests
+//! RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -Zbuild-std \
+//!     --target x86_64-unknown-linux-gnu --lib scalegate engine::barrier
+//! ```
+//!
+//! **Fault-model boundary (shard-lock poisoning).** Worker panics are
+//! contained at the batch loop and healed by reconfiguration
+//! ([`harness::SupervisorPolicy`]), because a worker's in-flight batch
+//! is replayable from the shared gate. A panic *inside a shared-state
+//! critical section* — while holding the cooperative-merge mutex or a
+//! join shard's write lock — is outside that recoverable model: the
+//! poisoned lock is the detector, and the supervisor deliberately
+//! treats it as fail-stop for the whole stage (escalate → replace →
+//! degraded) rather than pretending the shared state is still
+//! consistent. Keep critical sections panic-free: no user-code
+//! callbacks, no allocation-heavy paths, assertions outside the lock.
 
+// The two crate-wide unsafety lints behind lint rule L1: every unsafe
+// operation must sit in an explicit `unsafe {}` block (even inside an
+// `unsafe fn`), and no block may be wider than the operation it guards —
+// so each block is a distinct site for a distinct `// SAFETY:` argument.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(unused_unsafe)]
+
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod elastic;

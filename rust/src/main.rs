@@ -9,6 +9,7 @@
 //! stretch run configs/scalejoin.toml              # classic Q3-Q6 shape
 //! stretch artifacts          # check the AOT kernel artifacts
 //! stretch bench-diff BENCH_micro.baseline.json BENCH_micro.json
+//! stretch lint rust/src      # concurrency-correctness analyzer (CI gate)
 //! ```
 //!
 //! `run` dispatches on the config: a `[topology]` section makes it a
@@ -282,6 +283,35 @@ fn cmd_bench_diff(baseline: &str, new: &str, tolerance: f64) {
     }
 }
 
+/// `lint`: run the in-tree concurrency-correctness analyzer
+/// (`stretch::analysis`, rules L1–L5) over source paths. Exit status:
+/// 0 clean, 1 findings, 2 I/O error — the blocking CI gate.
+fn cmd_lint(paths: &[String], format: &str) {
+    let paths: Vec<std::path::PathBuf> = if paths.is_empty() {
+        vec![std::path::PathBuf::from("rust/src")]
+    } else {
+        paths.iter().map(std::path::PathBuf::from).collect()
+    };
+    let findings = match stretch::analysis::lint_paths(&paths) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("stretch lint: {e}");
+            std::process::exit(2);
+        }
+    };
+    match format {
+        "json" => print!("{}", stretch::analysis::render_json(&findings)),
+        "text" => print!("{}", stretch::analysis::render_text(&findings)),
+        other => {
+            eprintln!("stretch lint: unknown --format `{other}` (expected text|json)");
+            std::process::exit(2);
+        }
+    }
+    if !findings.is_empty() {
+        std::process::exit(1);
+    }
+}
+
 /// The classic config shape (no `[topology]`): a single-stage elastic
 /// ScaleJoin experiment. `budget_ms` caps the wall-clock run by raising
 /// `time_scale`, exactly like the job path — the flag means the same
@@ -359,7 +389,8 @@ fn main() {
     )
     .opt("config", "config file for `run` (same as the positional path)", None)
     .opt("budget-ms", "cap the wall-clock run time of a job (CI smoke)", None)
-    .opt("tolerance", "bench-diff tolerance factor before a field gates", Some("1.25"));
+    .opt("tolerance", "bench-diff tolerance factor before a field gates", Some("1.25"))
+    .opt("format", "lint output format: text|json", Some("text"));
     let args = cli.parse().unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
@@ -379,6 +410,9 @@ fn main() {
                 }
             };
             cmd_bench_diff(&b, &n, args.f64_or("tolerance", 1.25).or_exit());
+        }
+        Some("lint") => {
+            cmd_lint(&args.positional()[1..], args.str_or("format", "text"));
         }
         Some("run") => {
             let path = args
@@ -402,8 +436,11 @@ fn main() {
             println!("                     join experiment (configs/*.toml)");
             println!("  bench-diff <a> <b> compare two BENCH_*.json snapshots; exits 1");
             println!("                     when a throughput/latency field regresses");
+            println!("  lint [paths…]      concurrency-correctness analyzer (rules L1-L5");
+            println!("                     over rust/src by default); exits 1 on findings");
             println!("\noptions for run: --config <path>, --budget-ms <ms> (CI smoke)");
             println!("options for bench-diff: --tolerance <factor> (default 1.25)");
+            println!("options for lint: --format <text|json> (default text)");
         }
     }
 }

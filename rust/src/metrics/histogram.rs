@@ -3,6 +3,12 @@
 //! Records microsecond-scale values with ~4% relative precision using
 //! log2 major buckets × 16 linear minor buckets. Lock-free recording via
 //! relaxed atomics; merging/reading happens off the hot path.
+//!
+//! ORDERING: every atomic in this file is Relaxed — the cells are pure
+//! statistics, read by samplers that act on the values alone. A reader
+//! racing a writer may see `count`/`sum`/bucket totals from slightly
+//! different instants; that skew is inherent to sampling a live system
+//! and no correctness decision hangs off it.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -61,6 +67,8 @@ impl Histogram {
     }
 
     /// Record one sample (e.g. latency in microseconds).
+    ///
+    /// ORDERING: Relaxed — statistics cells (see the module docs).
     #[inline]
     pub fn record(&self, v: u64) {
         self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
@@ -69,10 +77,12 @@ impl Histogram {
         self.max.fetch_max(v, Ordering::Relaxed);
     }
 
+    /// ORDERING: Relaxed — monitoring read (see the module docs).
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// ORDERING: Relaxed — monitoring read (see the module docs).
     pub fn mean(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -81,11 +91,14 @@ impl Histogram {
         self.sum.load(Ordering::Relaxed) as f64 / c as f64
     }
 
+    /// ORDERING: Relaxed — monitoring read (see the module docs).
     pub fn max(&self) -> u64 {
         self.max.load(Ordering::Relaxed)
     }
 
     /// Approximate quantile in [0, 1].
+    ///
+    /// ORDERING: Relaxed — monitoring scan (see the module docs).
     pub fn quantile(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -110,6 +123,9 @@ impl Histogram {
     }
 
     /// Reset all counters (between experiment phases).
+    ///
+    /// ORDERING: Relaxed — statistics reset; in-flight `record`s may land
+    /// on either side of it, as with any sampler (see the module docs).
     pub fn reset(&self) {
         for b in self.buckets.iter() {
             b.store(0, Ordering::Relaxed);

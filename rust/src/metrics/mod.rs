@@ -20,6 +20,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Shared counters for one operator (all instances record into it).
+///
+/// ORDERING: every counter here is Relaxed on both sides — pure
+/// statistics. Readers (the harness sampler, end-of-run reports) act on
+/// the values themselves; no other data is published through them, and
+/// cross-counter skew within one snapshot is inherent to sampling a
+/// live system anyway.
 pub struct OperatorMetrics {
     /// Data tuples consumed from the input.
     pub tuples_in: AtomicU64,
@@ -44,6 +50,7 @@ impl OperatorMetrics {
         })
     }
 
+    /// ORDERING: Relaxed — statistics counters (see the struct docs).
     #[inline]
     pub fn record_in(&self, instance: usize) {
         self.tuples_in.fetch_add(1, Ordering::Relaxed);
@@ -52,11 +59,13 @@ impl OperatorMetrics {
         }
     }
 
+    /// ORDERING: Relaxed — statistics counter (see the struct docs).
     #[inline]
     pub fn record_out(&self, n: u64) {
         self.tuples_out.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// ORDERING: Relaxed — statistics counter (see the struct docs).
     #[inline]
     pub fn record_comparisons(&self, n: u64) {
         self.comparisons.fetch_add(n, Ordering::Relaxed);
@@ -69,6 +78,8 @@ impl OperatorMetrics {
 
     /// Coefficient of variation (%) of per-instance processed counts,
     /// restricted to the currently active instance set.
+    ///
+    /// ORDERING: Relaxed — monitoring snapshot of statistics counters.
     pub fn load_cv_percent(&self, active: &[usize]) -> f64 {
         let loads: Vec<f64> = active
             .iter()
@@ -86,16 +97,20 @@ impl OperatorMetrics {
         100.0 * var.sqrt() / mean
     }
 
+    /// ORDERING: Relaxed — monitoring read of a statistics counter.
     pub fn instance_load(&self, i: usize) -> u64 {
         self.per_instance[i].load(Ordering::Relaxed)
     }
 
+    /// ORDERING: Relaxed — statistics reset between sampling phases;
+    /// in-flight bumps may land on either side, as with any sampler.
     pub fn reset_instance_loads(&self) {
         for c in &self.per_instance {
             c.store(0, Ordering::Relaxed);
         }
     }
 
+    /// ORDERING: Relaxed — monitoring snapshot (see the struct docs).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             tuples_in: self.tuples_in.load(Ordering::Relaxed),

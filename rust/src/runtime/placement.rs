@@ -47,6 +47,10 @@ pub fn pin_current(core: usize) -> bool {
     {
         let mut mask = [0u64; MASK_WORDS];
         mask[core / 64] = 1u64 << (core % 64);
+        // SAFETY: plain FFI into glibc's `sched_setaffinity` with pid 0
+        // (the calling thread). `mask` is a live, initialized stack array
+        // and `size_of_val` reports its exact byte length, so the kernel
+        // reads only memory we own; the call writes nothing.
         unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
     }
     #[cfg(not(target_os = "linux"))]
@@ -58,6 +62,10 @@ fn current_affinity() -> Option<[u64; MASK_WORDS]> {
     #[cfg(target_os = "linux")]
     {
         let mut mask = [0u64; MASK_WORDS];
+        // SAFETY: FFI into glibc's `sched_getaffinity` with pid 0 (the
+        // calling thread). The kernel writes at most `size_of_val(&mask)`
+        // bytes into `mask`, which is a live, exclusively-borrowed stack
+        // array of exactly that size and is only read after rc == 0.
         let rc =
             unsafe { sched_getaffinity(0, std::mem::size_of_val(&mask), mask.as_mut_ptr()) };
         if rc == 0 {
@@ -99,6 +107,10 @@ impl Drop for PinGuard {
     fn drop(&mut self) {
         #[cfg(target_os = "linux")]
         if let Some(mask) = self.saved.take() {
+            // SAFETY: same contract as `pin_current` — pid 0, a live stack
+            // array of exactly the reported size, read-only to the kernel.
+            // Restoring a mask captured by `sched_getaffinity` cannot fail
+            // validation, and the result is irrelevant in a destructor.
             unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
         }
     }

@@ -39,6 +39,27 @@
 //! batched-vs-per-tuple gate round trip on the current machine and
 //! records it in `BENCH_micro.json` (acceptance bar: ≥ 2× at batch
 //! 256).
+//!
+//! # Memory-ordering protocol
+//!
+//! The gate's lock-free edges (everything else runs under the `merge`
+//! or `membership` mutex, and tuple *data* visibility rides the SPSC
+//! queues' and the [`Log`]'s own protocols):
+//!
+//! * **clock publish** — `SourceSlot::last_ts` advances with a Release
+//!   `fetch_max` *after* the queue-tail publish of the tuples it
+//!   covers; `bound()`'s Acquire loads pair with it, so a readiness
+//!   bound that admits ts happens-after the enqueue of every tuple at
+//!   or below ts from that source (readiness never runs ahead of data).
+//! * **membership** — `active` flips are Release stores made under the
+//!   `membership` mutex; Acquire loads everywhere pair with them, so an
+//!   observed-active slot always has its seeded clock (sources) or
+//!   seeded cursor/floor (readers) visible too.
+//! * **cursor/floor publish** — a reader's Release stores of `cursor`
+//!   and `floor` pair with the Acquire scans in `backlog_range`, `gc`,
+//!   and `add_readers`, so flow control, segment reclamation, and
+//!   reader seeding never run ahead of what the reader has actually
+//!   consumed or may still be processing.
 
 use crate::scalegate::log::{Log, SegCache};
 use crate::time::{EventTime, TIME_MIN};
@@ -180,6 +201,12 @@ struct Inner<T: GateEntry> {
 
 impl<T: GateEntry> Inner<T> {
     /// min over active sources of last_ts; +∞ when none (drain mode).
+    ///
+    /// ORDERING: `active` Acquire pairs with membership's Release flips
+    /// (an observed-active source has its Lemma-3 seeded clock visible);
+    /// `last_ts` Acquire pairs with the sources' Release clock publishes
+    /// — a bound admitting ts happens-after the queue-tail publish of
+    /// every tuple at or below ts from that source.
     fn bound(&self) -> EventTime {
         let mut b = i64::MAX;
         let mut any = false;
@@ -204,6 +231,12 @@ impl<T: GateEntry> Inner<T> {
     /// [`backlog`](Self::backlog) restricted to reader slots `lo..hi` —
     /// the per-consumer-group flow signal on shared fan-out gates, where
     /// each downstream stage owns a contiguous reader-slot range.
+    ///
+    /// ORDERING: `active` Acquire pairs with membership's Release flips;
+    /// `cursor` Acquire pairs with the readers' Release cursor bumps.
+    /// The result is a conservative flow signal (a reader may advance
+    /// mid-scan), never an exactness claim — see the saturating
+    /// subtraction below.
     fn backlog_range(&self, lo: usize, hi: usize) -> u64 {
         let (lo, hi) = (lo.min(self.readers.len()), hi.min(self.readers.len()));
         if lo >= hi {
@@ -306,6 +339,11 @@ impl<T: GateEntry> Inner<T> {
     /// processing *floor*, not the consume cursor: batch readers advance
     /// the cursor past entries they are still working through, and
     /// `add_readers_at` may seed new readers at (floor − 1).
+    ///
+    /// ORDERING: `active`/`floor` Acquire loads pair with membership's
+    /// and the readers' Release stores (including `pin_floor`'s Release
+    /// `fetch_min`), so truncation happens-after every log read the
+    /// published floors still protect.
     fn gc(&self) {
         let _m = self.membership.lock().unwrap();
         let mut min_floor = u64::MAX;
@@ -434,6 +472,8 @@ impl<T: GateEntry> Esg<T> {
     /// (the engine's `do_reconfig` does), or the new readers skip the
     /// invoker's batch remainder.
     pub fn add_readers(&self, ids: &[usize], j: usize) -> bool {
+        // ORDERING: Acquire pairs with reader j's Release cursor bumps —
+        // the seed position is at least as fresh as j's last `get`.
         let pos = self.inner.readers[j].cursor.load(Ordering::Acquire).saturating_sub(1);
         self.add_readers_at(ids, pos)
     }
@@ -444,6 +484,13 @@ impl<T: GateEntry> Esg<T> {
     /// *currently* processing itself (cursor − unconsumed − 1) instead of
     /// relying on the cursor-1 convention of [`Esg::add_readers`]. Same
     /// all-inactive arbitration.
+    ///
+    /// ORDERING: the `active` Acquire check pairs with prior Release
+    /// deactivations (arbitration is additionally serialized by the
+    /// membership mutex); the seeding `cursor`/`floor` Release stores
+    /// are sequenced before the Release `active` flip, so any Acquire
+    /// observer of an active slot also sees its seeded position — never
+    /// a stale cursor from the slot's previous incarnation.
     pub fn add_readers_at(&self, ids: &[usize], pos: u64) -> bool {
         let _m = self.inner.membership.lock().unwrap();
         if ids.iter().any(|&i| self.inner.readers[i].active.load(Ordering::Acquire)) {
@@ -459,6 +506,10 @@ impl<T: GateEntry> Esg<T> {
 
     /// `removeReaders(R)`: deactivate readers. Returns `false` unless all
     /// were active.
+    ///
+    /// ORDERING: Acquire check / Release flip pair with each other across
+    /// membership calls; the Acquire scans in `gc`/`backlog_range` stop
+    /// counting a slot as soon as they observe the flip.
     pub fn remove_readers(&self, ids: &[usize]) -> bool {
         let _m = self.inner.membership.lock().unwrap();
         if ids.iter().any(|&i| !self.inner.readers[i].active.load(Ordering::Acquire)) {
@@ -474,6 +525,11 @@ impl<T: GateEntry> Esg<T> {
     /// guaranteed to only add tuples with ts ≥ `floor_ts` (the timestamp
     /// of the reconfiguration-triggering tuple). Returns `false` unless
     /// all of `ids` were inactive.
+    ///
+    /// ORDERING: the Release `last_ts` seed is sequenced before the
+    /// Release `active` flip, so `bound()`'s Acquire loads never observe
+    /// an active source with an unseeded clock (which would read
+    /// `TIME_MIN` and stall readiness gate-wide).
     pub fn add_sources(&self, ids: &[usize], floor_ts: EventTime) -> bool {
         let _m = self.inner.membership.lock().unwrap();
         if ids.iter().any(|&i| self.inner.sources[i].active.load(Ordering::Acquire)) {
@@ -490,6 +546,10 @@ impl<T: GateEntry> Esg<T> {
     /// `removeSources(S)`: the paper's *flush*: the sources stop gating
     /// readiness; their pending tuples still drain in order. Returns
     /// `false` unless all were active.
+    ///
+    /// ORDERING: Release `active` flips pair with `bound()`'s Acquire
+    /// loads — once observed inactive, the slot stops gating readiness;
+    /// the trailing merge attempt then publishes anything unblocked.
     pub fn remove_sources(&self, ids: &[usize]) -> bool {
         {
             let _m = self.inner.membership.lock().unwrap();
@@ -506,11 +566,15 @@ impl<T: GateEntry> Esg<T> {
     }
 
     /// Whether a source slot is currently active.
+    ///
+    /// ORDERING: Acquire pairs with membership's Release flips.
     pub fn source_active(&self, id: usize) -> bool {
         self.inner.sources[id].active.load(Ordering::Acquire)
     }
 
     /// Whether a reader slot is currently active.
+    ///
+    /// ORDERING: Acquire pairs with membership's Release flips.
     pub fn reader_active(&self, id: usize) -> bool {
         self.inner.readers[id].active.load(Ordering::Acquire)
     }
@@ -553,6 +617,7 @@ impl<T: GateEntry> SourceHandle<T> {
         self.id
     }
 
+    /// ORDERING: Acquire pairs with membership's Release `active` flips.
     pub fn is_active(&self) -> bool {
         self.inner.sources[self.id].active.load(Ordering::Acquire)
     }
@@ -560,6 +625,8 @@ impl<T: GateEntry> SourceHandle<T> {
     /// Non-blocking add. Tuples from one source MUST be ts-sorted.
     pub fn try_add(&mut self, t: T) -> Result<(), AddError<T>> {
         let slot = &self.inner.sources[self.id];
+        // ORDERING: Acquire pairs with membership's Release flips — a
+        // decommissioned slot must hand the tuple back, not enqueue it.
         if !slot.active.load(Ordering::Acquire) {
             return Err(AddError::Inactive(t));
         }
@@ -569,6 +636,8 @@ impl<T: GateEntry> SourceHandle<T> {
             return Err(AddError::Full(t));
         }
         let ts = t.ts();
+        // ORDERING: Acquire (debug-only monotonicity check) — reads our
+        // own single-writer clock; any ordering would do here.
         debug_assert!(
             ts >= slot.last_ts.load(Ordering::Acquire),
             "source {} stream not ts-sorted: {ts} < {}",
@@ -582,8 +651,13 @@ impl<T: GateEntry> SourceHandle<T> {
                 return Err(AddError::Full(t));
             }
         }
-        // publish the clock *after* the tuple is enqueued (conservative)
-        slot.last_ts.fetch_max(ts, Ordering::AcqRel);
+        // ORDERING: Release clock publish, sequenced after the queue-tail
+        // publish above — pairs with `bound()`'s Acquire loads, so a
+        // readiness bound admitting `ts` proves the tuple is visible to
+        // the merge. Weakened from AcqRel: the RMW's Acquire half was
+        // unused (the fetched-back value is discarded), and `fetch_max`'s
+        // same-location monotonicity is total regardless of ordering.
+        slot.last_ts.fetch_max(ts, Ordering::Release);
         self.inner.try_merge();
         Ok(())
     }
@@ -597,6 +671,8 @@ impl<T: GateEntry> SourceHandle<T> {
     /// added before.
     pub fn try_add_batch(&mut self, run: &mut Vec<T>) -> Result<usize, AddError<()>> {
         let slot = &self.inner.sources[self.id];
+        // ORDERING: Acquire pairs with membership's Release flips (see
+        // `try_add`).
         if !slot.active.load(Ordering::Acquire) {
             return Err(AddError::Inactive(()));
         }
@@ -608,6 +684,8 @@ impl<T: GateEntry> SourceHandle<T> {
             "source {} run not ts-sorted",
             self.id
         );
+        // ORDERING: Acquire (debug-only monotonicity check) — reads our
+        // own single-writer clock; any ordering would do here.
         debug_assert!(
             run[0].ts() >= slot.last_ts.load(Ordering::Acquire),
             "source {} stream not ts-sorted: {} < {}",
@@ -627,7 +705,10 @@ impl<T: GateEntry> SourceHandle<T> {
         let last_ts = run[n - 1].ts();
         let pushed = self.producer.push_slice(run, n);
         debug_assert_eq!(pushed, n);
-        slot.last_ts.fetch_max(last_ts, Ordering::AcqRel);
+        // ORDERING: ONE Release clock publish per run, sequenced after
+        // the run's single queue-tail publish — see `try_add` for the
+        // `bound()` pairing and the AcqRel→Release weakening argument.
+        slot.last_ts.fetch_max(last_ts, Ordering::Release);
         self.inner.try_merge();
         Ok(pushed)
     }
@@ -659,10 +740,13 @@ impl<T: GateEntry> SourceHandle<T> {
     /// still bounds it.
     pub fn force_add(&mut self, t: T) -> Result<(), AddError<T>> {
         let slot = &self.inner.sources[self.id];
+        // ORDERING: Acquire pairs with membership's Release flips (see
+        // `try_add`).
         if !slot.active.load(Ordering::Acquire) {
             return Err(AddError::Inactive(t));
         }
         let ts = t.ts();
+        // ORDERING: Acquire (debug-only check of our own clock).
         debug_assert!(ts >= slot.last_ts.load(Ordering::Acquire));
         match self.producer.try_push(t) {
             Ok(()) => {}
@@ -671,7 +755,9 @@ impl<T: GateEntry> SourceHandle<T> {
                 return Err(AddError::Full(t));
             }
         }
-        slot.last_ts.fetch_max(ts, Ordering::AcqRel);
+        // ORDERING: Release clock publish after the queue-tail publish —
+        // same pairing and AcqRel→Release weakening as `try_add`.
+        slot.last_ts.fetch_max(ts, Ordering::Release);
         self.inner.try_merge();
         Ok(())
     }
@@ -704,7 +790,10 @@ impl<T: GateEntry> SourceHandle<T> {
     /// low-level primitive behind heartbeats at gate level.
     pub fn advance_clock(&mut self, ts: EventTime) {
         let slot = &self.inner.sources[self.id];
-        slot.last_ts.fetch_max(ts, Ordering::AcqRel);
+        // ORDERING: Release heartbeat publish — pairs with `bound()`'s
+        // Acquire loads; nothing was enqueued, so the edge orders only
+        // the clock itself (AcqRel→Release: fetched-back value unused).
+        slot.last_ts.fetch_max(ts, Ordering::Release);
         self.inner.try_merge();
     }
 }
@@ -714,6 +803,7 @@ impl<T: GateEntry> ReaderHandle<T> {
         self.id
     }
 
+    /// ORDERING: Acquire pairs with membership's Release `active` flips.
     pub fn is_active(&self) -> bool {
         self.inner.readers[self.id].active.load(Ordering::Acquire)
     }
@@ -721,6 +811,13 @@ impl<T: GateEntry> ReaderHandle<T> {
     /// `getNextReadyTuple` (§2.4): next ready tuple not yet consumed by
     /// this reader; `None` if none is ready (or the reader is inactive —
     /// pool instances poll and back off, §7).
+    ///
+    /// ORDERING: `active` Acquire pairs with membership's Release flips;
+    /// the `cursor` Acquire loads pair with `add_readers_at`'s seeding
+    /// Release store (a just-activated reader starts exactly at its
+    /// seed); the `floor`/`cursor` Release stores publish consumption to
+    /// the Acquire scans in `gc`/`backlog_range`/`add_readers`. The log
+    /// read itself is covered by `Log`'s ready-publish protocol.
     pub fn get(&mut self) -> Option<T> {
         let slot = &self.inner.readers[self.id];
         if !slot.active.load(Ordering::Acquire) {
@@ -752,6 +849,10 @@ impl<T: GateEntry> ReaderHandle<T> {
     /// start until the next `get`/`get_batch`, so GC never reclaims
     /// entries the caller is still iterating and
     /// [`Esg::add_readers_at`] can seed new readers inside the batch.
+    ///
+    /// ORDERING: same protocol as [`ReaderHandle::get`] — `active`
+    /// Acquire, seeded-`cursor` Acquire, and ONE `floor`-then-`cursor`
+    /// Release publish per batch instead of per tuple.
     pub fn get_batch(&mut self, buf: &mut Vec<T>, max: usize) -> usize {
         if max == 0 {
             return 0;
@@ -780,6 +881,9 @@ impl<T: GateEntry> ReaderHandle<T> {
     }
 
     /// This reader's consume cursor (next log index it will take).
+    ///
+    /// ORDERING: Acquire pairs with the owner's (or the seeder's)
+    /// Release cursor stores — a monitoring read.
     pub fn cursor(&self) -> u64 {
         self.inner.readers[self.id].cursor.load(Ordering::Acquire)
     }
@@ -802,7 +906,12 @@ impl<T: GateEntry> ReaderHandle<T> {
     /// keeps consuming past it. Pinning never *raises* the current floor.
     pub fn pin_floor(&mut self, pos: u64) {
         let slot = &self.inner.readers[self.id];
-        slot.floor.fetch_min(pos, Ordering::AcqRel);
+        // ORDERING: Release floor publish — pairs with `gc`'s Acquire
+        // scan, so reclamation never runs ahead of the pin. Weakened
+        // from AcqRel: the RMW's Acquire half was unused (fetched-back
+        // value discarded), and `fetch_min`'s same-location monotonicity
+        // is total regardless of ordering.
+        slot.floor.fetch_min(pos, Ordering::Release);
         self.floor_pin = Some(pos);
     }
 
@@ -825,6 +934,14 @@ mod tests {
     use crate::tuple::Tuple;
 
     type T = Tuple<u64>;
+
+    /// Threaded-stress iteration count: scaled down under Miri so the
+    /// interpreted interleavings stay within the CI budget while the
+    /// same orderings get exercised.
+    #[cfg(miri)]
+    const STRESS_N: i64 = 300;
+    #[cfg(not(miri))]
+    const STRESS_N: i64 = 20_000;
 
     fn gate(ns: usize, nr: usize) -> (Esg<T>, Vec<SourceHandle<T>>, Vec<ReaderHandle<T>>) {
         Esg::new(
@@ -881,7 +998,7 @@ mod tests {
     #[test]
     fn output_is_ts_sorted_under_concurrency() {
         let (_g, src, mut rdr) = gate(4, 1);
-        let n = 20_000i64;
+        let n = STRESS_N;
         let handles: Vec<_> = src
             .into_iter()
             .take(4)
@@ -1250,7 +1367,7 @@ mod tests {
     #[test]
     fn exactly_once_per_reader_under_concurrency() {
         let (_g, mut src, rdr) = gate(1, 3);
-        let n = 30_000i64;
+        let n = STRESS_N + STRESS_N / 2;
         let producer = std::thread::spawn(move || {
             for ts in 0..n {
                 src[0].add(Tuple::data(ts, ts as u64)).unwrap();

@@ -6,6 +6,18 @@
 //! concurrently. Segments below the minimum reader cursor are reclaimed
 //! (`truncate_below`), keeping memory proportional to the reader lag bound
 //! enforced by flow control.
+//!
+//! # Memory-ordering protocol
+//!
+//! One edge carries the whole reader-side guarantee (the paper's Lemma 1
+//! ready-order handoff): the merge-lock holder fills slots `[ready,
+//! ready+n)` plainly, then publishes them with a single
+//! `ready.store(…, Release)`; every reader's `ready.load(Acquire)` pairs
+//! with that store, so a reader that observes index `i < ready` also
+//! observes the slot writes covering `i`. Writer-side `ready` loads are
+//! Relaxed self-reads (the merge lock serializes writers, so the current
+//! holder wrote the value it reads). The segment *table* is under an
+//! `RwLock`; slot contents are never touched through it after publish.
 
 use crate::util::CachePadded;
 use std::cell::UnsafeCell;
@@ -21,7 +33,16 @@ struct Segment<T> {
     slots: Box<[UnsafeCell<Option<T>>]>,
 }
 
+// SAFETY: a slot is written at most once, by the single merge-lock
+// holder, strictly before the Release `ready` publish that covers it;
+// concurrent readers only dereference slots below their Acquire-loaded
+// `ready`, i.e. after the write happened-before their read, and never
+// write. So no `UnsafeCell` is ever accessed mutably and concurrently,
+// and sharing a segment is sound for `T: Send + Sync`.
 unsafe impl<T: Send + Sync> Sync for Segment<T> {}
+// SAFETY: a segment owns its `Option<T>` slots outright; moving it
+// between threads moves `T`s, sound for `T: Send` (the `Sync` bound is
+// inherited from the shared-reader contract above).
 unsafe impl<T: Send + Sync> Send for Segment<T> {}
 
 impl<T> Segment<T> {
@@ -71,6 +92,9 @@ impl<T: Clone + Send + Sync> Log<T> {
     /// Number of published entries.
     #[inline]
     pub fn ready(&self) -> u64 {
+        // ORDERING: Acquire half of the publish edge — pairs with the
+        // Release `ready` store in `push`/`push_run`, making every slot
+        // below the returned index visible to this reader.
         self.ready.load(Ordering::Acquire)
     }
 
@@ -99,10 +123,21 @@ impl<T: Clone + Send + Sync> Log<T> {
     /// Append one entry and publish it. MUST be called by at most one
     /// thread at a time (the merge-lock holder).
     pub fn push(&self, v: T) {
+        // ORDERING: Relaxed self-read — the merge lock serializes
+        // writers, and the previous holder's lock release/acquire already
+        // ordered its `ready` store before our load.
         let idx = self.ready.load(Ordering::Relaxed);
         let seg = self.segment_for_write(idx >> SEG_SHIFT);
         let off = (idx & (SEG_SIZE as u64 - 1)) as usize;
+        // SAFETY: slot `idx` is at or above `ready`, so no reader may
+        // dereference it yet (readers stay below their Acquire-loaded
+        // `ready`), and we are the only writer (single merge-lock holder
+        // contract). `off` is masked into the segment, and
+        // `segment_for_write` returned the segment covering `idx`.
         unsafe { *seg.slots[off].get() = Some(v) };
+        // ORDERING: Release publish — pairs with every reader's Acquire
+        // `ready` load; the slot write above happens-before any read of
+        // index `idx` (Lemma 1's ready-order handoff).
         self.ready.store(idx + 1, Ordering::Release);
     }
 
@@ -116,6 +151,8 @@ impl<T: Clone + Send + Sync> Log<T> {
         if n == 0 {
             return;
         }
+        // ORDERING: Relaxed self-read under the merge lock (same
+        // single-writer argument as `push`).
         let start = self.ready.load(Ordering::Relaxed);
         let end = start + n;
         let mut drain = run.drain(..);
@@ -126,11 +163,19 @@ impl<T: Clone + Send + Sync> Log<T> {
             let chunk_end = end.min((seg_no + 1) << SEG_SHIFT);
             for i in idx..chunk_end {
                 let off = (i & (SEG_SIZE as u64 - 1)) as usize;
+                // SAFETY: every index in `[start, end)` is at or above
+                // the published `ready`, so readers cannot touch these
+                // slots until the single Release publish below; we are
+                // the only writer (merge-lock holder), and `off` is
+                // masked into the segment covering `i`.
                 unsafe { *seg.slots[off].get() = Some(drain.next().unwrap()) };
             }
             idx = chunk_end;
         }
         drop(drain);
+        // ORDERING: the run's SINGLE Release publish — pairs with the
+        // readers' Acquire `ready` loads; all slot writes above become
+        // visible atomically, so readers observe none or all of the run.
         self.ready.store(end, Ordering::Release);
     }
 
@@ -156,6 +201,12 @@ impl<T: Clone + Send + Sync> Log<T> {
         }
         let seg = cache.seg.as_ref().unwrap();
         let off = (idx - cache.base) as usize;
+        // SAFETY: the caller's contract `idx < ready()` means an Acquire
+        // `ready` load already observed the Release publish covering
+        // `idx`, so the slot write happened-before this read and the slot
+        // is immutable from here on (single writer never rewrites below
+        // `ready`). Shared read-only access is therefore sound; `off` is
+        // within the cached segment by the `hit` check above.
         unsafe { (*seg.slots[off].get()).as_ref().expect("published slot empty").clone() }
     }
 
@@ -190,6 +241,14 @@ impl<T: Clone + Send + Sync> Default for Log<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    // Interpreter-scale budget under Miri; still crosses several segment
+    // boundaries (SEG_SIZE is 1024, so use multiples of it instead where
+    // segment traversal is the point).
+    #[cfg(miri)]
+    const STRESS_N: u64 = 2_500;
+    #[cfg(not(miri))]
+    const STRESS_N: u64 = 100_000;
 
     #[test]
     fn push_get_roundtrip() {
@@ -276,7 +335,7 @@ mod tests {
         let writer = {
             let log = log.clone();
             std::thread::spawn(move || {
-                for i in 0..100_000u64 {
+                for i in 0..STRESS_N {
                     log.push(i);
                 }
             })
@@ -288,7 +347,7 @@ mod tests {
                     let mut cache = SegCache::default();
                     let mut next = 0u64;
                     let mut idle = crate::util::Backoff::active();
-                    while next < 100_000 {
+                    while next < STRESS_N {
                         let r = log.ready();
                         if next < r {
                             idle.reset();

@@ -207,6 +207,8 @@ pub fn measure_gate_cost_threaded(
         })
     };
     let t0 = Instant::now();
+    // lint: allow(sleep) — the measurement window itself: the benchmark
+    // runs for a fixed wall-clock duration while worker threads spin.
     std::thread::sleep(std::time::Duration::from_millis(ms.max(1)));
     stop.store(true, Ordering::Release);
     feeder.join().unwrap();

@@ -1,5 +1,8 @@
 //! Bounded SPSC / MPSC queues used by the shared-nothing (SN) baseline.
 //!
+//! lint: lock-free — this file may not reference Mutex/RwLock/Condvar
+//! (rule L5); the ring synchronizes through `head`/`tail` alone.
+//!
 //! §2.2: with SN parallelism each pair of connected instances exchanges
 //! tuples over a *dedicated* queue. The SN baseline engine therefore pays
 //! one enqueue per (tuple, downstream-responsible-instance) pair — the data
@@ -12,6 +15,28 @@
 //! so producer and consumer never false-share, and the batch operations
 //! ([`Producer::push_slice`], [`Consumer::pop_chunk`]) amortize the
 //! remaining head/tail atomic traffic over whole runs of tuples.
+//!
+//! # Memory-ordering protocol (the pairings every site below cites)
+//!
+//! Single producer, single consumer; two index atomics, each with ONE
+//! writer:
+//!
+//! * **tail publish** — the producer writes slots `[tail, tail+n)` then
+//!   `tail.store(tail+n, Release)`; the consumer's
+//!   `tail.load(Acquire)` pairs with it, making the slot writes visible
+//!   before the index that covers them. This is the edge that hands a
+//!   tuple across threads.
+//! * **head reclaim** — the consumer reads slots out then
+//!   `head.store(head+n, Release)`; the producer's
+//!   `head.load(Acquire)` pairs with it, ensuring the consumer's reads
+//!   completed before the producer may overwrite those slots.
+//! * Each side loads its OWN index Relaxed — it is that index's only
+//!   writer, so it always sees its latest value; no cross-thread edge
+//!   is needed.
+//! * **closed flag** — Release store / Acquire load; Acquire is
+//!   stronger than this bool strictly needs (it is a latch carrying no
+//!   payload), but it keeps `is_done()`'s closed-then-drained check
+//!   ordered with the tail load that follows it.
 
 use crate::util::CachePadded;
 use std::cell::UnsafeCell;
@@ -27,7 +52,15 @@ struct Inner<T> {
     closed: AtomicBool,
 }
 
+// SAFETY: `Inner` is shared by exactly one Producer and one Consumer.
+// Slot `i` is written only by the producer while `head <= i < tail`
+// excludes it from the consumer, and read only by the consumer after the
+// producer's Release tail-publish made the write visible (protocol in
+// the module docs). The `UnsafeCell`s are therefore never accessed from
+// two threads at once, so sharing `Inner` is sound whenever `T: Send`.
 unsafe impl<T: Send> Sync for Inner<T> {}
+// SAFETY: moving `Inner` between threads moves owned `T`s (the queued
+// elements) and atomics; both are `Send` when `T: Send`.
 unsafe impl<T: Send> Send for Inner<T> {}
 
 /// Producer handle (single producer).
@@ -74,19 +107,35 @@ impl<T> Producer<T> {
     /// Attempt to push; `Err(Full)` signals backpressure.
     pub fn try_push(&mut self, v: T) -> Result<(), PushError<T>> {
         let inner = &*self.inner;
+        // ORDERING: closed latch, Acquire paired with the Release store
+        // in `close` (module docs).
         if inner.closed.load(Ordering::Acquire) {
             return Err(PushError::Closed(v));
         }
+        // ORDERING: Relaxed — the producer is `tail`'s only writer, so
+        // this is a self-read; no cross-thread edge needed.
         let tail = inner.tail.load(Ordering::Relaxed);
         if tail.wrapping_sub(self.head_cache) >= inner.cap {
+            // ORDERING: head-reclaim edge — Acquire pairs with the
+            // consumer's Release head publish in `try_pop`/`pop_chunk`,
+            // so the consumer's slot reads happened-before we overwrite.
             self.head_cache = inner.head.load(Ordering::Acquire);
             if tail.wrapping_sub(self.head_cache) >= inner.cap {
                 return Err(PushError::Full(v));
             }
         }
+        // SAFETY: `tail & (cap-1)` is in bounds (cap is a power of two).
+        // The full-check above proved `tail - head < cap`, so slot `tail`
+        // is outside the consumer's live range `[head, tail)`: we are the
+        // only thread touching it, and any previous occupant was already
+        // moved out by `assume_init_read`. Writing a fresh value into the
+        // `MaybeUninit` is sound and must not drop the old slot content.
         unsafe {
             (*inner.buf[tail & (inner.cap - 1)].get()).write(v);
         }
+        // ORDERING: tail-publish edge — Release pairs with the consumer's
+        // Acquire tail load; the slot write above becomes visible before
+        // the index that covers it (module docs).
         inner.tail.store(tail.wrapping_add(1), Ordering::Release);
         Ok(())
     }
@@ -111,6 +160,11 @@ impl<T> Producer<T> {
     /// cached head). Monotone until the next push: the consumer can only
     /// pop, so a subsequent [`push_slice`](Self::push_slice) of at most
     /// this many items is guaranteed to take them all.
+    ///
+    /// ORDERING: the `tail` self-read is Relaxed (single writer: us);
+    /// the `head` refresh is the Acquire half of the head-reclaim edge
+    /// (pairs with the consumer's Release head publish) so reclaimed
+    /// slots are safe to overwrite.
     pub fn free(&mut self) -> usize {
         let inner = &*self.inner;
         let tail = inner.tail.load(Ordering::Relaxed);
@@ -122,6 +176,7 @@ impl<T> Producer<T> {
 
     /// Whether the channel was closed (by either end).
     pub fn is_closed(&self) -> bool {
+        // ORDERING: closed latch, Acquire paired with `close`'s Release.
         self.inner.closed.load(Ordering::Acquire)
     }
 
@@ -130,6 +185,7 @@ impl<T> Producer<T> {
     /// taken. 0 can mean full, closed, or an empty `items` — callers that
     /// care distinguish via [`is_closed`](Self::is_closed)/[`free`](Self::free).
     pub fn push_slice(&mut self, items: &mut Vec<T>, max: usize) -> usize {
+        // ORDERING: closed latch, Acquire paired with `close`'s Release.
         if items.is_empty() || max == 0 || self.inner.closed.load(Ordering::Acquire) {
             return 0;
         }
@@ -138,18 +194,30 @@ impl<T> Producer<T> {
             return 0;
         }
         let inner = &*self.inner;
+        // ORDERING: Relaxed self-read of `tail` (single writer: us).
         let tail = inner.tail.load(Ordering::Relaxed);
         let mask = inner.cap - 1;
         for (i, v) in items.drain(..n).enumerate() {
+            // SAFETY: same argument as `try_push`, extended to a run:
+            // `free()` proved slots `[tail, tail+n)` are outside the
+            // consumer's live range, indices are masked into bounds, and
+            // each target `MaybeUninit` holds no live value.
             unsafe {
                 (*inner.buf[tail.wrapping_add(i) & mask].get()).write(v);
             }
         }
+        // ORDERING: tail-publish edge — ONE Release covers the whole run
+        // of slot writes above; pairs with the consumer's Acquire tail
+        // load. This per-run (not per-tuple) publish is the batching win.
         inner.tail.store(tail.wrapping_add(n), Ordering::Release);
         n
     }
 
     /// Number of elements currently queued (approximate under concurrency).
+    ///
+    /// ORDERING: Relaxed on both indices — a monitoring snapshot with no
+    /// associated slot access; the value is stale the moment it returns
+    /// and synchronizes nothing.
     pub fn len(&self) -> usize {
         let t = self.inner.tail.load(Ordering::Relaxed);
         let h = self.inner.head.load(Ordering::Relaxed);
@@ -166,6 +234,9 @@ impl<T> Producer<T> {
 
     /// Close the channel: consumer will drain remaining items then see None.
     pub fn close(&self) {
+        // ORDERING: Release pairs with the Acquire loads of `closed`;
+        // everything pushed before closing is visible to a consumer that
+        // observes the latch (drain-then-None contract).
         self.inner.closed.store(true, Ordering::Release);
     }
 }
@@ -174,14 +245,28 @@ impl<T> Consumer<T> {
     /// Attempt to pop. `None` means currently empty (check `is_closed`).
     pub fn try_pop(&mut self) -> Option<T> {
         let inner = &*self.inner;
+        // ORDERING: Relaxed self-read — the consumer is `head`'s only
+        // writer.
         let head = inner.head.load(Ordering::Relaxed);
         if head == self.tail_cache {
+            // ORDERING: tail-publish edge — Acquire pairs with the
+            // producer's Release tail store, making the covered slot
+            // writes visible before we read them below.
             self.tail_cache = inner.tail.load(Ordering::Acquire);
             if head == self.tail_cache {
                 return None;
             }
         }
+        // SAFETY: `head < tail_cache` (checked above), and the Acquire
+        // tail load made the producer's write of slot `head` visible, so
+        // the slot is initialized; the index is masked into bounds. We
+        // are the only consumer, so moving the value out with
+        // `assume_init_read` cannot race or double-read — the head
+        // publish below retires the slot before the producer may reuse it.
         let v = unsafe { (*inner.buf[head & (inner.cap - 1)].get()).assume_init_read() };
+        // ORDERING: head-reclaim edge — Release pairs with the producer's
+        // Acquire head load; our slot read above happens-before the
+        // producer's overwrite of this slot.
         inner.head.store(head.wrapping_add(1), Ordering::Release);
         Some(v)
     }
@@ -193,8 +278,11 @@ impl<T> Consumer<T> {
             return 0;
         }
         let inner = &*self.inner;
+        // ORDERING: Relaxed self-read — we are `head`'s only writer.
         let head = inner.head.load(Ordering::Relaxed);
         if head == self.tail_cache {
+            // ORDERING: tail-publish edge — Acquire pairs with the
+            // producer's Release tail store (same as `try_pop`).
             self.tail_cache = inner.tail.load(Ordering::Acquire);
             if head == self.tail_cache {
                 return 0;
@@ -204,19 +292,32 @@ impl<T> Consumer<T> {
         let mask = inner.cap - 1;
         buf.reserve(n);
         for i in 0..n {
+            // SAFETY: slots `[head, head+n)` are below the Acquire-loaded
+            // tail, hence initialized and visible; indices masked into
+            // bounds; single consumer, and the slots are not retired to
+            // the producer until the head publish below — so each value
+            // is moved out exactly once.
             buf.push(unsafe {
                 (*inner.buf[head.wrapping_add(i) & mask].get()).assume_init_read()
             });
         }
+        // ORDERING: head-reclaim edge — ONE Release retires the whole
+        // run; pairs with the producer's Acquire head load.
         inner.head.store(head.wrapping_add(n), Ordering::Release);
         n
     }
 
     /// True when producer closed AND the queue is drained.
     pub fn is_done(&mut self) -> bool {
+        // ORDERING: closed latch, Acquire paired with `close`'s Release —
+        // and loaded BEFORE the emptiness probe: close-then-push is
+        // impossible, so closed-and-then-empty really means end-of-stream.
         self.inner.closed.load(Ordering::Acquire) && self.try_peek_empty()
     }
 
+    /// ORDERING: Relaxed self-read of `head`; Acquire tail refresh pairs
+    /// with the producer's Release publish (tail-publish edge) so the
+    /// emptiness verdict reflects every push that happened-before it.
     fn try_peek_empty(&mut self) -> bool {
         let inner = &*self.inner;
         let head = inner.head.load(Ordering::Relaxed);
@@ -224,6 +325,8 @@ impl<T> Consumer<T> {
         head == self.tail_cache
     }
 
+    /// ORDERING: Relaxed on both indices — monitoring snapshot only,
+    /// synchronizes nothing (same contract as `Producer::len`).
     pub fn len(&self) -> usize {
         let t = self.inner.tail.load(Ordering::Relaxed);
         let h = self.inner.head.load(Ordering::Relaxed);
@@ -235,6 +338,8 @@ impl<T> Consumer<T> {
     }
 
     pub fn close(&self) {
+        // ORDERING: Release pairs with the producer's Acquire `closed`
+        // loads (same latch as `Producer::close`).
         self.inner.closed.store(true, Ordering::Release);
     }
 }
@@ -256,6 +361,14 @@ impl<T> Drop for Producer<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    // Under Miri the threaded stress tests run on an interpreter ~3
+    // orders of magnitude slower than native; a few hundred elements
+    // still cross every wrap-around and cached-index refresh path.
+    #[cfg(miri)]
+    const STRESS_N: u64 = 300;
+    #[cfg(not(miri))]
+    const STRESS_N: u64 = 200_000;
 
     #[test]
     fn push_pop_roundtrip() {
@@ -309,7 +422,7 @@ mod tests {
     #[test]
     fn concurrent_fifo_order() {
         let (mut p, mut c) = spsc::<u64>(64);
-        let n = 200_000u64;
+        let n = STRESS_N;
         let producer = std::thread::spawn(move || {
             for i in 0..n {
                 assert!(p.push_blocking(i));
@@ -372,7 +485,7 @@ mod tests {
     #[test]
     fn batched_concurrent_fifo_order() {
         let (mut p, mut c) = spsc::<u64>(64);
-        let n = 200_000u64;
+        let n = STRESS_N;
         let producer = std::thread::spawn(move || {
             let mut pending: Vec<u64> = Vec::new();
             let mut next = 0u64;
