@@ -4,8 +4,10 @@
 //! two higher layers: declare a whole topology as 20 lines of config,
 //! and drive a live job from your own code through `Job::launch`'s
 //! `JobHandle` (scale with measured reconfig latencies, sample metrics,
-//! quiesce, shut down). Finally: kill a worker mid-run and watch the
-//! supervisor heal it by reconfiguration alone.
+//! quiesce, shut down). Then: kill a worker mid-run and watch the
+//! supervisor heal it by reconfiguration alone. Finally: install the
+//! crate's counting allocator and watch the steady-state allocation
+//! rate of the batched gate path converge to zero.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -14,9 +16,17 @@
 use std::sync::Arc;
 use std::time::Duration;
 use stretch::engine::{VsnEngine, VsnOptions};
+use stretch::metrics::CountingAlloc;
 use stretch::operator::aggregate::count_per_key_op;
 use stretch::time::WindowSpec;
 use stretch::tuple::{Mapper, Tuple};
+
+/// Count every heap allocation the example makes so step 11 can show the
+/// run-buffer pools reaching their allocation-free steady state. The
+/// counter is two relaxed atomic adds per alloc — cheap enough to leave
+/// on for the whole example.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn main() {
     // 1. An A+ operator: count occurrences per key over 10 s tumbling
@@ -89,6 +99,7 @@ fn main() {
     drive_a_live_job_from_your_own_code();
     pin_the_data_plane_with_placement();
     kill_a_worker_and_watch_it_heal();
+    watch_allocs_per_tuple_go_to_zero();
 }
 
 /// 7. The declarative layer: a whole elastic TOPOLOGY — stages, edges,
@@ -300,4 +311,49 @@ steps = ["1 -> kill tokenize:0"]
         out.result.egress_count,
         if out.degraded { " (job DEGRADED)" } else { "" }
     );
+}
+
+/// 11. The memory discipline, made visible: this example runs under the
+///     crate's `CountingAlloc` (see the `#[global_allocator]` at the
+///     top), so we can watch the batched-gate hot path settle into its
+///     allocation-free steady state (§ "Perf: memory discipline" in the
+///     crate docs). The first rounds allocate — the ESG ring, the merge
+///     scratch, and the run-buffer pools all grow to their working set —
+///     then every buffer recycles through the pools and the per-tuple
+///     count drops to ≈0. `bench_micro` records the warm number as
+///     `allocs_per_tuple_batched_gate`, and CI gates it at 1.2× because
+///     allocation counts, unlike tuples/s, are deterministic on any
+///     machine.
+fn watch_allocs_per_tuple_go_to_zero() {
+    use stretch::metrics::alloc_snapshot;
+
+    const BATCH: usize = 256;
+    const ROUNDS_PER_STEP: u64 = 16;
+    let (_gate, mut src, mut rdr) = stretch::scalegate::scale_gate::<Tuple<u64>>(1, 1, 1 << 14);
+    let mut ts = 0i64;
+    let mut run: Vec<Tuple<u64>> = Vec::new();
+    let mut out: Vec<Tuple<u64>> = Vec::new();
+    println!("\nwatch allocs/tuple go to zero ({BATCH}-tuple runs through a batched gate):");
+    for step in 0..5u64 {
+        let before = alloc_snapshot();
+        for _ in 0..ROUNDS_PER_STEP {
+            for _ in 0..BATCH {
+                ts += 1;
+                run.push(Tuple::data(ts, 1));
+            }
+            src[0].add_batch(&mut run).unwrap();
+            while rdr[0].get_batch(&mut out, BATCH) > 0 {}
+            out.clear();
+        }
+        let d = alloc_snapshot().delta(before);
+        let tuples = (ROUNDS_PER_STEP * BATCH as u64) as f64;
+        println!(
+            "  rounds {:>2}..{:>2}: {:.4} allocs/tuple, {:>7.1} bytes/tuple",
+            step * ROUNDS_PER_STEP + 1,
+            (step + 1) * ROUNDS_PER_STEP,
+            d.allocs as f64 / tuples,
+            d.bytes as f64 / tuples,
+        );
+    }
+    println!("  cold rounds fill the pools; warm rounds recycle them — ≈0 is the contract");
 }

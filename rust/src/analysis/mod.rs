@@ -7,10 +7,11 @@
 //! static analyzer (no rustc plumbing, no external crates):
 //! [`lexer`] tokenizes a file precisely enough that keywords inside
 //! strings or comments can never confuse a rule, and [`rules`] checks
-//! the repo's concurrency invariants L1–L5 (SAFETY comments on
-//! `unsafe`, ORDERING justifications on data-plane atomics,
+//! the repo's concurrency + memory-discipline invariants L1–L6 (SAFETY
+//! comments on `unsafe`, ORDERING justifications on data-plane atomics,
 //! no ad-hoc sleeping/spinning, cache-padded slot arrays,
-//! lock-free-marker enforcement — see [`rules`] for the full table).
+//! lock-free-marker enforcement, no allocation in `lint: no-alloc`
+//! hot fns — see [`rules`] for the full table).
 //!
 //! Run it as `stretch lint [--format text|json] [paths…]` (default path
 //! `rust/src`); exit status 0 = clean, 1 = findings, 2 = I/O error. CI

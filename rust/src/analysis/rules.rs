@@ -16,12 +16,22 @@
 //! |                    | elements in `CachePadded`                              |
 //! | `lock-free`        | L5: no `Mutex`/`RwLock`/`Condvar` in files declaring a |
 //! |                    | `//! lint: lock-free` marker                           |
+//! | `alloc`            | L6: no `Vec::new`/`with_capacity`/`collect`/`Box::new`/|
+//! |                    | `to_vec` in fns marked `lint: no-alloc`                |
 //!
 //! **Scope.** `#[cfg(test)]` / `#[test]` items are skipped by every rule
 //! (tests may sleep, take locks, and poke atomics freely). L2 applies
 //! only to the data-plane set named by the audit: `scalegate/`,
 //! `util/spsc.rs`, `engine/{vsn,barrier,epoch,sn}.rs`, and `metrics/`.
 //! L4 applies inside `scalegate/`; L5 only where the marker is declared.
+//! L6 applies to any fn whose doc block carries a `lint: no-alloc`
+//! marker (the repo marks the `scalegate/` merge path and the
+//! `util/spsc.rs` batch hot fns); it keeps the allocation-free
+//! steady-state contract of §Perf "memory discipline" honest — scratch
+//! in those fns must come from the caller or the run-buffer pool, never
+//! the allocator. `reserve` is deliberately NOT banned: on recycled
+//! capacity it is a no-op, and banning it would force waivers onto
+//! every batch-append site.
 //!
 //! **Waivers.** A finding is suppressed by a comment on the same
 //! statement containing `lint: allow(<rule-id>) — <reason>`; the reason
@@ -49,6 +59,8 @@ pub const RULE_SLEEP: &str = "sleep";
 pub const RULE_CACHE_PADDED: &str = "cache-padded";
 /// Rule L5 — lock type in a `//! lint: lock-free` file.
 pub const RULE_LOCK_FREE: &str = "lock-free";
+/// Rule L6 — allocating call in a fn marked `lint: no-alloc`.
+pub const RULE_ALLOC: &str = "alloc";
 
 /// One analyzer finding. `file` is the path as given (normalized to
 /// `/` separators), `line` is 1-based.
@@ -80,6 +92,7 @@ pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
         check_cache_padded(&path, &toks, &skip, &mut out);
     }
     check_lock_free(&path, &toks, &skip, &fns, &mut out);
+    check_alloc(&path, &toks, &skip, &fns, &mut out);
 
     out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
     out
@@ -573,6 +586,61 @@ fn check_lock_free(path: &str, toks: &[Tok], skip: &[bool], fns: &[FnSpan], out:
     }
 }
 
+// ---------------------------------------------------------------------
+// L6: allocating calls banned in `lint: no-alloc` fns
+// ---------------------------------------------------------------------
+
+fn check_alloc(path: &str, toks: &[Tok], skip: &[bool], fns: &[FnSpan], out: &mut Vec<Finding>) {
+    for f in fns {
+        if !f.doc.contains("lint: no-alloc") {
+            continue;
+        }
+        for i in f.body_start..f.body_end.min(toks.len()) {
+            let t = &toks[i];
+            if skip[i] || t.kind != TokKind::Ident {
+                continue;
+            }
+            let what = match t.text.as_str() {
+                "collect" | "to_vec" | "with_capacity" => t.text.clone(),
+                // `new` only as `Vec::new` / `Box::new` — a constructor
+                // named `new` on a non-allocating type must not trip
+                "new" => {
+                    let p1 = prev_code(toks, i);
+                    let p2 = p1.and_then(|j| prev_code(toks, j));
+                    let p3 = p2.and_then(|j| prev_code(toks, j));
+                    let owner = match (p1, p2, p3) {
+                        (Some(a), Some(b), Some(c))
+                            if toks[a].is_punct(':') && toks[b].is_punct(':') =>
+                        {
+                            toks[c].text.as_str()
+                        }
+                        _ => continue,
+                    };
+                    if !matches!(owner, "Vec" | "Box") {
+                        continue;
+                    }
+                    format!("{owner}::new")
+                }
+                _ => continue,
+            };
+            let blob = stmt_comment_blob(toks, i);
+            if waived(&blob, RULE_ALLOC) || waived(&f.doc, RULE_ALLOC) {
+                continue;
+            }
+            out.push(Finding {
+                file: path.to_string(),
+                line: t.line,
+                rule: RULE_ALLOC,
+                message: format!(
+                    "`{what}` allocates inside a `lint: no-alloc` fn — draw scratch from the \
+                     caller or the run-buffer pool (waive deliberate cold-path allocation with \
+                     `lint: allow(alloc) — <reason>`)"
+                ),
+            });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -790,6 +858,62 @@ mod tests {
     fn l5_test_mod_in_marked_file_may_lock() {
         let src = "//! lint: lock-free\n#[cfg(test)]\nmod tests {\n    use std::sync::Mutex;\n}";
         assert!(lint_source("rust/src/util/spsc.rs", src).is_empty());
+    }
+
+    // ----- L6 -----
+
+    #[test]
+    fn l6_marked_fn_with_vec_new_flags() {
+        let src = "/// Hot path.\n/// lint: no-alloc — steady state must not touch the allocator.\nfn f() -> Vec<u8> {\n    let v: Vec<u8> = Vec::new();\n    v\n}";
+        let f = lint_source("rust/src/scalegate/esg.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_ALLOC]);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn l6_unmarked_fn_allocates_freely() {
+        let src = "fn f() -> Vec<u8> { let mut v = Vec::with_capacity(8); v.push(1); v }";
+        assert!(lint_source("rust/src/scalegate/esg.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l6_collect_to_vec_and_with_capacity_flag() {
+        let src = "// lint: no-alloc\nfn f(s: &[u8]) {\n    let a: Vec<u8> = s.iter().copied().collect();\n    let b = s.to_vec();\n    let c: Vec<u8> = Vec::with_capacity(4);\n    let _ = (a, b, c);\n}";
+        let f = lint_source("rust/src/util/spsc.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_ALLOC, RULE_ALLOC, RULE_ALLOC]);
+    }
+
+    #[test]
+    fn l6_box_new_flags_but_other_constructors_pass() {
+        let src = "// lint: no-alloc\nfn f() {\n    let b = Box::new(1u8);\n    let k = Backoff::new();\n    let _ = (b, k);\n}";
+        let f = lint_source("rust/src/scalegate/esg.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_ALLOC]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn l6_reserve_is_deliberately_allowed() {
+        let src = "// lint: no-alloc — recycled capacity makes reserve a no-op\nfn f(buf: &mut Vec<u8>, n: usize) {\n    buf.reserve(n);\n    buf.push(0);\n}";
+        assert!(lint_source("rust/src/util/spsc.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l6_statement_waiver_suppresses() {
+        let src = "// lint: no-alloc\nfn f() {\n    // lint: allow(alloc) — cold start: the pool is empty exactly once\n    let v: Vec<u8> = Vec::with_capacity(8);\n    let _ = v;\n}";
+        assert!(lint_source("rust/src/scalegate/esg.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l6_applies_outside_the_dataplane_too() {
+        let src = "// lint: no-alloc\nfn f() { let v: Vec<u8> = Vec::new(); let _ = v; }";
+        let f = lint_source("rust/src/harness/handle.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_ALLOC]);
+    }
+
+    #[test]
+    fn l6_test_code_is_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    // lint: no-alloc\n    fn f() { let v: Vec<u8> = Vec::new(); let _ = v; }\n}";
+        assert!(lint_source("rust/src/scalegate/esg.rs", src).is_empty());
     }
 
     // ----- cross-cutting -----

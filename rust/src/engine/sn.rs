@@ -14,6 +14,7 @@ use crate::metrics::{Histogram, OperatorMetrics};
 use crate::operator::state::SharedState;
 use crate::operator::{Ctx, OperatorCore, OperatorDef, OperatorLogic};
 use crate::tuple::{Mapper, Tuple};
+use crate::util::pool;
 use crate::util::spsc::{self, Consumer, Producer, PushError};
 use crate::util::Backoff;
 use crate::watermark::MergeSorter;
@@ -77,11 +78,19 @@ pub struct SnIngress<L: OperatorLogic> {
 
 impl<L: OperatorLogic> SnIngress<L> {
     /// forwardSN: route `t` to every instance responsible for one of its
-    /// keys (cloning per target); heartbeats broadcast to all instances.
+    /// keys; heartbeats broadcast to all instances. Zero-copy fan-out
+    /// (§Perf memory discipline): the LAST responsible target receives
+    /// the original tuple by move — only the first n−1 targets are
+    /// clones, so single-target routing (the common case) and Π = 1
+    /// broadcasts never touch the allocator. Theorem 1's duplication
+    /// overhead is the *extra* copies, and n hits cost exactly n − 1.
     pub fn forward(&mut self, t: Tuple<L::In>) {
         if !t.kind.is_data() {
-            for q in self.queues.iter_mut() {
-                push_blocking(q, t.clone(), &self.running);
+            if let Some((last, rest)) = self.queues.split_last_mut() {
+                for q in rest.iter_mut() {
+                    push_blocking(q, t.clone(), &self.running);
+                }
+                push_blocking(last, t, &self.running);
             }
             return;
         }
@@ -91,23 +100,31 @@ impl<L: OperatorLogic> SnIngress<L> {
         for &k in &self.keys_buf {
             self.targets[self.mapper.map(k)] = true;
         }
-        let mut n = 0;
-        for (j, &hit) in self.targets.iter().enumerate() {
-            if hit {
+        // a tuple may have no keys (Def. 4 allows f_MK = ∅): forwarded
+        // nowhere, like the per-target loop it replaces
+        let Some(last) = self.targets.iter().rposition(|&hit| hit) else {
+            return;
+        };
+        let mut n = 1u64;
+        for j in 0..last {
+            if self.targets[j] {
                 push_blocking(&mut self.queues[j], t.clone(), &self.running);
                 n += 1;
             }
         }
+        push_blocking(&mut self.queues[last], t, &self.running);
         // ORDERING: Relaxed — duplication-overhead counter (Theorem 1
         // accounting); read only in end-of-run reports.
         self.forwarded.fetch_add(n, Ordering::Relaxed);
     }
 
-    /// Batched forwardSN: route a ts-sorted run, staging the clones per
-    /// target queue and flushing each with batched pushes — one
-    /// tail publish per (run, target) instead of per (tuple, target).
-    /// Drains `run` (the caller's buffer keeps its allocation, like the
-    /// other batch APIs).
+    /// Batched forwardSN: route a ts-sorted run, staging per target
+    /// queue and flushing each with batched pushes — one tail publish
+    /// per (run, target) instead of per (tuple, target). Zero-copy like
+    /// [`forward`](Self::forward): the last responsible target stages
+    /// the original by move, only the first n−1 stage clones. Drains
+    /// `run` (the caller's buffer keeps its allocation, like the other
+    /// batch APIs).
     pub fn forward_batch(&mut self, run: &mut Vec<Tuple<L::In>>) {
         if self.staging.is_empty() {
             self.staging = (0..self.queues.len()).map(|_| Vec::new()).collect();
@@ -117,8 +134,11 @@ impl<L: OperatorLogic> SnIngress<L> {
             if !t.kind.is_data() {
                 // order matters: drain staged data ahead of the broadcast
                 self.flush_staging();
-                for q in self.queues.iter_mut() {
-                    push_blocking(q, t.clone(), &self.running);
+                if let Some((last, rest)) = self.queues.split_last_mut() {
+                    for q in rest.iter_mut() {
+                        push_blocking(q, t.clone(), &self.running);
+                    }
+                    push_blocking(last, t, &self.running);
                 }
                 continue;
             }
@@ -128,12 +148,18 @@ impl<L: OperatorLogic> SnIngress<L> {
             for &k in &self.keys_buf {
                 self.targets[self.mapper.map(k)] = true;
             }
-            for (j, &hit) in self.targets.iter().enumerate() {
-                if hit {
+            let Some(last) = self.targets.iter().rposition(|&hit| hit) else {
+                continue;
+            };
+            for j in 0..last {
+                if self.targets[j] {
                     self.staging[j].push(t.clone());
                     n += 1;
                 }
             }
+            // zero-copy: the last responsible target takes the original
+            self.staging[last].push(t);
+            n += 1;
         }
         self.flush_staging();
         // ORDERING: Relaxed — duplication-overhead counter, as in
@@ -144,6 +170,9 @@ impl<L: OperatorLogic> SnIngress<L> {
     fn flush_staging(&mut self) {
         for (j, buf) in self.staging.iter_mut().enumerate() {
             push_slice_blocking(&mut self.queues[j], buf, &self.running);
+            // burst decay: one hot run must not pin a staging row's
+            // inflated capacity forever
+            pool::shrink_excess(buf, pool::DEFAULT_SHRINK_CAP);
         }
     }
 
@@ -490,10 +519,182 @@ fn run_instance<L: OperatorLogic>(
         }
         // per-iteration flush: idle loops must not sit on staged outputs
         push_slice_blocking(egress, &mut out_buf, &running);
+        // burst decay: an expiry emission burst must not pin out_buf
+        // capacity past this flush point (no-op in steady state)
+        pool::shrink_excess(&mut out_buf, pool::DEFAULT_SHRINK_CAP);
         if moved || processed > 0 {
             backoff.reset();
         } else {
             backoff.snooze();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuple::Key;
+
+    /// Payload whose `Clone` bumps a shared counter — makes the fan-out
+    /// copy count observable. The `Arc` bump in `clone` is bookkeeping,
+    /// not the measured allocation.
+    #[derive(Debug, Default)]
+    struct Counted(Arc<AtomicU64>);
+
+    impl Clone for Counted {
+        fn clone(&self) -> Self {
+            self.0.fetch_add(1, Ordering::Relaxed);
+            Counted(self.0.clone())
+        }
+    }
+
+    /// f_MK emits keys `0..fan` for every tuple: with a hash mapper this
+    /// hits a deterministic subset of the instances.
+    struct FanLogic {
+        fan: u64,
+    }
+
+    impl OperatorLogic for FanLogic {
+        type In = Counted;
+        type Out = Counted;
+        type State = ();
+        fn keys(&self, _t: &Tuple<Counted>, keys: &mut Vec<Key>) {
+            keys.extend(0..self.fan);
+        }
+        fn update(
+            &self,
+            _w: &mut crate::operator::WindowSet<()>,
+            _t: &Tuple<Counted>,
+            _ctx: &mut Ctx<'_, Counted>,
+        ) {
+        }
+    }
+
+    fn test_ingress(
+        pi: usize,
+        fan: u64,
+        queue_cap: usize,
+    ) -> (SnIngress<FanLogic>, Vec<Consumer<Tuple<Counted>>>) {
+        let mut queues = Vec::with_capacity(pi);
+        let mut consumers = Vec::with_capacity(pi);
+        for _ in 0..pi {
+            let (p, c) = spsc::spsc(queue_cap);
+            queues.push(p);
+            consumers.push(c);
+        }
+        let ing = SnIngress {
+            logic: Arc::new(FanLogic { fan }),
+            mapper: Mapper::hash_mod(pi),
+            queues,
+            keys_buf: Vec::new(),
+            targets: vec![false; pi],
+            staging: Vec::new(),
+            forwarded: Arc::new(AtomicU64::new(0)),
+            running: Arc::new(AtomicBool::new(true)),
+        };
+        (ing, consumers)
+    }
+
+    /// How many of the `pi` instances the keys `0..fan` actually hit
+    /// under the ingress's own mapper (deterministic for fixed inputs).
+    fn hit_count(ing: &SnIngress<FanLogic>, pi: usize, fan: u64) -> u64 {
+        let mut hits = vec![false; pi];
+        for k in 0..fan {
+            hits[ing.mapper.map(k)] = true;
+        }
+        hits.iter().filter(|&&h| h).count() as u64
+    }
+
+    fn drain_all(consumers: &mut [Consumer<Tuple<Counted>>]) -> u64 {
+        let mut scratch = Vec::new();
+        let mut total = 0u64;
+        for c in consumers.iter_mut() {
+            while c.pop_chunk(&mut scratch, usize::MAX) > 0 {
+                total += scratch.drain(..).count() as u64;
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn forward_clones_exactly_hits_minus_one() {
+        let (pi, fan) = (4, 64u64);
+        let (mut ing, mut consumers) = test_ingress(pi, fan, 1 << 10);
+        let hits = hit_count(&ing, pi, fan);
+        assert!(hits >= 2, "need a multi-target tuple for the test to bite");
+        let ctr = Arc::new(AtomicU64::new(0));
+        ing.forward(Tuple::data(1, Counted(ctr.clone())));
+        assert_eq!(
+            ctr.load(Ordering::Relaxed),
+            hits - 1,
+            "n-target fan-out must clone exactly n − 1 times (last target takes the move)"
+        );
+        assert_eq!(drain_all(&mut consumers), hits, "every responsible instance got the tuple");
+        assert_eq!(ing.forwarded.load(Ordering::Relaxed), hits);
+    }
+
+    #[test]
+    fn forward_single_target_is_zero_copy() {
+        // one key → one responsible instance → the original moves, no clone
+        let (mut ing, mut consumers) = test_ingress(4, 1, 1 << 10);
+        let ctr = Arc::new(AtomicU64::new(0));
+        ing.forward(Tuple::data(1, Counted(ctr.clone())));
+        assert_eq!(ctr.load(Ordering::Relaxed), 0, "single-target routing must not clone");
+        assert_eq!(drain_all(&mut consumers), 1);
+    }
+
+    #[test]
+    fn forward_broadcast_clones_exactly_pi_minus_one() {
+        let pi = 3;
+        let (mut ing, mut consumers) = test_ingress(pi, 1, 1 << 10);
+        let ctr = Arc::new(AtomicU64::new(0));
+        let mut hb: Tuple<Counted> = Tuple::heartbeat(7);
+        hb.payload = Counted(ctr.clone());
+        ing.forward(hb);
+        assert_eq!(ctr.load(Ordering::Relaxed), (pi as u64) - 1, "broadcast clones Π − 1 times");
+        assert_eq!(drain_all(&mut consumers), pi as u64);
+    }
+
+    #[test]
+    fn forward_batch_clones_exactly_hits_minus_one_per_tuple() {
+        let (pi, fan) = (4, 64u64);
+        let (mut ing, mut consumers) = test_ingress(pi, fan, 1 << 10);
+        let hits = hit_count(&ing, pi, fan);
+        assert!(hits >= 2);
+        let ctr = Arc::new(AtomicU64::new(0));
+        let n = 10u64;
+        let mut run: Vec<Tuple<Counted>> =
+            (1..=n).map(|ts| Tuple::data(ts as i64, Counted(ctr.clone()))).collect();
+        ing.forward_batch(&mut run);
+        assert!(run.is_empty(), "forward_batch drains the run");
+        assert_eq!(
+            ctr.load(Ordering::Relaxed),
+            n * (hits - 1),
+            "batched fan-out must clone exactly n − 1 per tuple"
+        );
+        assert_eq!(drain_all(&mut consumers), n * hits);
+        assert_eq!(ing.forwarded.load(Ordering::Relaxed), n * hits);
+    }
+
+    #[test]
+    fn staging_rows_decay_after_a_burst() {
+        // queues sized to absorb the whole burst in one flush, so the
+        // single-threaded test never blocks on backpressure
+        let n = 2 * pool::DEFAULT_SHRINK_CAP;
+        let (mut ing, mut consumers) = test_ingress(2, 64, 4 * pool::DEFAULT_SHRINK_CAP);
+        let ctr = Arc::new(AtomicU64::new(0));
+        let mut run: Vec<Tuple<Counted>> =
+            (1..=n).map(|ts| Tuple::data(ts as i64, Counted(ctr.clone()))).collect();
+        // one hot run inflates the staging rows well past the cap...
+        ing.forward_batch(&mut run);
+        // ...and the post-flush decay must hand that capacity back
+        for row in &ing.staging {
+            assert!(
+                row.capacity() <= pool::DEFAULT_SHRINK_CAP,
+                "staging row pins {} capacity past the shrink cap",
+                row.capacity()
+            );
+        }
+        drain_all(&mut consumers);
     }
 }

@@ -54,6 +54,18 @@
 //!   is the only channel, workers re-check it on every loop.
 //! * **batch knob** — Relaxed both sides: a tuning value acted on by
 //!   itself, synchronizing nothing.
+//!
+//! ## Run-buffer lifecycle (§Perf memory discipline)
+//! Each worker owns exactly two run buffers for its whole life — the
+//! input batch scratch (filled by `get_batch`, drained by `pop`) and
+//! the staged-emission buffer `out_buf` (filled by the operator,
+//! drained in place by `try_add_batch`) — both drawn from the owning
+//! gate's [`crate::util::BufferPool`] at spawn and handed back at
+//! thread exit (shutdown, or a healed zombie's decommission), so
+//! reconfiguration recycles buffers instead of allocating. In between,
+//! the buffers circulate privately: steady state performs zero
+//! allocator calls per tuple (`bench_micro` asserts this). Burst
+//! capacity decays at batch boundaries via [`pool::shrink_excess`].
 
 use crate::engine::barrier::EpochBarrier;
 use crate::engine::epoch::{EpochConfig, EpochState, PendingReconfig};
@@ -64,6 +76,7 @@ use crate::operator::{Ctx, OperatorCore, OperatorDef, OperatorLogic};
 use crate::scalegate::{Esg, EsgConfig, ReaderHandle, SourceHandle};
 use crate::time::EventTime;
 use crate::tuple::{InstanceId, Kind, Mapper, Tuple};
+use crate::util::pool;
 use crate::util::{Backoff, CachePadded};
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -495,11 +508,12 @@ where
         for (id, (reader, out)) in io.in_readers.into_iter().zip(io.out_sources).enumerate() {
             debug_assert_eq!(reader.id(), io.reader_base + id, "reader slot range mismatch");
             debug_assert_eq!(out.id(), io.source_base + id, "source slot range mismatch");
+            let out_buf = out.pool().get(batch);
             let mut worker = Worker {
                 core: OperatorCore::new(def.clone(), id, state.clone(), metrics.clone()),
                 reader,
                 out,
-                out_buf: Vec::with_capacity(batch),
+                out_buf,
                 batch,
                 batch_knob: batch_knob.clone(),
                 epoch: epoch.clone(),
@@ -629,6 +643,8 @@ struct Worker<L: OperatorLogic> {
     out: SourceHandle<Tuple<L::Out>>,
     /// Emissions staged for one batched gate add (§Perf): flushed when
     /// full, before every clock publish, and before reconfigurations.
+    /// Drawn from the out-gate's buffer pool at spawn, returned at
+    /// thread exit (module docs: run-buffer lifecycle).
     out_buf: Vec<Tuple<L::Out>>,
     /// Tuples per gate synchronization, in and out — a cached copy of
     /// `batch_knob`, refreshed once per input batch.
@@ -688,14 +704,21 @@ where
         // `self.batch` tuples) and processed newest-last via pop() off
         // the reversed buffer, so `batch.len()` is always the number of
         // retrieved-but-unprocessed tuples — do_reconfig needs it to seed
-        // new readers at the tuple currently being processed.
-        let mut batch: Vec<Tuple<L::In>> = Vec::with_capacity(self.batch);
+        // new readers at the tuple currently being processed. The scratch
+        // comes from the in-gate's pool (module docs: run-buffer
+        // lifecycle) and goes back at thread exit below.
+        let mut batch: Vec<Tuple<L::In>> = self.reader.pool().get(self.batch);
         // ORDERING: Acquire pairs with shutdown's Release store.
         while self.running.load(Ordering::Acquire) {
             // adaptive batch sizing: pick up the harness's latest tuning.
             // ORDERING: Relaxed — one uncontended load of a standalone
             // tuning value per gate synchronization.
             self.batch = self.batch_knob.load(Ordering::Relaxed).max(1);
+            // burst decay at the batch boundary: a downward retune
+            // strands input-scratch capacity, an emission burst strands
+            // out_buf capacity; both no-ops in steady state
+            pool::shrink_excess(&mut batch, 4 * self.batch);
+            pool::shrink_excess(&mut self.out_buf, pool::DEFAULT_SHRINK_CAP);
             if !self.dead {
                 self.apply_fault();
             }
@@ -730,6 +753,13 @@ where
                 self.enter_dead(&mut batch);
             }
         }
+        // hand the run buffers back to the gate pools: whichever worker
+        // a later reconfiguration spawns draws them instead of
+        // allocating; `put` clears them, so a decommissioned zombie's
+        // residue can never alias into a successor's batch
+        self.reader.pool().put(std::mem::take(&mut batch));
+        let out_buf = std::mem::take(&mut self.out_buf);
+        self.out.pool().put(out_buf);
     }
 
     /// One live input batch: the old `run` inner loop, hoisted so the
@@ -1099,6 +1129,8 @@ where
 /// latency (now − ingest stamp) like the paper's sink (§8).
 pub struct EgressDriver<P: crate::scalegate::GateEntry> {
     reader: crate::scalegate::ReaderHandle<P>,
+    /// Drain scratch, drawn from the gate's buffer pool and returned on
+    /// drop (§Perf memory discipline).
     batch: Vec<P>,
     pub clock: EngineClock,
     pub count: u64,
@@ -1110,9 +1142,10 @@ pub struct EgressDriver<P: crate::scalegate::GateEntry> {
 
 impl<Out: Clone + Send + Sync + 'static> EgressDriver<Tuple<Out>> {
     pub fn new(reader: crate::scalegate::ReaderHandle<Tuple<Out>>, clock: EngineClock) -> Self {
+        let batch = reader.pool().get(WORKER_BATCH);
         EgressDriver {
             reader,
-            batch: Vec::with_capacity(WORKER_BATCH),
+            batch,
             clock,
             count: 0,
             latency_us: Arc::new(Histogram::new()),
@@ -1161,6 +1194,13 @@ impl<Out: Clone + Send + Sync + 'static> EgressDriver<Tuple<Out>> {
             }
         }
         self.count
+    }
+}
+
+impl<P: crate::scalegate::GateEntry> Drop for EgressDriver<P> {
+    fn drop(&mut self) {
+        // recycle the drain scratch for the gate's next consumer
+        self.reader.pool().put(std::mem::take(&mut self.batch));
     }
 }
 

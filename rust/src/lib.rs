@@ -175,6 +175,10 @@
 //!   `CachePadded` (no false sharing between adjacent slots).
 //! * **L5** — files declaring `//! lint: lock-free` (the SPSC ring, the
 //!   epoch barrier) may not reference `Mutex`/`RwLock`/`Condvar`.
+//! * **L6** — functions whose doc comment carries `lint: no-alloc` (the
+//!   gate/worker hot paths) may not call `Vec::new`, `with_capacity`,
+//!   `collect`, `to_vec`, or `Box::new`; a deliberate allocation inside
+//!   one carries a `lint: allow(alloc) — <reason>` waiver.
 //!
 //! To justify a new site, write the pairing, not the mechanism: say
 //! *which* Acquire observes *which* Release and what state that edge
@@ -184,11 +188,56 @@
 //! # Miri (nightly): the SPSC ring + ScaleGate log/gate unit tests
 //! rustup +nightly component add miri
 //! MIRIFLAGS="-Zmiri-many-seeds" cargo +nightly miri test \
-//!     util::spsc scalegate::log scalegate::esg
+//!     util::spsc util::pool scalegate::log scalegate::esg
 //! # ThreadSanitizer (nightly): the threaded exactly-once stress tests
 //! RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -Zbuild-std \
 //!     --target x86_64-unknown-linux-gnu --lib scalegate engine::barrier
 //! ```
+//!
+//! ## Perf: memory discipline
+//! The steady state is **allocation-free**: once capacities settle, a
+//! tuple travels ingress → gate → worker → gate → egress without the
+//! allocator being called. Two mechanisms make that true and keep it
+//! true:
+//!
+//! **Run-buffer lifecycle.** Every gate owns a [`util::pool::BufferPool`]
+//! reachable from all of its endpoints (`Esg::pool`, `SourceHandle::pool`,
+//! `ReaderHandle::pool`). Run buffers circulate through it only at cold
+//! transitions — steady state never touches the pool:
+//!
+//! ```text
+//!        worker spawn                      worker exit
+//!   in-pool ──get──▶ batch scratch ──────────put──▶ in-pool
+//!  out-pool ──get──▶ out_buf       ──────────put──▶ out-pool
+//!                        │ (shutdown, or a healed zombie's
+//!                        ▼  decommission — PR 7 crash replay)
+//!          steady state: the same two Vecs forever;
+//!          `put` clears, so recycled buffers never alias
+//!          a successor's tuples; burst capacity decays at
+//!          batch boundaries (`pool::shrink_excess`)
+//! ```
+//!
+//! The [`Log`](scalegate::log) recycles its segments the same way (a
+//! small free list, reset eagerly at truncation), and merge/egress
+//! scratch is pool-drawn or capacity-bounded.
+//!
+//! **Last-target move.** Fan-out never clones for every edge: the SN
+//! forwarder ([`engine::SnIngress::forward`]) and the DAG's
+//! per-downstream replication hand the *original* tuple to the last
+//! target and clone only for the first N−1 — so the dominant
+//! single-target case is zero-copy, and N-way fan-out costs exactly
+//! N−1 clones (proved by `engine::sn::tests`).
+//!
+//! The contract is *measured*, not asserted from inspection:
+//! `bench_micro` installs a counting `#[global_allocator]`
+//! ([`metrics::CountingAlloc`]) and records `allocs_per_tuple_*` /
+//! `bytes_per_tuple_*` into `BENCH_micro.json`; the batched-gate
+//! steady state must stay < 0.01 allocs/tuple. Because allocation
+//! counts are deterministic where timings are noisy, CI gates these
+//! fields at a tight 1.2× tolerance (`stretch bench-diff --tolerance
+//! 1.2 --gate-kinds alloc`) next to the loose 50× timing pass. Lint
+//! rule **L6** (above) keeps the marked hot paths honest in review,
+//! before the bench ever runs.
 //!
 //! **Fault-model boundary (shard-lock poisoning).** Worker panics are
 //! contained at the batch loop and healed by reconfiguration

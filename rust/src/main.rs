@@ -267,8 +267,28 @@ fn cmd_run_job(cfg: &Config, budget_ms: Option<u64>) {
 /// `bench-diff`: compare two `BENCH_*.json` snapshots under a tolerance
 /// factor and exit nonzero on regression — the CI perf gate
 /// (`stretch bench-diff BENCH_micro.baseline.json BENCH_micro.json`).
-fn cmd_bench_diff(baseline: &str, new: &str, tolerance: f64) {
-    match stretch::metrics::diff_files(baseline, new, tolerance) {
+///
+/// `--gate-kinds` restricts which field kinds can fail the run, so CI
+/// can apply different tolerances per kind: a loose 50× pass for noisy
+/// timing fields and a tight 1.2× pass for the deterministic
+/// allocs-per-tuple fields (`--tolerance 1.2 --gate-kinds alloc`).
+fn cmd_bench_diff(baseline: &str, new: &str, tolerance: f64, gate_kinds: Option<&str>) {
+    let kinds: Option<Vec<stretch::metrics::FieldKind>> = gate_kinds.map(|s| {
+        s.split(',')
+            .map(str::trim)
+            .filter(|k| !k.is_empty())
+            .map(|k| {
+                stretch::metrics::FieldKind::from_name(k).unwrap_or_else(|| {
+                    eprintln!(
+                        "bench-diff error: unknown --gate-kinds entry `{k}` \
+                         (known: throughput, latency, alloc, info)"
+                    );
+                    std::process::exit(2);
+                })
+            })
+            .collect()
+    });
+    match stretch::metrics::diff_files_gated(baseline, new, tolerance, kinds.as_deref()) {
         Ok(d) => {
             println!("bench-diff {baseline} -> {new} (tolerance {tolerance}x)");
             println!("{d}");
@@ -284,7 +304,7 @@ fn cmd_bench_diff(baseline: &str, new: &str, tolerance: f64) {
 }
 
 /// `lint`: run the in-tree concurrency-correctness analyzer
-/// (`stretch::analysis`, rules L1–L5) over source paths. Exit status:
+/// (`stretch::analysis`, rules L1–L6) over source paths. Exit status:
 /// 0 clean, 1 findings, 2 I/O error — the blocking CI gate.
 fn cmd_lint(paths: &[String], format: &str) {
     let paths: Vec<std::path::PathBuf> = if paths.is_empty() {
@@ -390,6 +410,7 @@ fn main() {
     .opt("config", "config file for `run` (same as the positional path)", None)
     .opt("budget-ms", "cap the wall-clock run time of a job (CI smoke)", None)
     .opt("tolerance", "bench-diff tolerance factor before a field gates", Some("1.25"))
+    .opt("gate-kinds", "bench-diff: only these field kinds gate (comma list)", None)
     .opt("format", "lint output format: text|json", Some("text"));
     let args = cli.parse().unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -404,12 +425,12 @@ fn main() {
                 _ => {
                     eprintln!(
                         "usage: stretch bench-diff <baseline.json> <new.json> \
-                         [--tolerance <factor>]"
+                         [--tolerance <factor>] [--gate-kinds <k1,k2,…>]"
                     );
                     std::process::exit(2);
                 }
             };
-            cmd_bench_diff(&b, &n, args.f64_or("tolerance", 1.25).or_exit());
+            cmd_bench_diff(&b, &n, args.f64_or("tolerance", 1.25).or_exit(), args.get("gate-kinds"));
         }
         Some("lint") => {
             cmd_lint(&args.positional()[1..], args.str_or("format", "text"));
@@ -435,11 +456,12 @@ fn main() {
             println!("                     see examples/configs/) or a classic elastic");
             println!("                     join experiment (configs/*.toml)");
             println!("  bench-diff <a> <b> compare two BENCH_*.json snapshots; exits 1");
-            println!("                     when a throughput/latency field regresses");
-            println!("  lint [paths…]      concurrency-correctness analyzer (rules L1-L5");
+            println!("                     when a throughput/latency/alloc field regresses");
+            println!("  lint [paths…]      concurrency-correctness analyzer (rules L1-L6");
             println!("                     over rust/src by default); exits 1 on findings");
             println!("\noptions for run: --config <path>, --budget-ms <ms> (CI smoke)");
-            println!("options for bench-diff: --tolerance <factor> (default 1.25)");
+            println!("options for bench-diff: --tolerance <factor> (default 1.25),");
+            println!("                        --gate-kinds <throughput,latency,alloc,info>");
             println!("options for lint: --format <text|json> (default text)");
         }
     }

@@ -1,0 +1,149 @@
+//! A counting `#[global_allocator]` wrapper for allocation-discipline
+//! measurement (std-only; bench/example wiring only).
+//!
+//! [`CountingAlloc`] forwards every call to [`System`] and bumps two
+//! process-global Relaxed counters. Rust permits exactly one
+//! `#[global_allocator]` per binary, so the *type* lives here in the
+//! library while the static is declared only by the binaries that
+//! measure (`benches/bench_micro.rs`, `examples/quickstart.rs`):
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: stretch::metrics::CountingAlloc =
+//!     stretch::metrics::CountingAlloc;
+//! ```
+//!
+//! [`alloc_snapshot`] reads the counters; the delta of two snapshots
+//! bounds the allocator traffic of the code between them. Allocation
+//! counts — unlike tuples/s — are deterministic on a noisy shared
+//! runner, which is what lets `bench_micro` assert the steady-state
+//! `allocs_per_tuple ≈ 0` contract tightly (§Perf memory discipline)
+//! and lets `stretch bench-diff` gate the recorded fields at a 1.2×
+//! tolerance where timing fields need 50×. In a binary that does not
+//! install the wrapper the counters simply stay at zero.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Forwarding allocator that counts allocation calls and requested
+/// bytes. Zero-sized; all state is in module-level counters.
+pub struct CountingAlloc;
+
+/// Counter snapshot: allocation calls and bytes requested so far
+/// (process-wide, all threads).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct AllocSnapshot {
+    /// `alloc` + `alloc_zeroed` + `realloc` calls observed.
+    pub allocs: u64,
+    /// Bytes requested by those calls (requested, not resident).
+    pub bytes: u64,
+}
+
+impl AllocSnapshot {
+    /// Counters accumulated since an earlier snapshot (saturating, so a
+    /// snapshot pair from mismatched sources cannot underflow).
+    pub fn delta(self, since: AllocSnapshot) -> AllocSnapshot {
+        AllocSnapshot {
+            allocs: self.allocs.saturating_sub(since.allocs),
+            bytes: self.bytes.saturating_sub(since.bytes),
+        }
+    }
+}
+
+/// Read the counters.
+///
+/// ORDERING: Relaxed — pure statistics; a snapshot implies no
+/// synchronization with the allocation sites it counts. The measurement
+/// protocol is snapshot-delta around a region the caller has already
+/// quiesced (or accepts cross-thread noise for).
+pub fn alloc_snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: ALLOCS.load(Ordering::Relaxed),
+        bytes: BYTES.load(Ordering::Relaxed),
+    }
+}
+
+// SAFETY: a pure forwarding wrapper — every method delegates to
+// `System` under the caller's own `GlobalAlloc` contract and keeps no
+// allocator state of its own (the counters never feed back into any
+// allocation decision), so `System`'s correctness carries over intact.
+unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller upholds the `GlobalAlloc` contract for `alloc`;
+    // the wrapper forwards it to `System` unchanged.
+    // ORDERING: Relaxed counter bumps — statistics only (see
+    // `alloc_snapshot`), synchronizing nothing.
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        // SAFETY: forwarding the caller's contract unchanged to System.
+        unsafe { System.alloc(layout) }
+    }
+
+    // SAFETY: caller upholds the `GlobalAlloc` contract for `dealloc`
+    // (ptr/layout come from this allocator); forwarded unchanged.
+    // Frees are not counted: the discipline metric is allocator
+    // *acquisition* traffic.
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // SAFETY: forwarding the caller's contract unchanged to System.
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    // SAFETY: caller upholds the `GlobalAlloc` contract for
+    // `alloc_zeroed`; forwarded unchanged.
+    // ORDERING: Relaxed counter bumps — statistics only.
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        // SAFETY: forwarding the caller's contract unchanged to System.
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    // SAFETY: caller upholds the `GlobalAlloc` contract for `realloc`
+    // (ptr/layout/new_size valid per its docs); forwarded unchanged.
+    // Counted as one allocation of `new_size` bytes — a realloc may
+    // move, which is exactly the traffic the discipline metric tracks.
+    // ORDERING: Relaxed counter bumps — statistics only.
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        // SAFETY: forwarding the caller's contract unchanged to System.
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_is_saturating_and_directional() {
+        let a = AllocSnapshot { allocs: 10, bytes: 100 };
+        let b = AllocSnapshot { allocs: 14, bytes: 164 };
+        assert_eq!(b.delta(a), AllocSnapshot { allocs: 4, bytes: 64 });
+        assert_eq!(a.delta(b), AllocSnapshot { allocs: 0, bytes: 0 });
+    }
+
+    #[test]
+    fn wrapper_counts_and_forwards() {
+        // the wrapper is NOT installed as the test binary's global
+        // allocator; drive it directly
+        let a = CountingAlloc;
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        let before = alloc_snapshot();
+        let p = unsafe { a.alloc(layout) };
+        assert!(!p.is_null());
+        unsafe { a.dealloc(p, layout) };
+        let z = unsafe { a.alloc_zeroed(layout) };
+        assert!(!z.is_null());
+        // zeroed memory really is zeroed (the forward worked)
+        assert!((0..64).all(|i| unsafe { *z.add(i) } == 0));
+        unsafe { a.dealloc(z, layout) };
+        let d = alloc_snapshot().delta(before);
+        // ≥: the counters are process-global and tests run in parallel
+        assert!(d.allocs >= 2, "allocs delta {}", d.allocs);
+        assert!(d.bytes >= 128, "bytes delta {}", d.bytes);
+    }
+}

@@ -10,11 +10,22 @@
 //! field-by-field comparison.
 //!
 //! Classification is by key name, matching the repo's report idiom:
-//! keys ending in `_tps` / `_per_s` are throughputs (higher is better),
-//! keys containing `p50` / `p99` / `latency` are latencies (lower is
-//! better); everything else is informational and never gates. Fields
-//! missing from either side, non-numeric fields, and fields whose
-//! baseline is ≤ 0 (a skipped or degenerate measurement) are skipped.
+//! keys starting with `allocs_per_tuple` / `bytes_per_tuple` are
+//! allocation-discipline fields (lower is better, deterministic — see
+//! below), keys ending in `_tps` / `_per_s` are throughputs (higher is
+//! better), keys containing `p50` / `p99` / `latency` are latencies
+//! (lower is better); everything else is informational and never gates.
+//! Fields missing from either side, non-numeric fields, and fields
+//! whose baseline is ≤ 0 (a skipped or degenerate measurement) are
+//! skipped — EXCEPT alloc fields, where a zero baseline is the whole
+//! point of the contract and still gates.
+//!
+//! Because allocation counts are deterministic where tuples/s on a
+//! shared 1-core CI runner are not, alloc fields support a much tighter
+//! tolerance than timing fields (CI: 1.2× vs 50×). The `gate_kinds`
+//! filter exists for exactly that split: one invocation gates timing
+//! kinds at the wide factor, a second gates only `alloc` at the tight
+//! one (`stretch bench-diff … --tolerance 1.2 --gate-kinds alloc`).
 
 use super::bench_json::Json;
 use std::fmt;
@@ -233,13 +244,45 @@ pub enum FieldKind {
     /// Lower is better (`*p50*`, `*p99*`, `*latency*`): regressed when
     /// `new > baseline * tolerance`.
     Latency,
+    /// Allocation discipline (`allocs_per_tuple*`, `bytes_per_tuple*`):
+    /// lower is better, deterministic, gated with an absolute noise
+    /// floor ([`ALLOC_GATE_FLOOR`]) so a ≈0 baseline still gates —
+    /// regressed when `new > baseline * tolerance + floor`.
+    Alloc,
     /// Neither — reported for context, never gates.
     Info,
 }
 
-/// Classify a report key by the repo's naming idiom.
+impl FieldKind {
+    /// Parse a CLI kind name (`--gate-kinds throughput,latency,alloc`).
+    pub fn from_name(name: &str) -> Option<FieldKind> {
+        match name {
+            "throughput" => Some(FieldKind::Throughput),
+            "latency" => Some(FieldKind::Latency),
+            "alloc" => Some(FieldKind::Alloc),
+            "info" => Some(FieldKind::Info),
+            _ => None,
+        }
+    }
+}
+
+/// Absolute slack added to every alloc-field gate: steady-state counts
+/// hover near zero, so a pure ratio would gate on (0.0001 → 0.0002)
+/// noise. 0.01 allocs (or bytes) per tuple matches the bench's own
+/// `allocs_per_tuple < 0.01` assertion bar — anything under it is
+/// allocation-free for the contract's purposes.
+pub const ALLOC_GATE_FLOOR: f64 = 0.01;
+
+/// Classify a report key by the repo's naming idiom. The canonical
+/// gated alloc fields START with the metric name
+/// (`allocs_per_tuple_batched_gate`); prefixed variants like
+/// `diamond_allocs_per_tuple` stay informational — the diamond path is
+/// threaded, so its counts carry scheduler-dependent stragglers the
+/// deterministic single-thread gate must not inherit.
 pub fn classify(key: &str) -> FieldKind {
-    if key.ends_with("_tps") || key.ends_with("_per_s") {
+    if key.starts_with("allocs_per_tuple") || key.starts_with("bytes_per_tuple") {
+        FieldKind::Alloc
+    } else if key.ends_with("_tps") || key.ends_with("_per_s") {
         FieldKind::Throughput
     } else if key.contains("p50") || key.contains("p99") || key.contains("latency") {
         FieldKind::Latency
@@ -310,21 +353,42 @@ fn numeric_fields(doc: &Json) -> Vec<(String, f64)> {
 
 /// Compare two parsed reports under a tolerance *factor* (1.25 = allow
 /// 25% drift before gating; CI on shared runners uses a much wider
-/// factor). Fields whose baseline is ≤ 0 never gate — a zero baseline
-/// marks a skipped/degenerate measurement, not a perf contract.
+/// factor for timing kinds). Fields whose baseline is ≤ 0 never gate —
+/// a zero baseline marks a skipped/degenerate measurement, not a perf
+/// contract — except [`FieldKind::Alloc`], where ≈0 baselines are the
+/// contract and the absolute [`ALLOC_GATE_FLOOR`] absorbs the noise.
 pub fn compare(baseline: &Json, new: &Json, tolerance: f64) -> DiffReport {
+    compare_gated(baseline, new, tolerance, None)
+}
+
+/// [`compare`] restricted to gating only the listed kinds: fields of
+/// other kinds are still compared and reported, but never count as
+/// regressions. `None` gates every kind. This is how CI applies a tight
+/// tolerance to deterministic alloc fields without flaking on noisy
+/// timing fields (module docs).
+pub fn compare_gated(
+    baseline: &Json,
+    new: &Json,
+    tolerance: f64,
+    gate_kinds: Option<&[FieldKind]>,
+) -> DiffReport {
     let tol = tolerance.max(1.0);
     let new_fields = numeric_fields(new);
     let mut out = DiffReport::default();
     for (key, base) in numeric_fields(baseline) {
         let Some(&(_, cur)) = new_fields.iter().find(|(k, _)| *k == key) else { continue };
         let kind = classify(&key);
-        let regressed = base > 0.0
-            && match kind {
-                FieldKind::Throughput => cur < base / tol,
-                FieldKind::Latency => cur > base * tol,
-                FieldKind::Info => false,
-            };
+        let moved = match kind {
+            FieldKind::Throughput => base > 0.0 && cur < base / tol,
+            FieldKind::Latency => base > 0.0 && cur > base * tol,
+            FieldKind::Alloc => base >= 0.0 && cur > base * tol + ALLOC_GATE_FLOOR,
+            FieldKind::Info => false,
+        };
+        let gate_ok = match gate_kinds {
+            None => true,
+            Some(ks) => ks.contains(&kind),
+        };
+        let regressed = moved && gate_ok;
         if regressed {
             out.regressions += 1;
         }
@@ -354,12 +418,23 @@ impl std::error::Error for DiffError {}
 
 /// Load, parse and compare two report files.
 pub fn diff_files(baseline: &str, new: &str, tolerance: f64) -> Result<DiffReport, DiffError> {
+    diff_files_gated(baseline, new, tolerance, None)
+}
+
+/// [`diff_files`] with a [`compare_gated`] kind filter — the engine
+/// behind `stretch bench-diff --gate-kinds …`.
+pub fn diff_files_gated(
+    baseline: &str,
+    new: &str,
+    tolerance: f64,
+    gate_kinds: Option<&[FieldKind]>,
+) -> Result<DiffReport, DiffError> {
     let load = |path: &str| -> Result<Json, DiffError> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| DiffError::Io(path.to_string(), e))?;
         parse_json(&text).map_err(|e| DiffError::Parse(path.to_string(), e))
     };
-    Ok(compare(&load(baseline)?, &load(new)?, tolerance))
+    Ok(compare_gated(&load(baseline)?, &load(new)?, tolerance, gate_kinds))
 }
 
 #[cfg(test)]
@@ -438,6 +513,67 @@ mod tests {
         // only a_tps is shared and numeric; zero baseline never gates
         assert_eq!(d.fields.len(), 1);
         assert_eq!(d.regressions, 0);
+    }
+
+    #[test]
+    fn alloc_fields_classify_by_prefix_only() {
+        assert_eq!(classify("allocs_per_tuple_batched_gate"), FieldKind::Alloc);
+        assert_eq!(classify("bytes_per_tuple_batched_gate"), FieldKind::Alloc);
+        // prefixed variants (threaded paths, scheduler noise) stay Info
+        assert_eq!(classify("diamond_allocs_per_tuple"), FieldKind::Info);
+        assert_eq!(classify("diamond_bytes_per_tuple"), FieldKind::Info);
+    }
+
+    #[test]
+    fn alloc_fields_gate_with_floor_even_on_zero_baseline() {
+        let base = parse_json(r#"{"allocs_per_tuple_batched_gate": 0.0}"#).unwrap();
+        // under the absolute floor: allocation-free for the contract
+        let under = parse_json(r#"{"allocs_per_tuple_batched_gate": 0.005}"#).unwrap();
+        assert!(!compare(&base, &under, 1.2).is_regression());
+        // over the floor: the zero baseline STILL gates (unlike tps)
+        let over = parse_json(r#"{"allocs_per_tuple_batched_gate": 0.02}"#).unwrap();
+        let d = compare(&base, &over, 1.2);
+        assert!(d.is_regression(), "{d}");
+        // a real nonzero baseline gates on factor + floor together
+        let base2 = parse_json(r#"{"allocs_per_tuple_batched_gate": 0.002}"#).unwrap();
+        let leak = parse_json(r#"{"allocs_per_tuple_batched_gate": 0.5}"#).unwrap();
+        assert!(compare(&base2, &leak, 1.2).is_regression());
+        // improvements never gate
+        let zero = parse_json(r#"{"allocs_per_tuple_batched_gate": 0.0}"#).unwrap();
+        assert!(!compare(&base2, &zero, 1.2).is_regression());
+    }
+
+    #[test]
+    fn gate_kinds_filter_restricts_what_counts_as_regression() {
+        let base =
+            parse_json(r#"{"a_tps": 1000, "allocs_per_tuple_batched_gate": 0.0}"#).unwrap();
+        // tps halved (regression at 1.2×) AND allocs leaked past the floor
+        let worse =
+            parse_json(r#"{"a_tps": 500, "allocs_per_tuple_batched_gate": 0.5}"#).unwrap();
+        // alloc-only invocation ignores the noisy tps drop…
+        let d = compare_gated(&base, &worse, 1.2, Some(&[FieldKind::Alloc]));
+        assert_eq!(d.regressions, 1, "{d}");
+        let alloc = d
+            .fields
+            .iter()
+            .find(|f| f.key == "allocs_per_tuple_batched_gate")
+            .unwrap();
+        assert!(alloc.regressed);
+        assert!(d.fields.iter().any(|f| f.key == "a_tps" && !f.regressed));
+        // …while the unfiltered invocation gates both
+        assert_eq!(compare_gated(&base, &worse, 1.2, None).regressions, 2);
+        // and a filter naming no moved kind gates nothing
+        assert!(!compare_gated(&base, &worse, 1.2, Some(&[FieldKind::Latency]))
+            .is_regression());
+    }
+
+    #[test]
+    fn field_kind_from_name_parses_cli_names() {
+        assert_eq!(FieldKind::from_name("throughput"), Some(FieldKind::Throughput));
+        assert_eq!(FieldKind::from_name("latency"), Some(FieldKind::Latency));
+        assert_eq!(FieldKind::from_name("alloc"), Some(FieldKind::Alloc));
+        assert_eq!(FieldKind::from_name("info"), Some(FieldKind::Info));
+        assert_eq!(FieldKind::from_name("allocs"), None);
     }
 
     #[test]

@@ -6,12 +6,14 @@
 //! §8), and reconfiguration time. Plus per-thread load for the coefficient
 //! of variation reported in Fig. 9.
 
+pub mod alloc_count;
 pub mod bench_diff;
 pub mod bench_json;
 pub mod histogram;
 pub mod reporter;
 
-pub use bench_diff::{diff_files, parse_json, DiffReport, FieldDiff, FieldKind};
+pub use alloc_count::{alloc_snapshot, AllocSnapshot, CountingAlloc};
+pub use bench_diff::{diff_files, diff_files_gated, parse_json, DiffReport, FieldDiff, FieldKind};
 pub use bench_json::{BenchReport, Json};
 pub use histogram::{HistSnapshot, Histogram};
 pub use reporter::CsvWriter;

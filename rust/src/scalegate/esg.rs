@@ -40,6 +40,17 @@
 //! records it in `BENCH_micro.json` (acceptance bar: ≥ 2× at batch
 //! 256).
 //!
+//! §Perf memory discipline: the gate is *allocation-free in steady
+//! state* (see `lib.rs` §Perf). Its own scratch (the merge's staged
+//! buffers and run under construction) is long-lived and reused under
+//! the merge lock, with burst decay back to a bounded capacity; the
+//! attached workers' run buffers circulate through a per-gate
+//! [`BufferPool`] reachable from every endpoint
+//! ([`SourceHandle::pool`]/[`ReaderHandle::pool`]), so a buffer freed
+//! by an evicted worker at reconfiguration is reused by the next one
+//! instead of going back to the allocator. The hot fns below carry
+//! `lint: no-alloc` markers enforced by `stretch lint` (L6).
+//!
 //! # Memory-ordering protocol
 //!
 //! The gate's lock-free edges (everything else runs under the `merge`
@@ -63,6 +74,7 @@
 
 use crate::scalegate::log::{Log, SegCache};
 use crate::time::{EventTime, TIME_MIN};
+use crate::util::pool::{self, BufferPool};
 use crate::util::spsc::{self, Consumer, Producer, PushError};
 use crate::util::{Backoff, CachePadded};
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
@@ -150,8 +162,14 @@ struct Staged<T> {
 impl<T: GateEntry> Staged<T> {
     /// Pull the next chunk off the queue (only when empty — partial
     /// chunks keep their order).
+    ///
+    /// lint: no-alloc — merge hot path: `pop_chunk` reserves into this
+    /// long-lived staging buffer, whose capacity persists across
+    /// refills (a no-op in steady state); the trim below caps it at
+    /// 2×[`MERGE_CHUNK`] so it can never creep past the working set.
     fn refill(&mut self, q: &mut Consumer<T>) {
         debug_assert!(self.buf.is_empty());
+        pool::shrink_excess(&mut self.buf, 2 * MERGE_CHUNK);
         q.pop_chunk(&mut self.buf, MERGE_CHUNK);
         self.buf.reverse();
     }
@@ -170,7 +188,11 @@ impl<T: GateEntry> Staged<T> {
 struct MergeState<T> {
     queues: Vec<Consumer<T>>,
     staged: Vec<Staged<T>>,
-    /// Scratch for the run under construction (reused allocation).
+    /// Scratch for the run under construction: allocated once at gate
+    /// construction with [`MERGE_RUN_MAX`] capacity and reused for the
+    /// gate's whole life (`push_run` drains it in place, and the merge
+    /// loop never grows it past that bound — pool-style recycling with
+    /// a pool of exactly one, held under the merge lock).
     run: Vec<T>,
     /// Entries merged since last GC check.
     since_gc: usize,
@@ -197,6 +219,12 @@ struct Inner<T: GateEntry> {
     /// activation/truncation race this prevents).
     membership: Mutex<()>,
     capacity: usize,
+    /// Run-buffer pool shared by everything attached to this gate
+    /// (§Perf memory discipline): workers draw their batch/out scratch
+    /// here and return it on eviction, so reconfiguration churns buffer
+    /// *ownership*, not the allocator. Cold-path only — in steady state
+    /// each buffer circulates privately inside its worker's loop.
+    pool: BufferPool<T>,
 }
 
 impl<T: GateEntry> Inner<T> {
@@ -270,6 +298,11 @@ impl<T: GateEntry> Inner<T> {
     /// publish. The resulting log sequence is identical to the per-tuple
     /// merge's (the property suite proves it), at a fraction of the
     /// atomic/lock traffic.
+    ///
+    /// lint: no-alloc — THE merge hot path: runs build in the reused
+    /// `run` scratch (bounded by [`MERGE_RUN_MAX`]), staging refills
+    /// reuse their chunk buffers, and `push_run` appends into recycled
+    /// log segments. Steady state touches the allocator zero times.
     fn do_merge(&self, st: &mut MergeState<T>) {
         let MergeState { queues, staged, run, since_gc } = st;
         loop {
@@ -439,6 +472,7 @@ impl<T: GateEntry> Esg<T> {
                 .collect(),
             membership: Mutex::new(()),
             capacity: cfg.capacity,
+            pool: BufferPool::new(),
         });
         let src = producers
             .into_iter()
@@ -610,6 +644,13 @@ impl<T: GateEntry> Esg<T> {
         let mut st = self.inner.merge.lock().unwrap();
         self.inner.do_merge(&mut st);
     }
+
+    /// The gate's shared run-buffer pool (§Perf memory discipline).
+    /// Every endpoint of one gate sees the same pool, so buffers
+    /// released by a decommissioned worker are reused by its successor.
+    pub fn pool(&self) -> &BufferPool<T> {
+        &self.inner.pool
+    }
 }
 
 impl<T: GateEntry> SourceHandle<T> {
@@ -669,6 +710,10 @@ impl<T: GateEntry> SourceHandle<T> {
     /// backpressure (gate at capacity or pending queue full). The run
     /// must be sorted within itself and against everything this source
     /// added before.
+    ///
+    /// lint: no-alloc — source hot path: the accepted prefix moves into
+    /// preallocated ring slots (`push_slice`) and the residual stays in
+    /// the caller's recycled run buffer.
     pub fn try_add_batch(&mut self, run: &mut Vec<T>) -> Result<usize, AddError<()>> {
         let slot = &self.inner.sources[self.id];
         // ORDERING: Acquire pairs with membership's Release flips (see
@@ -786,6 +831,13 @@ impl<T: GateEntry> SourceHandle<T> {
         Esg { inner: self.inner.clone() }
     }
 
+    /// The gate's shared run-buffer pool — draw the out-run scratch that
+    /// feeds [`SourceHandle::add_batch`] here and return it when the
+    /// worker exits (see [`Esg::pool`]).
+    pub fn pool(&self) -> &BufferPool<T> {
+        &self.inner.pool
+    }
+
     /// Advance this source's clock without enqueuing anything — the
     /// low-level primitive behind heartbeats at gate level.
     pub fn advance_clock(&mut self, ts: EventTime) {
@@ -853,9 +905,20 @@ impl<T: GateEntry> ReaderHandle<T> {
     /// ORDERING: same protocol as [`ReaderHandle::get`] — `active`
     /// Acquire, seeded-`cursor` Acquire, and ONE `floor`-then-`cursor`
     /// Release publish per batch instead of per tuple.
+    ///
+    /// lint: no-alloc — reader hot path: `reserve` on the caller's
+    /// recycled scratch is a no-op in steady state (capacity persists
+    /// across refills); the empty-buffer trim below decays capacity a
+    /// backlog burst grew, so one burst never pins its high-water
+    /// footprint for the rest of the run.
     pub fn get_batch(&mut self, buf: &mut Vec<T>, max: usize) -> usize {
         if max == 0 {
             return 0;
+        }
+        if buf.is_empty() {
+            // burst decay: only between batches, never under the
+            // caller's feet while it still holds unconsumed tuples
+            pool::shrink_excess(buf, pool::DEFAULT_SHRINK_CAP);
         }
         let slot = &self.inner.readers[self.id];
         if !slot.active.load(Ordering::Acquire) {
@@ -925,6 +988,13 @@ impl<T: GateEntry> ReaderHandle<T> {
     /// reader's own thread, Alg. 4 L19-20).
     pub fn gate(&self) -> Esg<T> {
         Esg { inner: self.inner.clone() }
+    }
+
+    /// The gate's shared run-buffer pool — draw the batch scratch that
+    /// [`ReaderHandle::get_batch`] fills here and return it when the
+    /// worker exits (see [`Esg::pool`]).
+    pub fn pool(&self) -> &BufferPool<T> {
+        &self.inner.pool
     }
 }
 
@@ -1362,6 +1432,56 @@ mod tests {
             buf.clear();
         }
         assert_eq!(rdr[0].cursor(), got + 1);
+    }
+
+    #[test]
+    fn get_batch_scratch_decays_after_a_burst() {
+        // a backlog burst inflates the reader's scratch to the burst
+        // size; the next between-batches refill must trim it back to
+        // the pool shrink cap instead of pinning the high-water mark
+        let n = 3 * pool::DEFAULT_SHRINK_CAP;
+        let (_g, mut src, mut rdr): (Esg<T>, _, _) = Esg::new(
+            EsgConfig { max_sources: 1, max_readers: 1, capacity: 1 << 17, source_queue: 1 << 14 },
+            1,
+            1,
+        );
+        let mut run: Vec<T> = (0..n as i64).map(|ts| Tuple::data(ts, ts as u64)).collect();
+        src[0].add_batch(&mut run).unwrap();
+        src[0].advance_clock(n as i64 + 1);
+        let mut buf: Vec<T> = Vec::new();
+        let first = rdr[0].get_batch(&mut buf, n);
+        assert!(first > pool::DEFAULT_SHRINK_CAP, "burst batch too small: {first}");
+        assert!(buf.capacity() > pool::DEFAULT_SHRINK_CAP, "burst never inflated the scratch");
+        let mut got = first;
+        loop {
+            buf.clear();
+            let k = rdr[0].get_batch(&mut buf, n);
+            got += k;
+            if k == 0 {
+                break;
+            }
+        }
+        assert_eq!(got, n);
+        // the empty-handed refill above applied the between-batches decay
+        assert!(
+            buf.capacity() <= pool::DEFAULT_SHRINK_CAP,
+            "burst capacity {} persisted past the shrink cap",
+            buf.capacity()
+        );
+    }
+
+    #[test]
+    fn endpoints_share_one_gate_pool() {
+        let (g, src, rdr) = gate(1, 1);
+        // all endpoints expose the same pool instance…
+        assert!(std::ptr::eq(g.pool(), src[0].pool()));
+        assert!(std::ptr::eq(src[0].pool(), rdr[0].pool()));
+        // …so a buffer an evicted worker returns via its source handle
+        // is what a re-grown worker draws via its reader handle
+        src[0].pool().put(Vec::with_capacity(256));
+        let buf = rdr[0].pool().get(200);
+        assert!(buf.capacity() >= 200 && buf.capacity() <= 512);
+        assert_eq!(g.pool().pooled(), 0);
     }
 
     #[test]

@@ -28,6 +28,12 @@ use std::sync::{Arc, RwLock};
 const SEG_SHIFT: u32 = 10;
 /// Entries per segment.
 pub const SEG_SIZE: usize = 1 << SEG_SHIFT;
+/// Truncated segments retained for reuse (§Perf memory discipline): the
+/// steady state cycles one segment per `SEG_SIZE` tuples plus at most
+/// one pinned by each reader's `SegCache`, so a few shelved segments
+/// make segment turnover allocation-free; anything beyond goes back to
+/// the allocator so truncation still releases burst memory.
+const FREE_SEGS: usize = 4;
 
 struct Segment<T> {
     slots: Box<[UnsafeCell<Option<T>>]>,
@@ -51,12 +57,40 @@ impl<T> Segment<T> {
             slots: (0..SEG_SIZE).map(|_| UnsafeCell::new(None)).collect(),
         })
     }
+
+    /// Clear every slot (dropping payloads) so the segment can be
+    /// reused at a new base index. Requires `&mut`, i.e. unique
+    /// ownership — both call sites prove it via `Arc::get_mut`, so no
+    /// reader cache can observe the reset.
+    fn reset(&mut self) {
+        for slot in self.slots.iter_mut() {
+            *slot.get_mut() = None;
+        }
+    }
 }
 
 struct Segments<T> {
     /// Global index of the first entry of `segs[0]`.
     base: u64,
     segs: Vec<Arc<Segment<T>>>,
+    /// Truncated segments shelved for reuse (bounded by [`FREE_SEGS`]).
+    /// An entry may still be pinned by a reader's `SegCache`; it is only
+    /// reused once `Arc::get_mut` proves the last cache moved on.
+    free: Vec<Arc<Segment<T>>>,
+}
+
+impl<T> Segments<T> {
+    /// Pop a shelved segment no reader cache still pins, reset for
+    /// reuse at a fresh base index. Pinned entries stay shelved and are
+    /// re-checked on the next call (a reader cache pins at most one
+    /// truncated segment, and drops it as soon as it crosses into the
+    /// next one).
+    fn take_recycled(&mut self) -> Option<Arc<Segment<T>>> {
+        let i = (0..self.free.len()).find(|&i| Arc::get_mut(&mut self.free[i]).is_some())?;
+        let mut seg = self.free.swap_remove(i);
+        Arc::get_mut(&mut seg).expect("uniqueness just checked").reset();
+        Some(seg)
+    }
 }
 
 /// The shared log.
@@ -84,7 +118,11 @@ impl<T> Default for SegCache<T> {
 impl<T: Clone + Send + Sync> Log<T> {
     pub fn new() -> Self {
         Log {
-            segments: RwLock::new(Segments { base: 0, segs: vec![Segment::new()] }),
+            segments: RwLock::new(Segments {
+                base: 0,
+                segs: vec![Segment::new()],
+                free: Vec::new(),
+            }),
             ready: CachePadded::new(AtomicU64::new(0)),
         }
     }
@@ -112,12 +150,17 @@ impl<T: Clone + Send + Sync> Log<T> {
             }
         }
         let mut guard = self.segments.write().unwrap();
-        let first_seg_no = guard.base >> SEG_SHIFT;
-        while ((seg_no - first_seg_no) as usize) >= guard.segs.len() {
-            guard.segs.push(Segment::new());
+        let inner = &mut *guard;
+        let first_seg_no = inner.base >> SEG_SHIFT;
+        while ((seg_no - first_seg_no) as usize) >= inner.segs.len() {
+            // recycle a truncated segment when one is free of reader
+            // pins; the allocator is only touched when the shelf is
+            // empty (cold start, or a burst outrunning truncation)
+            let seg = inner.take_recycled().unwrap_or_else(Segment::new);
+            inner.segs.push(seg);
         }
         let local = (seg_no - first_seg_no) as usize;
-        guard.segs[local].clone()
+        inner.segs[local].clone()
     }
 
     /// Append one entry and publish it. MUST be called by at most one
@@ -146,6 +189,9 @@ impl<T: Clone + Send + Sync> Log<T> {
     /// one Release fence (plus one segment-table lock per crossed
     /// segment) per run instead of per tuple. Drains `run`. Same
     /// single-writer contract as [`push`](Self::push).
+    ///
+    /// lint: no-alloc — the merge hot path; segment turnover is served
+    /// by the recycling shelf behind `segment_for_write`.
     pub fn push_run(&self, run: &mut Vec<T>) {
         let n = run.len() as u64;
         if n == 0 {
@@ -210,25 +256,47 @@ impl<T: Clone + Send + Sync> Log<T> {
         unsafe { (*seg.slots[off].get()).as_ref().expect("published slot empty").clone() }
     }
 
-    /// Drop whole segments strictly below `min_cursor`. Safe because
+    /// Retire whole segments strictly below `min_cursor`. Safe because
     /// readers hold `Arc`s to segments they are still traversing.
+    /// Retired segments are shelved for reuse (up to [`FREE_SEGS`])
+    /// instead of freed, so steady-state segment turnover never touches
+    /// the allocator; the overflow goes back to the allocator so a
+    /// burst's memory is still released.
     pub fn truncate_below(&self, min_cursor: u64) {
         let mut guard = self.segments.write().unwrap();
-        let first_seg_no = guard.base >> SEG_SHIFT;
+        let inner = &mut *guard;
+        let first_seg_no = inner.base >> SEG_SHIFT;
         let keep_seg_no = min_cursor >> SEG_SHIFT;
         let drop_n = (keep_seg_no.saturating_sub(first_seg_no)) as usize;
         // never drop the segment currently being written
-        let max_droppable = guard.segs.len().saturating_sub(1);
+        let max_droppable = inner.segs.len().saturating_sub(1);
         let drop_n = drop_n.min(max_droppable);
         if drop_n > 0 {
-            guard.segs.drain(..drop_n);
-            guard.base += (drop_n * SEG_SIZE) as u64;
+            for mut seg in inner.segs.drain(..drop_n) {
+                if inner.free.len() < FREE_SEGS {
+                    // eagerly drop payloads when no reader cache pins
+                    // the segment (preserves pre-recycling drop timing);
+                    // a pinned segment is reset at reuse instead
+                    // (`take_recycled`), once its reader moved on
+                    if let Some(s) = Arc::get_mut(&mut seg) {
+                        s.reset();
+                    }
+                    inner.free.push(seg);
+                }
+            }
+            inner.base += (drop_n * SEG_SIZE) as u64;
         }
     }
 
     /// Number of retained segments (for tests / memory accounting).
     pub fn segment_count(&self) -> usize {
         self.segments.read().unwrap().segs.len()
+    }
+
+    /// Number of truncated segments currently shelved for reuse (tests
+    /// / memory accounting).
+    pub fn pooled_segments(&self) -> usize {
+        self.segments.read().unwrap().free.len()
     }
 }
 
@@ -314,6 +382,77 @@ mod tests {
         let mut cache = SegCache::default();
         assert_eq!(log.get(SEG_SIZE as u64 * 6, &mut cache), SEG_SIZE as u64 * 6);
         assert_eq!(log.get(n - 1, &mut cache), n - 1);
+    }
+
+    #[test]
+    fn truncation_recycles_segments_for_reuse() {
+        let log: Log<u64> = Log::new();
+        let n = (SEG_SIZE * 6) as u64;
+        for i in 0..n {
+            log.push(i);
+        }
+        // 5 segments retire; the shelf keeps FREE_SEGS of them
+        log.truncate_below(SEG_SIZE as u64 * 5);
+        let pooled = log.pooled_segments();
+        assert_eq!(pooled, FREE_SEGS);
+        // appending two segments' worth reuses shelved segments before
+        // touching the allocator
+        for i in n..n + (SEG_SIZE * 2) as u64 {
+            log.push(i);
+        }
+        assert_eq!(log.pooled_segments(), pooled - 2);
+        // recycled segments serve reads correctly at their new indices
+        let mut cache = SegCache::default();
+        for i in (SEG_SIZE as u64 * 5)..n + (SEG_SIZE * 2) as u64 {
+            assert_eq!(log.get(i, &mut cache), i);
+        }
+    }
+
+    #[test]
+    fn reader_pinned_segment_is_never_reset_for_reuse() {
+        let log: Log<u64> = Log::new();
+        for i in 0..(SEG_SIZE * 3) as u64 {
+            log.push(i);
+        }
+        // pin segment 0 through a reader cache
+        let mut pinned = SegCache::default();
+        assert_eq!(log.get(0, &mut pinned), 0);
+        // retire segments 0 and 1: both shelved, only 1 is resettable
+        log.truncate_below((SEG_SIZE * 2) as u64);
+        assert_eq!(log.pooled_segments(), 2);
+        // force two reuses: the unpinned segment recycles, the pinned
+        // one must be skipped (a fresh segment is allocated instead)
+        for i in (SEG_SIZE * 3) as u64..(SEG_SIZE * 5) as u64 {
+            log.push(i);
+        }
+        assert_eq!(log.pooled_segments(), 1, "pinned segment must stay shelved");
+        // once the reader cache moves on, the segment becomes reusable
+        drop(pinned);
+        for i in (SEG_SIZE * 5) as u64..(SEG_SIZE * 6) as u64 {
+            log.push(i);
+        }
+        assert_eq!(log.pooled_segments(), 0);
+        let mut cache = SegCache::default();
+        for i in (SEG_SIZE * 2) as u64..(SEG_SIZE * 6) as u64 {
+            assert_eq!(log.get(i, &mut cache), i);
+        }
+    }
+
+    #[test]
+    fn recycled_segments_drop_stale_payloads() {
+        let marker = std::sync::Arc::new(());
+        let log: Log<std::sync::Arc<()>> = Log::new();
+        for _ in 0..SEG_SIZE * 2 {
+            log.push(marker.clone());
+        }
+        assert_eq!(std::sync::Arc::strong_count(&marker), SEG_SIZE * 2 + 1);
+        // retiring the first segment drops its payloads eagerly even
+        // though the segment itself is shelved for reuse
+        log.truncate_below(SEG_SIZE as u64);
+        assert_eq!(std::sync::Arc::strong_count(&marker), SEG_SIZE + 1);
+        assert_eq!(log.pooled_segments(), 1);
+        drop(log);
+        assert_eq!(std::sync::Arc::strong_count(&marker), 1);
     }
 
     #[test]

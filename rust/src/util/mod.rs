@@ -1,12 +1,14 @@
 //! Shared utilities: deterministic PRNG + samplers, backoff, SPSC queues,
-//! and the [`CachePadded`] false-sharing guard used by the hot-path
-//! atomics (gate slots, queue indices).
+//! the run-buffer [`pool`], and the [`CachePadded`] false-sharing guard
+//! used by the hot-path atomics (gate slots, queue indices).
 
 pub mod backoff;
+pub mod pool;
 pub mod rng;
 pub mod spsc;
 
 pub use backoff::Backoff;
+pub use pool::BufferPool;
 pub use rng::{Rng, Zipf};
 
 /// Pads and aligns `T` to 128 bytes so that two adjacent values (e.g.

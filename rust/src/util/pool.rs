@@ -1,0 +1,237 @@
+//! Run-buffer pool: capacity-classed recycling for the `Vec<T>` runs
+//! that carry tuples through the data plane (§Perf "memory discipline"
+//! in the crate docs).
+//!
+//! The steady-state hot path never touches this pool: a worker's run
+//! buffers circulate privately (fill → flush → drained-in-place →
+//! refill), so the allocator is out of the loop entirely. The pool
+//! serializes only *cold* transitions — worker eviction and re-growth
+//! at an epoch switch, zombie-replay segment hand-back, burst decay —
+//! which is why a plain `Mutex` per capacity class is the honest choice
+//! over a lock-free stack: the locks are uncontended by construction,
+//! and this file carries no `lint: lock-free` marker.
+//!
+//! Two disciplines, both enforced by tests (and exercised under Miri —
+//! this module is on the nightly Miri list):
+//!
+//! * **capacity classes** — [`BufferPool::get`] only returns a buffer
+//!   whose capacity already covers the request (classes are
+//!   power-of-two buckets, takes search upward), so a recycled buffer
+//!   never reallocates on first use;
+//! * **shrink cap** — [`BufferPool::put`] clears the buffer (a recycled
+//!   run can never leak stale tuples: payload drops happen at `put`,
+//!   not at some later reuse) and shrinks any burst-inflated capacity
+//!   back to the cap, so one traffic spike does not pin peak memory for
+//!   the process lifetime. [`shrink_excess`] applies the same cap to
+//!   scratch that stays caller-owned (worker batch buffers under a live
+//!   `worker_batch` retune, SN staging rows, merge scratch).
+
+use std::sync::Mutex;
+
+/// Default capacity ceiling a buffer keeps through `put` (entries, not
+/// bytes): covers the largest steady-state run in the tree (the merge's
+/// `MERGE_RUN_MAX = 1024` scratch and any plausible `worker_batch`)
+/// with headroom, while letting a 100k-entry burst buffer deflate.
+pub const DEFAULT_SHRINK_CAP: usize = 4096;
+
+/// Default retained buffers per capacity class; excess `put`s fall
+/// through to the allocator so an eviction storm cannot hoard memory.
+pub const DEFAULT_PER_CLASS: usize = 8;
+
+/// A capacity-classed free list of `Vec<T>` run buffers. Shared by
+/// value behind an `Arc` wherever one run lifecycle spans threads
+/// (gate handles clone the same pool into every worker).
+pub struct BufferPool<T> {
+    /// `shelves[s]` holds buffers whose capacity `c` satisfies
+    /// `2^s <= c < 2^(s+1)`; a `get` for `min_cap` starts at the
+    /// ceiling class, so anything it finds already covers the request.
+    shelves: Vec<Mutex<Vec<Vec<T>>>>,
+    shrink_cap: usize,
+    per_class: usize,
+}
+
+impl<T> BufferPool<T> {
+    /// Pool with the default shrink cap and per-class retention.
+    pub fn new() -> Self {
+        Self::with_config(DEFAULT_SHRINK_CAP, DEFAULT_PER_CLASS)
+    }
+
+    /// Pool with an explicit shrink cap (entries) and per-class
+    /// retention bound. `shrink_cap` is clamped to at least 1.
+    pub fn with_config(shrink_cap: usize, per_class: usize) -> Self {
+        let shrink_cap = shrink_cap.max(1);
+        let classes = shrink_cap.next_power_of_two().trailing_zeros() as usize + 1;
+        BufferPool {
+            shelves: (0..classes).map(|_| Mutex::new(Vec::new())).collect(),
+            shrink_cap,
+            per_class,
+        }
+    }
+
+    /// The capacity ceiling applied by [`put`](Self::put).
+    pub fn shrink_cap(&self) -> usize {
+        self.shrink_cap
+    }
+
+    /// Take a buffer with capacity at least `min_cap`, recycling a
+    /// pooled one when a covering class has stock and falling back to
+    /// a fresh allocation otherwise. The returned buffer is empty.
+    pub fn get(&self, min_cap: usize) -> Vec<T> {
+        let min_cap = min_cap.max(1);
+        let start = min_cap.next_power_of_two().trailing_zeros() as usize;
+        for shelf in self.shelves.iter().skip(start) {
+            if let Some(buf) = shelf.lock().unwrap().pop() {
+                debug_assert!(buf.capacity() >= min_cap && buf.is_empty());
+                return buf;
+            }
+        }
+        Vec::with_capacity(min_cap)
+    }
+
+    /// Return a buffer to the pool: clear it (dropping any residual
+    /// payloads NOW, so a pooled buffer can never alias or resurrect a
+    /// stale tuple), deflate burst capacity to the shrink cap, and
+    /// shelve it unless its class is already at the retention bound
+    /// (then the allocator takes it back).
+    pub fn put(&self, mut buf: Vec<T>) {
+        buf.clear();
+        if buf.capacity() > self.shrink_cap {
+            buf.shrink_to(self.shrink_cap);
+        }
+        if buf.capacity() == 0 {
+            return;
+        }
+        let class = usize::BITS as usize - 1 - buf.capacity().leading_zeros() as usize;
+        let class = class.min(self.shelves.len() - 1);
+        let mut shelf = self.shelves[class].lock().unwrap();
+        if shelf.len() < self.per_class {
+            shelf.push(buf);
+        }
+    }
+
+    /// Total buffers currently shelved (tests / memory accounting).
+    pub fn pooled(&self) -> usize {
+        self.shelves.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
+impl<T> Default for BufferPool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Apply a pool-style shrink cap to caller-owned scratch: if `buf`'s
+/// capacity outgrew `cap` (a burst, or a `worker_batch` retune downward),
+/// shrink it back — but never below its current length. Call this at the
+/// natural empty point of the scratch's cycle; it is a capacity read
+/// (two loads) in the common no-op case.
+pub fn shrink_excess<T>(buf: &mut Vec<T>, cap: usize) {
+    if buf.capacity() > cap {
+        buf.shrink_to(cap.max(buf.len()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn get_returns_covering_capacity_and_recycles() {
+        let pool: BufferPool<u64> = BufferPool::new();
+        pool.put(Vec::with_capacity(1024));
+        assert_eq!(pool.pooled(), 1);
+        // a request the pooled buffer covers is served from the shelf
+        let buf = pool.get(1000);
+        assert!(buf.capacity() >= 1000);
+        assert_eq!(pool.pooled(), 0);
+        // a larger-class request falls back to a fresh allocation
+        pool.put(buf);
+        let big = pool.get(2048);
+        assert!(big.capacity() >= 2048);
+        assert_eq!(pool.pooled(), 1, "undersized buffer must stay shelved");
+    }
+
+    #[test]
+    fn get_from_empty_pool_allocates_fresh() {
+        let pool: BufferPool<u8> = BufferPool::new();
+        let buf = pool.get(300);
+        assert!(buf.capacity() >= 300 && buf.is_empty());
+    }
+
+    #[test]
+    fn put_clears_and_applies_shrink_cap() {
+        let pool: BufferPool<u32> = BufferPool::with_config(1024, 8);
+        let mut burst: Vec<u32> = Vec::with_capacity(1 << 16);
+        burst.extend(0..100);
+        pool.put(burst);
+        let back = pool.get(1);
+        // the satellite invariant: capacity after a burst ≤ the cap
+        assert!(back.capacity() <= 1024, "capacity {} > cap", back.capacity());
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn per_class_retention_is_bounded() {
+        let pool: BufferPool<u8> = BufferPool::with_config(4096, 3);
+        for _ in 0..10 {
+            pool.put(Vec::with_capacity(256));
+        }
+        assert_eq!(pool.pooled(), 3);
+    }
+
+    #[test]
+    fn recycled_buffers_drop_stale_payloads_at_put() {
+        let marker = Arc::new(());
+        let pool: BufferPool<Arc<()>> = BufferPool::new();
+        let mut buf = Vec::with_capacity(16);
+        for _ in 0..5 {
+            buf.push(marker.clone());
+        }
+        assert_eq!(Arc::strong_count(&marker), 6);
+        pool.put(buf);
+        // payloads died at put-time, not at some later reuse
+        assert_eq!(Arc::strong_count(&marker), 1);
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_not_shelved() {
+        let pool: BufferPool<u8> = BufferPool::new();
+        pool.put(Vec::new());
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    /// The reconfiguration shape: worker threads hand buffers back on
+    /// eviction while re-grown workers draw from the same pool. Vec
+    /// ownership makes aliasing structurally impossible; this asserts
+    /// the other half — nothing leaks across the hand-offs (every
+    /// payload clone dies) and recycled buffers come back empty.
+    #[test]
+    fn cross_thread_recycling_neither_aliases_nor_leaks() {
+        let marker = Arc::new(());
+        let pool: Arc<BufferPool<Arc<()>>> = Arc::new(BufferPool::new());
+        let threads: Vec<_> = (0..3)
+            .map(|_| {
+                let pool = pool.clone();
+                let marker = marker.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..20 {
+                        let mut buf = pool.get(64);
+                        assert!(buf.is_empty());
+                        for _ in 0..8 {
+                            buf.push(marker.clone());
+                        }
+                        pool.put(buf);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        drop(pool);
+        assert_eq!(Arc::strong_count(&marker), 1);
+    }
+}

@@ -184,6 +184,9 @@ impl<T> Producer<T> {
     /// into the queue with ONE tail publish, returning how many were
     /// taken. 0 can mean full, closed, or an empty `items` — callers that
     /// care distinguish via [`is_closed`](Self::is_closed)/[`free`](Self::free).
+    ///
+    /// lint: no-alloc — the batch hot path writes into preallocated ring
+    /// slots and drains the caller's run in place.
     pub fn push_slice(&mut self, items: &mut Vec<T>, max: usize) -> usize {
         // ORDERING: closed latch, Acquire paired with `close`'s Release.
         if items.is_empty() || max == 0 || self.inner.closed.load(Ordering::Acquire) {
@@ -273,6 +276,9 @@ impl<T> Consumer<T> {
 
     /// Batched pop: append up to `max` queued items to `buf` with ONE
     /// head publish, returning how many were taken.
+    ///
+    /// lint: no-alloc — `reserve` on the caller's recycled scratch is a
+    /// no-op in steady state (capacity persists across refills).
     pub fn pop_chunk(&mut self, buf: &mut Vec<T>, max: usize) -> usize {
         if max == 0 {
             return 0;

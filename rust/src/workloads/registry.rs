@@ -182,6 +182,17 @@ where
 {
     /// Run `f` against an inner `Ctx`, then replay its staged emissions
     /// and comparison count into the outer context.
+    ///
+    /// §Perf memory discipline audit: this bridge allocates — one
+    /// `staged` Vec per update/output call, one payload clone per
+    /// `retype` — which is inherent to erasing the operator type behind
+    /// `JobPayload`, and deliberately exempt from the steady-state
+    /// allocs-per-tuple contract: declarative jobs trade the bridge cost
+    /// for monomorphic deployment ergonomics, while the measured hot
+    /// paths (gate, worker, fan-out) stay typed. What the bridge does
+    /// NOT do is duplicate per downstream edge — each tuple is re-typed
+    /// once per call and the DAG replicates runs at the gate, clone
+    /// N−1 / move-last (see [`crate::engine::sn::SnIngress::forward`]).
     fn bridged(&self, ctx: &mut Ctx<'_, JobPayload>, f: impl FnOnce(&L, &mut Ctx<'_, L::Out>)) {
         let mut staged: Vec<Tuple<L::Out>> = Vec::new();
         let comparisons = {

@@ -2,10 +2,12 @@
 //! load balancing — preserve `O+` semantics (Theorem 3/4) with no state
 //! transfer, and complete in far under the paper's 40 ms bound.
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use stretch::engine::{VsnEngine, VsnOptions};
+use stretch::engine::{InjectedFault, VsnEngine, VsnOptions};
 use stretch::operator::join::{scalejoin_op, Either, JoinPredicate};
+use stretch::operator::OperatorDef;
 use stretch::tuple::{Mapper, Tuple};
 use stretch::util::Rng;
 
@@ -207,4 +209,102 @@ fn state_is_not_transferred() {
     let (got, completions, _) = run_elastic(&tuples, 2000, 1, 4, &[(800, vec![1, 2])], oracle.len());
     assert_eq!(got, oracle, "pre-reconfig state must remain visible to new owners");
     assert_eq!(completions.len(), 1);
+}
+
+#[test]
+fn pooled_run_buffers_survive_reconfig_and_crash_without_leaks() {
+    // §Perf memory discipline: worker run buffers are drawn from the
+    // gate pools and handed back at thread exit, across the full
+    // elastic lifecycle — grow, injected crash, healing shrink (zombie
+    // replay + decommission). An `Arc` payload makes every surviving
+    // clone countable: after the engine and all handles drop, exactly
+    // the test's own reference may remain. A residual clone would mean
+    // a recycled buffer aliased tuples into a successor (`put` failed
+    // to clear) or a pooled buffer leaked a payload past shutdown.
+    let marker = Arc::new(0u64);
+    let def = OperatorDef::from_fn(
+        "idarc",
+        64,
+        |t: &Tuple<Arc<u64>>, emit: &mut dyn FnMut(Arc<u64>)| emit(t.payload.clone()),
+    );
+    let (mut engine, mut ingress, mut readers) = VsnEngine::setup(
+        def,
+        VsnOptions { initial: 2, max: 4, upstreams: 1, gate_capacity: 4096, ..Default::default() },
+    );
+    let control = engine.control.clone();
+    let health = engine.health();
+    let mut ing = ingress.remove(0);
+    let mut reader = readers.remove(0);
+
+    // Single-threaded feeding is safe: 1200 in + 1200 out < 4096, so
+    // flow control never blocks the feeder against the undrained egress.
+    let mut ts = 0i64;
+    let feed = |ing: &mut stretch::engine::StretchIngress<Arc<u64>>, ts: &mut i64, n: usize, m: &Arc<u64>| {
+        for _ in 0..n {
+            *ts += 1;
+            ing.add(Tuple::data(*ts, m.clone())).unwrap();
+        }
+    };
+
+    feed(&mut ing, &mut ts, 400, &marker);
+    // grow 2 → 4: pool instances activate and start drawing batches
+    control.reconfigure(vec![0, 1, 2, 3], Mapper::over(vec![0, 1, 2, 3]));
+    feed(&mut ing, &mut ts, 400, &marker);
+    // crash worker 3 at its next batch boundary → zombie with a pinned
+    // unprocessed share
+    health.inject(3, InjectedFault::Kill);
+    // healing shrink 4 → 2: replays the dead slot's share, then the
+    // decommissioned zombie exits and returns its run buffers
+    control.reconfigure(vec![0, 1], Mapper::over(vec![0, 1]));
+    feed(&mut ing, &mut ts, 400, &marker);
+    ing.heartbeat(10_000_000).unwrap();
+
+    // exactly-once across the grow, the crash, and the healing shrink:
+    // 1200 data outputs, no more (aliasing would duplicate), no fewer
+    let mut got = 0usize;
+    let deadline = std::time::Instant::now() + Duration::from_secs(40);
+    while got < 1200 && std::time::Instant::now() < deadline {
+        match reader.get() {
+            Some(t) if t.kind.is_data() => got += 1,
+            Some(_) => {}
+            None => std::thread::sleep(Duration::from_micros(200)),
+        }
+    }
+    assert_eq!(got, 1200, "exactly-once across reconfigs + crash replay");
+    // no spurious extra outputs trailing behind the expected count
+    let quiet = std::time::Instant::now() + Duration::from_millis(200);
+    while std::time::Instant::now() < quiet {
+        if let Some(t) = reader.get() {
+            assert!(!t.kind.is_data(), "duplicate data output after tuple 1200");
+        } else {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let t0 = std::time::Instant::now();
+    while engine.control.completion_times().len() < 2 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(engine.control.completion_times().len(), 2, "both reconfigs must complete");
+
+    engine.shutdown();
+    // every worker thread (live, evicted, and the healed zombie) handed
+    // its two run buffers back to the gate pools on exit
+    assert!(
+        engine.esg_in.pool().pooled() >= 4,
+        "in-gate pool holds {} buffers, want the 4 worker batch buffers",
+        engine.esg_in.pool().pooled()
+    );
+    assert!(
+        engine.esg_out.pool().pooled() >= 4,
+        "out-gate pool holds {} buffers, want the 4 worker out_bufs",
+        engine.esg_out.pool().pooled()
+    );
+    drop(reader);
+    drop(ing);
+    drop(readers);
+    drop(ingress);
+    drop(engine);
+    // pooled buffers are cleared at put-time and gate logs dropped with
+    // the engine: no payload clone may survive anywhere
+    assert_eq!(Arc::strong_count(&marker), 1, "payload clones leaked past engine teardown");
 }
