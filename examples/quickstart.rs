@@ -5,9 +5,12 @@
 //! and drive a live job from your own code through `Job::launch`'s
 //! `JobHandle` (scale with measured reconfig latencies, sample metrics,
 //! quiesce, shut down). Then: kill a worker mid-run and watch the
-//! supervisor heal it by reconfiguration alone. Finally: install the
+//! supervisor heal it by reconfiguration alone. Then: install the
 //! crate's counting allocator and watch the steady-state allocation
-//! rate of the batched gate path converge to zero.
+//! rate of the batched gate path converge to zero. Finally, the fleet
+//! layer: TWO jobs on one runtime thread under one core budget, with a
+//! `JobServer` re-arbitrating cores between them live and refusing a
+//! third job that cannot fit.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -100,6 +103,7 @@ fn main() {
     pin_the_data_plane_with_placement();
     kill_a_worker_and_watch_it_heal();
     watch_allocs_per_tuple_go_to_zero();
+    run_two_jobs_under_one_budget();
 }
 
 /// 7. The declarative layer: a whole elastic TOPOLOGY — stages, edges,
@@ -356,4 +360,117 @@ fn watch_allocs_per_tuple_go_to_zero() {
         );
     }
     println!("  cold rounds fill the pools; warm rounds recycle them — ≈0 is the contract");
+}
+
+/// 12. The fleet layer: run TWO jobs under ONE core budget. A
+///     `JobServer` adopts every submitted job onto a single shared
+///     runtime thread (a job costs a list entry, not a thread) and
+///     re-runs the fleet arbiter's shrink-then-grant wave across every
+///     (job, stage) pair each period — weighted by `JobShare::weight`,
+///     floored by `min_cores`, forced to fit the budget. Every move
+///     BETWEEN jobs is the same epoch reconfiguration a single job uses
+///     to scale, so it lands in milliseconds with no state transfer. A
+///     job whose minimum footprint cannot fit is refused at `submit` —
+///     admission control, before it ever competes for cores. (On disk
+///     this is a `[server]` + `[job.<name>]` config and
+///     `stretch serve fleet.conf`.)
+fn run_two_jobs_under_one_budget() {
+    use stretch::elastic::JobShare;
+    use stretch::engine::JobSpec;
+    use stretch::harness::{Job, JobServer, LaunchConfig, ReplaySource};
+    use stretch::workloads::registry::{into_job_tuple, JobPayload};
+    use stretch::workloads::tweets::{TweetGen, TweetGenConfig};
+    use stretch::workloads::RateSchedule;
+    use stretch::tuple::Tuple;
+
+    // the §7 wordcount, narrow (hot: starved at one instance per stage)
+    const NARROW: &str = r#"
+[topology]
+stages = ["tokenize", "count"]
+edges = ["tokenize -> count"]
+[stage.tokenize]
+operator = "tweet-tokenize"
+initial = 1
+max = 3
+[stage.count]
+operator = "word-count"
+ws_ms = 1000
+initial = 1
+max = 4
+"#;
+    // ... and wide (idle: over-provisioned at two per stage)
+    const WIDE: &str = r#"
+[topology]
+stages = ["tokenize", "count"]
+edges = ["tokenize -> count"]
+[stage.tokenize]
+operator = "tweet-tokenize"
+initial = 2
+max = 3
+[stage.count]
+operator = "word-count"
+ws_ms = 1000
+initial = 2
+max = 4
+"#;
+
+    let build = |conf: &str, name: &str, seed: u64, rate: f64| {
+        let spec = JobSpec::from_config(&stretch::config::Config::parse(conf).unwrap())
+            .expect("fleet job config is valid");
+        let built = spec.build().expect("fleet job builds");
+        let tweets: Vec<Tuple<JobPayload>> =
+            TweetGen::new(TweetGenConfig { vocab: 500, seed, mean_gap_ms: 2.0, ..Default::default() })
+                .take(2_000)
+                .into_iter()
+                .map(into_job_tuple)
+                .collect();
+        Job::new(built.pipeline, ReplaySource::new(tweets)).with_config(LaunchConfig {
+            name: name.into(),
+            schedule: RateSchedule::constant(10, rate),
+            time_scale: 3.0,
+            ..Default::default()
+        })
+    };
+
+    // budget 4 < Σ per-job maxima (7 + 7); the fleet even STARTS over
+    // budget (2 + 4 = 6 active), so the first wave must force it to fit
+    println!("\ntwo jobs, one budget: a 4-core JobServer arbitrating hot vs idle...");
+    let server = JobServer::new(4)
+        .with_period(Duration::from_millis(100))
+        .with_thresholds(512, 64)
+        .with_cooldown(0);
+    let hot = server
+        .submit(build(NARROW, "hot", 7, 900.0), JobShare { weight: 2.0, min_cores: 2 })
+        .expect("hot job admits (2 of 4 cores)");
+    let idle = server
+        .submit(build(WIDE, "idle", 13, 300.0), JobShare { weight: 1.0, min_cores: 2 })
+        .expect("idle job admits (4 of 4 cores committed)");
+    // the budget is spoken for: a third job is refused BEFORE launching
+    if let Err(e) = server.submit(build(NARROW, "third", 17, 100.0), JobShare { weight: 1.0, min_cores: 2 }) {
+        println!("  third job refused: {e}");
+    }
+
+    // drain each job (blocks until its replay quiesces), then the fleet
+    for id in [hot, idle] {
+        if let Some(out) = server.stop(id) {
+            println!(
+                "  {id} `{}`: {} counts at the egress, {} dropped",
+                out.name, out.result.egress_count, out.result.ingress_dropped
+            );
+        }
+    }
+    let out = server.shutdown();
+    println!(
+        "  {} cross-job rebalance(s) — every move an ordinary epoch reconfiguration:",
+        out.rebalances.len()
+    );
+    for rb in out.rebalances.iter().take(4) {
+        match rb.ticket.latency_ms() {
+            Some(ms) => println!(
+                "    `{}` stage {} re-fit in {ms:.2} ms (paper bound: 40 ms)",
+                rb.job_name, rb.stage
+            ),
+            None => println!("    `{}` stage {}: superseded before completing", rb.job_name, rb.stage),
+        }
+    }
 }

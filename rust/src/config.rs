@@ -153,6 +153,57 @@ impl FaultsConfig {
     }
 }
 
+/// Multi-job server knobs: parsed from a server config's `[server]`
+/// section (`stretch serve`). The budget and thresholds feed the
+/// fleet-level `elastic::ServerController`; the period paces its
+/// arbitration waves in WALL time (jobs keep independent event clocks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServerConfig {
+    /// Global core budget arbitrated across every admitted job.
+    pub budget: usize,
+    /// Arbitration wave period (wall ms).
+    pub period_ms: u64,
+    /// Backlog at/above which a stage requests one more core.
+    pub grow_backlog: u64,
+    /// Backlog at/below which a stage releases one core.
+    pub shrink_backlog: u64,
+    /// Arbitration waves a job holds still after a reconfiguration.
+    pub cooldown_ticks: u32,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            budget: 8,
+            period_ms: 250,
+            grow_backlog: 4096,
+            shrink_backlog: 64,
+            cooldown_ticks: 1,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Read the `[server]` section (missing keys keep defaults; the
+    /// budget and period are clamped to ≥ 1).
+    ///
+    /// Adding a key here? Also register it in
+    /// `harness::server::SERVER_SECTION_KEYS`, or server configs using it
+    /// will be rejected as typos.
+    pub fn from_config(c: &Config) -> Self {
+        let d = ServerConfig::default();
+        ServerConfig {
+            budget: c.int_or("server.budget", d.budget as i64).max(1) as usize,
+            period_ms: c.int_or("server.period_ms", d.period_ms as i64).max(1) as u64,
+            grow_backlog: c.int_or("server.grow_backlog", d.grow_backlog as i64).max(1) as u64,
+            shrink_backlog: c.int_or("server.shrink_backlog", d.shrink_backlog as i64).max(0)
+                as u64,
+            cooldown_ticks: c.int_or("server.cooldown_ticks", d.cooldown_ticks as i64).max(0)
+                as u32,
+        }
+    }
+}
+
 /// Parsed configuration value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ConfigValue {

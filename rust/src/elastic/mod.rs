@@ -6,16 +6,20 @@
 //! (Q4) and the proactive model-based controller (Q5), both built on the
 //! calibrated stream-join cost model of DEBS'17 [22], plus the
 //! topology-aware [`DagController`] that co-schedules every stage of a
-//! pipeline/DAG against a global core budget.
+//! pipeline/DAG against a global core budget, and the fleet-level
+//! [`ServerController`] that arbitrates one budget across many jobs
+//! (`harness::server::JobServer`).
 
 pub mod controller;
 pub mod dag;
 pub mod model;
 pub mod proactive;
 pub mod reactive;
+pub mod server;
 
 pub use controller::{resize_instance_set, Controller, Decision, Observation};
 pub use dag::DagController;
 pub use model::JoinCostModel;
 pub use proactive::ProactiveController;
 pub use reactive::{ReactiveController, Thresholds};
+pub use server::{JobShare, ServerController};

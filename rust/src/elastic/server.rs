@@ -1,0 +1,319 @@
+//! Fleet-level elasticity: arbitrate ONE core budget across many jobs.
+//!
+//! [`super::dag::DagController`] co-schedules the stages of a single
+//! topology. A multi-job server (`harness::server::JobServer`) faces the
+//! tier above — Röger & Mayer's survey (PAPERS.md) calls cross-application
+//! resource arbitration the open problem past per-operator elasticity —
+//! so [`ServerController`] generalizes the same shrink-then-grant wave
+//! per job × per stage:
+//!
+//! 1. cold stages of any non-cooling job release one core;
+//! 2. hot stages take cores in descending *weighted*-backlog order
+//!    ([`JobShare::weight`] biases the contest — a weight-2 job wins
+//!    against a weight-1 job with the same backlog) while the global
+//!    budget holds;
+//! 3. if the fleet is over budget, the coldest movable stages are forced
+//!    down — but never below one instance per stage nor below a job's
+//!    admitted [`JobShare::min_cores`] floor, so admission control's
+//!    guarantee (Σ min ≤ budget) makes the fit loop converge.
+//!
+//! Cooldown is per *job*: any reconfiguration freezes the whole job for
+//! [`ServerController::cooldown_ticks`] waves, so one job's epoch churn
+//! cannot starve the arbitration of the others.
+
+use crate::elastic::controller::{resize_instance_set, Decision, Observation};
+
+/// A job's standing in the arbitration: how hard it pulls on the budget
+/// and how far it can be squeezed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobShare {
+    /// Backlog multiplier in the grant/steal ordering (≥ 0; 1.0 =
+    /// neutral). Higher weight wins contested cores and loses forced
+    /// shrinks last.
+    pub weight: f64,
+    /// Admission floor: the arbitration never takes the job's total
+    /// below this many cores (clamped up to one per stage implicitly —
+    /// no stage ever goes below one instance).
+    pub min_cores: usize,
+}
+
+impl Default for JobShare {
+    fn default() -> Self {
+        JobShare { weight: 1.0, min_cores: 0 }
+    }
+}
+
+/// Global, budgeted multi-job controller. Tick it with one
+/// `(share, per-stage observations)` pair per job (same order every
+/// wave); it returns one [`Decision`] per stage per job, aligned.
+pub struct ServerController {
+    /// Global core budget: Σ over every job's per-stage parallelism
+    /// stays ≤ this (once reachable under the min-cores floors).
+    pub cores: usize,
+    /// Backlog at/above which a stage requests one more core.
+    pub grow_backlog: u64,
+    /// Backlog at/below which a stage releases one core.
+    pub shrink_backlog: u64,
+    /// Waves a job holds still after a reconfiguration it took part in.
+    pub cooldown_ticks: u32,
+    cool: Vec<u32>,
+}
+
+impl ServerController {
+    pub fn new(cores: usize) -> Self {
+        ServerController {
+            cores: cores.max(1),
+            grow_backlog: 4096,
+            shrink_backlog: 64,
+            cooldown_ticks: 1,
+            cool: Vec::new(),
+        }
+    }
+
+    pub fn with_thresholds(mut self, grow_backlog: u64, shrink_backlog: u64) -> Self {
+        self.grow_backlog = grow_backlog.max(1);
+        self.shrink_backlog = shrink_backlog.min(self.grow_backlog.saturating_sub(1));
+        self
+    }
+
+    pub fn with_cooldown(mut self, ticks: u32) -> Self {
+        self.cooldown_ticks = ticks;
+        self
+    }
+
+    /// One arbitration wave over the whole fleet.
+    pub fn tick(&mut self, jobs: &[(JobShare, Vec<Observation>)]) -> Vec<Vec<Decision>> {
+        if self.cool.len() < jobs.len() {
+            self.cool.resize(jobs.len(), 0);
+        }
+        // (job, stage)-indexed working state
+        let mut target: Vec<Vec<usize>> = jobs
+            .iter()
+            .map(|(_, obs)| obs.iter().map(|o| o.active.len()).collect())
+            .collect();
+        let mut free: Vec<bool> = Vec::with_capacity(jobs.len());
+        for j in 0..jobs.len() {
+            let f = self.cool[j] == 0;
+            if !f {
+                self.cool[j] -= 1;
+            }
+            free.push(f);
+        }
+        let job_total = |t: &Vec<Vec<usize>>, j: usize| -> usize { t[j].iter().sum() };
+        let floor = |share: &JobShare| -> usize { share.min_cores };
+
+        // 1. cold stages release a core (never below 1, never taking the
+        // job under its admitted floor)
+        for (j, (share, obs)) in jobs.iter().enumerate() {
+            if !free[j] {
+                continue;
+            }
+            for (i, o) in obs.iter().enumerate() {
+                if o.backlog <= self.shrink_backlog
+                    && target[j][i] > 1
+                    && job_total(&target, j) > floor(share)
+                {
+                    target[j][i] -= 1;
+                }
+            }
+        }
+
+        // 2. hot stages take cores in descending weighted-backlog order
+        let mut used: usize = (0..jobs.len()).map(|j| job_total(&target, j)).sum();
+        let mut want: Vec<(usize, usize)> = Vec::new();
+        for (j, (_, obs)) in jobs.iter().enumerate() {
+            if !free[j] {
+                continue;
+            }
+            for (i, o) in obs.iter().enumerate() {
+                if o.backlog >= self.grow_backlog && target[j][i] < o.max {
+                    want.push((j, i));
+                }
+            }
+        }
+        let heat = |j: usize, i: usize| -> f64 {
+            jobs[j].1[i].backlog as f64 * jobs[j].0.weight.max(0.0)
+        };
+        want.sort_by(|&(aj, ai), &(bj, bi)| {
+            heat(bj, bi).partial_cmp(&heat(aj, ai)).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for (j, i) in want {
+            if used < self.cores {
+                target[j][i] += 1;
+                used += 1;
+            }
+        }
+
+        // 3. over budget: force the globally coldest movable stages down
+        // until the fleet fits (or nothing movable remains — every
+        // remaining stage is at 1, at its job's floor, or cooling)
+        if used > self.cores {
+            let mut by_cold: Vec<(usize, usize)> = Vec::new();
+            for (j, (_, obs)) in jobs.iter().enumerate() {
+                for i in 0..obs.len() {
+                    by_cold.push((j, i));
+                }
+            }
+            by_cold.sort_by(|&(aj, ai), &(bj, bi)| {
+                heat(aj, ai).partial_cmp(&heat(bj, bi)).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            'fit: while used > self.cores {
+                let mut any = false;
+                for &(j, i) in &by_cold {
+                    if free[j] && target[j][i] > 1 && job_total(&target, j) > floor(&jobs[j].0) {
+                        target[j][i] -= 1;
+                        used -= 1;
+                        any = true;
+                        if used <= self.cores {
+                            break 'fit;
+                        }
+                    }
+                }
+                if !any {
+                    break;
+                }
+            }
+        }
+
+        jobs.iter()
+            .enumerate()
+            .map(|(j, (_, obs))| {
+                obs.iter()
+                    .enumerate()
+                    .map(|(i, o)| {
+                        if target[j][i] == o.active.len() {
+                            Decision::Hold
+                        } else {
+                            self.cool[j] = self.cooldown_ticks;
+                            Decision::Reconfigure(resize_instance_set(
+                                &o.active,
+                                o.max,
+                                target[j][i],
+                            ))
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(active: usize, max: usize, backlog: u64) -> Observation {
+        Observation {
+            in_rate: 0.0,
+            cmp_per_s: 0.0,
+            backlog,
+            dt: 1.0,
+            active: (0..active).collect(),
+            max,
+        }
+    }
+
+    fn share(weight: f64, min_cores: usize) -> JobShare {
+        JobShare { weight, min_cores }
+    }
+
+    fn totals(cur: &[(JobShare, Vec<Observation>)], d: &[Vec<Decision>]) -> Vec<usize> {
+        cur.iter()
+            .zip(d)
+            .map(|((_, obs), dj)| {
+                obs.iter()
+                    .zip(dj)
+                    .map(|(o, dec)| match dec {
+                        Decision::Hold => o.active.len(),
+                        Decision::Reconfigure(set) => set.len(),
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn hot_job_takes_the_idle_jobs_core_same_wave() {
+        let mut c = ServerController::new(4).with_thresholds(100, 10).with_cooldown(0);
+        // budget fully used (2+2); job 1 idle, job 0 overloaded
+        let jobs = vec![
+            (share(1.0, 1), vec![obs(2, 4, 10_000)]),
+            (share(1.0, 1), vec![obs(2, 4, 0)]),
+        ];
+        let d = c.tick(&jobs);
+        assert_eq!(d[0][0], Decision::Reconfigure(vec![0, 1, 2]), "hot job grows");
+        assert_eq!(d[1][0], Decision::Reconfigure(vec![0]), "idle job yields");
+    }
+
+    #[test]
+    fn weight_breaks_the_tie_for_the_last_core() {
+        let mut c = ServerController::new(3).with_thresholds(100, 10).with_cooldown(0);
+        // one spare core, both jobs equally hot — the heavier weight wins
+        let jobs = vec![
+            (share(1.0, 1), vec![obs(1, 4, 5_000)]),
+            (share(2.0, 1), vec![obs(1, 4, 5_000)]),
+        ];
+        let d = c.tick(&jobs);
+        assert_eq!(d[0][0], Decision::Hold, "light job loses the contest");
+        assert_eq!(d[1][0], Decision::Reconfigure(vec![0, 1]), "heavy job wins");
+    }
+
+    #[test]
+    fn forced_fit_respects_job_floors_and_converges() {
+        let mut c = ServerController::new(4).with_thresholds(1_000_000, 0).with_cooldown(0);
+        // 3 + 3 = 6 on a 4-core budget; job 0's floor is 3 so job 1
+        // absorbs the whole squeeze
+        let jobs = vec![
+            (share(1.0, 3), vec![obs(3, 4, 500)]),
+            (share(1.0, 1), vec![obs(3, 4, 400)]),
+        ];
+        let d = c.tick(&jobs);
+        let t = totals(&jobs, &d);
+        assert_eq!(t[0], 3, "floored job untouched");
+        assert_eq!(t[1], 1, "unfloored job squeezed");
+        assert!(t.iter().sum::<usize>() <= 4);
+    }
+
+    #[test]
+    fn budget_is_enforced_across_jobs() {
+        let mut c = ServerController::new(5).with_thresholds(100, 10).with_cooldown(0);
+        // every stage hot: grants stop exactly at the budget
+        let jobs = vec![
+            (share(1.0, 2), vec![obs(1, 4, 9_000), obs(1, 4, 8_000)]),
+            (share(1.0, 2), vec![obs(1, 4, 7_000), obs(1, 4, 6_000)]),
+        ];
+        let d = c.tick(&jobs);
+        let t = totals(&jobs, &d);
+        assert_eq!(t.iter().sum::<usize>(), 5, "grants fill the budget exactly");
+        // the hottest stage (job 0, stage 0) got the spare core
+        assert_eq!(d[0][0], Decision::Reconfigure(vec![0, 1]));
+    }
+
+    #[test]
+    fn cooldown_freezes_the_whole_job_for_a_wave() {
+        let mut c = ServerController::new(8).with_thresholds(100, 10).with_cooldown(1);
+        let jobs = vec![(share(1.0, 1), vec![obs(1, 4, 5_000), obs(1, 4, 5_000)])];
+        let d = c.tick(&jobs);
+        assert!(matches!(d[0][0], Decision::Reconfigure(_)));
+        let jobs2 = vec![(share(1.0, 1), vec![obs(2, 4, 5_000), obs(2, 4, 5_000)])];
+        let d = c.tick(&jobs2);
+        assert_eq!(d[0], vec![Decision::Hold, Decision::Hold], "whole job cooling");
+        let d = c.tick(&jobs2);
+        assert!(matches!(d[0][0], Decision::Reconfigure(_)), "cooldown expired");
+    }
+
+    #[test]
+    fn never_shrinks_a_stage_below_one() {
+        let mut c = ServerController::new(2).with_thresholds(100, 10).with_cooldown(0);
+        let jobs = vec![
+            (share(1.0, 0), vec![obs(1, 4, 0), obs(1, 4, 0)]),
+            (share(1.0, 0), vec![obs(1, 4, 0)]),
+        ];
+        let d = c.tick(&jobs);
+        for dj in &d {
+            for dec in dj {
+                assert_eq!(*dec, Decision::Hold);
+            }
+        }
+    }
+}

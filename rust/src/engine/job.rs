@@ -109,11 +109,7 @@ impl fmt::Display for JobError {
             JobError::UnknownOperator { stage, operator } => write!(
                 f,
                 "stage `{stage}`: unknown operator `{operator}` (known: {})",
-                registry::OPERATORS
-                    .iter()
-                    .map(|e| e.name)
-                    .collect::<Vec<_>>()
-                    .join(", ")
+                registry::known_operators().join(", ")
             ),
             JobError::DanglingEdge { stage, input } => write!(
                 f,
@@ -388,7 +384,7 @@ impl JobSpec {
                     })
                 }
             };
-            if registry::lookup(&operator).is_none() {
+            if registry::resolve(&operator).is_none() {
                 return Err(JobError::UnknownOperator { stage: n.clone(), operator });
             }
             let inputs = string_list(c, &key("inputs"))?.unwrap_or_default();
@@ -518,8 +514,8 @@ impl JobSpec {
         let mut res_in: Vec<PayloadKind> = Vec::with_capacity(stages.len());
         let mut res_out: Vec<PayloadKind> = Vec::with_capacity(stages.len());
         for s in &stages {
-            let entry = registry::lookup(&s.operator).expect("validated above");
-            let rin = match entry.input {
+            let entry = registry::resolve(&s.operator).expect("validated above");
+            let rin = match entry.input() {
                 Some(k) => k,
                 None => {
                     let Some(first) = s.inputs.first() else {
@@ -543,7 +539,7 @@ impl JobSpec {
                 }
             }
             res_in.push(rin);
-            res_out.push(entry.output.unwrap_or(rin));
+            res_out.push(entry.output().unwrap_or(rin));
         }
 
         // external source kind: every source stage must agree (one paced
@@ -633,7 +629,7 @@ impl JobSpec {
         }
         let mut handles: BTreeMap<&str, NodeHandle<JobPayload>> = BTreeMap::new();
         for (i, s) in self.stages.iter().enumerate() {
-            let entry = registry::lookup(&s.operator).expect("JobSpec is validated");
+            let entry = registry::resolve(&s.operator).expect("JobSpec is validated");
             let ups: Vec<NodeHandle<JobPayload>> =
                 s.inputs.iter().map(|i| handles[i.as_str()]).collect();
             let opts = VsnOptions {
@@ -912,6 +908,39 @@ operator = "hedge-join"
             }
             other => panic!("{other}"),
         }
+    }
+
+    #[test]
+    fn closure_registered_operator_builds_from_config() {
+        use crate::tuple::Tuple;
+        use crate::workloads::registry::{JobPayload, OperatorRegistry};
+        OperatorRegistry::register_fn(
+            "test-dyn-dup",
+            |t: &Tuple<JobPayload>, emit: &mut dyn FnMut(JobPayload)| {
+                emit(t.payload.clone());
+                emit(t.payload.clone());
+            },
+        )
+        .unwrap();
+        // a config can now name the closure like any static operator,
+        // and the polymorphic kind resolution flows through it
+        let spec = parse(
+            "[topology]\nstages = [\"src\", \"dup\"]\nedges = [\"src -> dup\"]\n\
+             [stage.src]\noperator = \"trade-filter\"\n\
+             [stage.dup]\noperator = \"test-dyn-dup\"",
+        )
+        .unwrap();
+        assert_eq!(spec.source_kind, PayloadKind::Trade);
+        assert_eq!(spec.sinks, vec!["dup"]);
+        let mut built = spec.build().unwrap();
+        assert_eq!(built.pipeline.depth(), 2);
+        built.pipeline.shutdown();
+        // closure operators are payload-polymorphic: no source stages
+        let err = parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"test-dyn-dup\"",
+        )
+        .unwrap_err();
+        assert!(matches!(err, JobError::PolymorphicSource { .. }), "{err}");
     }
 
     #[test]

@@ -31,8 +31,8 @@
 
 use super::{HarnessError, PacedSource, PipelineRunResult, RunSample, StageRunStats};
 use crate::engine::pipeline::Pipeline;
-use crate::engine::{EgressDriver, StretchIngress};
-use crate::metrics::MetricsSnapshot;
+use crate::engine::{EgressDriver, EngineClock, StretchIngress};
+use crate::metrics::{Histogram, MetricsSnapshot};
 use crate::time::EventTime;
 use crate::tuple::{Epoch, InstanceId, Mapper, Payload, Tuple};
 use crate::workloads::rates::RateSchedule;
@@ -395,8 +395,9 @@ enum ScaleTarget {
     Set(Vec<InstanceId>),
 }
 
-/// State shared between the handle and the runtime thread.
-struct RtShared {
+/// State shared between the handle and whichever driver (per-job thread
+/// or the multi-job server loop) paces the runtime.
+pub(crate) struct RtShared {
     cmds: Mutex<VecDeque<Cmd>>,
     metrics: Mutex<JobMetrics>,
     phase: Mutex<JobPhase>,
@@ -404,6 +405,21 @@ struct RtShared {
     stop: AtomicBool,
     /// Every ticket ever issued through the handle, issue order.
     tickets: Mutex<Vec<ReconfigTicket>>,
+    /// Final statistics, published exactly once by
+    /// [`JobTicker::finalize`]; [`JobHandle::shutdown`] takes them.
+    fin: Mutex<Option<RtFinal>>,
+}
+
+impl RtShared {
+    /// Ask the driver to stop the runtime (idempotent).
+    pub(crate) fn request_stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// Whether a stop has been requested.
+    pub(crate) fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
 }
 
 fn set_phase(shared: &RtShared, p: JobPhase) {
@@ -564,6 +580,7 @@ impl JobCtl {
                 phase_cv: Condvar::new(),
                 stop: AtomicBool::new(false),
                 tickets: Mutex::new(Vec::new()),
+                fin: Mutex::new(None),
             }),
             t0: Instant::now(),
             time_scale: 1.0,
@@ -572,7 +589,10 @@ impl JobCtl {
     }
 }
 
-/// Outcome of a finished job run ([`JobHandle::shutdown`]).
+/// Outcome of a finished job run ([`JobHandle::shutdown`]). Cloneable so
+/// the handle can cache it — a second `shutdown` (e.g. a server stop
+/// racing a user stop) returns the same outcome instead of panicking.
+#[derive(Clone)]
 pub struct JobRunOutcome {
     /// The job's name ([`LaunchConfig::name`] / the config's `name` key).
     pub name: String,
@@ -612,10 +632,32 @@ impl<In: Payload + Default, Out: Payload + Default> Job<In, Out> {
     }
 
     /// Start the job: validate the topology shape, move the data plane
-    /// (feed, drain, sampling) onto the runtime thread, and return the
-    /// live handle. Degenerate topologies are typed errors, before any
-    /// runtime thread exists.
+    /// (feed, drain, sampling) onto a dedicated runtime thread, and
+    /// return the live handle. Degenerate topologies are typed errors,
+    /// before any runtime thread exists.
     pub fn launch(self) -> Result<JobHandle<Out>, HarnessError> {
+        let (handle, mut rt) = self.launch_parts()?;
+        let name = handle.name.clone();
+        let pin = rt.cfg.pin_core;
+        let thread = std::thread::Builder::new()
+            .name(format!("job-{name}"))
+            .spawn(move || {
+                if let Some(core) = pin {
+                    crate::runtime::placement::pin_current(core);
+                }
+                drive_runtime(&mut rt);
+            })
+            .expect("spawn job runtime thread");
+        *handle.thread.lock().unwrap() = Some(thread);
+        Ok(handle)
+    }
+
+    /// Validate and assemble the job WITHOUT spawning anything: the
+    /// handle plus the not-yet-driven [`JobRuntime`]. [`Job::launch`]
+    /// pairs the runtime with a dedicated thread; the multi-job
+    /// [`crate::harness::server::JobServer`] registers it with its
+    /// shared ticker loop instead.
+    pub(crate) fn launch_parts(self) -> Result<(JobHandle<Out>, JobRuntime<In, Out>), HarnessError> {
         let Job { pipeline, source, mut cfg } = self;
         if pipeline.ingress.is_empty() {
             return Err(HarnessError::NoIngress);
@@ -664,6 +706,7 @@ impl<In: Payload + Default, Out: Payload + Default> Job<In, Out> {
             phase_cv: Condvar::new(),
             stop: AtomicBool::new(false),
             tickets: Mutex::new(Vec::new()),
+            fin: Mutex::new(None),
         });
         let captured: Arc<Mutex<Vec<Tuple<Out>>>> = Arc::new(Mutex::new(Vec::new()));
         let capture = cfg.capture_egress.then(|| captured.clone());
@@ -671,16 +714,16 @@ impl<In: Payload + Default, Out: Payload + Default> Job<In, Out> {
             Arc::new(pipeline.stages.iter().map(|s| s.max_parallelism()).collect());
         let t0 = Instant::now();
         let ctl = JobCtl { shared: shared.clone(), t0, time_scale: cfg.time_scale, maxes };
-        let thread = std::thread::Builder::new()
-            .name(format!("job-{name}"))
-            .spawn(move || {
-                if let Some(core) = cfg.pin_core {
-                    crate::runtime::placement::pin_current(core);
-                }
-                runtime_loop(pipeline, source, cfg, shared, capture, t0)
-            })
-            .expect("spawn job runtime thread");
-        Ok(JobHandle { ctl, name, stage_names, captured, thread: Some(thread) })
+        let rt = JobRuntime::new(pipeline, source, cfg, shared, capture, t0);
+        let handle = JobHandle {
+            ctl,
+            name,
+            stage_names,
+            captured,
+            thread: Mutex::new(None),
+            outcome: Mutex::new(None),
+        };
+        Ok((handle, rt))
     }
 }
 
@@ -691,7 +734,12 @@ pub struct JobHandle<Out: Payload + Default> {
     name: String,
     stage_names: Vec<String>,
     captured: Arc<Mutex<Vec<Tuple<Out>>>>,
-    thread: Option<std::thread::JoinHandle<RtFinal>>,
+    /// The dedicated driver thread ([`Job::launch`]); stays `None` when
+    /// a server loop drives the runtime instead.
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Cached outcome: [`Self::shutdown`] is idempotent — the first call
+    /// builds it, every later call returns the cached clone.
+    outcome: Mutex<Option<JobRunOutcome>>,
 }
 
 impl<Out: Payload + Default> std::ops::Deref for JobHandle<Out> {
@@ -719,20 +767,57 @@ impl<Out: Payload + Default> JobHandle<Out> {
         std::mem::take(&mut *self.captured.lock().unwrap())
     }
 
-    /// Stop the runtime thread, shut every stage down (upstream first)
-    /// and return the run's outcome. Shutting down before
+    /// Stop the runtime, shut every stage down (upstream first) and
+    /// return the run's outcome. Shutting down before
     /// [`JobCtl::await_quiesce`] abandons in-flight tuples.
-    pub fn shutdown(mut self) -> JobRunOutcome {
-        self.ctl.shared.stop.store(true, Ordering::Release);
+    ///
+    /// Idempotent: the outcome is cached on the first call, and every
+    /// later call — including a concurrent one racing the first (a
+    /// server stop racing a user stop) — returns the cached clone
+    /// instead of double-joining the runtime.
+    pub fn shutdown(&self) -> JobRunOutcome {
+        // the cache lock is held across the whole teardown: a second
+        // caller blocks here until the first finishes, then takes the
+        // cached branch
+        let mut cached = self.outcome.lock().unwrap();
+        if let Some(out) = cached.as_ref() {
+            return out.clone();
+        }
+        self.ctl.shared.request_stop();
+        match self.thread.lock().unwrap().take() {
+            Some(t) => {
+                t.join().unwrap_or_else(|_| panic!("job runtime thread panicked"));
+            }
+            None => {
+                // server-driven: the server loop finalizes the runtime
+                // on its next pass — wait for the Stopped phase it
+                // publishes (bounded: a vanished driver must not hang
+                // the caller forever)
+                let deadline = Instant::now() + QUIESCE_CAP;
+                let mut g = self.ctl.shared.phase.lock().unwrap();
+                while *g < JobPhase::Stopped {
+                    let now = Instant::now();
+                    assert!(
+                        now < deadline,
+                        "job runtime was never finalized (server loop gone?)"
+                    );
+                    let (ng, _) =
+                        self.ctl.shared.phase_cv.wait_timeout(g, deadline - now).unwrap();
+                    g = ng;
+                }
+            }
+        }
         let fin = self
-            .thread
+            .ctl
+            .shared
+            .fin
+            .lock()
+            .unwrap()
             .take()
-            .expect("shutdown consumes the handle")
-            .join()
-            .unwrap_or_else(|_| panic!("job runtime thread panicked"));
-        JobRunOutcome {
-            name: std::mem::take(&mut self.name),
-            stage_names: std::mem::take(&mut self.stage_names),
+            .expect("runtime finalized without publishing final statistics");
+        let out = JobRunOutcome {
+            name: self.name.clone(),
+            stage_names: self.stage_names.clone(),
             result: PipelineRunResult {
                 stages: fin.stages,
                 egress_count: fin.egress_count,
@@ -743,20 +828,28 @@ impl<Out: Payload + Default> JobHandle<Out> {
             tickets: self.ctl.tickets(),
             recoveries: Vec::new(),
             degraded: false,
-        }
+        };
+        *cached = Some(out.clone());
+        out
     }
 }
 
 impl<Out: Payload + Default> Drop for JobHandle<Out> {
     fn drop(&mut self) {
-        if let Some(t) = self.thread.take() {
-            self.ctl.shared.stop.store(true, Ordering::Release);
+        if self.outcome.get_mut().unwrap().is_some() {
+            return; // already shut down and cached
+        }
+        self.ctl.shared.request_stop();
+        if let Some(t) = self.thread.get_mut().unwrap().take() {
             let _ = t.join();
         }
+        // a server-driven runtime (thread = None) is finalized by the
+        // server loop itself — nothing to join here
     }
 }
 
-/// Final statistics the runtime thread returns at shutdown.
+/// Final statistics the runtime publishes (via [`RtShared::fin`]) when
+/// its driver finalizes it.
 struct RtFinal {
     stages: Vec<StageRunStats>,
     egress_count: u64,
@@ -790,8 +883,16 @@ fn resolve_completed(
     });
 }
 
-/// Ensures waiters wake even if the runtime thread panics.
-struct StopGuard(Arc<RtShared>);
+/// Ensures waiters wake even if the driving thread panics: dropping the
+/// guard forces the job's phase to `Stopped`. Every driver (the per-job
+/// thread and the server loop) arms one per runtime it drives.
+pub(crate) struct StopGuard(Arc<RtShared>);
+
+impl StopGuard {
+    pub(crate) fn new(shared: Arc<RtShared>) -> Self {
+        StopGuard(shared)
+    }
+}
 
 impl Drop for StopGuard {
     fn drop(&mut self) {
@@ -799,140 +900,240 @@ impl Drop for StopGuard {
     }
 }
 
-/// The background drive loop: pace the source round-robin across every
-/// ingress wrapper, drain every egress reader, sample per-stage metrics
-/// once per event second, and serve the handle's commands — one wall tick
-/// (~20 ms) per pass. This is the old `run_pipeline` body with every
-/// *decision* (controllers, scripted reconfigs, adaptive batching)
-/// removed: those arrive as [`Cmd`]s through the handle.
-fn runtime_loop<In, Out>(
-    mut pipeline: Pipeline<In, Out>,
-    mut source: Box<dyn PacedSource<In>>,
+/// One wall tick of the shared runtime cadence. Both drivers — the
+/// per-job thread ([`drive_runtime`]) and the multi-job server loop —
+/// pace [`JobTicker::tick`] at this interval, and the feed derives its
+/// per-tick tuple quantum from it.
+pub(crate) const RUNTIME_TICK: Duration = Duration::from_millis(20);
+
+/// The payload-type-erased drive contract of one launched job: what a
+/// driver needs to pace the data plane without knowing the tuple types.
+/// [`Job::launch`] drives one ticker on a dedicated thread; the
+/// [`crate::harness::server::JobServer`] loop interleaves many.
+pub(crate) trait JobTicker: Send {
+    /// One pass of the drive loop: feed, drain, sample, serve commands.
+    fn tick(&mut self);
+    /// Whether a stop has been requested through the handle/server.
+    fn stop_requested(&self) -> bool;
+    /// End-of-run accounting: kill unresolved tickets, shut the pipeline
+    /// down and publish the final statistics to the shared state
+    /// (idempotent — a second call is a no-op).
+    fn finalize(&mut self);
+    /// The shared state (drivers arm a [`StopGuard`] on it).
+    fn shared(&self) -> Arc<RtShared>;
+}
+
+/// Per-job driver: pace [`JobTicker::tick`] at the shared wall cadence
+/// until a stop is requested, then finalize. This is the whole body of
+/// the per-job runtime thread; the server loop implements the same
+/// contract over many runtimes at once.
+pub(crate) fn drive_runtime(rt: &mut dyn JobTicker) {
+    let _guard = StopGuard::new(rt.shared());
+    let mut next_tick = Instant::now();
+    while !rt.stop_requested() {
+        rt.tick();
+        next_tick += RUNTIME_TICK;
+        let now = Instant::now();
+        if next_tick > now {
+            // lint: allow(sleep) — wall-clock pacing of the runtime tick
+            // (feed/sample cadence), not a data-plane wait: nothing can
+            // arrive earlier than the next scheduled tick.
+            std::thread::sleep(next_tick - now);
+        } else {
+            next_tick = now; // fell behind: don't try to catch up the wall
+        }
+    }
+    rt.finalize();
+}
+
+/// The data plane of one launched job, factored as an explicit state
+/// machine — [`Self::tick`] is one pass of the old per-job runtime loop
+/// (pace the source round-robin across every ingress wrapper, drain
+/// every egress reader, sample per-stage metrics once per event second,
+/// serve the handle's commands), with the stop check and wall pacing
+/// hoisted into the driver so ONE thread can interleave many jobs.
+/// Every *decision* (controllers, scripted reconfigs, adaptive batching)
+/// still arrives as a [`Cmd`] through the handle.
+pub(crate) struct JobRuntime<In: Payload + Default, Out: Payload + Default> {
+    pipeline: Pipeline<In, Out>,
+    source: Box<dyn PacedSource<In>>,
     cfg: LaunchConfig,
     shared: Arc<RtShared>,
     capture: Option<Arc<Mutex<Vec<Tuple<Out>>>>>,
     t0: Instant,
-) -> RtFinal
-where
-    In: Payload + Default,
-    Out: Payload + Default,
-{
-    let _guard = StopGuard(shared.clone());
-    let clock = pipeline.clock.clone();
-    let mut ings: Vec<StretchIngress<In>> = std::mem::take(&mut pipeline.ingress);
-    let n_ing = ings.len();
-    let mut egress: Vec<EgressDriver<Tuple<Out>>> = std::mem::take(&mut pipeline.egress)
-        .into_iter()
-        .map(|r| EgressDriver::new(r, clock.clone()))
-        .collect();
-    // all drivers record into ONE histogram pair: end-to-end latency is
-    // a property of the whole topology, whichever sink a tuple exits
-    let (lat, lat_total) = (egress[0].latency_us.clone(), egress[0].latency_total_us.clone());
-    for d in egress.iter_mut().skip(1) {
-        d.latency_us = lat.clone();
-        d.latency_total_us = lat_total.clone();
-    }
-
-    let n_stages = pipeline.depth();
-    let mut tracks: Vec<StageTrack> = (0..n_stages)
-        .map(|k| StageTrack {
-            last_snap: MetricsSnapshot::default(),
-            prev_loads: vec![0; pipeline.stages[k].max_parallelism()],
-            samples: Vec::new(),
-        })
-        .collect();
-
-    let duration_s = cfg.schedule.duration_s();
-    let mut pending_event_tuples = 0.0f64;
-    let mut event_ms_total: f64 = 0.0;
+    clock: EngineClock,
+    ings: Vec<StretchIngress<In>>,
+    n_ing: usize,
+    egress: Vec<EgressDriver<Tuple<Out>>>,
+    // all egress drivers record into ONE histogram pair: end-to-end
+    // latency is a property of the whole topology, whichever sink a
+    // tuple exits
+    lat: Arc<Histogram>,
+    lat_total: Arc<Histogram>,
+    tracks: Vec<StageTrack>,
+    duration_s: u32,
+    pending_event_tuples: f64,
+    event_ms_total: f64,
     // per-tick feed runs, one per ingress wrapper (round-robin split so
     // EVERY wrapper's gate clock advances every tick), each handed over
     // via one batched add (§Perf). A wrapper whose slot is decommissioned
     // under us (`Err(Inactive)`) leaves the rotation; its residual is
     // counted in `ingress_dropped`, never silently discarded.
-    let mut feed_bufs: Vec<Vec<Tuple<In>>> = (0..n_ing).map(|_| Vec::new()).collect();
-    let mut alive: Vec<bool> = vec![true; n_ing];
-    let mut n_alive = n_ing;
-    let mut ingress_dropped = 0u64;
-    let mut fed = 0u64;
-    let mut max_fed_ts: EventTime = 0;
-    let mut rr = 0usize;
-    let mut rate_override: Option<f64> = None;
+    feed_bufs: Vec<Vec<Tuple<In>>>,
+    alive: Vec<bool>,
+    n_alive: usize,
+    ingress_dropped: u64,
+    fed: u64,
+    max_fed_ts: EventTime,
+    rr: usize,
+    rate_override: Option<f64>,
     // event second the current rate override took effect
-    let mut override_from_s: u32 = 0;
-    let mut pending_tickets: Vec<(usize, Epoch, ReconfigTicket)> = Vec::new();
-
-    // wall tick: 20 ms of *wall* time per loop iteration
-    let wall_tick = Duration::from_millis(20);
-    let mut next_tick = t0;
-    let mut next_sample_s: u32 = 1;
-    let mut eos = false;
-    let mut quiesce_at: Option<Instant> = None;
-    let mut drain_deadline: Option<Instant> = None;
+    override_from_s: u32,
+    pending_tickets: Vec<(usize, Epoch, ReconfigTicket)>,
+    next_sample_s: u32,
+    eos: bool,
+    quiesce_at: Option<Instant>,
+    drain_deadline: Option<Instant>,
     // extend the drain while output still arrives, in `quiet` increments
-    let quiet = cfg.drain.min(Duration::from_millis(200));
-    let stall_after_us = cfg.stall_after_ms.saturating_mul(1_000);
+    quiet: Duration,
+    stall_after_us: u64,
+    finalized: bool,
+}
 
-    loop {
-        if shared.stop.load(Ordering::Acquire) {
-            break;
+impl<In: Payload + Default, Out: Payload + Default> JobRuntime<In, Out> {
+    fn new(
+        mut pipeline: Pipeline<In, Out>,
+        source: Box<dyn PacedSource<In>>,
+        cfg: LaunchConfig,
+        shared: Arc<RtShared>,
+        capture: Option<Arc<Mutex<Vec<Tuple<Out>>>>>,
+        t0: Instant,
+    ) -> Self {
+        let clock = pipeline.clock.clone();
+        let ings: Vec<StretchIngress<In>> = std::mem::take(&mut pipeline.ingress);
+        let n_ing = ings.len();
+        let mut egress: Vec<EgressDriver<Tuple<Out>>> = std::mem::take(&mut pipeline.egress)
+            .into_iter()
+            .map(|r| EgressDriver::new(r, clock.clone()))
+            .collect();
+        let (lat, lat_total) =
+            (egress[0].latency_us.clone(), egress[0].latency_total_us.clone());
+        for d in egress.iter_mut().skip(1) {
+            d.latency_us = lat.clone();
+            d.latency_total_us = lat_total.clone();
         }
-        let wall_s = t0.elapsed().as_secs_f64();
-        let event_s = wall_s * cfg.time_scale;
-        let cur_rate = rate_override.unwrap_or_else(|| cfg.schedule.rate_at(event_s as u32));
+        let tracks: Vec<StageTrack> = (0..pipeline.depth())
+            .map(|k| StageTrack {
+                last_snap: MetricsSnapshot::default(),
+                prev_loads: vec![0; pipeline.stages[k].max_parallelism()],
+                samples: Vec::new(),
+            })
+            .collect();
+        let duration_s = cfg.schedule.duration_s();
+        let quiet = cfg.drain.min(Duration::from_millis(200));
+        let stall_after_us = cfg.stall_after_ms.saturating_mul(1_000);
+        JobRuntime {
+            pipeline,
+            source,
+            cfg,
+            shared,
+            capture,
+            t0,
+            clock,
+            ings,
+            n_ing,
+            egress,
+            lat,
+            lat_total,
+            tracks,
+            duration_s,
+            pending_event_tuples: 0.0,
+            event_ms_total: 0.0,
+            feed_bufs: (0..n_ing).map(|_| Vec::new()).collect(),
+            alive: vec![true; n_ing],
+            n_alive: n_ing,
+            ingress_dropped: 0,
+            fed: 0,
+            max_fed_ts: 0,
+            rr: 0,
+            rate_override: None,
+            override_from_s: 0,
+            pending_tickets: Vec::new(),
+            next_sample_s: 1,
+            eos: false,
+            quiesce_at: None,
+            drain_deadline: None,
+            quiet,
+            stall_after_us,
+            finalized: false,
+        }
+    }
 
-        if !eos && event_s < duration_s as f64 && !source.exhausted() {
-            source.set_rate(cur_rate);
+    /// Hand every non-empty feed run to its ingress wrapper, retiring
+    /// wrappers decommissioned under us.
+    fn flush_feed(&mut self) {
+        for (i, buf) in self.feed_bufs.iter_mut().enumerate() {
+            if self.alive[i] && !buf.is_empty() && self.ings[i].add_batch(buf).is_err() {
+                self.ingress_dropped += buf.len() as u64;
+                buf.clear();
+                self.alive[i] = false;
+                self.n_alive -= 1;
+            }
+        }
+    }
+
+    fn run_tick(&mut self) {
+        let wall_s = self.t0.elapsed().as_secs_f64();
+        let event_s = wall_s * self.cfg.time_scale;
+        let cur_rate =
+            self.rate_override.unwrap_or_else(|| self.cfg.schedule.rate_at(event_s as u32));
+
+        if !self.eos && event_s < self.duration_s as f64 && !self.source.exhausted() {
+            self.source.set_rate(cur_rate);
             // feed the tuples that belong to this tick
-            let tick_event_s = wall_tick.as_secs_f64() * cfg.time_scale;
-            pending_event_tuples += cur_rate * tick_event_s;
-            let n = pending_event_tuples.floor() as usize;
-            pending_event_tuples -= n as f64;
-            event_ms_total += tick_event_s * 1e3;
-            let ingress_batch = cfg.ingress_batch.max(1);
+            let tick_event_s = RUNTIME_TICK.as_secs_f64() * self.cfg.time_scale;
+            self.pending_event_tuples += cur_rate * tick_event_s;
+            let n = self.pending_event_tuples.floor() as usize;
+            self.pending_event_tuples -= n as f64;
+            self.event_ms_total += tick_event_s * 1e3;
+            let ingress_batch = self.cfg.ingress_batch.max(1);
             for _ in 0..n {
-                if source.exhausted() {
+                if self.source.exhausted() {
                     break;
                 }
-                let mut t = source.next();
-                t.ingest_us = clock.now_us();
-                max_fed_ts = max_fed_ts.max(t.ts);
-                fed += 1;
-                if n_alive == 0 {
-                    ingress_dropped += 1; // every wrapper decommissioned
+                let mut t = self.source.next();
+                t.ingest_us = self.clock.now_us();
+                self.max_fed_ts = self.max_fed_ts.max(t.ts);
+                self.fed += 1;
+                if self.n_alive == 0 {
+                    self.ingress_dropped += 1; // every wrapper decommissioned
                     continue;
                 }
-                while !alive[rr] {
-                    rr = (rr + 1) % n_ing;
+                while !self.alive[self.rr] {
+                    self.rr = (self.rr + 1) % self.n_ing;
                 }
-                feed_bufs[rr].push(t);
-                if feed_bufs[rr].len() >= ingress_batch
-                    && ings[rr].add_batch(&mut feed_bufs[rr]).is_err()
+                let rr = self.rr;
+                self.feed_bufs[rr].push(t);
+                if self.feed_bufs[rr].len() >= ingress_batch
+                    && self.ings[rr].add_batch(&mut self.feed_bufs[rr]).is_err()
                 {
                     // decommissioned mid-run: retire the wrapper from the
                     // rotation and account for the lost residual
-                    ingress_dropped += feed_bufs[rr].len() as u64;
-                    feed_bufs[rr].clear();
-                    alive[rr] = false;
-                    n_alive -= 1;
+                    self.ingress_dropped += self.feed_bufs[rr].len() as u64;
+                    self.feed_bufs[rr].clear();
+                    self.alive[rr] = false;
+                    self.n_alive -= 1;
                 }
-                rr = (rr + 1) % n_ing;
+                self.rr = (self.rr + 1) % self.n_ing;
             }
-            for (i, buf) in feed_bufs.iter_mut().enumerate() {
-                if alive[i] && !buf.is_empty() && ings[i].add_batch(buf).is_err() {
-                    ingress_dropped += buf.len() as u64;
-                    buf.clear();
-                    alive[i] = false;
-                    n_alive -= 1;
-                }
-            }
+            self.flush_feed();
         }
 
         // drain every egress reader (an undrained sink gate would fill to
         // capacity and stall its stage)
         let mut polled = 0usize;
-        for d in egress.iter_mut() {
-            polled += match &capture {
+        for d in self.egress.iter_mut() {
+            polled += match &self.capture {
                 Some(cap) => {
                     let mut grabbed: Vec<Tuple<Out>> = Vec::new();
                     let n = d.poll_tuples(&mut |t| grabbed.push(t.clone()));
@@ -946,12 +1147,12 @@ where
         }
 
         // per-event-second sampling, every stage
-        while (next_sample_s as f64) <= event_s && next_sample_s <= duration_s {
-            for (k, tr) in tracks.iter_mut().enumerate() {
-                let stage = &pipeline.stages[k];
+        while (self.next_sample_s as f64) <= event_s && self.next_sample_s <= self.duration_s {
+            for (k, tr) in self.tracks.iter_mut().enumerate() {
+                let stage = &self.pipeline.stages[k];
                 let metrics = stage.metrics();
                 let snap = metrics.snapshot();
-                let dt = 1.0 / cfg.time_scale; // wall seconds per event second
+                let dt = 1.0 / self.cfg.time_scale; // wall seconds per event second
                 let rates = snap.rates_since(&tr.last_snap, dt);
                 let active = stage.active_instances();
                 // per-interval load CV (Fig. 9 right): deltas, active set only
@@ -975,31 +1176,32 @@ where
                 // Every active instance reads (and counts) every gate
                 // tuple, so the summed rate is m× the true arrival rate;
                 // dividing by the active count recovers arrivals.
-                let arrival_tps = rates.in_tps / cfg.time_scale / active.len().max(1) as f64;
+                let arrival_tps =
+                    rates.in_tps / self.cfg.time_scale / active.len().max(1) as f64;
                 tr.samples.push(RunSample {
-                    t_s: next_sample_s,
+                    t_s: self.next_sample_s,
                     // With ONE ingress wrapper, stage 0 is offered the
                     // whole schedule. With several wrappers the runtime
                     // cannot map wrappers to source stages (a DAG may
                     // have several), so every stage reports its measured
                     // arrival rate instead of a guessed split.
-                    offered_tps: if k == 0 && n_ing == 1 {
+                    offered_tps: if k == 0 && self.n_ing == 1 {
                         // the override only describes seconds at/after it
                         // landed — a catch-up sample of an earlier second
                         // reports what the schedule actually offered then
-                        match rate_override {
-                            Some(r) if next_sample_s - 1 >= override_from_s => r,
-                            _ => cfg.schedule.rate_at(next_sample_s - 1),
+                        match self.rate_override {
+                            Some(r) if self.next_sample_s - 1 >= self.override_from_s => r,
+                            _ => self.cfg.schedule.rate_at(self.next_sample_s - 1),
                         }
                     } else {
                         arrival_tps
                     },
                     // rates are per wall second; report per *event* second
                     in_tps: arrival_tps,
-                    out_tps: rates.out_tps / cfg.time_scale,
-                    cmp_per_s: rates.cmp_per_s / cfg.time_scale,
-                    latency_p50_us: lat.p50(),
-                    latency_mean_us: lat.mean(),
+                    out_tps: rates.out_tps / self.cfg.time_scale,
+                    cmp_per_s: rates.cmp_per_s / self.cfg.time_scale,
+                    latency_p50_us: self.lat.p50(),
+                    latency_mean_us: self.lat.mean(),
                     threads: active.len(),
                     backlog: stage.in_backlog(),
                     load_cv_pct: cv,
@@ -1009,27 +1211,27 @@ where
             }
             // end-to-end latency is a property of the whole topology; the
             // per-second histogram resets once all stages sampled it
-            lat.reset();
+            self.lat.reset();
             {
-                let mut m = shared.metrics.lock().unwrap();
-                for (k, tr) in tracks.iter().enumerate() {
+                let mut m = self.shared.metrics.lock().unwrap();
+                for (k, tr) in self.tracks.iter().enumerate() {
                     if let Some(&s) = tr.samples.last() {
                         m.stages[k].last = s;
                     }
                 }
             }
-            next_sample_s += 1;
+            self.next_sample_s += 1;
         }
 
         // control surface: apply queued commands...
         let cmds: Vec<Cmd> = {
-            let mut q = shared.cmds.lock().unwrap();
+            let mut q = self.shared.cmds.lock().unwrap();
             q.drain(..).collect()
         };
         for c in cmds {
             match c {
                 Cmd::Scale { stage, target, ticket } => {
-                    if eos {
+                    if self.eos {
                         // after the end-of-stream heartbeats no watermark
                         // will ever pass a new control tuple, so the
                         // reconfiguration could never complete — reject
@@ -1042,8 +1244,8 @@ where
                     // through the same pool semantics scale_to applies)
                     let set = match &target {
                         ScaleTarget::Count(n) => crate::elastic::resize_instance_set(
-                            &pipeline.stages[stage].active_instances(),
-                            pipeline.stages[stage].max_parallelism(),
+                            &self.pipeline.stages[stage].active_instances(),
+                            self.pipeline.stages[stage].max_parallelism(),
                             *n,
                         ),
                         ScaleTarget::Set(set) => set.clone(),
@@ -1051,73 +1253,70 @@ where
                     // dead slots are terminal: an epoch containing one
                     // would wait forever for a worker that processes
                     // nothing — refuse up front
-                    let has_dead = pipeline.stages[stage].worker_health().is_some_and(|h| {
-                        set.iter().any(|&i| {
-                            i < h.len() && h.state(i) == crate::engine::WorkerState::Dead
-                        })
-                    });
+                    let has_dead =
+                        self.pipeline.stages[stage].worker_health().is_some_and(|h| {
+                            set.iter().any(|&i| {
+                                i < h.len() && h.state(i) == crate::engine::WorkerState::Dead
+                            })
+                        });
                     if has_dead {
                         ticket.reject(RejectReason::DeadInstance);
                         continue;
                     }
                     let mapper = Mapper::over(set.clone());
-                    let epoch = pipeline.stages[stage].reconfigure(set, mapper);
+                    let epoch = self.pipeline.stages[stage].reconfigure(set, mapper);
                     ticket.issue(epoch);
-                    pending_tickets.push((stage, epoch, ticket));
+                    self.pending_tickets.push((stage, epoch, ticket));
                 }
-                Cmd::SetWorkerBatch { stage, n } => pipeline.stages[stage].set_worker_batch(n),
+                Cmd::SetWorkerBatch { stage, n } => {
+                    self.pipeline.stages[stage].set_worker_batch(n)
+                }
                 Cmd::InjectFault { stage, worker, fault } => {
-                    if let Some(h) = pipeline.stages[stage].worker_health() {
+                    if let Some(h) = self.pipeline.stages[stage].worker_health() {
                         if worker < h.len() {
                             h.inject(worker, fault);
                         }
                     }
                 }
                 Cmd::SetRate(tps) => {
-                    rate_override = Some(tps);
+                    self.rate_override = Some(tps);
                     // remember WHEN it took effect: catch-up samples of
                     // earlier seconds must not retroactively report it
-                    override_from_s = event_s as u32;
+                    self.override_from_s = event_s as u32;
                 }
             }
         }
         // ...then resolve tickets whose reconfiguration completed
-        resolve_completed(&mut pending_tickets, &pipeline.stages);
+        resolve_completed(&mut self.pending_tickets, &self.pipeline.stages);
 
         // end of stream: the schedule ran out, or a finite source ran dry
-        if !eos && (event_s >= duration_s as f64 + 0.1 || source.exhausted()) {
+        if !self.eos && (event_s >= self.duration_s as f64 + 0.1 || self.source.exhausted()) {
             // flush residual feed runs before the final heartbeat
-            for (i, buf) in feed_bufs.iter_mut().enumerate() {
-                if alive[i] && !buf.is_empty() && ings[i].add_batch(buf).is_err() {
-                    ingress_dropped += buf.len() as u64;
-                    buf.clear();
-                    alive[i] = false;
-                    n_alive -= 1;
-                }
-            }
+            self.flush_feed();
             // end-of-stream heartbeat on EVERY ingress wrapper (workers
             // forward it stage to stage; a silent wrapper would hold back
             // every downstream watermark)
-            let horizon = (event_ms_total as EventTime).max(max_fed_ts) + cfg.flush_slack_ms;
-            for (i, ing) in ings.iter_mut().enumerate() {
-                if alive[i] {
+            let horizon =
+                (self.event_ms_total as EventTime).max(self.max_fed_ts) + self.cfg.flush_slack_ms;
+            for (i, ing) in self.ings.iter_mut().enumerate() {
+                if self.alive[i] {
                     let _ = ing.heartbeat(horizon); // heartbeats carry no data
                 }
             }
-            eos = true;
-            quiesce_at = Some(Instant::now() + cfg.drain);
+            self.eos = true;
+            self.quiesce_at = Some(Instant::now() + self.cfg.drain);
             // hard ceiling on the whole drain window: trickling output
             // may extend the quiesce, but never past this deadline
-            drain_deadline = Some(Instant::now() + cfg.drain_cap.max(cfg.drain));
-            set_phase(&shared, JobPhase::Draining);
+            self.drain_deadline = Some(Instant::now() + self.cfg.drain_cap.max(self.cfg.drain));
+            set_phase(&self.shared, JobPhase::Draining);
         }
-        if eos && polled > 0 {
-            if let Some(at) = quiesce_at.as_mut() {
+        if self.eos && polled > 0 {
+            if let Some(at) = self.quiesce_at.as_mut() {
                 // output still arriving: hold the quiesce back a little
                 // (bounded by the drain cap — a sink that never goes
                 // quiet must not hold quiesce forever)
-                let mut earliest = Instant::now() + quiet;
-                if let Some(cap) = drain_deadline {
+                let mut earliest = Instant::now() + self.quiet;
+                if let Some(cap) = self.drain_deadline {
                     earliest = earliest.min(cap);
                 }
                 if earliest > *at {
@@ -1125,10 +1324,10 @@ where
                 }
             }
         }
-        if let Some(at) = quiesce_at {
+        if let Some(at) = self.quiesce_at {
             if Instant::now() >= at {
-                set_phase(&shared, JobPhase::Quiesced);
-                quiesce_at = None;
+                set_phase(&self.shared, JobPhase::Quiesced);
+                self.quiesce_at = None;
             }
         }
 
@@ -1136,7 +1335,9 @@ where
         // dead (self-marked on a caught panic) and stalled (progress
         // epoch unchanged past the stall window while backlog is
         // nonzero). Runs every tick, so detection latency is one tick.
-        let health: Vec<StageHealth> = pipeline
+        let stall_after_us = self.stall_after_us;
+        let health: Vec<StageHealth> = self
+            .pipeline
             .stages
             .iter()
             .map(|s| {
@@ -1168,14 +1369,14 @@ where
 
         // publish the live view
         {
-            let phase = *shared.phase.lock().unwrap();
-            let mut m = shared.metrics.lock().unwrap();
+            let phase = *self.shared.phase.lock().unwrap();
+            let mut m = self.shared.metrics.lock().unwrap();
             m.offered_tps = cur_rate;
-            m.fed = fed;
-            m.ingress_dropped = ingress_dropped;
-            m.egress_count = egress.iter().map(|d| d.count).sum();
+            m.fed = self.fed;
+            m.ingress_dropped = self.ingress_dropped;
+            m.egress_count = self.egress.iter().map(|d| d.count).sum();
             m.phase = phase;
-            for (k, s) in pipeline.stages.iter().enumerate() {
+            for (k, s) in self.pipeline.stages.iter().enumerate() {
                 let sm = &mut m.stages[k];
                 sm.active = s.active_instances();
                 sm.backlog = s.in_backlog();
@@ -1183,44 +1384,65 @@ where
                 sm.health = health[k].clone();
             }
         }
+    }
 
-        next_tick += wall_tick;
-        let now = Instant::now();
-        if next_tick > now {
-            // lint: allow(sleep) — wall-clock pacing of the runtime tick
-            // (feed/sample cadence), not a data-plane wait: nothing can
-            // arrive earlier than the next scheduled tick.
-            std::thread::sleep(next_tick - now);
-        } else {
-            next_tick = now; // fell behind: don't try to catch up the wall
+    fn finish(&mut self) {
+        if self.finalized {
+            return;
         }
-    }
-
-    // finalize: one last ticket sweep, then give up on the rest — a
-    // reconfiguration that has not completed by shutdown never will
-    resolve_completed(&mut pending_tickets, &pipeline.stages);
-    for (_, _, ticket) in pending_tickets {
-        ticket.kill();
-    }
-    for c in shared.cmds.lock().unwrap().drain(..) {
-        if let Cmd::Scale { ticket, .. } = c {
+        self.finalized = true;
+        // one last ticket sweep, then give up on the rest — a
+        // reconfiguration that has not completed by shutdown never will
+        resolve_completed(&mut self.pending_tickets, &self.pipeline.stages);
+        for (_, _, ticket) in self.pending_tickets.drain(..) {
             ticket.kill();
         }
+        for c in self.shared.cmds.lock().unwrap().drain(..) {
+            if let Cmd::Scale { ticket, .. } = c {
+                ticket.kill();
+            }
+        }
+        let latency_p50_us = self.lat_total.p50();
+        let latency_mean_us = self.lat_total.mean();
+        let egress_count = self.egress.iter().map(|d| d.count).sum();
+        let stages = std::mem::take(&mut self.tracks)
+            .into_iter()
+            .enumerate()
+            .map(|(k, tr)| StageRunStats {
+                name: self.pipeline.stages[k].name(),
+                samples: tr.samples,
+                reconfigs: self.pipeline.stages[k].completion_times(),
+            })
+            .collect();
+        self.pipeline.shutdown();
+        *self.shared.fin.lock().unwrap() = Some(RtFinal {
+            stages,
+            egress_count,
+            ingress_dropped: self.ingress_dropped,
+            latency_p50_us,
+            latency_mean_us,
+        });
+        // the phase flip wakes shutdown()'s wait AFTER fin is published
+        set_phase(&self.shared, JobPhase::Stopped);
     }
-    let latency_p50_us = lat_total.p50();
-    let latency_mean_us = lat_total.mean();
-    let egress_count = egress.iter().map(|d| d.count).sum();
-    let stages = tracks
-        .into_iter()
-        .enumerate()
-        .map(|(k, tr)| StageRunStats {
-            name: pipeline.stages[k].name(),
-            samples: tr.samples,
-            reconfigs: pipeline.stages[k].completion_times(),
-        })
-        .collect();
-    pipeline.shutdown();
-    RtFinal { stages, egress_count, ingress_dropped, latency_p50_us, latency_mean_us }
+}
+
+impl<In: Payload + Default, Out: Payload + Default> JobTicker for JobRuntime<In, Out> {
+    fn tick(&mut self) {
+        self.run_tick();
+    }
+
+    fn stop_requested(&self) -> bool {
+        self.shared.stop_requested()
+    }
+
+    fn finalize(&mut self) {
+        self.finish();
+    }
+
+    fn shared(&self) -> Arc<RtShared> {
+        self.shared.clone()
+    }
 }
 
 #[cfg(test)]

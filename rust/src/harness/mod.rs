@@ -32,6 +32,7 @@
 pub mod faults;
 pub mod handle;
 pub mod policy;
+pub mod server;
 
 pub use faults::{FaultAction, FaultPlan, FaultPolicy, FaultStep};
 pub use handle::{
@@ -43,6 +44,10 @@ pub use policy::{
     drive, AdaptiveBatchPolicy, ControllerPolicy, DagControllerPolicy, JobPolicy, RateStepPolicy,
     RecoveryKind, RecoveryLog, RecoveryOutcome, RecoveryTicket, ScriptedScalePolicy,
     SupervisorConfig, SupervisorPolicy,
+};
+pub use server::{
+    serve_from_config, Admission, JobId, JobServer, Rebalance, ServerJobView, ServerMetrics,
+    ServerOutcome,
 };
 
 use crate::config::{BatchTuning, Config, FaultsConfig, PlacementConfig};
@@ -324,6 +329,7 @@ impl fmt::Display for HarnessError {
 impl std::error::Error for HarnessError {}
 
 /// Per-stage outcome of a pipeline run.
+#[derive(Clone)]
 pub struct StageRunStats {
     pub name: &'static str,
     pub samples: Vec<RunSample>,
@@ -332,6 +338,7 @@ pub struct StageRunStats {
 }
 
 /// Result of a pipeline run.
+#[derive(Clone)]
 pub struct PipelineRunResult {
     pub stages: Vec<StageRunStats>,
     /// Data tuples drained at the final egress.
@@ -639,6 +646,16 @@ fn check_job_section_keys(cfg: &Config) -> Result<(), JobError> {
                 }
             }
         }
+        // a server config handed to the single-job path deserves a
+        // pointer at the right verb, not a generic unknown-section error
+        if k.starts_with("server.") || k.starts_with("job.") {
+            return Err(JobError::BadValue {
+                key: k.to_string(),
+                msg: "this looks like a JobServer config (`[server]`/`[job.<name>]`) — \
+                      run it with `stretch serve`, not `stretch run`"
+                    .into(),
+            });
+        }
         // no known prefix matched: a misspelled section name would
         // silently drop the whole section — reject it by name
         return Err(JobError::BadValue {
@@ -751,8 +768,75 @@ pub fn stage_schedules(cfg: &Config, spec: &JobSpec) -> Result<Vec<StageSchedule
 /// phase by raising `time_scale` — the CI smoke knob (`stretch run
 /// --config job.conf --budget-ms 10`).
 pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, JobError> {
+    let prep = prepare_job(cfg, JobPrepOptions { budget_ms, ..Default::default() })?;
+    let handle = prep.job.launch().map_err(JobError::Harness)?;
+    let mut policies = prep.policies;
+    // drive() returns once the job has quiesced
+    drive(&handle, &mut policies);
+    let mut out = handle.shutdown();
+    if let Some(log) = prep.recovery_log {
+        // anything still open when the run ended never healed — a chaos
+        // run must not report an unresolved ticket as success
+        log.close_unresolved();
+        out.recoveries = log.tickets();
+        out.degraded = log.degraded();
+    }
+    Ok(out)
+}
+
+/// Options steering [`prepare_job`] beyond what the config itself says —
+/// the deltas between the standalone `stretch run` path and a job
+/// prepared for the [`server::JobServer`].
+#[derive(Default)]
+pub(crate) struct JobPrepOptions {
+    /// Wall-clock cap for the paced phase (raises `time_scale`).
+    pub(crate) budget_ms: Option<u64>,
+    /// Server mode: the fleet-level [`crate::elastic::ServerController`]
+    /// owns cross-job scaling, so the sub-config's own `[elastic]`
+    /// `controller` choice is ignored instead of double-driving the same
+    /// stages from two controllers.
+    pub(crate) skip_elastic_controller: bool,
+    /// Server mode: socket affinity from `[job.<name>] socket`, applied
+    /// to every stage that doesn't pin one itself so co-resident jobs
+    /// keep to their own NUMA domain.
+    pub(crate) socket: Option<usize>,
+    /// Server mode: the `[job.<name>]` section key replaces the
+    /// sub-config's own `name`, keeping aggregate metrics unambiguous
+    /// when two jobs share a config file.
+    pub(crate) name_override: Option<String>,
+}
+
+/// A config-declared job, validated and built but not yet launched: the
+/// pipeline's worker threads are live and parked, the policy set is
+/// assembled, and the caller decides who drives it — [`run_job`] launches
+/// it onto its own runtime thread, the [`server::JobServer`] adopts it
+/// onto the shared one.
+pub(crate) struct PreparedJob {
+    pub(crate) job: Job<JobPayload, JobPayload>,
+    pub(crate) policies: Vec<Box<dyn JobPolicy>>,
+    pub(crate) recovery_log: Option<RecoveryLog>,
+    pub(crate) name: String,
+    pub(crate) n_stages: usize,
+    /// Σ per-stage max parallelism — the most the job could ever hold.
+    pub(crate) max_cores: usize,
+}
+
+/// The shared config→job construction path behind [`run_job`] and the
+/// server's `[job.<name>]` sub-configs: parse + validate the [`JobSpec`]
+/// and its `[schedule.<stage>]`/`[faults]` sections, assemble the policy
+/// set, plan placement, build the topology, and hand back the un-launched
+/// [`Job`] — every error fires BEFORE any runtime thread exists.
+pub(crate) fn prepare_job(cfg: &Config, opts: JobPrepOptions) -> Result<PreparedJob, JobError> {
     check_job_section_keys(cfg)?;
-    let spec = JobSpec::from_config(cfg)?;
+    let mut spec = JobSpec::from_config(cfg)?;
+    if let Some(name) = &opts.name_override {
+        spec.name = name.clone();
+    }
+    if let Some(socket) = opts.socket {
+        for st in &mut spec.stages {
+            st.socket.get_or_insert(socket);
+        }
+    }
     let schedules = stage_schedules(cfg, &spec)?;
     // resolve the generator BEFORE spawning anything — NoSource is a
     // pure config error and must not cost a topology spawn + teardown
@@ -827,7 +911,11 @@ pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, Jo
             policies.push(Box::new(AdaptiveBatchPolicy::new(k, bounds, period)));
         }
     }
-    match cfg.str_or("elastic.controller", "none") {
+    // server mode replaces the job's own controller with the fleet-level
+    // arbitration — "none" here, whatever the sub-config says
+    let controller_kind =
+        if opts.skip_elastic_controller { "none" } else { cfg.str_or("elastic.controller", "none") };
+    match controller_kind {
         "none" => {}
         "dag" => {
             let dc = DagController::new(cfg.int_or("elastic.cores", 8).max(1) as usize)
@@ -888,39 +976,33 @@ pub fn run_job(cfg: &Config, budget_ms: Option<u64>) -> Result<JobRunOutcome, Jo
     let built = spec.build_planned(plan.as_ref().filter(|_| placement.pin_workers))?;
     let max_ws = spec.stages.iter().map(|s| s.params.ws_ms).max().unwrap_or(1_000);
     let mut time_scale = cfg.float_or("run.time_scale", 1.0).max(1e-6);
-    if let Some(ms) = budget_ms {
+    if let Some(ms) = opts.budget_ms {
         time_scale = time_scale.max(schedule.duration_s() as f64 * 1000.0 / ms.max(1) as f64);
     }
-    let handle = Job::new(built.pipeline, source)
-        .with_config(LaunchConfig {
-            name: spec.name.clone(),
-            stage_names: built.stage_names.clone(),
-            schedule,
-            time_scale,
-            flush_slack_ms: cfg.int_or("run.flush_slack_ms", max_ws + 10_000),
-            drain: Duration::from_millis(cfg.int_or("run.drain_ms", 500).max(0) as u64),
-            ingress_batch: batch.ingress,
-            capture_egress: false,
-            pin_core: plan
-                .as_ref()
-                .and_then(|p| p.runtime_core)
-                .filter(|_| placement.pin_runtime),
-            stall_after_ms: faults.stall_after_ms,
-            ..LaunchConfig::default()
-        })
-        .launch()
-        .map_err(JobError::Harness)?;
-    // drive() returns once the job has quiesced
-    drive(&handle, &mut policies);
-    let mut out = handle.shutdown();
-    if let Some(log) = recovery_log {
-        // anything still open when the run ended never healed — a chaos
-        // run must not report an unresolved ticket as success
-        log.close_unresolved();
-        out.recoveries = log.tickets();
-        out.degraded = log.degraded();
-    }
-    Ok(out)
+    let job = Job::new(built.pipeline, source).with_config(LaunchConfig {
+        name: spec.name.clone(),
+        stage_names: built.stage_names.clone(),
+        schedule,
+        time_scale,
+        flush_slack_ms: cfg.int_or("run.flush_slack_ms", max_ws + 10_000),
+        drain: Duration::from_millis(cfg.int_or("run.drain_ms", 500).max(0) as u64),
+        ingress_batch: batch.ingress,
+        capture_egress: false,
+        pin_core: plan
+            .as_ref()
+            .and_then(|p| p.runtime_core)
+            .filter(|_| placement.pin_runtime),
+        stall_after_ms: faults.stall_after_ms,
+        ..LaunchConfig::default()
+    });
+    Ok(PreparedJob {
+        job,
+        policies,
+        recovery_log,
+        name: spec.name.clone(),
+        n_stages,
+        max_cores: spec.stages.iter().map(|s| s.max).sum(),
+    })
 }
 
 #[cfg(test)]

@@ -33,7 +33,7 @@ pub trait JobPolicy: Send {
 /// schedule rate only describes stage 0 when a single ingress wrapper
 /// feeds it the whole stream; otherwise the measured arrival rate is the
 /// controller's load estimate.
-fn observation(m: &JobMetrics, stage: usize, period_s: u32) -> Observation {
+pub(crate) fn observation(m: &JobMetrics, stage: usize, period_s: u32) -> Observation {
     let st = &m.stages[stage];
     Observation {
         in_rate: if stage == 0 && m.ingress == 1 { m.offered_tps } else { st.last.in_tps },

@@ -1,0 +1,855 @@
+//! The multi-job server: N declarative jobs on ONE shared runtime
+//! thread, under ONE global core budget.
+//!
+//! STRETCH's elasticity story is per-job — a topology stretches across
+//! however many cores its controller grants (§8.4-§8.5). A real
+//! deployment runs *several* such jobs on one machine, and that is where
+//! virtual shared-nothing earns its keep twice over: because
+//! reconfiguration moves no state and completes in milliseconds
+//! ([`ReconfigTicket`]), cores can be re-arbitrated *between* jobs at
+//! the same cadence a single job scales, with the same mechanism. This
+//! module is that fleet layer:
+//!
+//! * **One runtime thread for N jobs.** [`Job::launch`] gives every job
+//!   its own drive thread; the server instead adopts each launched
+//!   job's [`JobTicker`] onto a single `stretch-server` loop that
+//!   interleaves `tick()`s at the shared [`RUNTIME_TICK`] cadence — the
+//!   runtime overhead of a job is a list entry, not a thread.
+//! * **A global core budget.** A fleet-level
+//!   [`ServerController`] (the [`crate::elastic::DagController`] wave
+//!   generalized across jobs) re-runs shrink-then-grant over every
+//!   *(job, stage)* pair each period: weighted by [`JobShare::weight`],
+//!   floored by [`JobShare::min_cores`], forced-fit when the fleet is
+//!   over budget. Every cross-job move is an ordinary epoch
+//!   reconfiguration on some stage — no state transfer, ever.
+//! * **Admission control.** [`JobServer::submit`] refuses a job whose
+//!   minimum footprint (one core per stage, raised by `min_cores`)
+//!   cannot fit in the unclaimed budget, *before* the job is adopted —
+//!   a refused job never competes for cores.
+//! * **An aggregate surface.** [`JobServer::metrics`] rolls every live
+//!   job's [`JobMetrics`] (and open [`RecoveryTicket`]s) into one
+//!   [`ServerMetrics`]; [`JobServer::rebalances`] exposes every
+//!   cross-job reconfiguration the arbiter issued, with its measured
+//!   latency, for `BENCH_server.json`.
+//!
+//! The declarative face is [`serve_from_config`]: a `[server]` section
+//! (budget, arbitration period, thresholds) plus one `[job.<name>]`
+//! section per job referencing an ordinary single-job config — the
+//! `stretch serve` CLI verb wraps it.
+
+use super::handle::{JobTicker, StopGuard, RUNTIME_TICK};
+use super::policy::observation;
+use super::{
+    prepare_job, Job, JobCtl, JobHandle, JobMetrics, JobPhase, JobPolicy, JobPrepOptions,
+    JobRunOutcome, KeyKind, ReconfigTicket, RecoveryLog, RecoveryTicket, QUIESCE_CAP,
+};
+use crate::config::{Config, ConfigValue, ServerConfig};
+use crate::elastic::{Decision, JobShare, Observation, ServerController};
+use crate::engine::job::JobError;
+use crate::tuple::Tuple;
+use crate::workloads::registry::JobPayload;
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Opaque identifier of a submitted job, unique within its server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(u64);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// Why [`JobServer::submit`] refused a job. Admission failures are
+/// *pre-launch* by contract: a rejected job's pipeline is torn down
+/// before this value is returned, and nothing of it reaches the runtime
+/// loop or the core arbiter.
+#[derive(Clone, Debug)]
+pub enum Admission {
+    /// The job's minimum footprint does not fit the unclaimed budget
+    /// (or the built topology could not be driven at all).
+    Rejected { reason: String },
+}
+
+impl fmt::Display for Admission {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Admission::Rejected { reason } => write!(f, "admission rejected: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for Admission {}
+
+/// One cross-job reconfiguration the server's core arbiter issued — an
+/// ordinary epoch reconfiguration on one stage of one job, observable
+/// through its [`ReconfigTicket`] like any handle-issued scale.
+#[derive(Clone)]
+pub struct Rebalance {
+    pub job: JobId,
+    pub job_name: String,
+    /// Stage index within the job (topological order).
+    pub stage: usize,
+    pub ticket: ReconfigTicket,
+}
+
+/// One live job's slice of the aggregate view.
+pub struct ServerJobView {
+    pub id: JobId,
+    pub name: String,
+    pub metrics: JobMetrics,
+    /// Recovery tickets the job's supervisor has opened so far (empty
+    /// when the job runs unsupervised).
+    pub recoveries: Vec<RecoveryTicket>,
+}
+
+/// Point-in-time roll-up over every job still running on the server.
+pub struct ServerMetrics {
+    /// The global core budget the arbiter enforces.
+    pub budget: usize,
+    /// Σ active instances across every live job and stage.
+    pub used_cores: usize,
+    pub jobs: Vec<ServerJobView>,
+}
+
+/// Everything a finished server run produced: one [`JobRunOutcome`] per
+/// job (submission order) plus every cross-job rebalance the arbiter
+/// issued over the run's lifetime.
+pub struct ServerOutcome {
+    pub budget: usize,
+    pub jobs: Vec<(JobId, JobRunOutcome)>,
+    pub rebalances: Vec<Rebalance>,
+}
+
+/// A job as the server *loop* owns it: the type-erased ticker it paces,
+/// the control surface and policies it drives, and the share/footprint
+/// the arbiter and admission ledger account it under.
+struct ServerJob {
+    id: JobId,
+    name: String,
+    ctl: JobCtl,
+    rt: Box<dyn JobTicker>,
+    policies: Vec<Box<dyn JobPolicy>>,
+    share: JobShare,
+    /// Cores held against the admission ledger; released on retirement.
+    footprint: usize,
+    /// Wakes the job's waiters even if the server loop panics.
+    _guard: StopGuard,
+}
+
+/// State shared between the caller-facing [`JobServer`] and its loop.
+struct ServerShared {
+    /// Freshly submitted jobs, awaiting adoption by the loop.
+    inbox: Mutex<Vec<ServerJob>>,
+    /// Server-wide stop: the loop force-stops every remaining job, then
+    /// exits once the fleet has retired.
+    stop: AtomicBool,
+    /// Admission ledger: Σ footprint of every admitted, un-retired job.
+    /// Incremented by `submit` (under the lock that decides admission),
+    /// decremented by the loop when it retires a job.
+    committed: Mutex<usize>,
+    /// Every cross-job reconfiguration the arbiter issued.
+    rebalances: Mutex<Vec<Rebalance>>,
+}
+
+/// A job as the *caller* keeps it: the payload-typed handle (egress,
+/// shutdown) plus the recovery log to fold into its final outcome.
+struct JobEntry {
+    id: JobId,
+    name: String,
+    handle: JobHandle<JobPayload>,
+    recovery: Option<RecoveryLog>,
+    /// Cached once the job is stopped — a second stop returns this.
+    outcome: Option<JobRunOutcome>,
+}
+
+/// A multi-job runtime: submit jobs against a global core budget, read
+/// the aggregate view, stop jobs individually or shut the fleet down.
+/// All methods are `&self`; the server is shareable across threads.
+pub struct JobServer {
+    budget: usize,
+    period: Duration,
+    grow_backlog: u64,
+    shrink_backlog: u64,
+    cooldown_ticks: u32,
+    shared: Arc<ServerShared>,
+    /// The `stretch-server` loop thread, spawned on first submit.
+    thread: Mutex<Option<JoinHandle<()>>>,
+    jobs: Mutex<Vec<JobEntry>>,
+    next_id: AtomicU64,
+}
+
+impl JobServer {
+    /// A server arbitrating `budget` cores, with default thresholds
+    /// (grow ≥ 4096 backlog, shrink ≤ 64, 250 ms waves, 1-wave
+    /// per-job cooldown).
+    pub fn new(budget: usize) -> Self {
+        JobServer {
+            budget: budget.max(1),
+            period: Duration::from_millis(250),
+            grow_backlog: 4096,
+            shrink_backlog: 64,
+            cooldown_ticks: 1,
+            shared: Arc::new(ServerShared {
+                inbox: Mutex::new(Vec::new()),
+                stop: AtomicBool::new(false),
+                committed: Mutex::new(0),
+                rebalances: Mutex::new(Vec::new()),
+            }),
+            thread: Mutex::new(None),
+            jobs: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// Arbitration wave period (builder; set before the first submit).
+    pub fn with_period(mut self, period: Duration) -> Self {
+        self.period = period.max(Duration::from_millis(1));
+        self
+    }
+
+    /// Backlog thresholds of the fleet arbiter (builder).
+    pub fn with_thresholds(mut self, grow_backlog: u64, shrink_backlog: u64) -> Self {
+        self.grow_backlog = grow_backlog.max(1);
+        self.shrink_backlog = shrink_backlog;
+        self
+    }
+
+    /// Per-job wave cooldown of the fleet arbiter (builder).
+    pub fn with_cooldown(mut self, ticks: u32) -> Self {
+        self.cooldown_ticks = ticks;
+        self
+    }
+
+    /// The global core budget this server arbitrates.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Submit a built job under `share`. Admission: the job's minimum
+    /// footprint — one core per stage, raised to [`JobShare::min_cores`]
+    /// — must fit in the unclaimed budget, else the job is torn down and
+    /// refused. On admission the job is adopted by the shared runtime
+    /// loop (no per-job thread) and competes for cores from the next
+    /// arbitration wave on.
+    pub fn submit(
+        &self,
+        job: Job<JobPayload, JobPayload>,
+        share: JobShare,
+    ) -> Result<JobId, Admission> {
+        self.submit_with_policies(job, share, Vec::new(), None)
+    }
+
+    /// [`submit`](Self::submit) with a policy set (schedules, faults,
+    /// supervision) ticked by the server loop while the job runs, and an
+    /// optional recovery log folded into the job's final outcome.
+    pub fn submit_with_policies(
+        &self,
+        job: Job<JobPayload, JobPayload>,
+        share: JobShare,
+        policies: Vec<Box<dyn JobPolicy>>,
+        recovery: Option<RecoveryLog>,
+    ) -> Result<JobId, Admission> {
+        let depth = job.pipeline.depth();
+        let footprint = share.min_cores.max(depth).max(1);
+        {
+            let mut committed = self.shared.committed.lock().unwrap();
+            if *committed + footprint > self.budget {
+                let free = self.budget.saturating_sub(*committed);
+                drop(committed);
+                // refused before adoption: park nothing, leak nothing
+                let mut job = job;
+                job.pipeline.shutdown();
+                return Err(Admission::Rejected {
+                    reason: format!(
+                        "job needs {footprint} core(s) at minimum (min_cores {}, {} stage(s) \
+                         ≥ 1 core each) but only {free} of the {}-core budget remain",
+                        share.min_cores, depth, self.budget
+                    ),
+                });
+            }
+            *committed += footprint;
+        }
+        let name = job.cfg.name.clone();
+        let (handle, rt) = match job.launch_parts() {
+            Ok(parts) => parts,
+            Err(e) => {
+                *self.shared.committed.lock().unwrap() -= footprint;
+                return Err(Admission::Rejected { reason: format!("launch failed: {e}") });
+            }
+        };
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let guard = StopGuard::new(rt.shared());
+        self.shared.inbox.lock().unwrap().push(ServerJob {
+            id,
+            name: name.clone(),
+            ctl: handle.ctl(),
+            rt: Box::new(rt),
+            policies,
+            share,
+            footprint,
+            _guard: guard,
+        });
+        self.jobs.lock().unwrap().push(JobEntry {
+            id,
+            name,
+            handle,
+            recovery,
+            outcome: None,
+        });
+        self.ensure_started();
+        Ok(id)
+    }
+
+    /// Stop one job: drain it (wait for quiesce, capped at
+    /// [`QUIESCE_CAP`] so a wedged job cannot hold the server hostage),
+    /// then shut it down and return its outcome. The loop retires the
+    /// job and releases its cores back to the admission ledger.
+    /// Idempotent — a second stop returns the cached outcome. `None`
+    /// for an unknown id.
+    pub fn stop(&self, id: JobId) -> Option<JobRunOutcome> {
+        let ctl = {
+            let mut jobs = self.jobs.lock().unwrap();
+            let e = jobs.iter_mut().find(|e| e.id == id)?;
+            if let Some(out) = &e.outcome {
+                return Some(out.clone());
+            }
+            e.handle.ctl()
+        };
+        // drain OUTSIDE the registry lock: metrics()/submit() stay
+        // responsive while this job winds down
+        let _ = ctl.await_quiesce_timeout(QUIESCE_CAP);
+        let mut jobs = self.jobs.lock().unwrap();
+        let e = jobs.iter_mut().find(|e| e.id == id)?;
+        let mut out = e.handle.shutdown();
+        if let Some(log) = &e.recovery {
+            log.close_unresolved();
+            out.recoveries = log.tickets();
+            out.degraded = log.degraded();
+        }
+        e.outcome = Some(out.clone());
+        Some(out)
+    }
+
+    /// Aggregate view over every job still running: per-job
+    /// [`JobMetrics`] and open recovery tickets, plus the fleet-wide
+    /// core usage against the budget.
+    pub fn metrics(&self) -> ServerMetrics {
+        let jobs = self.jobs.lock().unwrap();
+        let mut views = Vec::new();
+        let mut used = 0usize;
+        for e in jobs.iter() {
+            if e.outcome.is_some() {
+                continue;
+            }
+            let m = e.handle.sample();
+            used += m.stages.iter().map(|s| s.active.len()).sum::<usize>();
+            let recoveries = e.recovery.as_ref().map(|l| l.tickets()).unwrap_or_default();
+            views.push(ServerJobView {
+                id: e.id,
+                name: e.name.clone(),
+                metrics: m,
+                recoveries,
+            });
+        }
+        ServerMetrics { budget: self.budget, used_cores: used, jobs: views }
+    }
+
+    /// Drain a job's captured egress (jobs launched with
+    /// `capture_egress`; empty otherwise or for an unknown id). Works
+    /// after [`stop`](Self::stop) — the handle retains the tail.
+    pub fn take_egress(&self, id: JobId) -> Vec<Tuple<JobPayload>> {
+        let jobs = self.jobs.lock().unwrap();
+        match jobs.iter().find(|e| e.id == id) {
+            Some(e) => e.handle.take_egress(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Every cross-job reconfiguration the arbiter has issued so far.
+    pub fn rebalances(&self) -> Vec<Rebalance> {
+        self.shared.rebalances.lock().unwrap().clone()
+    }
+
+    /// Shut the whole fleet down: stop every remaining job (those
+    /// already [`stop`](Self::stop)ped contribute their cached
+    /// outcomes), retire the loop thread, and return the per-job
+    /// outcomes plus the full rebalance record.
+    pub fn shutdown(self) -> ServerOutcome {
+        let mut out_jobs = Vec::new();
+        {
+            let mut jobs = self.jobs.lock().unwrap();
+            for e in jobs.iter_mut() {
+                let out = match e.outcome.take() {
+                    Some(o) => o,
+                    None => {
+                        let mut o = e.handle.shutdown();
+                        if let Some(log) = &e.recovery {
+                            log.close_unresolved();
+                            o.recoveries = log.tickets();
+                            o.degraded = log.degraded();
+                        }
+                        o
+                    }
+                };
+                out_jobs.push((e.id, out));
+            }
+        }
+        // ORDERING — Release pairs with the loop's Acquire load: the
+        // loop must observe the stop only after every job above has been
+        // asked to stop and published its outcome.
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+        let rebalances = self.shared.rebalances.lock().unwrap().clone();
+        ServerOutcome { budget: self.budget, jobs: out_jobs, rebalances }
+    }
+
+    fn ensure_started(&self) {
+        let mut t = self.thread.lock().unwrap();
+        if t.is_none() {
+            let shared = Arc::clone(&self.shared);
+            let budget = self.budget;
+            let period = self.period;
+            let (grow, shrink) = (self.grow_backlog, self.shrink_backlog);
+            let cooldown = self.cooldown_ticks;
+            *t = Some(
+                std::thread::Builder::new()
+                    .name("stretch-server".into())
+                    .spawn(move || server_loop(&shared, budget, period, grow, shrink, cooldown))
+                    .expect("spawn stretch-server thread"),
+            );
+        }
+    }
+}
+
+impl Drop for JobServer {
+    /// Abandon path (dropped without [`shutdown`](Self::shutdown)): the
+    /// loop force-stops and finalizes every remaining job, then exits —
+    /// no thread outlives the server. Idempotent after `shutdown`
+    /// (thread already taken). Job handles dropped afterwards find
+    /// their outcomes already published.
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The shared runtime loop: adopt, tick and retire jobs at the
+/// [`RUNTIME_TICK`] cadence, tick their policies, and run one fleet
+/// arbitration wave per `period`. Exits once a server-wide stop is
+/// observed and the last job has retired.
+fn server_loop(
+    shared: &Arc<ServerShared>,
+    budget: usize,
+    period: Duration,
+    grow_backlog: u64,
+    shrink_backlog: u64,
+    cooldown_ticks: u32,
+) {
+    let mut arbiter = ServerController::new(budget)
+        .with_thresholds(grow_backlog, shrink_backlog)
+        .with_cooldown(cooldown_ticks);
+    // Observation dt for the arbiter, in whole seconds (the backlog
+    // thresholds are dt-independent; sub-second waves just report 1 s).
+    let period_s = period.as_secs().max(1) as u32;
+    let mut live: Vec<ServerJob> = Vec::new();
+    let mut next_tick = Instant::now();
+    let mut next_wave = Instant::now() + period;
+    loop {
+        live.append(&mut shared.inbox.lock().unwrap());
+        // ORDERING — Acquire pairs with shutdown's Release store (see
+        // `JobServer::shutdown`).
+        let stopping = shared.stop.load(Ordering::Acquire);
+        if stopping {
+            for j in &live {
+                j.rt.shared().request_stop();
+            }
+        }
+        // retire stopped jobs: finalize (kill open tickets, shut the
+        // pipeline down, publish the final stats) and release their
+        // cores back to the admission ledger
+        live.retain_mut(|j| {
+            if j.rt.stop_requested() {
+                j.rt.finalize();
+                *shared.committed.lock().unwrap() -= j.footprint;
+                false
+            } else {
+                j.rt.tick();
+                true
+            }
+        });
+        if stopping && live.is_empty() && shared.inbox.lock().unwrap().is_empty() {
+            return;
+        }
+        // per-job policies, gated on the live phase exactly like the
+        // single-job `drive` loop
+        for j in &mut live {
+            let m = j.ctl.sample();
+            if m.phase == JobPhase::Running {
+                for p in &mut j.policies {
+                    p.tick(&m, &j.ctl);
+                }
+            }
+        }
+        let now = Instant::now();
+        if now >= next_wave {
+            next_wave += period;
+            arbitrate(&mut arbiter, &live, shared, period_s);
+        }
+        next_tick += RUNTIME_TICK;
+        let now = Instant::now();
+        if next_tick > now {
+            // lint: allow(sleep) — wall-clock pacing of the shared
+            // runtime tick (feed/sample cadence for every adopted job),
+            // not a data-plane wait: nothing can arrive earlier than the
+            // next scheduled tick.
+            std::thread::sleep(next_tick - now);
+        } else {
+            next_tick = now; // fell behind: don't try to catch up the wall
+        }
+    }
+}
+
+/// One fleet arbitration wave: sample every *running* job (draining jobs
+/// release their cores on retirement, not by wave), run the
+/// shrink-then-grant pass, and issue each move as an ordinary epoch
+/// reconfiguration on the owning job's stage.
+fn arbitrate(
+    arbiter: &mut ServerController,
+    live: &[ServerJob],
+    shared: &ServerShared,
+    period_s: u32,
+) {
+    let mut idx: Vec<usize> = Vec::new();
+    let mut fleet: Vec<(JobShare, Vec<Observation>)> = Vec::new();
+    for (i, j) in live.iter().enumerate() {
+        let m = j.ctl.sample();
+        if m.phase != JobPhase::Running {
+            continue;
+        }
+        let obs: Vec<Observation> =
+            (0..m.stages.len()).map(|k| observation(&m, k, period_s)).collect();
+        idx.push(i);
+        fleet.push((j.share, obs));
+    }
+    if fleet.is_empty() {
+        return;
+    }
+    let decisions = arbiter.tick(&fleet);
+    for (fi, per_stage) in decisions.iter().enumerate() {
+        let j = &live[idx[fi]];
+        for (stage, d) in per_stage.iter().enumerate() {
+            if let Decision::Reconfigure(set) = d {
+                let ticket = j.ctl.scale_to(stage, set.clone());
+                shared.rebalances.lock().unwrap().push(Rebalance {
+                    job: j.id,
+                    job_name: j.name.clone(),
+                    stage,
+                    ticket,
+                });
+            }
+        }
+    }
+}
+
+/// `[job.<name>]` keys of a server config.
+const JOB_KEYS: &[(&str, KeyKind)] = &[
+    ("config", KeyKind::Str),
+    ("weight", KeyKind::Float),
+    ("min_cores", KeyKind::Int),
+    ("socket", KeyKind::Int),
+];
+
+/// `[server]` keys — keep in sync with
+/// [`crate::config::ServerConfig::from_config`] (which carries a pointer
+/// back here).
+const SERVER_KEYS: &[(&str, KeyKind)] = &[
+    ("budget", KeyKind::Int),
+    ("period_ms", KeyKind::Int),
+    ("grow_backlog", KeyKind::Int),
+    ("shrink_backlog", KeyKind::Int),
+    ("cooldown_ticks", KeyKind::Int),
+];
+
+/// Validate a server config's sections: unknown sections/keys and
+/// wrong-typed values are typed errors (same contract as the single-job
+/// path's `check_job_section_keys`), and a single-job config handed to
+/// the server path gets pointed at `stretch run` by name.
+fn check_server_section_keys(cfg: &Config) -> Result<(), JobError> {
+    const JOB_CONFIG_PREFIXES: &[&str] = &[
+        "topology.", "stage.", "schedule.", "run.", "elastic.", "source.", "batch.",
+        "placement.", "faults.",
+    ];
+    'keys: for k in cfg.keys() {
+        if k == "name" {
+            continue;
+        }
+        if let Some(rest) = k.strip_prefix("server.") {
+            match SERVER_KEYS.iter().find(|(name, _)| *name == rest) {
+                None => {
+                    return Err(JobError::BadValue {
+                        key: k.to_string(),
+                        msg: format!(
+                            "unknown `[server]` key (known: {})",
+                            SERVER_KEYS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+                        ),
+                    })
+                }
+                Some((_, kind)) => {
+                    let v = cfg.get(k).expect("keys() yields existing keys");
+                    if !kind.matches(v) {
+                        return Err(JobError::BadValue {
+                            key: k.to_string(),
+                            msg: format!("expected {}, got `{v}`", kind.name()),
+                        });
+                    }
+                    continue 'keys;
+                }
+            }
+        }
+        if let Some(rest) = k.strip_prefix("job.") {
+            let Some((job, field)) = rest.split_once('.') else {
+                return Err(JobError::BadValue {
+                    key: k.to_string(),
+                    msg: "expected `job.<name>.<field>`".into(),
+                });
+            };
+            match JOB_KEYS.iter().find(|(name, _)| *name == field) {
+                None => {
+                    return Err(JobError::BadValue {
+                        key: k.to_string(),
+                        msg: format!(
+                            "unknown `[job.{job}]` key (known: {})",
+                            JOB_KEYS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+                        ),
+                    })
+                }
+                Some((_, kind)) => {
+                    let v = cfg.get(k).expect("keys() yields existing keys");
+                    if !kind.matches(v) {
+                        return Err(JobError::BadValue {
+                            key: k.to_string(),
+                            msg: format!("expected {}, got `{v}`", kind.name()),
+                        });
+                    }
+                    continue 'keys;
+                }
+            }
+        }
+        // a single-job config handed to the server path deserves a
+        // pointer at the right verb (mirror of `check_job_section_keys`'s
+        // hint in the other direction)
+        if JOB_CONFIG_PREFIXES.iter().any(|p| k.starts_with(p)) {
+            return Err(JobError::BadValue {
+                key: k.to_string(),
+                msg: "this looks like a single-job config — run it with `stretch run`, or \
+                      reference it from a `[job.<name>] config = \"...\"` entry"
+                    .into(),
+            });
+        }
+        return Err(JobError::BadValue {
+            key: k.to_string(),
+            msg: "unknown section/key for a server config (expected `name`, `[server]`, or \
+                  `[job.<name>]`)"
+                .into(),
+        });
+    }
+    Ok(())
+}
+
+/// Run a whole server config to completion: build every `[job.<name>]`
+/// sub-config through the shared [`prepare_job`] path (its own
+/// `[elastic]` controller choice is ignored — the fleet arbiter owns
+/// cross-job scaling), submit them under one budget, drain each job,
+/// and return the aggregate outcome. Job config paths resolve relative
+/// to `conf_dir` (the server config's directory), so a config tree is
+/// relocatable. `budget_ms` caps each job's paced phase, exactly like
+/// `stretch run --budget-ms`.
+pub fn serve_from_config(
+    cfg: &Config,
+    conf_dir: &Path,
+    budget_ms: Option<u64>,
+) -> Result<ServerOutcome, JobError> {
+    check_server_section_keys(cfg)?;
+    let sc = ServerConfig::from_config(cfg);
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for k in cfg.keys() {
+        if let Some(rest) = k.strip_prefix("job.") {
+            if let Some((job, _)) = rest.split_once('.') {
+                names.insert(job.to_string());
+            }
+        }
+    }
+    if names.is_empty() {
+        return Err(JobError::BadValue {
+            key: "job".into(),
+            msg: "a server config needs at least one `[job.<name>]` section".into(),
+        });
+    }
+    let server = JobServer::new(sc.budget)
+        .with_period(Duration::from_millis(sc.period_ms))
+        .with_thresholds(sc.grow_backlog, sc.shrink_backlog)
+        .with_cooldown(sc.cooldown_ticks);
+    let mut ids: Vec<JobId> = Vec::new();
+    for name in &names {
+        let key = |f: &str| format!("job.{name}.{f}");
+        let path = match cfg.get(&key("config")) {
+            Some(ConfigValue::Str(s)) => s.clone(),
+            _ => {
+                return Err(JobError::BadValue {
+                    key: key("config"),
+                    msg: "every `[job.<name>]` needs a `config = \"<job .conf path>\"`".into(),
+                })
+            }
+        };
+        let sub = Config::load(conf_dir.join(&path)).map_err(|e| JobError::BadValue {
+            key: key("config"),
+            msg: format!("{path}: {e}"),
+        })?;
+        let socket = match cfg.get(&key("socket")) {
+            None => None,
+            Some(ConfigValue::Int(v)) if *v >= 0 => Some(*v as usize),
+            Some(other) => {
+                return Err(JobError::BadValue {
+                    key: key("socket"),
+                    msg: format!("expected a socket index ≥ 0, got `{other}`"),
+                })
+            }
+        };
+        let share = JobShare {
+            weight: cfg.float_or(&key("weight"), 1.0).max(0.0),
+            min_cores: cfg.int_or(&key("min_cores"), 0).max(0) as usize,
+        };
+        let prep = prepare_job(
+            &sub,
+            JobPrepOptions {
+                budget_ms,
+                skip_elastic_controller: true,
+                socket,
+                name_override: Some(name.clone()),
+            },
+        )?;
+        // a job whose floor exceeds the whole budget can NEVER fit — a
+        // config error, reported against the section rather than left to
+        // runtime admission (which handles the "other jobs hold the
+        // cores" case)
+        let floor = share.min_cores.max(prep.n_stages);
+        if floor > sc.budget {
+            let mut job = prep.job;
+            job.pipeline.shutdown();
+            return Err(JobError::BadValue {
+                key: format!("job.{name}"),
+                msg: format!(
+                    "minimum footprint {floor} core(s) ({} stage(s), min_cores {}) exceeds \
+                     the server budget of {} (the job's own maximum is {})",
+                    prep.n_stages, share.min_cores, sc.budget, prep.max_cores
+                ),
+            });
+        }
+        let id = server
+            .submit_with_policies(prep.job, share, prep.policies, prep.recovery_log)
+            .map_err(|e| JobError::BadValue { key: format!("job.{name}"), msg: e.to_string() })?;
+        ids.push(id);
+    }
+    for id in &ids {
+        server.stop(*id);
+    }
+    Ok(server.shutdown())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Config {
+        Config::parse(text).unwrap()
+    }
+
+    #[test]
+    fn job_id_and_admission_display() {
+        assert_eq!(JobId(3).to_string(), "job-3");
+        let e = Admission::Rejected { reason: "no room".into() };
+        assert!(e.to_string().contains("no room"), "{e}");
+    }
+
+    #[test]
+    fn server_section_keys_validate() {
+        // the CI config shape passes
+        check_server_section_keys(&parse(
+            "name = \"two\"\n[server]\nbudget = 8\nperiod_ms = 100\n\
+             [job.alpha]\nconfig = \"a.conf\"\nweight = 2.0\nmin_cores = 4\n\
+             [job.beta]\nconfig = \"b.conf\"\nsocket = 0",
+        ))
+        .unwrap();
+        // unknown `[server]` key
+        let err = check_server_section_keys(&parse("[server]\nbudgets = 8")).unwrap_err();
+        assert!(matches!(err, JobError::BadValue { .. }), "{err}");
+        // wrong-typed value
+        let err =
+            check_server_section_keys(&parse("[server]\nbudget = \"eight\"")).unwrap_err();
+        assert!(err.to_string().contains("expected an integer"), "{err}");
+        // unknown `[job.<name>]` key
+        let err =
+            check_server_section_keys(&parse("[job.a]\nconf = \"a.conf\"")).unwrap_err();
+        assert!(err.to_string().contains("unknown `[job.a]` key"), "{err}");
+    }
+
+    #[test]
+    fn single_job_config_is_pointed_at_stretch_run() {
+        let err = check_server_section_keys(&parse(
+            "[topology]\nstages = [\"a\"]\n[stage.a]\noperator = \"trade-filter\"",
+        ))
+        .unwrap_err();
+        assert!(err.to_string().contains("stretch run"), "{err}");
+        let err = check_server_section_keys(&parse("[run]\nduration_s = 5")).unwrap_err();
+        assert!(err.to_string().contains("stretch run"), "{err}");
+    }
+
+    #[test]
+    fn serve_requires_a_job_section() {
+        let err = serve_from_config(&parse("[server]\nbudget = 4"), Path::new("."), None)
+            .unwrap_err();
+        assert!(err.to_string().contains("at least one"), "{err}");
+    }
+
+    #[test]
+    fn missing_job_config_path_is_a_typed_error() {
+        let err = serve_from_config(
+            &parse("[server]\nbudget = 4\n[job.a]\nweight = 1.0"),
+            Path::new("."),
+            None,
+        )
+        .unwrap_err();
+        match err {
+            JobError::BadValue { key, .. } => assert_eq!(key, "job.a.config"),
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn unreadable_job_config_is_reported_against_its_key() {
+        let err = serve_from_config(
+            &parse("[server]\nbudget = 4\n[job.a]\nconfig = \"does-not-exist.conf\""),
+            Path::new("/nonexistent-dir"),
+            None,
+        )
+        .unwrap_err();
+        match err {
+            JobError::BadValue { key, msg } => {
+                assert_eq!(key, "job.a.config");
+                assert!(msg.contains("does-not-exist.conf"), "{msg}");
+            }
+            other => panic!("{other}"),
+        }
+    }
+}

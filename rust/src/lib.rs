@@ -57,7 +57,25 @@
 //!   on fresh slots, escalate retry → replace → shed load → degraded —
 //!   each recovery a [`harness::RecoveryTicket`] whose detection→healed
 //!   latency lands as `mttr_ms` in `BENCH_<job>.json` (informational,
-//!   never a bench-diff gate).
+//!   never a bench-diff gate). Above the single job sits the FLEET
+//!   layer ([`harness::server`]): a [`harness::JobServer`] runs N jobs
+//!   on ONE shared runtime thread (a job costs a list entry, not a
+//!   thread) under ONE global core budget, arbitrated per (job, stage)
+//!   each wave by [`elastic::ServerController`] — the DagController's
+//!   shrink-then-grant generalized across jobs, weighted by
+//!   [`elastic::JobShare`], floored by `min_cores`, forced to fit —
+//!   with every cross-job move an ordinary epoch reconfiguration
+//!   carried by a [`harness::Rebalance`] ticket, no state transfer
+//!   ever. `submit` is ADMISSION CONTROL: a job whose minimum
+//!   footprint cannot fit the unclaimed budget is refused
+//!   ([`harness::Admission`]) before it competes for cores; `metrics()`
+//!   rolls every live job into one [`harness::ServerMetrics`].
+//!   Declaratively: a `[server]` + `[job.<name>]` config behind
+//!   `stretch serve fleet.conf` ([`harness::serve_from_config`]),
+//!   emitting `BENCH_server.json` with per-job throughput and
+//!   cross-job rebalance latencies
+//!   (`examples/configs/server_two_jobs.conf` is two diamonds under an
+//!   8-core budget).
 //! * [`runtime`] — machine-facing services: the PJRT loader/executor for
 //!   the AOT-compiled kernels (stubbed unless built with `--features
 //!   pjrt`) and the placement-aware data plane
@@ -150,6 +168,10 @@
 //! full chaos scenario: kills on every stateless diamond stage plus a
 //! stalled join worker, healed under an exact-output oracle
 //! (`integration_dag::chaos_diamond_heals_every_fault_and_matches_reference`).
+//! The quickstart ends with the fleet layer: TWO jobs on one runtime
+//! thread under one 4-core budget, the arbiter re-fitting them live and
+//! a third job refused admission — on disk, that flow is
+//! `stretch serve examples/configs/server_two_jobs.conf`.
 //!
 //! ## Concurrency correctness
 //! The exactly-once / ready-order guarantees rest on hand-placed atomic

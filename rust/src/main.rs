@@ -7,6 +7,7 @@
 //! stretch run examples/configs/diamond.conf       # declarative job
 //! stretch run --config job.conf --budget-ms 10    # CI smoke form
 //! stretch run configs/scalejoin.toml              # classic Q3-Q6 shape
+//! stretch serve examples/configs/server_two_jobs.conf   # multi-job server
 //! stretch artifacts          # check the AOT kernel artifacts
 //! stretch bench-diff BENCH_micro.baseline.json BENCH_micro.json
 //! stretch lint rust/src      # concurrency-correctness analyzer (CI gate)
@@ -22,7 +23,8 @@ use stretch::cli::{Cli, OrExit};
 use stretch::config::{BatchTuning, Config};
 use stretch::elastic::JoinCostModel;
 use stretch::harness::{
-    controller_from_config, run_elastic_join, run_job, JoinRunConfig, TicketOutcome,
+    controller_from_config, run_elastic_join, run_job, serve_from_config, JoinRunConfig,
+    TicketOutcome,
 };
 use stretch::metrics::{BenchReport, Json};
 use stretch::sim::calibrate;
@@ -264,6 +266,137 @@ fn cmd_run_job(cfg: &Config, budget_ms: Option<u64>) {
     }
 }
 
+/// `serve`: run a multi-job `[server]`/`[job.<name>]` config — N jobs on
+/// one shared runtime thread under one global core budget — print the
+/// per-job outcomes and every cross-job rebalance the arbiter issued,
+/// and emit `BENCH_server.json`.
+fn cmd_serve(path: &str, budget_ms: Option<u64>) {
+    let cfg = Config::load(path).unwrap_or_else(|e| {
+        eprintln!("config error: {e}");
+        std::process::exit(1);
+    });
+    let conf_dir = std::path::Path::new(path)
+        .parent()
+        .filter(|p| !p.as_os_str().is_empty())
+        .unwrap_or_else(|| std::path::Path::new("."));
+    let out = serve_from_config(&cfg, conf_dir, budget_ms).unwrap_or_else(|e| {
+        eprintln!("server error: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "server `{}`: {} job(s) under a {}-core budget",
+        cfg.str_or("name", "server"),
+        out.jobs.len(),
+        out.budget
+    );
+    for (id, job) in &out.jobs {
+        let r = &job.result;
+        println!(
+            "\n  {id} `{}`: {} stages, egress {} (dropped {}), e2e latency p50 {:.2} ms",
+            job.name,
+            job.stage_names.len(),
+            r.egress_count,
+            r.ingress_dropped,
+            r.latency_p50_us as f64 / 1e3,
+        );
+        if !job.recoveries.is_empty() {
+            let healed = job.recoveries.iter().filter(|rt| rt.mttr_ms().is_some()).count();
+            println!("    recoveries: {healed}/{} healed", job.recoveries.len());
+        }
+        if job.degraded {
+            println!("    job DEGRADED: the supervisor exhausted its escalation ladder");
+        }
+    }
+    // every cross-job move the arbiter issued, with its measured epoch
+    // reconfiguration latency — the §8.4 metric, fleet edition
+    if !out.rebalances.is_empty() {
+        println!("\n  cross-job rebalances (measured via ReconfigTicket):");
+        for rb in &out.rebalances {
+            let stage = out
+                .jobs
+                .iter()
+                .find(|(id, _)| *id == rb.job)
+                .and_then(|(_, j)| j.stage_names.get(rb.stage))
+                .map(String::as_str)
+                .unwrap_or("?");
+            match rb.ticket.outcome() {
+                Some(TicketOutcome::Completed(ms)) => {
+                    let verdict = if ms < 40.0 { " (< 40 ms)" } else { "" };
+                    println!("    {} stage {stage:<12}: {ms:.2} ms{verdict}", rb.job_name);
+                }
+                Some(TicketOutcome::Rejected(why)) => {
+                    println!("    {} stage {stage:<12}: rejected ({why})", rb.job_name);
+                }
+                Some(TicketOutcome::Abandoned) => {
+                    println!("    {} stage {stage:<12}: abandoned (job shut down)", rb.job_name);
+                }
+                None => {
+                    println!("    {} stage {stage:<12}: unresolved", rb.job_name);
+                }
+            }
+        }
+    }
+
+    // BENCH_server.json: the aggregate machine-readable record —
+    // per-job throughput AND per-job reconfig latencies, plus the
+    // cross-job rebalance trace
+    let mut rep = BenchReport::new("server");
+    rep.set("kind", "server").set("budget", out.budget).set("jobs_n", out.jobs.len());
+    let job_objs: Vec<Json> = out
+        .jobs
+        .iter()
+        .map(|(id, job)| {
+            let r = &job.result;
+            let ticket_objs: Vec<Json> = job
+                .tickets
+                .iter()
+                .map(|t| {
+                    Json::obj(vec![
+                        (
+                            "stage",
+                            job.stage_names
+                                .get(t.stage())
+                                .map(|s| Json::from(s.as_str()))
+                                .unwrap_or(Json::Null),
+                        ),
+                        ("ms", t.latency_ms().map(Json::from).unwrap_or(Json::Null)),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("id", Json::from(id.to_string())),
+                ("name", Json::from(job.name.as_str())),
+                ("egress_count", Json::from(r.egress_count)),
+                ("ingress_dropped", Json::from(r.ingress_dropped)),
+                ("latency_p50_us", Json::from(r.latency_p50_us)),
+                ("degraded", Json::from(job.degraded)),
+                ("reconfigs", Json::Arr(ticket_objs)),
+            ])
+        })
+        .collect();
+    rep.set("jobs", Json::Arr(job_objs));
+    let rb_objs: Vec<Json> = out
+        .rebalances
+        .iter()
+        .map(|rb| {
+            Json::obj(vec![
+                ("job", Json::from(rb.job_name.as_str())),
+                ("stage", Json::from(rb.stage)),
+                ("ms", rb.ticket.latency_ms().map(Json::from).unwrap_or(Json::Null)),
+            ])
+        })
+        .collect();
+    rep.set("rebalances", Json::Arr(rb_objs));
+    let done: Vec<f64> = out.rebalances.iter().filter_map(|rb| rb.ticket.latency_ms()).collect();
+    if !done.is_empty() {
+        rep.set("rebalance_ms_max", done.iter().fold(f64::NAN, |a, &b| a.max(b)));
+    }
+    match rep.write() {
+        Ok(p) => println!("  json: {}", p.display()),
+        Err(e) => eprintln!("  BENCH_server.json write failed: {e}"),
+    }
+}
+
 /// `bench-diff`: compare two `BENCH_*.json` snapshots under a tolerance
 /// factor and exit nonzero on regression — the CI perf gate
 /// (`stretch bench-diff BENCH_micro.baseline.json BENCH_micro.json`).
@@ -448,6 +581,19 @@ fn main() {
                 }
             }
         }
+        Some("serve") => {
+            let path = args
+                .get("config")
+                .map(str::to_string)
+                .or_else(|| args.positional().get(1).cloned());
+            match path {
+                Some(p) => cmd_serve(&p, args.u64_opt("budget-ms").or_exit()),
+                None => {
+                    eprintln!("usage: stretch serve <server.conf>  (or --config <server.conf>)");
+                    std::process::exit(2);
+                }
+            }
+        }
         _ => {
             println!("usage: stretch <command>\n");
             println!("  calibrate          measure this machine's cost model");
@@ -455,11 +601,14 @@ fn main() {
             println!("  run <config>       run a declarative job ([topology] config,");
             println!("                     see examples/configs/) or a classic elastic");
             println!("                     join experiment (configs/*.toml)");
+            println!("  serve <config>     run a multi-job [server]/[job.*] config: N jobs");
+            println!("                     on one runtime thread under one global core");
+            println!("                     budget; emits BENCH_server.json");
             println!("  bench-diff <a> <b> compare two BENCH_*.json snapshots; exits 1");
             println!("                     when a throughput/latency/alloc field regresses");
             println!("  lint [paths…]      concurrency-correctness analyzer (rules L1-L6");
             println!("                     over rust/src by default); exits 1 on findings");
-            println!("\noptions for run: --config <path>, --budget-ms <ms> (CI smoke)");
+            println!("\noptions for run/serve: --config <path>, --budget-ms <ms> (CI smoke)");
             println!("options for bench-diff: --tolerance <factor> (default 1.25),");
             println!("                        --gate-kinds <throughput,latency,alloc,info>");
             println!("options for lint: --format <text|json> (default text)");

@@ -33,7 +33,7 @@ use crate::workloads::nyse::{
 use crate::workloads::ops::{forward_stage_op, paircount_op};
 use crate::workloads::tweets::{tokenize_op, word_count_stage_op, Tweet, TweetGen, TweetGenConfig};
 use std::fmt;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// The payload *kind* an operator consumes/produces — the registry's
 /// type system: [`crate::engine::job::JobSpec`] checks every edge's
@@ -514,9 +514,184 @@ pub const OPERATORS: &[OperatorEntry] = &[
     },
 ];
 
-/// Look an operator up by its registry name.
+/// Look an operator up in the *static* table by its registry name
+/// (closure-registered operators resolve through [`resolve`]).
 pub fn lookup(name: &str) -> Option<&'static OperatorEntry> {
     OPERATORS.iter().find(|e| e.name == name)
+}
+
+/// Type-erased constructor of a closure-registered operator.
+type DynMake = Arc<
+    dyn Fn(
+            &StageParams,
+            &mut DagBuilder<JobPayload>,
+            VsnOptions,
+            &[NodeHandle<JobPayload>],
+        ) -> NodeHandle<JobPayload>
+        + Send
+        + Sync,
+>;
+
+struct DynOperator {
+    name: &'static str,
+    make: DynMake,
+}
+
+/// Process-wide table of closure-registered operators
+/// ([`OperatorRegistry::register_fn`]).
+static DYN_OPERATORS: Mutex<Vec<DynOperator>> = Mutex::new(Vec::new());
+
+/// Why a dynamic registration was refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RegistryError {
+    /// The name is already taken — by the static [`OPERATORS`] table or
+    /// by an earlier registration. Names resolve process-wide, so a
+    /// silent override would change every job config using the name.
+    DuplicateName(String),
+    /// Operator names must be non-empty `[A-Za-z0-9_-]` — they are
+    /// referenced from `[stage.<name>] operator = "..."` config values
+    /// and become stage/metric labels.
+    BadName(String),
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegistryError::DuplicateName(n) => {
+                write!(f, "operator `{n}` is already registered")
+            }
+            RegistryError::BadName(n) => {
+                write!(f, "operator name `{n}` must be non-empty [A-Za-z0-9_-]")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// The process-wide registration face of the operator registry: the
+/// escape hatch that lets the config/declarative path name *user
+/// closures*, not just the static [`OPERATORS`] table — the declarative
+/// twin of the typed path's `OperatorDef::from_fn`.
+pub struct OperatorRegistry;
+
+impl OperatorRegistry {
+    /// Register `f` as a named flat-map operator over [`JobPayload`]:
+    /// after this, any job config may declare
+    /// `operator = "<name>"` and [`resolve`] will instantiate the
+    /// closure as an ordinary Map stage (stateless, timestamp-preserving,
+    /// load-balanced over the stage's `lb_keys`).
+    ///
+    /// A closure operator is payload-*polymorphic*, exactly like the
+    /// static `forward` entry: it adapts to whatever kind its upstream
+    /// produces, must emit the same kind it consumes, and therefore
+    /// cannot be a source stage ([`crate::engine::job::JobSpec`] rejects
+    /// that as `PolymorphicSource`).
+    ///
+    /// The name is claimed forever (one small leak per *successful*
+    /// registration — operator names thread through `&'static str`
+    /// stage and metric labels); duplicates and malformed names are
+    /// refused with a typed [`RegistryError`].
+    pub fn register_fn<F>(name: &str, f: F) -> Result<(), RegistryError>
+    where
+        F: Fn(&Tuple<JobPayload>, &mut dyn FnMut(JobPayload)) + Send + Sync + 'static,
+    {
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            return Err(RegistryError::BadName(name.to_string()));
+        }
+        let mut reg = DYN_OPERATORS.lock().unwrap();
+        if lookup(name).is_some() || reg.iter().any(|d| d.name == name) {
+            return Err(RegistryError::DuplicateName(name.to_string()));
+        }
+        let name: &'static str = Box::leak(name.to_string().into_boxed_str());
+        let f = Arc::new(f);
+        let make: DynMake = Arc::new(move |p, b, opts, ups| {
+            let g = Arc::clone(&f);
+            let def = OperatorDef::from_fn(
+                name,
+                p.lb_keys.max(1),
+                move |t: &Tuple<JobPayload>, emit: &mut dyn FnMut(JobPayload)| g(t, emit),
+            );
+            add_node(b, def, opts, ups)
+        });
+        reg.push(DynOperator { name, make });
+        Ok(())
+    }
+}
+
+enum ResolvedMake {
+    Static(MakeFn),
+    Dynamic(DynMake),
+}
+
+/// A registry name resolved to something the declarative layer can
+/// type-check and instantiate — either a static [`OPERATORS`] entry or
+/// a closure registered through [`OperatorRegistry::register_fn`].
+pub struct ResolvedOperator {
+    input: Option<PayloadKind>,
+    output: Option<PayloadKind>,
+    make: ResolvedMake,
+}
+
+impl ResolvedOperator {
+    /// Payload kind consumed (`None` = polymorphic, resolved per
+    /// topology — see [`OperatorEntry::input`]).
+    pub fn input(&self) -> Option<PayloadKind> {
+        self.input
+    }
+
+    /// Payload kind produced; `None` = same as the resolved input kind.
+    pub fn output(&self) -> Option<PayloadKind> {
+        self.output
+    }
+
+    /// Declare this operator as a DAG node (a source node when `ups` is
+    /// empty) — same contract as [`OperatorEntry::instantiate`].
+    pub fn instantiate(
+        &self,
+        p: &StageParams,
+        b: &mut DagBuilder<JobPayload>,
+        opts: VsnOptions,
+        ups: &[NodeHandle<JobPayload>],
+    ) -> NodeHandle<JobPayload> {
+        match &self.make {
+            ResolvedMake::Static(f) => f(p, b, opts, ups),
+            ResolvedMake::Dynamic(f) => f(p, b, opts, ups),
+        }
+    }
+}
+
+/// Resolve an operator name: the static table first, then dynamic
+/// registrations. This is the lookup the declarative layer goes
+/// through, so closure-registered operators work everywhere a config
+/// can name an operator.
+pub fn resolve(name: &str) -> Option<ResolvedOperator> {
+    if let Some(e) = lookup(name) {
+        return Some(ResolvedOperator {
+            input: e.input,
+            output: e.output,
+            make: ResolvedMake::Static(e.make),
+        });
+    }
+    let reg = DYN_OPERATORS.lock().unwrap();
+    reg.iter().find(|d| d.name == name).map(|d| ResolvedOperator {
+        // closure operators adapt to their upstream's kind (the
+        // `forward` contract)
+        input: None,
+        output: None,
+        make: ResolvedMake::Dynamic(Arc::clone(&d.make)),
+    })
+}
+
+/// Every operator name a job config can currently reference: the static
+/// table in declaration order, then closure registrations in
+/// registration order (error messages quote this list).
+pub fn known_operators() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = OPERATORS.iter().map(|e| e.name).collect();
+    names.extend(DYN_OPERATORS.lock().unwrap().iter().map(|d| d.name));
+    names
 }
 
 /// A rate-paceable external source producing [`JobPayload`] tuples — the
@@ -598,6 +773,39 @@ mod tests {
         assert_eq!((f.input, f.output), (None, None));
         let p = lookup("pair-count").unwrap();
         assert_eq!((p.input, p.output), (Some(PayloadKind::Tweet), Some(PayloadKind::WordCount)));
+    }
+
+    #[test]
+    fn register_fn_claims_a_name_and_resolves_polymorphic() {
+        let pass = |t: &Tuple<JobPayload>, emit: &mut dyn FnMut(JobPayload)| {
+            emit(t.payload.clone())
+        };
+        OperatorRegistry::register_fn("test-dyn-passthrough", pass).unwrap();
+        // duplicates — static or dynamic — and malformed names are refused
+        assert_eq!(
+            OperatorRegistry::register_fn("forward", pass),
+            Err(RegistryError::DuplicateName("forward".into()))
+        );
+        assert_eq!(
+            OperatorRegistry::register_fn("test-dyn-passthrough", pass),
+            Err(RegistryError::DuplicateName("test-dyn-passthrough".into()))
+        );
+        assert_eq!(
+            OperatorRegistry::register_fn("bad name!", pass),
+            Err(RegistryError::BadName("bad name!".into()))
+        );
+        // resolves like `forward`: payload-polymorphic
+        let r = resolve("test-dyn-passthrough").unwrap();
+        assert_eq!((r.input(), r.output()), (None, None));
+        // static names resolve through the same path, kinds intact
+        let j = resolve("hedge-join").unwrap();
+        assert_eq!(
+            (j.input(), j.output()),
+            (Some(PayloadKind::TradePair), Some(PayloadKind::Hedge))
+        );
+        assert!(resolve("no-such-op").is_none());
+        assert!(known_operators().contains(&"test-dyn-passthrough"));
+        assert!(known_operators().contains(&"hedge-join"));
     }
 
     #[test]

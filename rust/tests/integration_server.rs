@@ -1,0 +1,322 @@
+//! Integration: the multi-job server layer (harness/server.rs).
+//!
+//! Two proofs. First, the control surface is genuinely concurrent: many
+//! threads hammer one live job with `scale_to` and every ticket reaches
+//! a terminal outcome while the output stays exactly equal to the
+//! sequential reference. Second, the fleet layer: two diamond jobs on
+//! ONE runtime thread under ONE core budget deliberately smaller than
+//! the sum of their maxima — the [`stretch::elastic::ServerController`]
+//! must move cores between the hot and the idle job through ordinary
+//! epoch reconfigurations, a third job must be refused admission, and
+//! BOTH jobs' egress multisets must still equal their oracles exactly.
+
+use std::time::{Duration, Instant};
+
+use stretch::config::Config;
+use stretch::elastic::JobShare;
+use stretch::engine::JobSpec;
+use stretch::harness::{
+    Admission, Job, JobServer, LaunchConfig, ReplaySource, TicketOutcome,
+};
+use stretch::tuple::Tuple;
+use stretch::workloads::nyse::{hedge_diamond_oracle, NyseConfig, Trade, TradeStream};
+use stretch::workloads::rates::RateSchedule;
+use stretch::workloads::registry::{into_job_tuple, JobPayload};
+
+const WS_MS: i64 = 800;
+
+type Match = (u16, i32, u16, i32);
+
+/// A trade corpus plus its sequential-reference match multiset.
+/// `trade_rate` shapes the event timestamps, so corpora generated at
+/// different rates window differently — two jobs fed from different
+/// corpora would expose any cross-job tuple leakage as a multiset
+/// mismatch.
+fn diamond_corpus(n: usize, trade_rate: f64) -> (Vec<Tuple<Trade>>, Vec<Match>) {
+    let cfg = NyseConfig { symbols: 8, ..Default::default() };
+    let mut stream = TradeStream::new(&cfg, trade_rate);
+    let trades: Vec<Tuple<Trade>> = (0..n).map(|_| stream.next()).collect();
+    let mut oracle: Vec<Match> = hedge_diamond_oracle(&trades, WS_MS)
+        .into_iter()
+        .map(|h| (h.l_id, h.l_price, h.r_id, h.r_price))
+        .collect();
+    oracle.sort_unstable();
+    assert!(!oracle.is_empty(), "degenerate corpus: no hedge matches");
+    (trades, oracle)
+}
+
+fn extract_job(p: &JobPayload) -> Match {
+    match p {
+        JobPayload::Hedge(h) => (h.l_id, h.l_price, h.r_id, h.r_price),
+        other => panic!("diamond sink must emit hedge matches, got {other:?}"),
+    }
+}
+
+/// The config-built diamond, starting narrow (one instance per stage)
+/// with room to stretch to 3 — Σ max = 12 cores.
+const NARROW_DIAMOND: &str = r#"
+[topology]
+stages = ["filter", "left", "right", "join"]
+edges = ["filter -> left", "filter -> right", "left -> join", "right -> join"]
+[stage.filter]
+operator = "trade-filter"
+initial = 1
+max = 3
+gate_capacity = 8192
+[stage.left]
+operator = "left-leg"
+initial = 1
+max = 3
+gate_capacity = 8192
+[stage.right]
+operator = "right-leg"
+initial = 1
+max = 3
+gate_capacity = 8192
+[stage.join]
+operator = "hedge-join"
+ws_ms = 800
+keys = 32
+initial = 1
+max = 3
+gate_capacity = 8192
+"#;
+
+/// The same diamond starting WIDE (two instances per stage, 8 cores) —
+/// under a contended budget the fleet arbiter must shrink it back.
+const WIDE_DIAMOND: &str = r#"
+[topology]
+stages = ["filter", "left", "right", "join"]
+edges = ["filter -> left", "filter -> right", "left -> join", "right -> join"]
+[stage.filter]
+operator = "trade-filter"
+initial = 2
+max = 3
+gate_capacity = 8192
+[stage.left]
+operator = "left-leg"
+initial = 2
+max = 3
+gate_capacity = 8192
+[stage.right]
+operator = "right-leg"
+initial = 2
+max = 3
+gate_capacity = 8192
+[stage.join]
+operator = "hedge-join"
+ws_ms = 800
+keys = 32
+initial = 2
+max = 3
+gate_capacity = 8192
+"#;
+
+/// Build a replay-fed, egress-capturing diamond [`Job`] from a config
+/// string — the `Job<JobPayload, JobPayload>` shape [`JobServer::submit`]
+/// takes.
+fn diamond_job(conf: &str, name: &str, trades: &[Tuple<Trade>], rate: f64) -> Job<JobPayload, JobPayload> {
+    let spec = JobSpec::from_config(&Config::parse(conf).unwrap()).expect("job config is valid");
+    let built = spec.build().expect("diamond job builds");
+    let tuples: Vec<Tuple<JobPayload>> =
+        trades.iter().cloned().map(into_job_tuple::<Trade>).collect();
+    Job::new(built.pipeline, ReplaySource::new(tuples)).with_config(LaunchConfig {
+        name: name.into(),
+        schedule: RateSchedule::constant(60, rate),
+        time_scale: 2.0,
+        flush_slack_ms: WS_MS + 10_000,
+        drain: Duration::from_millis(300),
+        capture_egress: true,
+        ..Default::default()
+    })
+}
+
+/// The control surface under contention: three threads share one job's
+/// [`stretch::harness::JobCtl`] (it is `Clone` by design) and issue 72
+/// overlapping `scale_to` calls across every stage while the corpus
+/// replays. Every ticket must reach a terminal outcome — Completed,
+/// Rejected (post-EOS stragglers) or Abandoned (superseded by a rival
+/// thread's scale on the same stage) — and the egress multiset must
+/// still equal the sequential reference exactly.
+#[test]
+fn tickets_from_many_threads_all_resolve_and_output_stays_exact() {
+    let (trades, oracle) = diamond_corpus(2_000, 1_000.0);
+    let handle = diamond_job(WIDE_DIAMOND, "ticket-storm", &trades, 1_000.0)
+        .launch()
+        .expect("diamond launches");
+
+    let mut writers = Vec::new();
+    for w in 0..3usize {
+        let ctl = handle.ctl();
+        writers.push(std::thread::spawn(move || {
+            let sets: [&[usize]; 3] = [&[0], &[0, 1], &[0, 1, 2]];
+            let mut tickets = Vec::new();
+            for round in 0..6usize {
+                for stage in 0..4usize {
+                    let set = sets[(w + round + stage) % sets.len()].to_vec();
+                    tickets.push(ctl.scale_to(stage, set));
+                }
+                std::thread::sleep(Duration::from_millis(40));
+            }
+            tickets
+        }));
+    }
+    let mut tickets = Vec::new();
+    for t in writers {
+        tickets.extend(t.join().expect("writer thread panicked"));
+    }
+    assert_eq!(tickets.len(), 72);
+    for t in &tickets {
+        assert!(
+            t.wait_outcome(Duration::from_secs(30)).is_some(),
+            "concurrently issued ticket for stage {} never resolved: {t:?}",
+            t.stage()
+        );
+    }
+    assert!(
+        tickets.iter().any(|t| matches!(t.outcome(), Some(TicketOutcome::Completed(_)))),
+        "no concurrent reconfiguration ever completed"
+    );
+
+    handle.await_quiesce();
+    let mut got: Vec<Match> = handle
+        .take_egress()
+        .iter()
+        .filter(|t| t.kind.is_data())
+        .map(|t| extract_job(&t.payload))
+        .collect();
+    let outcome = handle.shutdown();
+    assert_eq!(outcome.result.ingress_dropped, 0, "replay must not lose tuples");
+    // the shutdown-idempotence fix: a second shutdown (or a later Drop)
+    // returns the cached outcome instead of tearing down twice
+    let again = handle.shutdown();
+    assert_eq!(again.result.egress_count, outcome.result.egress_count);
+
+    got.sort_unstable();
+    assert_eq!(got, oracle, "ticket storm diverged from the sequential reference");
+}
+
+/// The fleet acceptance proof: a hot narrow diamond and an idle wide
+/// diamond under a 10-core budget (Σ per-job maxima = 24; the fleet even
+/// STARTS over budget at 4 + 8 = 12 cores). The arbiter must force the
+/// fleet under the budget — every move an ordinary epoch
+/// reconfiguration on one stage of one job — a third diamond must be
+/// refused admission with a reasoned error, per-job stops must be
+/// idempotent, and both jobs' multisets must equal their own oracles
+/// exactly (the corpora differ, so any cross-job leakage shows).
+#[test]
+fn two_job_server_rebalances_under_one_budget_and_preserves_both_multisets() {
+    let (hot_trades, hot_oracle) = diamond_corpus(2_400, 1_000.0);
+    let (idle_trades, idle_oracle) = diamond_corpus(1_200, 600.0);
+    assert_ne!(hot_oracle, idle_oracle, "corpora must be distinguishable");
+
+    let server = JobServer::new(10)
+        .with_period(Duration::from_millis(50))
+        .with_thresholds(256, 64)
+        .with_cooldown(0);
+    assert_eq!(server.budget(), 10);
+
+    // hot: 3 000 t/s wall against one instance per stage — starved for
+    // cores. idle: 600 t/s wall against two per stage — over-provisioned.
+    let hot = server
+        .submit(
+            diamond_job(NARROW_DIAMOND, "hot", &hot_trades, 1_500.0),
+            JobShare { weight: 2.0, min_cores: 4 },
+        )
+        .expect("hot diamond admits (4 of 10 cores)");
+    let idle = server
+        .submit(
+            diamond_job(WIDE_DIAMOND, "idle", &idle_trades, 300.0),
+            JobShare { weight: 1.0, min_cores: 4 },
+        )
+        .expect("idle diamond admits (8 of 10 cores committed)");
+    assert_ne!(hot, idle);
+
+    // 8 of 10 cores are committed: a third 4-stage diamond cannot fit
+    let Admission::Rejected { reason } = server
+        .submit(
+            diamond_job(NARROW_DIAMOND, "third", &hot_trades[..200], 1_000.0),
+            JobShare { weight: 1.0, min_cores: 4 },
+        )
+        .expect_err("a third diamond must be refused admission");
+    assert!(reason.contains("budget"), "rejection must name the budget: {reason}");
+
+    // the fleet starts over budget (12 active > 10): the arbiter's
+    // forced-fit wave must shrink it under — deterministic proof that at
+    // least one cross-job rebalance happens while both jobs run
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = server.metrics();
+        assert_eq!(m.budget, 10);
+        assert_eq!(m.jobs.len(), 2, "both jobs must stay visible until stopped");
+        if m.used_cores <= m.budget && m.used_cores >= 8 {
+            break; // shrunk to fit, floors (4 + 4) respected
+        }
+        assert!(
+            Instant::now() < deadline,
+            "fleet never shrank to the budget: {} cores used",
+            m.used_cores
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let hot_out = server.stop(hot).expect("hot job stops");
+    assert_eq!(hot_out.result.ingress_dropped, 0, "hot replay must not lose tuples");
+    let idle_out = server.stop(idle).expect("idle job stops");
+    assert_eq!(idle_out.result.ingress_dropped, 0, "idle replay must not lose tuples");
+    // stop is idempotent: the second call returns the cached outcome
+    let again = server.stop(hot).expect("second stop returns the cached outcome");
+    assert_eq!(again.result.egress_count, hot_out.result.egress_count);
+
+    // egress survives stop — the handle retains the captured tail
+    let mut hot_got: Vec<Match> = server
+        .take_egress(hot)
+        .iter()
+        .filter(|t| t.kind.is_data())
+        .map(|t| extract_job(&t.payload))
+        .collect();
+    let mut idle_got: Vec<Match> = server
+        .take_egress(idle)
+        .iter()
+        .filter(|t| t.kind.is_data())
+        .map(|t| extract_job(&t.payload))
+        .collect();
+
+    let out = server.shutdown();
+    assert_eq!(out.budget, 10);
+    assert_eq!(out.jobs.len(), 2);
+    assert_eq!(out.jobs[0].0, hot);
+    assert_eq!(out.jobs[0].1.name, "hot");
+    assert_eq!(out.jobs[1].0, idle);
+    assert_eq!(out.jobs[1].1.name, "idle");
+
+    assert!(!out.rebalances.is_empty(), "the fleet arbiter never rebalanced");
+    // the over-provisioned idle job is the only one above its floor, so
+    // the forced shrink MUST have landed on it
+    assert!(
+        out.rebalances.iter().any(|rb| rb.job == idle),
+        "the idle job must give up cores under contention"
+    );
+    for rb in &out.rebalances {
+        assert!(rb.stage < 4, "stage index out of range: {}", rb.stage);
+        assert!(rb.job == hot || rb.job == idle);
+        assert_eq!(rb.job_name, if rb.job == hot { "hot" } else { "idle" });
+        assert!(
+            rb.ticket.wait_outcome(Duration::from_secs(5)).is_some(),
+            "cross-job rebalance on {} stage {} never resolved",
+            rb.job_name,
+            rb.stage
+        );
+    }
+    assert!(
+        out.rebalances.iter().any(|rb| rb.ticket.latency_ms().is_some()),
+        "no cross-job rebalance ever completed with a measured latency"
+    );
+
+    hot_got.sort_unstable();
+    idle_got.sort_unstable();
+    assert_eq!(hot_got.len(), hot_oracle.len(), "hot match count diverged");
+    assert_eq!(hot_got, hot_oracle, "hot job diverged from its sequential reference");
+    assert_eq!(idle_got.len(), idle_oracle.len(), "idle match count diverged");
+    assert_eq!(idle_got, idle_oracle, "idle job diverged from its sequential reference");
+}
